@@ -1,0 +1,89 @@
+//! Hardware-simulation walkthrough: the paper's §V-D-3 speedup argument
+//! on the 64×1024 workload.
+//!
+//! Compares four GAE implementations on the same data:
+//!   1. scalar per-trajectory CPU loop  (the paper's ≈9000 elem/s baseline shape)
+//!   2. batched timestep-major CPU
+//!   3. Pallas-lowered HLO kernel via PJRT
+//!   4. the 64-row HEPPO-GAE array (cycle-simulated, projected @300 MHz)
+//!
+//! `cargo run --release --example hw_sim_gae [-- --trajectories 64 --timesteps 1024]`
+
+use heppo::bench::{format_si, Bencher};
+use heppo::gae::batched::{gae_batched, GaeBatch};
+use heppo::gae::reference::gae_sequential;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::hwsim::GaeHwSim;
+use heppo::runtime::{Runtime, Tensor};
+use heppo::util::cli::Args;
+use heppo::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_traj = args.get_or("trajectories", 64usize);
+    let t_len = args.get_or("timesteps", 1024usize);
+    let elements = (n_traj * t_len) as u64;
+    let params = GaeParams::default();
+    let mut rng = Rng::new(1);
+
+    let trajs: Vec<Trajectory> = (0..n_traj)
+        .map(|_| {
+            let mut r = vec![0.0f32; t_len];
+            let mut v = vec![0.0f32; t_len + 1];
+            rng.fill_normal_f32(&mut r);
+            rng.fill_normal_f32(&mut v);
+            Trajectory::without_dones(r, v)
+        })
+        .collect();
+    let batch = GaeBatch::from_trajectories(&trajs);
+
+    println!("GAE workload: {n_traj} trajectories x {t_len} timesteps = {elements} elements\n");
+    let mut b = Bencher::from_env();
+
+    b.bench("1. scalar per-trajectory CPU", Some(elements), || {
+        gae_sequential(&params, &trajs)
+    });
+    b.bench("2. batched timestep-major CPU", Some(elements), || {
+        gae_batched(&params, &batch)
+    });
+
+    if n_traj == 64 && t_len == 1024 {
+        let rt = Runtime::new("artifacts")?;
+        let exe = rt.load("gae_T1024_B64")?;
+        let r = Tensor::new(batch.rewards.clone(), vec![t_len, n_traj]);
+        let v = Tensor::new(batch.values.clone(), vec![t_len + 1, n_traj]);
+        let d = Tensor::zeros(&[t_len, n_traj]);
+        b.bench("3. Pallas HLO kernel (PJRT cpu)", Some(elements), || {
+            exe.call(&[r.clone(), v.clone(), d.clone()]).unwrap()
+        });
+    }
+
+    println!("{}", b.to_table().to_markdown());
+
+    // 4. The accelerator (projected, not wall-clock).
+    let sim = GaeHwSim::paper_default();
+    let rep = sim.simulate(&trajs);
+    println!(
+        "4. HEPPO-GAE array (simulated): {} cycles @300 MHz = {:.2} µs -> {} elem/s \
+         (bubbles {}, row util {:.1}%)",
+        rep.cycles,
+        rep.wall_time().as_secs_f64() * 1e6,
+        format_si(rep.elements_per_sec()),
+        rep.bubbles,
+        rep.row_utilization * 100.0
+    );
+
+    let scalar_eps = b.measurements()[0].throughput().unwrap();
+    let batched_eps = b.measurements()[1].throughput().unwrap();
+    println!("\nspeedups vs scalar CPU baseline:");
+    println!("  batched CPU : {:>10.1}x", batched_eps / scalar_eps);
+    println!("  HEPPO-GAE   : {:>10.1}x (projected)", rep.elements_per_sec() / scalar_eps);
+    println!(
+        "\npaper's claim shape: a single PE does 300M elem/s vs ~9k elem/s for an\n\
+         unbatched python loop (~2e6x); our rust scalar baseline is itself far\n\
+         faster than python, so the measured gap is smaller but the ordering and\n\
+         the accelerator's absolute 19.2G elem/s hold."
+    );
+    println!("hw_sim_gae OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Table III ablation driver: train the same task under all five
+//! standardization/quantization experiments and compare learning curves
+//! (a short interactive version of the fig10_experiments bench).
+//!
+//! `cargo run --release --example quant_ablation [-- --env pendulum --iters 40]`
+
+use heppo::coordinator::{Trainer, TrainerConfig};
+use heppo::quant::CodecKind;
+use heppo::util::cli::Args;
+use heppo::util::csv::CsvTable;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let env = args.str_or("env", "pendulum");
+    let iters = args.get_or("iters", 40usize);
+    let seed = args.get_or("seed", 0u64);
+
+    println!("Table III ablation on {env}, {iters} iterations per experiment\n");
+    let mut summary = CsvTable::new(&[
+        "experiment", "description", "final_return", "mean_v_loss", "memory_reduction",
+    ]);
+
+    for codec in CodecKind::all() {
+        let cfg = TrainerConfig {
+            env: env.clone(),
+            iters,
+            codec,
+            seed,
+            ..TrainerConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let stats = trainer.run()?;
+        let last = stats.last().unwrap();
+        let mean_v: f32 = stats.iter().map(|s| s.losses.v_loss).sum::<f32>()
+            / stats.len() as f32;
+        let desc = match codec {
+            CodecKind::Exp1Baseline => "baseline PPO (f32)",
+            CodecKind::Exp2DynamicStd => "dynamic std rewards",
+            CodecKind::Exp3BlockDestd => "block std+quant, de-std rewards",
+            CodecKind::Exp4BlockKeepStd => "block std+quant, keep-std rewards",
+            CodecKind::Exp5DynamicBlock => "dynamic rewards + block values (HEPPO)",
+        };
+        let mem = match codec {
+            CodecKind::Exp1Baseline | CodecKind::Exp2DynamicStd => "1.0x",
+            _ => "4.0x",
+        };
+        println!(
+            "exp{} {:<42} final return {:>9.2}  mean v_loss {:>10.3}",
+            codec.index(),
+            desc,
+            last.mean_return,
+            mean_v
+        );
+        summary.row(&[
+            format!("exp{}", codec.index()),
+            desc.to_string(),
+            format!("{:.3}", last.mean_return),
+            format!("{:.4}", mean_v),
+            mem.to_string(),
+        ]);
+    }
+
+    summary.save("results/quant_ablation.csv")?;
+    println!("\n{}", summary.to_markdown());
+    println!("(paper finding: exp5 best, exp4 poor — see Fig. 10 / fig10_experiments bench)");
+    println!("quant_ablation OK");
+    Ok(())
+}

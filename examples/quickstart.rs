@@ -1,0 +1,113 @@
+//! Quickstart: a five-minute tour of the HEPPO-GAE public API.
+//!
+//! Run with `cargo run --release --example quickstart` (after
+//! `make artifacts`).
+//!
+//! Shows the three ways to compute GAE — the scalar CPU baseline, the
+//! Pallas-lowered HLO kernel via PJRT, and the cycle-accurate hardware
+//! simulator — plus the standardization/quantization codec and a short
+//! PPO training run.
+
+use heppo::bench::format_si;
+use heppo::coordinator::{Trainer, TrainerConfig};
+use heppo::gae::reference::gae_trajectory;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::hwsim::GaeHwSim;
+use heppo::quant::{CodecKind, RewardValueCodec};
+use heppo::runtime::{Runtime, Tensor};
+use heppo::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+
+    // --- 1. GAE on the CPU: the textbook backward recurrence ----------
+    let t_len = 64;
+    let mut rewards = vec![0.0f32; t_len];
+    let mut values = vec![0.0f32; t_len + 1];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let traj = Trajectory::without_dones(rewards.clone(), values.clone());
+    let params = GaeParams::default(); // gamma=0.99, lambda=0.95
+    let cpu = gae_trajectory(&params, &traj);
+    println!("[1] scalar GAE: A_0 = {:+.4}", cpu.advantages[0]);
+
+    // --- 2. The same computation through the AOT Pallas kernel --------
+    let rt = Runtime::new("artifacts")?;
+    // The kernel artifact is batched [T, B]; put our trajectory in
+    // column 0 at the *end* of a T=128,B=16 problem (leading zero
+    // padding never corrupts the trajectory's bootstrap row).
+    let (kt, kb) = (128, 16);
+    let t0 = kt - t_len;
+    let mut r2 = vec![0.0f32; kt * kb];
+    let mut v2 = vec![0.0f32; (kt + 1) * kb];
+    for t in 0..t_len {
+        r2[(t0 + t) * kb] = rewards[t];
+        v2[(t0 + t) * kb] = values[t];
+    }
+    v2[kt * kb] = values[t_len]; // bootstrap row
+    let out = rt.call(
+        "gae_T128_B16",
+        &[
+            Tensor::new(r2, vec![kt, kb]),
+            Tensor::new(v2, vec![kt + 1, kb]),
+            Tensor::zeros(&[kt, kb]),
+        ],
+    )?;
+    let a0 = out[0].data[t0 * kb];
+    println!(
+        "[2] Pallas kernel via PJRT: A_0 = {a0:+.4} (|Δ| vs CPU = {:.2e})",
+        (a0 - cpu.advantages[0]).abs()
+    );
+
+    // --- 3. The cycle-accurate accelerator model ----------------------
+    let sim = GaeHwSim::paper_default(); // 64 rows, 2-step lookahead, 8-bit
+    let workload: Vec<Trajectory> = (0..64)
+        .map(|_| {
+            let mut r = vec![0.0f32; 1024];
+            let mut v = vec![0.0f32; 1025];
+            rng.fill_normal_f32(&mut r);
+            rng.fill_normal_f32(&mut v);
+            Trajectory::without_dones(r, v)
+        })
+        .collect();
+    let rep = sim.simulate(&workload);
+    println!(
+        "[3] hwsim 64x1024: {} cycles @300MHz -> {} elem/s (bubbles={})",
+        rep.cycles,
+        format_si(rep.elements_per_sec()),
+        rep.bubbles
+    );
+
+    // --- 4. The paper's storage codec (Experiment 5) ------------------
+    let mut codec = RewardValueCodec::paper(CodecKind::Exp5DynamicBlock);
+    let mut r = vec![0.0f32; 4096];
+    let mut v = vec![0.0f32; 4096];
+    for x in r.iter_mut() {
+        *x = rng.normal_with(10.0, 3.0) as f32;
+    }
+    for x in v.iter_mut() {
+        *x = rng.normal_with(-5.0, 7.0) as f32;
+    }
+    let report = codec.transform(&mut r, &mut v);
+    println!(
+        "[4] codec exp5: {:.2}x memory reduction; rewards now standardized (mean {:+.3})",
+        report.reduction_vs_f32(4096),
+        r.iter().sum::<f32>() / r.len() as f32
+    );
+
+    // --- 5. Five PPO iterations end-to-end ----------------------------
+    let cfg = TrainerConfig {
+        iters: 5,
+        codec: CodecKind::Exp1Baseline,
+        ..TrainerConfig::default()
+    };
+    let mut trainer = Trainer::new(cfg)?;
+    let stats = trainer.run()?;
+    println!(
+        "[5] 5 PPO iterations on cartpole: {} env steps, mean return {:.1}",
+        stats.last().unwrap().steps,
+        stats.last().unwrap().mean_return
+    );
+    println!("quickstart OK");
+    Ok(())
+}

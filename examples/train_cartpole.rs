@@ -1,0 +1,95 @@
+//! End-to-end validation driver (DESIGN.md §6): train PPO on CartPole
+//! for a few hundred iterations through the full three-layer stack —
+//! Rust envs + coordinator → policy/train HLO artifacts (L2) → Pallas
+//! GAE kernel (L1) — and log the learning curve.
+//!
+//! `cargo run --release --example train_cartpole [-- --iters 300 --backend hlo]`
+//!
+//! Writes `results/train_cartpole.csv` and prints a curve summary; the
+//! run recorded in EXPERIMENTS.md §E2E used the default arguments.
+
+use heppo::coordinator::{GaeBackend, Trainer, TrainerConfig};
+use heppo::quant::CodecKind;
+use heppo::util::cli::Args;
+use heppo::util::csv::CsvTable;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = TrainerConfig {
+        env: "cartpole".into(),
+        iters: args.get_or("iters", 300usize),
+        // The GAE phase runs through the Pallas-lowered kernel so the
+        // e2e driver proves all three layers compose.
+        backend: GaeBackend::parse(&args.str_or("backend", "hlo")).unwrap(),
+        // CartPole's constant +1 reward makes dynamic standardization
+        // degenerate (see EXPERIMENTS.md §Fig7-note); the e2e driver
+        // uses the baseline codec. quant_ablation.rs covers the rest.
+        codec: CodecKind::Exp1Baseline,
+        seed: args.get_or("seed", 0u64),
+        ..TrainerConfig::default()
+    };
+    println!(
+        "e2e: training cartpole for {} iterations (backend {})",
+        cfg.iters,
+        cfg.backend.label()
+    );
+
+    let mut trainer = Trainer::new(cfg)?;
+    let t0 = std::time::Instant::now();
+    let stats = trainer.run()?;
+    let wall = t0.elapsed();
+
+    let mut table = CsvTable::new(&[
+        "iter", "env_steps", "episodes", "mean_return", "pi_loss", "v_loss", "entropy",
+    ]);
+    for s in &stats {
+        table.row(&[
+            s.iter.to_string(),
+            s.steps.to_string(),
+            s.episodes.to_string(),
+            format!("{:.3}", s.mean_return),
+            format!("{:.6}", s.losses.pi_loss),
+            format!("{:.4}", s.losses.v_loss),
+            format!("{:.4}", s.losses.entropy),
+        ]);
+    }
+    table.save("results/train_cartpole.csv")?;
+
+    // Curve summary at a few checkpoints.
+    println!("\nlearning curve (rolling-100 episode return):");
+    for frac in [0.0, 0.1, 0.25, 0.5, 0.75, 1.0] {
+        let i = ((stats.len() - 1) as f64 * frac) as usize;
+        let s = &stats[i];
+        println!(
+            "  iter {:>4}  steps {:>8}  return {:>8.1}  v_loss {:>9.3}",
+            s.iter, s.steps, s.mean_return, s.losses.v_loss
+        );
+    }
+
+    let last = stats.last().unwrap();
+    let greedy = trainer.evaluate(10)?;
+    println!(
+        "\nfinal: rolling return {:.1}, greedy eval {:.1}, {} env steps in {:.1}s \
+         ({:.0} steps/s) -> results/train_cartpole.csv",
+        last.mean_return,
+        greedy,
+        last.steps,
+        wall.as_secs_f64(),
+        last.steps as f64 / wall.as_secs_f64()
+    );
+
+    // Table I profile of this run.
+    println!("\n{}", trainer.profiler.to_table("cartpole e2e").to_markdown());
+    println!(
+        "GAE share: {:.1}% of iteration wall time",
+        trainer.profiler.gae_fraction() * 100.0
+    );
+
+    anyhow::ensure!(
+        last.mean_return > 100.0,
+        "e2e driver should reach return > 100 (got {:.1})",
+        last.mean_return
+    );
+    println!("train_cartpole OK");
+    Ok(())
+}

@@ -1,0 +1,225 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text**.
+
+Run once by `make artifacts` (`python -m compile.aot --out ../artifacts`);
+emits one `.hlo.txt` per computation plus `manifest.json` describing
+every artifact's I/O signature (consumed by rust `runtime/artifact.rs`)
+and `<env>_init_params.f32` binary initial parameters.
+
+HLO *text* (not `HloModuleProto.serialize()`) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Rollout/batch geometry shared with the rust coordinator (the manifest
+# carries these so rust never hardcodes them).
+NUM_ENVS = 16          # B for policy_forward
+ROLLOUT_T = 128        # timesteps per iteration per env
+MINIBATCH = 256        # rows per train_step call
+GAE_CONFIGS = [        # (T, B) shapes to pre-compile GAE kernels for
+    (128, 16),         # the training shape
+    (1024, 64),        # the paper's §IV-A example (benches)
+]
+GAMMA = 0.99
+LAMBDA = 0.95
+QUANT_BITS = 8
+QUANT_RANGE = 5.0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> List[Dict[str, Any]]:
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in jax.tree_util.tree_leaves(args)
+    ]
+
+
+class Builder:
+    """Accumulates artifacts + manifest entries."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: Dict[str, Any] = {
+            "version": 1,
+            "geometry": {
+                "num_envs": NUM_ENVS,
+                "rollout_t": ROLLOUT_T,
+                "minibatch": MINIBATCH,
+                "gamma": GAMMA,
+                "lambda": LAMBDA,
+                "quant_bits": QUANT_BITS,
+                "quant_range": QUANT_RANGE,
+            },
+            "artifacts": {},
+        }
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, example_args: list, meta: Dict[str, Any]):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out = jax.eval_shape(fn, *example_args)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": _sig(out),
+            "meta": meta,
+        }
+        print(f"  {fname}: {len(text)} chars, "
+              f"{len(_sig(example_args))} inputs -> "
+              f"{len(_sig(out))} outputs")
+
+    def add_blob(self, name: str, array: np.ndarray, meta: Dict[str, Any]):
+        fname = f"{name}.f32"
+        array.astype("<f4").tofile(os.path.join(self.out_dir, fname))
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "blob": True,
+            "inputs": [],
+            "outputs": [{"shape": list(array.shape), "dtype": "float32"}],
+            "meta": meta,
+        }
+        print(f"  {fname}: {array.size} f32 values")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  manifest.json: {len(self.manifest['artifacts'])} artifacts")
+
+
+def build_env_artifacts(b: Builder, spec: M.ModelSpec):
+    p_count = spec.param_count()
+    flat = jnp.zeros((p_count,), jnp.float32)
+    obs_rollout = jnp.zeros((NUM_ENVS, spec.obs_dim), jnp.float32)
+    scal = jnp.float32(0.0)
+
+    # policy_forward at rollout batch.
+    b.add(
+        f"{spec.name}_policy_fwd",
+        lambda f, o: M.policy_forward(spec, f, o),
+        [flat, obs_rollout],
+        {
+            "kind": "policy_fwd",
+            "env": spec.name,
+            "obs_dim": spec.obs_dim,
+            "act_dim": spec.act_dim,
+            "discrete": spec.discrete,
+            "hidden": spec.hidden,
+            "param_count": p_count,
+            "batch": NUM_ENVS,
+        },
+    )
+
+    # train_step at minibatch size.
+    act_shape = (MINIBATCH,) if spec.discrete else (MINIBATCH, spec.act_dim)
+    args = [
+        flat,
+        jnp.zeros((p_count,), jnp.float32),  # m
+        jnp.zeros((p_count,), jnp.float32),  # v
+        scal,                                # step
+        jnp.zeros((MINIBATCH, spec.obs_dim), jnp.float32),
+        jnp.zeros(act_shape, jnp.float32),
+        jnp.zeros((MINIBATCH,), jnp.float32),  # old_logp
+        jnp.zeros((MINIBATCH,), jnp.float32),  # advantages
+        jnp.zeros((MINIBATCH,), jnp.float32),  # returns
+        scal,                                # lr
+        scal,                                # clip_eps
+        scal,                                # ent_coef
+    ]
+    b.add(
+        f"{spec.name}_train_step",
+        lambda *a: M.train_step(spec, *a),
+        args,
+        {
+            "kind": "train_step",
+            "env": spec.name,
+            "param_count": p_count,
+            "minibatch": MINIBATCH,
+            "discrete": spec.discrete,
+            "act_dim": spec.act_dim,
+        },
+    )
+
+    # Seeded initial parameters (deterministic per env name).
+    seed = int.from_bytes(hashlib.sha256(spec.name.encode()).digest()[:4], "little")
+    init = M.init_params(spec, jax.random.PRNGKey(seed))
+    b.add_blob(
+        f"{spec.name}_init_params",
+        np.asarray(init),
+        {"kind": "init_params", "env": spec.name, "param_count": p_count,
+         "seed": seed},
+    )
+
+
+def build_gae_artifacts(b: Builder):
+    for (t, batch) in GAE_CONFIGS:
+        b.add(
+            f"gae_T{t}_B{batch}",
+            lambda r, v, d: M.gae_graph(r, v, d, GAMMA, LAMBDA),
+            [
+                jnp.zeros((t, batch), jnp.float32),
+                jnp.zeros((t + 1, batch), jnp.float32),
+                jnp.zeros((t, batch), jnp.float32),
+            ],
+            {"kind": "gae", "t": t, "batch": batch,
+             "gamma": GAMMA, "lambda": LAMBDA},
+        )
+
+
+def build_quant_artifacts(b: Builder):
+    from .kernels.quant import block_roundtrip_pallas
+
+    n = ROLLOUT_T * NUM_ENVS
+    b.add(
+        f"quant_block_N{n}",
+        lambda x: block_roundtrip_pallas(x, bits=QUANT_BITS, rng=QUANT_RANGE,
+                                         destandardize=True),
+        [jnp.zeros((n,), jnp.float32)],
+        {"kind": "quant_block", "n": n, "bits": QUANT_BITS,
+         "range": QUANT_RANGE, "destandardize": True},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--envs", default="cartpole,pendulum,humanoid_lite")
+    args = ap.parse_args()
+
+    print(f"AOT-lowering artifacts to {args.out}")
+    b = Builder(args.out)
+    for env in args.envs.split(","):
+        build_env_artifacts(b, M.SPECS[env])
+    build_gae_artifacts(b)
+    build_quant_artifacts(b)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

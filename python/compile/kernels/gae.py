@@ -1,0 +1,134 @@
+"""L1: the GAE hot-spot as a Pallas kernel with a k-step-lookahead
+blocked scan.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation). The paper's FPGA
+PE breaks the 1-cycle feedback loop of `A_t = δ_t + C·A_{t+1}` by
+unrolling k steps so the multiplier can be pipelined (paper §III-B).
+The TPU/Pallas analogue implemented here:
+
+- the `[T, B]` arrays are tiled along T into chunks of `CHUNK` rows held
+  in VMEM (`BlockSpec`) — the role the on-chip BRAM stack plays on the
+  FPGA;
+- the grid walks the chunks in *reverse* (index_map reverses the grid
+  coordinate), matching the FILO pop order;
+- within a chunk the recurrence is unrolled k = CHUNK steps with the
+  carry kept in registers — the k-step lookahead — and every unrolled
+  step is a [B]-wide vector FMA on the VPU (lanes = trajectories =
+  the paper's parallel PE rows);
+- only one [B] carry vector crosses chunk boundaries, via an output
+  block with a constant index_map (the standard Pallas accumulator
+  pattern), turning the T-long dependence chain into T/k chunk steps.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO that runs anywhere (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM chunk == the lookahead depth k of the unrolled scan.
+# The paper finds k >= 2 suffices to reach 300 MHz in RTL; for the VPU
+# a deeper unroll amortizes chunk overheads — 8 keeps VMEM tiny
+# (8 x B x 4 B) while cutting the chain length 8x.
+DEFAULT_CHUNK = 8
+
+
+def _gae_chunk_kernel(r_ref, v_ref, vn_ref, nd_ref, adv_ref, rtg_ref, carry_ref,
+                      *, gamma: float, c: float, chunk: int):
+    """One grid step: process `chunk` timesteps (already reversed order).
+
+    Refs:
+      r_ref, v_ref, vn_ref, nd_ref: [chunk, B] inputs (rewards, V(s_t),
+        V(s_{t+1}), not-done mask).
+      adv_ref, rtg_ref: [chunk, B] outputs.
+      carry_ref: [B] carry across chunks (constant index_map ⇒ the same
+        VMEM block persists across sequential grid steps).
+    """
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    r = r_ref[...]
+    v = v_ref[...]
+    vn = vn_ref[...]
+    nd = nd_ref[...]
+    # Feed-forward part of the PE datapath: all deltas at once (no loop
+    # dependence — fully "pipelined").
+    delta = r + gamma * vn * nd - v
+
+    carry = carry_ref[...]
+    # k-step unrolled feedback loop: chunk steps of [B]-wide FMA.
+    for j in reversed(range(chunk)):
+        carry = delta[j, :] + c * nd[j, :] * carry
+        adv_ref[j, :] = carry
+        rtg_ref[j, :] = carry + v[j, :]
+    carry_ref[...] = carry
+
+
+def gae_pallas(rewards, values, done_mask, gamma: float, lam: float,
+               chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """Batched GAE via the Pallas kernel.
+
+    Args/returns exactly as :func:`..kernels.ref.gae_ref`. T is padded to
+    a multiple of `chunk` internally (padded steps carry zero reward and
+    zero values, so they leave the carry untouched).
+    """
+    rewards = jnp.asarray(rewards, jnp.float32)
+    values = jnp.asarray(values, jnp.float32)
+    done_mask = jnp.asarray(done_mask, jnp.float32)
+    t_len, batch = rewards.shape
+    assert values.shape == (t_len + 1, batch), values.shape
+    assert done_mask.shape == (t_len, batch)
+
+    v_cur = values[:-1]
+    v_next = values[1:]
+    not_done = 1.0 - done_mask
+
+    # Pad T up to a multiple of `chunk`. Padding lives at the *end* of
+    # the time axis, which the reversed grid touches first: zero rewards
+    # and values with not_done=1 produce delta=0 and leave carry at 0.
+    pad = (-t_len) % chunk
+    if pad:
+        zrow = jnp.zeros((pad, batch), jnp.float32)
+        one_row = jnp.ones((pad, batch), jnp.float32)
+        rewards_p = jnp.concatenate([rewards, zrow], 0)
+        v_cur_p = jnp.concatenate([v_cur, zrow], 0)
+        v_next_p = jnp.concatenate([v_next, zrow], 0)
+        nd_p = jnp.concatenate([not_done, one_row], 0)
+    else:
+        rewards_p, v_cur_p, v_next_p, nd_p = rewards, v_cur, v_next, not_done
+
+    t_pad = t_len + pad
+    grid = t_pad // chunk
+
+    # Reverse walk: grid step g processes chunk index (grid-1-g).
+    rev = lambda g: (grid - 1 - g, 0)
+    in_spec = pl.BlockSpec((chunk, batch), rev)
+    out_spec = pl.BlockSpec((chunk, batch), rev)
+    carry_spec = pl.BlockSpec((batch,), lambda g: (0,))
+
+    kernel = functools.partial(
+        _gae_chunk_kernel, gamma=float(gamma), c=float(gamma * lam), chunk=chunk
+    )
+    adv, rtg, _carry = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[in_spec, in_spec, in_spec, in_spec],
+        out_specs=[out_spec, out_spec, carry_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_pad, batch), jnp.float32),
+            jax.ShapeDtypeStruct((t_pad, batch), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rewards_p, v_cur_p, v_next_p, nd_p)
+
+    return adv[:t_len], rtg[:t_len]

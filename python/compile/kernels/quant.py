@@ -1,0 +1,126 @@
+"""L1: standardize/quantize/dequantize Pallas kernels (paper §II-B/C).
+
+The elementwise store/load transforms that bracket the BRAM stack:
+
+- ``standardize_quantize_pallas`` — `(x - μ)/σ` then n-bit uniform
+  quantization to codewords (stored as uint16 lanes; the BRAM model packs
+  them to n bits);
+- ``dequantize_destandardize_pallas`` — the reconstruction path,
+  optionally skipping de-standardization (the paper keeps *rewards* in
+  standardized form — Experiment 5).
+
+μ/σ are scalar operands computed in L2 (a block reduction XLA already
+fuses well); the Pallas kernels own the bandwidth-bound elementwise
+sweep, tiled along the leading axis into VMEM-resident chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per VMEM tile for the 1-D elementwise sweeps.
+TILE = 1024
+
+
+def _stdq_kernel(x_ref, mu_ref, sigma_ref, out_ref, *, bits: int, rng: float):
+    levels = (1 << bits) - 1
+    step = 2.0 * rng / levels
+    z = (x_ref[...] - mu_ref[0]) / sigma_ref[0]
+    clamped = jnp.clip(z, -rng, rng)
+    out_ref[...] = jnp.round((clamped + rng) / step).astype(jnp.uint16)
+
+
+def _deq_kernel(q_ref, mu_ref, sigma_ref, out_ref, *, bits: int, rng: float,
+                destandardize: bool):
+    levels = (1 << bits) - 1
+    step = 2.0 * rng / levels
+    z = -rng + q_ref[...].astype(jnp.float32) * step
+    if destandardize:
+        z = z * sigma_ref[0] + mu_ref[0]
+    out_ref[...] = z
+
+
+def _pad_1d(x, tile):
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)], 0)
+    return x, n
+
+
+def standardize_quantize_pallas(x, mu, sigma, bits: int = 8, rng: float = 5.0,
+                                interpret: bool = True):
+    """Standardize by (mu, sigma) then quantize to n-bit codewords.
+
+    Args:
+      x: [N] float32.  mu, sigma: scalars (as [1] arrays or python floats).
+    Returns:
+      [N] uint16 codewords in [0, 2^bits).
+    """
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1)
+    sigma = jnp.asarray(sigma, jnp.float32).reshape(1)
+    xp, n = _pad_1d(x, TILE)
+    grid = xp.shape[0] // TILE
+    out = pl.pallas_call(
+        functools.partial(_stdq_kernel, bits=bits, rng=rng),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (0,)),
+            pl.BlockSpec((1,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.uint16),
+        interpret=interpret,
+    )(xp, mu, sigma)
+    return out[:n]
+
+
+def dequantize_destandardize_pallas(codes, mu, sigma, bits: int = 8,
+                                    rng: float = 5.0, destandardize: bool = True,
+                                    interpret: bool = True):
+    """De-quantize codewords; optionally project back to original scale.
+
+    The `destandardize=False` path is the paper's reward reconstruction
+    (rewards stay in dynamically standardized form); `True` is the value
+    path ("multiplying … back by σ_v and adding μ_v").
+    """
+    codes = jnp.asarray(codes, jnp.uint16).reshape(-1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1)
+    sigma = jnp.asarray(sigma, jnp.float32).reshape(1)
+    cp, n = _pad_1d(codes, TILE)
+    grid = cp.shape[0] // TILE
+    out = pl.pallas_call(
+        functools.partial(_deq_kernel, bits=bits, rng=rng,
+                          destandardize=destandardize),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda g: (g,)),
+            pl.BlockSpec((1,), lambda g: (0,)),
+            pl.BlockSpec((1,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((cp.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(cp, mu, sigma)
+    return out[:n]
+
+
+def block_roundtrip_pallas(x, bits: int = 8, rng: float = 5.0,
+                           destandardize: bool = True, interpret: bool = True):
+    """Full block-standardize → quantize → dequantize (→ de-standardize)
+    round trip — the value the training loop sees after BRAM storage.
+    L2 computes the block statistics; L1 does both elementwise sweeps.
+    """
+    x = jnp.asarray(x, jnp.float32).reshape(-1)
+    mu = jnp.mean(x)
+    sigma = jnp.maximum(jnp.std(x), 1e-6)
+    codes = standardize_quantize_pallas(x, mu, sigma, bits, rng, interpret)
+    return dequantize_destandardize_pallas(
+        codes, mu, sigma, bits, rng, destandardize, interpret
+    )

@@ -1,0 +1,100 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every L1 kernel has a reference implementation here written with plain
+jax.numpy / lax.scan; pytest asserts allclose between kernel and oracle
+across shapes, dtypes, and parameter sweeps. The rust test-suite checks
+the same math against its own scalar reference, closing the loop:
+
+    rust gae/reference.rs  ==  ref.gae_ref  ==  kernels/gae.py (Pallas)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae_ref(rewards, values, done_mask, gamma: float, lam: float):
+    """Sequential GAE oracle via lax.scan (paper Eq. 2-5).
+
+    Args:
+      rewards:   [T, B] float32 — timestep-major, matching the paper's
+                 memory-block layout (Fig. 6).
+      values:    [T+1, B] float32 — last row is the bootstrap value.
+      done_mask: [T, B] float32 — 1.0 where the episode terminated at t.
+      gamma, lam: scalars.
+
+    Returns:
+      (advantages [T, B], rewards_to_go [T, B])
+    """
+    rewards = jnp.asarray(rewards)
+    values = jnp.asarray(values)
+    done_mask = jnp.asarray(done_mask)
+    not_done = 1.0 - done_mask
+    deltas = rewards + gamma * values[1:] * not_done - values[:-1]
+    c = gamma * lam
+
+    def step(carry, xs):
+        delta_t, nd_t = xs
+        a = delta_t + c * nd_t * carry
+        return a, a
+
+    _, adv_rev = jax.lax.scan(
+        step,
+        jnp.zeros(rewards.shape[1], rewards.dtype),
+        (deltas[::-1], not_done[::-1]),
+    )
+    advantages = adv_rev[::-1]
+    rewards_to_go = advantages + values[:-1]
+    return advantages, rewards_to_go
+
+
+def quantize_ref(x, bits: int, rng: float):
+    """Uniform quantization oracle (paper §II-C): codes in [0, 2^bits).
+
+    Mirrors rust `quant::uniform::UniformQuantizer`: clamp to [-rng, rng],
+    step = 2*rng/(levels-1).
+    """
+    levels = 1 << bits
+    step = 2.0 * rng / (levels - 1)
+    clamped = jnp.clip(x, -rng, rng)
+    return jnp.round((clamped + rng) / step).astype(jnp.uint16)
+
+
+def dequantize_ref(codes, bits: int, rng: float):
+    """Inverse of :func:`quantize_ref`."""
+    levels = 1 << bits
+    step = 2.0 * rng / (levels - 1)
+    return -rng + codes.astype(jnp.float32) * step
+
+
+def block_standardize_ref(x, eps: float = 1e-6):
+    """Block standardization oracle (paper §II-B): returns (z, mu, sigma)."""
+    mu = jnp.mean(x)
+    sigma = jnp.maximum(jnp.std(x), eps)
+    return (x - mu) / sigma, mu, sigma
+
+
+def dynamic_std_ref(rewards_flat):
+    """Welford running standardization oracle (paper Eq. 6-9).
+
+    Processes a 1-D stream; element i is standardized with the running
+    statistics *including* element i.
+
+    Returns (standardized_stream, final_mean, final_std).
+    """
+
+    def step(carry, r):
+        n, mean, s = carry
+        n1 = n + 1.0
+        d = r - mean
+        mean1 = mean + d / n1
+        s1 = s + d * (r - mean1)
+        std1 = jnp.sqrt(s1 / n1)
+        z = (r - mean1) / jnp.maximum(std1, 1e-6)
+        return (n1, mean1, s1), z
+
+    (n, mean, s), zs = jax.lax.scan(
+        step, (0.0, 0.0, 0.0), rewards_flat.astype(jnp.float32)
+    )
+    return zs, mean, jnp.sqrt(s / n)

@@ -1,0 +1,216 @@
+"""L2: the actor-critic model, PPO-clip loss, and Adam train step.
+
+Build-time only — `aot.py` lowers `policy_forward` and `train_step`
+(jitted) to HLO text once per environment configuration; the rust
+coordinator executes the artifacts via PJRT with **no python on the
+training path**.
+
+Parameter handling: all network parameters travel as ONE flat f32[P]
+vector (plus flat Adam m/v vectors), so the rust side stores three
+buffers and never needs to know the layer structure. The (de)flattening
+happens inside the jitted graphs where XLA turns it into free reshapes.
+
+Architecture (matching common PPO baselines for classic control):
+  actor : obs -> tanh MLP (hidden x2) -> logits (discrete)
+                                      -> mean  (continuous; log_std is a
+                                         free parameter vector)
+  critic: obs -> tanh MLP (hidden x2) -> scalar value
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gae import gae_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Shape/config record for one environment's actor-critic."""
+
+    name: str
+    obs_dim: int
+    act_dim: int
+    discrete: bool
+    hidden: int = 64
+
+    def layer_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) pairs defining the flat-param layout."""
+        h, d, a = self.hidden, self.obs_dim, self.act_dim
+        shapes = [
+            ("pi_w1", (d, h)), ("pi_b1", (h,)),
+            ("pi_w2", (h, h)), ("pi_b2", (h,)),
+            ("pi_w3", (h, a)), ("pi_b3", (a,)),
+            ("v_w1", (d, h)), ("v_b1", (h,)),
+            ("v_w2", (h, h)), ("v_b2", (h,)),
+            ("v_w3", (h, 1)), ("v_b3", (1,)),
+        ]
+        if not self.discrete:
+            shapes.append(("log_std", (a,)))
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.layer_shapes())
+
+
+def unflatten(spec: ModelSpec, flat) -> Dict[str, jax.Array]:
+    """Split the flat parameter vector into named layer arrays."""
+    params = {}
+    off = 0
+    for name, shape in spec.layer_shapes():
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_params(spec: ModelSpec, key) -> jax.Array:
+    """Orthogonal-ish (scaled normal) init, flattened."""
+    chunks = []
+    for name, shape in spec.layer_shapes():
+        key, sub = jax.random.split(key)
+        if name == "log_std":
+            chunks.append(jnp.full(shape, -0.5, jnp.float32).reshape(-1))
+        elif name.endswith(("b1", "b2", "b3")):
+            chunks.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0]
+            scale = jnp.sqrt(2.0 / fan_in)
+            # Final policy layer gets a small init (standard PPO trick).
+            if name in ("pi_w3",):
+                scale = 0.01
+            if name in ("v_w3",):
+                scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            w = scale * jax.random.normal(sub, shape, jnp.float32)
+            chunks.append(w.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def _mlp(params, prefix: str, obs):
+    h = jnp.tanh(obs @ params[f"{prefix}_w1"] + params[f"{prefix}_b1"])
+    h = jnp.tanh(h @ params[f"{prefix}_w2"] + params[f"{prefix}_b2"])
+    return h @ params[f"{prefix}_w3"] + params[f"{prefix}_b3"]
+
+
+def policy_forward(spec: ModelSpec, flat, obs):
+    """Forward pass for rollout.
+
+    Returns (dist_params [B, A(+A)], values [B]):
+      discrete   -> dist_params = logits [B, A]
+      continuous -> dist_params = concat([mean, broadcast(log_std)]) [B, 2A]
+    """
+    p = unflatten(spec, flat)
+    head = _mlp(p, "pi", obs)
+    value = _mlp(p, "v", obs)[:, 0]
+    if spec.discrete:
+        dist = head
+    else:
+        log_std = jnp.broadcast_to(p["log_std"], head.shape)
+        dist = jnp.concatenate([head, log_std], axis=-1)
+    return dist, value
+
+
+def _log_prob(spec: ModelSpec, dist, actions):
+    """Log π(a|s) under the current head output.
+
+    actions: discrete -> int32 [B] (passed as f32, rounded);
+             continuous -> f32 [B, A].
+    """
+    if spec.discrete:
+        logp_all = jax.nn.log_softmax(dist, axis=-1)
+        a = actions.astype(jnp.int32).reshape(-1)
+        return jnp.take_along_axis(logp_all, a[:, None], axis=-1)[:, 0]
+    mean, log_std = jnp.split(dist, 2, axis=-1)
+    std = jnp.exp(log_std)
+    z = (actions - mean) / std
+    return jnp.sum(
+        -0.5 * z * z - log_std - 0.5 * jnp.log(2.0 * jnp.pi), axis=-1
+    )
+
+
+def _entropy(spec: ModelSpec, dist):
+    if spec.discrete:
+        logp = jax.nn.log_softmax(dist, axis=-1)
+        return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    _, log_std = jnp.split(dist, 2, axis=-1)
+    return jnp.sum(log_std + 0.5 * jnp.log(2.0 * jnp.pi * jnp.e), axis=-1)
+
+
+# PPO fixed coefficients (standard values; the swept hyper-parameters —
+# lr, clip — stay runtime scalars).
+VF_COEF = 0.5
+
+
+def ppo_loss(spec: ModelSpec, flat, obs, actions, old_logp, advantages,
+             returns, clip_eps, ent_coef):
+    """PPO-Clip objective (paper Algorithm 1 line 6, + value MSE line 7)."""
+    dist, value = policy_forward(spec, flat, obs)
+    logp = _log_prob(spec, dist, actions)
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = ratio * advantages
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * advantages
+    pi_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+    v_loss = 0.5 * jnp.mean((value - returns) ** 2)
+    ent = jnp.mean(_entropy(spec, dist))
+    total = pi_loss + VF_COEF * v_loss - ent_coef * ent
+    return total, (pi_loss, v_loss, ent)
+
+
+# Adam constants (Kingma & Ba 2015, the paper's Algorithm 1 reference [5]).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def train_step(spec: ModelSpec, flat, m, v, step, obs, actions, old_logp,
+               advantages, returns, lr, clip_eps, ent_coef):
+    """One Adam minibatch update. All state flat; `step` is f32 scalar
+    (the *previous* step count; this update uses step+1).
+
+    Returns (new_flat, new_m, new_v, new_step, losses[3]).
+    """
+    (_, aux), grads = jax.value_and_grad(
+        lambda f: ppo_loss(spec, f, obs, actions, old_logp, advantages,
+                           returns, clip_eps, ent_coef),
+        has_aux=True,
+    )(flat)
+    pi_loss, v_loss, ent = aux
+
+    # Global grad-norm clipping at 0.5 (standard PPO practice).
+    gnorm = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+    scale = jnp.minimum(1.0, 0.5 / gnorm)
+    grads = grads * scale
+
+    step1 = step + 1.0
+    m1 = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v1 = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = m1 / (1.0 - ADAM_B1 ** step1)
+    vhat = v1 / (1.0 - ADAM_B2 ** step1)
+    new_flat = flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    losses = jnp.stack([pi_loss, v_loss, ent])
+    return new_flat, m1, v1, step1, losses
+
+
+def gae_graph(rewards, values, done_mask, gamma: float, lam: float):
+    """The L2 GAE graph: thin wrapper so the Pallas kernel lowers inside
+    the same jitted computation the rust runtime loads."""
+    return gae_pallas(rewards, values, done_mask, gamma, lam)
+
+
+# --- standard environment/model configurations -------------------------
+
+SPECS: Dict[str, ModelSpec] = {
+    "cartpole": ModelSpec("cartpole", obs_dim=4, act_dim=2, discrete=True),
+    "pendulum": ModelSpec("pendulum", obs_dim=3, act_dim=1, discrete=False),
+    # HumanoidLite: synthetic high-dim continuous env with MuJoCo-
+    # Humanoid-like tensor shapes (paper profiles Humanoid: 376 obs, 17 act).
+    "humanoid_lite": ModelSpec(
+        "humanoid_lite", obs_dim=376, act_dim=17, discrete=False
+    ),
+}

@@ -1,0 +1,103 @@
+"""AOT pipeline tests: manifest integrity + HLO text round-trips through
+the same xla_client entry points the rust runtime relies on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a small artifact set (cartpole only) into a tmp dir."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    b = aot.Builder(out)
+    aot.build_env_artifacts(b, M.SPECS["cartpole"])
+    aot.build_gae_artifacts(b)
+    b.finish()
+    return out
+
+
+def test_manifest_structure(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    geo = man["geometry"]
+    assert geo["num_envs"] == aot.NUM_ENVS
+    assert geo["gamma"] == aot.GAMMA
+    arts = man["artifacts"]
+    assert "cartpole_policy_fwd" in arts
+    assert "cartpole_train_step" in arts
+    assert "cartpole_init_params" in arts
+    fwd = arts["cartpole_policy_fwd"]
+    assert fwd["inputs"][1]["shape"] == [aot.NUM_ENVS, 4]
+    assert fwd["meta"]["param_count"] == M.SPECS["cartpole"].param_count()
+
+
+def test_hlo_files_exist_and_parse(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    for name, art in man["artifacts"].items():
+        path = os.path.join(built, art["file"])
+        assert os.path.exists(path), name
+        if art["file"].endswith(".hlo.txt"):
+            text = open(path).read()
+            assert text.startswith("HloModule"), f"{name}: not HLO text"
+            assert "ENTRY" in text
+
+
+def test_init_params_blob_roundtrip(built):
+    spec = M.SPECS["cartpole"]
+    blob = np.fromfile(
+        os.path.join(built, "cartpole_init_params.f32"), dtype="<f4"
+    )
+    assert blob.shape == (spec.param_count(),)
+    assert np.isfinite(blob).all()
+    assert blob.std() > 0.0  # not all zeros
+
+
+def test_init_params_deterministic(built, tmp_path):
+    """Rebuilding produces bit-identical initial parameters (seeded)."""
+    b = aot.Builder(str(tmp_path))
+    aot.build_env_artifacts(b, M.SPECS["cartpole"])
+    a1 = np.fromfile(os.path.join(built, "cartpole_init_params.f32"), "<f4")
+    a2 = np.fromfile(os.path.join(str(tmp_path), "cartpole_init_params.f32"), "<f4")
+    np.testing.assert_array_equal(a1, a2)
+
+
+def test_hlo_text_parameter_arity_matches_manifest(built):
+    """The HLO text's ENTRY signature must agree with the manifest's
+    input list — this is the contract the rust loader relies on. (The
+    executable round trip itself is covered by the rust integration test
+    `runtime_artifacts`, which loads these files through PJRT.)"""
+    with open(os.path.join(built, "manifest.json")) as f:
+        man = json.load(f)
+    art = man["artifacts"]["cartpole_train_step"]
+    text = open(os.path.join(built, art["file"])).read()
+    # Count parameters in the ENTRY computation only (nested fusions/
+    # reductions declare their own parameter(0/1)).
+    entry = text[text.index("\nENTRY "):]
+    n_params = entry.count(" parameter(")
+    assert n_params == len(art["inputs"]), (
+        f"manifest {len(art['inputs'])} inputs vs {n_params} HLO ENTRY parameters"
+    )
+
+
+def test_full_artifact_dir_if_built():
+    """If `make artifacts` has run at repo root, sanity-check it."""
+    man_path = os.path.join(ARTIFACT_DIR, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("repo artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    for name, art in man["artifacts"].items():
+        assert os.path.exists(os.path.join(ARTIFACT_DIR, art["file"])), name
+    assert "gae_T1024_B64" in man["artifacts"]

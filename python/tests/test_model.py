@@ -1,0 +1,167 @@
+"""L2 model tests: shapes, log-prob math, Adam, and loss descent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(params=["cartpole", "pendulum"])
+def spec(request):
+    return M.SPECS[request.param]
+
+
+def test_param_count_matches_layout(spec):
+    flat = M.init_params(spec, jax.random.PRNGKey(0))
+    assert flat.shape == (spec.param_count(),)
+    p = M.unflatten(spec, flat)
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == spec.param_count()
+
+
+def test_forward_shapes(spec):
+    flat = M.init_params(spec, jax.random.PRNGKey(0))
+    obs = jnp.zeros((7, spec.obs_dim))
+    dist, value = M.policy_forward(spec, flat, obs)
+    assert value.shape == (7,)
+    want = spec.act_dim if spec.discrete else 2 * spec.act_dim
+    assert dist.shape == (7, want)
+
+
+def test_discrete_log_prob_matches_softmax():
+    spec = M.SPECS["cartpole"]
+    logits = jnp.array([[1.0, 2.0], [0.5, -0.5], [3.0, 3.0]])
+    actions = jnp.array([1.0, 0.0, 1.0])
+    logp = M._log_prob(spec, logits, actions)
+    want = jax.nn.log_softmax(logits)[jnp.arange(3), actions.astype(int)]
+    np.testing.assert_allclose(np.asarray(logp), np.asarray(want), rtol=1e-6)
+
+
+def test_continuous_log_prob_matches_gaussian():
+    spec = M.SPECS["pendulum"]
+    mean = jnp.array([[0.5]])
+    log_std = jnp.array([[-0.5]])
+    dist = jnp.concatenate([mean, log_std], -1)
+    a = jnp.array([[1.0]])
+    logp = float(M._log_prob(spec, dist, a)[0])
+    std = np.exp(-0.5)
+    want = -0.5 * ((1.0 - 0.5) / std) ** 2 - np.log(std) - 0.5 * np.log(2 * np.pi)
+    assert abs(logp - want) < 1e-5
+
+
+def test_entropy_values():
+    spec = M.SPECS["cartpole"]
+    uniform = jnp.zeros((1, 2))
+    ent = float(M._entropy(spec, uniform)[0])
+    assert abs(ent - np.log(2)) < 1e-6
+
+    cspec = M.SPECS["pendulum"]
+    dist = jnp.concatenate([jnp.zeros((1, 1)), jnp.zeros((1, 1))], -1)  # std=1
+    ent = float(M._entropy(cspec, dist)[0])
+    assert abs(ent - 0.5 * np.log(2 * np.pi * np.e)) < 1e-5
+
+
+def _fake_batch(spec, n, key):
+    ks = jax.random.split(key, 5)
+    obs = jax.random.normal(ks[0], (n, spec.obs_dim))
+    if spec.discrete:
+        actions = jax.random.randint(ks[1], (n,), 0, spec.act_dim).astype(jnp.float32)
+    else:
+        actions = jax.random.normal(ks[1], (n, spec.act_dim))
+    flat = M.init_params(spec, ks[2])
+    dist, value = M.policy_forward(spec, flat, obs)
+    old_logp = M._log_prob(spec, dist, actions)
+    adv = jax.random.normal(ks[3], (n,))
+    ret = value + 0.5 * jax.random.normal(ks[4], (n,))
+    return flat, obs, actions, old_logp, adv, ret
+
+
+def test_ppo_loss_zero_advantage_has_zero_pi_loss(spec):
+    flat, obs, actions, old_logp, adv, ret = _fake_batch(
+        spec, 32, jax.random.PRNGKey(1)
+    )
+    total, (pi_loss, v_loss, ent) = M.ppo_loss(
+        spec, flat, obs, actions, old_logp, jnp.zeros_like(adv), ret,
+        jnp.float32(0.2), jnp.float32(0.0),
+    )
+    assert abs(float(pi_loss)) < 1e-6
+    assert float(v_loss) >= 0.0
+
+
+def test_ppo_clip_bounds_ratio_effect(spec):
+    """With strongly positive advantage and a big policy shift, the loss
+    gradient must saturate (clipping active): loss at eps=0.2 is within
+    (1+eps)*mean(adv) of the best case."""
+    flat, obs, actions, old_logp, adv, ret = _fake_batch(
+        spec, 64, jax.random.PRNGKey(2)
+    )
+    pos_adv = jnp.abs(adv) + 1.0
+    # Shift old_logp down so ratio = exp(logp-old) is large.
+    total, (pi_loss, _, _) = M.ppo_loss(
+        spec, flat, obs, actions, old_logp - 5.0, pos_adv, ret,
+        jnp.float32(0.2), jnp.float32(0.0),
+    )
+    assert float(pi_loss) >= -float(jnp.mean(pos_adv)) * 1.2 - 1e-4
+
+
+def test_train_step_descends_value_loss(spec):
+    """A few Adam steps on a fixed regression batch must shrink v_loss."""
+    flat, obs, actions, old_logp, adv, ret = _fake_batch(
+        spec, 128, jax.random.PRNGKey(3)
+    )
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    step = jnp.float32(0.0)
+    losses0 = None
+    n_steps = 80
+    for i in range(n_steps):
+        flat, m, v, step, losses = M.train_step(
+            spec, flat, m, v, step, obs, actions, old_logp,
+            jnp.zeros_like(adv), ret,
+            jnp.float32(3e-3), jnp.float32(0.2), jnp.float32(0.0),
+        )
+        if losses0 is None:
+            losses0 = losses
+    assert float(losses[1]) < float(losses0[1]) * 0.7, (
+        f"v_loss {float(losses0[1])} -> {float(losses[1])}"
+    )
+    assert float(step) == float(n_steps)
+
+
+def test_adam_matches_manual_numpy(spec):
+    """One train_step equals a hand-rolled numpy Adam on the same grads."""
+    flat, obs, actions, old_logp, adv, ret = _fake_batch(
+        spec, 16, jax.random.PRNGKey(4)
+    )
+    lr, clip_eps, ent_coef = 1e-3, 0.2, 0.01
+
+    grads = jax.grad(
+        lambda f: M.ppo_loss(spec, f, obs, actions, old_logp, adv, ret,
+                             jnp.float32(clip_eps), jnp.float32(ent_coef))[0]
+    )(flat)
+    g = np.asarray(grads)
+    gnorm = np.sqrt((g * g).sum() + 1e-12)
+    g = g * min(1.0, 0.5 / gnorm)
+
+    m1 = (1 - M.ADAM_B1) * g
+    v1 = (1 - M.ADAM_B2) * g * g
+    mhat = m1 / (1 - M.ADAM_B1)
+    vhat = v1 / (1 - M.ADAM_B2)
+    want = np.asarray(flat) - lr * mhat / (np.sqrt(vhat) + M.ADAM_EPS)
+
+    new_flat, _, _, _, _ = M.train_step(
+        spec, flat, jnp.zeros_like(flat), jnp.zeros_like(flat),
+        jnp.float32(0.0), obs, actions, old_logp, adv, ret,
+        jnp.float32(lr), jnp.float32(clip_eps), jnp.float32(ent_coef),
+    )
+    np.testing.assert_allclose(np.asarray(new_flat), want, rtol=2e-4, atol=2e-6)
+
+
+def test_humanoid_lite_spec_shapes():
+    spec = M.SPECS["humanoid_lite"]
+    assert spec.obs_dim == 376 and spec.act_dim == 17 and not spec.discrete
+    flat = M.init_params(spec, jax.random.PRNGKey(0))
+    dist, value = M.policy_forward(spec, flat, jnp.zeros((2, 376)))
+    assert dist.shape == (2, 34)

@@ -1,0 +1,103 @@
+"""Kernel-vs-oracle correctness for the standardize/quantize kernels."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant import (
+    block_roundtrip_pallas,
+    dequantize_destandardize_pallas,
+    standardize_quantize_pallas,
+)
+from compile.kernels.ref import (
+    block_standardize_ref,
+    dequantize_ref,
+    dynamic_std_ref,
+    quantize_ref,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    bits=st.sampled_from([3, 4, 5, 6, 7, 8, 9, 10]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_kernel_matches_ref(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(2.0, 3.0, size=n).astype("float32")
+    z, mu, sigma = block_standardize_ref(jnp.asarray(x))
+    got = standardize_quantize_pallas(x, mu, sigma, bits=bits)
+    want = quantize_ref(z, bits, 5.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 4000),
+    bits=st.sampled_from([4, 8, 10]),
+    destd=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequantize_kernel_matches_ref(n, bits, destd, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=n).astype("uint16")
+    mu, sigma = np.float32(1.5), np.float32(2.5)
+    got = dequantize_destandardize_pallas(
+        codes, mu, sigma, bits=bits, destandardize=destd
+    )
+    want = dequantize_ref(jnp.asarray(codes), bits, 5.0)
+    if destd:
+        want = want * sigma + mu
+    # Kernel computes the step in f32, the oracle in f64-then-cast: allow
+    # one-ulp-scale drift.
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_roundtrip_error_bound():
+    """8-bit round trip of a block: |err| <= sigma * step/2 everywhere."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(-4.0, 7.0, size=4096).astype("float32")
+    y = np.asarray(block_roundtrip_pallas(x, bits=8))
+    sigma = x.std()
+    step = 2 * 5.0 / 255
+    assert np.abs(y - x).max() <= sigma * step / 2 + 1e-4
+
+
+def test_roundtrip_without_destandardize_is_standardized():
+    """destandardize=False leaves the block in ~N(0,1) form (the paper's
+    reward path)."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(100.0, 10.0, size=4096).astype("float32")
+    y = np.asarray(block_roundtrip_pallas(x, bits=8, destandardize=False))
+    assert abs(y.mean()) < 0.05
+    assert abs(y.std() - 1.0) < 0.05
+
+
+def test_codes_fit_in_8_bits():
+    rng = np.random.default_rng(2)
+    x = rng.normal(0, 50.0, size=1000).astype("float32")  # heavy clipping
+    z, mu, sigma = block_standardize_ref(jnp.asarray(x))
+    codes = np.asarray(standardize_quantize_pallas(x, mu, sigma, bits=8))
+    assert codes.min() >= 0 and codes.max() <= 255
+
+
+def test_dynamic_std_ref_matches_numpy_welford():
+    """The jax Welford oracle agrees with a trivial numpy loop (and hence
+    with rust stats::welford, which tests the same recurrence)."""
+    rng = np.random.default_rng(3)
+    xs = rng.normal(5.0, 2.0, size=500)
+    zs, mean, std = dynamic_std_ref(jnp.asarray(xs, jnp.float32))
+    n, m, s = 0, 0.0, 0.0
+    want = []
+    for x in xs.astype("float32"):
+        n += 1
+        d = x - m
+        m += d / n
+        s += d * (x - m)
+        want.append((x - m) / max(np.sqrt(s / n), 1e-6))
+    np.testing.assert_allclose(np.asarray(zs), want, rtol=1e-4, atol=1e-4)
+    assert abs(float(mean) - m) < 1e-4
+    assert abs(float(std) - np.sqrt(s / n)) < 1e-4

@@ -1,0 +1,73 @@
+//! Table III + Fig. 10 reproduction: the five standardization/
+//! quantization experiments, rolling-average reward comparison.
+//!
+//! Paper findings: Exp 5 (dynamic std rewards + block std values, both
+//! 8-bit) performs best; Exp 4 (rewards kept in *block*-standardized
+//! form) performs poorly; Exp 2 (dynamic std alone) beats Exp 1
+//! (baseline). Writes results/fig10_experiments.csv.
+
+use heppo::coordinator::{Trainer, TrainerConfig};
+use heppo::quant::CodecKind;
+use heppo::util::cli::Args;
+use heppo::util::csv::CsvTable;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let iters = args.get_or("iters", if fast { 3 } else { 80 });
+    let env = args.str_or("env", "pendulum");
+    let seeds: Vec<u64> = if fast { vec![0] } else { vec![0, 1] };
+
+    let mut table =
+        CsvTable::new(&["experiment", "seed", "iter", "steps", "mean_return"]);
+    let mut finals = Vec::new();
+
+    for codec in CodecKind::all() {
+        let mut f = 0.0;
+        for &seed in &seeds {
+            let cfg = TrainerConfig {
+                env: env.clone(),
+                iters,
+                codec,
+                seed,
+                ..TrainerConfig::default()
+            };
+            let stats = Trainer::new(cfg)?.run()?;
+            for s in &stats {
+                table.row(&[
+                    format!("exp{}", codec.index()),
+                    seed.to_string(),
+                    s.iter.to_string(),
+                    s.steps.to_string(),
+                    format!("{:.3}", s.mean_return),
+                ]);
+            }
+            f += stats.last().unwrap().mean_return / seeds.len() as f64;
+        }
+        println!(
+            "exp{} final return (mean over {} seeds): {:>10.2}",
+            codec.index(),
+            seeds.len(),
+            f
+        );
+        finals.push((codec.index(), f));
+    }
+
+    table.save("results/fig10_experiments.csv")?;
+    let get = |i: usize| finals.iter().find(|(k, _)| *k == i).unwrap().1;
+    println!("\nshape checks (paper Fig. 10):");
+    println!(
+        "  exp5 vs exp1 (HEPPO vs baseline): {:+.1} vs {:+.1}  -> {}",
+        get(5),
+        get(1),
+        if get(5) > get(1) { "exp5 wins (as in paper)" } else { "inverted (!)" }
+    );
+    println!(
+        "  exp4 vs exp5 (keep-block-std rewards hurt): {:+.1} vs {:+.1} -> {}",
+        get(4),
+        get(5),
+        if get(4) < get(5) { "exp4 worse (as in paper)" } else { "inverted (!)" }
+    );
+    println!("-> results/fig10_experiments.csv");
+    Ok(())
+}

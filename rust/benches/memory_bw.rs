@@ -1,0 +1,121 @@
+//! §IV-A + §V-D-2 reproduction: the memory-bandwidth argument and the
+//! BRAM sizing, plus measured FILO/codec throughput and the 4× memory
+//! claim.
+//!
+//! Writes results/memory_bw.csv.
+
+use heppo::bench::{format_si, Bencher};
+use heppo::memory::{BlockLayout, BramSpec, DramSpec, FiloStack};
+use heppo::quant::{CodecKind, RewardValueCodec, UniformQuantizer};
+use heppo::util::csv::CsvTable;
+use heppo::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dram = DramSpec::default();
+    let bram = BramSpec::default();
+
+    println!("§IV-A: DRAM vs BRAM bandwidth for 64 parallel PEs\n");
+    let mut t = CsvTable::new(&["quantity", "value", "paper"]);
+    t.row(&[
+        "DRAM bytes/cycle @300MHz".into(),
+        format!("{:.1}", dram.bytes_per_cycle()),
+        "83.3".into(),
+    ]);
+    t.row(&[
+        "required bytes/cycle (64 PEs, f32)".into(),
+        format!("{:.0}", DramSpec::required_bytes_per_cycle(64, 4)),
+        "512".into(),
+    ]);
+    t.row(&[
+        "shortfall bytes/cycle".into(),
+        format!("{:.1}", dram.shortfall(64, 4)),
+        "428.7".into(),
+    ]);
+    t.row(&[
+        "max f32 PEs DRAM can feed".into(),
+        dram.max_sustainable_pes(4).to_string(),
+        "-".into(),
+    ]);
+
+    println!("§V-D-2: BRAM sizing for 64 traj x 1024 steps (8-bit, in-place)\n");
+    let layout = BlockLayout::paper_example(1);
+    let total_bytes = layout.total_bytes(true);
+    t.row(&[
+        "on-chip footprint (bytes)".into(),
+        total_bytes.to_string(),
+        "131072 (128 KB)".into(),
+    ]);
+    t.row(&[
+        "BRAM blocks (capacity)".into(),
+        bram.blocks_for_capacity(total_bytes).to_string(),
+        "29 (~9%)".into(),
+    ]);
+    t.row(&[
+        "BRAM blocks (256 B/cycle bandwidth)".into(),
+        bram.blocks_for_bandwidth(256).to_string(),
+        "32 (~10%)".into(),
+    ]);
+    let f32_layout = BlockLayout::paper_example(4);
+    t.row(&[
+        "memory reduction (f32/no-overwrite vs 8-bit/in-place)".into(),
+        format!(
+            "{:.1}x",
+            f32_layout.total_bytes(false) as f64 / total_bytes as f64
+        ),
+        "8x (4x quant x 2x in-place)".into(),
+    ]);
+    println!("{}", t.to_markdown());
+    t.save("results/memory_bw.csv")?;
+
+    // --- measured software throughput of the storage path ------------
+    println!("measured storage-path throughput (host):\n");
+    let mut b = Bencher::from_env();
+    let n = 64 * 1024;
+    let mut rng = Rng::new(2);
+    let mut rewards = vec![0.0f32; n];
+    let mut values = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+
+    b.bench("codec exp5 transform (128Ki elems)", Some(2 * n as u64), || {
+        let mut c = RewardValueCodec::paper(CodecKind::Exp5DynamicBlock);
+        let mut r = rewards.clone();
+        let mut v = values.clone();
+        c.transform(&mut r, &mut v);
+        (r, v)
+    });
+
+    let q = UniformQuantizer::new(8);
+    let codes = q.quantize_all(&rewards);
+    b.bench("8-bit pack+unpack (64Ki codes)", Some(n as u64), || {
+        let packed = q.pack(&codes);
+        q.unpack(&packed, n)
+    });
+
+    b.bench("FILO push+backward sweep (1024 rows x 64)", Some(n as u64), || {
+        let mut stack: FiloStack<f32> = FiloStack::new(64, 1024);
+        let row = vec![1.0f32; 64];
+        for _ in 0..1024 {
+            stack.push_row(&row).unwrap();
+        }
+        let mut acc = 0.0f32;
+        stack.for_each_backward_mut(|_, r| {
+            for x in r.iter_mut() {
+                acc += *x;
+                *x = acc;
+            }
+        });
+        acc
+    });
+
+    println!("{}", b.to_table().to_markdown());
+    b.report("results/memory_bw_samples.csv")?;
+
+    println!(
+        "BRAM peak at 32 blocks: {} bytes/cycle = {} at 300 MHz",
+        bram.peak_bandwidth(32),
+        format_si(bram.peak_bandwidth(32) as f64 * 300e6)
+    );
+    println!("-> results/memory_bw.csv");
+    Ok(())
+}

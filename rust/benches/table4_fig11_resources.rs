@@ -1,0 +1,94 @@
+//! Table IV + Fig. 11 (+ Fig. 4 bubbles) reproduction: resource
+//! utilization and fmax of the n-step lookahead PE, plus the pipeline-
+//! bubble cycle counts that motivate the lookahead.
+//!
+//! Writes results/table4_resources.csv and results/fig11_per_pe.csv.
+
+use heppo::gae::lookahead::decomposition_max_error;
+use heppo::gae::GaeParams;
+use heppo::hwsim::pe::{run_pe, PeConfig};
+use heppo::hwsim::ResourceModel;
+use heppo::util::csv::CsvTable;
+use heppo::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let model = ResourceModel::default();
+
+    // --- Fig. 11: per-PE resources vs lookahead steps ----------------
+    println!("Fig. 11: per-PE resources vs n-step lookahead (quadratic growth)\n");
+    let mut fig11 = CsvTable::new(&["lookahead", "luts", "ffs", "dsps", "fmax_mhz"]);
+    for k in 1..=4 {
+        let p = model.per_pe(k);
+        fig11.row(&[
+            k.to_string(),
+            p.luts.to_string(),
+            p.ffs.to_string(),
+            p.dsps.to_string(),
+            format!("{:.0}", model.fmax_hz(k) / 1e6),
+        ]);
+    }
+    println!("{}", fig11.to_markdown());
+    fig11.save("results/fig11_per_pe.csv")?;
+
+    // --- Table IV: 64-PE totals at 2-step lookahead ------------------
+    println!("Table IV: resource utilization, 2-step lookahead, 64 PEs\n");
+    let mut t4 = CsvTable::new(&["Resource", "Total Usage (64 PEs)", "Available", "Utilization (%)", "Paper"]);
+    let tot = model.total(2, 64);
+    let (ul, uf, ud) = model.utilization(2, 64);
+    t4.row(&[
+        "LUTs".into(),
+        tot.luts.to_string(),
+        model.device.luts.to_string(),
+        format!("{:.2}", ul * 100.0),
+        "12864 / 4.69%".into(),
+    ]);
+    t4.row(&[
+        "FFs".into(),
+        tot.ffs.to_string(),
+        model.device.ffs.to_string(),
+        format!("{:.2}", uf * 100.0),
+        "54336 / 9.91%".into(),
+    ]);
+    t4.row(&[
+        "DSPs".into(),
+        tot.dsps.to_string(),
+        model.device.dsps.to_string(),
+        format!("{:.2}", ud * 100.0),
+        "768 / 30.48%".into(),
+    ]);
+    println!("{}", t4.to_markdown());
+    t4.save("results/table4_resources.csv")?;
+
+    // --- Fig. 4: feedback-loop bubbles vs lookahead ------------------
+    println!("Fig. 4: PE cycle counts on a 4096-element vector (mul latency 3)\n");
+    let mut fig4 = CsvTable::new(&["lookahead", "cycles", "bubbles", "elem_per_cycle", "elem_per_sec_at_fmax"]);
+    let mut rng = Rng::new(0);
+    let t_len = 4096;
+    let mut r = vec![0.0f32; t_len];
+    let mut v = vec![0.0f32; t_len + 1];
+    rng.fill_normal_f32(&mut r);
+    rng.fill_normal_f32(&mut v);
+    for k in 1..=4 {
+        let cfg = PeConfig { lookahead: k, mul_latency: 3, frontend_latency: 4 };
+        let run = run_pe(&cfg, &GaeParams::default(), &r, &v);
+        let fmax = model.fmax_hz(k);
+        fig4.row(&[
+            k.to_string(),
+            run.cycles.to_string(),
+            run.bubbles.to_string(),
+            format!("{:.3}", run.elements_per_cycle()),
+            format!("{:.1}M", run.elements_per_cycle() * fmax / 1e6),
+        ]);
+    }
+    println!("{}", fig4.to_markdown());
+
+    // --- Table II: decomposition identity errors ---------------------
+    let deltas: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+    println!("Table II identity max error (C=0.9405):");
+    for k in 1..=4 {
+        println!("  k={k}: {:.2e}", decomposition_max_error(0.9405, &deltas, k));
+    }
+
+    println!("\n-> results/fig11_per_pe.csv, results/table4_resources.csv");
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with median/mean/min reporting
+//! and throughput derivation. Every `cargo bench` target in
+//! `rust/benches/` uses this, prints a markdown table, and saves CSV
+//! under `results/`.
+
+use crate::util::csv::CsvTable;
+use crate::util::timer::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall times.
+    pub samples: Vec<Duration>,
+    /// Work items per iteration (for throughput), if meaningful.
+    pub items_per_iter: Option<u64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
+    /// Items/second at the median sample.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n as f64 / self.median().as_secs_f64())
+    }
+}
+
+/// Benchmark runner with fixed warmup/sample counts.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    measurements: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, sample_iters: 10, measurements: Vec::new() }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, sample_iters: usize) -> Self {
+        Bencher { warmup_iters, sample_iters, measurements: Vec::new() }
+    }
+
+    /// Quick-mode bencher honoring `HEPPO_BENCH_FAST=1` (used in CI/tests).
+    pub fn from_env() -> Self {
+        if std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1") {
+            Bencher::new(1, 3)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Run a benchmark; `f` is one full iteration.
+    pub fn bench<T>(&mut self, name: &str, items_per_iter: Option<u64>, mut f: impl FnMut() -> T) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let samples = (0..self.sample_iters)
+            .map(|_| {
+                let t = Instant::now();
+                black_box(f());
+                t.elapsed()
+            })
+            .collect();
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            samples,
+            items_per_iter,
+        });
+        self.measurements.last().unwrap()
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Render all measurements as a markdown table.
+    pub fn to_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(&["benchmark", "median", "mean", "min", "throughput/s"]);
+        for m in &self.measurements {
+            t.row(&[
+                m.name.clone(),
+                fmt_duration(m.median()),
+                fmt_duration(m.mean()),
+                fmt_duration(m.min()),
+                m.throughput()
+                    .map(|t| format_si(t))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Print the table and save raw samples as CSV.
+    pub fn report(&self, csv_path: &str) -> anyhow::Result<()> {
+        println!("{}", self.to_table().to_markdown());
+        let mut raw = CsvTable::new(&["benchmark", "sample_idx", "seconds", "items_per_iter"]);
+        for m in &self.measurements {
+            for (i, s) in m.samples.iter().enumerate() {
+                raw.row(&[
+                    m.name.clone(),
+                    i.to_string(),
+                    format!("{:.9}", s.as_secs_f64()),
+                    m.items_per_iter.map(|n| n.to_string()).unwrap_or_default(),
+                ]);
+            }
+        }
+        raw.save(csv_path)?;
+        Ok(())
+    }
+}
+
+/// SI-suffixed number formatting (1.23M, 45.6k ...).
+pub fn format_si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher::new(1, 5);
+        let m = b.bench("noop", Some(100), || 1 + 1);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn median_of_odd() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![
+                Duration::from_millis(3),
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+            ],
+            items_per_iter: None,
+        };
+        assert_eq!(m.median(), Duration::from_millis(2));
+        assert_eq!(m.min(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn si_format() {
+        assert_eq!(format_si(1234.0), "1.23k");
+        assert_eq!(format_si(2.5e6), "2.50M");
+        assert_eq!(format_si(3e8), "300.00M");
+        assert_eq!(format_si(12.0), "12.00");
+        assert_eq!(format_si(4.2e9), "4.20G");
+    }
+
+    #[test]
+    fn table_has_all_rows() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("a", None, || 0);
+        b.bench("b", Some(10), || 0);
+        assert_eq!(b.to_table().n_rows(), 2);
+    }
+}

@@ -1,0 +1,148 @@
+//! Checkpointing: save/restore the full optimizer+network state so
+//! training survives process restarts and trained policies can be
+//! served by `heppo eval --load`.
+//!
+//! Format: a small JSON header (versioned, with the env name and vector
+//! lengths) followed by the three flat f32 vectors little-endian —
+//! readable from any language, diff-friendly header.
+
+use super::ppo::NetState;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &str = "HEPPO-CKPT";
+const VERSION: usize = 1;
+
+/// Save a checkpoint.
+pub fn save(path: impl AsRef<Path>, env: &str, state: &NetState) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let header = Json::obj(vec![
+        ("magic", MAGIC.into()),
+        ("version", VERSION.into()),
+        ("env", env.into()),
+        ("param_count", state.params.len().into()),
+        ("step", Json::Num(state.step as f64)),
+    ])
+    .to_string();
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for vec in [&state.params, &state.adam_m, &state.adam_v] {
+        for x in vec {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint; returns `(env_name, state)`.
+pub fn load(path: impl AsRef<Path>) -> Result<(String, NetState)> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    anyhow::ensure!(hlen < 1 << 20, "implausible header length {hlen}");
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+    anyhow::ensure!(
+        header.get("magic").and_then(Json::as_str) == Some(MAGIC),
+        "not a heppo checkpoint"
+    );
+    anyhow::ensure!(
+        header.get("version").and_then(Json::as_usize) == Some(VERSION),
+        "unsupported checkpoint version"
+    );
+    let env = header
+        .req("env")?
+        .as_str()
+        .ok_or_else(|| anyhow!("bad env"))?
+        .to_string();
+    let n = header.req("param_count")?.as_usize().unwrap();
+    let step = header.req("step")?.as_f64().unwrap() as f32;
+
+    let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let params = read_vec(n)?;
+    let adam_m = read_vec(n)?;
+    let adam_v = read_vec(n)?;
+    Ok((env, NetState { params, adam_m, adam_v, step }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("heppo_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn random_state(n: usize, seed: u64) -> NetState {
+        let mut rng = Rng::new(seed);
+        let mut s = NetState::fresh(vec![0.0; n]);
+        rng.fill_normal_f32(&mut s.params);
+        rng.fill_normal_f32(&mut s.adam_m);
+        rng.fill_normal_f32(&mut s.adam_v);
+        s.step = 42.0;
+        s
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let path = tmp("roundtrip");
+        let state = random_state(1234, 1);
+        save(&path, "pendulum", &state).unwrap();
+        let (env, loaded) = load(&path).unwrap();
+        assert_eq!(env, "pendulum");
+        assert_eq!(loaded.params, state.params);
+        assert_eq!(loaded.adam_m, state.adam_m);
+        assert_eq!(loaded.adam_v, state.adam_v);
+        assert_eq!(loaded.step, 42.0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"\x08\x00\x00\x00notjson!").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("magic");
+        let header = r#"{"magic":"OTHER","version":1,"env":"x","param_count":0,"step":0}"#;
+        let mut bytes = (header.len() as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(header.as_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a heppo checkpoint"), "{err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn truncated_body_errors() {
+        let path = tmp("trunc");
+        let state = random_state(100, 2);
+        save(&path, "cartpole", &state).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

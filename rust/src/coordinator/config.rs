@@ -1,0 +1,223 @@
+//! Run configuration for the trainer — the config system behind the
+//! `heppo train` CLI and the experiment benches.
+
+use super::gae_stage::GaeBackend;
+use crate::quant::CodecKind;
+use crate::util::cli::Args;
+
+/// Full trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Environment name (must have artifacts in the manifest).
+    pub env: String,
+    /// Training iterations (each = one rollout + update).
+    pub iters: usize,
+    /// PPO epochs per iteration.
+    pub epochs: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// PPO clip ε.
+    pub clip_eps: f32,
+    /// Entropy bonus coefficient.
+    pub ent_coef: f32,
+    /// Standardize advantages after GAE (§V-A: near-universal practice;
+    /// Fig. 7 compares with/without).
+    pub standardize_advantages: bool,
+    /// Reward/value storage codec (Table III experiments).
+    pub codec: CodecKind,
+    /// Quantizer bit width (Figs. 8–9 sweep 3–10).
+    pub quant_bits: u8,
+    /// GAE backend.
+    pub backend: GaeBackend,
+    /// RNG seed.
+    pub seed: u64,
+    /// Artifact directory.
+    pub artifact_dir: String,
+    /// Environment worker threads.
+    pub env_threads: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            env: "cartpole".into(),
+            iters: 50,
+            epochs: 4,
+            lr: 3e-4,
+            clip_eps: 0.2,
+            ent_coef: 0.01,
+            standardize_advantages: true,
+            codec: CodecKind::Exp5DynamicBlock,
+            quant_bits: 8,
+            backend: GaeBackend::Batched,
+            seed: 0,
+            artifact_dir: "artifacts".into(),
+            env_threads: 4,
+        }
+    }
+}
+
+impl TrainerConfig {
+    /// Overlay CLI arguments onto the defaults; `--config file.json`
+    /// loads a JSON config as the base layer first (CLI still wins).
+    pub fn from_args(args: &Args) -> anyhow::Result<TrainerConfig> {
+        let d = match args.opt("config") {
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("reading --config {path}: {e}"))?;
+                Self::from_json(&text)?
+            }
+            None => TrainerConfig::default(),
+        };
+        let default_codec = format!("exp{}", d.codec.index());
+        let codec_str = args.str_or("codec", &default_codec);
+        let codec = CodecKind::parse(&codec_str)
+            .ok_or_else(|| anyhow::anyhow!("unknown codec {codec_str:?} (exp1..exp5)"))?;
+        let backend_str = args.str_or("backend", d.backend.label());
+        let backend = GaeBackend::parse(&backend_str)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown backend {backend_str:?} (scalar|batched|hlo|hwsim)"
+            ))?;
+        Ok(TrainerConfig {
+            env: args.str_or("env", &d.env),
+            iters: args.get_or("iters", d.iters),
+            epochs: args.get_or("epochs", d.epochs),
+            lr: args.get_or("lr", d.lr),
+            clip_eps: args.get_or("clip", d.clip_eps),
+            ent_coef: args.get_or("ent-coef", d.ent_coef),
+            standardize_advantages: if args.flag("no-adv-std") {
+                false
+            } else {
+                d.standardize_advantages
+            },
+            codec,
+            quant_bits: args.get_or("bits", d.quant_bits),
+            backend,
+            seed: args.get_or("seed", d.seed),
+            artifact_dir: args.str_or("artifacts", &d.artifact_dir),
+            env_threads: args.get_or("env-threads", d.env_threads),
+        })
+    }
+
+    /// Parse a JSON config document (any subset of keys; the rest keep
+    /// their defaults).
+    pub fn from_json(text: &str) -> anyhow::Result<TrainerConfig> {
+        use crate::util::json::Json;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config json: {e}"))?;
+        let mut c = TrainerConfig::default();
+        if let Some(v) = j.get("env").and_then(Json::as_str) {
+            c.env = v.to_string();
+        }
+        if let Some(v) = j.get("iters").and_then(Json::as_usize) {
+            c.iters = v;
+        }
+        if let Some(v) = j.get("epochs").and_then(Json::as_usize) {
+            c.epochs = v;
+        }
+        if let Some(v) = j.get("lr").and_then(Json::as_f64) {
+            c.lr = v as f32;
+        }
+        if let Some(v) = j.get("clip").and_then(Json::as_f64) {
+            c.clip_eps = v as f32;
+        }
+        if let Some(v) = j.get("ent_coef").and_then(Json::as_f64) {
+            c.ent_coef = v as f32;
+        }
+        if let Some(v) = j.get("standardize_advantages").and_then(Json::as_bool) {
+            c.standardize_advantages = v;
+        }
+        if let Some(v) = j.get("codec").and_then(Json::as_str) {
+            c.codec = CodecKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("config: unknown codec {v:?}"))?;
+        }
+        if let Some(v) = j.get("bits").and_then(Json::as_usize) {
+            c.quant_bits = v as u8;
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            c.backend = GaeBackend::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("config: unknown backend {v:?}"))?;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_usize) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            c.artifact_dir = v.to_string();
+        }
+        if let Some(v) = j.get("env_threads").and_then(Json::as_usize) {
+            c.env_threads = v;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse_tokens(tokens.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_are_paper_operating_point() {
+        let c = TrainerConfig::default();
+        assert_eq!(c.codec, CodecKind::Exp5DynamicBlock);
+        assert_eq!(c.quant_bits, 8);
+        assert!(c.standardize_advantages);
+    }
+
+    #[test]
+    fn cli_overlay() {
+        let args = parse(&[
+            "train", "--env", "pendulum", "--iters", "10", "--codec", "exp1",
+            "--backend", "hwsim", "--bits", "6", "--no-adv-std",
+        ]);
+        let c = TrainerConfig::from_args(&args).unwrap();
+        assert_eq!(c.env, "pendulum");
+        assert_eq!(c.iters, 10);
+        assert_eq!(c.codec, CodecKind::Exp1Baseline);
+        assert_eq!(c.backend, GaeBackend::HwSim);
+        assert_eq!(c.quant_bits, 6);
+        assert!(!c.standardize_advantages);
+    }
+
+    #[test]
+    fn bad_codec_errors() {
+        let args = parse(&["train", "--codec", "bogus"]);
+        assert!(TrainerConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn json_config_partial_overlay() {
+        let c = TrainerConfig::from_json(
+            r#"{"env": "pendulum", "iters": 7, "codec": "exp3", "lr": 0.001,
+                "standardize_advantages": false, "backend": "hwsim"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.env, "pendulum");
+        assert_eq!(c.iters, 7);
+        assert_eq!(c.codec, CodecKind::Exp3BlockDestd);
+        assert!((c.lr - 0.001).abs() < 1e-9);
+        assert!(!c.standardize_advantages);
+        assert_eq!(c.backend, GaeBackend::HwSim);
+        // Untouched keys keep defaults.
+        assert_eq!(c.epochs, TrainerConfig::default().epochs);
+    }
+
+    #[test]
+    fn json_config_rejects_bad_values() {
+        assert!(TrainerConfig::from_json(r#"{"codec": "nope"}"#).is_err());
+        assert!(TrainerConfig::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn config_file_plus_cli_override() {
+        let path = std::env::temp_dir().join(format!("heppo_cfg_{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"env": "pendulum", "iters": 9}"#).unwrap();
+        let args = parse(&["train", "--config", path.to_str().unwrap(), "--iters", "3"]);
+        let c = TrainerConfig::from_args(&args).unwrap();
+        assert_eq!(c.env, "pendulum"); // from file
+        assert_eq!(c.iters, 3); // CLI wins
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,329 @@
+//! The GAE phase: codec round trip + advantage/RTG computation through a
+//! pluggable backend.
+//!
+//! Backends, matching the paper's evaluation axes:
+//!
+//! - [`GaeBackend::Scalar`] — the per-trajectory CPU loop (the ≈9000
+//!   elem/s baseline of §V-D-3);
+//! - [`GaeBackend::Batched`] — timestep-major batched CPU (our optimized
+//!   software path);
+//! - [`GaeBackend::Hlo`] — the Pallas-lowered `gae_T*_B*` artifact via
+//!   PJRT (L1 kernel on the request path);
+//! - [`GaeBackend::HwSim`] — the cycle-accurate accelerator model
+//!   ([`crate::hwsim`]), which also yields cycle counts.
+
+use super::profiler::{Phase, PhaseProfiler};
+use super::rollout::Rollout;
+use crate::gae::batched::{gae_batched, GaeBatch};
+use crate::gae::reference::gae_trajectory;
+use crate::gae::{GaeParams, Trajectory};
+use crate::hwsim::{GaeHwSim, SimConfig};
+use crate::quant::RewardValueCodec;
+use crate::runtime::{Runtime, Tensor};
+
+/// Which GAE implementation runs the phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GaeBackend {
+    Scalar,
+    Batched,
+    Hlo,
+    HwSim,
+}
+
+impl GaeBackend {
+    pub fn parse(s: &str) -> Option<GaeBackend> {
+        match s {
+            "scalar" => Some(GaeBackend::Scalar),
+            "batched" => Some(GaeBackend::Batched),
+            "hlo" => Some(GaeBackend::Hlo),
+            "hwsim" => Some(GaeBackend::HwSim),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GaeBackend::Scalar => "scalar",
+            GaeBackend::Batched => "batched",
+            GaeBackend::Hlo => "hlo",
+            GaeBackend::HwSim => "hwsim",
+        }
+    }
+}
+
+/// GAE-phase results.
+#[derive(Debug, Clone)]
+pub struct GaeResult {
+    /// `[T * B]` advantages.
+    pub advantages: Vec<f32>,
+    /// `[T * B]` rewards-to-go.
+    pub rewards_to_go: Vec<f32>,
+    /// Simulated accelerator cycles (HwSim backend only).
+    pub hw_cycles: Option<u64>,
+}
+
+/// Split one env's column into single-episode trajectories for the
+/// hardware rows (the coordinator-side preprocessing the paper's round-
+/// robin row dispatch implies). Returns (start_t, trajectory) pairs.
+pub fn split_column(
+    rollout: &Rollout,
+    env_idx: usize,
+) -> Vec<(usize, Trajectory)> {
+    let (t_len, b) = (rollout.t_len, rollout.batch);
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for t in 0..t_len {
+        let done = rollout.done_mask[t * b + env_idx] == 1.0;
+        if done || t == t_len - 1 {
+            let end = t + 1;
+            let rewards: Vec<f32> =
+                (start..end).map(|u| rollout.rewards[u * b + env_idx]).collect();
+            let mut values: Vec<f32> =
+                (start..=end).map(|u| rollout.values[u * b + env_idx]).collect();
+            if done {
+                values[end - start] = 0.0; // terminal: no bootstrap
+            }
+            let mut dones = vec![false; end - start];
+            if done {
+                *dones.last_mut().unwrap() = true;
+            }
+            out.push((start, Trajectory::new(rewards, values, dones)));
+            start = end;
+        }
+    }
+    out
+}
+
+/// Run the full GAE phase: codec round trip (StoringTrajectories /
+/// GaeMemoryFetch accounting) then the backend compute.
+pub fn run_gae_stage(
+    backend: GaeBackend,
+    params: &GaeParams,
+    rollout: &mut Rollout,
+    codec: &mut RewardValueCodec,
+    runtime: Option<&Runtime>,
+    profiler: &mut PhaseProfiler,
+) -> anyhow::Result<GaeResult> {
+    // Codec round trip: what the accelerator reads back from BRAM. The
+    // bootstrap value row participates in value statistics (it is stored
+    // like every other row).
+    profiler.time(Phase::GaeMemoryFetch, || {
+        let mut rewards = std::mem::take(&mut rollout.rewards);
+        let mut values = std::mem::take(&mut rollout.values);
+        codec.transform(&mut rewards, &mut values);
+        rollout.rewards = rewards;
+        rollout.values = values;
+    });
+
+    let (t_len, b) = (rollout.t_len, rollout.batch);
+    let mut hw_cycles = None;
+
+    let (advantages, rewards_to_go) = match backend {
+        GaeBackend::Scalar => profiler.time(Phase::GaeComputation, || {
+            // One trajectory at a time, per-episode segments — "iterating
+            // over one trajectory at a time, not in batch form".
+            let mut adv = vec![0.0f32; t_len * b];
+            let mut rtg = vec![0.0f32; t_len * b];
+            for i in 0..b {
+                for (start, traj) in split_column(rollout, i) {
+                    let out = gae_trajectory(params, &traj);
+                    for (off, t) in (start..start + traj.len()).enumerate() {
+                        adv[t * b + i] = out.advantages[off];
+                        rtg[t * b + i] = out.rewards_to_go[off];
+                    }
+                }
+            }
+            (adv, rtg)
+        }),
+        GaeBackend::Batched => profiler.time(Phase::GaeComputation, || {
+            let batch = GaeBatch {
+                t_len,
+                batch: b,
+                rewards: rollout.rewards.clone(),
+                values: rollout.values.clone(),
+                done_mask: rollout.done_mask.clone(),
+            };
+            let out = gae_batched(params, &batch);
+            (out.advantages, out.rewards_to_go)
+        }),
+        GaeBackend::Hlo => {
+            let rt = runtime
+                .ok_or_else(|| anyhow::anyhow!("HLO backend needs a Runtime"))?;
+            let name = format!("gae_T{t_len}_B{b}");
+            let exe = rt.load(&name)?;
+            let out = profiler.time(Phase::GaeComputation, || {
+                exe.call(&[
+                    Tensor::new(rollout.rewards.clone(), vec![t_len, b]),
+                    Tensor::new(rollout.values.clone(), vec![t_len + 1, b]),
+                    Tensor::new(rollout.done_mask.clone(), vec![t_len, b]),
+                ])
+            })?;
+            (out[0].data.clone(), out[1].data.clone())
+        }
+        GaeBackend::HwSim => profiler.time(Phase::GaeComputation, || {
+            let sim = GaeHwSim::new(SimConfig {
+                gae: *params,
+                ..SimConfig::paper_default()
+            });
+            // Split every column at episode boundaries; dispatch all
+            // segments to the row array.
+            let mut segments = Vec::new();
+            let mut index = Vec::new();
+            for i in 0..b {
+                for (start, traj) in split_column(rollout, i) {
+                    index.push((i, start, traj.len()));
+                    segments.push(traj);
+                }
+            }
+            let rep = sim.simulate(&segments);
+            hw_cycles = Some(rep.cycles);
+            let mut adv = vec![0.0f32; t_len * b];
+            let mut rtg = vec![0.0f32; t_len * b];
+            for ((i, start, len), out) in index.into_iter().zip(rep.outputs) {
+                for off in 0..len {
+                    adv[(start + off) * b + i] = out.advantages[off];
+                    rtg[(start + off) * b + i] = out.rewards_to_go[off];
+                }
+            }
+            (adv, rtg)
+        }),
+    };
+
+    // Results written back to the stack (in-place overwrite, §IV-3).
+    profiler.time(Phase::GaeMemoryWrite, || {
+        // The rollout's reward plane becomes the advantage plane —
+        // mirrors `gae_batched_in_place`; kept as a copy so diagnostics
+        // still see both.
+    });
+
+    Ok(GaeResult { advantages, rewards_to_go, hw_cycles })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::CodecKind;
+    use crate::testing::{check, Gen};
+
+    fn synthetic_rollout(g: &mut Gen, t_len: usize, b: usize) -> Rollout {
+        let rewards = g.vec_normal_f32(t_len * b, 0.0, 1.0);
+        let values = g.vec_normal_f32((t_len + 1) * b, 0.0, 1.0);
+        let done_mask: Vec<f32> = (0..t_len * b)
+            .map(|_| if g.bool_p(0.08) { 1.0 } else { 0.0 })
+            .collect();
+        Rollout {
+            t_len,
+            batch: b,
+            obs_dim: 1,
+            obs: vec![0.0; t_len * b],
+            actions: vec![0.0; t_len * b],
+            act_width: 1,
+            logp: vec![0.0; t_len * b],
+            raw_rewards: rewards.clone(),
+            raw_values: values.clone(),
+            rewards,
+            values,
+            done_mask,
+            finished_returns: vec![],
+        }
+    }
+
+    #[test]
+    fn all_cpu_backends_agree() {
+        check("scalar == batched == hwsim", 10, |g| {
+            let t_len = g.usize_in(2, 40);
+            let b = g.usize_in(1, 6);
+            let params = GaeParams::default();
+            let mut results = Vec::new();
+            for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
+                let mut rollout = synthetic_rollout(&mut Gen::new(g.case_seed), t_len, b);
+                let mut codec = RewardValueCodec::paper(CodecKind::Exp1Baseline);
+                let mut prof = PhaseProfiler::new();
+                let r = run_gae_stage(
+                    backend, &params, &mut rollout, &mut codec, None, &mut prof,
+                )
+                .unwrap();
+                results.push(r);
+            }
+            for other in &results[1..] {
+                for (a, b_) in results[0].advantages.iter().zip(&other.advantages) {
+                    assert!((a - b_).abs() < 1e-3, "{a} vs {b_}");
+                }
+                for (a, b_) in results[0].rewards_to_go.iter().zip(&other.rewards_to_go) {
+                    assert!((a - b_).abs() < 1e-3);
+                }
+            }
+            assert!(results[2].hw_cycles.unwrap() > 0);
+        });
+    }
+
+    #[test]
+    fn scalar_with_dones_splits_credit() {
+        // A done at (t, i) must stop credit flow in every backend.
+        let mut g = Gen::new(42);
+        let mut rollout = synthetic_rollout(&mut g, 10, 2);
+        rollout.rewards.iter_mut().for_each(|r| *r = 0.0);
+        rollout.done_mask.iter_mut().for_each(|d| *d = 0.0);
+        rollout.values.iter_mut().for_each(|v| *v = 0.0);
+        rollout.rewards[7 * 2] = 100.0; // env 0, t=7
+        rollout.done_mask[4 * 2] = 1.0; // env 0 terminal at t=4
+        let params = GaeParams::default();
+        let mut codec = RewardValueCodec::paper(CodecKind::Exp1Baseline);
+        let mut prof = PhaseProfiler::new();
+        let r = run_gae_stage(
+            GaeBackend::Scalar, &params, &mut rollout, &mut codec, None, &mut prof,
+        )
+        .unwrap();
+        for t in 0..=4 {
+            assert!(r.advantages[t * 2].abs() < 1e-6, "t={t}");
+        }
+        assert!(r.advantages[5 * 2] > 1.0);
+    }
+
+    #[test]
+    fn codec_transforms_are_applied() {
+        let mut g = Gen::new(7);
+        let mut rollout = synthetic_rollout(&mut g, 16, 4);
+        // Push rewards far from zero so standardization is visible.
+        for r in rollout.rewards.iter_mut() {
+            *r += 50.0;
+        }
+        let raw_mean: f32 =
+            rollout.rewards.iter().sum::<f32>() / rollout.rewards.len() as f32;
+        let mut codec = RewardValueCodec::paper(CodecKind::Exp5DynamicBlock);
+        let mut prof = PhaseProfiler::new();
+        run_gae_stage(
+            GaeBackend::Batched,
+            &GaeParams::default(),
+            &mut rollout,
+            &mut codec,
+            None,
+            &mut prof,
+        )
+        .unwrap();
+        let post_mean: f32 =
+            rollout.rewards.iter().sum::<f32>() / rollout.rewards.len() as f32;
+        assert!(raw_mean > 40.0);
+        assert!(post_mean.abs() < 1.0, "rewards must be standardized, got {post_mean}");
+    }
+
+    #[test]
+    fn split_column_covers_everything_once() {
+        check("split covers [0,T)", 20, |g| {
+            let t_len = g.usize_in(1, 64);
+            let b = g.usize_in(1, 4);
+            let rollout = synthetic_rollout(g, t_len, b);
+            for i in 0..b {
+                let segs = split_column(&rollout, i);
+                let mut covered = vec![false; t_len];
+                for (start, traj) in &segs {
+                    for t in *start..*start + traj.len() {
+                        assert!(!covered[t], "t={t} covered twice");
+                        covered[t] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "gap in coverage");
+            }
+        });
+    }
+}

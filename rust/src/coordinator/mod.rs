@@ -1,0 +1,35 @@
+//! The L3 coordinator — the PPO training system around the HEPPO-GAE
+//! accelerator.
+//!
+//! Mirrors the paper's SoC data flow (§III-A):
+//!
+//! 1. **Trajectory collection** ([`rollout`]) — the vectorized env engine
+//!    steps N environments; actions come from the `policy_fwd` HLO
+//!    artifact (the PL's DNN systolic array in the paper); rewards and
+//!    values pass through the standardization/quantization codec into
+//!    FILO stack storage ([`crate::memory::filo`]).
+//! 2. **GAE phase** ([`gae_stage`]) — the PS signals the accelerator;
+//!    advantages/RTGs are computed by a pluggable backend (scalar
+//!    baseline, batched CPU, the Pallas-lowered HLO kernel, or the
+//!    cycle-accurate [`crate::hwsim`]).
+//! 3. **Losses + update** ([`ppo`]) — minibatched PPO-clip/Adam steps via
+//!    the `train_step` HLO artifact.
+//!
+//! [`phases::PhaseMachine`] enforces the PS↔PL sequencing and accounts
+//! handshake overhead; [`profiler::PhaseProfiler`] captures per-phase
+//! wall time to regenerate the paper's Table I.
+
+pub mod checkpoint;
+pub mod config;
+pub mod gae_stage;
+pub mod phases;
+pub mod policy;
+pub mod ppo;
+pub mod profiler;
+pub mod rollout;
+pub mod trainer;
+
+pub use config::TrainerConfig;
+pub use gae_stage::GaeBackend;
+pub use profiler::{Phase, PhaseProfiler};
+pub use trainer::{IterStats, Trainer};

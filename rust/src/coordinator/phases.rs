@@ -1,0 +1,162 @@
+//! The PS↔PL phase machine (paper §III-A "Data Flow, Processing, and
+//! Efficiency").
+//!
+//! All subsystems operate sequentially and communicate through BRAM; the
+//! PS raises an *initiate* control signal into the PL clock domain and
+//! waits for *done* — each crossing costs a synchronizer latency
+//! ([`crate::hwsim::clock`]). The machine enforces the legal ordering:
+//!
+//! ```text
+//! Idle → TrajectoryCollection → DataPrep → GaeCompute → LossAndUpdate → Idle/…
+//! ```
+
+use crate::hwsim::clock::handshake_overhead;
+use std::time::Duration;
+
+/// SoC pipeline phases (one PPO iteration traverses all of them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SocPhase {
+    Idle,
+    /// Env stepping + DNN inference + pushing quantized (r, v) rows.
+    TrajectoryCollection,
+    /// PS finalizes block statistics, arms the accelerator.
+    DataPrep,
+    /// PL computes advantages/RTGs in the BRAM stack.
+    GaeCompute,
+    /// PS computes losses, PL applies backprop/update.
+    LossAndUpdate,
+}
+
+impl SocPhase {
+    /// Legal successors.
+    pub fn can_transition_to(self, next: SocPhase) -> bool {
+        use SocPhase::*;
+        matches!(
+            (self, next),
+            (Idle, TrajectoryCollection)
+                | (TrajectoryCollection, DataPrep)
+                | (DataPrep, GaeCompute)
+                | (GaeCompute, LossAndUpdate)
+                | (LossAndUpdate, Idle)
+                | (LossAndUpdate, TrajectoryCollection)
+        )
+    }
+
+    /// Does entering this phase cross the PS/PL boundary (costing a
+    /// handshake)?
+    pub fn crosses_domain(self) -> bool {
+        matches!(self, SocPhase::GaeCompute | SocPhase::LossAndUpdate)
+    }
+}
+
+/// Error for illegal phase transitions.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("illegal SoC phase transition {from:?} -> {to:?}")]
+pub struct PhaseError {
+    pub from: SocPhase,
+    pub to: SocPhase,
+}
+
+/// The sequencer.
+#[derive(Debug)]
+pub struct PhaseMachine {
+    current: SocPhase,
+    handshakes: u64,
+    overhead: Duration,
+    transitions: u64,
+}
+
+impl Default for PhaseMachine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseMachine {
+    pub fn new() -> Self {
+        PhaseMachine {
+            current: SocPhase::Idle,
+            handshakes: 0,
+            overhead: Duration::ZERO,
+            transitions: 0,
+        }
+    }
+
+    pub fn current(&self) -> SocPhase {
+        self.current
+    }
+
+    /// Transition, accounting handshake overhead on domain crossings.
+    pub fn transition(&mut self, next: SocPhase) -> Result<(), PhaseError> {
+        if !self.current.can_transition_to(next) {
+            return Err(PhaseError { from: self.current, to: next });
+        }
+        if next.crosses_domain() {
+            self.handshakes += 1;
+            self.overhead += handshake_overhead();
+        }
+        self.current = next;
+        self.transitions += 1;
+        Ok(())
+    }
+
+    /// PS→PL round trips performed.
+    pub fn handshakes(&self) -> u64 {
+        self.handshakes
+    }
+
+    /// Accumulated synchronizer overhead (nanoseconds-scale; the §III-A
+    /// claim is that this is negligible next to DRAM round trips).
+    pub fn overhead(&self) -> Duration {
+        self.overhead
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use SocPhase::*;
+
+    #[test]
+    fn full_iteration_cycle() {
+        let mut m = PhaseMachine::new();
+        for p in [TrajectoryCollection, DataPrep, GaeCompute, LossAndUpdate] {
+            m.transition(p).unwrap();
+        }
+        // Loop straight into the next iteration.
+        m.transition(TrajectoryCollection).unwrap();
+        assert_eq!(m.transitions(), 5);
+        assert_eq!(m.handshakes(), 2); // GaeCompute + LossAndUpdate
+    }
+
+    #[test]
+    fn illegal_jumps_rejected() {
+        let mut m = PhaseMachine::new();
+        assert_eq!(
+            m.transition(GaeCompute),
+            Err(PhaseError { from: Idle, to: GaeCompute })
+        );
+        m.transition(TrajectoryCollection).unwrap();
+        assert!(m.transition(LossAndUpdate).is_err());
+        assert_eq!(m.current(), TrajectoryCollection);
+    }
+
+    #[test]
+    fn overhead_is_nanoseconds_per_iteration() {
+        let mut m = PhaseMachine::new();
+        for _ in 0..1000 {
+            m.transition(TrajectoryCollection).unwrap();
+            m.transition(DataPrep).unwrap();
+            m.transition(GaeCompute).unwrap();
+            m.transition(LossAndUpdate).unwrap();
+            m.transition(Idle).unwrap();
+        }
+        // 2 handshakes × ~8 ns × 1000 iterations « 1 ms.
+        assert!(m.overhead() < Duration::from_millis(1));
+        assert_eq!(m.handshakes(), 2000);
+    }
+}

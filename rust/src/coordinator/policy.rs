@@ -1,0 +1,199 @@
+//! Action sampling + log-prob math on the PS side.
+//!
+//! The `policy_fwd` artifact returns distribution parameters (logits for
+//! discrete heads; mean‖log_std for continuous); the coordinator samples
+//! actions and evaluates log π(a|s) in rust — the same split as the
+//! paper's SoC, where the PL produces network outputs and the PS handles
+//! the (cheap, irregular) sampling.
+
+use crate::envs::{Action, ActionSpace};
+use crate::util::Rng;
+
+/// Sampled action + its log-probability.
+#[derive(Debug, Clone)]
+pub struct Sampled {
+    pub action: Action,
+    pub logp: f32,
+    /// Flat f32 encoding fed back to the train_step artifact
+    /// (discrete: [index]; continuous: the raw pre-clip sample).
+    pub encoded: Vec<f32>,
+}
+
+/// log softmax of a row (numerically stable).
+fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&l| ((l - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+/// Sample one action from a distribution row.
+///
+/// `dist_row`: `[A]` logits (discrete) or `[2A]` mean‖log_std
+/// (continuous).
+pub fn sample(space: &ActionSpace, dist_row: &[f32], rng: &mut Rng) -> Sampled {
+    match space {
+        ActionSpace::Discrete(n) => {
+            assert_eq!(dist_row.len(), *n, "logit width");
+            let a = rng.categorical_from_logits(dist_row);
+            let logp = log_softmax(dist_row)[a];
+            Sampled {
+                action: Action::Discrete(a),
+                logp,
+                encoded: vec![a as f32],
+            }
+        }
+        ActionSpace::Continuous { dim, low, high } => {
+            assert_eq!(dist_row.len(), 2 * dim, "mean/log_std width");
+            let (mean, log_std) = dist_row.split_at(*dim);
+            let mut raw = Vec::with_capacity(*dim);
+            let mut logp = 0.0f64;
+            for k in 0..*dim {
+                let std = log_std[k].exp();
+                let z = rng.normal() as f32;
+                let a = mean[k] + std * z;
+                raw.push(a);
+                logp += -0.5 * (z as f64) * (z as f64)
+                    - log_std[k] as f64
+                    - 0.5 * (2.0 * std::f64::consts::PI).ln();
+            }
+            let clipped: Vec<f32> =
+                raw.iter().map(|&a| a.clamp(*low, *high)).collect();
+            Sampled {
+                action: Action::Continuous(clipped),
+                logp: logp as f32,
+                encoded: raw,
+            }
+        }
+    }
+}
+
+/// Greedy (mode) action — used by evaluation rollouts.
+pub fn greedy(space: &ActionSpace, dist_row: &[f32]) -> Action {
+    match space {
+        ActionSpace::Discrete(n) => {
+            let a = dist_row[..*n]
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.partial_cmp(y.1).unwrap())
+                .unwrap()
+                .0;
+            Action::Discrete(a)
+        }
+        ActionSpace::Continuous { dim, low, high } => Action::Continuous(
+            dist_row[..*dim].iter().map(|&m| m.clamp(*low, *high)).collect(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        check("log_softmax sums to 1", 30, |g| {
+            let n = g.usize_in(2, 10);
+            let logits = g.vec_normal_f32(n, 0.0, 3.0);
+            let ls = log_softmax(&logits);
+            let sum: f64 = ls.iter().map(|&l| (l as f64).exp()).sum();
+            assert!((sum - 1.0).abs() < 1e-5, "sum={sum}");
+        });
+    }
+
+    #[test]
+    fn discrete_sampling_frequencies_match() {
+        let mut rng = Rng::new(1);
+        let space = ActionSpace::Discrete(3);
+        let logits = [0.0f32, 1.0, 2.0];
+        let n = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            let s = sample(&space, &logits, &mut rng);
+            match s.action {
+                Action::Discrete(a) => counts[a] += 1,
+                _ => unreachable!(),
+            }
+            // logp consistency with the softmax.
+            let ls = log_softmax(&logits);
+            match s.action {
+                Action::Discrete(a) => assert!((s.logp - ls[a]).abs() < 1e-6),
+                _ => unreachable!(),
+            }
+        }
+        let z: f64 = logits.iter().map(|&l| (l as f64).exp()).sum();
+        for i in 0..3 {
+            let want = (logits[i] as f64).exp() / z;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "{i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn continuous_sampling_moments() {
+        let mut rng = Rng::new(2);
+        let space = ActionSpace::Continuous { dim: 1, low: -10.0, high: 10.0 };
+        let dist = [1.5f32, -0.5]; // mean 1.5, std e^-0.5
+        let n = 30_000;
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for _ in 0..n {
+            let s = sample(&space, &dist, &mut rng);
+            let a = s.encoded[0] as f64;
+            sum += a;
+            sum2 += a * a;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!((mean - 1.5).abs() < 0.02);
+        assert!((var.sqrt() - (-0.5f64).exp()).abs() < 0.02);
+    }
+
+    #[test]
+    fn continuous_clips_action_but_not_encoding() {
+        let mut rng = Rng::new(3);
+        let space = ActionSpace::Continuous { dim: 1, low: -0.1, high: 0.1 };
+        let dist = [5.0f32, 0.0]; // mean far outside bounds
+        let s = sample(&space, &dist, &mut rng);
+        match &s.action {
+            Action::Continuous(a) => assert!(a[0] <= 0.1),
+            _ => unreachable!(),
+        }
+        assert!(s.encoded[0] > 1.0, "raw sample must stay unclipped");
+    }
+
+    #[test]
+    fn greedy_picks_mode() {
+        let a = greedy(&ActionSpace::Discrete(3), &[0.1, 2.0, -1.0]);
+        assert_eq!(a, Action::Discrete(1));
+        let a = greedy(
+            &ActionSpace::Continuous { dim: 2, low: -1.0, high: 1.0 },
+            &[0.5, -2.0, 0.0, 0.0],
+        );
+        assert_eq!(a, Action::Continuous(vec![0.5, -1.0]));
+    }
+
+    #[test]
+    fn continuous_logp_matches_gaussian_formula() {
+        check("logp formula", 30, |g| {
+            let dim = g.usize_in(1, 4);
+            let mut dist = g.vec_normal_f32(2 * dim, 0.0, 1.0);
+            // keep log_std sane
+            for v in dist[dim..].iter_mut() {
+                *v = v.clamp(-2.0, 1.0);
+            }
+            let space = ActionSpace::Continuous { dim, low: -100.0, high: 100.0 };
+            let s = sample(&space, &dist, g.rng());
+            let mut want = 0.0f64;
+            for k in 0..dim {
+                let mean = dist[k] as f64;
+                let log_std = dist[dim + k] as f64;
+                let std = log_std.exp();
+                let a = s.encoded[k] as f64;
+                let z = (a - mean) / std;
+                want += -0.5 * z * z - log_std - 0.5 * (2.0 * std::f64::consts::PI).ln();
+            }
+            assert!((s.logp as f64 - want).abs() < 1e-4);
+        });
+    }
+}

@@ -1,0 +1,175 @@
+//! The PPO update phase: minibatched PPO-clip/Adam steps through the
+//! `train_step` HLO artifact (paper Algorithm 1 lines 6–7; §III-A
+//! "Actor-Critic Losses Calculation" + "Back Propagation and Networks
+//! Update").
+
+use super::gae_stage::GaeResult;
+use super::profiler::{Phase, PhaseProfiler};
+use super::rollout::Rollout;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::Rng;
+
+/// Optimizer + network state held by the coordinator between updates
+/// (flat vectors; layer structure lives only inside the artifact).
+#[derive(Debug, Clone)]
+pub struct NetState {
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    pub step: f32,
+}
+
+impl NetState {
+    pub fn fresh(params: Vec<f32>) -> NetState {
+        let n = params.len();
+        NetState { params, adam_m: vec![0.0; n], adam_v: vec![0.0; n], step: 0.0 }
+    }
+}
+
+/// Per-update loss diagnostics (means over minibatches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Losses {
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub minibatches: usize,
+}
+
+/// Standardize advantages in place (§V-A — used by every modern PPO
+/// implementation; Fig. 7 ablates it).
+pub fn standardize_advantages(adv: &mut [f32]) {
+    if adv.is_empty() {
+        return;
+    }
+    let n = adv.len() as f64;
+    let mean = adv.iter().map(|&a| a as f64).sum::<f64>() / n;
+    let var = adv.iter().map(|&a| (a as f64 - mean).powi(2)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-8);
+    for a in adv.iter_mut() {
+        *a = ((*a as f64 - mean) / std) as f32;
+    }
+}
+
+/// PPO update hyper-parameters for one call.
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateParams {
+    pub epochs: usize,
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub ent_coef: f32,
+    pub standardize_advantages: bool,
+}
+
+/// Run the PPO update: `epochs` passes of shuffled minibatches.
+///
+/// The minibatch size is fixed by the artifact (manifest meta); leftover
+/// rows that do not fill a final minibatch are dropped that epoch (they
+/// reappear under the next shuffle — standard practice).
+pub fn update(
+    runtime: &Runtime,
+    artifact: &str,
+    state: &mut NetState,
+    rollout: &Rollout,
+    gae: &GaeResult,
+    up: &UpdateParams,
+    rng: &mut Rng,
+    profiler: &mut PhaseProfiler,
+) -> anyhow::Result<Losses> {
+    let exe = runtime.load(artifact)?;
+    let minibatch = exe.spec.meta_usize("minibatch")?;
+    let discrete = exe.spec.meta_bool("discrete")?;
+    let act_dim = exe.spec.meta_usize("act_dim")?;
+    let n = rollout.transitions();
+    anyhow::ensure!(
+        n >= minibatch,
+        "rollout of {n} rows cannot fill a {minibatch}-row minibatch"
+    );
+
+    let mut advantages = gae.advantages.clone();
+    if up.standardize_advantages {
+        standardize_advantages(&mut advantages);
+    }
+
+    let obs_dim = rollout.obs_dim;
+    let aw = rollout.act_width;
+    let mut losses = Losses::default();
+
+    for _epoch in 0..up.epochs {
+        let perm = rng.permutation(n);
+        for chunk in perm.chunks_exact(minibatch) {
+            // Gather the minibatch rows.
+            let mut obs = Vec::with_capacity(minibatch * obs_dim);
+            let mut actions = Vec::with_capacity(minibatch * aw);
+            let mut old_logp = Vec::with_capacity(minibatch);
+            let mut adv = Vec::with_capacity(minibatch);
+            let mut ret = Vec::with_capacity(minibatch);
+            for &row in chunk {
+                obs.extend_from_slice(&rollout.obs[row * obs_dim..(row + 1) * obs_dim]);
+                actions.extend_from_slice(&rollout.actions[row * aw..(row + 1) * aw]);
+                old_logp.push(rollout.logp[row]);
+                adv.push(advantages[row]);
+                ret.push(gae.rewards_to_go[row]);
+            }
+            let act_shape = if discrete {
+                vec![minibatch]
+            } else {
+                vec![minibatch, act_dim]
+            };
+            let inputs = vec![
+                Tensor::vec1(state.params.clone()),
+                Tensor::vec1(state.adam_m.clone()),
+                Tensor::vec1(state.adam_v.clone()),
+                Tensor::scalar(state.step),
+                Tensor::new(obs, vec![minibatch, obs_dim]),
+                Tensor::new(actions, act_shape),
+                Tensor::vec1(old_logp),
+                Tensor::vec1(adv),
+                Tensor::vec1(ret),
+                Tensor::scalar(up.lr),
+                Tensor::scalar(up.clip_eps),
+                Tensor::scalar(up.ent_coef),
+            ];
+            let out = profiler.time(Phase::NetworkUpdate, || exe.call(&inputs))?;
+            state.params = out[0].data.clone();
+            state.adam_m = out[1].data.clone();
+            state.adam_v = out[2].data.clone();
+            state.step = out[3].data[0];
+            losses.pi_loss += out[4].data[0];
+            losses.v_loss += out[4].data[1];
+            losses.entropy += out[4].data[2];
+            losses.minibatches += 1;
+        }
+    }
+    if losses.minibatches > 0 {
+        let k = losses.minibatches as f32;
+        losses.pi_loss /= k;
+        losses.v_loss /= k;
+        losses.entropy /= k;
+    }
+    Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardize_advantages_moments() {
+        let mut adv: Vec<f32> = (0..1000).map(|i| (i as f32) * 0.01 + 5.0).collect();
+        standardize_advantages(&mut adv);
+        let mean: f64 = adv.iter().map(|&a| a as f64).sum::<f64>() / 1000.0;
+        let var: f64 =
+            adv.iter().map(|&a| (a as f64 - mean).powi(2)).sum::<f64>() / 1000.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn standardize_handles_degenerate() {
+        let mut adv = vec![3.0f32; 8];
+        standardize_advantages(&mut adv);
+        assert!(adv.iter().all(|a| a.is_finite()));
+        let mut empty: Vec<f32> = vec![];
+        standardize_advantages(&mut empty);
+    }
+}

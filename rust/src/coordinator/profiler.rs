@@ -1,0 +1,161 @@
+//! Per-phase wall-time capture — regenerates the paper's Table I / Fig. 1
+//! ("Time Profiling of PPO Iteration over Different Systems").
+
+use crate::util::csv::CsvTable;
+use crate::util::timer::{fmt_duration, Stopwatch};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Table I row identifiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Trajectory Collection — DNN Inference.
+    DnnInference,
+    /// Trajectory Collection — Environment Run.
+    EnvironmentRun,
+    /// Trajectory Collection — Storing Trajectories (codec + stack push).
+    StoringTrajectories,
+    /// GAE — Memory Fetch (stack → compute layout).
+    GaeMemoryFetch,
+    /// GAE — Computation.
+    GaeComputation,
+    /// GAE — Memory Write (results → storage).
+    GaeMemoryWrite,
+    /// Network Update — loss + optimizer (the train_step artifact).
+    NetworkUpdate,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::DnnInference,
+        Phase::EnvironmentRun,
+        Phase::StoringTrajectories,
+        Phase::GaeMemoryFetch,
+        Phase::GaeComputation,
+        Phase::GaeMemoryWrite,
+        Phase::NetworkUpdate,
+    ];
+
+    /// Table I row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::DnnInference => "DNN Inference",
+            Phase::EnvironmentRun => "Environment Run",
+            Phase::StoringTrajectories => "Storing Trajectories",
+            Phase::GaeMemoryFetch => "GAE Memory Fetch",
+            Phase::GaeComputation => "GAE Computation",
+            Phase::GaeMemoryWrite => "GAE Memory Write",
+            Phase::NetworkUpdate => "Network Update",
+        }
+    }
+
+    /// Table I group.
+    pub fn group(&self) -> &'static str {
+        match self {
+            Phase::DnnInference | Phase::EnvironmentRun | Phase::StoringTrajectories => {
+                "Trajectory Collection"
+            }
+            Phase::GaeMemoryFetch | Phase::GaeComputation | Phase::GaeMemoryWrite => "GAE",
+            Phase::NetworkUpdate => "Network Update",
+        }
+    }
+}
+
+/// Accumulates per-phase durations across iterations.
+#[derive(Debug, Default)]
+pub struct PhaseProfiler {
+    watches: BTreeMap<Phase, Stopwatch>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        self.watches.entry(phase).or_default().time(f)
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.watches.entry(phase).or_default().add(d);
+    }
+
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.watches.get(&phase).map(|w| w.total()).unwrap_or_default()
+    }
+
+    /// Sum over all phases.
+    pub fn grand_total(&self) -> Duration {
+        self.watches.values().map(|w| w.total()).sum()
+    }
+
+    /// Fraction of total time in a phase (Table I's percentages).
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        let total = self.grand_total().as_secs_f64();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.total(phase).as_secs_f64() / total
+        }
+    }
+
+    /// Combined GAE share — the paper's headline "GAE ≈ 30% of PPO time".
+    pub fn gae_fraction(&self) -> f64 {
+        self.fraction(Phase::GaeMemoryFetch)
+            + self.fraction(Phase::GaeComputation)
+            + self.fraction(Phase::GaeMemoryWrite)
+    }
+
+    /// Render as a Table-I-shaped table.
+    pub fn to_table(&self, system_label: &str) -> CsvTable {
+        let mut t = CsvTable::new(&["Phase", "Sub-Phase", system_label, "total"]);
+        for phase in Phase::ALL {
+            t.row(&[
+                phase.group().to_string(),
+                phase.label().to_string(),
+                format!("{:.2}%", self.fraction(phase) * 100.0),
+                fmt_duration(self.total(phase)),
+            ]);
+        }
+        t
+    }
+
+    pub fn reset(&mut self) {
+        self.watches.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let mut p = PhaseProfiler::new();
+        p.add(Phase::EnvironmentRun, Duration::from_millis(47));
+        p.add(Phase::GaeComputation, Duration::from_millis(30));
+        p.add(Phase::NetworkUpdate, Duration::from_millis(23));
+        let sum: f64 = Phase::ALL.iter().map(|&ph| p.fraction(ph)).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!((p.fraction(Phase::GaeComputation) - 0.30).abs() < 1e-9);
+        assert!((p.gae_fraction() - 0.30).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_accumulates_calls() {
+        let mut p = PhaseProfiler::new();
+        for _ in 0..3 {
+            p.time(Phase::DnnInference, || std::thread::sleep(Duration::from_millis(1)));
+        }
+        assert!(p.total(Phase::DnnInference) >= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn table_has_all_rows() {
+        let p = PhaseProfiler::new();
+        let t = p.to_table("CPU Only");
+        assert_eq!(t.n_rows(), 7);
+    }
+}

@@ -1,0 +1,233 @@
+//! Trajectory collection — the paper's "Trajectory Collection" phase.
+//!
+//! Steps the vectorized envs for `T` timesteps with actions from the
+//! `policy_fwd` artifact, storing everything in timestep-major layout
+//! (the Fig. 6 memory-block layout): rewards and values are pushed
+//! row-by-row into FILO stacks through the standardization/quantization
+//! codec, exactly as the SoC stores them in BRAM. Observations, encoded
+//! actions and log-probs stay on the PS side for the update phase.
+
+use super::policy::{sample, Sampled};
+use super::profiler::{Phase, PhaseProfiler};
+use crate::envs::vec_env::VecEnv;
+use crate::memory::FiloStack;
+use crate::util::Rng;
+
+/// One iteration's collected data, timestep-major.
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    pub t_len: usize,
+    pub batch: usize,
+    pub obs_dim: usize,
+    /// `[T * B * obs_dim]` observations (pre-step).
+    pub obs: Vec<f32>,
+    /// `[T * B * act_width]` encoded actions.
+    pub actions: Vec<f32>,
+    pub act_width: usize,
+    /// `[T * B]` behavior log-probs.
+    pub logp: Vec<f32>,
+    /// `[T * B]` rewards *after* the storage codec (what GAE reads back).
+    pub rewards: Vec<f32>,
+    /// `[(T+1) * B]` values after the codec; last row bootstraps.
+    pub values: Vec<f32>,
+    /// `[T * B]` done mask (1.0 = episode ended at t).
+    pub done_mask: Vec<f32>,
+    /// Episode returns completed during collection.
+    pub finished_returns: Vec<f64>,
+    /// Raw (pre-codec) rewards, kept for diagnostics (Fig. 2/7 data).
+    pub raw_rewards: Vec<f32>,
+    pub raw_values: Vec<f32>,
+}
+
+impl Rollout {
+    pub fn transitions(&self) -> usize {
+        self.t_len * self.batch
+    }
+}
+
+/// A policy-forward oracle: obs `[B * obs_dim]` → (dist `[B * W]`, values
+/// `[B]`). Implemented by the trainer over the HLO artifact; tests use
+/// closures.
+pub trait PolicyFn {
+    fn forward(&mut self, obs: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+}
+
+impl<F> PolicyFn for F
+where
+    F: FnMut(&[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)>,
+{
+    fn forward(&mut self, obs: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self(obs)
+    }
+}
+
+/// Collect `t_len` steps from `envs` with `policy`.
+///
+/// `current_obs` carries the env state across iterations (from
+/// `reset_all` initially, then the tail of the previous rollout).
+/// The profiler attributes time to `DnnInference` / `EnvironmentRun` /
+/// `StoringTrajectories` as in Table I.
+#[allow(clippy::too_many_arguments)]
+pub fn collect(
+    envs: &mut VecEnv,
+    policy: &mut dyn PolicyFn,
+    current_obs: &mut Vec<f32>,
+    t_len: usize,
+    rng: &mut Rng,
+    profiler: &mut PhaseProfiler,
+) -> anyhow::Result<Rollout> {
+    let batch = envs.len();
+    let obs_dim = envs.obs_dim();
+    let space = envs.action_space().clone();
+    let act_width = match &space {
+        crate::envs::ActionSpace::Discrete(_) => 1,
+        crate::envs::ActionSpace::Continuous { dim, .. } => *dim,
+    };
+
+    // FILO stacks for the (reward, value) planes — the BRAM stack of
+    // Fig. 6 (raw f32 here; the codec pass quantizes at the iteration
+    // level, matching the paper's block-statistics timing).
+    let mut reward_stack: FiloStack<f32> = FiloStack::new(batch, t_len);
+    let mut value_stack: FiloStack<f32> = FiloStack::new(batch, t_len + 1);
+
+    let mut obs_out = Vec::with_capacity(t_len * batch * obs_dim);
+    let mut actions = Vec::with_capacity(t_len * batch * act_width);
+    let mut logp = Vec::with_capacity(t_len * batch);
+    let mut done_mask = Vec::with_capacity(t_len * batch);
+    let mut finished_returns = Vec::new();
+
+    for _t in 0..t_len {
+        // DNN inference on the PL (the policy_fwd artifact).
+        let (dist, values_row) =
+            profiler.time(Phase::DnnInference, || policy.forward(current_obs))?;
+        let width = dist.len() / batch;
+
+        // PS samples actions (cheap, irregular).
+        let sampled: Vec<Sampled> = (0..batch)
+            .map(|i| sample(&space, &dist[i * width..(i + 1) * width], rng))
+            .collect();
+
+        obs_out.extend_from_slice(current_obs);
+        for s in &sampled {
+            actions.extend_from_slice(&s.encoded);
+            logp.push(s.logp);
+        }
+
+        // Environment step on the PS cores.
+        let acts: Vec<crate::envs::Action> =
+            sampled.iter().map(|s| s.action.clone()).collect();
+        let step = profiler.time(Phase::EnvironmentRun, || envs.step_all(&acts));
+
+        // Store the (reward, value) rows into the stacks.
+        profiler.time(Phase::StoringTrajectories, || {
+            reward_stack.push_row(&step.rewards).expect("stack sized for T");
+            value_stack.push_row(&values_row).expect("stack sized for T+1");
+        });
+
+        for d in &step.dones {
+            done_mask.push(if *d { 1.0 } else { 0.0 });
+        }
+        for &(_, ret, _) in &step.finished {
+            finished_returns.push(ret);
+        }
+        *current_obs = step.obs;
+    }
+
+    // Bootstrap value of the final state.
+    let (_, boot_values) =
+        profiler.time(Phase::DnnInference, || policy.forward(current_obs))?;
+    profiler.time(Phase::StoringTrajectories, || {
+        value_stack.push_row(&boot_values).expect("bootstrap row");
+    });
+
+    // Drain the stacks into contiguous timestep-major planes.
+    let mut rewards = vec![0.0f32; t_len * batch];
+    let mut values = vec![0.0f32; (t_len + 1) * batch];
+    for t in 0..t_len {
+        rewards[t * batch..(t + 1) * batch]
+            .copy_from_slice(reward_stack.row(t).unwrap());
+    }
+    for t in 0..=t_len {
+        values[t * batch..(t + 1) * batch]
+            .copy_from_slice(value_stack.row(t).unwrap());
+    }
+
+    Ok(Rollout {
+        t_len,
+        batch,
+        obs_dim,
+        obs: obs_out,
+        actions,
+        act_width,
+        logp,
+        raw_rewards: rewards.clone(),
+        raw_values: values.clone(),
+        rewards,
+        values,
+        done_mask,
+        finished_returns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threadpool::ThreadPool;
+
+    /// A uniform-random "policy" with zero values.
+    fn uniform_policy(act_width: usize, batch: usize) -> impl PolicyFn {
+        move |_obs: &[f32]| Ok((vec![0.0f32; batch * act_width], vec![0.0f32; batch]))
+    }
+
+    #[test]
+    fn shapes_and_layout() {
+        let mut envs = VecEnv::new("cartpole", 4, 1, ThreadPool::new(2)).unwrap();
+        let mut obs = envs.reset_all();
+        let mut rng = Rng::new(0);
+        let mut prof = PhaseProfiler::new();
+        let mut pol = uniform_policy(2, 4);
+        let r = collect(&mut envs, &mut pol, &mut obs, 16, &mut rng, &mut prof).unwrap();
+        assert_eq!(r.t_len, 16);
+        assert_eq!(r.batch, 4);
+        assert_eq!(r.obs.len(), 16 * 4 * 4);
+        assert_eq!(r.actions.len(), 16 * 4);
+        assert_eq!(r.logp.len(), 64);
+        assert_eq!(r.rewards.len(), 64);
+        assert_eq!(r.values.len(), 17 * 4);
+        assert_eq!(r.done_mask.len(), 64);
+        // CartPole: every reward is 1.0 pre-codec.
+        assert!(r.rewards.iter().all(|&x| x == 1.0));
+        // Profiler saw all three collection phases.
+        assert!(prof.total(Phase::DnnInference) > std::time::Duration::ZERO);
+        assert!(prof.total(Phase::EnvironmentRun) > std::time::Duration::ZERO);
+    }
+
+    #[test]
+    fn carries_obs_across_calls() {
+        let mut envs = VecEnv::new("pendulum", 2, 3, ThreadPool::new(2)).unwrap();
+        let mut obs = envs.reset_all();
+        let mut rng = Rng::new(0);
+        let mut prof = PhaseProfiler::new();
+        let mut pol = uniform_policy(2, 2); // mean+log_std for dim=1
+        let r1 = collect(&mut envs, &mut pol, &mut obs, 8, &mut rng, &mut prof).unwrap();
+        let carried = obs.clone();
+        // The first obs row of the next rollout must equal the carried obs
+        // (rollout.obs stores pre-step observations).
+        let r2 = collect(&mut envs, &mut pol, &mut obs, 8, &mut rng, &mut prof).unwrap();
+        assert_ne!(r1.obs[..6], r2.obs[..6]);
+        assert_eq!(&r2.obs[..6], &carried[..]);
+    }
+
+    #[test]
+    fn done_mask_marks_episode_ends() {
+        let mut envs = VecEnv::new("cartpole", 2, 5, ThreadPool::new(2)).unwrap();
+        let mut obs = envs.reset_all();
+        let mut rng = Rng::new(1);
+        let mut prof = PhaseProfiler::new();
+        let mut pol = uniform_policy(2, 2);
+        let r = collect(&mut envs, &mut pol, &mut obs, 256, &mut rng, &mut prof).unwrap();
+        let dones = r.done_mask.iter().filter(|&&d| d == 1.0).count();
+        assert!(dones > 0, "random cartpole must fail within 256 steps");
+        assert_eq!(r.finished_returns.len(), dones);
+    }
+}

@@ -1,0 +1,247 @@
+//! The full PPO trainer — ties rollout, GAE stage, and update together
+//! under the SoC phase machine, with Table-I phase profiling throughout.
+
+use super::config::TrainerConfig;
+use super::gae_stage::{run_gae_stage, GaeResult};
+use super::phases::{PhaseMachine, SocPhase};
+use super::ppo::{update, Losses, NetState, UpdateParams};
+use super::profiler::PhaseProfiler;
+use super::rollout::collect;
+use crate::envs::vec_env::VecEnv;
+use crate::gae::GaeParams;
+use crate::quant::RewardValueCodec;
+use crate::runtime::{Runtime, Tensor};
+use crate::stats::RollingMean;
+use crate::util::threadpool::ThreadPool;
+use crate::util::Rng;
+
+/// Per-iteration statistics.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    /// Env steps so far.
+    pub steps: usize,
+    /// Rolling mean of completed-episode returns.
+    pub mean_return: f64,
+    /// Episodes completed so far.
+    pub episodes: usize,
+    pub losses: Losses,
+    /// HwSim cycles this iteration, if that backend ran.
+    pub hw_cycles: Option<u64>,
+}
+
+/// The trainer.
+pub struct Trainer {
+    pub config: TrainerConfig,
+    pub runtime: Runtime,
+    envs: VecEnv,
+    state: NetState,
+    codec: RewardValueCodec,
+    gae_params: GaeParams,
+    rng: Rng,
+    current_obs: Vec<f32>,
+    rolling_return: RollingMean,
+    episodes: usize,
+    steps: usize,
+    pub profiler: PhaseProfiler,
+    pub phases: PhaseMachine,
+    policy_artifact: String,
+    train_artifact: String,
+}
+
+impl Trainer {
+    /// Build a trainer: loads the manifest, the env's artifacts, and the
+    /// seeded initial parameters.
+    pub fn new(config: TrainerConfig) -> anyhow::Result<Trainer> {
+        let runtime = Runtime::new(&config.artifact_dir)?;
+        let geo = runtime.manifest.geometry;
+        let pool = ThreadPool::new(config.env_threads);
+        let envs = VecEnv::new(&config.env, geo.num_envs, config.seed ^ 0xE57, pool)?;
+        let params = runtime
+            .manifest
+            .load_blob_f32(&format!("{}_init_params", config.env))?;
+        let mut rng = Rng::new(config.seed);
+        let mut envs = envs;
+        let current_obs = envs.reset_all();
+        let _ = &mut rng;
+        Ok(Trainer {
+            policy_artifact: format!("{}_policy_fwd", config.env),
+            train_artifact: format!("{}_train_step", config.env),
+            gae_params: GaeParams::new(geo.gamma, geo.lambda),
+            codec: RewardValueCodec::new(config.codec, config.quant_bits),
+            state: NetState::fresh(params),
+            rolling_return: RollingMean::new(100),
+            episodes: 0,
+            steps: 0,
+            profiler: PhaseProfiler::new(),
+            phases: PhaseMachine::new(),
+            rng,
+            current_obs,
+            envs,
+            runtime,
+            config,
+        })
+    }
+
+    /// Run one PPO iteration (rollout → GAE → update).
+    pub fn iterate(&mut self, iter: usize) -> anyhow::Result<IterStats> {
+        let geo = self.runtime.manifest.geometry;
+
+        // --- trajectory collection -----------------------------------
+        if self.phases.current() == SocPhase::Idle {
+            self.phases.transition(SocPhase::TrajectoryCollection).unwrap();
+        } else {
+            self.phases.transition(SocPhase::TrajectoryCollection).unwrap();
+        }
+        let exe = self.runtime.load(&self.policy_artifact)?;
+        let num_envs = self.envs.len();
+        let obs_dim = self.envs.obs_dim();
+        // §Perf: parameters are invariant across the rollout — encode the
+        // literal once per iteration instead of once per step.
+        let params_lit = Tensor::vec1(self.state.params.clone()).to_literal()?;
+        let mut policy = |obs: &[f32]| -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+            let obs_lit =
+                Tensor::new(obs.to_vec(), vec![num_envs, obs_dim]).to_literal()?;
+            let out = exe.call_literals(&[&params_lit, &obs_lit])?;
+            Ok((out[0].data.clone(), out[1].data.clone()))
+        };
+        let mut rollout = collect(
+            &mut self.envs,
+            &mut policy,
+            &mut self.current_obs,
+            geo.rollout_t,
+            &mut self.rng,
+            &mut self.profiler,
+        )?;
+        for &r in &rollout.finished_returns {
+            self.rolling_return.push(r);
+            self.episodes += 1;
+        }
+        self.steps += rollout.transitions();
+
+        // --- GAE phase -------------------------------------------------
+        self.phases.transition(SocPhase::DataPrep).unwrap();
+        self.phases.transition(SocPhase::GaeCompute).unwrap();
+        let gae: GaeResult = run_gae_stage(
+            self.config.backend,
+            &self.gae_params,
+            &mut rollout,
+            &mut self.codec,
+            Some(&self.runtime),
+            &mut self.profiler,
+        )?;
+
+        // --- update ----------------------------------------------------
+        self.phases.transition(SocPhase::LossAndUpdate).unwrap();
+        let up = UpdateParams {
+            epochs: self.config.epochs,
+            lr: self.config.lr,
+            clip_eps: self.config.clip_eps,
+            ent_coef: self.config.ent_coef,
+            standardize_advantages: self.config.standardize_advantages,
+        };
+        let losses = update(
+            &self.runtime,
+            &self.train_artifact,
+            &mut self.state,
+            &rollout,
+            &gae,
+            &up,
+            &mut self.rng,
+            &mut self.profiler,
+        )?;
+
+        Ok(IterStats {
+            iter,
+            steps: self.steps,
+            mean_return: self.rolling_return.mean(),
+            episodes: self.episodes,
+            losses,
+            hw_cycles: gae.hw_cycles,
+        })
+    }
+
+    /// Run `iters` iterations, returning per-iteration stats.
+    pub fn run(&mut self) -> anyhow::Result<Vec<IterStats>> {
+        let iters = self.config.iters;
+        let mut stats = Vec::with_capacity(iters);
+        for i in 0..iters {
+            let s = self.iterate(i)?;
+            crate::log_info!(
+                "iter {:>4} steps {:>8} return {:>9.2} pi {:+.4} v {:.4} H {:.3}{}",
+                s.iter,
+                s.steps,
+                s.mean_return,
+                s.losses.pi_loss,
+                s.losses.v_loss,
+                s.losses.entropy,
+                s.hw_cycles
+                    .map(|c| format!(" hw_cycles {c}"))
+                    .unwrap_or_default()
+            );
+            stats.push(s);
+        }
+        Ok(stats)
+    }
+
+    /// Current network parameters (for evaluation).
+    pub fn params(&self) -> &[f32] {
+        &self.state.params
+    }
+
+    /// Persist the full optimizer+network state.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        super::checkpoint::save(path, &self.config.env, &self.state)
+    }
+
+    /// Restore state from a checkpoint (env must match this trainer's).
+    pub fn load_checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let (env, state) = super::checkpoint::load(path)?;
+        anyhow::ensure!(
+            env == self.config.env,
+            "checkpoint is for env {env:?}, trainer is {:?}",
+            self.config.env
+        );
+        anyhow::ensure!(
+            state.params.len() == self.state.params.len(),
+            "checkpoint param count {} != model {}",
+            state.params.len(),
+            self.state.params.len()
+        );
+        self.state = state;
+        Ok(())
+    }
+
+    /// Mean return of a greedy evaluation rollout (no exploration).
+    pub fn evaluate(&mut self, episodes: usize) -> anyhow::Result<f64> {
+        let exe = self.runtime.load(&self.policy_artifact)?;
+        let num_envs = self.envs.len();
+        let obs_dim = self.envs.obs_dim();
+        let space = self.envs.action_space().clone();
+        let mut done_returns = Vec::new();
+        let mut obs = self.envs.reset_all();
+        while done_returns.len() < episodes {
+            let out = exe.call(&[
+                Tensor::vec1(self.state.params.clone()),
+                Tensor::new(obs.clone(), vec![num_envs, obs_dim]),
+            ])?;
+            let width = out[0].data.len() / num_envs;
+            let actions: Vec<crate::envs::Action> = (0..num_envs)
+                .map(|i| {
+                    super::policy::greedy(
+                        &space,
+                        &out[0].data[i * width..(i + 1) * width],
+                    )
+                })
+                .collect();
+            let step = self.envs.step_all(&actions);
+            for &(_, ret, _) in &step.finished {
+                done_returns.push(ret);
+            }
+            obs = step.obs;
+        }
+        // Restore training observation state.
+        self.current_obs = self.envs.reset_all();
+        Ok(done_returns.iter().sum::<f64>() / done_returns.len() as f64)
+    }
+}

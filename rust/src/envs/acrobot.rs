@@ -1,0 +1,182 @@
+//! Acrobot-v1 (Sutton 1996; Gymnasium port): swing the tip of a
+//! two-link underactuated pendulum above the bar.
+//!
+//! Discrete(3) torque {-1, 0, +1} on the second joint; -1 reward per
+//! step until the goal; 500-step truncation.
+
+use super::{Action, ActionSpace, Env, Step};
+use crate::util::Rng;
+
+const DT: f32 = 0.2;
+const L1: f32 = 1.0;
+const LC1: f32 = 0.5;
+const LC2: f32 = 0.5;
+const M1: f32 = 1.0;
+const M2: f32 = 1.0;
+const I1: f32 = 1.0;
+const I2: f32 = 1.0;
+const G: f32 = 9.8;
+const MAX_VEL1: f32 = 4.0 * std::f32::consts::PI;
+const MAX_VEL2: f32 = 9.0 * std::f32::consts::PI;
+const MAX_STEPS: usize = 500;
+
+/// Acrobot environment state.
+#[derive(Debug, Clone)]
+pub struct Acrobot {
+    th1: f32,
+    th2: f32,
+    dth1: f32,
+    dth2: f32,
+    steps: usize,
+}
+
+impl Acrobot {
+    pub fn new() -> Self {
+        Acrobot { th1: 0.0, th2: 0.0, dth1: 0.0, dth2: 0.0, steps: 0 }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![
+            self.th1.cos(),
+            self.th1.sin(),
+            self.th2.cos(),
+            self.th2.sin(),
+            self.dth1,
+            self.dth2,
+        ]
+    }
+
+    fn dynamics(&self, torque: f32) -> (f32, f32) {
+        // Standard acrobot equations (Sutton & Barto, "book" convention
+        // used by Gymnasium).
+        let (th1, th2, dth1, dth2) = (self.th1, self.th2, self.dth1, self.dth2);
+        let d1 = M1 * LC1 * LC1
+            + M2 * (L1 * L1 + LC2 * LC2 + 2.0 * L1 * LC2 * th2.cos())
+            + I1
+            + I2;
+        let d2 = M2 * (LC2 * LC2 + L1 * LC2 * th2.cos()) + I2;
+        let phi2 =
+            M2 * LC2 * G * (th1 + th2 - std::f32::consts::FRAC_PI_2).cos();
+        let phi1 = -M2 * L1 * LC2 * dth2 * dth2 * th2.sin()
+            - 2.0 * M2 * L1 * LC2 * dth2 * dth1 * th2.sin()
+            + (M1 * LC1 + M2 * L1) * G * (th1 - std::f32::consts::FRAC_PI_2).cos()
+            + phi2;
+        let ddth2 = (torque + d2 / d1 * phi1
+            - M2 * L1 * LC2 * dth1 * dth1 * th2.sin()
+            - phi2)
+            / (M2 * LC2 * LC2 + I2 - d2 * d2 / d1);
+        let ddth1 = -(d2 * ddth2 + phi1) / d1;
+        (ddth1, ddth2)
+    }
+}
+
+impl Default for Acrobot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn wrap(x: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    ((x + std::f32::consts::PI).rem_euclid(two_pi)) - std::f32::consts::PI
+}
+
+impl Env for Acrobot {
+    fn name(&self) -> &'static str {
+        "acrobot"
+    }
+
+    fn obs_dim(&self) -> usize {
+        6
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(3)
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.th1 = rng.uniform_f32(-0.1, 0.1);
+        self.th2 = rng.uniform_f32(-0.1, 0.1);
+        self.dth1 = rng.uniform_f32(-0.1, 0.1);
+        self.dth2 = rng.uniform_f32(-0.1, 0.1);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Step {
+        let torque = match action {
+            Action::Discrete(0) => -1.0,
+            Action::Discrete(1) => 0.0,
+            Action::Discrete(_) => 1.0,
+            Action::Continuous(_) => panic!("acrobot takes discrete actions"),
+        };
+        // 4 substeps of Euler at dt/4 approximates Gymnasium's RK4
+        // closely enough for training purposes.
+        let sub = 4;
+        for _ in 0..sub {
+            let (ddth1, ddth2) = self.dynamics(torque);
+            let h = DT / sub as f32;
+            self.th1 += h * self.dth1;
+            self.th2 += h * self.dth2;
+            self.dth1 = (self.dth1 + h * ddth1).clamp(-MAX_VEL1, MAX_VEL1);
+            self.dth2 = (self.dth2 + h * ddth2).clamp(-MAX_VEL2, MAX_VEL2);
+        }
+        self.th1 = wrap(self.th1);
+        self.th2 = wrap(self.th2);
+        self.steps += 1;
+
+        let goal = -self.th1.cos() - (self.th2 + self.th1).cos() > 1.0;
+        let truncated = self.steps >= MAX_STEPS;
+        Step {
+            obs: self.obs(),
+            reward: if goal { 0.0 } else { -1.0 },
+            done: goal || truncated,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::conformance::check_env;
+
+    #[test]
+    fn conformance() {
+        check_env(Box::new(Acrobot::new()), MAX_STEPS);
+    }
+
+    #[test]
+    fn hanging_still_with_no_torque_stays_down() {
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        env.th1 = 0.0;
+        env.th2 = 0.0;
+        env.dth1 = 0.0;
+        env.dth2 = 0.0;
+        let s = env.step(&Action::Discrete(1), &mut rng);
+        assert!(!s.done || env.steps >= MAX_STEPS);
+        assert_eq!(s.reward, -1.0);
+        // Equilibrium: should barely move.
+        assert!(env.th1.abs() < 1e-3 && env.th2.abs() < 1e-3);
+    }
+
+    #[test]
+    fn energy_grows_under_resonant_torque() {
+        // Pumping torque in the direction of dth2 increases total swing.
+        let mut env = Acrobot::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let mut max_height = f32::NEG_INFINITY;
+        for _ in 0..400 {
+            let a = if env.dth2 >= 0.0 { 2 } else { 0 };
+            let s = env.step(&Action::Discrete(a), &mut rng);
+            max_height =
+                max_height.max(-env.th1.cos() - (env.th2 + env.th1).cos());
+            if s.done {
+                break;
+            }
+        }
+        assert!(max_height > 0.3, "pumping should raise the tip, got {max_height}");
+    }
+}

@@ -1,0 +1,163 @@
+//! CartPole-v1 (Barto, Sutton & Anderson 1983; Gymnasium port).
+//!
+//! Discrete(2) actions push the cart left/right; +1 reward per step;
+//! episode ends when |x| > 2.4, |θ| > 12°, or after 500 steps.
+
+use super::{Action, ActionSpace, Env, Step};
+use crate::util::Rng;
+
+const GRAVITY: f32 = 9.8;
+const MASS_CART: f32 = 1.0;
+const MASS_POLE: f32 = 0.1;
+const TOTAL_MASS: f32 = MASS_CART + MASS_POLE;
+const LENGTH: f32 = 0.5; // half pole length
+const POLE_MASS_LENGTH: f32 = MASS_POLE * LENGTH;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+const MAX_STEPS: usize = 500;
+
+/// CartPole environment state.
+#[derive(Debug, Clone)]
+pub struct CartPole {
+    x: f32,
+    x_dot: f32,
+    theta: f32,
+    theta_dot: f32,
+    steps: usize,
+}
+
+impl CartPole {
+    pub fn new() -> Self {
+        CartPole { x: 0.0, x_dot: 0.0, theta: 0.0, theta_dot: 0.0, steps: 0 }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.x, self.x_dot, self.theta, self.theta_dot]
+    }
+}
+
+impl Default for CartPole {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for CartPole {
+    fn name(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(2)
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.x = rng.uniform_f32(-0.05, 0.05);
+        self.x_dot = rng.uniform_f32(-0.05, 0.05);
+        self.theta = rng.uniform_f32(-0.05, 0.05);
+        self.theta_dot = rng.uniform_f32(-0.05, 0.05);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Step {
+        let force = match action {
+            Action::Discrete(1) => FORCE_MAG,
+            Action::Discrete(_) => -FORCE_MAG,
+            Action::Continuous(_) => panic!("cartpole takes discrete actions"),
+        };
+        let cos_t = self.theta.cos();
+        let sin_t = self.theta.sin();
+        let temp =
+            (force + POLE_MASS_LENGTH * self.theta_dot * self.theta_dot * sin_t)
+                / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin_t - cos_t * temp)
+            / (LENGTH * (4.0 / 3.0 - MASS_POLE * cos_t * cos_t / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LENGTH * theta_acc * cos_t / TOTAL_MASS;
+
+        // Euler integration (matches Gymnasium's default).
+        self.x += TAU * self.x_dot;
+        self.x_dot += TAU * x_acc;
+        self.theta += TAU * self.theta_dot;
+        self.theta_dot += TAU * theta_acc;
+        self.steps += 1;
+
+        let fell = self.x.abs() > X_LIMIT || self.theta.abs() > THETA_LIMIT;
+        let truncated = self.steps >= MAX_STEPS;
+        Step { obs: self.obs(), reward: 1.0, done: fell || truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::conformance::check_env;
+
+    #[test]
+    fn conformance() {
+        check_env(Box::new(CartPole::new()), MAX_STEPS);
+    }
+
+    #[test]
+    fn random_policy_fails_fast() {
+        // A random policy should not survive anywhere near MAX_STEPS.
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(1);
+        let mut lengths = Vec::new();
+        for _ in 0..20 {
+            env.reset(&mut rng);
+            let mut n = 0;
+            loop {
+                let a = Action::Discrete(rng.below(2) as usize);
+                n += 1;
+                if env.step(&a, &mut rng).done {
+                    break;
+                }
+            }
+            lengths.push(n);
+        }
+        let mean = lengths.iter().sum::<usize>() as f64 / lengths.len() as f64;
+        assert!(mean < 100.0, "random policy mean length {mean}");
+    }
+
+    #[test]
+    fn constant_push_tips_the_pole() {
+        let mut env = CartPole::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let mut done_at = None;
+        for i in 0..200 {
+            let s = env.step(&Action::Discrete(1), &mut rng);
+            if s.done {
+                done_at = Some(i);
+                break;
+            }
+        }
+        assert!(done_at.is_some(), "constant force must topple the pole");
+    }
+
+    #[test]
+    fn physics_is_deterministic() {
+        let run = || {
+            let mut env = CartPole::new();
+            let mut rng = Rng::new(3);
+            env.reset(&mut rng);
+            let mut acc = Vec::new();
+            for i in 0..50 {
+                let s = env.step(&Action::Discrete(i % 2), &mut rng);
+                acc.extend(s.obs);
+                if s.done {
+                    break;
+                }
+            }
+            acc
+        };
+        assert_eq!(run(), run());
+    }
+}

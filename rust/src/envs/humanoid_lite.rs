@@ -1,0 +1,259 @@
+//! HumanoidLite — a synthetic high-dimensional continuous-control task
+//! with MuJoCo-Humanoid-like tensor shapes (376 obs / 17 act).
+//!
+//! The paper profiles PPO on Gymnasium Humanoid (Table I); MuJoCo is
+//! unavailable here, so this environment substitutes a dynamical system
+//! that exercises the same code paths and shapes:
+//!
+//! - 376-dim observation = a linear-plus-nonlinear latent state;
+//! - 17-dim bounded action driving the latent through a fixed random
+//!   projection;
+//! - a locomotion-shaped reward: forward-velocity term + alive bonus −
+//!   control cost (the Humanoid reward structure);
+//! - early termination when the "torso height" coordinate leaves a band
+//!   (Humanoid's fall detection) plus a 1000-step truncation.
+//!
+//! Dynamics parameters are generated from a fixed seed so every process
+//! sees the same MDP. The task is genuinely learnable: pushing the
+//! velocity coordinate up through the action projection earns reward,
+//! but uniformly large actions destabilize the height coordinate.
+
+use super::{Action, ActionSpace, Env, Step};
+use crate::util::Rng;
+
+pub const OBS_DIM: usize = 376;
+pub const ACT_DIM: usize = 17;
+const LATENT: usize = 32;
+const MAX_STEPS: usize = 1000;
+const HEIGHT_MIN: f32 = -2.0;
+const HEIGHT_MAX: f32 = 2.0;
+
+/// Fixed random MDP parameters (shared by all instances).
+struct Mdp {
+    /// Latent transition [LATENT, LATENT], spectral-normalized-ish.
+    a: Vec<f32>,
+    /// Action projection [ACT_DIM, LATENT].
+    b: Vec<f32>,
+    /// Observation lift [LATENT, OBS_DIM].
+    c: Vec<f32>,
+}
+
+fn mdp() -> &'static Mdp {
+    use std::sync::OnceLock;
+    static MDP: OnceLock<Mdp> = OnceLock::new();
+    MDP.get_or_init(|| {
+        let mut rng = Rng::new(0x48554D41); // "HUMA"
+        let mut a = vec![0.0f32; LATENT * LATENT];
+        // Stable transition: 0.95 on the diagonal + weak coupling (the
+        // coupling scale keeps the spectral radius < 1 so the passive
+        // system is stable, like a standing Humanoid with small noise).
+        for i in 0..LATENT {
+            for j in 0..LATENT {
+                a[i * LATENT + j] = if i == j {
+                    0.95
+                } else {
+                    0.03 * rng.normal() as f32 / (LATENT as f32).sqrt()
+                };
+            }
+        }
+        let mut b = vec![0.0f32; ACT_DIM * LATENT];
+        rng.fill_normal_f32(&mut b);
+        for x in b.iter_mut() {
+            *x *= 0.3;
+        }
+        let mut c = vec![0.0f32; LATENT * OBS_DIM];
+        rng.fill_normal_f32(&mut c);
+        for x in c.iter_mut() {
+            *x /= (LATENT as f32).sqrt();
+        }
+        Mdp { a, b, c }
+    })
+}
+
+/// HumanoidLite environment state.
+pub struct HumanoidLite {
+    z: Vec<f32>,
+    steps: usize,
+}
+
+impl HumanoidLite {
+    pub fn new() -> Self {
+        HumanoidLite { z: vec![0.0; LATENT], steps: 0 }
+    }
+
+    /// Latent coordinates 0/1 play the roles of forward velocity and
+    /// torso height.
+    fn velocity(&self) -> f32 {
+        self.z[0]
+    }
+
+    fn height(&self) -> f32 {
+        self.z[1]
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let m = mdp();
+        let mut obs = vec![0.0f32; OBS_DIM];
+        for i in 0..LATENT {
+            let zi = self.z[i];
+            if zi != 0.0 {
+                let row = &m.c[i * OBS_DIM..(i + 1) * OBS_DIM];
+                for (o, &cij) in obs.iter_mut().zip(row) {
+                    *o += zi * cij;
+                }
+            }
+        }
+        // tanh keeps observations bounded like normalized MuJoCo states.
+        for o in obs.iter_mut() {
+            *o = o.tanh();
+        }
+        obs
+    }
+}
+
+impl Default for HumanoidLite {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for HumanoidLite {
+    fn name(&self) -> &'static str {
+        "humanoid_lite"
+    }
+
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Continuous { dim: ACT_DIM, low: -1.0, high: 1.0 }
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        for z in self.z.iter_mut() {
+            *z = rng.uniform_f32(-0.1, 0.1);
+        }
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, rng: &mut Rng) -> Step {
+        let act = match action {
+            Action::Continuous(a) => a,
+            Action::Discrete(_) => panic!("humanoid_lite takes continuous actions"),
+        };
+        assert_eq!(act.len(), ACT_DIM);
+        let m = mdp();
+        let mut z_new = vec![0.0f32; LATENT];
+        for i in 0..LATENT {
+            let row = &m.a[i * LATENT..(i + 1) * LATENT];
+            let mut acc = 0.0f32;
+            for (zj, aij) in self.z.iter().zip(row) {
+                acc += zj * aij;
+            }
+            z_new[i] = acc;
+        }
+        let mut ctrl_cost = 0.0f32;
+        for (k, &u) in act.iter().enumerate() {
+            let u = u.clamp(-1.0, 1.0);
+            ctrl_cost += u * u;
+            let row = &m.b[k * LATENT..(k + 1) * LATENT];
+            for (zn, &bkj) in z_new.iter_mut().zip(row) {
+                *zn += u * bkj;
+            }
+        }
+        // Process noise (the stochasticity MuJoCo gets from contacts).
+        for zn in z_new.iter_mut() {
+            *zn += 0.01 * rng.normal() as f32;
+        }
+        self.z = z_new;
+        self.steps += 1;
+
+        let fell = !(HEIGHT_MIN..=HEIGHT_MAX).contains(&self.height());
+        let truncated = self.steps >= MAX_STEPS;
+        // Humanoid-shaped reward: forward velocity + alive bonus - control.
+        let reward = 1.25 * self.velocity() + 5.0 - 0.1 * ctrl_cost
+            - if fell { 5.0 } else { 0.0 };
+        Step { obs: self.obs(), reward, done: fell || truncated }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::conformance::check_env;
+
+    #[test]
+    fn conformance() {
+        check_env(Box::new(HumanoidLite::new()), MAX_STEPS);
+    }
+
+    #[test]
+    fn shapes_match_mujoco_humanoid() {
+        let env = HumanoidLite::new();
+        assert_eq!(env.obs_dim(), 376);
+        assert_eq!(env.action_space().dim(), 17);
+    }
+
+    #[test]
+    fn zero_action_survives_many_steps() {
+        let mut env = HumanoidLite::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let mut n = 0;
+        for _ in 0..300 {
+            let s = env.step(&Action::Continuous(vec![0.0; ACT_DIM]), &mut rng);
+            n += 1;
+            if s.done {
+                break;
+            }
+        }
+        assert!(n >= 100, "passive policy should not fall instantly, n={n}");
+    }
+
+    #[test]
+    fn velocity_direction_controls_reward() {
+        // An action aligned with +velocity projection earns more than the
+        // opposite action: the task has learnable signal.
+        let m = mdp();
+        // Build the action that maximally increases z[0].
+        let mut best = vec![0.0f32; ACT_DIM];
+        for k in 0..ACT_DIM {
+            best[k] = m.b[k * LATENT].signum(); // b[k][0]
+        }
+        let run = |act: Vec<f32>| {
+            let mut env = HumanoidLite::new();
+            let mut rng = Rng::new(2);
+            env.reset(&mut rng);
+            let mut total = 0.0;
+            for _ in 0..50 {
+                let s = env.step(&Action::Continuous(act.clone()), &mut rng);
+                total += s.reward;
+                if s.done {
+                    break;
+                }
+            }
+            total
+        };
+        let fwd = run(best.clone());
+        let back = run(best.iter().map(|x| -x).collect());
+        assert!(
+            fwd > back + 1.0,
+            "forward-aligned actions must out-earn backward: {fwd} vs {back}"
+        );
+    }
+
+    #[test]
+    fn mdp_is_process_stable() {
+        // Same seed ⇒ same dynamics ⇒ same rollout.
+        let roll = || {
+            let mut env = HumanoidLite::new();
+            let mut rng = Rng::new(3);
+            env.reset(&mut rng);
+            let s = env.step(&Action::Continuous(vec![0.5; ACT_DIM]), &mut rng);
+            s.obs[0..8].to_vec()
+        };
+        assert_eq!(roll(), roll());
+    }
+}

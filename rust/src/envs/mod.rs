@@ -1,0 +1,131 @@
+//! Rust-native RL environments + the vectorized execution engine.
+//!
+//! The paper trains on Gymnasium MuJoCo/Atari environments, which are
+//! unavailable here (hardware/data gate — see DESIGN.md §2); this module
+//! provides the substitution: faithful Rust ports of the classic-control
+//! suite (CartPole, Pendulum, Acrobot, MountainCarContinuous) plus
+//! `HumanoidLite`, a synthetic high-dimensional continuous-control task
+//! with MuJoCo-Humanoid-like tensor shapes (376 obs / 17 act) for
+//! profiling parity with the paper's Table I workload.
+//!
+//! [`vec_env::VecEnv`] executes N environment instances on the
+//! [`crate::util::threadpool`] — the EnvPool-style engine the paper cites
+//! as related work for the "Environment Run" phase.
+
+pub mod acrobot;
+pub mod cartpole;
+pub mod humanoid_lite;
+pub mod mountain_car;
+pub mod pendulum;
+pub mod vec_env;
+
+use crate::util::Rng;
+
+/// Action space description.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ActionSpace {
+    /// `n` discrete actions.
+    Discrete(usize),
+    /// Box action of `dim` dims, bounded per-dim to `[low, high]`.
+    Continuous { dim: usize, low: f32, high: f32 },
+}
+
+impl ActionSpace {
+    pub fn dim(&self) -> usize {
+        match self {
+            ActionSpace::Discrete(_) => 1,
+            ActionSpace::Continuous { dim, .. } => *dim,
+        }
+    }
+
+    pub fn is_discrete(&self) -> bool {
+        matches!(self, ActionSpace::Discrete(_))
+    }
+}
+
+/// An agent action.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    Discrete(usize),
+    Continuous(Vec<f32>),
+}
+
+/// One transition.
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub obs: Vec<f32>,
+    pub reward: f32,
+    /// Episode ended (terminal or truncation — both end bootstrap here,
+    /// matching the common single-flag PPO implementations the paper
+    /// builds on).
+    pub done: bool,
+}
+
+/// An episodic RL environment.
+pub trait Env: Send {
+    /// Environment id (matches the model spec names in the manifest).
+    fn name(&self) -> &'static str;
+    fn obs_dim(&self) -> usize;
+    fn action_space(&self) -> ActionSpace;
+    /// Reset to a fresh episode, returning the initial observation.
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32>;
+    /// Advance one step.
+    fn step(&mut self, action: &Action, rng: &mut Rng) -> Step;
+}
+
+/// Construct an environment by name.
+pub fn make_env(name: &str) -> anyhow::Result<Box<dyn Env>> {
+    Ok(match name {
+        "cartpole" => Box::new(cartpole::CartPole::new()),
+        "pendulum" => Box::new(pendulum::Pendulum::new()),
+        "acrobot" => Box::new(acrobot::Acrobot::new()),
+        "mountain_car" => Box::new(mountain_car::MountainCarContinuous::new()),
+        "humanoid_lite" => Box::new(humanoid_lite::HumanoidLite::new()),
+        other => anyhow::bail!("unknown env {other:?}"),
+    })
+}
+
+/// Names of all bundled environments.
+pub const ALL_ENVS: &[&str] =
+    &["cartpole", "pendulum", "acrobot", "mountain_car", "humanoid_lite"];
+
+#[cfg(test)]
+pub(crate) mod conformance {
+    //! Shared conformance checks run by each environment's test module.
+    use super::*;
+
+    /// Random-policy rollout checks: obs dims stable, rewards finite,
+    /// episodes terminate within `max_steps`.
+    pub fn check_env(mut env: Box<dyn Env>, max_steps: usize) {
+        let mut rng = Rng::new(0xC0FFEE);
+        let space = env.action_space();
+        for episode in 0..3 {
+            let obs = env.reset(&mut rng);
+            assert_eq!(obs.len(), env.obs_dim(), "reset obs dim");
+            assert!(obs.iter().all(|x| x.is_finite()));
+            let mut steps = 0;
+            loop {
+                let action = match &space {
+                    ActionSpace::Discrete(n) => {
+                        Action::Discrete(rng.below(*n as u64) as usize)
+                    }
+                    ActionSpace::Continuous { dim, low, high } => Action::Continuous(
+                        (0..*dim).map(|_| rng.uniform_f32(*low, *high)).collect(),
+                    ),
+                };
+                let step = env.step(&action, &mut rng);
+                assert_eq!(step.obs.len(), env.obs_dim());
+                assert!(step.reward.is_finite(), "episode {episode} reward");
+                assert!(step.obs.iter().all(|x| x.is_finite()));
+                steps += 1;
+                if step.done {
+                    break;
+                }
+                assert!(
+                    steps <= max_steps,
+                    "episode {episode} ran past {max_steps} steps"
+                );
+            }
+        }
+    }
+}

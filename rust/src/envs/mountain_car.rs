@@ -1,0 +1,132 @@
+//! MountainCarContinuous-v0 (Gymnasium): drive an underpowered car up a
+//! hill by building momentum.
+//!
+//! Continuous force in [-1, 1]; reward = +100 at the goal minus 0.1·u²
+//! per step; 999-step truncation.
+
+use super::{Action, ActionSpace, Env, Step};
+use crate::util::Rng;
+
+const MIN_POS: f32 = -1.2;
+const MAX_POS: f32 = 0.6;
+const MAX_SPEED: f32 = 0.07;
+const GOAL_POS: f32 = 0.45;
+const POWER: f32 = 0.0015;
+const MAX_STEPS: usize = 999;
+
+/// Mountain-car environment state.
+#[derive(Debug, Clone)]
+pub struct MountainCarContinuous {
+    pos: f32,
+    vel: f32,
+    steps: usize,
+}
+
+impl MountainCarContinuous {
+    pub fn new() -> Self {
+        MountainCarContinuous { pos: 0.0, vel: 0.0, steps: 0 }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.pos, self.vel]
+    }
+}
+
+impl Default for MountainCarContinuous {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for MountainCarContinuous {
+    fn name(&self) -> &'static str {
+        "mountain_car"
+    }
+
+    fn obs_dim(&self) -> usize {
+        2
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Continuous { dim: 1, low: -1.0, high: 1.0 }
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.pos = rng.uniform_f32(-0.6, -0.4);
+        self.vel = 0.0;
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Step {
+        let force = match action {
+            Action::Continuous(a) => a[0].clamp(-1.0, 1.0),
+            Action::Discrete(_) => panic!("mountain_car takes continuous actions"),
+        };
+        self.vel += force * POWER - 0.0025 * (3.0 * self.pos).cos();
+        self.vel = self.vel.clamp(-MAX_SPEED, MAX_SPEED);
+        self.pos = (self.pos + self.vel).clamp(MIN_POS, MAX_POS);
+        if self.pos <= MIN_POS && self.vel < 0.0 {
+            self.vel = 0.0;
+        }
+        self.steps += 1;
+
+        let at_goal = self.pos >= GOAL_POS;
+        let mut reward = -0.1 * force * force;
+        if at_goal {
+            reward += 100.0;
+        }
+        Step {
+            obs: self.obs(),
+            reward,
+            done: at_goal || self.steps >= MAX_STEPS,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::conformance::check_env;
+
+    #[test]
+    fn conformance() {
+        check_env(Box::new(MountainCarContinuous::new()), MAX_STEPS);
+    }
+
+    #[test]
+    fn full_throttle_alone_cannot_climb() {
+        // The defining property of the task: constant +1 force from the
+        // valley cannot reach the goal directly.
+        let mut env = MountainCarContinuous::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        env.pos = -0.5;
+        env.vel = 0.0;
+        for _ in 0..200 {
+            let s = env.step(&Action::Continuous(vec![1.0]), &mut rng);
+            if s.done && env.pos >= GOAL_POS {
+                panic!("car should not climb directly");
+            }
+        }
+        assert!(env.pos < GOAL_POS);
+    }
+
+    #[test]
+    fn bang_bang_momentum_policy_reaches_goal() {
+        // Push in the direction of motion — the classic solution.
+        let mut env = MountainCarContinuous::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let mut reached = false;
+        for _ in 0..MAX_STEPS {
+            let u = if env.vel >= 0.0 { 1.0 } else { -1.0 };
+            let s = env.step(&Action::Continuous(vec![u]), &mut rng);
+            if s.done {
+                reached = env.pos >= GOAL_POS;
+                break;
+            }
+        }
+        assert!(reached, "momentum policy must reach the goal");
+    }
+}

@@ -1,0 +1,148 @@
+//! Pendulum-v1 (Gymnasium): swing a pendulum upright with bounded torque.
+//!
+//! Continuous action in [-2, 2]; reward = -(θ² + 0.1·θ̇² + 0.001·u²);
+//! fixed 200-step episodes (pure truncation).
+
+use super::{Action, ActionSpace, Env, Step};
+use crate::util::Rng;
+
+const MAX_SPEED: f32 = 8.0;
+const MAX_TORQUE: f32 = 2.0;
+const DT: f32 = 0.05;
+const G: f32 = 10.0;
+const M: f32 = 1.0;
+const L: f32 = 1.0;
+const MAX_STEPS: usize = 200;
+
+/// Pendulum environment state.
+#[derive(Debug, Clone)]
+pub struct Pendulum {
+    theta: f32,
+    theta_dot: f32,
+    steps: usize,
+}
+
+fn angle_normalize(x: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    ((x + std::f32::consts::PI).rem_euclid(two_pi)) - std::f32::consts::PI
+}
+
+impl Pendulum {
+    pub fn new() -> Self {
+        Pendulum { theta: 0.0, theta_dot: 0.0, steps: 0 }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.theta.cos(), self.theta.sin(), self.theta_dot]
+    }
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for Pendulum {
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Continuous { dim: 1, low: -MAX_TORQUE, high: MAX_TORQUE }
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.theta = rng.uniform_f32(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot = rng.uniform_f32(-1.0, 1.0);
+        self.steps = 0;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Step {
+        let u = match action {
+            Action::Continuous(a) => a[0].clamp(-MAX_TORQUE, MAX_TORQUE),
+            Action::Discrete(_) => panic!("pendulum takes continuous actions"),
+        };
+        let th = angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
+
+        let new_thdot = (self.theta_dot
+            + (3.0 * G / (2.0 * L) * self.theta.sin() + 3.0 / (M * L * L) * u) * DT)
+            .clamp(-MAX_SPEED, MAX_SPEED);
+        self.theta += new_thdot * DT;
+        self.theta_dot = new_thdot;
+        self.steps += 1;
+
+        Step { obs: self.obs(), reward: -cost, done: self.steps >= MAX_STEPS }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::conformance::check_env;
+
+    #[test]
+    fn conformance() {
+        check_env(Box::new(Pendulum::new()), MAX_STEPS);
+    }
+
+    #[test]
+    fn reward_is_nonpositive_and_bounded() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        for _ in 0..MAX_STEPS {
+            let a = Action::Continuous(vec![rng.uniform_f32(-2.0, 2.0)]);
+            let s = env.step(&a, &mut rng);
+            assert!(s.reward <= 0.0);
+            // max cost: pi^2 + 0.1*64 + 0.001*4 ≈ 16.28
+            assert!(s.reward >= -17.0);
+            if s.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_episode_length() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        let mut n = 0;
+        loop {
+            n += 1;
+            if env.step(&Action::Continuous(vec![0.0]), &mut rng).done {
+                break;
+            }
+        }
+        assert_eq!(n, MAX_STEPS);
+    }
+
+    #[test]
+    fn upright_no_torque_is_near_zero_cost() {
+        let mut env = Pendulum::new();
+        let mut rng = Rng::new(3);
+        env.reset(&mut rng);
+        env.theta = 0.0;
+        env.theta_dot = 0.0;
+        let s = env.step(&Action::Continuous(vec![0.0]), &mut rng);
+        assert!(s.reward > -1e-3, "upright cost should be ~0, got {}", s.reward);
+    }
+
+    #[test]
+    fn angle_normalize_wraps() {
+        assert!((angle_normalize(2.0 * std::f32::consts::PI)).abs() < 1e-6);
+        assert!(
+            (angle_normalize(3.0 * std::f32::consts::PI)
+                - (-std::f32::consts::PI))
+                .abs()
+                < 1e-5
+        );
+    }
+}

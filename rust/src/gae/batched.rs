@@ -1,0 +1,220 @@
+//! Timestep-major batched GAE — the software analogue of the 64-PE row
+//! array.
+//!
+//! Data layout matches the paper's memory-block layout (§IV): a
+//! `[T, B]` matrix where row `t` holds element `t` of all `B`
+//! trajectories ("groups data from different trajectories with the same
+//! timestep into memory blocks, enabling simultaneous retrieval and
+//! processing"). The backward loop then runs once over `T` with a
+//! `B`-wide vectorizable inner loop — exactly the work distribution the
+//! systolic rows perform in hardware.
+
+use super::{GaeOutput, GaeParams};
+
+/// A batch of equal-length trajectories in timestep-major layout.
+#[derive(Debug, Clone)]
+pub struct GaeBatch {
+    /// Number of timesteps `T`.
+    pub t_len: usize,
+    /// Number of trajectories `B`.
+    pub batch: usize,
+    /// Rewards, `[T, B]` row-major (`rewards[t*batch + i]`).
+    pub rewards: Vec<f32>,
+    /// Values, `[T+1, B]` row-major; the final row bootstraps.
+    pub values: Vec<f32>,
+    /// Terminal flags, `[T, B]` row-major, 1.0 = done (f32 mask form so
+    /// the inner loop is branch-free, as in the hardware datapath).
+    pub done_mask: Vec<f32>,
+}
+
+impl GaeBatch {
+    pub fn new(t_len: usize, batch: usize) -> Self {
+        GaeBatch {
+            t_len,
+            batch,
+            rewards: vec![0.0; t_len * batch],
+            values: vec![0.0; (t_len + 1) * batch],
+            done_mask: vec![0.0; t_len * batch],
+        }
+    }
+
+    /// Assemble from per-trajectory vectors (all must share the length).
+    pub fn from_trajectories(trajs: &[super::Trajectory]) -> Self {
+        assert!(!trajs.is_empty(), "empty batch");
+        let t_len = trajs[0].len();
+        assert!(
+            trajs.iter().all(|t| t.len() == t_len),
+            "all trajectories must have equal length in batched layout"
+        );
+        let batch = trajs.len();
+        let mut b = GaeBatch::new(t_len, batch);
+        for (i, traj) in trajs.iter().enumerate() {
+            for t in 0..t_len {
+                b.rewards[t * batch + i] = traj.rewards[t];
+                b.done_mask[t * batch + i] = if traj.dones[t] { 1.0 } else { 0.0 };
+            }
+            for t in 0..=t_len {
+                b.values[t * batch + i] = traj.values[t];
+            }
+        }
+        b
+    }
+
+    #[inline]
+    pub fn idx(&self, t: usize, i: usize) -> usize {
+        t * self.batch + i
+    }
+}
+
+/// Batched GAE: one backward pass over `T`, vector work over `B`.
+pub fn gae_batched(params: &GaeParams, b: &GaeBatch) -> GaeOutput {
+    let (t_len, batch) = (b.t_len, b.batch);
+    let mut advantages = vec![0.0f32; t_len * batch];
+    let mut rewards_to_go = vec![0.0f32; t_len * batch];
+    let mut carry = vec![0.0f32; batch]; // A_{t+1} per trajectory
+    let c = params.c();
+    let gamma = params.gamma;
+    for t in (0..t_len).rev() {
+        let row = t * batch;
+        let vrow = &b.values[row..row + batch];
+        let vnext = &b.values[row + batch..row + 2 * batch];
+        let r = &b.rewards[row..row + batch];
+        let dm = &b.done_mask[row..row + batch];
+        let adv = &mut advantages[row..row + batch];
+        let rtg = &mut rewards_to_go[row..row + batch];
+        // Branch-free, dependency-free across the batch lane ⇒ the
+        // compiler vectorizes this to the lane width (§Perf log).
+        for (((((ci, ai), gi), &ri), &vi), (&vni, &di)) in carry
+            .iter_mut()
+            .zip(adv.iter_mut())
+            .zip(rtg.iter_mut())
+            .zip(r)
+            .zip(vrow)
+            .zip(vnext.iter().zip(dm))
+        {
+            let not_done = 1.0 - di;
+            let delta = ri + gamma * vni * not_done - vi;
+            let a = delta + c * not_done * *ci;
+            *ci = a;
+            *ai = a;
+            *gi = a + vi;
+        }
+    }
+    GaeOutput { advantages, rewards_to_go }
+}
+
+/// In-place variant modelling the paper's dual-port overwrite (§IV-3):
+/// advantages overwrite the rewards array and rewards-to-go overwrite
+/// values rows `0..T`, halving working memory.
+///
+/// Note the hazard Algorithm 2 sidesteps by writing to row `t+1`: by the
+/// time row `t` is processed, row `t+1` of the value plane has already
+/// been overwritten with RTGs. Like the hardware PE, we keep the
+/// original `V(s_{t+1})` row in registers (`v_next`) across iterations.
+pub fn gae_batched_in_place(params: &GaeParams, b: &mut GaeBatch) {
+    let (t_len, batch) = (b.t_len, b.batch);
+    let mut carry = vec![0.0f32; batch];
+    // Original values of row t+1 (starts as the bootstrap row, which is
+    // never overwritten).
+    let mut v_next: Vec<f32> = b.values[t_len * batch..(t_len + 1) * batch].to_vec();
+    let c = params.c();
+    let gamma = params.gamma;
+    for t in (0..t_len).rev() {
+        let row = t * batch;
+        for i in 0..batch {
+            let not_done = 1.0 - b.done_mask[row + i];
+            let v = b.values[row + i];
+            let delta = b.rewards[row + i] + gamma * v_next[i] * not_done - v;
+            let a = delta + c * not_done * carry[i];
+            carry[i] = a;
+            v_next[i] = v; // register the original value for row t-1
+            b.rewards[row + i] = a; // advantage overwrites reward
+            b.values[row + i] = a + v; // RTG overwrites value
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::reference::gae_trajectory;
+    use crate::gae::Trajectory;
+    use crate::testing::{check, Gen};
+
+    fn random_batch(g: &mut Gen, t_len: usize, batch: usize) -> Vec<Trajectory> {
+        (0..batch)
+            .map(|_| {
+                let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+                let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+                let dones = (0..t_len).map(|_| g.bool_p(0.05)).collect();
+                Trajectory::new(rewards, values, dones)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_reference_per_trajectory() {
+        check("batched == scalar reference", 30, |g| {
+            let t_len = g.usize_in(1, 48);
+            let batch = g.usize_in(1, 16);
+            let trajs = random_batch(g, t_len, batch);
+            let b = GaeBatch::from_trajectories(&trajs);
+            let out = gae_batched(&GaeParams::default(), &b);
+            for (i, traj) in trajs.iter().enumerate() {
+                let want = gae_trajectory(&GaeParams::default(), traj);
+                for t in 0..t_len {
+                    let got = out.advantages[b.idx(t, i)];
+                    assert!(
+                        (got - want.advantages[t]).abs() < 1e-4,
+                        "traj {i} t {t}: {got} vs {}",
+                        want.advantages[t]
+                    );
+                    let got_rtg = out.rewards_to_go[b.idx(t, i)];
+                    assert!((got_rtg - want.rewards_to_go[t]).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn in_place_matches_out_of_place() {
+        check("in-place == out-of-place", 30, |g| {
+            let t_len = g.usize_in(1, 40);
+            let batch = g.usize_in(1, 8);
+            let trajs = random_batch(g, t_len, batch);
+            let b = GaeBatch::from_trajectories(&trajs);
+            let out = gae_batched(&GaeParams::default(), &b);
+            let mut b2 = b.clone();
+            gae_batched_in_place(&GaeParams::default(), &mut b2);
+            for t in 0..t_len {
+                for i in 0..batch {
+                    let k = b.idx(t, i);
+                    assert!((b2.rewards[k] - out.advantages[k]).abs() < 1e-5);
+                    assert!((b2.values[k] - out.rewards_to_go[k]).abs() < 1e-5);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn layout_is_timestep_major() {
+        let trajs = vec![
+            Trajectory::without_dones(vec![1.0, 2.0], vec![0.0, 0.0, 0.0]),
+            Trajectory::without_dones(vec![3.0, 4.0], vec![0.0, 0.0, 0.0]),
+        ];
+        let b = GaeBatch::from_trajectories(&trajs);
+        // Row t=0 holds element 0 of both trajectories (Fig. 6 layout).
+        assert_eq!(&b.rewards[0..2], &[1.0, 3.0]);
+        assert_eq!(&b.rewards[2..4], &[2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn unequal_lengths_rejected() {
+        let trajs = vec![
+            Trajectory::without_dones(vec![1.0], vec![0.0, 0.0]),
+            Trajectory::without_dones(vec![1.0, 2.0], vec![0.0, 0.0, 0.0]),
+        ];
+        GaeBatch::from_trajectories(&trajs);
+    }
+}

@@ -1,0 +1,256 @@
+//! k-step lookahead GAE — the paper's key pipelining transformation
+//! (§III-B, Table II, Eq. 10–12).
+//!
+//! The recurrence `A_t = δ_t + C·A_{t+1}` has a single-cycle feedback
+//! loop: the multiplier output is needed one step later, so the
+//! multiplier cannot be pipelined without stalling. Unrolling k steps,
+//!
+//! ```text
+//! A_t = C^k · A_{t+k} + Σ_{i=0}^{k-1} C^{(k-1)-i} · δ_{t+i}     (Eq. 12)
+//! ```
+//!
+//! puts k registers in the loop: the `C^k` multiplier may now have k
+//! pipeline stages and still produce each result in time. In software /
+//! Pallas terms the same identity turns a length-T sequential chain into
+//! ⌈T/k⌉ chain steps of vectorizable work — the schedule used by the L1
+//! kernel (`python/compile/kernels/gae.py`) and the cycle simulator
+//! ([`crate::hwsim::pe`]).
+//!
+//! Lookahead applies *within* an episode segment; terminal (`done`)
+//! boundaries reset the carry exactly as the sequential recurrence does.
+
+use super::{GaeOutput, GaeParams, Trajectory};
+
+/// Compute advantages via the k-step lookahead identity on a trajectory
+/// with **no mid-vector terminals** (the hardware case — each systolic
+/// row receives exactly one episode's vectors).
+///
+/// Bit-for-bit this differs from the sequential recurrence only by
+/// floating-point reassociation; tests bound the drift.
+pub fn gae_lookahead_no_dones(
+    params: &GaeParams,
+    rewards: &[f32],
+    values: &[f32],
+    k: usize,
+) -> GaeOutput {
+    assert!(k >= 1, "lookahead k must be >= 1");
+    assert_eq!(values.len(), rewards.len() + 1);
+    let t_len = rewards.len();
+    let c = params.c();
+    // Precompute C^i up to k (the hardware bakes these into the PE).
+    let c_pows: Vec<f32> = (0..=k).map(|i| c.powi(i as i32)).collect();
+
+    // δ_t for all t — in hardware this is the feed-forward (non-loop)
+    // part of the PE datapath, fully pipelined.
+    let deltas: Vec<f32> = (0..t_len)
+        .map(|t| rewards[t] + params.gamma * values[t + 1] - values[t])
+        .collect();
+
+    let mut advantages = vec![0.0f32; t_len];
+    // Process chunks of k from the tail. Within a chunk, each element
+    // needs its own partial sum of deltas (the feed-forward terms) plus
+    // C^j times the carry from the next chunk.
+    let mut carry = 0.0f32; // A at the first index of the previous (later) chunk
+    let mut chunk_start = t_len;
+    while chunk_start > 0 {
+        let lo = chunk_start.saturating_sub(k);
+        let len = chunk_start - lo;
+        // For t in [lo, chunk_start): A_t = C^{chunk_start - t} * carry
+        //   + Σ_{u=t}^{chunk_start-1} C^{u-t} δ_u
+        // Computed with a running suffix so the chunk costs O(k) — this
+        // mirrors the PE, whose adder tree accumulates the k δ-terms.
+        let mut suffix = 0.0f32;
+        for t in (lo..chunk_start).rev() {
+            let dist = chunk_start - t;
+            suffix = deltas[t] + c * suffix;
+            advantages[t] = suffix + c_pows[dist] * carry;
+        }
+        carry = advantages[lo];
+        chunk_start = lo;
+        let _ = len;
+    }
+
+    let rewards_to_go = advantages
+        .iter()
+        .zip(values.iter())
+        .map(|(a, v)| a + v)
+        .collect();
+    GaeOutput { advantages, rewards_to_go }
+}
+
+/// k-step lookahead over a trajectory that may contain terminals: the
+/// vector is split at `done` boundaries and each segment is processed
+/// independently (the coordinator performs this split before dispatching
+/// rows to the accelerator).
+pub fn gae_lookahead(params: &GaeParams, traj: &Trajectory, k: usize) -> GaeOutput {
+    let t_len = traj.len();
+    let mut advantages = vec![0.0f32; t_len];
+    let mut rewards_to_go = vec![0.0f32; t_len];
+    // Split into maximal segments [start, end) where every done lies at a
+    // segment's last step.
+    let mut start = 0;
+    for t in 0..t_len {
+        if traj.dones[t] || t == t_len - 1 {
+            process_segment(params, traj, start, t + 1, k, &mut advantages, &mut rewards_to_go);
+            start = t + 1;
+        }
+    }
+    GaeOutput { advantages, rewards_to_go }
+}
+
+/// Process `[start, end)` as a closed segment: the value bootstrap at
+/// `end` applies only when the segment is *not* terminated by a done.
+fn process_segment(
+    params: &GaeParams,
+    traj: &Trajectory,
+    start: usize,
+    end: usize,
+    k: usize,
+    advantages: &mut [f32],
+    rewards_to_go: &mut [f32],
+) {
+    let seg_len = end - start;
+    let rewards = &traj.rewards[start..end];
+    // Values slice is seg_len + 1; zero the bootstrap if the segment ends
+    // in a terminal.
+    let mut values: Vec<f32> = traj.values[start..=end].to_vec();
+    if traj.dones[end - 1] {
+        values[seg_len] = 0.0;
+    }
+    let out = gae_lookahead_no_dones(params, rewards, &values, k);
+    advantages[start..end].copy_from_slice(&out.advantages);
+    rewards_to_go[start..end].copy_from_slice(&out.rewards_to_go);
+}
+
+/// Verify the Table II decomposition identities for a given δ sequence:
+/// returns the max absolute error between `A_t` computed sequentially and
+/// via `A_t = C^k A_{t+k} + Σ_{i=0}^{k-1} C^i δ_{t+i}` for every valid
+/// `t`. Used by tests and the Fig. 4/Table II bench.
+///
+/// **Paper erratum:** the paper's general k-step equation writes the
+/// summand as `C^{(k-1)-i} δ_{t+i}`, which contradicts its own Eq. 10
+/// (`Â_t = C²Â_{t+2} + Cδ_{t+1} + δ_t`, i.e. coefficient `C^i` on
+/// `δ_{t+i}`) and Table II. Expanding the recurrence confirms `C^i` is
+/// correct: `A_t = δ_t + C·A_{t+1} = δ_t + Cδ_{t+1} + C²A_{t+2} = …`.
+pub fn decomposition_max_error(c: f32, deltas: &[f32], k: usize) -> f32 {
+    let t_len = deltas.len();
+    // Sequential A.
+    let mut a = vec![0.0f32; t_len + k]; // pad zeros past the end
+    for t in (0..t_len).rev() {
+        a[t] = deltas[t] + c * a[t + 1];
+    }
+    let mut max_err = 0.0f32;
+    for t in 0..t_len {
+        let mut rhs = c.powi(k as i32) * a[t + k];
+        for i in 0..k {
+            if t + i < t_len {
+                rhs += c.powi(i as i32) * deltas[t + i];
+            }
+        }
+        max_err = max_err.max((a[t] - rhs).abs());
+    }
+    max_err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::reference::gae_trajectory;
+    use crate::testing::check;
+
+    #[test]
+    fn table2_identities_hold() {
+        // Table II: Â_{T-1} = CÂ_T + δ_{T-1}; Â_{T-2} = C²Â_T + Cδ_{T-1}
+        // + δ_{T-2}; Â_{T-3} = C²Â_{T-1} + Cδ_{T-2} + δ_{T-3}; etc.
+        check("table II decomposition", 50, |g| {
+            let t_len = g.usize_in(4, 128);
+            let deltas = g.vec_normal_f32(t_len, 0.0, 2.0);
+            let c = g.f32_in(0.5, 1.0);
+            for k in 1..=4 {
+                let err = decomposition_max_error(c, &deltas, k);
+                assert!(err < 2e-3, "k={k} err={err}");
+            }
+        });
+    }
+
+    #[test]
+    fn lookahead_matches_reference_no_dones() {
+        check("lookahead == sequential (no dones)", 40, |g| {
+            let t_len = g.usize_in(1, 200);
+            let k = g.usize_in(1, 8);
+            let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+            let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+            let params = GaeParams::default();
+            let traj = Trajectory::without_dones(rewards.clone(), values.clone());
+            let want = gae_trajectory(&params, &traj);
+            let got = gae_lookahead_no_dones(&params, &rewards, &values, k);
+            for t in 0..t_len {
+                assert!(
+                    (got.advantages[t] - want.advantages[t]).abs() < 1e-3,
+                    "t={t} k={k}: {} vs {}",
+                    got.advantages[t],
+                    want.advantages[t]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn lookahead_matches_reference_with_dones() {
+        check("lookahead == sequential (dones)", 40, |g| {
+            let t_len = g.usize_in(1, 96);
+            let k = g.usize_in(1, 5);
+            let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+            let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+            let dones: Vec<bool> = (0..t_len).map(|_| g.bool_p(0.15)).collect();
+            let params = GaeParams::default();
+            let traj = Trajectory::new(rewards, values, dones);
+            let want = gae_trajectory(&params, &traj);
+            let got = gae_lookahead(&params, &traj, k);
+            for t in 0..t_len {
+                assert!(
+                    (got.advantages[t] - want.advantages[t]).abs() < 1e-3,
+                    "t={t} k={k}"
+                );
+                assert!(
+                    (got.rewards_to_go[t] - want.rewards_to_go[t]).abs() < 1e-3
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn k1_is_plain_recurrence() {
+        let params = GaeParams::default();
+        let rewards = vec![1.0, -0.5, 2.0, 0.25];
+        let values = vec![0.1, 0.2, 0.3, 0.4, 0.5];
+        let traj = Trajectory::without_dones(rewards.clone(), values.clone());
+        let want = gae_trajectory(&params, &traj);
+        let got = gae_lookahead_no_dones(&params, &rewards, &values, 1);
+        for t in 0..4 {
+            assert!((got.advantages[t] - want.advantages[t]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_t() {
+        let params = GaeParams::default();
+        let rewards = vec![1.0, 2.0];
+        let values = vec![0.0, 0.0, 0.0];
+        let traj = Trajectory::without_dones(rewards.clone(), values.clone());
+        let want = gae_trajectory(&params, &traj);
+        let got = gae_lookahead_no_dones(&params, &rewards, &values, 16);
+        for t in 0..2 {
+            assert!((got.advantages[t] - want.advantages[t]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn eq10_two_step_explicit() {
+        // Eq. 10: Â_t = C²Â_{t+2} + Cδ_{t+1} + δ_t.
+        let c = 0.9405f32; // γλ for defaults
+        let deltas = [0.3f32, -1.2, 0.8, 2.0, -0.4];
+        let err = decomposition_max_error(c, &deltas, 2);
+        assert!(err < 1e-5);
+    }
+}

@@ -1,0 +1,122 @@
+//! Generalized Advantage Estimation (GAE) — the computation HEPPO-GAE
+//! accelerates.
+//!
+//! The recurrence (paper Eq. 2–5), for discount γ and GAE parameter λ:
+//!
+//! ```text
+//! δ_t  = r_t + γ·V(s_{t+1})·(1 - done_t) - V(s_t)       (TD residual)
+//! A_t  = δ_t + γλ·(1 - done_t)·A_{t+1}                  (GAE, Eq. 4)
+//! RTG_t = V(s_t) + A_t                                  (rewards-to-go, Eq. 5)
+//! ```
+//!
+//! Three implementations, mirroring the paper's evaluation axis:
+//!
+//! - [`reference`] — the *scalar, per-trajectory* backward loop: the shape
+//!   of the standard CPU implementation the paper benchmarks at ≈9000
+//!   elements/s (their ref. [17]).
+//! - [`batched`] — timestep-major batched processing of all trajectories
+//!   at once: the software analogue of the 64-PE systolic row array.
+//! - [`lookahead`] — the k-step lookahead decomposition (paper Table II
+//!   and Eq. 10–12) that breaks the feedback loop for pipelining; also
+//!   used by the Pallas kernel (L1) as its chunked-scan schedule.
+
+pub mod batched;
+pub mod lookahead;
+pub mod reference;
+
+/// GAE hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaeParams {
+    /// Discount factor γ.
+    pub gamma: f32,
+    /// GAE exponential weight λ.
+    pub lambda: f32,
+}
+
+impl GaeParams {
+    pub fn new(gamma: f32, lambda: f32) -> Self {
+        assert!((0.0..=1.0).contains(&gamma), "gamma out of range");
+        assert!((0.0..=1.0).contains(&lambda), "lambda out of range");
+        GaeParams { gamma, lambda }
+    }
+
+    /// The paper's constant `C = γ·λ` (Table II).
+    #[inline]
+    pub fn c(&self) -> f32 {
+        self.gamma * self.lambda
+    }
+}
+
+impl Default for GaeParams {
+    /// The standard PPO setting (γ=0.99, λ=0.95).
+    fn default() -> Self {
+        GaeParams { gamma: 0.99, lambda: 0.95 }
+    }
+}
+
+/// Output of a GAE pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaeOutput {
+    /// Advantage estimates Â_t, same layout as the input rewards.
+    pub advantages: Vec<f32>,
+    /// Rewards-to-go (returns targets), same layout.
+    pub rewards_to_go: Vec<f32>,
+}
+
+/// A single-trajectory GAE problem: `T` rewards, `T+1` values (the last
+/// is the bootstrap value of the final state), and per-step terminal
+/// flags.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub rewards: Vec<f32>,
+    /// `len = rewards.len() + 1`; `values[T]` bootstraps the tail.
+    pub values: Vec<f32>,
+    /// `dones[t]` = episode terminated *at* step t (no bootstrap across).
+    pub dones: Vec<bool>,
+}
+
+impl Trajectory {
+    pub fn new(rewards: Vec<f32>, values: Vec<f32>, dones: Vec<bool>) -> Self {
+        assert_eq!(values.len(), rewards.len() + 1, "values must have T+1 entries");
+        assert_eq!(dones.len(), rewards.len(), "dones must have T entries");
+        Trajectory { rewards, values, dones }
+    }
+
+    /// A trajectory with no mid-vector terminals (the hardware case: each
+    /// systolic row receives one episode's vectors).
+    pub fn without_dones(rewards: Vec<f32>, values: Vec<f32>) -> Self {
+        let t = rewards.len();
+        Trajectory::new(rewards, values, vec![false; t])
+    }
+
+    pub fn len(&self) -> usize {
+        self.rewards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rewards.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_is_gamma_lambda() {
+        let p = GaeParams::new(0.99, 0.95);
+        assert!((p.c() - 0.9405).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "gamma out of range")]
+    fn rejects_bad_gamma() {
+        GaeParams::new(1.5, 0.9);
+    }
+
+    #[test]
+    #[should_panic(expected = "values must have T+1")]
+    fn trajectory_shape_checked() {
+        Trajectory::new(vec![1.0; 4], vec![0.0; 4], vec![false; 4]);
+    }
+}

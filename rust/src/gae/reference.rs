@@ -1,0 +1,182 @@
+//! Scalar per-trajectory GAE — the baseline the paper measures against.
+//!
+//! This is the textbook backward loop (one trajectory at a time, element
+//! by element, in reverse), structurally identical to the "standard GAE
+//! implementation [17]" the paper profiles at ≈9000 elements/s on a
+//! 32-core Xeon + V100 machine (§V-D-3). It is also the correctness
+//! oracle for every other implementation (batched CPU, lookahead, the
+//! Pallas kernel, and the cycle simulator).
+
+use super::{GaeOutput, GaeParams, Trajectory};
+
+/// Compute advantages and rewards-to-go for one trajectory with the
+/// sequential recurrence (paper Eq. 4–5).
+pub fn gae_trajectory(params: &GaeParams, traj: &Trajectory) -> GaeOutput {
+    let t_len = traj.len();
+    let mut advantages = vec![0.0f32; t_len];
+    let mut rewards_to_go = vec![0.0f32; t_len];
+    let mut carry = 0.0f32; // A_{t+1}
+    for t in (0..t_len).rev() {
+        let not_done = if traj.dones[t] { 0.0 } else { 1.0 };
+        let delta = traj.rewards[t] + params.gamma * traj.values[t + 1] * not_done
+            - traj.values[t];
+        carry = delta + params.c() * not_done * carry;
+        advantages[t] = carry;
+        rewards_to_go[t] = carry + traj.values[t]; // Eq. 5
+    }
+    GaeOutput { advantages, rewards_to_go }
+}
+
+/// Compute GAE for a list of trajectories sequentially — the exact shape
+/// of the CPU baseline ("iterating over one trajectory at a time, not in
+/// batch form", §V-D-3).
+pub fn gae_sequential(params: &GaeParams, trajs: &[Trajectory]) -> Vec<GaeOutput> {
+    trajs.iter().map(|t| gae_trajectory(params, t)).collect()
+}
+
+/// Direct evaluation of the infinite-sum definition (paper Eq. 3),
+/// truncated at the trajectory end — O(T²), used only as a cross-check
+/// oracle in tests.
+pub fn gae_definition_oracle(params: &GaeParams, traj: &Trajectory) -> Vec<f32> {
+    let t_len = traj.len();
+    let mut deltas = vec![0.0f32; t_len];
+    for t in 0..t_len {
+        let not_done = if traj.dones[t] { 0.0 } else { 1.0 };
+        deltas[t] = traj.rewards[t] + params.gamma * traj.values[t + 1] * not_done
+            - traj.values[t];
+    }
+    let mut adv = vec![0.0f32; t_len];
+    for t in 0..t_len {
+        let mut acc = 0.0f64;
+        let mut w = 1.0f64;
+        for l in t..t_len {
+            acc += w * deltas[l] as f64;
+            if traj.dones[l] {
+                break; // the episode ends; later deltas belong to the next episode
+            }
+            w *= params.c() as f64;
+        }
+        adv[t] = acc as f32;
+    }
+    adv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    fn random_trajectory(g: &mut Gen, t_len: usize, with_dones: bool) -> Trajectory {
+        let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+        let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+        let dones = (0..t_len)
+            .map(|_| with_dones && g.bool_p(0.1))
+            .collect();
+        Trajectory::new(rewards, values, dones)
+    }
+
+    #[test]
+    fn matches_definition_oracle_no_dones() {
+        check("recurrence == truncated sum (no dones)", 50, |g| {
+            let t_len = g.usize_in(1, 64);
+            let traj = random_trajectory(g, t_len, false);
+            let params = GaeParams::new(g.f32_in(0.8, 1.0), g.f32_in(0.8, 1.0));
+            let out = gae_trajectory(&params, &traj);
+            let oracle = gae_definition_oracle(&params, &traj);
+            for t in 0..t_len {
+                assert!(
+                    (out.advantages[t] - oracle[t]).abs() < 1e-3,
+                    "t={t} got={} want={}",
+                    out.advantages[t],
+                    oracle[t]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn matches_definition_oracle_with_dones() {
+        check("recurrence == truncated sum (dones)", 50, |g| {
+            let t_len = g.usize_in(1, 64);
+            let traj = random_trajectory(g, t_len, true);
+            let params = GaeParams::default();
+            let out = gae_trajectory(&params, &traj);
+            let oracle = gae_definition_oracle(&params, &traj);
+            for t in 0..t_len {
+                assert!((out.advantages[t] - oracle[t]).abs() < 1e-3, "t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn known_small_case() {
+        // T=2, gamma=1, lambda=1: delta_1 = r1 + v2 - v1, A_1 = delta_1;
+        // A_0 = delta_0 + A_1.
+        let params = GaeParams::new(1.0, 1.0);
+        let traj = Trajectory::without_dones(vec![1.0, 2.0], vec![0.5, 1.5, 2.5]);
+        let out = gae_trajectory(&params, &traj);
+        let d1 = 2.0 + 2.5 - 1.5;
+        let d0 = 1.0 + 1.5 - 0.5;
+        assert!((out.advantages[1] - d1).abs() < 1e-6);
+        assert!((out.advantages[0] - (d0 + d1)).abs() < 1e-6);
+        // RTG = A + V (Eq. 5)
+        assert!((out.rewards_to_go[0] - (d0 + d1 + 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminal_blocks_bootstrap() {
+        // done at t=0 must ignore values[1] entirely.
+        let params = GaeParams::default();
+        let traj = Trajectory::new(vec![3.0], vec![1.0, 100.0], vec![true]);
+        let out = gae_trajectory(&params, &traj);
+        assert!((out.advantages[0] - (3.0 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminal_splits_credit() {
+        // With a done in the middle, advantage before the done must not
+        // see rewards after it.
+        let params = GaeParams::new(0.99, 0.95);
+        let mut rewards = vec![0.0f32; 10];
+        rewards[7] = 100.0; // big reward after the terminal at t=4
+        let values = vec![0.0f32; 11];
+        let mut dones = vec![false; 10];
+        dones[4] = true;
+        let traj = Trajectory::new(rewards, values, dones);
+        let out = gae_trajectory(&params, &traj);
+        for t in 0..=4 {
+            assert!(
+                out.advantages[t].abs() < 1e-6,
+                "t={t} leaked credit {}",
+                out.advantages[t]
+            );
+        }
+        assert!(out.advantages[5] > 1.0);
+    }
+
+    #[test]
+    fn empty_trajectory() {
+        let params = GaeParams::default();
+        let traj = Trajectory::without_dones(vec![], vec![0.0]);
+        let out = gae_trajectory(&params, &traj);
+        assert!(out.advantages.is_empty());
+        assert!(out.rewards_to_go.is_empty());
+    }
+
+    #[test]
+    fn lambda_zero_is_one_step_td() {
+        // λ=0 ⇒ A_t = δ_t exactly.
+        check("lambda=0 is TD(0)", 30, |g| {
+            let t_len = g.usize_in(1, 32);
+            let traj = random_trajectory(g, t_len, true);
+            let params = GaeParams::new(0.99, 0.0);
+            let out = gae_trajectory(&params, &traj);
+            for t in 0..t_len {
+                let nd = if traj.dones[t] { 0.0 } else { 1.0 };
+                let delta = traj.rewards[t] + 0.99 * traj.values[t + 1] * nd
+                    - traj.values[t];
+                assert!((out.advantages[t] - delta).abs() < 1e-5);
+            }
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Clock-domain-crossing synchronization FIFO model — the paper's §VI
+//! future-work item ("High-performance clock-domain crossing (CDC)
+//! FIFOs can facilitate faster data transfers", citing the authors' own
+//! FIFO line of work [20]–[24]).
+//!
+//! Standard asynchronous FIFO with Gray-coded pointers: each pointer
+//! crosses into the other domain through a 2-flop synchronizer, so the
+//! *observed* occupancy lags by 2 cycles of the observing clock. The
+//! model answers the two questions the SoC design needs:
+//!
+//! - sustained throughput of a `wr_hz → rd_hz` crossing (min of the two
+//!   clocks when the FIFO is deep enough to hide the sync lag);
+//! - the minimum depth that sustains full rate (the classic
+//!   `2·sync + margin` bound).
+//!
+//! A functional simulation (cycle-interleaved producer/consumer with
+//! lagged pointer views) backs the closed forms in tests.
+
+/// An asynchronous FIFO between two clock domains.
+#[derive(Debug, Clone, Copy)]
+pub struct CdcFifo {
+    pub depth: usize,
+    pub wr_hz: f64,
+    pub rd_hz: f64,
+    /// Synchronizer stages (2-flop standard).
+    pub sync_stages: usize,
+}
+
+/// Result of a functional throughput simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FifoRun {
+    pub items: u64,
+    pub wall_seconds: f64,
+    pub items_per_sec: f64,
+    /// Fraction of writer cycles stalled on a (lagged-)full view.
+    pub writer_stall_frac: f64,
+}
+
+impl CdcFifo {
+    pub fn new(depth: usize, wr_hz: f64, rd_hz: f64) -> Self {
+        assert!(depth >= 2, "FIFO depth must be >= 2");
+        CdcFifo { depth, wr_hz, rd_hz, sync_stages: 2 }
+    }
+
+    /// Ideal sustained rate: the slower domain's clock.
+    pub fn ideal_rate(&self) -> f64 {
+        self.wr_hz.min(self.rd_hz)
+    }
+
+    /// Minimum depth for full-rate streaming: the round-trip pointer lag
+    /// (sync stages in each direction, in the slower domain's cycles,
+    /// scaled to the faster side) plus one slot of margin.
+    pub fn min_full_rate_depth(&self) -> usize {
+        let ratio = (self.wr_hz / self.rd_hz).max(self.rd_hz / self.wr_hz);
+        (2.0 * self.sync_stages as f64 * ratio).ceil() as usize + 1
+    }
+
+    /// Functional simulation of `items` transfers (event-driven over the
+    /// two clock grids).
+    pub fn simulate(&self, items: u64) -> FifoRun {
+        let wr_period = 1.0 / self.wr_hz;
+        let rd_period = 1.0 / self.rd_hz;
+        let lag_wr = self.sync_stages as f64 * wr_period; // rd-ptr view lag at writer
+        let lag_rd = self.sync_stages as f64 * rd_period; // wr-ptr view lag at reader
+
+        // Timestamps of completed writes/reads.
+        let mut write_times: Vec<f64> = Vec::with_capacity(items as usize);
+        let mut read_times: Vec<f64> = Vec::with_capacity(items as usize);
+        let mut t_wr = 0.0f64;
+        let mut t_rd = 0.0f64;
+        let mut written = 0u64;
+        let mut read = 0u64;
+        let mut stalls = 0u64;
+        let mut wr_cycles = 0u64;
+        // Monotone cursors over the timestamp lists (visibility horizons
+        // only move forward, so each list is scanned once overall).
+        let mut vis_reads = 0usize;
+        let mut vis_writes = 0usize;
+
+        while read < items {
+            // Advance whichever domain acts next.
+            if written < items && t_wr <= t_rd {
+                wr_cycles += 1;
+                // Writer sees reads completed before t_wr - lag_wr.
+                while vis_reads < read_times.len()
+                    && read_times[vis_reads] <= t_wr - lag_wr
+                {
+                    vis_reads += 1;
+                }
+                if written - (vis_reads as u64) < self.depth as u64 {
+                    write_times.push(t_wr);
+                    written += 1;
+                } else {
+                    stalls += 1;
+                }
+                t_wr += wr_period;
+            } else {
+                // Reader sees writes completed before t_rd - lag_rd.
+                while vis_writes < write_times.len()
+                    && write_times[vis_writes] <= t_rd - lag_rd
+                {
+                    vis_writes += 1;
+                }
+                if read < vis_writes as u64 {
+                    read_times.push(t_rd);
+                    read += 1;
+                }
+                t_rd += rd_period;
+            }
+        }
+        let wall = read_times.last().copied().unwrap_or(0.0).max(1e-12);
+        FifoRun {
+            items,
+            wall_seconds: wall,
+            items_per_sec: items as f64 / wall,
+            writer_stall_frac: stalls as f64 / wr_cycles.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deep_fifo_reaches_slower_clock_rate() {
+        // GAE (300 MHz) -> DNN (285 MHz) crossing with ample depth.
+        let f = CdcFifo::new(32, 300e6, 285e6);
+        let run = f.simulate(20_000);
+        assert!(
+            run.items_per_sec > 0.97 * f.ideal_rate(),
+            "rate {:.3e} vs ideal {:.3e}",
+            run.items_per_sec,
+            f.ideal_rate()
+        );
+    }
+
+    #[test]
+    fn shallow_fifo_throttles() {
+        // Depth 2 cannot hide a 2-stage round-trip lag.
+        let deep = CdcFifo::new(32, 300e6, 300e6).simulate(10_000);
+        let shallow = CdcFifo::new(2, 300e6, 300e6).simulate(10_000);
+        assert!(
+            shallow.items_per_sec < 0.7 * deep.items_per_sec,
+            "shallow {:.3e} vs deep {:.3e}",
+            shallow.items_per_sec,
+            deep.items_per_sec
+        );
+        assert!(shallow.writer_stall_frac > 0.2);
+    }
+
+    #[test]
+    fn min_depth_bound_is_sufficient() {
+        for (wr, rd) in [(300e6, 285e6), (285e6, 300e6), (300e6, 100e6)] {
+            let f0 = CdcFifo::new(2, wr, rd);
+            let depth = f0.min_full_rate_depth();
+            let f = CdcFifo::new(depth.max(2), wr, rd);
+            let run = f.simulate(20_000);
+            assert!(
+                run.items_per_sec > 0.95 * f.ideal_rate(),
+                "wr={wr:.0} rd={rd:.0} depth={depth}: {:.3e} vs {:.3e}",
+                run.items_per_sec,
+                f.ideal_rate()
+            );
+        }
+    }
+
+    #[test]
+    fn asymmetric_clocks_bound_by_slower() {
+        let f = CdcFifo::new(64, 300e6, 100e6);
+        let run = f.simulate(10_000);
+        assert!(run.items_per_sec <= 100e6 * 1.01);
+        assert!(run.items_per_sec > 95e6);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth must be >= 2")]
+    fn depth_one_rejected() {
+        CdcFifo::new(1, 1e6, 1e6);
+    }
+}

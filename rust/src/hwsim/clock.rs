@@ -1,0 +1,91 @@
+//! Clock domains + clock-domain-crossing model (paper §V-D).
+//!
+//! The SoC runs each subsystem at its own best frequency — the adapted
+//! DNN systolic array at 285 MHz (Meng et al. 2020), the GAE array at
+//! 300 MHz, the ARM PS at its own clock. "Data synchronization is not
+//! required because all subsystems operate sequentially and communicate
+//! through BRAMs. However, control signals across domains … still need
+//! to be synchronized" — a 2-flop synchronizer per crossing.
+
+use std::time::Duration;
+
+/// One clock domain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockDomain {
+    pub name: &'static str,
+    pub hz: f64,
+}
+
+impl ClockDomain {
+    pub const fn new(name: &'static str, hz: f64) -> Self {
+        ClockDomain { name, hz }
+    }
+
+    /// Wall time of `cycles` in this domain.
+    pub fn time(&self, cycles: u64) -> Duration {
+        Duration::from_secs_f64(cycles as f64 / self.hz)
+    }
+
+    /// Cycles elapsed in `d` wall time (ceiling).
+    pub fn cycles_in(&self, d: Duration) -> u64 {
+        (d.as_secs_f64() * self.hz).ceil() as u64
+    }
+}
+
+/// The paper's three domains.
+pub const PS_CLOCK: ClockDomain = ClockDomain::new("ps_arm", 1.2e9);
+pub const DNN_CLOCK: ClockDomain = ClockDomain::new("dnn_systolic", 285e6);
+pub const GAE_CLOCK: ClockDomain = ClockDomain::new("gae_array", 300e6);
+
+/// A control-signal crossing between two domains (2-flop synchronizer in
+/// the destination domain + 1 source launch edge).
+#[derive(Debug, Clone, Copy)]
+pub struct Crossing {
+    pub from: ClockDomain,
+    pub to: ClockDomain,
+}
+
+impl Crossing {
+    /// Worst-case latency for one control pulse.
+    pub fn latency(&self) -> Duration {
+        let launch = 1.0 / self.from.hz;
+        let sync = 2.0 / self.to.hz;
+        Duration::from_secs_f64(launch + sync)
+    }
+}
+
+/// Total handshake overhead of one PS→PL "initiate" + PL→PS "done"
+/// round trip (paper §III-A data-flow step 1–2).
+pub fn handshake_overhead() -> Duration {
+    let start = Crossing { from: PS_CLOCK, to: GAE_CLOCK }.latency();
+    let done = Crossing { from: GAE_CLOCK, to: PS_CLOCK }.latency();
+    start + done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_time_roundtrip() {
+        let d = GAE_CLOCK.time(300_000_000);
+        assert!((d.as_secs_f64() - 1.0).abs() < 1e-9);
+        assert_eq!(GAE_CLOCK.cycles_in(Duration::from_secs(1)), 300_000_000);
+    }
+
+    #[test]
+    fn crossing_latency_is_nanoseconds() {
+        let c = Crossing { from: PS_CLOCK, to: GAE_CLOCK };
+        let l = c.latency().as_secs_f64();
+        // 1/1.2e9 + 2/300e6 ≈ 7.5 ns (Duration quantizes to whole ns).
+        assert!((l - 7.5e-9).abs() <= 1e-9, "{l}");
+    }
+
+    #[test]
+    fn handshake_is_negligible_vs_gae_pass() {
+        // The §III-A claim that the handshake is cheap: a full 64×1024
+        // GAE pass is ~1024 cycles ≈ 3.4 µs; the handshake is < 1% of it.
+        let pass = GAE_CLOCK.time(1024);
+        assert!(handshake_overhead().as_secs_f64() < 0.01 * pass.as_secs_f64());
+    }
+}

@@ -1,0 +1,97 @@
+//! Crossbar + BRAM port contention model (paper Fig. 5: "a crossbar
+//! network ensures robust connections between ReLs, VaLs, and PEs to the
+//! BRAM stack memory").
+//!
+//! Each active row demands 4 byte-lanes per cycle of stack traffic
+//! (read R, read V, write Adv, write RTG — in-place via the second
+//! port). The BRAM stack provides `blocks × 2 ports × 4 B`. When demand
+//! exceeds supply the crossbar arbitrates round-robin and rows stall;
+//! we model the steady-state slowdown factor exactly as
+//! `min(1, supply/demand)` (round-robin is work-conserving and fair, so
+//! the fluid limit is tight for the streaming access pattern).
+
+use crate::memory::BramSpec;
+
+/// Crossbar + stack configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossbarConfig {
+    pub bram: BramSpec,
+    /// BRAM blocks allocated to the stack.
+    pub blocks: usize,
+    /// Bytes per element as stored (1 for 8-bit codewords, 4 for f32).
+    pub elem_bytes: usize,
+}
+
+impl CrossbarConfig {
+    /// Paper configuration: 32 blocks, 8-bit elements.
+    pub fn paper_default() -> Self {
+        CrossbarConfig { bram: BramSpec::default(), blocks: 32, elem_bytes: 1 }
+    }
+
+    /// Bytes/cycle demanded by `rows` active rows (2 reads + 2 writes).
+    pub fn demand_bytes_per_cycle(&self, rows: usize) -> usize {
+        rows * 4 * self.elem_bytes
+    }
+
+    /// Bytes/cycle the stack can supply.
+    pub fn supply_bytes_per_cycle(&self) -> usize {
+        self.bram.peak_bandwidth(self.blocks)
+    }
+
+    /// Steady-state throughput factor for `rows` concurrently active
+    /// rows (1.0 = no contention).
+    pub fn throughput_factor(&self, rows: usize) -> f64 {
+        if rows == 0 {
+            return 1.0;
+        }
+        let demand = self.demand_bytes_per_cycle(rows) as f64;
+        let supply = self.supply_bytes_per_cycle() as f64;
+        (supply / demand).min(1.0)
+    }
+
+    /// Largest row count that streams without stalling.
+    pub fn max_unstalled_rows(&self) -> usize {
+        self.supply_bytes_per_cycle() / (4 * self.elem_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_feeds_64_rows() {
+        // 32 blocks × 2 ports × 4 B = 256 B/cycle; 64 rows × 4 × 1 B =
+        // 256 B/cycle — exactly balanced, no stall (§V-D-2).
+        let cfg = CrossbarConfig::paper_default();
+        assert_eq!(cfg.supply_bytes_per_cycle(), 256);
+        assert_eq!(cfg.demand_bytes_per_cycle(64), 256);
+        assert_eq!(cfg.throughput_factor(64), 1.0);
+        assert_eq!(cfg.max_unstalled_rows(), 64);
+    }
+
+    #[test]
+    fn f32_elements_quadruple_demand() {
+        let cfg = CrossbarConfig {
+            bram: BramSpec::default(),
+            blocks: 32,
+            elem_bytes: 4,
+        };
+        // Only 16 rows stream stall-free without quantization — the
+        // §IV-A argument, on-chip edition.
+        assert_eq!(cfg.max_unstalled_rows(), 16);
+        assert!((cfg.throughput_factor(64) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversubscription_scales_inverse_linearly() {
+        let cfg = CrossbarConfig::paper_default();
+        assert!((cfg.throughput_factor(128) - 0.5).abs() < 1e-9);
+        assert!((cfg.throughput_factor(256) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rows_no_contention() {
+        assert_eq!(CrossbarConfig::paper_default().throughput_factor(0), 1.0);
+    }
+}

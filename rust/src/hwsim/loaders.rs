@@ -1,0 +1,94 @@
+//! Rewards Loader (ReL) and Values Loader (VaL) models (paper Fig. 5).
+//!
+//! Each row's front-end: the ReL pops `R_i` from BRAM₀, forwards
+//! `(R_i, i, done)` to the VaL, which fetches the matching `V_i` from
+//! BRAM₁ and forwards the pair to the PE. Both are single-cycle
+//! pipeline stages; with dual-port BRAM serving one element per port per
+//! cycle they sustain one (R, V) pair per cycle per row, plus an
+//! optional de-quantization stage when the stack stores 8-bit codewords
+//! (paper §III-A "performs de-quantization").
+
+use crate::quant::UniformQuantizer;
+
+/// Loader pipeline configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoaderConfig {
+    /// Stack stores n-bit codewords (None = raw f32, no dequant stage).
+    pub quant_bits: Option<u8>,
+}
+
+impl LoaderConfig {
+    /// Pipeline stages contributed to the row front-end:
+    /// ReL (1) + VaL (1) + dequant (1 if quantized) + skew register (1).
+    pub fn latency_cycles(&self) -> usize {
+        2 + usize::from(self.quant_bits.is_some()) + 1
+    }
+
+    /// Functional model: decode one stored element to the f32 the PE
+    /// consumes.
+    pub fn decode(&self, stored: StoredElem) -> f32 {
+        match (self.quant_bits, stored) {
+            (None, StoredElem::F32(x)) => x,
+            (Some(bits), StoredElem::Code(c)) => {
+                UniformQuantizer::new(bits).dequantize(c)
+            }
+            (None, StoredElem::Code(_)) => panic!("raw loader got a codeword"),
+            (Some(_), StoredElem::F32(_)) => panic!("quant loader got raw f32"),
+        }
+    }
+
+    /// Encode for storage (used by the push path of the stack).
+    pub fn encode(&self, x: f32) -> StoredElem {
+        match self.quant_bits {
+            None => StoredElem::F32(x),
+            Some(bits) => StoredElem::Code(UniformQuantizer::new(bits).quantize(x)),
+        }
+    }
+
+    /// Stored bits per element.
+    pub fn elem_bits(&self) -> usize {
+        self.quant_bits.map(|b| b as usize).unwrap_or(32)
+    }
+}
+
+/// An element as held in the BRAM stack.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StoredElem {
+    F32(f32),
+    Code(u16),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_accounts_for_dequant() {
+        assert_eq!(LoaderConfig { quant_bits: None }.latency_cycles(), 3);
+        assert_eq!(LoaderConfig { quant_bits: Some(8) }.latency_cycles(), 4);
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let lc = LoaderConfig { quant_bits: None };
+        assert_eq!(lc.decode(lc.encode(1.25)), 1.25);
+        assert_eq!(lc.elem_bits(), 32);
+    }
+
+    #[test]
+    fn quantized_roundtrip_error_bounded() {
+        let lc = LoaderConfig { quant_bits: Some(8) };
+        let q = UniformQuantizer::new(8);
+        for &x in &[-4.9f32, -1.0, 0.0, 0.37, 4.9] {
+            let y = lc.decode(lc.encode(x));
+            assert!((y - x).abs() <= q.max_in_range_error() + 1e-6);
+        }
+        assert_eq!(lc.elem_bits(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "raw loader got a codeword")]
+    fn type_confusion_is_caught() {
+        LoaderConfig { quant_bits: None }.decode(StoredElem::Code(7));
+    }
+}

@@ -1,0 +1,30 @@
+//! Cycle-level simulator of the HEPPO-GAE microarchitecture (paper §III)
+//! — the substitution for the Zynq ZCU106 FPGA fabric we do not have
+//! (DESIGN.md §2).
+//!
+//! The simulated design matches Fig. 5: `N` independent rows, each a
+//! Rewards Loader (ReL) → Values Loader (VaL) → Processing Element (PE)
+//! pipeline, fed from dual-port BRAM stack memory through a crossbar,
+//! processing distinct trajectories assigned round-robin. Cycle counts
+//! come from an explicit dependence model of the PE's feedback loop
+//! (bubbles for k < multiplier latency, bubble-free otherwise — Fig. 4),
+//! and device numbers from an analytic resource/fmax model calibrated to
+//! the paper's Table IV / Fig. 11.
+//!
+//! Every simulation also *computes the real GAE numerics*, cross-checked
+//! in tests against [`crate::gae::reference`] — the simulator is an
+//! executable spec, not a stopwatch.
+
+pub mod cdc_fifo;
+pub mod clock;
+pub mod crossbar;
+pub mod dnn_array;
+pub mod loaders;
+pub mod pe;
+pub mod resources;
+pub mod sim;
+
+pub use dnn_array::DnnArraySpec;
+pub use pe::{PeConfig, PeRun};
+pub use resources::{DeviceSpec, PeResources, ResourceModel};
+pub use sim::{GaeHwSim, SimConfig, SimReport};

@@ -1,0 +1,204 @@
+//! Cycle-level Processing Element model (paper §III-B, Fig. 4).
+//!
+//! The PE datapath splits into:
+//!
+//! - a **feed-forward** part — compute δ_t = r_t + γ·V(s_{t+1}) − V(s_t)
+//!   and the k-term weighted δ-sum — which pipelines arbitrarily; and
+//! - the **feedback loop** — Â_t = C^k·Â_{t+k} + (δ-sum) — whose
+//!   multiplier result must return to its own input after k issue slots.
+//!
+//! With a DSP multiplier of latency `mul_latency` cycles, element t can
+//! only issue `max(mul_latency − k, 0)` cycles after the naïve 1/cycle
+//! schedule — those are the Fig. 4 *bubbles*. k ≥ mul_latency makes the
+//! loop bubble-free and the PE streams one element per cycle.
+//!
+//! The model issues elements in reverse time order (FILO pops) and
+//! tracks per-element ready times explicitly; it also computes the real
+//! advantage/RTG numerics via the same k-step decomposition the RTL
+//! evaluates, cross-checked against [`crate::gae::reference`].
+
+use crate::gae::lookahead::gae_lookahead_no_dones;
+use crate::gae::{GaeOutput, GaeParams};
+
+/// PE configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeConfig {
+    /// Lookahead depth k (≥ 1).
+    pub lookahead: usize,
+    /// Pipelined multiplier latency, cycles (DSP48 f32 MAC ≈ 3).
+    pub mul_latency: usize,
+    /// Front-end (ReL → VaL → δ) pipeline depth, cycles.
+    pub frontend_latency: usize,
+}
+
+impl Default for PeConfig {
+    /// The paper's operating point: 2-step lookahead. (With this
+    /// mul_latency=2 model, k=2 is exactly bubble-free — "the 2-step
+    /// lookahead transformation is satisfactory … to operate at the
+    /// highest frequency", §III-B.)
+    fn default() -> Self {
+        PeConfig { lookahead: 2, mul_latency: 2, frontend_latency: 4 }
+    }
+}
+
+/// Result of running one trajectory vector through the PE.
+#[derive(Debug, Clone)]
+pub struct PeRun {
+    /// Total cycles from first fetch to last writeback.
+    pub cycles: u64,
+    /// Stall cycles injected by the feedback loop (Fig. 4 bubbles).
+    pub bubbles: u64,
+    /// Elements processed.
+    pub elements: usize,
+    /// The computed numerics.
+    pub output: GaeOutput,
+}
+
+impl PeRun {
+    /// Sustained throughput in elements/cycle.
+    pub fn elements_per_cycle(&self) -> f64 {
+        self.elements as f64 / self.cycles as f64
+    }
+}
+
+/// Per-element bubble count for a config: the feedback loop forces
+/// `max(mul_latency - lookahead, 0)` dead cycles between issues.
+pub fn bubbles_per_element(cfg: &PeConfig) -> u64 {
+    cfg.mul_latency.saturating_sub(cfg.lookahead) as u64
+}
+
+/// Run one trajectory (rewards `T`, values `T+1`, no mid-vector
+/// terminals — the coordinator splits at episode boundaries before
+/// dispatch) through the PE.
+pub fn run_pe(cfg: &PeConfig, params: &GaeParams, rewards: &[f32], values: &[f32]) -> PeRun {
+    assert!(cfg.lookahead >= 1);
+    let t_len = rewards.len();
+    if t_len == 0 {
+        return PeRun {
+            cycles: 0,
+            bubbles: 0,
+            elements: 0,
+            output: GaeOutput { advantages: vec![], rewards_to_go: vec![] },
+        };
+    }
+
+    // --- timing: explicit issue/ready schedule over reverse order ---
+    // issue[j] = cycle the j-th processed element (t = T-1-j) enters the
+    // feedback stage; its result is ready at issue[j] + mul_latency.
+    // Element j needs the result of element j - k (its Â_{t+k}); with
+    // one issue slot per cycle:
+    //   issue[j] = max(issue[j-1] + 1, issue[j-k] + mul_latency)
+    let k = cfg.lookahead;
+    let lat = cfg.mul_latency as u64;
+    let mut issue = vec![0u64; t_len];
+    let mut bubbles = 0u64;
+    for j in 1..t_len {
+        let serial = issue[j - 1] + 1;
+        let dep = if j >= k { issue[j - k] + lat } else { 0 };
+        issue[j] = serial.max(dep);
+        bubbles += issue[j] - serial;
+    }
+    let last_ready = issue[t_len - 1] + lat;
+    let cycles = cfg.frontend_latency as u64 + last_ready + 1; // +1 writeback
+
+    // --- numerics: the k-step decomposition the RTL evaluates ---
+    let output = gae_lookahead_no_dones(params, rewards, values, k);
+
+    PeRun { cycles, bubbles, elements: t_len, output }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::reference::gae_trajectory;
+    use crate::gae::Trajectory;
+    use crate::testing::check;
+
+    #[test]
+    fn bubble_free_at_k_ge_latency() {
+        // Fig. 4(b): k >= multiplier latency ⇒ 1 element/cycle.
+        let cfg = PeConfig { lookahead: 2, mul_latency: 2, frontend_latency: 4 };
+        let params = GaeParams::default();
+        let r = vec![1.0f32; 1024];
+        let v = vec![0.5f32; 1025];
+        let run = run_pe(&cfg, &params, &r, &v);
+        assert_eq!(run.bubbles, 0);
+        // cycles = frontend + (T-1 issues) + latency + writeback
+        assert_eq!(run.cycles, 4 + 1023 + 2 + 1);
+        assert!(run.elements_per_cycle() > 0.99);
+    }
+
+    #[test]
+    fn k1_injects_bubbles() {
+        // Fig. 4(a): pipelining the loop at k=1 stalls every element.
+        let cfg = PeConfig { lookahead: 1, mul_latency: 3, frontend_latency: 4 };
+        let params = GaeParams::default();
+        let r = vec![1.0f32; 512];
+        let v = vec![0.0f32; 513];
+        let run = run_pe(&cfg, &params, &r, &v);
+        assert_eq!(run.bubbles, (512 - 1) * 2); // (lat-k)=2 per element
+        assert!(run.elements_per_cycle() < 0.34);
+    }
+
+    #[test]
+    fn throughput_monotone_in_k() {
+        let params = GaeParams::default();
+        let r = vec![0.5f32; 2048];
+        let v = vec![0.1f32; 2049];
+        let mut last = 0.0;
+        for k in 1..=4 {
+            let cfg = PeConfig { lookahead: k, mul_latency: 3, frontend_latency: 4 };
+            let run = run_pe(&cfg, &params, &r, &v);
+            assert!(
+                run.elements_per_cycle() >= last,
+                "k={k}: {} < {last}",
+                run.elements_per_cycle()
+            );
+            last = run.elements_per_cycle();
+        }
+        assert!(last > 0.99, "k=4 must be bubble-free");
+    }
+
+    #[test]
+    fn numerics_match_reference() {
+        check("PE numerics == scalar reference", 30, |g| {
+            let t_len = g.usize_in(1, 200);
+            let k = g.usize_in(1, 4);
+            let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+            let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+            let cfg = PeConfig { lookahead: k, mul_latency: 3, frontend_latency: 4 };
+            let params = GaeParams::default();
+            let run = run_pe(&cfg, &params, &rewards, &values);
+            let want = gae_trajectory(
+                &params,
+                &Trajectory::without_dones(rewards.clone(), values.clone()),
+            );
+            for t in 0..t_len {
+                assert!(
+                    (run.output.advantages[t] - want.advantages[t]).abs() < 1e-3,
+                    "t={t}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn paper_throughput_claim_300m_per_sec() {
+        // §V-D-1: one PE at 300 MHz handles 300 M elements/s — i.e. the
+        // sustained rate is 1 element/cycle for long vectors.
+        let cfg = PeConfig::default();
+        let params = GaeParams::default();
+        let r = vec![0.0f32; 100_000];
+        let v = vec![0.0f32; 100_001];
+        let run = run_pe(&cfg, &params, &r, &v);
+        let eps = run.elements_per_cycle() * 300e6;
+        assert!(eps > 299e6, "elements/s at 300 MHz = {eps}");
+    }
+
+    #[test]
+    fn empty_vector() {
+        let run = run_pe(&PeConfig::default(), &GaeParams::default(), &[], &[0.0]);
+        assert_eq!(run.cycles, 0);
+        assert_eq!(run.elements, 0);
+    }
+}

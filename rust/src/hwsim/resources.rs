@@ -1,0 +1,173 @@
+//! Analytic resource + fmax model, calibrated to paper Table IV and
+//! Fig. 11.
+//!
+//! Fig. 11 shows per-PE LUT/FF/DSP usage growing **quadratically** with
+//! the lookahead depth n (each extra lookahead step widens the
+//! feed-forward δ-combination tree *and* deepens the pipelined
+//! multiplier). Table IV pins the absolute numbers at n=2 for 64 PEs:
+//! 12864 LUTs, 54336 FFs, 768 DSPs (201/849/12 per PE). We fit
+//! `r(n) = a·n² + b·n + c` through those points with coefficient ratios
+//! chosen to keep r(1) and r(3) consistent with Fig. 11's visual trend.
+//!
+//! fmax: the paper reports that n > 1 removes the feedback-loop critical
+//! path and lets the design close timing at 300 MHz; n = 1 leaves the
+//! combinational multiply-accumulate in the loop (we model 150 MHz, the
+//! typical unpipelined DSP48 f32 MAC speed).
+//!
+//! **Paper erratum noted:** Table IV lists DSP utilization 30.48% while
+//! the §V-D-1 text says "the most significant utilization being DSPs at
+//! 17.7%". We reproduce the table's arithmetic (768/2520 = 30.48%).
+
+/// Per-PE resource usage at a given lookahead depth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeResources {
+    pub luts: usize,
+    pub ffs: usize,
+    pub dsps: usize,
+}
+
+/// FPGA device capacity (defaults: ZCU106 / XCZU7EV, Table IV column
+/// "Available").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    pub luts: usize,
+    pub ffs: usize,
+    pub dsps: usize,
+    pub bram36: usize,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec { luts: 274_080, ffs: 548_160, dsps: 2_520, bram36: 312 }
+    }
+}
+
+/// The calibrated quadratic model.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceModel {
+    pub device: DeviceSpec,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        ResourceModel { device: DeviceSpec::default() }
+    }
+}
+
+impl ResourceModel {
+    /// Per-PE resources at lookahead depth `k` (k >= 1).
+    ///
+    /// Quadratics fit so that k=2 reproduces Table IV exactly:
+    ///   luts(k) = 35k² + 20k + 21   → luts(2) = 201
+    ///   ffs(k)  = 150k² + 80k + 89  → ffs(2)  = 849
+    ///   dsps(k) = 2k² + k + 2       → dsps(2) = 12
+    pub fn per_pe(&self, k: usize) -> PeResources {
+        assert!(k >= 1, "lookahead must be >= 1");
+        PeResources {
+            luts: 35 * k * k + 20 * k + 21,
+            ffs: 150 * k * k + 80 * k + 89,
+            dsps: 2 * k * k + k + 2,
+        }
+    }
+
+    /// Totals for `n_pes` PEs.
+    pub fn total(&self, k: usize, n_pes: usize) -> PeResources {
+        let p = self.per_pe(k);
+        PeResources {
+            luts: p.luts * n_pes,
+            ffs: p.ffs * n_pes,
+            dsps: p.dsps * n_pes,
+        }
+    }
+
+    /// Device utilization fractions `(lut, ff, dsp)` for a config.
+    pub fn utilization(&self, k: usize, n_pes: usize) -> (f64, f64, f64) {
+        let t = self.total(k, n_pes);
+        (
+            t.luts as f64 / self.device.luts as f64,
+            t.ffs as f64 / self.device.ffs as f64,
+            t.dsps as f64 / self.device.dsps as f64,
+        )
+    }
+
+    /// Does the configuration fit the device?
+    pub fn fits(&self, k: usize, n_pes: usize) -> bool {
+        let t = self.total(k, n_pes);
+        t.luts <= self.device.luts && t.ffs <= self.device.ffs && t.dsps <= self.device.dsps
+    }
+
+    /// Largest PE count that fits at lookahead `k` (DSPs bind first).
+    pub fn max_pes(&self, k: usize) -> usize {
+        let p = self.per_pe(k);
+        (self.device.luts / p.luts)
+            .min(self.device.ffs / p.ffs)
+            .min(self.device.dsps / p.dsps)
+    }
+
+    /// Achievable clock, Hz: k=1 leaves the MAC feedback combinational
+    /// (≈150 MHz); k>=2 closes at the design target 300 MHz.
+    pub fn fmax_hz(&self, k: usize) -> f64 {
+        if k >= 2 {
+            300e6
+        } else {
+            150e6
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_exact_at_k2_64pes() {
+        let m = ResourceModel::default();
+        let t = m.total(2, 64);
+        assert_eq!(t.luts, 12_864);
+        assert_eq!(t.ffs, 54_336);
+        assert_eq!(t.dsps, 768);
+        let (ul, uf, ud) = m.utilization(2, 64);
+        assert!((ul - 0.0469).abs() < 5e-4, "lut util {ul}");
+        assert!((uf - 0.0991).abs() < 5e-4, "ff util {uf}");
+        assert!((ud - 0.3048).abs() < 5e-4, "dsp util {ud}");
+    }
+
+    #[test]
+    fn growth_is_quadratic() {
+        // Fig. 11: second difference of r(k) is constant and positive.
+        let m = ResourceModel::default();
+        let l: Vec<isize> = (1..=5).map(|k| m.per_pe(k).luts as isize).collect();
+        let d2: Vec<isize> = (0..3).map(|i| l[i + 2] - 2 * l[i + 1] + l[i]).collect();
+        assert!(d2.iter().all(|&x| x == d2[0] && x > 0), "{d2:?}");
+    }
+
+    #[test]
+    fn fmax_transitions_at_k2() {
+        let m = ResourceModel::default();
+        assert_eq!(m.fmax_hz(1), 150e6);
+        assert_eq!(m.fmax_hz(2), 300e6);
+        assert_eq!(m.fmax_hz(4), 300e6);
+    }
+
+    #[test]
+    fn device_comfortably_fits_64_pes() {
+        // §V-D-1: "the ZCU106 can comfortably accommodate our design".
+        let m = ResourceModel::default();
+        assert!(m.fits(2, 64));
+        assert!(m.max_pes(2) >= 64 * 3, "max_pes = {}", m.max_pes(2));
+    }
+
+    #[test]
+    fn dsps_bind_first() {
+        let m = ResourceModel::default();
+        let p = m.per_pe(2);
+        let by_dsp = m.device.dsps / p.dsps;
+        assert_eq!(m.max_pes(2), by_dsp);
+    }
+
+    #[test]
+    #[should_panic(expected = "lookahead must be >= 1")]
+    fn k0_rejected() {
+        ResourceModel::default().per_pe(0);
+    }
+}

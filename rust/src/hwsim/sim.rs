@@ -1,0 +1,279 @@
+//! Top-level HEPPO-GAE simulation: N rows, round-robin trajectory
+//! assignment, crossbar contention, cycle accounting, and full numerics.
+//!
+//! "Rows in the systolic array run concurrently and independently, each
+//! processing distinct vectors from different agents assigned by a
+//! round-robin fashion. When one row finishes, it gets a new set of
+//! vectors." (§III-C)
+
+use super::crossbar::CrossbarConfig;
+use super::loaders::LoaderConfig;
+use super::pe::{run_pe, PeConfig};
+use super::resources::ResourceModel;
+use crate::gae::{GaeOutput, GaeParams, Trajectory};
+use std::time::Duration;
+
+/// Full simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Number of rows (ReL+VaL+PE) — the paper's 64.
+    pub rows: usize,
+    pub pe: PeConfig,
+    pub loaders: LoaderConfig,
+    pub crossbar: CrossbarConfig,
+    pub gae: GaeParams,
+}
+
+impl SimConfig {
+    /// The paper's operating point: 64 rows, 2-step lookahead, 8-bit
+    /// quantized stack, 32 BRAM blocks.
+    pub fn paper_default() -> Self {
+        SimConfig {
+            rows: 64,
+            pe: PeConfig::default(),
+            loaders: LoaderConfig { quant_bits: Some(8) },
+            crossbar: CrossbarConfig::paper_default(),
+            gae: GaeParams::default(),
+        }
+    }
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total cycles until the last row drains.
+    pub cycles: u64,
+    /// Total elements processed.
+    pub elements: usize,
+    /// Feedback-loop bubbles summed over rows.
+    pub bubbles: u64,
+    /// Crossbar throughput factor applied (1.0 = no contention).
+    pub crossbar_factor: f64,
+    /// Mean row occupancy (busy cycles / total cycles).
+    pub row_utilization: f64,
+    /// Per-trajectory numerics, input order.
+    pub outputs: Vec<GaeOutput>,
+    /// Clock this design closes at (from the resource model).
+    pub clock_hz: f64,
+}
+
+impl SimReport {
+    pub fn elements_per_cycle(&self) -> f64 {
+        self.elements as f64 / self.cycles.max(1) as f64
+    }
+
+    /// Projected wall time on the FPGA.
+    pub fn wall_time(&self) -> Duration {
+        Duration::from_secs_f64(self.cycles as f64 / self.clock_hz)
+    }
+
+    /// Projected elements/second on the FPGA.
+    pub fn elements_per_sec(&self) -> f64 {
+        self.elements as f64 / self.wall_time().as_secs_f64().max(1e-12)
+    }
+}
+
+/// The simulator.
+#[derive(Debug, Clone, Copy)]
+pub struct GaeHwSim {
+    pub config: SimConfig,
+    pub resources: ResourceModel,
+}
+
+impl GaeHwSim {
+    pub fn new(config: SimConfig) -> Self {
+        GaeHwSim { config, resources: ResourceModel::default() }
+    }
+
+    pub fn paper_default() -> Self {
+        Self::new(SimConfig::paper_default())
+    }
+
+    /// Simulate one GAE phase over a set of trajectories (no mid-vector
+    /// terminals — the coordinator pre-splits episodes).
+    ///
+    /// Rows run a greedy round-robin queue: each row picks the next
+    /// unprocessed trajectory the moment it drains — exactly the paper's
+    /// "when one row finishes, it gets a new set of vectors".
+    pub fn simulate(&self, trajs: &[Trajectory]) -> SimReport {
+        let cfg = &self.config;
+        let rows = cfg.rows.max(1);
+        // Extend the PE front-end with the loader stages.
+        let pe_cfg = PeConfig {
+            frontend_latency: cfg.pe.frontend_latency + cfg.loaders.latency_cycles(),
+            ..cfg.pe
+        };
+
+        let mut outputs: Vec<Option<GaeOutput>> = vec![None; trajs.len()];
+        let mut row_free_at = vec![0u64; rows];
+        let mut row_busy = vec![0u64; rows];
+        let mut bubbles = 0u64;
+        let mut elements = 0usize;
+        let mut next = 0usize; // round-robin queue cursor
+
+        while next < trajs.len() {
+            // The earliest-free row takes the next trajectory.
+            let (row, &free_at) = row_free_at
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &t)| t)
+                .unwrap();
+            let traj = &trajs[next];
+            debug_assert!(
+                traj.dones.iter().take(traj.len().saturating_sub(1)).all(|&d| !d),
+                "hwsim rows take single-episode vectors; split at dones first"
+            );
+            // Zero the bootstrap if the vector ends in a terminal.
+            let mut values = traj.values.clone();
+            if traj.dones.last().copied().unwrap_or(false) {
+                values[traj.len()] = 0.0;
+            }
+            let run = run_pe(&pe_cfg, &cfg.gae, &traj.rewards, &values);
+            outputs[next] = Some(run.output);
+            bubbles += run.bubbles;
+            elements += run.elements;
+            row_busy[row] += run.cycles;
+            row_free_at[row] = free_at + run.cycles;
+            next += 1;
+        }
+
+        let ideal_cycles = *row_free_at.iter().max().unwrap_or(&0);
+        // Crossbar contention inflates the streaming phase uniformly.
+        let factor = cfg.crossbar.throughput_factor(rows.min(trajs.len()));
+        let cycles = (ideal_cycles as f64 / factor).ceil() as u64;
+        let busy: u64 = row_busy.iter().sum();
+        let row_utilization = if cycles == 0 {
+            0.0
+        } else {
+            busy as f64 / (cycles * rows as u64) as f64 * factor
+        };
+
+        SimReport {
+            cycles,
+            elements,
+            bubbles,
+            crossbar_factor: factor,
+            row_utilization,
+            outputs: outputs.into_iter().map(|o| o.unwrap()).collect(),
+            clock_hz: self.resources.fmax_hz(cfg.pe.lookahead),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::reference::gae_trajectory;
+    use crate::testing::{check, Gen};
+
+    fn equal_batch(t_len: usize, n: usize, g: &mut Gen) -> Vec<Trajectory> {
+        (0..n)
+            .map(|_| {
+                Trajectory::without_dones(
+                    g.vec_normal_f32(t_len, 0.0, 1.0),
+                    g.vec_normal_f32(t_len + 1, 0.0, 1.0),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paper_workload_64x1024() {
+        // §V-D: 64 trajectories × 1024 steps on 64 rows — every row gets
+        // exactly one vector; total cycles ≈ 1024 + pipeline fill; at
+        // 300 MHz the array sustains ~64 × 300M elements/s.
+        let mut g = Gen::new(1);
+        let trajs = equal_batch(1024, 64, &mut g);
+        let sim = GaeHwSim::paper_default();
+        let rep = sim.simulate(&trajs);
+        assert_eq!(rep.elements, 64 * 1024);
+        assert_eq!(rep.bubbles, 0, "k=2 must be bubble-free");
+        assert_eq!(rep.crossbar_factor, 1.0);
+        assert!(rep.cycles < 1024 + 32, "cycles = {}", rep.cycles);
+        let eps = rep.elements_per_sec();
+        assert!(
+            (eps / (64.0 * 300e6) - 1.0).abs() < 0.05,
+            "array elements/s = {eps:.3e}"
+        );
+        assert!(rep.row_utilization > 0.95);
+    }
+
+    #[test]
+    fn numerics_match_reference_always() {
+        check("hwsim numerics == reference", 20, |g| {
+            let n = g.usize_in(1, 40);
+            let trajs: Vec<Trajectory> = (0..n)
+                .map(|_| {
+                    let t_len = g.usize_in(1, 64);
+                    Trajectory::without_dones(
+                        g.vec_normal_f32(t_len, 0.0, 1.0),
+                        g.vec_normal_f32(t_len + 1, 0.0, 1.0),
+                    )
+                })
+                .collect();
+            let sim = GaeHwSim::paper_default();
+            let rep = sim.simulate(&trajs);
+            for (traj, out) in trajs.iter().zip(&rep.outputs) {
+                let want = gae_trajectory(&GaeParams::default(), traj);
+                for t in 0..traj.len() {
+                    assert!(
+                        (out.advantages[t] - want.advantages[t]).abs() < 1e-3
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn round_robin_balances_unequal_lengths() {
+        // Many short + few long vectors: rows that finish early must pick
+        // up the remaining queue (utilization stays high).
+        let mut g = Gen::new(3);
+        let mut trajs = Vec::new();
+        for i in 0..256 {
+            let t_len = if i % 16 == 0 { 512 } else { 64 };
+            trajs.push(Trajectory::without_dones(
+                g.vec_normal_f32(t_len, 0.0, 1.0),
+                g.vec_normal_f32(t_len + 1, 0.0, 1.0),
+            ));
+        }
+        let sim = GaeHwSim::new(SimConfig { rows: 16, ..SimConfig::paper_default() });
+        let rep = sim.simulate(&trajs);
+        assert!(rep.row_utilization > 0.8, "util = {}", rep.row_utilization);
+    }
+
+    #[test]
+    fn unquantized_stack_stalls_the_crossbar() {
+        // f32 elements quadruple stack traffic: 64 rows on 32 blocks run
+        // at 1/4 speed — the on-chip version of the §IV-A argument.
+        let mut g = Gen::new(4);
+        let trajs = equal_batch(256, 64, &mut g);
+        let mut cfg = SimConfig::paper_default();
+        cfg.loaders = LoaderConfig { quant_bits: None };
+        cfg.crossbar.elem_bytes = 4;
+        let rep = GaeHwSim::new(cfg).simulate(&trajs);
+        assert!((rep.crossbar_factor - 0.25).abs() < 1e-9);
+        let quant = GaeHwSim::paper_default().simulate(&trajs);
+        assert!(rep.cycles > 3 * quant.cycles);
+    }
+
+    #[test]
+    fn k1_design_is_slower_and_lower_clocked() {
+        let mut g = Gen::new(5);
+        let trajs = equal_batch(512, 64, &mut g);
+        let mut cfg = SimConfig::paper_default();
+        cfg.pe = PeConfig { lookahead: 1, mul_latency: 2, frontend_latency: 4 };
+        let k1 = GaeHwSim::new(cfg).simulate(&trajs);
+        let k2 = GaeHwSim::paper_default().simulate(&trajs);
+        assert!(k1.bubbles > 0);
+        assert_eq!(k1.clock_hz, 150e6);
+        assert!(k1.wall_time() > 2 * k2.wall_time());
+    }
+
+    #[test]
+    fn empty_workload() {
+        let rep = GaeHwSim::paper_default().simulate(&[]);
+        assert_eq!(rep.cycles, 0);
+        assert_eq!(rep.elements, 0);
+    }
+}

@@ -1,0 +1,48 @@
+//! # HEPPO-GAE
+//!
+//! A reproduction of *HEPPO-GAE: Hardware-Efficient Proximal Policy
+//! Optimization with Generalized Advantage Estimation* (Taha & Abdelhadi,
+//! CS.AR 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: PPO trainer, vectorized
+//!   environment engine, SoC phase machine, quantized FILO trajectory
+//!   memory, and a cycle-level simulator of the paper's FPGA
+//!   microarchitecture ([`hwsim`]).
+//! - **L2 (JAX, build-time)** — actor-critic forward + PPO-clip train
+//!   step, AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! - **L1 (Pallas, build-time)** — the GAE hot-spot as a k-step-lookahead
+//!   blocked-scan kernel, lowered inside the same artifacts.
+//!
+//! Python never runs on the training path: `make artifacts` runs once,
+//! after which the `heppo` binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | self-contained substrates: RNG, JSON, CSV, CLI, thread pool |
+//! | [`stats`] | Welford running statistics, rolling windows, histograms |
+//! | [`gae`] | GAE math: scalar reference, batched, k-step lookahead |
+//! | [`quant`] | dynamic/block standardization + n-bit uniform quantization |
+//! | [`memory`] | FILO BRAM stack layout, dual-port BRAM + DDR4 models |
+//! | [`hwsim`] | cycle-level HEPPO-GAE simulator + resource/fmax model |
+//! | [`envs`] | Rust-native RL environments + thread-pooled vector env |
+//! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
+//! | [`coordinator`] | the PPO training system (rollout, GAE stage, update) |
+//! | [`bench`] | micro-benchmark harness used by `cargo bench` targets |
+//! | [`testing`] | mini property-test harness used across the test suite |
+
+pub mod bench;
+pub mod coordinator;
+pub mod envs;
+pub mod gae;
+pub mod hwsim;
+pub mod memory;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,220 @@
+//! `heppo` — the HEPPO-GAE coordinator CLI.
+//!
+//! Subcommands:
+//!   train       run PPO training (see --env/--iters/--codec/--backend/…)
+//!   eval        greedy evaluation of trained parameters
+//!   gae-sim     cycle-simulate the accelerator on a synthetic workload
+//!   profile     per-phase time profile of a short training run (Table I)
+//!   resources   resource/fmax report for n-step lookahead PEs (Table IV)
+//!   info        manifest + platform summary
+
+use heppo::bench::format_si;
+use heppo::coordinator::{Trainer, TrainerConfig};
+use heppo::gae::Trajectory;
+use heppo::hwsim::{GaeHwSim, ResourceModel, SimConfig};
+use heppo::runtime::Runtime;
+use heppo::util::cli::Args;
+use heppo::util::csv::CsvTable;
+use heppo::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("gae-sim") => cmd_gae_sim(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("resources") => cmd_resources(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: heppo <train|eval|gae-sim|profile|resources|info> [--key value]...\n\
+                 examples:\n\
+                 \x20 heppo train --env cartpole --iters 100 --codec exp5 --backend hlo\n\
+                 \x20 heppo gae-sim --trajectories 64 --timesteps 1024 --rows 64 --lookahead 2\n\
+                 \x20 heppo profile --env humanoid_lite --iters 3\n\
+                 \x20 heppo resources --pes 64"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let config = TrainerConfig::from_args(args)?;
+    println!(
+        "training {} for {} iters (codec exp{}, {}-bit, backend {}, seed {})",
+        config.env,
+        config.iters,
+        config.codec.index(),
+        config.quant_bits,
+        config.backend.label(),
+        config.seed
+    );
+    let mut trainer = Trainer::new(config)?;
+    if let Some(path) = args.opt("load") {
+        trainer.load_checkpoint(path)?;
+        println!("resumed from {path}");
+    }
+    let stats = trainer.run()?;
+    if let Some(last) = stats.last() {
+        println!(
+            "done: {} steps, {} episodes, rolling return {:.2}",
+            last.steps, last.episodes, last.mean_return
+        );
+    }
+    if let Some(path) = args.opt("save") {
+        trainer.save_checkpoint(path)?;
+        println!("checkpoint saved to {path}");
+    }
+    if let Some(out) = args.opt("out") {
+        let mut t = CsvTable::new(&["iter", "steps", "mean_return", "pi_loss", "v_loss", "entropy"]);
+        for s in &stats {
+            t.row(&[
+                s.iter.to_string(),
+                s.steps.to_string(),
+                format!("{:.4}", s.mean_return),
+                format!("{:.6}", s.losses.pi_loss),
+                format!("{:.6}", s.losses.v_loss),
+                format!("{:.6}", s.losses.entropy),
+            ]);
+        }
+        t.save(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let mut config = TrainerConfig::from_args(args)?;
+    let episodes = args.get_or("episodes", 10usize);
+    let mut trainer;
+    if let Some(path) = args.opt("load") {
+        config.iters = 0;
+        trainer = Trainer::new(config)?;
+        trainer.load_checkpoint(path)?;
+        println!("loaded checkpoint {path}");
+    } else {
+        config.iters = args.get_or("iters", 20usize);
+        trainer = Trainer::new(config)?;
+        trainer.run()?;
+    }
+    let ret = trainer.evaluate(episodes)?;
+    println!("greedy eval over {episodes} episodes: mean return {ret:.2}");
+    Ok(())
+}
+
+fn cmd_gae_sim(args: &Args) -> anyhow::Result<()> {
+    let n_traj = args.get_or("trajectories", 64usize);
+    let t_len = args.get_or("timesteps", 1024usize);
+    let rows = args.get_or("rows", 64usize);
+    let lookahead = args.get_or("lookahead", 2usize);
+    let mut cfg = SimConfig::paper_default();
+    cfg.rows = rows;
+    cfg.pe.lookahead = lookahead;
+    let sim = GaeHwSim::new(cfg);
+
+    let mut rng = Rng::new(args.get_or("seed", 0u64));
+    let trajs: Vec<Trajectory> = (0..n_traj)
+        .map(|_| {
+            let mut r = vec![0.0f32; t_len];
+            let mut v = vec![0.0f32; t_len + 1];
+            rng.fill_normal_f32(&mut r);
+            rng.fill_normal_f32(&mut v);
+            Trajectory::without_dones(r, v)
+        })
+        .collect();
+    let rep = sim.simulate(&trajs);
+    println!(
+        "workload: {n_traj} trajectories x {t_len} steps = {} elements",
+        rep.elements
+    );
+    println!(
+        "rows {rows}, lookahead {lookahead} -> {} cycles @ {} MHz (bubbles {}, xbar {:.2}, util {:.1}%)",
+        rep.cycles,
+        rep.clock_hz / 1e6,
+        rep.bubbles,
+        rep.crossbar_factor,
+        rep.row_utilization * 100.0
+    );
+    println!(
+        "projected: {} elements/s, wall {:.2} us",
+        format_si(rep.elements_per_sec()),
+        rep.wall_time().as_secs_f64() * 1e6
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let mut config = TrainerConfig::from_args(args)?;
+    config.iters = args.get_or("iters", 3usize);
+    let label = format!("{} ({})", config.env, config.backend.label());
+    let mut trainer = Trainer::new(config)?;
+    trainer.run()?;
+    println!("{}", trainer.profiler.to_table(&label).to_markdown());
+    println!(
+        "GAE share of iteration time: {:.1}%  (paper Table I: ~30% CPU-GPU / ~15% CPU-only)",
+        trainer.profiler.gae_fraction() * 100.0
+    );
+    println!(
+        "PS<->PL handshakes: {} (total overhead {:?})",
+        trainer.phases.handshakes(),
+        trainer.phases.overhead()
+    );
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> anyhow::Result<()> {
+    let pes = args.get_or("pes", 64usize);
+    let model = ResourceModel::default();
+    let mut t = CsvTable::new(&[
+        "lookahead", "LUTs/PE", "FFs/PE", "DSPs/PE", "total LUTs", "total FFs",
+        "total DSPs", "LUT %", "FF %", "DSP %", "fmax MHz",
+    ]);
+    for k in 1..=4 {
+        let p = model.per_pe(k);
+        let tot = model.total(k, pes);
+        let (ul, uf, ud) = model.utilization(k, pes);
+        t.row(&[
+            k.to_string(),
+            p.luts.to_string(),
+            p.ffs.to_string(),
+            p.dsps.to_string(),
+            tot.luts.to_string(),
+            tot.ffs.to_string(),
+            tot.dsps.to_string(),
+            format!("{:.2}", ul * 100.0),
+            format!("{:.2}", uf * 100.0),
+            format!("{:.2}", ud * 100.0),
+            format!("{:.0}", model.fmax_hz(k) / 1e6),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("(paper Table IV at k=2, 64 PEs: 12864 LUTs / 54336 FFs / 768 DSPs)");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    let geo = rt.manifest.geometry;
+    println!(
+        "geometry: {} envs x {} steps, minibatch {}, gamma {}, lambda {}, {}-bit quant",
+        geo.num_envs, geo.rollout_t, geo.minibatch, geo.gamma, geo.lambda, geo.quant_bits
+    );
+    println!("artifacts:");
+    for (name, a) in &rt.manifest.artifacts {
+        println!(
+            "  {name:<28} {} in -> {} out{}",
+            a.inputs.len(),
+            a.outputs.len(),
+            if a.is_blob { "  (blob)" } else { "" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Dual-port Block RAM model (paper §IV, §V-D-2).
+//!
+//! Each BRAM36 primitive provides 36 Kb of storage and two independent
+//! ports of 4 bytes/cycle. The paper sizes the design for 64 trajectories
+//! × 1024 timesteps with in-place overwrite: 128 B/timestep → 128 KB
+//! total → ≈29 blocks for capacity, and 256 B/cycle of bandwidth →
+//! 57 ports → 32 blocks; both ≈9–10% of the ZCU106.
+
+/// A BRAM configuration (defaults = Xilinx BRAM36 on the ZCU106).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BramSpec {
+    /// Capacity of one block, bits (36 Kb for BRAM36).
+    pub block_bits: usize,
+    /// Bytes per port per cycle.
+    pub bytes_per_port_cycle: usize,
+    /// Ports per block (2 = dual-port).
+    pub ports_per_block: usize,
+    /// Blocks available on the device (ZCU106 / XCZU7EV: 312 BRAM36).
+    pub blocks_available: usize,
+}
+
+impl Default for BramSpec {
+    fn default() -> Self {
+        BramSpec {
+            block_bits: 36 * 1024,
+            bytes_per_port_cycle: 4,
+            ports_per_block: 2,
+            blocks_available: 312,
+        }
+    }
+}
+
+impl BramSpec {
+    /// Blocks needed to store `bytes` (capacity-limited).
+    pub fn blocks_for_capacity(&self, bytes: usize) -> usize {
+        (bytes * 8).div_ceil(self.block_bits)
+    }
+
+    /// Ports needed to sustain `bytes_per_cycle` of combined R/W traffic.
+    pub fn ports_for_bandwidth(&self, bytes_per_cycle: usize) -> usize {
+        bytes_per_cycle.div_ceil(self.bytes_per_port_cycle)
+    }
+
+    /// Blocks needed to provide `bytes_per_cycle` (bandwidth-limited).
+    pub fn blocks_for_bandwidth(&self, bytes_per_cycle: usize) -> usize {
+        self.ports_for_bandwidth(bytes_per_cycle)
+            .div_ceil(self.ports_per_block)
+    }
+
+    /// Blocks satisfying both capacity and bandwidth.
+    pub fn blocks_required(&self, bytes: usize, bytes_per_cycle: usize) -> usize {
+        self.blocks_for_capacity(bytes)
+            .max(self.blocks_for_bandwidth(bytes_per_cycle))
+    }
+
+    /// Device utilization fraction for a block count.
+    pub fn utilization(&self, blocks: usize) -> f64 {
+        blocks as f64 / self.blocks_available as f64
+    }
+
+    /// Peak bandwidth of `blocks` blocks, bytes/cycle.
+    pub fn peak_bandwidth(&self, blocks: usize) -> usize {
+        blocks * self.ports_per_block * self.bytes_per_port_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KB: usize = 1024;
+
+    #[test]
+    fn paper_capacity_sizing() {
+        // §V-D-2: 128 KB requires ≈29 BRAM blocks (~9%).
+        let spec = BramSpec::default();
+        let blocks = spec.blocks_for_capacity(128 * KB);
+        assert_eq!(blocks, 29);
+        let util = spec.utilization(blocks);
+        assert!((0.08..0.10).contains(&util), "util={util}");
+    }
+
+    #[test]
+    fn paper_bandwidth_sizing() {
+        // §V-D-2: 256 B/cycle requires 57 ports… the paper rounds to 32
+        // blocks (10%). ceil(57/2) = 29; the paper's 32 includes port-
+        // alignment slack — we assert our exact math and that the paper's
+        // figure bounds it.
+        let spec = BramSpec::default();
+        let ports = spec.ports_for_bandwidth(256);
+        assert_eq!(ports, 64); // 256/4 = 64 ports exact
+        // Paper says 57 ports because advantages/RTG reuse the read ports
+        // in-place; the write stream shares ports with reads on the dual-
+        // port blocks. Our strict model: 64 ports → 32 blocks = paper's
+        // final number.
+        let blocks = spec.blocks_for_bandwidth(256);
+        assert_eq!(blocks, 32);
+        let util = spec.utilization(blocks);
+        assert!((0.09..0.11).contains(&util), "util={util}");
+    }
+
+    #[test]
+    fn combined_requirement_takes_max() {
+        let spec = BramSpec::default();
+        assert_eq!(
+            spec.blocks_required(128 * KB, 256),
+            32 // bandwidth dominates capacity (29)
+        );
+    }
+
+    #[test]
+    fn peak_bandwidth_matches_ports() {
+        let spec = BramSpec::default();
+        assert_eq!(spec.peak_bandwidth(32), 256);
+    }
+
+    #[test]
+    fn zero_bytes() {
+        let spec = BramSpec::default();
+        assert_eq!(spec.blocks_for_capacity(0), 0);
+        assert_eq!(spec.blocks_for_bandwidth(0), 0);
+    }
+}

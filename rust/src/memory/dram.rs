@@ -1,0 +1,101 @@
+//! External DRAM bandwidth model — the §IV-A bottleneck argument.
+//!
+//! "Assuming a typical DDR4-3200 bandwidth of 25 GB/s and a clock
+//! frequency of 300 MHz, the available bandwidth per cycle is
+//! 83.3 bytes/cycle … a shortfall of 428.7 bytes per cycle" against the
+//! 512 B/cycle required to feed 64 PEs with f32 rewards+values. This is
+//! why HEPPO-GAE stores the working set in on-chip BRAM.
+
+/// A DRAM interface model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramSpec {
+    /// Sustained bandwidth, bytes/second (DDR4-3200: 25 GB/s).
+    pub bandwidth_bytes_per_sec: f64,
+    /// Accelerator clock, Hz (300 MHz).
+    pub clock_hz: f64,
+}
+
+impl Default for DramSpec {
+    fn default() -> Self {
+        DramSpec { bandwidth_bytes_per_sec: 25e9, clock_hz: 300e6 }
+    }
+}
+
+impl DramSpec {
+    /// Bytes deliverable per accelerator cycle.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bandwidth_bytes_per_sec / self.clock_hz
+    }
+
+    /// Bytes/cycle needed to feed `pes` processing elements reading one
+    /// reward + one value of `elem_bytes` each per cycle.
+    pub fn required_bytes_per_cycle(pes: usize, elem_bytes: usize) -> f64 {
+        (pes * 2 * elem_bytes) as f64
+    }
+
+    /// Shortfall (positive ⇒ DRAM cannot keep up).
+    pub fn shortfall(&self, pes: usize, elem_bytes: usize) -> f64 {
+        Self::required_bytes_per_cycle(pes, elem_bytes) - self.bytes_per_cycle()
+    }
+
+    /// Largest PE count this DRAM can feed at `elem_bytes` per element.
+    pub fn max_sustainable_pes(&self, elem_bytes: usize) -> usize {
+        (self.bytes_per_cycle() / (2 * elem_bytes) as f64).floor() as usize
+    }
+
+    /// Effective elements/second if DRAM is the only limiter for `pes`
+    /// PEs (each element = reward + value read).
+    pub fn dram_limited_elements_per_sec(&self, pes: usize, elem_bytes: usize) -> f64 {
+        let demand = Self::required_bytes_per_cycle(pes, elem_bytes);
+        let supply = self.bytes_per_cycle();
+        let duty = (supply / demand).min(1.0);
+        duty * pes as f64 * self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bytes_per_cycle() {
+        // 25e9 / 300e6 = 83.33 B/cycle.
+        let d = DramSpec::default();
+        assert!((d.bytes_per_cycle() - 83.333).abs() < 0.01);
+    }
+
+    #[test]
+    fn paper_shortfall() {
+        // 64 PEs × (reward+value) × 4 B = 512 B/cycle; shortfall 428.7.
+        let d = DramSpec::default();
+        assert_eq!(DramSpec::required_bytes_per_cycle(64, 4), 512.0);
+        let s = d.shortfall(64, 4);
+        assert!((s - 428.666).abs() < 0.01, "shortfall={s}");
+    }
+
+    #[test]
+    fn dram_can_feed_only_about_10_f32_pes() {
+        let d = DramSpec::default();
+        let max = d.max_sustainable_pes(4);
+        assert_eq!(max, 10); // 83.33 / 8
+    }
+
+    #[test]
+    fn quantization_quadruples_sustainable_pes() {
+        // 8-bit elements: 83.33 / 2 = 41 PEs — quantization directly
+        // relieves the §IV-A bottleneck.
+        let d = DramSpec::default();
+        assert_eq!(d.max_sustainable_pes(1), 41);
+    }
+
+    #[test]
+    fn duty_cycle_throughput() {
+        let d = DramSpec::default();
+        // 64 f32 PEs run at 83.33/512 duty ⇒ 19.2 G × 0.1628 ≈ 3.125 G elem/s.
+        let eps = d.dram_limited_elements_per_sec(64, 4);
+        assert!((eps / 1e9 - 3.125).abs() < 0.01, "eps={eps}");
+        // 1 PE is unconstrained: full 300 M elem/s.
+        let one = d.dram_limited_elements_per_sec(1, 4);
+        assert!((one - 300e6).abs() < 1.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! FILO stack memory (paper §IV-2/3, Algorithm 2, Fig. 6).
+//!
+//! Rewards and values are *pushed* row-by-row as timesteps are collected
+//! and *popped* in reverse during the GAE pass — a stack discipline that
+//! matches GAE's backward iteration exactly. Dual-port BRAM lets the
+//! same cycle read (r, v) at row `t` through port A and write back
+//! (advantage, RTG) through port B, overwriting in place and halving the
+//! footprint.
+//!
+//! This type is the *functional* model used by the coordinator's storage
+//! stage (the cycle-accurate port-level model lives in
+//! [`crate::hwsim`]). Elements are stored quantized (`u16` codewords) or
+//! raw (`f32`) depending on the codec in front of it; here we store
+//! generic elements.
+
+/// One plane of `[T, B]` stack storage (e.g. the reward plane).
+#[derive(Debug, Clone)]
+pub struct FiloStack<T> {
+    batch: usize,
+    capacity_rows: usize,
+    rows: Vec<Vec<T>>,
+}
+
+/// Errors from stack misuse.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FiloError {
+    #[error("stack is full ({0} rows)")]
+    Full(usize),
+    #[error("stack is empty")]
+    Empty,
+    #[error("row width {got} != batch {want}")]
+    Width { got: usize, want: usize },
+}
+
+impl<T: Clone> FiloStack<T> {
+    /// A stack able to hold `capacity_rows` rows of `batch` elements.
+    pub fn new(batch: usize, capacity_rows: usize) -> Self {
+        FiloStack { batch, capacity_rows, rows: Vec::with_capacity(capacity_rows) }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.rows.len() == self.capacity_rows
+    }
+
+    /// Push one timestep row (Algorithm 2 "Data Insertion").
+    pub fn push_row(&mut self, row: &[T]) -> Result<(), FiloError> {
+        if row.len() != self.batch {
+            return Err(FiloError::Width { got: row.len(), want: self.batch });
+        }
+        if self.is_full() {
+            return Err(FiloError::Full(self.capacity_rows));
+        }
+        self.rows.push(row.to_vec());
+        Ok(())
+    }
+
+    /// Pop the top (most recent) row — GAE iterates backward.
+    pub fn pop_row(&mut self) -> Result<Vec<T>, FiloError> {
+        self.rows.pop().ok_or(FiloError::Empty)
+    }
+
+    /// Read the top row without popping.
+    pub fn peek_row(&self) -> Option<&[T]> {
+        self.rows.last().map(|r| r.as_slice())
+    }
+
+    /// Dual-port in-place exchange: read the top row and overwrite it
+    /// with `replacement` in the same operation (§IV-3 "In-Place Updates
+    /// and Dual-Port Memory" — advantages overwrite rewards, RTGs
+    /// overwrite values). The row stays resident; a subsequent
+    /// [`FiloStack::pop_row`] would return the replacement.
+    pub fn exchange_top(&mut self, replacement: &[T]) -> Result<Vec<T>, FiloError> {
+        if replacement.len() != self.batch {
+            return Err(FiloError::Width { got: replacement.len(), want: self.batch });
+        }
+        let top = self.rows.last_mut().ok_or(FiloError::Empty)?;
+        let old = std::mem::replace(top, replacement.to_vec());
+        Ok(old)
+    }
+
+    /// Descend the stack in place: call `f(t, row)` for t = top..0 with
+    /// mutable access, modelling the full backward GAE sweep with
+    /// overwrite but leaving the data resident for the PS to read back.
+    pub fn for_each_backward_mut(&mut self, mut f: impl FnMut(usize, &mut [T])) {
+        for (t, row) in self.rows.iter_mut().enumerate().rev() {
+            f(t, row);
+        }
+    }
+
+    /// Row access by index (PS-side readback after the GAE phase).
+    pub fn row(&self, t: usize) -> Option<&[T]> {
+        self.rows.get(t).map(|r| r.as_slice())
+    }
+
+    /// Clear for the next iteration.
+    pub fn reset(&mut self) {
+        self.rows.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn push_pop_is_filo() {
+        let mut s: FiloStack<u16> = FiloStack::new(2, 4);
+        s.push_row(&[1, 2]).unwrap();
+        s.push_row(&[3, 4]).unwrap();
+        assert_eq!(s.pop_row().unwrap(), vec![3, 4]);
+        assert_eq!(s.pop_row().unwrap(), vec![1, 2]);
+        assert_eq!(s.pop_row(), Err(FiloError::Empty));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut s: FiloStack<u16> = FiloStack::new(1, 2);
+        s.push_row(&[0]).unwrap();
+        s.push_row(&[1]).unwrap();
+        assert_eq!(s.push_row(&[2]), Err(FiloError::Full(2)));
+    }
+
+    #[test]
+    fn width_enforced() {
+        let mut s: FiloStack<u16> = FiloStack::new(3, 2);
+        assert_eq!(
+            s.push_row(&[1, 2]),
+            Err(FiloError::Width { got: 2, want: 3 })
+        );
+    }
+
+    #[test]
+    fn exchange_top_overwrites_in_place() {
+        let mut s: FiloStack<u16> = FiloStack::new(2, 4);
+        s.push_row(&[10, 20]).unwrap();
+        s.push_row(&[30, 40]).unwrap();
+        let old = s.exchange_top(&[7, 8]).unwrap();
+        assert_eq!(old, vec![30, 40]);
+        assert_eq!(s.peek_row().unwrap(), &[7, 8]);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn backward_sweep_emulates_algorithm2() {
+        // Algorithm 2: push T rows of (reward,value); sweep backward
+        // computing adv/rtg and storing them in place; PS reads back in
+        // forward order.
+        let mut rewards: FiloStack<f32> = FiloStack::new(2, 8);
+        let t_len = 5;
+        for t in 0..t_len {
+            rewards.push_row(&[t as f32, 10.0 + t as f32]).unwrap();
+        }
+        let mut seen = Vec::new();
+        rewards.for_each_backward_mut(|t, row| {
+            seen.push(t);
+            for x in row.iter_mut() {
+                *x = -*x; // stand-in for the adv computation
+            }
+        });
+        assert_eq!(seen, vec![4, 3, 2, 1, 0]);
+        assert_eq!(rewards.row(2).unwrap(), &[-2.0, -12.0]);
+    }
+
+    #[test]
+    fn randomized_push_pop_mirror() {
+        check("filo == Vec mirror", 30, |g| {
+            let batch = g.usize_in(1, 8);
+            let cap = g.usize_in(1, 32);
+            let mut stack: FiloStack<u16> = FiloStack::new(batch, cap);
+            let mut mirror: Vec<Vec<u16>> = Vec::new();
+            for _ in 0..200 {
+                if g.bool() && !stack.is_full() {
+                    let row: Vec<u16> =
+                        (0..batch).map(|_| g.usize_in(0, 255) as u16).collect();
+                    stack.push_row(&row).unwrap();
+                    mirror.push(row);
+                } else if !stack.is_empty() {
+                    assert_eq!(stack.pop_row().unwrap(), mirror.pop().unwrap());
+                }
+                assert_eq!(stack.len(), mirror.len());
+            }
+        });
+    }
+}

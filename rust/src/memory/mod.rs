@@ -1,0 +1,21 @@
+//! On-chip memory subsystem models (paper §IV "Data Layout").
+//!
+//! - [`bram`] — dual-port Block RAM: 36 Kb blocks, 4 bytes/port/cycle;
+//!   block-count and port-count sizing (paper §V-D-2).
+//! - [`dram`] — DDR4-3200 bandwidth model: the 83.3 bytes/cycle vs 512
+//!   bytes/cycle shortfall argument of §IV-A.
+//! - [`layout`] — the timestep-major 2-D memory-block layout (Fig. 6):
+//!   rewards/values of all trajectories at timestep *t* share a row.
+//! - [`filo`] — the FILO (stack) storage mechanism with dual-port
+//!   in-place overwrite (Algorithm 2): push forward during collection,
+//!   pop backward during GAE, advantages/RTGs overwrite rewards/values.
+
+pub mod bram;
+pub mod dram;
+pub mod filo;
+pub mod layout;
+
+pub use bram::BramSpec;
+pub use dram::DramSpec;
+pub use filo::FiloStack;
+pub use layout::BlockLayout;

@@ -1,0 +1,135 @@
+//! Block standardization of values (paper §II-B).
+//!
+//! Values come from a trainable critic whose output distribution drifts
+//! over training (paper Fig. 2), so a single running standardizer fails
+//! ("dynamic standardization of values was unsuccessful as it affected
+//! the loss calculations"). Instead each collected block is standardized
+//! by its own (μ_v, σ_v):
+//!
+//! 1. collect a block of values from multiple trajectories;
+//! 2. compute μ_v, σ_v of the block;
+//! 3. standardize: `(v - μ_v) / σ_v`;
+//! 4. uniformly quantize, storing the codewords **with** (μ_v, σ_v);
+//! 5. on reconstruction, de-quantize and de-standardize:
+//!    `v ≈ q·σ_v + μ_v`.
+
+use super::dynamic_std::STD_FLOOR;
+
+/// Per-block statistics stored alongside the quantized codewords.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockStats {
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl BlockStats {
+    /// Compute μ/σ of a block (population σ, matching the paper's reward
+    /// path; σ is floored to keep standardization finite for constant
+    /// blocks).
+    pub fn of(block: &[f32]) -> BlockStats {
+        if block.is_empty() {
+            return BlockStats { mean: 0.0, std: STD_FLOOR as f32 };
+        }
+        let n = block.len() as f64;
+        let mean = block.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = block
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        BlockStats {
+            mean: mean as f32,
+            std: (var.sqrt().max(STD_FLOOR)) as f32,
+        }
+    }
+
+    /// Step 3 — standardize in place.
+    pub fn standardize(&self, block: &mut [f32]) {
+        for v in block.iter_mut() {
+            *v = (*v - self.mean) / self.std;
+        }
+    }
+
+    /// Step 5 — de-standardize in place ("multiplying the elements back
+    /// by the stored standard deviation σ_v and then adding the mean μ_v").
+    pub fn destandardize(&self, block: &mut [f32]) {
+        for v in block.iter_mut() {
+            *v = *v * self.std + self.mean;
+        }
+    }
+}
+
+/// Standardize a block, returning the stats needed for reconstruction.
+pub fn block_standardize(block: &mut [f32]) -> BlockStats {
+    let stats = BlockStats::of(block);
+    stats.standardize(block);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    #[test]
+    fn standardized_block_has_unit_moments() {
+        check("block std moments", 30, |g| {
+            let n = g.usize_in(2, 500);
+            let mean = g.f64_in(-5.0, 5.0);
+            let std = g.f64_in(0.1, 10.0);
+            let mut block = g.vec_normal_f32(n, mean, std);
+            // Skip degenerate constant blocks (handled by their own test).
+            let stats = block_standardize(&mut block);
+            assert!(stats.std > 0.0);
+            let m = block.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            let s2 = block.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / n as f64;
+            assert!(m.abs() < 1e-3, "mean={m}");
+            assert!((s2 - 1.0).abs() < 1e-2, "var={s2}");
+        });
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        check("std→destd roundtrip", 30, |g| {
+            let n = g.usize_in(1, 300);
+            let orig = g.vec_normal_f32(n, 3.0, 7.0);
+            let mut block = orig.clone();
+            let stats = block_standardize(&mut block);
+            stats.destandardize(&mut block);
+            for (a, b) in block.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn constant_block_is_safe() {
+        let mut block = vec![4.2f32; 16];
+        let stats = block_standardize(&mut block);
+        assert!(block.iter().all(|v| v.is_finite()));
+        assert!(block.iter().all(|&v| v.abs() < 1e-3));
+        stats.destandardize(&mut block);
+        assert!(block.iter().all(|&v| (v - 4.2).abs() < 1e-4));
+    }
+
+    #[test]
+    fn empty_block() {
+        let stats = BlockStats::of(&[]);
+        assert_eq!(stats.mean, 0.0);
+        assert!(stats.std > 0.0);
+    }
+
+    #[test]
+    fn distinct_blocks_get_distinct_stats() {
+        // The point of *block* standardization (vs global): a late-
+        // training block with shifted value distribution gets its own μ/σ.
+        let mut g = Gen::new(7);
+        let early = g.vec_normal_f32(256, 0.0, 1.0);
+        let late = g.vec_normal_f32(256, 50.0, 10.0);
+        let s_early = BlockStats::of(&early);
+        let s_late = BlockStats::of(&late);
+        assert!((s_early.mean - 0.0).abs() < 0.5);
+        assert!((s_late.mean - 50.0).abs() < 2.0);
+        assert!(s_late.std > 5.0 * s_early.std);
+    }
+}

@@ -1,0 +1,190 @@
+//! Dynamic standardization of rewards (paper §II-A, Eq. 6–9).
+//!
+//! At every training epoch the incoming rewards are standardized using a
+//! running mean and running std maintained over **all rewards processed
+//! so far** (not just the current epoch): per-epoch standardization
+//! "disrupt[s] the relative differences in reward distributions between
+//! epochs", which the paper observed to diverge. The stream statistics
+//! are updated by Welford's algorithm (shared with [`crate::stats`]).
+//!
+//! Rewards standardized this way are *kept* in standardized form — the
+//! paper's Experiment 5 finding (Table III / Fig. 10) — so this type has
+//! no de-standardize path; contrast [`super::block_std`].
+
+use crate::stats::Welford;
+
+/// Floor on σ to avoid division blow-ups before statistics accumulate.
+pub const STD_FLOOR: f64 = 1e-6;
+
+/// Running reward standardizer.
+#[derive(Debug, Clone, Default)]
+pub struct DynamicStandardizer {
+    stats: Welford,
+}
+
+impl DynamicStandardizer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Update the running statistics with one reward — Eq. (6)–(8).
+    #[inline]
+    pub fn update(&mut self, r: f64) {
+        self.stats.push(r);
+    }
+
+    /// Standardize one reward with the *current* statistics.
+    #[inline]
+    pub fn standardize(&self, r: f64) -> f64 {
+        (r - self.stats.mean()) / self.stats.std_population().max(STD_FLOOR)
+    }
+
+    /// Update-then-standardize, the per-element streaming operation the
+    /// hardware performs as rewards arrive.
+    #[inline]
+    pub fn push(&mut self, r: f64) -> f64 {
+        self.update(r);
+        self.standardize(r)
+    }
+
+    /// Standardize a batch in place after absorbing it into the stream
+    /// (epoch-granularity operation used by the trainer).
+    pub fn absorb_and_standardize(&mut self, rewards: &mut [f32]) {
+        self.stats.push_all(rewards);
+        let mean = self.stats.mean() as f32;
+        let inv = (1.0 / self.std()) as f32;
+        for r in rewards.iter_mut() {
+            *r = (*r - mean) * inv;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    /// Running std, Eq. (9) (population form, exactly as the paper).
+    pub fn std(&self) -> f64 {
+        self.stats.std_population().max(STD_FLOOR)
+    }
+
+    /// Merge a worker's local stream statistics (parallel collection).
+    pub fn merge(&mut self, other: &DynamicStandardizer) {
+        self.stats.merge(&other.stats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    #[test]
+    fn stationary_stream_converges_to_unit_scale() {
+        let mut ds = DynamicStandardizer::new();
+        let mut g = Gen::new(1);
+        // Burn in the statistics.
+        for _ in 0..20_000 {
+            ds.update(g.rng().normal_with(10.0, 3.0));
+        }
+        // Freshly standardized samples should be ≈ N(0, 1).
+        let mut w = crate::stats::Welford::new();
+        for _ in 0..20_000 {
+            let r = g.rng().normal_with(10.0, 3.0);
+            w.push(ds.push(r));
+        }
+        assert!(w.mean().abs() < 0.05, "mean={}", w.mean());
+        assert!((w.std_population() - 1.0).abs() < 0.05, "std={}", w.std_population());
+    }
+
+    #[test]
+    fn history_is_preserved_across_epochs() {
+        // The defining property vs per-epoch standardization: an epoch of
+        // uniformly larger rewards must stay larger after standardization.
+        let mut ds = DynamicStandardizer::new();
+        let mut g = Gen::new(2);
+        let epoch1: Vec<f64> = (0..2000).map(|_| g.rng().normal_with(1.0, 0.5)).collect();
+        let epoch2: Vec<f64> = (0..2000).map(|_| g.rng().normal_with(5.0, 0.5)).collect();
+        let s1: Vec<f64> = epoch1.iter().map(|&r| ds.push(r)).collect();
+        let s2: Vec<f64> = epoch2.iter().map(|&r| ds.push(r)).collect();
+        let m1 = s1.iter().sum::<f64>() / s1.len() as f64;
+        let m2 = s2.iter().sum::<f64>() / s2.len() as f64;
+        assert!(
+            m2 > m1 + 1.0,
+            "epoch-2 rewards must remain clearly larger: {m1} vs {m2}"
+        );
+    }
+
+    #[test]
+    fn per_epoch_standardization_erases_history() {
+        // Control for the test above: independent per-epoch z-scoring
+        // maps both epochs to ≈0 mean — the failure mode the paper avoids.
+        let mut g = Gen::new(3);
+        let zscore = |xs: &[f64]| {
+            let n = xs.len() as f64;
+            let m = xs.iter().sum::<f64>() / n;
+            let s = (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n).sqrt();
+            xs.iter().map(|x| (x - m) / s).collect::<Vec<_>>()
+        };
+        let epoch1: Vec<f64> = (0..2000).map(|_| g.rng().normal_with(1.0, 0.5)).collect();
+        let epoch2: Vec<f64> = (0..2000).map(|_| g.rng().normal_with(5.0, 0.5)).collect();
+        let m1 = zscore(&epoch1).iter().sum::<f64>() / 2000.0;
+        let m2 = zscore(&epoch2).iter().sum::<f64>() / 2000.0;
+        assert!(m1.abs() < 1e-9 && m2.abs() < 1e-9);
+    }
+
+    #[test]
+    fn early_stream_is_finite() {
+        let mut ds = DynamicStandardizer::new();
+        let s = ds.push(0.0);
+        assert!(s.is_finite());
+        let s = ds.push(0.0); // zero variance
+        assert!(s.is_finite());
+    }
+
+    #[test]
+    fn absorb_matches_streaming() {
+        check("absorb == stream", 20, |g| {
+            let n = g.usize_in(1, 200);
+            let raw: Vec<f32> = g.vec_normal_f32(n, 2.0, 4.0);
+            let mut a = DynamicStandardizer::new();
+            let mut batch = raw.clone();
+            a.absorb_and_standardize(&mut batch);
+            // Streaming variant updates all then standardizes all with the
+            // final stats — equivalent by construction; verify against a
+            // manual implementation.
+            let mut b = DynamicStandardizer::new();
+            for &r in &raw {
+                b.update(r as f64);
+            }
+            for (i, &r) in raw.iter().enumerate() {
+                let want = b.standardize(r as f64) as f32;
+                assert!((batch[i] - want).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn merge_workers_equals_global_stream() {
+        let mut g = Gen::new(5);
+        let xs: Vec<f64> = (0..3000).map(|_| g.rng().normal_with(0.5, 2.0)).collect();
+        let mut global = DynamicStandardizer::new();
+        for &x in &xs {
+            global.update(x);
+        }
+        let mut w1 = DynamicStandardizer::new();
+        let mut w2 = DynamicStandardizer::new();
+        for &x in &xs[..1000] {
+            w1.update(x);
+        }
+        for &x in &xs[1000..] {
+            w2.update(x);
+        }
+        w1.merge(&w2);
+        assert!((w1.mean() - global.mean()).abs() < 1e-9);
+        assert!((w1.std() - global.std()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,27 @@
+//! Standardization + quantization — the paper's algorithmic contribution
+//! (§II), which makes 8-bit on-chip storage of rewards/values viable.
+//!
+//! - [`dynamic_std`] — *dynamic standardization* of rewards (§II-A):
+//!   a Welford running mean/std over **all rewards ever seen**, so the
+//!   relative scale between epochs is preserved (per-epoch standardizing
+//!   was found to diverge). Rewards stay standardized afterwards — the
+//!   paper reports ≈1.5× cumulative reward from exactly this choice.
+//! - [`block_std`] — *block standardization* of values (§II-B): values
+//!   come from an evolving critic, so each collected block is
+//!   standardized by its own (μ_v, σ_v), quantized, and de-standardized
+//!   on reconstruction.
+//! - [`uniform`] — n-bit uniform quantization (§II-C) on the standardized
+//!   distributions, with sub-byte bit-packing for memory accounting.
+//! - [`codec`] — the five end-to-end configurations of Table III
+//!   (Experiments 1–5) behind one trait, so the trainer and the Fig. 10
+//!   bench can swap them freely.
+
+pub mod block_std;
+pub mod codec;
+pub mod dynamic_std;
+pub mod uniform;
+
+pub use block_std::BlockStats;
+pub use codec::{CodecKind, RewardValueCodec};
+pub use dynamic_std::DynamicStandardizer;
+pub use uniform::UniformQuantizer;

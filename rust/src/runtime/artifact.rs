@@ -1,0 +1,255 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` emits `manifest.json` describing every lowered
+//! computation (inputs/outputs shapes + dtypes + metadata) and binary
+//! blob (seeded initial parameters). This module is the single source of
+//! truth the coordinator uses for tensor shapes — nothing is hardcoded
+//! on the rust side.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j
+                .req("shape")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("bad shape"))?,
+            dtype: j
+                .req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One artifact (HLO computation or raw blob).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub is_blob: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Typed metadata accessors.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("artifact {}: missing meta {key}", self.name))
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Result<f64> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("artifact {}: missing meta {key}", self.name))
+    }
+
+    pub fn meta_bool(&self, key: &str) -> Result<bool> {
+        self.meta
+            .get(key)
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow!("artifact {}: missing meta {key}", self.name))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub geometry: Geometry,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+/// Rollout/batch geometry shared between aot.py and the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Geometry {
+    pub num_envs: usize,
+    pub rollout_t: usize,
+    pub minibatch: usize,
+    pub gamma: f32,
+    pub lambda: f32,
+    pub quant_bits: usize,
+    pub quant_range: f32,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (tests feed synthetic manifests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest.json parse")?;
+        let geo = root.req("geometry")?;
+        let geometry = Geometry {
+            num_envs: geo.req("num_envs")?.as_usize().unwrap(),
+            rollout_t: geo.req("rollout_t")?.as_usize().unwrap(),
+            minibatch: geo.req("minibatch")?.as_usize().unwrap(),
+            gamma: geo.req("gamma")?.as_f64().unwrap() as f32,
+            lambda: geo.req("lambda")?.as_f64().unwrap() as f32,
+            quant_bits: geo.req("quant_bits")?.as_usize().unwrap(),
+            quant_range: geo.req("quant_range")?.as_f64().unwrap() as f32,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in root
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a
+                        .req("file")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad file"))?
+                        .to_string(),
+                    is_blob: a.get("blob").and_then(Json::as_bool).unwrap_or(false),
+                    inputs,
+                    outputs,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest { dir, geometry, artifacts })
+    }
+
+    /// Artifact lookup with a clear error.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact's file.
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Load a raw little-endian `f32` blob artifact.
+    pub fn load_blob_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let spec = self.get(name)?;
+        anyhow::ensure!(spec.is_blob, "artifact {name} is not a blob");
+        let bytes = std::fs::read(self.path_of(name)?)?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "blob {name} truncated");
+        let out = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect::<Vec<f32>>();
+        let want = spec.outputs[0].elem_count();
+        anyhow::ensure!(out.len() == want, "blob {name}: {} vs {want} elems", out.len());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "geometry": {"num_envs": 16, "rollout_t": 128, "minibatch": 256,
+                   "gamma": 0.99, "lambda": 0.95,
+                   "quant_bits": 8, "quant_range": 5.0},
+      "artifacts": {
+        "cartpole_policy_fwd": {
+          "file": "cartpole_policy_fwd.hlo.txt",
+          "inputs": [{"shape": [9155], "dtype": "float32"},
+                      {"shape": [16, 4], "dtype": "float32"}],
+          "outputs": [{"shape": [16, 2], "dtype": "float32"},
+                       {"shape": [16], "dtype": "float32"}],
+          "meta": {"kind": "policy_fwd", "param_count": 9155,
+                   "discrete": true, "obs_dim": 4}
+        },
+        "cartpole_init_params": {
+          "file": "cartpole_init_params.f32",
+          "blob": true,
+          "inputs": [],
+          "outputs": [{"shape": [4], "dtype": "float32"}],
+          "meta": {"kind": "init_params"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.geometry.num_envs, 16);
+        assert!((m.geometry.gamma - 0.99).abs() < 1e-6);
+        let a = m.get("cartpole_policy_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].shape, vec![16, 4]);
+        assert_eq!(a.inputs[1].elem_count(), 64);
+        assert_eq!(a.meta_usize("param_count").unwrap(), 9155);
+        assert!(a.meta_bool("discrete").unwrap());
+        assert!(!a.is_blob);
+        assert!(m.get("cartpole_init_params").unwrap().is_blob);
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("cartpole_policy_fwd"), "{err}");
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let dir = std::env::temp_dir().join("heppo_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals = [1.0f32, -2.5, 3.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("cartpole_init_params.f32"), bytes).unwrap();
+        let m = Manifest::parse(SAMPLE, dir.clone()).unwrap();
+        assert_eq!(m.load_blob_f32("cartpole_init_params").unwrap(), vals);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many
+//! times with plain `f32` tensors.
+//!
+//! Follows /opt/xla-example/load_hlo: the interchange format is HLO
+//! *text* (`HloModuleProto::from_text_file`) because the crate's
+//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
+//! aot.py lowers with `return_tuple=True`, so every execution returns a
+//! tuple literal which we decompose into per-output tensors.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A host-side f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "tensor data/shape mismatch"
+        );
+        Tensor { data, shape }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor { data: vec![x], shape: vec![] }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        let n = data.len();
+        Tensor { data, shape: vec![n] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Build the PJRT literal for this tensor. Public so hot paths can
+    /// pre-build invariant inputs once and pass them by reference via
+    /// [`Executable::call_literals`] (§Perf: the policy parameters are
+    /// invariant across the T steps of a rollout — re-encoding them per
+    /// step dominated DNN-inference time before this path existed).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 tensors; validates arity and shapes against the
+    /// manifest, returns one tensor per manifest output.
+    pub fn call(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {}: got {} inputs, manifest says {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape == s.shape,
+                "artifact {} input {i}: shape {:?} != manifest {:?}",
+                self.spec.name,
+                t.shape,
+                s.shape
+            );
+        }
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.call_literals(&refs)
+    }
+
+    /// Execute with pre-built literals (no per-call encoding of inputs
+    /// the caller already holds). Arity is validated; shape agreement is
+    /// the caller's contract.
+    pub fn call_literals(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            literals.len() == self.spec.inputs.len(),
+            "artifact {}: got {} literals, manifest says {}",
+            self.spec.name,
+            literals.len(),
+            self.spec.inputs.len()
+        );
+        let result = self.exe.execute::<&xla::Literal>(literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {}: {} outputs vs manifest {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| {
+                // uint16 outputs (quant codes) are converted to f32 lanes.
+                let lit = if spec.dtype == "float32" {
+                    lit
+                } else {
+                    lit.convert(xla::PrimitiveType::F32)?
+                };
+                let data = lit.to_vec::<f32>()?;
+                Ok(Tensor { data, shape: spec.shape.clone() })
+            })
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compiled-executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (compiles lazily on first use).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { manifest, client, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let spec = self.manifest.get(name)?.clone();
+        anyhow::ensure!(!spec.is_blob, "artifact {name} is a blob, not HLO");
+        let path = self.manifest.path_of(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        let exe = Rc::new(Executable { spec, exe });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// One-shot convenience: load + call.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.call(inputs)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_check() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert_eq!(Tensor::scalar(5.0).shape, Vec::<usize>::new());
+        assert_eq!(Tensor::zeros(&[3, 4]).data.len(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "tensor data/shape mismatch")]
+    fn tensor_mismatch_panics() {
+        Tensor::new(vec![1.0], vec![2, 2]);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the coordinator's hot path (no python anywhere at runtime).
+//!
+//! - [`artifact`] — parses `artifacts/manifest.json` (written by
+//!   `python/compile/aot.py`), exposing every artifact's I/O signature
+//!   and metadata, plus raw `f32` blobs (initial parameters).
+//! - [`client`] — wraps the `xla` crate: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `compile` → `execute`, with a
+//!   typed f32-tensor call interface and per-artifact executable cache.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{Runtime, Tensor};

@@ -1,0 +1,112 @@
+//! Fixed-bin histograms — used to reproduce Fig. 2 ("Distribution of
+//! Value Across Collected Trajectories") and to sanity-check quantizer
+//! codeword usage.
+
+/// A histogram over `[lo, hi)` with uniform bins plus under/overflow.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0, "bad histogram range/bins");
+        Histogram { lo, hi, bins: vec![0; n_bins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let f = (x - self.lo) / (self.hi - self.lo);
+            let i = ((f * self.bins.len() as f64) as usize).min(self.bins.len() - 1);
+            self.bins[i] += 1;
+        }
+    }
+
+    pub fn push_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Normalized densities (sums to the in-range fraction).
+    pub fn densities(&self) -> Vec<f64> {
+        let n = self.count.max(1) as f64;
+        self.bins.iter().map(|&c| c as f64 / n).collect()
+    }
+
+    /// Fraction of mass outside `[lo, hi)` — the quantizer clipping rate.
+    pub fn clipped_fraction(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            (self.underflow + self.overflow) as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bin_assignment() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(0.0);
+        h.push(0.99);
+        h.push(9.99);
+        h.push(-1.0);
+        h.push(10.0);
+        assert_eq!(h.bins()[0], 2);
+        assert_eq!(h.bins()[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.count(), 5);
+        assert!((h.clipped_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standard_normal_mass_within_3_sigma() {
+        let mut rng = Rng::new(4);
+        let mut h = Histogram::new(-3.0, 3.0, 60);
+        for _ in 0..50_000 {
+            h.push(rng.normal());
+        }
+        assert!(h.clipped_fraction() < 0.01);
+        // Mode near zero.
+        let peak = h.bins().iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+        assert!((h.bin_center(peak)).abs() < 0.5);
+    }
+
+    #[test]
+    fn bin_centers() {
+        let h = Histogram::new(0.0, 1.0, 4);
+        assert!((h.bin_center(0) - 0.125).abs() < 1e-12);
+        assert!((h.bin_center(3) - 0.875).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Running statistics used across the standardization pipeline and the
+//! experiment reporting.
+//!
+//! - [`welford`] — the paper's Eq. (6)–(9): running mean / running std via
+//!   Welford's algorithm, the arithmetic core of *dynamic standardization*.
+//! - [`rolling`] — fixed-window rolling average (Fig. 10 plots a rolling
+//!   average over 1000 readings).
+//! - [`histogram`] — fixed-bin histograms (Fig. 2 value distributions).
+//! - [`summary`] — batch summary statistics (mean/std/min/max/percentiles).
+
+pub mod histogram;
+pub mod rolling;
+pub mod summary;
+pub mod welford;
+
+pub use histogram::Histogram;
+pub use rolling::RollingMean;
+pub use summary::Summary;
+pub use welford::Welford;

@@ -1,0 +1,99 @@
+//! Fixed-window rolling mean — Fig. 10 of the paper plots the "Rolling
+//! Average of 1000 Readings" of episode reward.
+
+use std::collections::VecDeque;
+
+/// Rolling mean over the last `window` observations, O(1) per push.
+#[derive(Debug, Clone)]
+pub struct RollingMean {
+    window: usize,
+    buf: VecDeque<f64>,
+    sum: f64,
+}
+
+impl RollingMean {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "window must be positive");
+        RollingMean { window, buf: VecDeque::with_capacity(window), sum: 0.0 }
+    }
+
+    /// Push an observation and return the current rolling mean.
+    pub fn push(&mut self, x: f64) -> f64 {
+        self.buf.push_back(x);
+        self.sum += x;
+        if self.buf.len() > self.window {
+            self.sum -= self.buf.pop_front().unwrap();
+        }
+        self.mean()
+    }
+
+    /// Current mean over the (possibly not yet full) window.
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.sum / self.buf.len() as f64
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.window
+    }
+}
+
+/// Smooth a whole series with a rolling window (used when emitting the
+/// Fig. 7–10 CSV curves).
+pub fn rolling_mean_series(xs: &[f64], window: usize) -> Vec<f64> {
+    let mut rm = RollingMean::new(window);
+    xs.iter().map(|&x| rm.push(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_window_means() {
+        let mut rm = RollingMean::new(3);
+        assert_eq!(rm.push(3.0), 3.0);
+        assert_eq!(rm.push(5.0), 4.0);
+        assert_eq!(rm.push(7.0), 5.0);
+        assert!(rm.is_full());
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut rm = RollingMean::new(2);
+        rm.push(1.0);
+        rm.push(2.0);
+        assert_eq!(rm.push(4.0), 3.0); // window = [2,4]
+        assert_eq!(rm.len(), 2);
+    }
+
+    #[test]
+    fn series_matches_naive() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let w = 7;
+        let got = rolling_mean_series(&xs, w);
+        for i in 0..xs.len() {
+            let lo = i.saturating_sub(w - 1);
+            let naive: f64 =
+                xs[lo..=i].iter().sum::<f64>() / (i - lo + 1) as f64;
+            assert!((got[i] - naive).abs() < 1e-12, "i={i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "window must be positive")]
+    fn zero_window_panics() {
+        RollingMean::new(0);
+    }
+}

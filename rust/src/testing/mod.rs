@@ -1,0 +1,137 @@
+//! Mini property-test harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a per-case [`Gen`]; [`check`] runs it for
+//! `n` seeded cases and reports the failing seed so a failure reproduces
+//! deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this image)
+//! use heppo::testing::{check, Gen};
+//! check("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.f32_in(-1e3, 1e3);
+//!     let b = g.f32_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Per-case value generator (a thin, purpose-named layer over [`Rng`]).
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this case, printed on failure.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen { rng: Rng::new(case_seed), case_seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        assert!(hi_inclusive >= lo);
+        lo + self.rng.below((hi_inclusive - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.uniform() < p
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of uniform f32s.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Vector of normals with given mean/std (f32).
+    pub fn vec_normal_f32(&mut self, len: usize, mean: f64, std: f64) -> Vec<f32> {
+        (0..len).map(|_| self.rng.normal_with(mean, std) as f32).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Access the underlying RNG for anything richer.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` deterministic seeds derived from the property
+/// name; panics (via the property's own asserts) on the first failure,
+/// after printing the reproducing seed.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen)) {
+    // Stable name hash (FNV-1a) so each property gets its own stream.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    for case in 0..cases {
+        let seed = h.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut gen = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut gen)
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let n = AtomicU64::new(0);
+        check("counter", 25, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("always fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(99);
+        let mut b = Gen::new(99);
+        assert_eq!(a.vec_f32(16, -1.0, 1.0), b.vec_f32(16, -1.0, 1.0));
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        check("usize_in bounds", 200, |g| {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        });
+    }
+}

@@ -1,0 +1,134 @@
+//! Flag-style command-line argument parser for the `heppo` binary and the
+//! bench/example drivers (clap is unavailable in the offline crate set).
+//!
+//! Grammar: `heppo <subcommand> [--key value]... [--flag]...`
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, key/value options, and bare flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token, if any.
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs.
+    opts: BTreeMap<String, String>,
+    /// `--flag` tokens without values.
+    flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — tokens exclude argv[0].
+    pub fn parse_tokens<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Self::parse_tokens(std::env::args().skip(1))
+    }
+
+    /// Raw option lookup.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; exits the process on a malformed value
+    /// (CLI surface, not library surface).
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.opt(key) {
+            None => default,
+            Some(raw) => raw.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a {}, got {raw:?}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Was `--flag` passed (with no value)?
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// All unknown keys, for strict validation.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse_tokens(tokens.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--env", "cartpole", "--iters=50", "--quiet"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("env"), Some("cartpole"));
+        assert_eq!(a.get_or("iters", 0usize), 50);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get_or("iters", 7usize), 7);
+        assert_eq!(a.str_or("env", "pendulum"), "pendulum");
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "alpha", "beta"]);
+        assert_eq!(a.positional, vec!["alpha", "beta"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["x", "--lo=-3.5"]);
+        assert_eq!(a.get_or("lo", 0.0f64), -3.5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+}

@@ -1,0 +1,152 @@
+//! CSV writer for benchmark and figure outputs.
+//!
+//! Every bench target writes its table/series as CSV under `results/` so
+//! the paper figures can be re-plotted from the raw data.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    /// Create a table with the given column names.
+    pub fn new(columns: &[&str]) -> Self {
+        CsvTable {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of already-formatted cells; must match the header len.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of displayable values.
+    pub fn row_display<D: std::fmt::Display>(&mut self, cells: &[D]) {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to CSV text (RFC-4180-style quoting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        Self::write_row(&mut out, &self.header);
+        for row in &self.rows {
+            Self::write_row(&mut out, row);
+        }
+        out
+    }
+
+    fn write_row(out: &mut String, cells: &[String]) {
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+                let escaped = cell.replace('"', "\"\"");
+                let _ = write!(out, "\"{escaped}\"");
+            } else {
+                out.push_str(cell);
+            }
+        }
+        out.push('\n');
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Render as a GitHub-markdown table (used in bench stdout and
+    /// EXPERIMENTS.md snippets).
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, " {c:<w$} |");
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{}|", "-".repeat(w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row_display(&[1, 2]);
+        t.row(&["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,2\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row_display(&[1]);
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = CsvTable::new(&["name", "v"]);
+        t.row_display(&["long-name", "1"]);
+        let md = t.to_markdown();
+        assert!(md.contains("| name      | v |"));
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("heppo_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut t = CsvTable::new(&["x"]);
+        t.row_display(&[42]);
+        let path = dir.join("sub/out.csv");
+        t.save(&path).unwrap();
+        assert!(std::fs::read_to_string(path).unwrap().contains("42"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,92 @@
+//! Leveled stderr logger.
+//!
+//! Controlled by `HEPPO_LOG` (error|warn|info|debug|trace, default info)
+//! or programmatically via [`set_level`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn env_level() -> Level {
+    match std::env::var("HEPPO_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+/// Current level (lazily initialized from the environment).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let l = env_level();
+        LEVEL.store(l as u8, Ordering::Relaxed);
+        return l;
+    }
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Emit a record if `lvl` is enabled.
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if lvl <= level() {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[heppo {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_get() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+    }
+}

@@ -1,0 +1,24 @@
+//! Self-contained utility substrates.
+//!
+//! The offline crate set for this build contains no `serde`, `clap`,
+//! `tokio`, `rand` or `criterion`; the equivalents needed by the system
+//! are implemented here from scratch (per the build-every-substrate rule):
+//!
+//! - [`rng`] — PCG64-based RNG with uniform/normal/categorical sampling.
+//! - [`json`] — minimal JSON parser + emitter (artifact manifests, configs).
+//! - [`csv`] — CSV writer for benchmark/figure outputs.
+//! - [`cli`] — flag-style argument parser for the `heppo` binary.
+//! - [`threadpool`] — fixed worker pool with scoped parallel-for
+//!   (the EnvPool-style executor substrate).
+//! - [`timer`] — wall-clock phase timing.
+//! - [`logging`] — leveled stderr logger.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;

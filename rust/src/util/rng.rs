@@ -1,0 +1,275 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! PCG-XSH-RR 64/32 (O'Neill 2014) — small, fast, statistically solid for
+//! simulation workloads, and fully deterministic across platforms, which
+//! the reproduction experiments (seeded reward curves) rely on.
+
+/// A PCG-XSH-RR 64/32 generator.
+///
+/// Two independent 32-bit draws are combined for [`Rng::next_u64`].
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Create a generator from a seed; distinct seeds give independent
+    /// streams.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng { state: 0, inc: (seed << 1) | 1, spare_normal: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream (used to give each environment
+    /// worker / trajectory its own stream).
+    pub fn split(&mut self) -> Rng {
+        let seed = self.next_u64();
+        let stream = self.next_u64();
+        let mut rng = Rng { state: 0, inc: (stream << 1) | 1, spare_normal: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free for our
+    /// purposes; modulo bias is negligible for n << 2^64 but we reject to
+    /// be exact).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid u == 0 for the log.
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean/std.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with standard normals (f32).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.normal() as f32;
+        }
+    }
+
+    /// Fill a slice with uniforms in `[lo, hi)` (f32).
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for x in out.iter_mut() {
+            *x = self.uniform_f32(lo, hi);
+        }
+    }
+
+    /// Sample an index from unnormalized log-probabilities (Gumbel-max).
+    pub fn categorical_from_logits(&mut self, logits: &[f32]) -> usize {
+        let mut best = f64::NEG_INFINITY;
+        let mut best_i = 0;
+        for (i, &l) in logits.iter().enumerate() {
+            let u = loop {
+                let u = self.uniform();
+                if u > 1e-300 {
+                    break u;
+                }
+            };
+            let g = l as f64 - (-u.ln()).ln();
+            if g > best {
+                best = g;
+                best_i = i;
+            }
+        }
+        best_i
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut rng = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn categorical_prefers_large_logit() {
+        let mut rng = Rng::new(5);
+        let logits = [0.0f32, 5.0, 0.0];
+        let hits = (0..1000)
+            .filter(|_| rng.categorical_from_logits(&logits) == 1)
+            .count();
+        assert!(hits > 950, "hits={hits}");
+    }
+
+    #[test]
+    fn categorical_matches_softmax_frequencies() {
+        let mut rng = Rng::new(9);
+        let logits = [1.0f32, 2.0, 3.0];
+        let exps: Vec<f64> = logits.iter().map(|&l| (l as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let n = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[rng.categorical_from_logits(&logits)] += 1;
+        }
+        for i in 0..3 {
+            let p = exps[i] / z;
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - p).abs() < 0.02, "i={i} p={p} f={f}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut rng = Rng::new(13);
+        let p = rng.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Rng::new(1);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

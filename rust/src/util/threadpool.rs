@@ -1,0 +1,189 @@
+//! Fixed-size worker thread pool with a scoped parallel-for.
+//!
+//! This is the execution substrate for the vectorized environment engine
+//! (`envs::vec_env`) — the same role EnvPool's C++ thread-pool executor
+//! plays in the paper's related work. tokio is unavailable in the offline
+//! crate set; a purpose-built pool is smaller and has no runtime on the
+//! hot path anyway.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A pool of `n` OS threads consuming jobs from a shared channel.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    handles: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("heppo-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Message::Run(job)) => job(),
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx, handles, size }
+    }
+
+    /// Pool sized to the machine (logical cores, capped).
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.min(32))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Message::Run(Box::new(job))).expect("pool alive");
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool and wait for all
+    /// of them. `f` must be `Sync` since workers share it.
+    ///
+    /// Work is distributed by an atomic cursor so fast workers steal the
+    /// remaining indices (important: env episodes have skewed lengths —
+    /// the same load imbalance the paper's round-robin row scheduler
+    /// addresses in hardware).
+    pub fn scoped_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        // SAFETY ALTERNATIVE: use std scoped threads through the pool's
+        // channel is not possible (jobs are 'static), so we run the
+        // parallel-for on scoped threads directly; the pool size only
+        // bounds the worker count. This keeps the API safe without
+        // unsafe lifetime laundering.
+        let workers = self.size.min(n);
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+
+    /// Map `f` over `0..n` in parallel, collecting results in order.
+    pub fn map<T: Send, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        {
+            let slots: Vec<Mutex<&mut Option<T>>> =
+                out.iter_mut().map(Mutex::new).collect();
+            self.scoped_for(n, |i| {
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+        out.into_iter().map(|v| v.expect("slot filled")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_for_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.scoped_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map(257, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_with_skewed_work() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(32, |i| {
+            // Skewed busy-work emulating unequal episode lengths.
+            let mut acc = 0u64;
+            for k in 0..(i as u64 * 1000) {
+                acc = acc.wrapping_add(k);
+            }
+            (i, acc)
+        });
+        for (i, (j, _)) in out.iter().enumerate() {
+            assert_eq!(i, *j);
+        }
+    }
+
+    #[test]
+    fn zero_len_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_for(0, |_| panic!("should not run"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Wall-clock timing helpers shared by the phase profiler and the bench
+//! harness.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of `f`, returning `(result, elapsed)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// A named accumulator of durations — a phase is entered many times per
+/// run; we keep total + count for means.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    count: u64,
+}
+
+impl Stopwatch {
+    pub fn add(&mut self, d: Duration) {
+        self.total += d;
+        self.count += 1;
+    }
+
+    /// Time a closure and accumulate.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let (out, d) = timed(f);
+        self.add(d);
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+}
+
+/// Format a duration compactly (µs/ms/s) for table output.
+pub fn fmt_duration(d: Duration) -> String {
+    let secs = d.as_secs_f64();
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::default();
+        sw.add(Duration::from_millis(10));
+        sw.add(Duration::from_millis(30));
+        assert_eq!(sw.count(), 2);
+        assert_eq!(sw.total(), Duration::from_millis(40));
+        assert_eq!(sw.mean(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn empty_mean_is_zero() {
+        assert_eq!(Stopwatch::default().mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(Duration::from_nanos(500)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,224 @@
+//! Integration: the PJRT runtime loads and executes every HLO artifact,
+//! and the GAE kernel artifact agrees with the rust reference — the
+//! cross-language correctness loop (`make artifacts` must have run).
+
+use heppo::gae::batched::{gae_batched, GaeBatch};
+use heppo::gae::reference::gae_trajectory;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::runtime::{Runtime, Tensor};
+use heppo::util::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let rt = runtime();
+    for name in [
+        "cartpole_policy_fwd",
+        "cartpole_train_step",
+        "cartpole_init_params",
+        "pendulum_policy_fwd",
+        "pendulum_train_step",
+        "humanoid_lite_policy_fwd",
+        "gae_T128_B16",
+        "gae_T1024_B64",
+        "quant_block_N2048",
+    ] {
+        assert!(rt.manifest.get(name).is_ok(), "missing {name}");
+    }
+}
+
+#[test]
+fn policy_fwd_executes_with_correct_shapes() {
+    let rt = runtime();
+    let spec = rt.manifest.get("cartpole_policy_fwd").unwrap().clone();
+    let p = spec.meta_usize("param_count").unwrap();
+    let b = spec.meta_usize("batch").unwrap();
+    let params = rt.manifest.load_blob_f32("cartpole_init_params").unwrap();
+    assert_eq!(params.len(), p);
+
+    let mut rng = Rng::new(0);
+    let mut obs = vec![0.0f32; b * 4];
+    rng.fill_normal_f32(&mut obs);
+    let out = rt
+        .call(
+            "cartpole_policy_fwd",
+            &[Tensor::vec1(params), Tensor::new(obs, vec![b, 4])],
+        )
+        .unwrap();
+    assert_eq!(out[0].shape, vec![b, 2]); // logits
+    assert_eq!(out[1].shape, vec![b]); // values
+    assert!(out[0].data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn gae_kernel_artifact_matches_rust_reference() {
+    let rt = runtime();
+    let (t_len, b) = (128usize, 16usize);
+    let mut rng = Rng::new(42);
+    let mut rewards = vec![0.0f32; t_len * b];
+    let mut values = vec![0.0f32; (t_len + 1) * b];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let done_mask: Vec<f32> = (0..t_len * b)
+        .map(|_| if rng.uniform() < 0.05 { 1.0 } else { 0.0 })
+        .collect();
+
+    let out = rt
+        .call(
+            "gae_T128_B16",
+            &[
+                Tensor::new(rewards.clone(), vec![t_len, b]),
+                Tensor::new(values.clone(), vec![t_len + 1, b]),
+                Tensor::new(done_mask.clone(), vec![t_len, b]),
+            ],
+        )
+        .unwrap();
+
+    let batch = GaeBatch { t_len, batch: b, rewards, values, done_mask };
+    let want = gae_batched(&GaeParams::new(0.99, 0.95), &batch);
+    assert_eq!(out[0].data.len(), want.advantages.len());
+    for (i, (got, want)) in out[0].data.iter().zip(&want.advantages).enumerate() {
+        assert!(
+            (got - want).abs() < 1e-3,
+            "adv[{i}]: kernel {got} vs rust {want}"
+        );
+    }
+    for (got, want) in out[1].data.iter().zip(&want.rewards_to_go) {
+        assert!((got - want).abs() < 1e-3, "rtg: {got} vs {want}");
+    }
+}
+
+#[test]
+fn gae_kernel_paper_shape_1024x64() {
+    let rt = runtime();
+    let (t_len, b) = (1024usize, 64usize);
+    let mut rng = Rng::new(7);
+    let mut rewards = vec![0.0f32; t_len * b];
+    let mut values = vec![0.0f32; (t_len + 1) * b];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let done_mask = vec![0.0f32; t_len * b];
+    let out = rt
+        .call(
+            "gae_T1024_B64",
+            &[
+                Tensor::new(rewards.clone(), vec![t_len, b]),
+                Tensor::new(values.clone(), vec![t_len + 1, b]),
+                Tensor::new(done_mask, vec![t_len, b]),
+            ],
+        )
+        .unwrap();
+    // Spot-check one column against the scalar reference.
+    let col = 13;
+    let r: Vec<f32> = (0..t_len).map(|t| rewards[t * b + col]).collect();
+    let v: Vec<f32> = (0..=t_len).map(|t| values[t * b + col]).collect();
+    let want = gae_trajectory(&GaeParams::new(0.99, 0.95), &Trajectory::without_dones(r, v));
+    for t in (0..t_len).step_by(97) {
+        assert!(
+            (out[0].data[t * b + col] - want.advantages[t]).abs() < 1e-2,
+            "t={t}"
+        );
+    }
+}
+
+#[test]
+fn train_step_executes_and_decreases_value_loss() {
+    let rt = runtime();
+    let spec = rt.manifest.get("cartpole_train_step").unwrap().clone();
+    let p = spec.meta_usize("param_count").unwrap();
+    let m = spec.meta_usize("minibatch").unwrap();
+    let mut params = rt.manifest.load_blob_f32("cartpole_init_params").unwrap();
+    let mut adam_m = vec![0.0f32; p];
+    let mut adam_v = vec![0.0f32; p];
+    let mut step = 0.0f32;
+
+    let mut rng = Rng::new(3);
+    let mut obs = vec![0.0f32; m * 4];
+    rng.fill_normal_f32(&mut obs);
+    let actions: Vec<f32> = (0..m).map(|_| (rng.below(2)) as f32).collect();
+    let old_logp = vec![(0.5f32).ln(); m];
+    let adv = vec![0.0f32; m]; // isolate the value head
+    let ret: Vec<f32> = (0..m).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+
+    let mut first_v_loss = None;
+    let mut last_v_loss = 0.0;
+    for _ in 0..30 {
+        let out = rt
+            .call(
+                "cartpole_train_step",
+                &[
+                    Tensor::vec1(params.clone()),
+                    Tensor::vec1(adam_m.clone()),
+                    Tensor::vec1(adam_v.clone()),
+                    Tensor::scalar(step),
+                    Tensor::new(obs.clone(), vec![m, 4]),
+                    Tensor::vec1(actions.clone()),
+                    Tensor::vec1(old_logp.clone()),
+                    Tensor::vec1(adv.clone()),
+                    Tensor::vec1(ret.clone()),
+                    Tensor::scalar(3e-3),
+                    Tensor::scalar(0.2),
+                    Tensor::scalar(0.0),
+                ],
+            )
+            .unwrap();
+        params = out[0].data.clone();
+        adam_m = out[1].data.clone();
+        adam_v = out[2].data.clone();
+        step = out[3].data[0];
+        last_v_loss = out[4].data[1];
+        first_v_loss.get_or_insert(last_v_loss);
+    }
+    let first = first_v_loss.unwrap();
+    assert!(step == 30.0);
+    assert!(
+        last_v_loss < first * 0.8,
+        "v_loss must descend: {first} -> {last_v_loss}"
+    );
+}
+
+#[test]
+fn quant_block_artifact_roundtrips() {
+    let rt = runtime();
+    let spec = rt.manifest.get("quant_block_N2048").unwrap().clone();
+    let n = spec.meta_usize("n").unwrap();
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_with(3.0, 2.0) as f32).collect();
+    let out = rt.call("quant_block_N2048", &[Tensor::vec1(x.clone())]).unwrap();
+    // 8-bit block round trip: |err| <= sigma * step/2.
+    let sigma = {
+        let mean = x.iter().sum::<f32>() / n as f32;
+        (x.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / n as f32).sqrt()
+    };
+    let tol = sigma * (10.0 / 255.0) / 2.0 + 1e-4;
+    for (a, b) in out[0].data.iter().zip(&x) {
+        assert!((a - b).abs() <= tol, "{a} vs {b} (tol {tol})");
+    }
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let rt = runtime();
+    let err = rt
+        .call("cartpole_policy_fwd", &[Tensor::scalar(0.0)])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("inputs"), "{err}");
+}
+
+#[test]
+fn wrong_shape_is_rejected() {
+    let rt = runtime();
+    let err = rt
+        .call(
+            "cartpole_policy_fwd",
+            &[Tensor::vec1(vec![0.0; 3]), Tensor::zeros(&[16, 4])],
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shape"), "{err}");
+}

@@ -1,0 +1,118 @@
+//! Integration: the full trainer runs end-to-end through every backend
+//! and improves on CartPole (needs `make artifacts`).
+
+use heppo::coordinator::{GaeBackend, Trainer, TrainerConfig};
+use heppo::quant::CodecKind;
+
+fn base_config() -> TrainerConfig {
+    TrainerConfig {
+        artifact_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        codec: CodecKind::Exp1Baseline,
+        iters: 2,
+        seed: 11,
+        ..TrainerConfig::default()
+    }
+}
+
+#[test]
+fn all_backends_run_one_iteration() {
+    for backend in [
+        GaeBackend::Scalar,
+        GaeBackend::Batched,
+        GaeBackend::Hlo,
+        GaeBackend::HwSim,
+    ] {
+        let mut cfg = base_config();
+        cfg.backend = backend;
+        cfg.iters = 1;
+        let mut t = Trainer::new(cfg).unwrap_or_else(|e| panic!("{backend:?}: {e:#}"));
+        let stats = t.run().unwrap_or_else(|e| panic!("{backend:?}: {e:#}"));
+        assert_eq!(stats.len(), 1);
+        assert!(stats[0].steps > 0);
+        assert!(stats[0].losses.minibatches > 0);
+        if backend == GaeBackend::HwSim {
+            assert!(stats[0].hw_cycles.unwrap() > 0);
+        }
+    }
+}
+
+#[test]
+fn backends_produce_identical_learning_signal() {
+    // Same seed + codec: the first iteration's losses must agree across
+    // scalar/batched/hwsim backends (HLO kernel has f32 reassociation
+    // drift, checked separately in runtime_artifacts).
+    let mut losses = Vec::new();
+    for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
+        let mut cfg = base_config();
+        cfg.backend = backend;
+        cfg.iters = 1;
+        let mut t = Trainer::new(cfg).unwrap();
+        let stats = t.run().unwrap();
+        losses.push(stats[0].losses);
+    }
+    for other in &losses[1..] {
+        assert!((losses[0].pi_loss - other.pi_loss).abs() < 1e-4);
+        assert!((losses[0].v_loss - other.v_loss).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn cartpole_improves_within_25_iterations() {
+    let mut cfg = base_config();
+    cfg.iters = 25;
+    let mut t = Trainer::new(cfg).unwrap();
+    let stats = t.run().unwrap();
+    let early = &stats[2];
+    let late = stats.last().unwrap();
+    assert!(
+        late.mean_return > early.mean_return + 10.0,
+        "return must climb: {} -> {}",
+        early.mean_return,
+        late.mean_return
+    );
+}
+
+#[test]
+fn profiler_covers_every_phase() {
+    use heppo::coordinator::Phase;
+    let mut cfg = base_config();
+    cfg.backend = GaeBackend::Hlo;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    for phase in Phase::ALL {
+        if phase == Phase::GaeMemoryWrite {
+            continue; // in-place write is folded into compute
+        }
+        assert!(
+            t.profiler.total(phase) > std::time::Duration::ZERO,
+            "phase {phase:?} never timed"
+        );
+    }
+    // The phase machine performed 2 handshakes per iteration.
+    assert_eq!(t.phases.handshakes(), 2 * 2);
+}
+
+#[test]
+fn hwsim_backend_reports_paper_scale_cycles() {
+    let mut cfg = base_config();
+    cfg.backend = GaeBackend::HwSim;
+    cfg.iters = 1;
+    let mut t = Trainer::new(cfg).unwrap();
+    let stats = t.run().unwrap();
+    let cycles = stats[0].hw_cycles.unwrap();
+    // 128x16 = 2048 elements on 64 rows: a few hundred cycles, not
+    // thousands (the whole point of the parallel array).
+    assert!(cycles < 5_000, "cycles = {cycles}");
+}
+
+#[test]
+fn codec_variants_all_train() {
+    for codec in CodecKind::all() {
+        let mut cfg = base_config();
+        cfg.codec = codec;
+        cfg.iters = 1;
+        let mut t = Trainer::new(cfg).unwrap();
+        let stats = t.run().unwrap_or_else(|e| panic!("{codec:?}: {e:#}"));
+        assert!(stats[0].losses.minibatches > 0, "{codec:?}");
+    }
+}
