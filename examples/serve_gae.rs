@@ -1,101 +1,181 @@
-//! GAE-as-a-service: drive the coordinator's phase machine under a
-//! request load, measuring per-request latency through the accelerator
-//! path — the "multiple custom hardware components on one SoC" usage the
-//! paper's introduction motivates.
+//! Load generator for the GAE serving subsystem ([`heppo::service`]):
+//! closed-loop and open-loop (Poisson arrivals) traffic against a
+//! sharded, dynamically-batched `GaeService`.
 //!
-//! Clients submit (rewards, values) batches; the service runs DataPrep →
-//! GaeCompute per request (cycle-simulated accelerator + real numerics)
-//! and returns advantages/RTGs. Reports latency percentiles and
-//! sustained throughput.
+//! - **closed loop** (default): `--clients` threads each keep exactly one
+//!   request in flight through the backpressured `submit_blocking` path —
+//!   the classic saturation benchmark; nothing sheds, clients just wait.
+//! - **open loop** (`--open-loop`): requests arrive on a Poisson process
+//!   at `--rate` req/s regardless of service state — the production
+//!   regime where admission control matters; overload shows up as shed
+//!   requests, not as silent queue growth.
 //!
-//! `cargo run --release --example serve_gae [-- --requests 200 --trajectories 64 --timesteps 256]`
+//! Reports service-measured (enqueue→reply) p50/p95/p99 latency, shed
+//! count, sustained throughput, and the service's metrics snapshot.
+//!
+//! ```text
+//! cargo run --release --example serve_gae -- --workers 8 --open-loop
+//! cargo run --release --example serve_gae -- --workers 4 --backend batched \
+//!     --clients 16 --requests 4000 --trajectories 32 --timesteps 256
+//! ```
 
-use heppo::coordinator::phases::{PhaseMachine, SocPhase};
 use heppo::bench::format_si;
-use heppo::gae::Trajectory;
-use heppo::hwsim::GaeHwSim;
+use heppo::coordinator::GaeBackend;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
 use heppo::stats::Summary;
+use heppo::testing::ragged_trajectories;
 use heppo::util::cli::Args;
 use heppo::util::Rng;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-struct Request {
-    trajs: Vec<Trajectory>,
+/// One client request: `n_traj` variable-length trajectories (50%..100%
+/// of `t_len`, like real episode collections) with occasional terminals.
+fn make_request(rng: &mut Rng, n_traj: usize, t_len: usize) -> Vec<Trajectory> {
+    ragged_trajectories(rng, n_traj, (t_len / 2).max(1), t_len, 0.02)
 }
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let n_requests = args.get_or("requests", 200usize);
-    let n_traj = args.get_or("trajectories", 64usize);
-    let t_len = args.get_or("timesteps", 256usize);
+    let workers = args.get_or("workers", 8usize);
+    let backend = GaeBackend::parse_cli(&args.str_or("backend", "hwsim"))?;
+    let n_requests = args.get_or("requests", 2000usize);
+    let n_traj = args.get_or("trajectories", 16usize);
+    let t_len = args.get_or("timesteps", 128usize);
+    let open_loop = args.flag("open-loop");
+    let rate = args.get_or("rate", 2000.0f64); // open-loop arrivals/s
+    let clients = args.get_or("clients", (workers * 2).max(2));
+    let seed = args.get_or("seed", 9u64);
 
-    let mut rng = Rng::new(9);
-    let requests: Vec<Request> = (0..n_requests)
-        .map(|_| Request {
-            trajs: (0..n_traj)
-                .map(|_| {
-                    // Variable lengths: 50%..100% of t_len, like real
-                    // episode collections.
-                    let len = t_len / 2 + rng.below((t_len / 2) as u64 + 1) as usize;
-                    let mut r = vec![0.0f32; len];
-                    let mut v = vec![0.0f32; len + 1];
-                    rng.fill_normal_f32(&mut r);
-                    rng.fill_normal_f32(&mut v);
-                    Trajectory::without_dones(r, v)
+    let config = ServiceConfig {
+        workers,
+        backend,
+        queue_capacity: args.get_or("queue-cap", 256usize),
+        batcher: BatcherConfig {
+            max_batch_lanes: args.get_or("batch-lanes", 256usize),
+            tile_lanes: args.get_or("tile", 64usize),
+            max_wait: Duration::from_micros(args.get_or("max-wait-us", 200u64)),
+        },
+        sim_rows: args.get_or("rows", 64usize),
+        gae: GaeParams::default(),
+    };
+    let service = GaeService::start(config)?;
+    println!(
+        "GaeService: {workers} x {} workers, queue cap {}, tile {} lanes, linger {:?}",
+        backend.label(),
+        config.queue_capacity,
+        config.batcher.tile_lanes,
+        config.batcher.max_wait,
+    );
+    println!(
+        "load: {} requests of {n_traj} trajs x ~{t_len} steps ({})",
+        n_requests,
+        if open_loop {
+            format!("open loop, Poisson {rate:.0} req/s")
+        } else {
+            format!("closed loop, {clients} clients")
+        }
+    );
+
+    let mut root_rng = Rng::new(seed);
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(n_requests);
+    let mut shed = 0u64;
+    let mut elements = 0u64;
+    let wall;
+
+    if open_loop {
+        // Pre-generate every payload so the arrival process pays only
+        // for enqueue + sleep — otherwise generation cost would silently
+        // cap the offered rate below the requested Poisson rate.
+        let mut rng = root_rng.split();
+        let pending: Vec<Vec<Trajectory>> =
+            (0..n_requests).map(|_| make_request(&mut rng, n_traj, t_len)).collect();
+        let t0 = Instant::now();
+        let mut handles = Vec::with_capacity(n_requests);
+        let mut next_arrival = Instant::now();
+        for req in pending {
+            let dt = -(1.0 - rng.uniform()).ln() / rate.max(1e-9);
+            next_arrival += Duration::from_secs_f64(dt);
+            if let Some(wait) = next_arrival.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+            // Open loop never blocks on admission: shed is the signal.
+            match service.enqueue(req) {
+                Ok(h) => handles.push(h),
+                Err(_) => shed += 1,
+            }
+        }
+        for h in handles {
+            let resp = h.wait()?;
+            latencies_us.push(resp.timing.total.as_secs_f64() * 1e6);
+            elements += resp.elements() as u64;
+        }
+        wall = t0.elapsed();
+    } else {
+        // Closed loop: `clients` threads, one request in flight each,
+        // through the backpressured path (blocking admission, no shed).
+        let service = &service;
+        let per_client = (n_requests + clients - 1) / clients.max(1);
+        let mut rngs: Vec<Rng> = (0..clients).map(|_| root_rng.split()).collect();
+        let t0 = Instant::now();
+        let results = std::thread::scope(|s| {
+            let joins: Vec<_> = rngs
+                .iter_mut()
+                .enumerate()
+                .map(|(c, rng)| {
+                    s.spawn(move || {
+                        let quota = per_client.min(n_requests - (c * per_client).min(n_requests));
+                        let mut lat = Vec::with_capacity(quota);
+                        let mut elements = 0u64;
+                        for _ in 0..quota {
+                            let resp = service
+                                .submit_blocking(make_request(rng, n_traj, t_len))
+                                .expect("closed-loop submit");
+                            lat.push(resp.timing.total.as_secs_f64() * 1e6);
+                            elements += resp.elements() as u64;
+                        }
+                        (lat, elements)
+                    })
                 })
-                .collect(),
-        })
-        .collect();
-
-    let sim = GaeHwSim::paper_default();
-    let mut machine = PhaseMachine::new();
-    machine.transition(SocPhase::TrajectoryCollection).unwrap();
-
-    let mut latencies_us = Vec::with_capacity(n_requests);
-    let mut sim_cycles_total = 0u64;
-    let mut elements_total = 0usize;
-    let t0 = Instant::now();
-
-    for req in &requests {
-        let t_req = Instant::now();
-        machine.transition(SocPhase::DataPrep).unwrap();
-        machine.transition(SocPhase::GaeCompute).unwrap();
-        let rep = sim.simulate(&req.trajs);
-        sim_cycles_total += rep.cycles;
-        elements_total += rep.elements;
-        machine.transition(SocPhase::LossAndUpdate).unwrap();
-        machine.transition(SocPhase::TrajectoryCollection).unwrap();
-        // Host-side latency: numerics + scheduling (the simulator did
-        // real math for every element).
-        latencies_us.push(t_req.elapsed().as_secs_f64() * 1e6);
-        std::hint::black_box(&rep.outputs);
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+        });
+        wall = t0.elapsed();
+        for (lat, e) in results {
+            latencies_us.extend(lat);
+            elements += e;
+        }
     }
-    let wall = t0.elapsed();
+    let completed = latencies_us.len();
 
     let s = Summary::of(&latencies_us);
-    println!("served {n_requests} GAE requests ({n_traj} trajs x ~{t_len} steps each)");
+    println!();
     println!(
-        "host latency (µs): p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+        "latency (µs): p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}  (service-measured enqueue→reply, n={completed})",
         s.p50, s.p95, s.p99, s.max
     );
     println!(
-        "host throughput: {:.1} req/s, {} elem/s processed",
-        n_requests as f64 / wall.as_secs_f64(),
-        format_si(elements_total as f64 / wall.as_secs_f64())
+        "shed: {shed} of {n_requests} requests ({:.1}%) by admission control",
+        shed as f64 / n_requests.max(1) as f64 * 100.0
     );
     println!(
-        "accelerator projection: {} total cycles @300 MHz = {:.2} ms for all requests \
-         ({} elem/s)",
-        sim_cycles_total,
-        sim_cycles_total as f64 / 300e6 * 1e3,
-        format_si(elements_total as f64 / (sim_cycles_total as f64 / 300e6))
+        "sustained throughput: {} elem/s, {:.1} req/s over {:.2}s wall",
+        format_si(elements as f64 / wall.as_secs_f64()),
+        completed as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64()
     );
-    println!(
-        "phase machine: {} transitions, {} PS<->PL handshakes, {:?} handshake overhead",
-        machine.transitions(),
-        machine.handshakes(),
-        machine.overhead()
-    );
+
+    let snap = service.shutdown();
+    println!();
+    println!("service metrics:");
+    println!("{snap}");
+    if snap.hw_cycles > 0 {
+        println!(
+            "accelerator projection: {} simulated cycles @300 MHz = {:.2} ms total",
+            snap.hw_cycles,
+            snap.hw_cycles as f64 / 300e6 * 1e3
+        );
+    }
     println!("serve_gae OK");
     Ok(())
 }

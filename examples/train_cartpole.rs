@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         iters: args.get_or("iters", 300usize),
         // The GAE phase runs through the Pallas-lowered kernel so the
         // e2e driver proves all three layers compose.
-        backend: GaeBackend::parse(&args.str_or("backend", "hlo")).unwrap(),
+        backend: GaeBackend::parse_cli(&args.str_or("backend", "hlo"))?,
         // CartPole's constant +1 reward makes dynamic standardization
         // degenerate (see EXPERIMENTS.md §Fig7-note); the e2e driver
         // uses the baseline codec. quant_ablation.rs covers the rest.

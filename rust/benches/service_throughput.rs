@@ -1,0 +1,202 @@
+//! Serving-subsystem throughput sweep: worker count × tile width ×
+//! backend, under saturating closed-loop load.
+//!
+//! Each configuration runs `2 × workers` closed-loop clients against a
+//! fresh `GaeService` and measures sustained element throughput and
+//! service-measured (enqueue→reply) latency percentiles. Emits a markdown table, the
+//! standard CSV under `results/`, and one JSON row per configuration in
+//! `results/service_throughput.jsonl` (the machine-readable bench
+//! format: one self-describing object per line).
+//!
+//! Shape check (the scaling claim the subsystem exists for): with the
+//! hwsim backend, 8 workers must sustain ≥ 4× the single-worker
+//! throughput on the same machine.
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep for CI.
+
+use heppo::bench::format_si;
+use heppo::coordinator::GaeBackend;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::stats::Summary;
+use heppo::testing::ragged_trajectories;
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use heppo::util::Rng;
+use std::time::{Duration, Instant};
+
+struct RunResult {
+    elem_per_sec: f64,
+    req_per_sec: f64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    shed: u64,
+    mean_batch_lanes: f64,
+}
+
+fn make_request(rng: &mut Rng, n_traj: usize, t_len: usize) -> Vec<Trajectory> {
+    ragged_trajectories(rng, n_traj, (t_len / 2).max(1), t_len, 0.0)
+}
+
+/// Saturating closed-loop run: `clients` threads, one request in flight
+/// each, for `n_requests` total.
+fn run_config(
+    workers: usize,
+    tile_lanes: usize,
+    backend: GaeBackend,
+    n_requests: usize,
+    n_traj: usize,
+    t_len: usize,
+) -> RunResult {
+    let service = GaeService::start(ServiceConfig {
+        workers,
+        backend,
+        queue_capacity: 1024, // saturation test: no shedding wanted
+        batcher: BatcherConfig {
+            max_batch_lanes: tile_lanes * 4,
+            tile_lanes,
+            max_wait: Duration::from_micros(100),
+        },
+        sim_rows: 64,
+        gae: GaeParams::default(),
+    })
+    .expect("service start");
+
+    let clients = (workers * 2).max(2);
+    let per_client = (n_requests + clients - 1) / clients;
+    let mut root = Rng::new(42);
+    let mut rngs: Vec<Rng> = (0..clients).map(|_| root.split()).collect();
+    let t0 = Instant::now();
+    let svc = &service;
+    let results = std::thread::scope(|s| {
+        let joins: Vec<_> = rngs
+            .iter_mut()
+            .map(|rng| {
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(per_client);
+                    let mut elements = 0u64;
+                    for _ in 0..per_client {
+                        // Backpressured path: a saturation sweep must not shed.
+                        if let Ok(resp) = svc.submit_blocking(make_request(rng, n_traj, t_len)) {
+                            lat.push(resp.timing.total.as_secs_f64() * 1e6);
+                            elements += resp.elements() as u64;
+                        }
+                    }
+                    (lat, elements)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = service.shutdown();
+
+    let mut latencies = Vec::new();
+    let mut elements = 0u64;
+    for (lat, e) in results {
+        latencies.extend(lat);
+        elements += e;
+    }
+    let s = Summary::of(&latencies);
+    RunResult {
+        elem_per_sec: elements as f64 / wall,
+        req_per_sec: latencies.len() as f64 / wall,
+        p50_us: s.p50,
+        p95_us: s.p95,
+        p99_us: s.p99,
+        shed: snap.shed,
+        mean_batch_lanes: snap.mean_batch_lanes,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let (n_requests, n_traj, t_len) = if fast { (160, 8, 64) } else { (1200, 16, 256) };
+    let worker_counts: &[usize] = if fast { &[1, 8] } else { &[1, 2, 4, 8] };
+    let tile_widths: &[usize] = if fast { &[64] } else { &[16, 64] };
+    let backends = [GaeBackend::Batched, GaeBackend::HwSim];
+
+    println!(
+        "service throughput sweep: {n_requests} reqs of {n_traj} trajs x ~{t_len} steps\n"
+    );
+    let mut table = CsvTable::new(&[
+        "backend", "workers", "tile_lanes", "elem_per_sec", "req_per_sec", "p50_us",
+        "p95_us", "p99_us", "mean_batch_lanes", "shed",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut one_worker_hwsim = None;
+    let mut eight_worker_hwsim = None;
+
+    for &backend in &backends {
+        for &workers in worker_counts {
+            for &tile in tile_widths {
+                let r = run_config(workers, tile, backend, n_requests, n_traj, t_len);
+                println!(
+                    "{:<8} workers {workers} tile {tile:<3} -> {} elem/s, p50 {:.0}µs p99 {:.0}µs, {:.1} lanes/batch",
+                    backend.label(),
+                    format_si(r.elem_per_sec),
+                    r.p50_us,
+                    r.p99_us,
+                    r.mean_batch_lanes,
+                );
+                if backend == GaeBackend::HwSim && tile == 64 {
+                    if workers == 1 {
+                        one_worker_hwsim = Some(r.elem_per_sec);
+                    }
+                    if workers == 8 {
+                        eight_worker_hwsim = Some(r.elem_per_sec);
+                    }
+                }
+                table.row(&[
+                    backend.label().to_string(),
+                    workers.to_string(),
+                    tile.to_string(),
+                    format!("{:.3e}", r.elem_per_sec),
+                    format!("{:.1}", r.req_per_sec),
+                    format!("{:.0}", r.p50_us),
+                    format!("{:.0}", r.p95_us),
+                    format!("{:.0}", r.p99_us),
+                    format!("{:.1}", r.mean_batch_lanes),
+                    r.shed.to_string(),
+                ]);
+                json_rows.push(
+                    Json::obj(vec![
+                        ("bench", Json::from("service_throughput")),
+                        ("backend", Json::from(backend.label())),
+                        ("workers", Json::from(workers)),
+                        ("tile_lanes", Json::from(tile)),
+                        ("requests", Json::from(n_requests)),
+                        ("trajectories", Json::from(n_traj)),
+                        ("timesteps", Json::from(t_len)),
+                        ("elem_per_sec", Json::from(r.elem_per_sec)),
+                        ("req_per_sec", Json::from(r.req_per_sec)),
+                        ("p50_us", Json::from(r.p50_us)),
+                        ("p95_us", Json::from(r.p95_us)),
+                        ("p99_us", Json::from(r.p99_us)),
+                        ("mean_batch_lanes", Json::from(r.mean_batch_lanes)),
+                        ("shed", Json::from(r.shed as usize)),
+                    ])
+                    .to_string(),
+                );
+            }
+        }
+    }
+
+    println!("\n{}", table.to_markdown());
+    table.save("results/service_throughput.csv")?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/service_throughput.jsonl", json_rows.join("\n") + "\n")?;
+    println!("-> results/service_throughput.csv, results/service_throughput.jsonl");
+
+    if let (Some(one), Some(eight)) = (one_worker_hwsim, eight_worker_hwsim) {
+        let scaling = eight / one;
+        println!(
+            "\nshape check: hwsim 8-worker vs 1-worker throughput = {scaling:.2}x \
+             (target >= 4x) -> {}",
+            if scaling >= 4.0 { "PASS" } else { "BELOW TARGET (machine cores?)" }
+        );
+    }
+    println!("service_throughput OK");
+    Ok(())
+}

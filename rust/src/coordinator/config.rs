@@ -74,10 +74,7 @@ impl TrainerConfig {
         let codec = CodecKind::parse(&codec_str)
             .ok_or_else(|| anyhow::anyhow!("unknown codec {codec_str:?} (exp1..exp5)"))?;
         let backend_str = args.str_or("backend", d.backend.label());
-        let backend = GaeBackend::parse(&backend_str)
-            .ok_or_else(|| anyhow::anyhow!(
-                "unknown backend {backend_str:?} (scalar|batched|hlo|hwsim)"
-            ))?;
+        let backend = GaeBackend::parse_cli(&backend_str)?;
         Ok(TrainerConfig {
             env: args.str_or("env", &d.env),
             iters: args.get_or("iters", d.iters),
@@ -134,8 +131,8 @@ impl TrainerConfig {
             c.quant_bits = v as u8;
         }
         if let Some(v) = j.get("backend").and_then(Json::as_str) {
-            c.backend = GaeBackend::parse(v)
-                .ok_or_else(|| anyhow::anyhow!("config: unknown backend {v:?}"))?;
+            c.backend = GaeBackend::parse_cli(v)
+                .map_err(|e| anyhow::anyhow!("config: {e}"))?;
         }
         if let Some(v) = j.get("seed").and_then(Json::as_usize) {
             c.seed = v as u64;

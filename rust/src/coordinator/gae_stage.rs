@@ -31,14 +31,35 @@ pub enum GaeBackend {
 }
 
 impl GaeBackend {
+    /// Every backend, in presentation order.
+    pub const ALL: [GaeBackend; 4] = [
+        GaeBackend::Scalar,
+        GaeBackend::Batched,
+        GaeBackend::Hlo,
+        GaeBackend::HwSim,
+    ];
+
+    /// Case-insensitive name lookup (`"HwSim"`, `"BATCHED"`, … all work).
     pub fn parse(s: &str) -> Option<GaeBackend> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "scalar" => Some(GaeBackend::Scalar),
             "batched" => Some(GaeBackend::Batched),
             "hlo" => Some(GaeBackend::Hlo),
             "hwsim" => Some(GaeBackend::HwSim),
             _ => None,
         }
+    }
+
+    /// CLI-boundary parse: a helpful error that lists the valid names
+    /// instead of a bare `None`.
+    pub fn parse_cli(s: &str) -> anyhow::Result<GaeBackend> {
+        Self::parse(s).ok_or_else(|| {
+            let valid: Vec<&str> = Self::ALL.iter().map(|b| b.label()).collect();
+            anyhow::anyhow!(
+                "unknown GAE backend {s:?}; valid backends: {}",
+                valid.join(", ")
+            )
+        })
     }
 
     pub fn label(&self) -> &'static str {
@@ -62,36 +83,56 @@ pub struct GaeResult {
     pub hw_cycles: Option<u64>,
 }
 
+/// Split one lane of `[T]` rewards / `[T+1]` values / `[T]` dones into
+/// single-episode trajectories (the preprocessing the paper's round-
+/// robin row dispatch implies: each systolic row receives one episode's
+/// vectors). Terminal segments get a zeroed bootstrap value. Returns
+/// `(start_t, trajectory)` pairs covering `[0, T)` exactly once.
+///
+/// Shared by the trainer's [`split_column`] and the serving subsystem's
+/// batcher ([`crate::service`]), which splits client trajectories the
+/// same way before dispatching them to `hwsim` rows.
+pub fn split_at_dones(
+    rewards: impl Fn(usize) -> f32,
+    values: impl Fn(usize) -> f32,
+    dones: impl Fn(usize) -> bool,
+    t_len: usize,
+) -> Vec<(usize, Trajectory)> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for t in 0..t_len {
+        let done = dones(t);
+        if done || t == t_len - 1 {
+            let end = t + 1;
+            let seg_rewards: Vec<f32> = (start..end).map(&rewards).collect();
+            let mut seg_values: Vec<f32> = (start..=end).map(&values).collect();
+            if done {
+                seg_values[end - start] = 0.0; // terminal: no bootstrap
+            }
+            let mut seg_dones = vec![false; end - start];
+            if done {
+                *seg_dones.last_mut().unwrap() = true;
+            }
+            out.push((start, Trajectory::new(seg_rewards, seg_values, seg_dones)));
+            start = end;
+        }
+    }
+    out
+}
+
 /// Split one env's column into single-episode trajectories for the
-/// hardware rows (the coordinator-side preprocessing the paper's round-
-/// robin row dispatch implies). Returns (start_t, trajectory) pairs.
+/// hardware rows. Returns (start_t, trajectory) pairs.
 pub fn split_column(
     rollout: &Rollout,
     env_idx: usize,
 ) -> Vec<(usize, Trajectory)> {
     let (t_len, b) = (rollout.t_len, rollout.batch);
-    let mut out = Vec::new();
-    let mut start = 0usize;
-    for t in 0..t_len {
-        let done = rollout.done_mask[t * b + env_idx] == 1.0;
-        if done || t == t_len - 1 {
-            let end = t + 1;
-            let rewards: Vec<f32> =
-                (start..end).map(|u| rollout.rewards[u * b + env_idx]).collect();
-            let mut values: Vec<f32> =
-                (start..=end).map(|u| rollout.values[u * b + env_idx]).collect();
-            if done {
-                values[end - start] = 0.0; // terminal: no bootstrap
-            }
-            let mut dones = vec![false; end - start];
-            if done {
-                *dones.last_mut().unwrap() = true;
-            }
-            out.push((start, Trajectory::new(rewards, values, dones)));
-            start = end;
-        }
-    }
-    out
+    split_at_dones(
+        |t| rollout.rewards[t * b + env_idx],
+        |t| rollout.values[t * b + env_idx],
+        |t| rollout.done_mask[t * b + env_idx] == 1.0,
+        t_len,
+    )
 }
 
 /// Run the full GAE phase: codec round trip (StoringTrajectories /
@@ -305,6 +346,24 @@ mod tests {
             rollout.rewards.iter().sum::<f32>() / rollout.rewards.len() as f32;
         assert!(raw_mean > 40.0);
         assert!(post_mean.abs() < 1.0, "rewards must be standardized, got {post_mean}");
+    }
+
+    #[test]
+    fn backend_parse_is_case_insensitive() {
+        assert_eq!(GaeBackend::parse("HwSim"), Some(GaeBackend::HwSim));
+        assert_eq!(GaeBackend::parse("BATCHED"), Some(GaeBackend::Batched));
+        assert_eq!(GaeBackend::parse("Scalar"), Some(GaeBackend::Scalar));
+        assert_eq!(GaeBackend::parse("hlo"), Some(GaeBackend::Hlo));
+        assert_eq!(GaeBackend::parse("fpga"), None);
+    }
+
+    #[test]
+    fn backend_parse_cli_lists_valid_names() {
+        assert_eq!(GaeBackend::parse_cli("HWSIM").unwrap(), GaeBackend::HwSim);
+        let err = GaeBackend::parse_cli("fpga").unwrap_err().to_string();
+        for b in GaeBackend::ALL {
+            assert!(err.contains(b.label()), "error must list {}: {err}", b.label());
+        }
     }
 
     #[test]

@@ -50,12 +50,23 @@ impl SocPhase {
 }
 
 /// Error for illegal phase transitions.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("illegal SoC phase transition {from:?} -> {to:?}")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PhaseError {
     pub from: SocPhase,
     pub to: SocPhase,
 }
+
+impl std::fmt::Display for PhaseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "illegal SoC phase transition {:?} -> {:?}",
+            self.from, self.to
+        )
+    }
+}
+
+impl std::error::Error for PhaseError {}
 
 /// The sequencer.
 #[derive(Debug)]

@@ -29,6 +29,7 @@
 //! | [`envs`] | Rust-native RL environments + thread-pooled vector env |
 //! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
 //! | [`coordinator`] | the PPO training system (rollout, GAE stage, update) |
+//! | [`service`] | GAE serving: dynamic batching, sharded workers, admission control |
 //! | [`bench`] | micro-benchmark harness used by `cargo bench` targets |
 //! | [`testing`] | mini property-test harness used across the test suite |
 
@@ -40,6 +41,7 @@ pub mod hwsim;
 pub mod memory;
 pub mod quant;
 pub mod runtime;
+pub mod service;
 pub mod stats;
 pub mod testing;
 pub mod util;

@@ -22,15 +22,26 @@ pub struct FiloStack<T> {
 }
 
 /// Errors from stack misuse.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FiloError {
-    #[error("stack is full ({0} rows)")]
     Full(usize),
-    #[error("stack is empty")]
     Empty,
-    #[error("row width {got} != batch {want}")]
     Width { got: usize, want: usize },
 }
+
+impl std::fmt::Display for FiloError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FiloError::Full(rows) => write!(f, "stack is full ({rows} rows)"),
+            FiloError::Empty => write!(f, "stack is empty"),
+            FiloError::Width { got, want } => {
+                write!(f, "row width {got} != batch {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FiloError {}
 
 impl<T: Clone> FiloStack<T> {
     /// A stack able to hold `capacity_rows` rows of `batch` elements.
@@ -172,6 +183,58 @@ mod tests {
         });
         assert_eq!(seen, vec![4, 3, 2, 1, 0]);
         assert_eq!(rewards.row(2).unwrap(), &[-2.0, -12.0]);
+    }
+
+    #[test]
+    fn exchange_top_error_paths() {
+        // Empty stack: nothing to exchange.
+        let mut s: FiloStack<u16> = FiloStack::new(2, 4);
+        assert_eq!(s.exchange_top(&[1, 2]), Err(FiloError::Empty));
+        // Wrong width is rejected before touching the resident row.
+        s.push_row(&[5, 6]).unwrap();
+        assert_eq!(
+            s.exchange_top(&[1, 2, 3]),
+            Err(FiloError::Width { got: 3, want: 2 })
+        );
+        assert_eq!(s.peek_row().unwrap(), &[5, 6], "failed exchange must not corrupt");
+    }
+
+    #[test]
+    fn error_display_is_descriptive() {
+        assert_eq!(FiloError::Full(32).to_string(), "stack is full (32 rows)");
+        assert_eq!(FiloError::Empty.to_string(), "stack is empty");
+        assert_eq!(
+            FiloError::Width { got: 2, want: 3 }.to_string(),
+            "row width 2 != batch 3"
+        );
+    }
+
+    #[test]
+    fn dual_port_overwrite_round_trip() {
+        // §IV-3: the GAE pass reads (r, v) from the top and writes back
+        // (adv, rtg) in place, then the PS pops the results — a full
+        // overwrite-in-place round trip through both ports.
+        let mut s: FiloStack<f32> = FiloStack::new(2, 4);
+        for t in 0..4 {
+            s.push_row(&[t as f32, t as f32 + 10.0]).unwrap();
+        }
+        // Backward sweep: exchange each top row for its "computed" form.
+        let mut popped = Vec::new();
+        for _ in 0..4 {
+            let old = s.peek_row().unwrap().to_vec();
+            let new: Vec<f32> = old.iter().map(|x| x * 2.0).collect();
+            let returned = s.exchange_top(&new).unwrap();
+            assert_eq!(returned, old, "exchange returns the pre-overwrite row");
+            popped.push(s.pop_row().unwrap());
+        }
+        // Pops see the replacements, newest first.
+        assert_eq!(popped[0], vec![6.0, 26.0]);
+        assert_eq!(popped[3], vec![0.0, 20.0]);
+        assert!(s.is_empty());
+        assert_eq!(s.pop_row(), Err(FiloError::Empty));
+        // The stack is reusable after draining (next PPO iteration).
+        s.push_row(&[1.0, 2.0]).unwrap();
+        assert_eq!(s.len(), 1);
     }
 
     #[test]

@@ -8,6 +8,10 @@
 //! tuple literal which we decompose into per-output tensors.
 
 use super::artifact::{ArtifactSpec, Manifest};
+// The offline crate set has no xla_extension; compile against the
+// API-shaped stub. Point this alias at the external `xla` crate to run
+// on a machine with the PJRT native library installed.
+use super::xla_stub as xla;
 use anyhow::{anyhow, Context, Result};
 use std::cell::RefCell;
 use std::collections::BTreeMap;

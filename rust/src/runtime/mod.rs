@@ -10,6 +10,7 @@
 
 pub mod artifact;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
 pub use client::{Runtime, Tensor};

@@ -1,0 +1,185 @@
+//! Offline stand-in for the `xla` (xla_extension) crate.
+//!
+//! The PJRT native library is not part of the offline crate set, so
+//! [`client`](super::client) is compiled against this API-shaped stub
+//! instead. Every entry point that would touch PJRT returns
+//! [`XlaError::Unavailable`]; [`PjRtClient::cpu`] fails first, so
+//! `Runtime::new` reports a single clear error and everything gated on
+//! a runtime (the `hlo` backend, artifact tests) degrades gracefully.
+//!
+//! When a real `xla_extension` build is present, point the `xla` alias
+//! in `client.rs` back at the external crate — the call surface here
+//! (`Literal::vec1/reshape/to_tuple/convert/to_vec`, `PjRtClient::cpu/
+//! compile/platform_name`, `PjRtLoadedExecutable::execute`,
+//! `HloModuleProto::from_text_file`, `XlaComputation::from_proto`) is a
+//! strict subset of xla-rs 0.5.
+
+use std::fmt;
+
+/// Error type for all stubbed PJRT operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum XlaError {
+    /// The PJRT runtime is not present in this build.
+    Unavailable,
+    /// Host-side shape bookkeeping failed (a real bug, not a missing
+    /// runtime): element count vs. requested dims.
+    ShapeMismatch { elems: usize, dims: Vec<i64> },
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable => f.write_str(
+                "PJRT/xla_extension is unavailable in this offline build \
+                 (HLO artifacts cannot execute; use the scalar/batched/hwsim \
+                 backends, or link the real `xla` crate)",
+            ),
+            XlaError::ShapeMismatch { elems, dims } => write!(
+                f,
+                "literal reshape mismatch: {elems} elements vs dims {dims:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Element types an output literal can be converted to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+}
+
+/// Host literal: data + dims. Construction works (it is pure host-side
+/// bookkeeping); anything that would need the native runtime errors.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Marker trait for element types [`Literal::to_vec`] can produce.
+pub trait LiteralElem: Sized {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl LiteralElem for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from host data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(XlaError::ShapeMismatch {
+                elems: self.data.len(),
+                dims: dims.to_vec(),
+            });
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal (requires the native runtime).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+
+    /// Convert to another element type (requires the native runtime).
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>, XlaError> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] is the single failure point the
+/// rest of the runtime funnels through.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError::Unavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_roundtrips_host_side() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        // Shape bugs report as shape bugs, not as a missing runtime.
+        let err = lit.reshape(&[3]).unwrap_err();
+        assert_eq!(err, XlaError::ShapeMismatch { elems: 4, dims: vec![3] });
+        assert!(err.to_string().contains("reshape mismatch"));
+    }
+}

@@ -1,0 +1,350 @@
+//! Dynamic batching: coalesce variable-length trajectories from many
+//! concurrent clients into fixed `[T, B]` tiles for the backend.
+//!
+//! Two halves:
+//!
+//! - **Grouping** ([`DynamicBatcher::next_group`]): a worker blocks for
+//!   the first queued request, drains whatever else is already queued,
+//!   and lingers up to `max_wait` for stragglers only when that drain
+//!   found concurrent traffic — small batches with zero added latency
+//!   under light load, full `max_batch_lanes` groups under heavy load.
+//! - **Tiling** ([`PaddedTile`]): a set of ragged trajectories becomes a
+//!   timestep-major `[T, B]` tile (`T` = longest lane) with a segment
+//!   mask, shaped exactly like the paper's memory-block layout so it can
+//!   feed [`gae_batched`] unchanged.
+//!
+//! ## Padding that cannot leak
+//!
+//! GAE runs *backward*, so naive zero-padding at the tail of a short
+//! lane would inject a spurious `-γ·V_boot` delta into the real region.
+//! The pad scheme makes every pad row a fixed point of the recurrence:
+//! for a lane of true length `L < T`,
+//!
+//! - `values[L]` keeps the lane's real bootstrap `V(s_L)` (row `L-1`'s
+//!   delta needs it); rows `L+1..=T` are zero;
+//! - pad rewards equal the pad-row value (`rewards[L] = V(s_L)`, zero
+//!   after), so every pad delta is `r - v = 0`;
+//! - the pad region is marked done (`done_mask = 1`), so no carry flows
+//!   across it in either direction.
+//!
+//! Pad advantages are therefore exactly zero and real rows match the
+//! unpadded recurrence bit-for-bit; [`PaddedTile::unpack`] then trims
+//! each lane back to its true length.
+
+use crate::gae::batched::GaeBatch;
+use crate::gae::{GaeOutput, Trajectory};
+use crate::service::queue::BoundedQueue;
+use crate::service::request::WorkItem;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Coalescing budget: stop collecting once this many trajectory
+    /// lanes are on hand (they are then cut into tiles).
+    pub max_batch_lanes: usize,
+    /// Lane width `B` of one `[T, B]` tile — sized for the backend
+    /// (64 = the paper's row count).
+    pub tile_lanes: usize,
+    /// How long a worker lingers for more requests after the first.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch_lanes: 256,
+            tile_lanes: 64,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+/// The size-or-timeout grouping policy.
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicBatcher {
+    pub config: BatcherConfig,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> Self {
+        DynamicBatcher { config }
+    }
+
+    /// Block for the next request, then coalesce. `None` once the queue
+    /// is closed and drained (worker shutdown).
+    ///
+    /// Policy: drain whatever is already queued for free, and *linger*
+    /// (up to `max_wait`) only when that drain found company — i.e.
+    /// traffic is demonstrably concurrent. A lone request on an idle
+    /// service flushes immediately, so light load never pays the linger
+    /// as a latency floor.
+    pub(crate) fn next_group(&self, queue: &BoundedQueue<WorkItem>) -> Option<Vec<WorkItem>> {
+        let first = queue.pop()?;
+        let mut lanes = first.lanes;
+        let mut group = vec![first];
+        // Free drain: everything that queued up while we were busy.
+        while lanes < self.config.max_batch_lanes {
+            match queue.try_pop() {
+                Some(item) => {
+                    lanes += item.lanes;
+                    group.push(item);
+                }
+                None => break,
+            }
+        }
+        // Linger for stragglers only under concurrent traffic.
+        if group.len() > 1 {
+            let deadline = Instant::now() + self.config.max_wait;
+            while lanes < self.config.max_batch_lanes {
+                match queue.pop_deadline(deadline) {
+                    Some(item) => {
+                        lanes += item.lanes;
+                        group.push(item);
+                    }
+                    None => break,
+                }
+            }
+        }
+        Some(group)
+    }
+}
+
+/// A fixed `[T, B]` tile of padded trajectories.
+#[derive(Debug, Clone)]
+pub struct PaddedTile {
+    /// Padded timestep count `T` (the longest lane).
+    pub t_len: usize,
+    /// Lane count `B`.
+    pub lanes: usize,
+    /// `[T * B]` timestep-major rewards (pad scheme above).
+    pub rewards: Vec<f32>,
+    /// `[(T+1) * B]` values; row `L` of each lane keeps its bootstrap.
+    pub values: Vec<f32>,
+    /// `[T * B]` done mask; the pad region reads 1.0.
+    pub done_mask: Vec<f32>,
+    /// True (unpadded) length of each lane — the compact encoding of the
+    /// segment mask (see [`PaddedTile::segment_mask`]).
+    pub lens: Vec<usize>,
+}
+
+impl PaddedTile {
+    /// Tile up a set of ragged lanes (at least one, each of length ≥ 0).
+    pub fn from_lanes(trajs: &[&Trajectory]) -> PaddedTile {
+        assert!(!trajs.is_empty(), "a tile needs at least one lane");
+        let lanes = trajs.len();
+        let t_len = trajs.iter().map(|t| t.len()).max().unwrap();
+        let mut rewards = vec![0.0f32; t_len * lanes];
+        let mut values = vec![0.0f32; (t_len + 1) * lanes];
+        let mut done_mask = vec![0.0f32; t_len * lanes];
+        let mut lens = Vec::with_capacity(lanes);
+        for (i, traj) in trajs.iter().enumerate() {
+            let len = traj.len();
+            lens.push(len);
+            for t in 0..len {
+                rewards[t * lanes + i] = traj.rewards[t];
+                done_mask[t * lanes + i] = if traj.dones[t] { 1.0 } else { 0.0 };
+            }
+            for t in 0..=len {
+                values[t * lanes + i] = traj.values[t];
+            }
+            // Pad region: done everywhere; the first pad row repeats the
+            // bootstrap as its reward so its delta is exactly zero.
+            if len < t_len {
+                rewards[len * lanes + i] = traj.values[len];
+                for t in len..t_len {
+                    done_mask[t * lanes + i] = 1.0;
+                }
+            }
+        }
+        PaddedTile { t_len, lanes, rewards, values, done_mask, lens }
+    }
+
+    /// Materialize the `[T * B]` segment mask (1.0 = real element, 0.0 =
+    /// padding). `lens` encodes it compactly; the full plane is only
+    /// built on demand (diagnostics, masked consumers) — never on the
+    /// serving hot path.
+    pub fn segment_mask(&self) -> Vec<f32> {
+        let mut mask = vec![0.0f32; self.t_len * self.lanes];
+        for (i, &len) in self.lens.iter().enumerate() {
+            for t in 0..len {
+                mask[t * self.lanes + i] = 1.0;
+            }
+        }
+        mask
+    }
+
+    /// Borrow-and-copy view as the batched backend's input type (tests
+    /// and callers that keep the tile; the hot path uses
+    /// [`PaddedTile::into_parts`]).
+    pub fn to_gae_batch(&self) -> GaeBatch {
+        GaeBatch {
+            t_len: self.t_len,
+            batch: self.lanes,
+            rewards: self.rewards.clone(),
+            values: self.values.clone(),
+            done_mask: self.done_mask.clone(),
+        }
+    }
+
+    /// Consume the tile into the batched backend's input plus the
+    /// per-lane lengths needed to trim its output — zero plane copies.
+    pub fn into_parts(self) -> (GaeBatch, Vec<usize>) {
+        (
+            GaeBatch {
+                t_len: self.t_len,
+                batch: self.lanes,
+                rewards: self.rewards,
+                values: self.values,
+                done_mask: self.done_mask,
+            },
+            self.lens,
+        )
+    }
+
+    /// Trim a `[T, B]` batched output back to per-lane outputs of the
+    /// original lengths (input order).
+    pub fn unpack(&self, out: &GaeOutput) -> Vec<GaeOutput> {
+        unpack_lanes(&self.lens, self.lanes, out)
+    }
+
+    /// Real (unpadded) element count.
+    pub fn real_elements(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Tile element count including padding.
+    pub fn padded_elements(&self) -> usize {
+        self.t_len * self.lanes
+    }
+
+    /// Fraction of the tile that is padding (a batcher efficiency gauge).
+    pub fn pad_fraction(&self) -> f64 {
+        let padded = self.padded_elements();
+        if padded == 0 {
+            0.0
+        } else {
+            1.0 - self.real_elements() as f64 / padded as f64
+        }
+    }
+}
+
+/// Trim a `[T, B]` batched output (`lanes` = B) back to per-lane
+/// outputs of the given true lengths, input order.
+pub fn unpack_lanes(lens: &[usize], lanes: usize, out: &GaeOutput) -> Vec<GaeOutput> {
+    lens.iter()
+        .enumerate()
+        .map(|(i, &len)| {
+            let mut advantages = Vec::with_capacity(len);
+            let mut rewards_to_go = Vec::with_capacity(len);
+            for t in 0..len {
+                advantages.push(out.advantages[t * lanes + i]);
+                rewards_to_go.push(out.rewards_to_go[t * lanes + i]);
+            }
+            GaeOutput { advantages, rewards_to_go }
+        })
+        .collect()
+}
+
+/// Cut a flat lane list into tiles of at most `tile_lanes` lanes.
+pub fn tile_lanes<'a>(lanes: &[&'a Trajectory], tile_width: usize) -> Vec<Vec<&'a Trajectory>> {
+    let tile_width = tile_width.max(1);
+    lanes.chunks(tile_width).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::reference::gae_trajectory;
+    use crate::gae::GaeParams;
+    use crate::gae::batched::gae_batched;
+    use crate::testing::{check, Gen};
+
+    fn ragged_lanes(g: &mut Gen, n: usize, max_t: usize) -> Vec<Trajectory> {
+        crate::testing::ragged_trajectories(g.rng(), n, 1, max_t, 0.1)
+    }
+
+    #[test]
+    fn padding_never_leaks_into_real_rows() {
+        check("padded tile == per-trajectory reference", 30, |g| {
+            let trajs = ragged_lanes(g, g.usize_in(1, 12), 32);
+            let refs: Vec<&Trajectory> = trajs.iter().collect();
+            // The worker's exact hot path: consume the tile, no copies.
+            let tile = PaddedTile::from_lanes(&refs);
+            let (batch, lens) = tile.into_parts();
+            let out = gae_batched(&GaeParams::default(), &batch);
+            let per_lane = unpack_lanes(&lens, batch.batch, &out);
+            for (traj, got) in trajs.iter().zip(&per_lane) {
+                let want = gae_trajectory(&GaeParams::default(), traj);
+                assert_eq!(got.advantages.len(), traj.len());
+                for t in 0..traj.len() {
+                    assert!(
+                        (got.advantages[t] - want.advantages[t]).abs() < 1e-4,
+                        "adv t={t}: {} vs {}",
+                        got.advantages[t],
+                        want.advantages[t]
+                    );
+                    assert!(
+                        (got.rewards_to_go[t] - want.rewards_to_go[t]).abs() < 1e-4
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pad_rows_compute_to_exactly_zero_advantage() {
+        let short = Trajectory::without_dones(vec![1.0, -2.0], vec![0.5, 1.5, 7.0]);
+        let long = Trajectory::without_dones(
+            vec![0.1; 6],
+            vec![0.2; 7],
+        );
+        let tile = PaddedTile::from_lanes(&[&short, &long]);
+        assert_eq!(tile.t_len, 6);
+        let out = gae_batched(&GaeParams::default(), &tile.to_gae_batch());
+        // Lane 0 pad region: rows 2..6 must be exactly zero.
+        for t in 2..6 {
+            assert_eq!(out.advantages[t * 2], 0.0, "pad row {t} leaked");
+        }
+        // The bootstrap row is preserved where the real recurrence reads it.
+        assert_eq!(tile.values[2 * 2], 7.0);
+    }
+
+    #[test]
+    fn mask_and_lens_agree() {
+        let a = Trajectory::without_dones(vec![0.0; 3], vec![0.0; 4]);
+        let b = Trajectory::without_dones(vec![0.0; 5], vec![0.0; 6]);
+        let tile = PaddedTile::from_lanes(&[&a, &b]);
+        assert_eq!(tile.lens, vec![3, 5]);
+        assert_eq!(tile.real_elements(), 8);
+        assert_eq!(tile.padded_elements(), 10);
+        assert!((tile.pad_fraction() - 0.2).abs() < 1e-12);
+        let mask = tile.segment_mask();
+        let mask_sum: f32 = mask.iter().sum();
+        assert_eq!(mask_sum as usize, 8);
+        assert_eq!(mask[2 * 2], 1.0); // row 2, lane 0: last real element
+        assert_eq!(mask[3 * 2], 0.0); // row 3, lane 0: padding
+        // Pad region is marked done so credit cannot flow across it.
+        assert_eq!(tile.done_mask[3 * 2], 1.0);
+        assert_eq!(tile.done_mask[4 * 2], 1.0);
+        assert_eq!(tile.done_mask[4 * 2 + 1], 0.0);
+    }
+
+    #[test]
+    fn equal_length_lanes_have_no_padding() {
+        let a = Trajectory::without_dones(vec![1.0; 4], vec![0.0; 5]);
+        let b = Trajectory::without_dones(vec![2.0; 4], vec![0.0; 5]);
+        let tile = PaddedTile::from_lanes(&[&a, &b]);
+        assert_eq!(tile.pad_fraction(), 0.0);
+        assert!(tile.segment_mask().iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn tiling_respects_width() {
+        let t = Trajectory::without_dones(vec![0.0], vec![0.0, 0.0]);
+        let lanes: Vec<&Trajectory> = (0..10).map(|_| &t).collect();
+        let tiles = tile_lanes(&lanes, 4);
+        let widths: Vec<usize> = tiles.iter().map(|t| t.len()).collect();
+        assert_eq!(widths, vec![4, 4, 2]);
+    }
+}

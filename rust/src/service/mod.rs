@@ -1,0 +1,67 @@
+//! GAE-as-a-service: a production serving subsystem with dynamic
+//! batching, sharded workers, and admission control.
+//!
+//! The paper's single-SoC design exists to kill communication latency in
+//! the GAE stage; this module is the deployment story around it — the
+//! "multiple custom hardware components on one SoC" usage of §I, grown
+//! into a multi-tenant service that many concurrent clients drive with
+//! variable-length trajectory batches.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  clients ──► GaeService::submit / submit_many / enqueue (fail-fast)
+//!              GaeService::submit_blocking / enqueue_blocking (backpressure)
+//!                 │   admission control: shed when depth == limit
+//!                 ▼
+//!          BoundedQueue<WorkItem>           (queue.rs — MPMC, bounded,
+//!                 │                          backpressure or fail-fast)
+//!      ┌──────────┼──────────┐
+//!      ▼          ▼          ▼
+//!   worker 0   worker 1 …  worker N-1       (worker.rs — each shard owns
+//!      │          │          │               a private backend instance:
+//!      │  DynamicBatcher per shard           scalar | batched | GaeHwSim)
+//!      │  size-or-timeout coalescing
+//!      ▼          ▼          ▼
+//!   PaddedTile [T, B] tiles + segment masks (batcher.rs — leak-free
+//!      │          │          │               padding, reuses the
+//!      ▼          ▼          ▼               gae_stage split logic)
+//!   GaeResponse per request ──► ResponseHandle / blocking wait
+//!
+//!   ServiceMetrics (metrics.rs): counters, shed count, queue gauges,
+//!   log-binned latency histograms → p50/p95/p99, sustained elem/s.
+//! ```
+//!
+//! Design rules:
+//!
+//! - **Admission control beats collapse** — a bounded queue sheds
+//!   ([`ServiceError::Overloaded`]) instead of growing an unbounded
+//!   backlog; clients see the overload immediately and can back off.
+//! - **Batching is where throughput lives** — workers coalesce requests
+//!   (size-or-timeout) and cut them into fixed `[T, B]` tiles shaped
+//!   like the paper's memory-block layout, so the batched engine and the
+//!   simulated row array stay fed under ragged real-world traffic.
+//! - **Shards share nothing on the compute path** — each worker owns its
+//!   backend (its own [`GaeHwSim`](crate::hwsim::GaeHwSim) row array for
+//!   `hwsim`), so N workers scale like N accelerator instances.
+//!
+//! Entry points: [`GaeService::start`] with a [`ServiceConfig`], then
+//! [`GaeService::submit`] (sync, fail-fast), [`GaeService::submit_blocking`]
+//! (sync, backpressured), [`GaeService::submit_many`] (pipelined), or
+//! [`GaeService::enqueue`] / [`GaeService::enqueue_blocking`] (async
+//! handle). The load
+//! generator in `examples/serve_gae.rs` and the
+//! `benches/service_throughput.rs` sweep drive exactly this API.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile};
+pub use metrics::{LatencyQuantiles, MetricsSnapshot, ServiceMetrics};
+pub use queue::{BoundedQueue, PushError};
+pub use request::{GaeResponse, RequestTiming, ResponseHandle, ServiceError};
+pub use server::{GaeService, ServiceConfig};

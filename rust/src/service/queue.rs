@@ -1,0 +1,324 @@
+//! Bounded MPMC queue — the admission-controlled front door of the
+//! serving subsystem.
+//!
+//! A `Mutex<VecDeque>` + two condvars: simple, fair-enough, and with no
+//! allocation on the hot path beyond the ring itself. Producers choose
+//! their overload behavior per call:
+//!
+//! - [`BoundedQueue::try_push`] — *admission control*: fail fast with
+//!   [`PushError::Full`] when depth is at the limit (the service sheds
+//!   the request and tells the client, instead of queueing unbounded
+//!   work it cannot serve in time);
+//! - [`BoundedQueue::push`] — *backpressure*: block the producer until
+//!   a consumer drains a slot (closed-loop clients).
+//!
+//! Consumers ([`crate::service::worker`]) use blocking [`pop`] for the
+//! first item of a batch and deadline-bounded [`pop_deadline`] while
+//! coalescing. [`close`] wakes everyone; a closed queue still drains
+//! remaining items so accepted requests are never dropped silently.
+//!
+//! [`pop`]: BoundedQueue::pop
+//! [`pop_deadline`]: BoundedQueue::pop_deadline
+//! [`close`]: BoundedQueue::close
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a push did not enqueue; the item is handed back to the caller.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// Depth is at capacity (only from [`BoundedQueue::try_push`]).
+    Full(T),
+    /// The queue was closed.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Closed(item) => item,
+        }
+    }
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// High-water mark of the depth (a metrics gauge).
+    peak: usize,
+}
+
+/// A bounded multi-producer multi-consumer FIFO.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `capacity` items (min 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+                peak: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current depth.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Highest depth ever observed.
+    pub fn peak_depth(&self) -> usize {
+        self.inner.lock().unwrap().peak
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Close the queue: producers fail, consumers drain what remains and
+    /// then observe `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Non-blocking push — the admission-control path.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        inner.items.push_back(item);
+        inner.peak = inner.peak.max(inner.items.len());
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push — the backpressure path. Waits for a free slot;
+    /// fails only when the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(PushError::Closed(item));
+            }
+            if inner.items.len() < self.capacity {
+                inner.items.push_back(item);
+                inner.peak = inner.peak.max(inner.items.len());
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let item = inner.items.pop_front();
+        if item.is_some() {
+            drop(inner);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the batcher's linger): `None` on timeout or
+    /// on closed-and-drained.
+    pub fn pop_deadline(&self, deadline: Instant) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+            if timeout.timed_out() && inner.items.is_empty() {
+                return None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn try_push_sheds_at_capacity() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak_depth(), 2);
+        q.try_pop().unwrap();
+        q.try_push(3).unwrap(); // slot freed
+    }
+
+    #[test]
+    fn blocking_push_applies_backpressure() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(0u64).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            // Blocks until the consumer drains the slot.
+            q2.push(1).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer must be blocked, not queued");
+        assert_eq!(q.pop(), Some(0));
+        producer.join().unwrap();
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_wakes_blocked_parties() {
+        let q = Arc::new(BoundedQueue::<u32>::new(1));
+        let qc = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        assert_eq!(q.try_push(9), Err(PushError::Closed(9)));
+        assert_eq!(q.push(9), Err(PushError::Closed(9)));
+    }
+
+    #[test]
+    fn closed_queue_still_drains() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out() {
+        let q = BoundedQueue::<u32>::new(1);
+        let t0 = Instant::now();
+        let got = q.pop_deadline(Instant::now() + Duration::from_millis(15));
+        assert_eq!(got, None);
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn pop_deadline_returns_item_when_available() {
+        let q = BoundedQueue::new(1);
+        q.try_push(7).unwrap();
+        let got = q.pop_deadline(Instant::now() + Duration::from_millis(50));
+        assert_eq!(got, Some(7));
+    }
+
+    #[test]
+    fn mpmc_under_contention_delivers_every_item_once() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let n_producers = 4;
+        let per_producer = 250u64;
+        let mut consumers = Vec::new();
+        let delivered = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..3 {
+            let q = Arc::clone(&q);
+            let delivered = Arc::clone(&delivered);
+            consumers.push(std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    delivered.lock().unwrap().push(v);
+                }
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    q.push(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut seen = delivered.lock().unwrap().clone();
+        seen.sort_unstable();
+        let mut want: Vec<u64> = (0..n_producers)
+            .flat_map(|p| (0..per_producer).map(move |i| p * 1000 + i))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+    }
+}

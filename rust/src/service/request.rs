@@ -1,0 +1,161 @@
+//! Request/response types of the GAE serving subsystem.
+//!
+//! A request is a set of (variable-length) trajectories from one
+//! client; the response carries one [`GaeOutput`] per input trajectory,
+//! in input order, plus per-phase timing and — on the `hwsim` backend —
+//! the simulated accelerator cycles of the coalesced batch the request
+//! rode in.
+
+use crate::gae::{GaeOutput, Trajectory};
+use std::fmt;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Per-phase timing of one request's trip through the service.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTiming {
+    /// Enqueue → picked up by a worker (queueing delay).
+    pub queue: Duration,
+    /// Backend compute of the coalesced batch this request rode in.
+    pub compute: Duration,
+    /// Enqueue → response sent.
+    pub total: Duration,
+}
+
+/// A completed GAE request.
+#[derive(Debug, Clone)]
+pub struct GaeResponse {
+    /// Service-assigned request id (monotonic per service).
+    pub id: u64,
+    /// One output per input trajectory, input order.
+    pub outputs: Vec<GaeOutput>,
+    /// Simulated accelerator cycles of the batch (hwsim backend only).
+    pub hw_cycles: Option<u64>,
+    /// Index of the worker shard that served the request.
+    pub worker: usize,
+    pub timing: RequestTiming,
+}
+
+impl GaeResponse {
+    /// Total GAE elements computed for this request.
+    pub fn elements(&self) -> usize {
+        self.outputs.iter().map(|o| o.advantages.len()).sum()
+    }
+}
+
+/// Client-visible service failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Admission control shed the request: queue depth was at the limit.
+    Overloaded { depth: usize, limit: usize },
+    /// The request held no trajectories, or a zero-length trajectory.
+    EmptyRequest,
+    /// The service is shutting down (or died before replying).
+    ShuttingDown,
+    /// Deadline passed while waiting on a [`ResponseHandle`].
+    Timeout,
+    /// The configured backend cannot run inside the service.
+    UnsupportedBackend(String),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Overloaded { depth, limit } => write!(
+                f,
+                "service overloaded: queue depth {depth} at limit {limit}; request shed"
+            ),
+            ServiceError::EmptyRequest => {
+                f.write_str("request must hold at least one non-empty trajectory")
+            }
+            ServiceError::ShuttingDown => f.write_str("service is shutting down"),
+            ServiceError::Timeout => f.write_str("timed out waiting for a response"),
+            ServiceError::UnsupportedBackend(b) => {
+                write!(f, "backend {b:?} is not servable (use scalar, batched, or hwsim)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Handle to a pending response (returned by `GaeService::enqueue`).
+/// Dropping it abandons the request; the worker's send is ignored.
+#[derive(Debug)]
+pub struct ResponseHandle {
+    pub id: u64,
+    pub(crate) rx: mpsc::Receiver<GaeResponse>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<GaeResponse, ServiceError> {
+        self.rx.recv().map_err(|_| ServiceError::ShuttingDown)
+    }
+
+    /// Block up to `timeout`.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<GaeResponse, ServiceError> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => ServiceError::Timeout,
+            mpsc::RecvTimeoutError::Disconnected => ServiceError::ShuttingDown,
+        })
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<GaeResponse> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Internal queue entry: the request plus its reply channel.
+pub(crate) struct WorkItem {
+    pub id: u64,
+    pub trajectories: Vec<Trajectory>,
+    /// Cached `trajectories.len()` — the batcher's lane budget unit.
+    pub lanes: usize,
+    pub enqueued_at: Instant,
+    pub tx: mpsc::Sender<GaeResponse>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_messages_are_actionable() {
+        let e = ServiceError::Overloaded { depth: 128, limit: 128 };
+        let s = e.to_string();
+        assert!(s.contains("128") && s.contains("shed"), "{s}");
+        assert!(ServiceError::UnsupportedBackend("hlo".into())
+            .to_string()
+            .contains("hwsim"));
+    }
+
+    #[test]
+    fn handle_reports_disconnect_as_shutdown() {
+        let (tx, rx) = mpsc::channel::<GaeResponse>();
+        drop(tx);
+        let h = ResponseHandle { id: 1, rx };
+        assert_eq!(h.wait().unwrap_err(), ServiceError::ShuttingDown);
+    }
+
+    #[test]
+    fn handle_delivers_buffered_response_after_sender_drop() {
+        let (tx, rx) = mpsc::channel::<GaeResponse>();
+        tx.send(GaeResponse {
+            id: 9,
+            outputs: vec![],
+            hw_cycles: None,
+            worker: 0,
+            timing: RequestTiming {
+                queue: Duration::ZERO,
+                compute: Duration::ZERO,
+                total: Duration::ZERO,
+            },
+        })
+        .unwrap();
+        drop(tx);
+        let h = ResponseHandle { id: 9, rx };
+        assert_eq!(h.wait().unwrap().id, 9);
+    }
+}

@@ -1,0 +1,338 @@
+//! The service front-end: configuration, lifecycle, and the
+//! `submit` / `submit_many` client API.
+
+use crate::coordinator::gae_stage::GaeBackend;
+use crate::gae::{GaeParams, Trajectory};
+use crate::hwsim::{GaeHwSim, SimConfig};
+use crate::service::batcher::{BatcherConfig, DynamicBatcher};
+use crate::service::metrics::{MetricsSnapshot, ServiceMetrics};
+use crate::service::queue::{BoundedQueue, PushError};
+use crate::service::request::{GaeResponse, ResponseHandle, ServiceError, WorkItem};
+use crate::service::worker::{worker_loop, WorkerContext};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Service deployment knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Worker shards; each owns a private backend instance.
+    pub workers: usize,
+    /// Compute backend (`Scalar`, `Batched`, or `HwSim`; `Hlo` needs a
+    /// PJRT runtime and is rejected at start).
+    pub backend: GaeBackend,
+    /// Admission limit: requests beyond this queue depth are shed.
+    pub queue_capacity: usize,
+    /// Dynamic-batching policy.
+    pub batcher: BatcherConfig,
+    /// Systolic rows per worker's private `hwsim` instance.
+    pub sim_rows: usize,
+    /// GAE hyper-parameters applied to every request.
+    pub gae: GaeParams,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 4,
+            backend: GaeBackend::HwSim,
+            queue_capacity: 256,
+            batcher: BatcherConfig::default(),
+            sim_rows: 64,
+            gae: GaeParams::default(),
+        }
+    }
+}
+
+/// A running GAE service: admission-controlled queue in front, sharded
+/// worker pool behind. `&self` methods are safe from many client
+/// threads. Dropping the service closes the queue, drains accepted
+/// requests, and joins the workers.
+pub struct GaeService {
+    config: ServiceConfig,
+    queue: Arc<BoundedQueue<WorkItem>>,
+    metrics: Arc<ServiceMetrics>,
+    /// `Some` until shutdown; behind a mutex so the service stays `Sync`.
+    pool: Mutex<Option<ThreadPool>>,
+    next_id: AtomicU64,
+}
+
+impl GaeService {
+    /// Validate the config and spawn the worker shards.
+    pub fn start(config: ServiceConfig) -> anyhow::Result<GaeService> {
+        anyhow::ensure!(config.workers >= 1, "service needs at least one worker");
+        anyhow::ensure!(config.queue_capacity >= 1, "queue capacity must be >= 1");
+        anyhow::ensure!(config.batcher.tile_lanes >= 1, "tile_lanes must be >= 1");
+        anyhow::ensure!(
+            config.batcher.max_batch_lanes >= 1,
+            "max_batch_lanes must be >= 1"
+        );
+        if config.backend == GaeBackend::Hlo {
+            anyhow::bail!(
+                "{}",
+                ServiceError::UnsupportedBackend(config.backend.label().into())
+            );
+        }
+        let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let pool = ThreadPool::new(config.workers);
+        for index in 0..config.workers {
+            let ctx = WorkerContext {
+                index,
+                backend: config.backend,
+                params: config.gae,
+                sim: (config.backend == GaeBackend::HwSim).then(|| {
+                    GaeHwSim::new(SimConfig {
+                        rows: config.sim_rows.max(1),
+                        gae: config.gae,
+                        ..SimConfig::paper_default()
+                    })
+                }),
+                batcher: DynamicBatcher::new(config.batcher),
+                queue: Arc::clone(&queue),
+                metrics: Arc::clone(&metrics),
+            };
+            pool.execute(move || worker_loop(ctx));
+        }
+        Ok(GaeService {
+            config,
+            queue,
+            metrics,
+            pool: Mutex::new(Some(pool)),
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Convenience: default config at a given worker count / backend.
+    pub fn with_workers(workers: usize, backend: GaeBackend) -> anyhow::Result<GaeService> {
+        Self::start(ServiceConfig { workers, backend, ..ServiceConfig::default() })
+    }
+
+    fn make_item(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<(WorkItem, mpsc::Receiver<GaeResponse>), ServiceError> {
+        if trajectories.is_empty() || trajectories.iter().any(|t| t.is_empty()) {
+            return Err(ServiceError::EmptyRequest);
+        }
+        self.metrics.record_submitted();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let lanes = trajectories.len();
+        let item = WorkItem { id, trajectories, lanes, enqueued_at: Instant::now(), tx };
+        Ok((item, rx))
+    }
+
+    /// Admit a request without waiting for its result. Admission control
+    /// sheds with [`ServiceError::Overloaded`] when the queue is at its
+    /// depth limit — the open-loop / fail-fast path.
+    pub fn enqueue(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<ResponseHandle, ServiceError> {
+        let (item, rx) = self.make_item(trajectories)?;
+        let id = item.id;
+        match self.queue.try_push(item) {
+            Ok(()) => Ok(ResponseHandle { id, rx }),
+            Err(PushError::Full(_)) => {
+                self.metrics.record_shed();
+                // Depth at decision time is by definition the capacity;
+                // re-reading len() here could race a concurrent pop and
+                // report a self-contradictory "depth 0 at limit N".
+                Err(ServiceError::Overloaded {
+                    depth: self.queue.capacity(),
+                    limit: self.queue.capacity(),
+                })
+            }
+            Err(PushError::Closed(_)) => Err(ServiceError::ShuttingDown),
+        }
+    }
+
+    /// Admit with **backpressure**: block until a queue slot frees
+    /// instead of shedding — the closed-loop client path. Fails only
+    /// when the request is empty or the service is shutting down.
+    pub fn enqueue_blocking(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<ResponseHandle, ServiceError> {
+        let (item, rx) = self.make_item(trajectories)?;
+        let id = item.id;
+        match self.queue.push(item) {
+            Ok(()) => Ok(ResponseHandle { id, rx }),
+            // push never reports Full; keep the match total and honest.
+            Err(PushError::Full(_)) | Err(PushError::Closed(_)) => {
+                Err(ServiceError::ShuttingDown)
+            }
+        }
+    }
+
+    /// Synchronous fail-fast request: admit (or shed), wait, return.
+    pub fn submit(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<GaeResponse, ServiceError> {
+        self.enqueue(trajectories)?.wait()
+    }
+
+    /// Synchronous backpressured request: wait for admission, then for
+    /// the result.
+    pub fn submit_blocking(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<GaeResponse, ServiceError> {
+        self.enqueue_blocking(trajectories)?.wait()
+    }
+
+    /// Pipelined batch submit: admit everything first (so the requests
+    /// coalesce across the worker shards), then collect in order. Each
+    /// slot fails independently — under overload some slots come back
+    /// [`ServiceError::Overloaded`] while the rest complete.
+    pub fn submit_many(
+        &self,
+        requests: Vec<Vec<Trajectory>>,
+    ) -> Vec<Result<GaeResponse, ServiceError>> {
+        let handles: Vec<Result<ResponseHandle, ServiceError>> =
+            requests.into_iter().map(|r| self.enqueue(r)).collect();
+        handles
+            .into_iter()
+            .map(|h| h.and_then(|h| h.wait()))
+            .collect()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    /// Live queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Frozen metrics view (counters, shed, latency quantiles, elem/s).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics
+            .snapshot(self.queue.len(), self.queue.peak_depth())
+    }
+
+    /// Stop admitting, drain accepted work, join the workers.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        // Drop runs shutdown_inner; take the snapshot after the drain so
+        // it includes every accepted request.
+        self.shutdown_inner();
+        self.metrics()
+    }
+
+    fn shutdown_inner(&self) {
+        self.queue.close();
+        let pool = self.pool.lock().unwrap().take();
+        drop(pool); // joins the worker threads (drains the queue first)
+    }
+}
+
+impl Drop for GaeService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::reference::gae_trajectory;
+    use crate::testing::Gen;
+
+    fn request(g: &mut Gen, n: usize, t: usize) -> Vec<Trajectory> {
+        crate::testing::ragged_trajectories(g.rng(), n, 1, t, 0.08)
+    }
+
+    #[test]
+    fn submit_roundtrip_matches_reference() {
+        let svc = GaeService::with_workers(2, GaeBackend::Batched).unwrap();
+        let mut g = Gen::new(1);
+        let trajs = request(&mut g, 5, 40);
+        let resp = svc.submit(trajs.clone()).unwrap();
+        assert_eq!(resp.outputs.len(), 5);
+        for (traj, got) in trajs.iter().zip(&resp.outputs) {
+            let want = gae_trajectory(&GaeParams::default(), traj);
+            for t in 0..traj.len() {
+                assert!((got.advantages[t] - want.advantages[t]).abs() < 1e-4);
+            }
+        }
+        assert!(resp.elements() > 0);
+        assert!(resp.timing.total >= resp.timing.queue);
+    }
+
+    #[test]
+    fn empty_requests_are_rejected() {
+        let svc = GaeService::with_workers(1, GaeBackend::Scalar).unwrap();
+        assert_eq!(svc.submit(vec![]).unwrap_err(), ServiceError::EmptyRequest);
+        let zero_len = Trajectory::without_dones(vec![], vec![0.0]);
+        assert_eq!(
+            svc.submit(vec![zero_len]).unwrap_err(),
+            ServiceError::EmptyRequest
+        );
+        assert_eq!(svc.metrics().completed, 0);
+    }
+
+    #[test]
+    fn blocking_submit_backpressures_instead_of_shedding() {
+        // Capacity-1 queue + more concurrent blocking clients than slots:
+        // everything completes, nothing sheds.
+        let svc = GaeService::start(ServiceConfig {
+            workers: 1,
+            backend: GaeBackend::Scalar,
+            queue_capacity: 1,
+            ..ServiceConfig::default()
+        })
+        .unwrap();
+        let svc_ref = &svc;
+        std::thread::scope(|s| {
+            for client in 0..4u64 {
+                s.spawn(move || {
+                    let mut g = Gen::new(50 + client);
+                    for _ in 0..5 {
+                        svc_ref
+                            .submit_blocking(request(&mut g, 2, 12))
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 20);
+        assert_eq!(snap.shed, 0);
+        assert!(snap.peak_queue_depth <= 1);
+    }
+
+    #[test]
+    fn hlo_backend_is_rejected_at_start() {
+        let err = GaeService::with_workers(1, GaeBackend::Hlo).unwrap_err();
+        assert!(err.to_string().contains("hwsim"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_drains_accepted_requests() {
+        let svc = GaeService::with_workers(2, GaeBackend::Scalar).unwrap();
+        let mut g = Gen::new(3);
+        let handles: Vec<_> = (0..16)
+            .map(|_| svc.enqueue(request(&mut g, 2, 16)).unwrap())
+            .collect();
+        let snap = svc.shutdown();
+        assert_eq!(snap.completed, 16);
+        for h in handles {
+            h.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_reports_shutting_down() {
+        let svc = GaeService::with_workers(1, GaeBackend::Scalar).unwrap();
+        svc.queue.close();
+        let mut g = Gen::new(4);
+        assert_eq!(
+            svc.submit(request(&mut g, 1, 4)).unwrap_err(),
+            ServiceError::ShuttingDown
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Sharded workers: each owns a private backend instance and competes
+//! for requests on the shared queue (work-stealing MPMC, the software
+//! analogue of the paper's round-robin row dispatch — a free shard takes
+//! the next request the moment it drains).
+//!
+//! A worker's loop: block for a request, linger-coalesce into a group
+//! ([`DynamicBatcher`]), compute the whole group on its own backend, and
+//! answer every request in the group. Because each worker owns its
+//! backend — a scalar loop, a batched-CPU engine, or a private
+//! [`GaeHwSim`] instance — N workers model N independent accelerator
+//! row-arrays on one SoC, with zero shared state on the compute path.
+
+use crate::coordinator::gae_stage::{split_at_dones, GaeBackend};
+use crate::gae::reference::gae_trajectory;
+use crate::gae::batched::gae_batched;
+use crate::gae::{GaeOutput, GaeParams, Trajectory};
+use crate::hwsim::GaeHwSim;
+use crate::service::batcher::{tile_lanes, unpack_lanes, DynamicBatcher, PaddedTile};
+use crate::service::metrics::ServiceMetrics;
+use crate::service::queue::BoundedQueue;
+use crate::service::request::{GaeResponse, RequestTiming, WorkItem};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Everything one worker shard needs (moved into its thread).
+pub(crate) struct WorkerContext {
+    pub index: usize,
+    pub backend: GaeBackend,
+    pub params: GaeParams,
+    /// Private accelerator model (hwsim backend only).
+    pub sim: Option<GaeHwSim>,
+    pub batcher: DynamicBatcher,
+    pub queue: Arc<BoundedQueue<WorkItem>>,
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+/// Run until the queue is closed and drained.
+pub(crate) fn worker_loop(ctx: WorkerContext) {
+    while let Some(group) = ctx.batcher.next_group(&ctx.queue) {
+        process_group(&ctx, group);
+    }
+}
+
+fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>) {
+    let picked_at = Instant::now();
+    let lanes: Vec<&Trajectory> =
+        group.iter().flat_map(|item| item.trajectories.iter()).collect();
+    let total_lanes = lanes.len();
+
+    let compute_start = Instant::now();
+    let (mut outputs, hw_cycles) = compute_lanes(ctx, &lanes);
+    let compute = compute_start.elapsed();
+
+    ctx.metrics.record_batch(total_lanes, hw_cycles);
+
+    // Hand each request its slice of the lane outputs, input order.
+    for item in group {
+        let rest = outputs.split_off(item.lanes);
+        let item_outputs = std::mem::replace(&mut outputs, rest);
+        let elements: usize = item_outputs.iter().map(|o| o.advantages.len()).sum();
+        let timing = RequestTiming {
+            queue: picked_at.duration_since(item.enqueued_at),
+            compute,
+            total: item.enqueued_at.elapsed(),
+        };
+        ctx.metrics.record_completion(elements, &timing);
+        // The client may have dropped its handle; a failed send is fine.
+        let _ = item.tx.send(GaeResponse {
+            id: item.id,
+            outputs: item_outputs,
+            hw_cycles,
+            worker: ctx.index,
+            timing,
+        });
+    }
+    debug_assert!(outputs.is_empty(), "every lane output must be consumed");
+}
+
+/// Compute GAE for a flat list of lanes on this worker's backend.
+/// Returns per-lane outputs (input order) and, for hwsim, the simulated
+/// cycle count of the coalesced batch.
+fn compute_lanes(
+    ctx: &WorkerContext,
+    lanes: &[&Trajectory],
+) -> (Vec<GaeOutput>, Option<u64>) {
+    match ctx.backend {
+        GaeBackend::Scalar => {
+            // The per-trajectory CPU loop — the baseline shape.
+            let outs = lanes
+                .iter()
+                .map(|traj| gae_trajectory(&ctx.params, traj))
+                .collect();
+            (outs, None)
+        }
+        GaeBackend::Batched | GaeBackend::Hlo => {
+            // Fixed [T, B] tiles through the timestep-major engine. (Hlo
+            // is rejected at service start; the arm keeps the match total.)
+            let mut outs = Vec::with_capacity(lanes.len());
+            for tile_set in tile_lanes(lanes, ctx.batcher.config.tile_lanes) {
+                let (batch, lens) = PaddedTile::from_lanes(&tile_set).into_parts();
+                let out = gae_batched(&ctx.params, &batch);
+                outs.extend(unpack_lanes(&lens, batch.batch, &out));
+            }
+            (outs, None)
+        }
+        GaeBackend::HwSim => {
+            let sim = ctx.sim.as_ref().expect("hwsim worker owns a sim");
+            // Rows take single-episode vectors: split each lane at its
+            // dones (same preprocessing as the trainer's GAE stage).
+            let mut segments: Vec<Trajectory> = Vec::new();
+            let mut index: Vec<(usize, usize, usize)> = Vec::new(); // (lane, start, len)
+            for (lane_idx, traj) in lanes.iter().enumerate() {
+                for (start, seg) in split_at_dones(
+                    |t| traj.rewards[t],
+                    |t| traj.values[t],
+                    |t| traj.dones[t],
+                    traj.len(),
+                ) {
+                    index.push((lane_idx, start, seg.len()));
+                    segments.push(seg);
+                }
+            }
+            let rep = sim.simulate(&segments);
+            // Stitch segments back into per-lane outputs.
+            let mut outs: Vec<GaeOutput> = lanes
+                .iter()
+                .map(|traj| GaeOutput {
+                    advantages: vec![0.0; traj.len()],
+                    rewards_to_go: vec![0.0; traj.len()],
+                })
+                .collect();
+            for ((lane_idx, start, len), seg_out) in
+                index.into_iter().zip(rep.outputs)
+            {
+                outs[lane_idx].advantages[start..start + len]
+                    .copy_from_slice(&seg_out.advantages);
+                outs[lane_idx].rewards_to_go[start..start + len]
+                    .copy_from_slice(&seg_out.rewards_to_go);
+            }
+            (outs, Some(rep.cycles))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::SimConfig;
+    use crate::service::batcher::BatcherConfig;
+    use crate::testing::{check, Gen};
+
+    fn ctx(backend: GaeBackend) -> WorkerContext {
+        let params = GaeParams::default();
+        WorkerContext {
+            index: 0,
+            backend,
+            params,
+            sim: (backend == GaeBackend::HwSim).then(|| {
+                GaeHwSim::new(SimConfig { gae: params, ..SimConfig::paper_default() })
+            }),
+            batcher: DynamicBatcher::new(BatcherConfig {
+                tile_lanes: 4,
+                ..BatcherConfig::default()
+            }),
+            queue: Arc::new(BoundedQueue::new(1)),
+            metrics: Arc::new(ServiceMetrics::new()),
+        }
+    }
+
+    #[test]
+    fn every_backend_matches_the_scalar_reference() {
+        check("service backends == reference", 15, |g| {
+            let trajs: Vec<Trajectory> = (0..g.usize_in(1, 10))
+                .map(|_| {
+                    let t_len = g.usize_in(1, 24);
+                    Trajectory::new(
+                        g.vec_normal_f32(t_len, 0.0, 1.0),
+                        g.vec_normal_f32(t_len + 1, 0.0, 1.0),
+                        (0..t_len).map(|_| g.bool_p(0.1)).collect(),
+                    )
+                })
+                .collect();
+            let lanes: Vec<&Trajectory> = trajs.iter().collect();
+            for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
+                let c = ctx(backend);
+                let (outs, cycles) = compute_lanes(&c, &lanes);
+                assert_eq!(outs.len(), trajs.len());
+                if backend == GaeBackend::HwSim {
+                    assert!(cycles.unwrap() > 0);
+                }
+                for (traj, got) in trajs.iter().zip(&outs) {
+                    let want = gae_trajectory(&GaeParams::default(), traj);
+                    for t in 0..traj.len() {
+                        assert!(
+                            (got.advantages[t] - want.advantages[t]).abs() < 1e-3,
+                            "{backend:?} adv t={t}"
+                        );
+                        assert!(
+                            (got.rewards_to_go[t] - want.rewards_to_go[t]).abs() < 1e-3,
+                            "{backend:?} rtg t={t}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+}

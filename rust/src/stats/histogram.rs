@@ -59,6 +59,33 @@ impl Histogram {
         self.bins.iter().map(|&c| c as f64 / n).collect()
     }
 
+    /// Approximate quantile `q in [0,1]` with linear interpolation inside
+    /// the covering bin. Underflow mass sits at `lo`, overflow at `hi`, so
+    /// the estimate is clamped to the histogram range — callers wanting
+    /// exact tails must keep raw samples ([`crate::stats::Summary`]).
+    /// Used by the serving subsystem's latency metrics.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = q * self.count as f64;
+        let mut cum = self.underflow as f64;
+        if target <= cum {
+            return self.lo;
+        }
+        let width = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            let next = cum + c as f64;
+            if target <= next && c > 0 {
+                let frac = (target - cum) / c as f64;
+                return self.lo + width * (i as f64 + frac);
+            }
+            cum = next;
+        }
+        self.hi
+    }
+
     /// Fraction of mass outside `[lo, hi)` — the quantizer clipping rate.
     pub fn clipped_fraction(&self) -> f64 {
         if self.count == 0 {
@@ -101,6 +128,30 @@ mod tests {
         // Mode near zero.
         let peak = h.bins().iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
         assert!((h.bin_center(peak)).abs() < 0.5);
+    }
+
+    #[test]
+    fn quantiles_of_uniform_ramp() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..100 {
+            h.push(i as f64 + 0.5);
+        }
+        assert!((h.quantile(0.5) - 50.0).abs() < 1.5, "{}", h.quantile(0.5));
+        assert!((h.quantile(0.95) - 95.0).abs() < 1.5);
+        assert!((h.quantile(0.99) - 99.0).abs() < 1.5);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert!(h.quantile(1.0) <= 100.0);
+        assert_eq!(Histogram::new(0.0, 1.0, 4).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_clamps_to_range_under_overflow() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(5.0);
+        h.push(50.0);
+        assert_eq!(h.quantile(0.01), 0.0); // underflow mass sits at lo
+        assert_eq!(h.quantile(1.0), 10.0); // overflow mass sits at hi
     }
 
     #[test]

@@ -14,7 +14,53 @@
 //! });
 //! ```
 
+use crate::gae::Trajectory;
+use crate::runtime::Runtime;
 use crate::util::Rng;
+
+/// Random variable-length GAE trajectories — the shared traffic shape
+/// used by the service tests/benches and the load-generator example.
+/// Lengths are uniform in `[min_t, max_t]` (min 1); each step
+/// terminates with probability `done_p`.
+pub fn ragged_trajectories(
+    rng: &mut Rng,
+    n: usize,
+    min_t: usize,
+    max_t: usize,
+    done_p: f64,
+) -> Vec<Trajectory> {
+    let min_t = min_t.max(1);
+    let max_t = max_t.max(min_t);
+    (0..n)
+        .map(|_| {
+            let t_len = min_t + rng.below((max_t - min_t + 1) as u64) as usize;
+            let mut rewards = vec![0.0f32; t_len];
+            let mut values = vec![0.0f32; t_len + 1];
+            rng.fill_normal_f32(&mut rewards);
+            rng.fill_normal_f32(&mut values);
+            let dones = (0..t_len).map(|_| rng.uniform() < done_p).collect();
+            Trajectory::new(rewards, values, dones)
+        })
+        .collect()
+}
+
+/// Gate for artifact-dependent integration tests: `Some(Runtime)` only
+/// when `dir` holds a manifest **and** the PJRT client initializes
+/// (i.e. a real `xla_extension` is linked, not the offline stub).
+/// Prints why it skipped otherwise.
+pub fn try_runtime(dir: &str) -> Option<Runtime> {
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
+        return None;
+    }
+    match Runtime::new(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: PJRT runtime unavailable: {e:#}");
+            None
+        }
+    }
+}
 
 /// Per-case value generator (a thin, purpose-named layer over [`Rng`]).
 pub struct Gen {

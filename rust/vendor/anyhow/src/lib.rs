@@ -1,0 +1,252 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so — like `serde`,
+//! `clap` and `criterion` elsewhere in this repo — the error substrate
+//! is vendored as a small, API-compatible subset. Only the surface the
+//! crate actually uses is provided:
+//!
+//! - [`Error`]: an opaque, message-chaining error (`{e}` prints the
+//!   outermost message, `{e:#}` the full `a: b: c` chain, like anyhow).
+//! - [`Result`]: `Result<T, Error>` with the same default type param.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros (format-string forms).
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! - A blanket `From<E: std::error::Error>` so `?` converts any
+//!   standard error. As in real anyhow, [`Error`] itself deliberately
+//!   does **not** implement `std::error::Error` — that is what makes
+//!   the blanket conversion coherent.
+//!
+//! Swapping back to crates.io anyhow is a one-line Cargo.toml change.
+
+use std::fmt;
+
+/// Result with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: an outermost message plus a chain of causes
+/// (captured as strings — enough for display, tests, and logs).
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first.
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), causes: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, context: impl fmt::Display) -> Error {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.msg);
+        causes.extend(self.causes);
+        Error { msg: context.to_string(), causes }
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(|s| s.as_str()))
+    }
+
+    /// The innermost cause's message (the root of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.causes.last().map(|s| s.as_str()).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for cause in &self.causes {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.causes.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let msg = err.to_string();
+        let mut causes = Vec::new();
+        let mut source = err.source();
+        while let Some(s) = source {
+            causes.push(s.to_string());
+            source = s.source();
+        }
+        Error { msg, causes }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("opening config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: no such file");
+        assert_eq!(e.root_cause(), "no such file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("bad artifact {name:?} at {}", 3);
+        assert_eq!(e.to_string(), "bad artifact \"x\" at 3");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+
+        fn g() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(g().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().unwrap_err().to_string().contains("utf-8"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        let e = None::<u8>.with_context(|| format!("missing {}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "missing k");
+    }
+
+    #[test]
+    fn chain_order_is_outermost_first() {
+        let e = Error::msg("root").context("mid").context("outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "mid", "root"]);
+    }
+}
