@@ -1,0 +1,206 @@
+//! Pipeline-overlap sweep: sequential vs. overlapped trainer schedule
+//! across GAE backends.
+//!
+//! Drives the coordinator's three stages (cartpole vec-env collection
+//! under a fixed linear policy → codec + GAE → a PS-side update stand-in)
+//! through `run_stages` in both [`PipelineMode`]s. The sequential arm
+//! runs the inline `run_gae_stage` exactly as the pre-pipeline trainer
+//! did; the overlapped arm double-buffers collection on the collector
+//! lane and dispatches the GAE planes to a `GaeService` worker pool.
+//!
+//! Shape check (the acceptance bar of the pipelined-trainer refactor):
+//! on at least one backend, overlapped wall-clock per iteration must be
+//! strictly below the *sequential* sum of the collect + GAE stage times
+//! — i.e. the pipeline genuinely hides the GAE phase, it does not just
+//! shave constants. Both arms also fold their advantage streams into a
+//! checksum, printed so divergence is visible at a glance (the stage set
+//! is policy-feedback-free, so the streams must match exactly).
+//!
+//! Emits a markdown table, `results/pipeline_overlap.csv`, and one JSON
+//! row per configuration in `results/pipeline_overlap.jsonl`.
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep for CI.
+
+use heppo::coordinator::gae_stage::{codec_stage, run_gae_stage, GaeResult};
+use heppo::coordinator::rollout::{collect_into, CollectBuffers, Rollout};
+use heppo::coordinator::{run_stages, GaeBackend, PhaseProfiler, PipelineMode, StageTimes};
+use heppo::envs::vec_env::VecEnv;
+use heppo::gae::GaeParams;
+use heppo::quant::{CodecKind, RewardValueCodec};
+use heppo::service::{GaeService, ServiceConfig};
+use heppo::testing::{digest_f32, linear_policy};
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use heppo::util::threadpool::ThreadPool;
+use heppo::util::Rng;
+
+struct RunResult {
+    times: StageTimes,
+    check: u64,
+}
+
+fn run_config(
+    mode: PipelineMode,
+    backend: GaeBackend,
+    iters: usize,
+    n_envs: usize,
+    t_len: usize,
+    service_workers: usize,
+) -> anyhow::Result<RunResult> {
+    let mut envs = VecEnv::new("cartpole", n_envs, 11, ThreadPool::new(4))?;
+    let mut current_obs = envs.reset_all();
+    let obs_dim = envs.obs_dim();
+    let mut policy = linear_policy(n_envs, obs_dim, 0.1);
+    let mut rng = Rng::new(5);
+    let mut collect_prof = PhaseProfiler::new();
+    let mut bufs = CollectBuffers::new(n_envs, t_len);
+
+    let mut codec = RewardValueCodec::paper(CodecKind::Exp5DynamicBlock);
+    let mut gae_prof = PhaseProfiler::new();
+    let params = GaeParams::default();
+    let service = match mode {
+        PipelineMode::Sequential => None,
+        PipelineMode::Overlapped => Some(GaeService::start(ServiceConfig {
+            workers: service_workers,
+            backend,
+            queue_capacity: n_envs.max(256),
+            gae: params,
+            ..ServiceConfig::default()
+        })?),
+    };
+
+    let mut check: u64 = 0;
+    let run = run_stages(
+        mode,
+        iters,
+        |_i, buf: &mut Rollout| {
+            collect_into(
+                &mut envs,
+                &mut policy,
+                &mut current_obs,
+                t_len,
+                &mut rng,
+                &mut collect_prof,
+                &mut bufs,
+                buf,
+                false,
+            )
+        },
+        |_i, buf: &mut Rollout| match &service {
+            None => run_gae_stage(backend, &params, buf, &mut codec, None, &mut gae_prof),
+            Some(svc) => {
+                codec_stage(buf, &mut codec, &mut gae_prof);
+                let plane = svc
+                    .submit_planes(
+                        buf.t_len,
+                        buf.batch,
+                        &buf.rewards,
+                        &buf.values,
+                        &buf.done_mask,
+                    )?
+                    .wait()?;
+                Ok(GaeResult::from(plane))
+            }
+        },
+        |_i, _buf: &mut Rollout, gae: &GaeResult| {
+            // PS-side update stand-in: fold the advantage stream.
+            check = check.wrapping_add(digest_f32(&gae.advantages));
+            Ok(())
+        },
+    )?;
+    Ok(RunResult { times: run.times, check })
+}
+
+fn per_iter_us(d: std::time::Duration, iters: usize) -> f64 {
+    d.as_secs_f64() * 1e6 / iters.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let (iters, n_envs, t_len) = if fast { (3, 256, 32) } else { (6, 2048, 64) };
+    let service_workers = 4;
+    let backends = [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim];
+
+    println!(
+        "pipeline overlap sweep: {iters} iters of {n_envs} envs x {t_len} steps \
+         (cartpole, {service_workers} service workers)\n"
+    );
+    let mut table = CsvTable::new(&[
+        "backend", "mode", "collect_us", "gae_us", "update_us", "wall_us",
+        "stage_sum_us", "checksum",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut any_overlap_win = false;
+
+    for &backend in &backends {
+        let seq = run_config(
+            PipelineMode::Sequential, backend, iters, n_envs, t_len, service_workers,
+        )?;
+        let ovl = run_config(
+            PipelineMode::Overlapped, backend, iters, n_envs, t_len, service_workers,
+        )?;
+        let seq_collect_gae = per_iter_us(seq.times.collect + seq.times.gae, iters);
+        let ovl_wall = per_iter_us(ovl.times.wall, iters);
+        let win = ovl_wall < seq_collect_gae;
+        any_overlap_win |= win;
+        println!(
+            "{:<8} seq collect {:>8.0}us + gae {:>8.0}us = {:>8.0}us/iter | \
+             overlapped wall {:>8.0}us/iter -> {} (streams {})",
+            backend.label(),
+            per_iter_us(seq.times.collect, iters),
+            per_iter_us(seq.times.gae, iters),
+            seq_collect_gae,
+            ovl_wall,
+            if win { "OVERLAP WIN" } else { "no win" },
+            if seq.check == ovl.check { "identical" } else { "DIVERGED" },
+        );
+        for (mode, r) in [("sequential", &seq), ("overlapped", &ovl)] {
+            table.row(&[
+                backend.label().to_string(),
+                mode.to_string(),
+                format!("{:.0}", per_iter_us(r.times.collect, iters)),
+                format!("{:.0}", per_iter_us(r.times.gae, iters)),
+                format!("{:.0}", per_iter_us(r.times.update, iters)),
+                format!("{:.0}", per_iter_us(r.times.wall, iters)),
+                format!("{:.0}", per_iter_us(r.times.stage_sum(), iters)),
+                format!("{:016x}", r.check),
+            ]);
+            json_rows.push(
+                Json::obj(vec![
+                    ("bench", Json::from("pipeline_overlap")),
+                    ("backend", Json::from(backend.label())),
+                    ("mode", Json::from(mode)),
+                    ("iters", Json::from(iters)),
+                    ("envs", Json::from(n_envs)),
+                    ("timesteps", Json::from(t_len)),
+                    ("collect_us", Json::from(per_iter_us(r.times.collect, iters))),
+                    ("gae_us", Json::from(per_iter_us(r.times.gae, iters))),
+                    ("update_us", Json::from(per_iter_us(r.times.update, iters))),
+                    ("wall_us", Json::from(per_iter_us(r.times.wall, iters))),
+                ])
+                .to_string(),
+            );
+        }
+        anyhow::ensure!(
+            seq.check == ovl.check,
+            "{}: sequential and overlapped advantage streams diverged",
+            backend.label()
+        );
+    }
+
+    println!("\n{}", table.to_markdown());
+    std::fs::create_dir_all("results")?;
+    table.save("results/pipeline_overlap.csv")?;
+    std::fs::write(
+        "results/pipeline_overlap.jsonl",
+        json_rows.join("\n") + "\n",
+    )?;
+    println!("-> results/pipeline_overlap.csv, results/pipeline_overlap.jsonl");
+
+    println!(
+        "\nshape check: overlapped wall/iter < sequential (collect + gae)/iter \
+         on >= 1 backend -> {}",
+        if any_overlap_win { "PASS" } else { "BELOW TARGET (machine cores?)" }
+    );
+    println!("pipeline_overlap OK");
+    Ok(())
+}

@@ -2,6 +2,7 @@
 //! `heppo train` CLI and the experiment benches.
 
 use super::gae_stage::GaeBackend;
+use super::pipeline::PipelineMode;
 use crate::quant::CodecKind;
 use crate::util::cli::Args;
 
@@ -35,6 +36,16 @@ pub struct TrainerConfig {
     pub artifact_dir: String,
     /// Environment worker threads.
     pub env_threads: usize,
+    /// Phase scheduling: `Sequential` reproduces the paper's §III-A
+    /// machine bit-for-bit; `Overlapped` pipelines the GAE phase through
+    /// the serving subsystem's worker pool.
+    pub pipeline: PipelineMode,
+    /// Worker shards of the in-process GAE service (`Overlapped` only).
+    pub service_workers: usize,
+    /// Capture the raw (pre-codec) reward/value planes each iteration.
+    /// Diagnostics only (Fig. 2/7 data) — doubles rollout memory, so off
+    /// by default.
+    pub keep_raw_planes: bool,
 }
 
 impl Default for TrainerConfig {
@@ -53,6 +64,9 @@ impl Default for TrainerConfig {
             seed: 0,
             artifact_dir: "artifacts".into(),
             env_threads: 4,
+            pipeline: PipelineMode::Sequential,
+            service_workers: 4,
+            keep_raw_planes: false,
         }
     }
 }
@@ -75,6 +89,8 @@ impl TrainerConfig {
             .ok_or_else(|| anyhow::anyhow!("unknown codec {codec_str:?} (exp1..exp5)"))?;
         let backend_str = args.str_or("backend", d.backend.label());
         let backend = GaeBackend::parse_cli(&backend_str)?;
+        let pipeline_str = args.str_or("pipeline", d.pipeline.label());
+        let pipeline = PipelineMode::parse_cli(&pipeline_str)?;
         Ok(TrainerConfig {
             env: args.str_or("env", &d.env),
             iters: args.get_or("iters", d.iters),
@@ -93,6 +109,9 @@ impl TrainerConfig {
             seed: args.get_or("seed", d.seed),
             artifact_dir: args.str_or("artifacts", &d.artifact_dir),
             env_threads: args.get_or("env-threads", d.env_threads),
+            pipeline,
+            service_workers: args.get_or("service-workers", d.service_workers),
+            keep_raw_planes: args.flag("keep-raw") || d.keep_raw_planes,
         })
     }
 
@@ -143,6 +162,16 @@ impl TrainerConfig {
         if let Some(v) = j.get("env_threads").and_then(Json::as_usize) {
             c.env_threads = v;
         }
+        if let Some(v) = j.get("pipeline").and_then(Json::as_str) {
+            c.pipeline = PipelineMode::parse_cli(v)
+                .map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        }
+        if let Some(v) = j.get("service_workers").and_then(Json::as_usize) {
+            c.service_workers = v;
+        }
+        if let Some(v) = j.get("keep_raw_planes").and_then(Json::as_bool) {
+            c.keep_raw_planes = v;
+        }
         Ok(c)
     }
 }
@@ -161,6 +190,48 @@ mod tests {
         assert_eq!(c.codec, CodecKind::Exp5DynamicBlock);
         assert_eq!(c.quant_bits, 8);
         assert!(c.standardize_advantages);
+        // Sequential by default: bit-exact with the pre-pipeline trainer.
+        assert_eq!(c.pipeline, PipelineMode::Sequential);
+        assert!(!c.keep_raw_planes, "raw diagnostic planes are opt-in");
+    }
+
+    #[test]
+    fn pipeline_cli_overlay() {
+        let args = parse(&[
+            "train", "--pipeline", "overlapped", "--service-workers", "8",
+            "--keep-raw",
+        ]);
+        let c = TrainerConfig::from_args(&args).unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Overlapped);
+        assert_eq!(c.service_workers, 8);
+        assert!(c.keep_raw_planes);
+        let bad = parse(&["train", "--pipeline", "diagonal"]);
+        assert!(TrainerConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn keep_raw_from_config_file_survives_cli_overlay() {
+        // The `|| d.keep_raw_planes` arm is live: a --config file can
+        // enable the diagnostic planes without the CLI flag.
+        let path = std::env::temp_dir()
+            .join(format!("heppo_keepraw_{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"keep_raw_planes": true}"#).unwrap();
+        let args = parse(&["train", "--config", path.to_str().unwrap()]);
+        let c = TrainerConfig::from_args(&args).unwrap();
+        assert!(c.keep_raw_planes);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn pipeline_json_overlay() {
+        let c = TrainerConfig::from_json(
+            r#"{"pipeline": "overlapped", "service_workers": 2, "keep_raw_planes": true}"#,
+        )
+        .unwrap();
+        assert_eq!(c.pipeline, PipelineMode::Overlapped);
+        assert_eq!(c.service_workers, 2);
+        assert!(c.keep_raw_planes);
+        assert!(TrainerConfig::from_json(r#"{"pipeline": "zigzag"}"#).is_err());
     }
 
     #[test]

@@ -135,6 +135,25 @@ pub fn split_column(
     )
 }
 
+/// The codec round trip of the GAE phase: what the accelerator reads
+/// back from BRAM. The bootstrap value row participates in value
+/// statistics (it is stored like every other row). Shared by the inline
+/// [`run_gae_stage`] and the pipelined trainer's service-backed path, so
+/// both modes mutate the codec state in exactly the same order.
+pub fn codec_stage(
+    rollout: &mut Rollout,
+    codec: &mut RewardValueCodec,
+    profiler: &mut PhaseProfiler,
+) {
+    profiler.time(Phase::GaeMemoryFetch, || {
+        let mut rewards = std::mem::take(&mut rollout.rewards);
+        let mut values = std::mem::take(&mut rollout.values);
+        codec.transform(&mut rewards, &mut values);
+        rollout.rewards = rewards;
+        rollout.values = values;
+    });
+}
+
 /// Run the full GAE phase: codec round trip (StoringTrajectories /
 /// GaeMemoryFetch accounting) then the backend compute.
 pub fn run_gae_stage(
@@ -145,16 +164,7 @@ pub fn run_gae_stage(
     runtime: Option<&Runtime>,
     profiler: &mut PhaseProfiler,
 ) -> anyhow::Result<GaeResult> {
-    // Codec round trip: what the accelerator reads back from BRAM. The
-    // bootstrap value row participates in value statistics (it is stored
-    // like every other row).
-    profiler.time(Phase::GaeMemoryFetch, || {
-        let mut rewards = std::mem::take(&mut rollout.rewards);
-        let mut values = std::mem::take(&mut rollout.values);
-        codec.transform(&mut rewards, &mut values);
-        rollout.rewards = rewards;
-        rollout.values = values;
-    });
+    codec_stage(rollout, codec, profiler);
 
     let (t_len, b) = (rollout.t_len, rollout.batch);
     let mut hw_cycles = None;

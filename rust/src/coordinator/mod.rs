@@ -1,28 +1,54 @@
-//! The L3 coordinator — the PPO training system around the HEPPO-GAE
-//! accelerator.
+//! The L3 coordinator — the pipelined PPO training system around the
+//! HEPPO-GAE accelerator.
 //!
-//! Mirrors the paper's SoC data flow (§III-A):
+//! One iteration still traverses the paper's SoC data flow (§III-A):
 //!
 //! 1. **Trajectory collection** ([`rollout`]) — the vectorized env engine
 //!    steps N environments; actions come from the `policy_fwd` HLO
 //!    artifact (the PL's DNN systolic array in the paper); rewards and
 //!    values pass through the standardization/quantization codec into
-//!    FILO stack storage ([`crate::memory::filo`]).
-//! 2. **GAE phase** ([`gae_stage`]) — the PS signals the accelerator;
-//!    advantages/RTGs are computed by a pluggable backend (scalar
-//!    baseline, batched CPU, the Pallas-lowered HLO kernel, or the
-//!    cycle-accurate [`crate::hwsim`]).
+//!    FILO stack storage ([`crate::memory::filo`]). The path is
+//!    allocation-free across iterations: [`rollout::collect_into`]
+//!    refills recycled [`rollout::Rollout`] buffers and
+//!    [`rollout::CollectBuffers`] stack planes in place.
+//! 2. **GAE phase** ([`gae_stage`]) — advantages/RTGs from a pluggable
+//!    backend (scalar baseline, batched CPU, the Pallas-lowered HLO
+//!    kernel, or the cycle-accurate [`crate::hwsim`]), either inline or
+//!    dispatched to the [`crate::service`] worker pool through its
+//!    plane-shaped client seam.
 //! 3. **Losses + update** ([`ppo`]) — minibatched PPO-clip/Adam steps via
-//!    the `train_step` HLO artifact.
+//!    the `train_step` HLO artifact, split into an
+//!    advantage-independent [`ppo::prepare_update`] half and the
+//!    artifact-executing [`ppo::execute_update`] half so preparation can
+//!    hide under the GAE wait.
 //!
-//! [`phases::PhaseMachine`] enforces the PS↔PL sequencing and accounts
-//! handshake overhead; [`profiler::PhaseProfiler`] captures per-phase
-//! wall time to regenerate the paper's Table I.
+//! *How iterations are scheduled* is now a knob
+//! ([`pipeline::PipelineMode`], `TrainerConfig::pipeline`):
+//!
+//! - **`Sequential`** — the paper's strictly ordered phase machine; bit-
+//!   identical to the pre-pipeline trainer at the same seed.
+//! - **`Overlapped`** — the pipelined trainer: GAE runs on the service
+//!   worker shards while the coordinator prepares the update, and — for
+//!   `Send` stage sets via [`pipeline::run_stages`] — iteration *i+1*'s
+//!   collection runs on a collector thread, double-buffered through
+//!   bounded channels, concurrently with iteration *i*'s GAE + update.
+//!
+//! [`phases::PhaseMachine`] enforces the PS↔PL sequencing of one
+//! in-flight iteration and accounts handshake overhead;
+//! [`phases::PipelineLanes`] extends that to overlapped schedules (one
+//! lane per in-flight iteration, exclusive phase occupancy, per-lane
+//! handshake accounting). [`profiler::PhaseProfiler`] captures per-phase
+//! wall time to regenerate the paper's Table I, plus per-iteration wall
+//! clock so overlap can be quantified
+//! ([`profiler::PhaseProfiler::phase_coverage`]);
+//! `benches/pipeline_overlap.rs` sweeps sequential vs. overlapped across
+//! backends.
 
 pub mod checkpoint;
 pub mod config;
 pub mod gae_stage;
 pub mod phases;
+pub mod pipeline;
 pub mod policy;
 pub mod ppo;
 pub mod profiler;
@@ -31,5 +57,6 @@ pub mod trainer;
 
 pub use config::TrainerConfig;
 pub use gae_stage::GaeBackend;
+pub use pipeline::{run_stages, PipelineMode, PipelineRun, StageTimes};
 pub use profiler::{Phase, PhaseProfiler};
 pub use trainer::{IterStats, Trainer};

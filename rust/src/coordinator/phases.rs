@@ -1,14 +1,24 @@
 //! The PS↔PL phase machine (paper §III-A "Data Flow, Processing, and
-//! Efficiency").
+//! Efficiency") and its pipelined extension.
 //!
-//! All subsystems operate sequentially and communicate through BRAM; the
-//! PS raises an *initiate* control signal into the PL clock domain and
-//! waits for *done* — each crossing costs a synchronizer latency
-//! ([`crate::hwsim::clock`]). The machine enforces the legal ordering:
+//! All subsystems communicate through BRAM; the PS raises an *initiate*
+//! control signal into the PL clock domain and waits for *done* — each
+//! crossing costs a synchronizer latency ([`crate::hwsim::clock`]). A
+//! single [`PhaseMachine`] enforces the legal ordering for one
+//! in-flight iteration:
 //!
 //! ```text
 //! Idle → TrajectoryCollection → DataPrep → GaeCompute → LossAndUpdate → Idle/…
 //! ```
+//!
+//! The pipelined trainer keeps *several* iterations in flight at once
+//! (iteration *i+1* collects while iteration *i* runs GAE/update).
+//! [`PipelineLanes`] models that: one `PhaseMachine` lane per in-flight
+//! iteration, each still bound to the sequential ordering above, plus a
+//! cross-lane occupancy rule — no two lanes may hold the same non-idle
+//! phase, because each phase owns a single hardware resource (the env
+//! cores, the GAE row array, the update engine). Handshake overhead is
+//! accounted per lane and summed for reporting.
 
 use crate::hwsim::clock::handshake_overhead;
 use std::time::Duration;
@@ -127,6 +137,111 @@ impl PhaseMachine {
     }
 }
 
+/// Error from a [`PipelineLanes`] transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneError {
+    /// The lane's own machine rejected the ordering.
+    Transition { lane: usize, err: PhaseError },
+    /// Another lane currently occupies the target phase (each phase is a
+    /// single hardware resource).
+    Occupied { lane: usize, phase: SocPhase, by: usize },
+    /// No such lane.
+    NoSuchLane { lane: usize, lanes: usize },
+}
+
+impl std::fmt::Display for LaneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaneError::Transition { lane, err } => {
+                write!(f, "lane {lane}: {err}")
+            }
+            LaneError::Occupied { lane, phase, by } => write!(
+                f,
+                "lane {lane}: phase {phase:?} is occupied by lane {by}"
+            ),
+            LaneError::NoSuchLane { lane, lanes } => {
+                write!(f, "lane {lane} out of range ({lanes} lanes)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LaneError {}
+
+/// The overlapped phase model: one [`PhaseMachine`] per in-flight
+/// iteration. Every lane still rejects illegal orderings; additionally a
+/// non-idle phase may be held by at most one lane at a time.
+#[derive(Debug)]
+pub struct PipelineLanes {
+    lanes: Vec<PhaseMachine>,
+}
+
+impl PipelineLanes {
+    /// `lanes` = maximum iterations in flight (1 = strictly sequential).
+    pub fn new(lanes: usize) -> Self {
+        assert!(lanes >= 1, "need at least one lane");
+        PipelineLanes {
+            lanes: (0..lanes).map(|_| PhaseMachine::new()).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// Borrow one lane's machine (read-only; transitions go through
+    /// [`PipelineLanes::transition`] so occupancy stays enforced).
+    pub fn lane(&self, lane: usize) -> &PhaseMachine {
+        &self.lanes[lane]
+    }
+
+    pub fn current(&self, lane: usize) -> SocPhase {
+        self.lanes[lane].current()
+    }
+
+    /// Which lane holds `phase`, if any.
+    pub fn occupant(&self, phase: SocPhase) -> Option<usize> {
+        self.lanes.iter().position(|m| m.current() == phase)
+    }
+
+    /// Advance one lane, enforcing both the lane-local ordering and the
+    /// cross-lane occupancy rule.
+    pub fn transition(&mut self, lane: usize, next: SocPhase) -> Result<(), LaneError> {
+        if lane >= self.lanes.len() {
+            return Err(LaneError::NoSuchLane { lane, lanes: self.lanes.len() });
+        }
+        if next != SocPhase::Idle {
+            if let Some(by) = self.occupant(next) {
+                if by != lane {
+                    return Err(LaneError::Occupied { lane, phase: next, by });
+                }
+            }
+        }
+        self.lanes[lane]
+            .transition(next)
+            .map_err(|err| LaneError::Transition { lane, err })
+    }
+
+    /// PS→PL round trips summed over every lane.
+    pub fn handshakes(&self) -> u64 {
+        self.lanes.iter().map(|m| m.handshakes()).sum()
+    }
+
+    /// Synchronizer overhead summed over every lane.
+    pub fn overhead(&self) -> Duration {
+        self.lanes.iter().map(|m| m.overhead()).sum()
+    }
+
+    /// Transitions summed over every lane.
+    pub fn transitions(&self) -> u64 {
+        self.lanes.iter().map(|m| m.transitions()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +284,103 @@ mod tests {
         // 2 handshakes × ~8 ns × 1000 iterations « 1 ms.
         assert!(m.overhead() < Duration::from_millis(1));
         assert_eq!(m.handshakes(), 2000);
+    }
+
+    #[test]
+    fn overlapped_lanes_interleave_legally() {
+        // The steady-state pipeline schedule: lane 1 collects while lane
+        // 0 runs GAE + update.
+        let mut p = PipelineLanes::new(2);
+        p.transition(0, TrajectoryCollection).unwrap();
+        p.transition(0, DataPrep).unwrap();
+        p.transition(1, TrajectoryCollection).unwrap(); // overlap begins
+        p.transition(0, GaeCompute).unwrap();
+        p.transition(0, LossAndUpdate).unwrap();
+        p.transition(0, Idle).unwrap();
+        p.transition(1, DataPrep).unwrap();
+        p.transition(0, TrajectoryCollection).unwrap(); // lane 0 re-enters
+        p.transition(1, GaeCompute).unwrap();
+        // Both iterations crossed into the PL twice each so far minus
+        // lane 1's pending LossAndUpdate.
+        assert_eq!(p.handshakes(), 3);
+        assert!(p.overhead() > Duration::ZERO);
+    }
+
+    #[test]
+    fn overlapped_lanes_still_reject_illegal_orderings() {
+        let mut p = PipelineLanes::new(2);
+        // A lane cannot skip phases even when the pipeline is idle.
+        assert_eq!(
+            p.transition(1, GaeCompute),
+            Err(LaneError::Transition {
+                lane: 1,
+                err: PhaseError { from: Idle, to: GaeCompute },
+            })
+        );
+        p.transition(0, TrajectoryCollection).unwrap();
+        assert!(matches!(
+            p.transition(0, LossAndUpdate),
+            Err(LaneError::Transition { lane: 0, .. })
+        ));
+        // The failed transition must not advance the lane.
+        assert_eq!(p.current(0), TrajectoryCollection);
+    }
+
+    #[test]
+    fn phase_occupancy_is_exclusive_across_lanes() {
+        let mut p = PipelineLanes::new(2);
+        p.transition(0, TrajectoryCollection).unwrap();
+        // Lane 1 cannot also collect: the env cores are one resource.
+        assert_eq!(
+            p.transition(1, TrajectoryCollection),
+            Err(LaneError::Occupied {
+                lane: 1,
+                phase: TrajectoryCollection,
+                by: 0
+            })
+        );
+        // Once lane 0 moves on, lane 1 may enter.
+        p.transition(0, DataPrep).unwrap();
+        p.transition(1, TrajectoryCollection).unwrap();
+        assert_eq!(p.occupant(TrajectoryCollection), Some(1));
+        // Both lanes may be Idle at once (Idle is not a resource).
+        let mut q = PipelineLanes::new(3);
+        q.transition(1, TrajectoryCollection).unwrap();
+        for ph in [DataPrep, GaeCompute, LossAndUpdate, Idle] {
+            q.transition(1, ph).unwrap();
+        }
+        assert_eq!(q.occupant(Idle), Some(0)); // first of the idle lanes
+    }
+
+    #[test]
+    fn lane_bounds_checked() {
+        let mut p = PipelineLanes::new(1);
+        assert_eq!(
+            p.transition(3, TrajectoryCollection),
+            Err(LaneError::NoSuchLane { lane: 3, lanes: 1 })
+        );
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn single_lane_matches_plain_machine() {
+        // PipelineLanes::new(1) must behave exactly like PhaseMachine.
+        let mut p = PipelineLanes::new(1);
+        let mut m = PhaseMachine::new();
+        for ph in [TrajectoryCollection, DataPrep, GaeCompute, LossAndUpdate, Idle] {
+            p.transition(0, ph).unwrap();
+            m.transition(ph).unwrap();
+        }
+        assert_eq!(p.handshakes(), m.handshakes());
+        assert_eq!(p.transitions(), m.transitions());
+        assert_eq!(p.overhead(), m.overhead());
+    }
+
+    #[test]
+    fn lane_error_messages_are_descriptive() {
+        let e = LaneError::Occupied { lane: 1, phase: GaeCompute, by: 0 };
+        assert!(e.to_string().contains("occupied by lane 0"), "{e}");
+        let e = LaneError::NoSuchLane { lane: 9, lanes: 2 };
+        assert!(e.to_string().contains("out of range"), "{e}");
     }
 }

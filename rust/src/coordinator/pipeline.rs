@@ -1,0 +1,453 @@
+//! The pipelined trainer substrate: double-buffered rollout storage and
+//! a bounded-channel stage driver that overlaps iteration *i+1*'s
+//! trajectory collection with iteration *i*'s GAE + update (the
+//! OPPO-style phase overlap named in ROADMAP.md).
+//!
+//! Two consumers share this module:
+//!
+//! - **[`Trainer`](super::Trainer)** selects a [`PipelineMode`].
+//!   `Sequential` is the paper's §III-A schedule, bit-identical to the
+//!   pre-pipeline trainer. `Overlapped` dispatches the GAE phase to the
+//!   [`crate::service::GaeService`] worker pool through the
+//!   plane-shaped client seam and overlaps the wait with the
+//!   advantage-independent half of the update
+//!   ([`super::ppo::prepare_update`]); because the PJRT runtime is
+//!   thread-pinned (`Rc` executable cache), the coordinator thread keeps
+//!   the policy/update artifacts and only the GAE compute fans out —
+//!   which preserves the exact sequential dependency graph, so
+//!   `Overlapped` is *also* bit-identical at a given seed.
+//! - **[`run_stages`]** is the fully-threaded two-lane driver for `Send`
+//!   stage sets (closure policies: benches, tests, future sharded
+//!   trainers): a collector thread fills recycled [`Rollout`] buffers
+//!   from a bounded pool while the consumer thread runs GAE + update on
+//!   the previous buffer, with [`PipelineLanes`] enforcing that the
+//!   overlapped schedule never violates the per-iteration phase order.
+//!
+//! The steady-state schedule `run_stages` realizes, two buffers deep:
+//!
+//! ```text
+//! lane 0: TC₀ DP₀ GC₀ LU₀ ···· TC₂ DP₂ GC₂ LU₂
+//! lane 1: ····· TC₁ ········ DP₁ GC₁ LU₁ ···· TC₃ …
+//! ```
+//!
+//! so wall-clock per iteration approaches `max(collect, gae + update)`
+//! instead of their sum.
+
+use super::gae_stage::GaeResult;
+use super::phases::{PipelineLanes, SocPhase};
+use super::rollout::Rollout;
+use std::sync::mpsc::{sync_channel, RecvTimeoutError};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How the trainer schedules its phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelineMode {
+    /// The paper's strictly sequential §III-A schedule (the default;
+    /// reproduces pre-pipeline results bit-for-bit).
+    #[default]
+    Sequential,
+    /// Pipelined: GAE runs on the service worker pool and overlaps
+    /// adjacent stages; collection overlaps the previous iteration's
+    /// GAE + update wherever the stage set is `Send`.
+    Overlapped,
+}
+
+impl PipelineMode {
+    pub const ALL: [PipelineMode; 2] = [PipelineMode::Sequential, PipelineMode::Overlapped];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PipelineMode::Sequential => "sequential",
+            PipelineMode::Overlapped => "overlapped",
+        }
+    }
+
+    /// Case-insensitive name lookup.
+    pub fn parse(s: &str) -> Option<PipelineMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Some(PipelineMode::Sequential),
+            "overlapped" | "overlap" => Some(PipelineMode::Overlapped),
+            _ => None,
+        }
+    }
+
+    /// CLI-boundary parse with an error listing the valid names.
+    pub fn parse_cli(s: &str) -> anyhow::Result<PipelineMode> {
+        Self::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown pipeline mode {s:?}; valid modes: sequential, overlapped")
+        })
+    }
+}
+
+/// Accumulated per-stage wall time of one [`run_stages`] run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub collect: Duration,
+    pub gae: Duration,
+    pub update: Duration,
+    /// End-to-end wall clock of the whole run.
+    pub wall: Duration,
+    pub iters: usize,
+}
+
+impl StageTimes {
+    /// Sum of the stage times (what a sequential schedule would pay).
+    pub fn stage_sum(&self) -> Duration {
+        self.collect + self.gae + self.update
+    }
+
+    /// Wall-clock saved versus running the stages back to back.
+    pub fn overlap_saving(&self) -> Duration {
+        self.stage_sum().saturating_sub(self.wall)
+    }
+}
+
+/// Result of [`run_stages`]: the per-iteration stats stream, stage
+/// timing, and the lane machine (handshake accounting).
+#[derive(Debug)]
+pub struct PipelineRun<S> {
+    pub stats: Vec<S>,
+    pub times: StageTimes,
+    pub lanes: PipelineLanes,
+}
+
+/// Shared lane state for the threaded driver. The collector must stall
+/// when the trajectory-collection resource is still held by the previous
+/// lane (a structural hazard, not an error), so entry into
+/// `TrajectoryCollection` blocks on a condvar; every other transition is
+/// owned by exactly one thread at a time and conflicts are hard errors.
+struct LaneGate {
+    lanes: Mutex<PipelineLanes>,
+    freed: Condvar,
+    /// Set when the consumer stops (normally or on error) so a stalled
+    /// collector wakes up and exits instead of waiting forever.
+    stopped: Mutex<bool>,
+}
+
+impl LaneGate {
+    fn new(lanes: usize) -> LaneGate {
+        LaneGate {
+            lanes: Mutex::new(PipelineLanes::new(lanes)),
+            freed: Condvar::new(),
+            stopped: Mutex::new(false),
+        }
+    }
+
+    /// Non-blocking transition; a conflict is a bug in the schedule.
+    fn step(&self, lane: usize, next: SocPhase) -> anyhow::Result<()> {
+        let r = self
+            .lanes
+            .lock()
+            .unwrap()
+            .transition(lane, next)
+            .map_err(|e| anyhow::anyhow!("{e}"));
+        self.freed.notify_all();
+        r
+    }
+
+    /// Blocking entry into `TrajectoryCollection`: waits for the phase
+    /// to free. Returns false if the pipeline stopped while waiting.
+    fn enter_collect(&self, lane: usize) -> anyhow::Result<bool> {
+        let mut lanes = self.lanes.lock().unwrap();
+        loop {
+            match lanes.occupant(SocPhase::TrajectoryCollection) {
+                Some(by) if by != lane => {
+                    if *self.stopped.lock().unwrap() {
+                        return Ok(false);
+                    }
+                    let (guard, _timeout) = self
+                        .freed
+                        .wait_timeout(lanes, Duration::from_millis(5))
+                        .unwrap();
+                    lanes = guard;
+                }
+                _ => {
+                    lanes
+                        .transition(lane, SocPhase::TrajectoryCollection)
+                        .map_err(|e| anyhow::anyhow!("{e}"))?;
+                    return Ok(true);
+                }
+            }
+        }
+    }
+
+    fn stop(&self) {
+        *self.stopped.lock().unwrap() = true;
+        self.freed.notify_all();
+    }
+
+    fn into_lanes(self) -> PipelineLanes {
+        self.lanes.into_inner().unwrap()
+    }
+}
+
+/// Drive `iters` iterations of `collect → gae → update` over recycled
+/// rollout buffers.
+///
+/// `Sequential` calls the stages back to back on the caller's thread.
+/// `Overlapped` runs `collect` on a dedicated collector thread two
+/// buffers deep: collection of iteration *i+1* overlaps GAE + update of
+/// iteration *i*. Stage closures own their state (envs, RNG streams,
+/// service clients), so a stage set whose collection does not read
+/// update results produces **identical stats streams in both modes** —
+/// the property `tests/pipeline_equivalence.rs` pins down.
+///
+/// Iteration *i* runs on lane `i % 2` of a [`PipelineLanes`]; every
+/// transition is checked, so an illegal overlap is a hard error, and
+/// PS↔PL handshakes are accounted per lane exactly as the sequential
+/// machine accounts them.
+pub fn run_stages<S, C, G, U>(
+    mode: PipelineMode,
+    iters: usize,
+    mut collect: C,
+    mut gae: G,
+    mut update: U,
+) -> anyhow::Result<PipelineRun<S>>
+where
+    S: Send,
+    C: FnMut(usize, &mut Rollout) -> anyhow::Result<()> + Send,
+    G: FnMut(usize, &mut Rollout) -> anyhow::Result<GaeResult>,
+    U: FnMut(usize, &mut Rollout, &GaeResult) -> anyhow::Result<S>,
+{
+    let gate = LaneGate::new(2);
+    let mut times = StageTimes { iters, ..StageTimes::default() };
+    let mut stats = Vec::with_capacity(iters);
+    let run_start = Instant::now();
+
+    match mode {
+        PipelineMode::Sequential => {
+            // One lane, one buffer, stages back to back — the reference
+            // schedule.
+            let mut buf = Rollout::empty();
+            for i in 0..iters {
+                gate.step(0, SocPhase::TrajectoryCollection)?;
+                let t0 = Instant::now();
+                collect(i, &mut buf)?;
+                times.collect += t0.elapsed();
+                gate.step(0, SocPhase::DataPrep)?;
+                gate.step(0, SocPhase::GaeCompute)?;
+                let t0 = Instant::now();
+                let g = gae(i, &mut buf)?;
+                times.gae += t0.elapsed();
+                gate.step(0, SocPhase::LossAndUpdate)?;
+                let t0 = Instant::now();
+                stats.push(update(i, &mut buf, &g)?);
+                times.update += t0.elapsed();
+                gate.step(0, SocPhase::Idle)?;
+            }
+        }
+        PipelineMode::Overlapped => {
+            // Free buffers flow consumer → collector (the double-buffer
+            // pool; the receiver lives on the collector thread), filled
+            // buffers flow back through a bounded rendezvous.
+            let depth = 2;
+            let (free_tx, free_rx) = sync_channel::<Rollout>(depth);
+            for _ in 0..depth {
+                free_tx.send(Rollout::empty()).expect("pool prefill");
+            }
+            let (full_tx, full_rx) = sync_channel::<(usize, Rollout)>(1);
+            let gate_ref = &gate;
+            let collector_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            std::thread::scope(|scope| -> anyhow::Result<()> {
+                let collector = scope.spawn({
+                    let collector_err = &collector_err;
+                    move || -> Duration {
+                        let mut total = Duration::ZERO;
+                        for i in 0..iters {
+                            // recv (not recv_timeout): the consumer drops
+                            // free_tx on exit, which unblocks this side.
+                            let Ok(mut buf) = free_rx.recv() else { return total };
+                            match gate_ref.enter_collect(i % 2) {
+                                Ok(true) => {}
+                                Ok(false) => return total, // pipeline stopped
+                                Err(e) => {
+                                    *collector_err.lock().unwrap() = Some(e);
+                                    return total;
+                                }
+                            }
+                            let t0 = Instant::now();
+                            if let Err(e) = collect(i, &mut buf) {
+                                *collector_err.lock().unwrap() = Some(e);
+                                return total;
+                            }
+                            total += t0.elapsed();
+                            if full_tx.send((i, buf)).is_err() {
+                                return total; // consumer bailed; its error wins
+                            }
+                        }
+                        total
+                    }
+                });
+                let mut consume = || -> anyhow::Result<()> {
+                    for _ in 0..iters {
+                        let (i, mut buf) = loop {
+                            match full_rx.recv_timeout(Duration::from_millis(5)) {
+                                Ok(x) => break x,
+                                Err(RecvTimeoutError::Timeout) => {
+                                    if collector_err.lock().unwrap().is_some() {
+                                        anyhow::bail!("collector stage failed");
+                                    }
+                                }
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    anyhow::bail!("collector stage stopped early")
+                                }
+                            }
+                        };
+                        let lane = i % 2;
+                        gate.step(lane, SocPhase::DataPrep)?;
+                        gate.step(lane, SocPhase::GaeCompute)?;
+                        let t0 = Instant::now();
+                        let g = gae(i, &mut buf)?;
+                        times.gae += t0.elapsed();
+                        gate.step(lane, SocPhase::LossAndUpdate)?;
+                        let t0 = Instant::now();
+                        stats.push(update(i, &mut buf, &g)?);
+                        times.update += t0.elapsed();
+                        gate.step(lane, SocPhase::Idle)?;
+                        let _ = free_tx.send(buf); // collector may be done
+                    }
+                    Ok(())
+                };
+                let result = consume();
+                // Unblock a stalled collector and join it before deciding
+                // whose error to report.
+                gate.stop();
+                drop(full_rx);
+                drop(free_tx);
+                times.collect = collector.join().expect("collector must not panic");
+                if let Some(e) = collector_err.lock().unwrap().take() {
+                    return Err(e);
+                }
+                result
+            })?;
+        }
+    }
+    times.wall = run_start.elapsed();
+    Ok(PipelineRun { stats, times, lanes: gate.into_lanes() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_gae(rollout: &Rollout) -> GaeResult {
+        GaeResult {
+            advantages: rollout.rewards.clone(),
+            rewards_to_go: rollout.rewards.iter().map(|r| r * 2.0).collect(),
+            hw_cycles: None,
+        }
+    }
+
+    /// A deterministic stage set: collect writes iter-dependent rewards,
+    /// update folds them into a checksum.
+    fn run_mode(mode: PipelineMode, iters: usize) -> Vec<f32> {
+        let run = run_stages(
+            mode,
+            iters,
+            |i, buf: &mut Rollout| {
+                buf.t_len = 4;
+                buf.batch = 2;
+                buf.rewards.clear();
+                buf.rewards
+                    .extend((0..8).map(|k| (i * 100 + k) as f32 * 0.5));
+                Ok(())
+            },
+            |_i, buf| Ok(fake_gae(buf)),
+            |_i, _buf, g: &GaeResult| Ok(g.advantages.iter().sum::<f32>()),
+        )
+        .unwrap();
+        assert_eq!(run.stats.len(), iters);
+        assert_eq!(run.times.iters, iters);
+        // Every iteration crossed the PS↔PL boundary twice.
+        assert_eq!(run.lanes.handshakes(), 2 * iters as u64);
+        run.stats
+    }
+
+    #[test]
+    fn both_modes_produce_identical_streams() {
+        let seq = run_mode(PipelineMode::Sequential, 7);
+        let ovl = run_mode(PipelineMode::Overlapped, 7);
+        assert_eq!(seq, ovl);
+    }
+
+    #[test]
+    fn overlapped_recycles_two_buffers() {
+        use std::collections::HashSet;
+        let seen = Mutex::new(HashSet::new());
+        let run = run_stages(
+            PipelineMode::Overlapped,
+            6,
+            |_i, buf: &mut Rollout| {
+                buf.rewards.clear();
+                buf.rewards.resize(16, 1.0);
+                seen.lock().unwrap().insert(buf.rewards.as_ptr() as usize);
+                Ok(())
+            },
+            |_i, buf| Ok(fake_gae(buf)),
+            |_i, _buf, _g| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(run.stats.len(), 6);
+        // The pool is 2 deep: after warmup no new allocations appear.
+        assert!(
+            seen.lock().unwrap().len() <= 2,
+            "double buffering must reuse the two pool buffers"
+        );
+    }
+
+    #[test]
+    fn collector_errors_surface() {
+        let err = run_stages(
+            PipelineMode::Overlapped,
+            4,
+            |i, _buf: &mut Rollout| {
+                anyhow::ensure!(i != 2, "collect failed at iter {i}");
+                Ok(())
+            },
+            |_i, buf| Ok(fake_gae(buf)),
+            |_i, _buf, _g| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("collect failed at iter 2"), "{err}");
+    }
+
+    #[test]
+    fn consumer_errors_surface_and_join_cleanly() {
+        let err = run_stages(
+            PipelineMode::Overlapped,
+            8,
+            |_i, _buf: &mut Rollout| Ok(()),
+            |i, buf| {
+                anyhow::ensure!(i != 1, "gae exploded");
+                Ok(fake_gae(buf))
+            },
+            |_i, _buf, _g| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("gae exploded"), "{err}");
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(PipelineMode::parse("Sequential"), Some(PipelineMode::Sequential));
+        assert_eq!(PipelineMode::parse("OVERLAP"), Some(PipelineMode::Overlapped));
+        assert_eq!(PipelineMode::parse("nope"), None);
+        assert_eq!(PipelineMode::default(), PipelineMode::Sequential);
+        let err = PipelineMode::parse_cli("bogus").unwrap_err().to_string();
+        assert!(err.contains("sequential") && err.contains("overlapped"), "{err}");
+    }
+
+    #[test]
+    fn stage_times_accounting() {
+        let t = StageTimes {
+            collect: Duration::from_millis(30),
+            gae: Duration::from_millis(20),
+            update: Duration::from_millis(10),
+            wall: Duration::from_millis(40),
+            iters: 1,
+        };
+        assert_eq!(t.stage_sum(), Duration::from_millis(60));
+        assert_eq!(t.overlap_saving(), Duration::from_millis(20));
+    }
+}

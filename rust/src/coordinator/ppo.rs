@@ -60,11 +60,169 @@ pub struct UpdateParams {
     pub standardize_advantages: bool,
 }
 
-/// Run the PPO update: `epochs` passes of shuffled minibatches.
+/// One planned minibatch: the source rows, plus — when pre-gathered —
+/// the tensors that do not depend on the GAE result.
+#[derive(Debug, Clone)]
+pub struct MinibatchPlan {
+    pub rows: Vec<usize>,
+    /// Pre-gathered planes (empty when the plan was built without
+    /// pre-gathering; [`execute_update`] gathers on demand then).
+    pub obs: Vec<f32>,
+    pub actions: Vec<f32>,
+    pub old_logp: Vec<f32>,
+}
+
+/// The advantage-independent half of a PPO update, prepared up front.
 ///
-/// The minibatch size is fixed by the artifact (manifest meta); leftover
-/// rows that do not fill a final minibatch are dropped that epoch (they
-/// reappear under the next shuffle — standard practice).
+/// In the pipelined trainer this is built *while the GAE service is
+/// computing*: the epoch permutations (consuming the shared RNG stream
+/// in exactly the order the sequential path does — the stream does not
+/// depend on execution results) and, with `pregather`, the
+/// obs/action/log-prob gathers need only the rollout.
+/// [`execute_update`] then gathers the advantage and return columns and
+/// runs the `train_step` artifact.
+#[derive(Debug, Clone)]
+pub struct UpdatePlan {
+    pub minibatch: usize,
+    pub discrete: bool,
+    pub act_dim: usize,
+    pub pregathered: bool,
+    pub batches: Vec<MinibatchPlan>,
+}
+
+fn gather_rows(rollout: &Rollout, rows: &[usize]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let obs_dim = rollout.obs_dim;
+    let aw = rollout.act_width;
+    let mut obs = Vec::with_capacity(rows.len() * obs_dim);
+    let mut actions = Vec::with_capacity(rows.len() * aw);
+    let mut old_logp = Vec::with_capacity(rows.len());
+    for &row in rows {
+        obs.extend_from_slice(&rollout.obs[row * obs_dim..(row + 1) * obs_dim]);
+        actions.extend_from_slice(&rollout.actions[row * aw..(row + 1) * aw]);
+        old_logp.push(rollout.logp[row]);
+    }
+    (obs, actions, old_logp)
+}
+
+/// Draw the epoch permutations (and, with `pregather`, the
+/// advantage-independent minibatch tensors — pre-gathering holds
+/// `epochs` gathered copies of the rollout resident at once, so only
+/// the overlapped schedule, which hides that work under the GAE wait,
+/// asks for it). Leftover rows that do not fill a final minibatch are
+/// dropped that epoch (they reappear under the next shuffle — standard
+/// practice).
+pub fn prepare_update(
+    runtime: &Runtime,
+    artifact: &str,
+    rollout: &Rollout,
+    epochs: usize,
+    rng: &mut Rng,
+    pregather: bool,
+) -> anyhow::Result<UpdatePlan> {
+    let exe = runtime.load(artifact)?;
+    let minibatch = exe.spec.meta_usize("minibatch")?;
+    let discrete = exe.spec.meta_bool("discrete")?;
+    let act_dim = exe.spec.meta_usize("act_dim")?;
+    let n = rollout.transitions();
+    anyhow::ensure!(
+        n >= minibatch,
+        "rollout of {n} rows cannot fill a {minibatch}-row minibatch"
+    );
+    let mut batches = Vec::with_capacity(epochs * (n / minibatch));
+    for _epoch in 0..epochs {
+        let perm = rng.permutation(n);
+        for chunk in perm.chunks_exact(minibatch) {
+            let (obs, actions, old_logp) = if pregather {
+                gather_rows(rollout, chunk)
+            } else {
+                (Vec::new(), Vec::new(), Vec::new())
+            };
+            batches.push(MinibatchPlan { rows: chunk.to_vec(), obs, actions, old_logp });
+        }
+    }
+    Ok(UpdatePlan { minibatch, discrete, act_dim, pregathered: pregather, batches })
+}
+
+/// Run the planned minibatches through the `train_step` artifact.
+/// Consumes the plan so pre-gathered planes move straight into the
+/// input tensors.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_update(
+    runtime: &Runtime,
+    artifact: &str,
+    state: &mut NetState,
+    rollout: &Rollout,
+    gae: &GaeResult,
+    plan: UpdatePlan,
+    up: &UpdateParams,
+    profiler: &mut PhaseProfiler,
+) -> anyhow::Result<Losses> {
+    let exe = runtime.load(artifact)?;
+    let minibatch = plan.minibatch;
+    let obs_dim = rollout.obs_dim;
+    let (discrete, act_dim, pregathered) = (plan.discrete, plan.act_dim, plan.pregathered);
+
+    let mut advantages = gae.advantages.clone();
+    if up.standardize_advantages {
+        standardize_advantages(&mut advantages);
+    }
+
+    let mut losses = Losses::default();
+    for mb in plan.batches {
+        let (obs, actions, old_logp) = if pregathered {
+            (mb.obs, mb.actions, mb.old_logp)
+        } else {
+            gather_rows(rollout, &mb.rows)
+        };
+        let mut adv = Vec::with_capacity(minibatch);
+        let mut ret = Vec::with_capacity(minibatch);
+        for &row in &mb.rows {
+            adv.push(advantages[row]);
+            ret.push(gae.rewards_to_go[row]);
+        }
+        let act_shape = if discrete {
+            vec![minibatch]
+        } else {
+            vec![minibatch, act_dim]
+        };
+        let inputs = vec![
+            Tensor::vec1(state.params.clone()),
+            Tensor::vec1(state.adam_m.clone()),
+            Tensor::vec1(state.adam_v.clone()),
+            Tensor::scalar(state.step),
+            Tensor::new(obs, vec![minibatch, obs_dim]),
+            Tensor::new(actions, act_shape),
+            Tensor::vec1(old_logp),
+            Tensor::vec1(adv),
+            Tensor::vec1(ret),
+            Tensor::scalar(up.lr),
+            Tensor::scalar(up.clip_eps),
+            Tensor::scalar(up.ent_coef),
+        ];
+        let out = profiler.time(Phase::NetworkUpdate, || exe.call(&inputs))?;
+        state.params = out[0].data.clone();
+        state.adam_m = out[1].data.clone();
+        state.adam_v = out[2].data.clone();
+        state.step = out[3].data[0];
+        losses.pi_loss += out[4].data[0];
+        losses.v_loss += out[4].data[1];
+        losses.entropy += out[4].data[2];
+        losses.minibatches += 1;
+    }
+    if losses.minibatches > 0 {
+        let k = losses.minibatches as f32;
+        losses.pi_loss /= k;
+        losses.v_loss /= k;
+        losses.entropy /= k;
+    }
+    Ok(losses)
+}
+
+/// Run the PPO update: `epochs` passes of shuffled minibatches
+/// ([`prepare_update`] + [`execute_update`] back to back — the
+/// sequential trainer's path; the pipelined trainer splits the halves
+/// around the GAE service wait).
+#[allow(clippy::too_many_arguments)]
 pub fn update(
     runtime: &Runtime,
     artifact: &str,
@@ -75,78 +233,10 @@ pub fn update(
     rng: &mut Rng,
     profiler: &mut PhaseProfiler,
 ) -> anyhow::Result<Losses> {
-    let exe = runtime.load(artifact)?;
-    let minibatch = exe.spec.meta_usize("minibatch")?;
-    let discrete = exe.spec.meta_bool("discrete")?;
-    let act_dim = exe.spec.meta_usize("act_dim")?;
-    let n = rollout.transitions();
-    anyhow::ensure!(
-        n >= minibatch,
-        "rollout of {n} rows cannot fill a {minibatch}-row minibatch"
-    );
-
-    let mut advantages = gae.advantages.clone();
-    if up.standardize_advantages {
-        standardize_advantages(&mut advantages);
-    }
-
-    let obs_dim = rollout.obs_dim;
-    let aw = rollout.act_width;
-    let mut losses = Losses::default();
-
-    for _epoch in 0..up.epochs {
-        let perm = rng.permutation(n);
-        for chunk in perm.chunks_exact(minibatch) {
-            // Gather the minibatch rows.
-            let mut obs = Vec::with_capacity(minibatch * obs_dim);
-            let mut actions = Vec::with_capacity(minibatch * aw);
-            let mut old_logp = Vec::with_capacity(minibatch);
-            let mut adv = Vec::with_capacity(minibatch);
-            let mut ret = Vec::with_capacity(minibatch);
-            for &row in chunk {
-                obs.extend_from_slice(&rollout.obs[row * obs_dim..(row + 1) * obs_dim]);
-                actions.extend_from_slice(&rollout.actions[row * aw..(row + 1) * aw]);
-                old_logp.push(rollout.logp[row]);
-                adv.push(advantages[row]);
-                ret.push(gae.rewards_to_go[row]);
-            }
-            let act_shape = if discrete {
-                vec![minibatch]
-            } else {
-                vec![minibatch, act_dim]
-            };
-            let inputs = vec![
-                Tensor::vec1(state.params.clone()),
-                Tensor::vec1(state.adam_m.clone()),
-                Tensor::vec1(state.adam_v.clone()),
-                Tensor::scalar(state.step),
-                Tensor::new(obs, vec![minibatch, obs_dim]),
-                Tensor::new(actions, act_shape),
-                Tensor::vec1(old_logp),
-                Tensor::vec1(adv),
-                Tensor::vec1(ret),
-                Tensor::scalar(up.lr),
-                Tensor::scalar(up.clip_eps),
-                Tensor::scalar(up.ent_coef),
-            ];
-            let out = profiler.time(Phase::NetworkUpdate, || exe.call(&inputs))?;
-            state.params = out[0].data.clone();
-            state.adam_m = out[1].data.clone();
-            state.adam_v = out[2].data.clone();
-            state.step = out[3].data[0];
-            losses.pi_loss += out[4].data[0];
-            losses.v_loss += out[4].data[1];
-            losses.entropy += out[4].data[2];
-            losses.minibatches += 1;
-        }
-    }
-    if losses.minibatches > 0 {
-        let k = losses.minibatches as f32;
-        losses.pi_loss /= k;
-        losses.v_loss /= k;
-        losses.entropy /= k;
-    }
-    Ok(losses)
+    // No pre-gathering on the sequential path: there is no wait to hide
+    // the gathers under, so they happen per minibatch as executed.
+    let plan = prepare_update(runtime, artifact, rollout, up.epochs, rng, false)?;
+    execute_update(runtime, artifact, state, rollout, gae, plan, up, profiler)
 }
 
 #[cfg(test)]

@@ -61,10 +61,13 @@ impl Phase {
     }
 }
 
-/// Accumulates per-phase durations across iterations.
+/// Accumulates per-phase durations across iterations, plus the
+/// end-to-end wall clock of each iteration so overlapped schedules can
+/// be compared against the sum of their phases.
 #[derive(Debug, Default)]
 pub struct PhaseProfiler {
     watches: BTreeMap<Phase, Stopwatch>,
+    iteration_wall: Stopwatch,
 }
 
 impl PhaseProfiler {
@@ -108,6 +111,30 @@ impl PhaseProfiler {
             + self.fraction(Phase::GaeMemoryWrite)
     }
 
+    /// Record one iteration's end-to-end wall clock (the trainer calls
+    /// this once per [`crate::coordinator::Trainer::iterate`]).
+    pub fn add_iteration_wall(&mut self, d: Duration) {
+        self.iteration_wall.add(d);
+    }
+
+    /// Total iteration wall clock across the run.
+    pub fn iteration_wall(&self) -> Duration {
+        self.iteration_wall.total()
+    }
+
+    /// Phase-time / wall-time ratio: ≈1.0 on the sequential schedule;
+    /// on the overlapped schedule the gap `wall − phases` is the time
+    /// hidden behind other stages (the GAE wait shrinks as update prep
+    /// overlaps it). Returns 0 when no iteration wall was recorded.
+    pub fn phase_coverage(&self) -> f64 {
+        let wall = self.iteration_wall.total().as_secs_f64();
+        if wall == 0.0 {
+            0.0
+        } else {
+            self.grand_total().as_secs_f64() / wall
+        }
+    }
+
     /// Render as a Table-I-shaped table.
     pub fn to_table(&self, system_label: &str) -> CsvTable {
         let mut t = CsvTable::new(&["Phase", "Sub-Phase", system_label, "total"]);
@@ -124,6 +151,7 @@ impl PhaseProfiler {
 
     pub fn reset(&mut self) {
         self.watches.clear();
+        self.iteration_wall = Stopwatch::default();
     }
 }
 
@@ -157,5 +185,20 @@ mod tests {
         let p = PhaseProfiler::new();
         let t = p.to_table("CPU Only");
         assert_eq!(t.n_rows(), 7);
+    }
+
+    #[test]
+    fn iteration_wall_and_coverage() {
+        let mut p = PhaseProfiler::new();
+        assert_eq!(p.phase_coverage(), 0.0);
+        p.add(Phase::GaeComputation, Duration::from_millis(30));
+        p.add(Phase::NetworkUpdate, Duration::from_millis(30));
+        // An overlapped iteration: 60ms of phase time in 40ms of wall.
+        p.add_iteration_wall(Duration::from_millis(40));
+        assert_eq!(p.iteration_wall(), Duration::from_millis(40));
+        assert!((p.phase_coverage() - 1.5).abs() < 1e-9);
+        p.reset();
+        assert_eq!(p.iteration_wall(), Duration::ZERO);
+        assert_eq!(p.phase_coverage(), 0.0);
     }
 }

@@ -6,15 +6,24 @@
 //! row-by-row into FILO stacks through the standardization/quantization
 //! codec, exactly as the SoC stores them in BRAM. Observations, encoded
 //! actions and log-probs stay on the PS side for the update phase.
+//!
+//! The collection path is allocation-free across iterations: the caller
+//! owns a [`Rollout`] and a [`CollectBuffers`] (the FILO stack planes)
+//! and [`collect_into`] refills them in place, so the pipelined trainer
+//! recycles the same storage every iteration and `vec_env` rows flow
+//! into the GAE service batcher without per-iteration reallocation. The
+//! raw (pre-codec) diagnostic planes double rollout memory, so they are
+//! only captured when `keep_raw` is set (Fig. 2/7 benches want them; the
+//! training loop does not).
 
 use super::policy::{sample, Sampled};
 use super::profiler::{Phase, PhaseProfiler};
-use crate::envs::vec_env::VecEnv;
+use crate::envs::vec_env::{VecEnv, VecStep};
 use crate::memory::FiloStack;
 use crate::util::Rng;
 
 /// One iteration's collected data, timestep-major.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Rollout {
     pub t_len: usize,
     pub batch: usize,
@@ -34,14 +43,79 @@ pub struct Rollout {
     pub done_mask: Vec<f32>,
     /// Episode returns completed during collection.
     pub finished_returns: Vec<f64>,
-    /// Raw (pre-codec) rewards, kept for diagnostics (Fig. 2/7 data).
+    /// Raw (pre-codec) rewards for diagnostics (Fig. 2/7 data); empty
+    /// unless collected with `keep_raw`.
     pub raw_rewards: Vec<f32>,
+    /// Raw (pre-codec) values; empty unless collected with `keep_raw`.
     pub raw_values: Vec<f32>,
 }
 
 impl Rollout {
+    /// An empty, shape-less buffer for a reuse pool ([`collect_into`]
+    /// sets the shape on every fill).
+    pub fn empty() -> Rollout {
+        Rollout::default()
+    }
+
     pub fn transitions(&self) -> usize {
         self.t_len * self.batch
+    }
+
+    /// Reset for refill: set the shape, clear every plane but keep the
+    /// allocations.
+    fn clear_for(&mut self, t_len: usize, batch: usize, obs_dim: usize, act_width: usize) {
+        self.t_len = t_len;
+        self.batch = batch;
+        self.obs_dim = obs_dim;
+        self.act_width = act_width;
+        self.obs.clear();
+        self.actions.clear();
+        self.logp.clear();
+        self.rewards.clear();
+        self.values.clear();
+        self.done_mask.clear();
+        self.finished_returns.clear();
+        self.raw_rewards.clear();
+        self.raw_values.clear();
+    }
+}
+
+/// Reusable FILO stack planes for the (reward, value) rows — the BRAM
+/// stack of Fig. 6 (raw f32 here; the codec pass quantizes at the
+/// iteration level, matching the paper's block-statistics timing). Owned
+/// by the trainer so the planes persist across iterations.
+#[derive(Debug)]
+pub struct CollectBuffers {
+    reward_stack: FiloStack<f32>,
+    value_stack: FiloStack<f32>,
+    /// Reused env-step output buffers (obs/rewards/dones planes).
+    step: VecStep,
+    batch: usize,
+    t_len: usize,
+}
+
+impl CollectBuffers {
+    pub fn new(batch: usize, t_len: usize) -> CollectBuffers {
+        CollectBuffers {
+            reward_stack: FiloStack::new(batch, t_len),
+            value_stack: FiloStack::new(batch, t_len + 1),
+            step: VecStep::default(),
+            batch,
+            t_len,
+        }
+    }
+
+    /// Reset the stacks (re-allocating only if the shape changed).
+    fn reset_for(&mut self, batch: usize, t_len: usize) {
+        if self.batch != batch || self.t_len != t_len {
+            self.reward_stack = FiloStack::new(batch, t_len);
+            self.value_stack = FiloStack::new(batch, t_len + 1);
+            self.batch = batch;
+            self.t_len = t_len;
+        } else {
+            self.reward_stack.reset();
+            self.value_stack.reset();
+        }
     }
 }
 
@@ -61,21 +135,27 @@ where
     }
 }
 
-/// Collect `t_len` steps from `envs` with `policy`.
+/// Collect `t_len` steps from `envs` with `policy` into a caller-owned
+/// [`Rollout`], reusing `bufs` for the stack planes — no per-iteration
+/// allocation once the buffers are warm.
 ///
 /// `current_obs` carries the env state across iterations (from
 /// `reset_all` initially, then the tail of the previous rollout).
 /// The profiler attributes time to `DnnInference` / `EnvironmentRun` /
-/// `StoringTrajectories` as in Table I.
+/// `StoringTrajectories` as in Table I. The raw (pre-codec) planes are
+/// captured only when `keep_raw` is set.
 #[allow(clippy::too_many_arguments)]
-pub fn collect(
+pub fn collect_into(
     envs: &mut VecEnv,
     policy: &mut dyn PolicyFn,
     current_obs: &mut Vec<f32>,
     t_len: usize,
     rng: &mut Rng,
     profiler: &mut PhaseProfiler,
-) -> anyhow::Result<Rollout> {
+    bufs: &mut CollectBuffers,
+    out: &mut Rollout,
+    keep_raw: bool,
+) -> anyhow::Result<()> {
     let batch = envs.len();
     let obs_dim = envs.obs_dim();
     let space = envs.action_space().clone();
@@ -84,18 +164,14 @@ pub fn collect(
         crate::envs::ActionSpace::Continuous { dim, .. } => *dim,
     };
 
-    // FILO stacks for the (reward, value) planes — the BRAM stack of
-    // Fig. 6 (raw f32 here; the codec pass quantizes at the iteration
-    // level, matching the paper's block-statistics timing).
-    let mut reward_stack: FiloStack<f32> = FiloStack::new(batch, t_len);
-    let mut value_stack: FiloStack<f32> = FiloStack::new(batch, t_len + 1);
+    bufs.reset_for(batch, t_len);
+    out.clear_for(t_len, batch, obs_dim, act_width);
+    out.obs.reserve(t_len * batch * obs_dim);
+    out.actions.reserve(t_len * batch * act_width);
+    out.logp.reserve(t_len * batch);
+    out.done_mask.reserve(t_len * batch);
 
-    let mut obs_out = Vec::with_capacity(t_len * batch * obs_dim);
-    let mut actions = Vec::with_capacity(t_len * batch * act_width);
-    let mut logp = Vec::with_capacity(t_len * batch);
-    let mut done_mask = Vec::with_capacity(t_len * batch);
-    let mut finished_returns = Vec::new();
-
+    let mut acts: Vec<crate::envs::Action> = Vec::with_capacity(batch);
     for _t in 0..t_len {
         // DNN inference on the PL (the policy_fwd artifact).
         let (dist, values_row) =
@@ -107,66 +183,81 @@ pub fn collect(
             .map(|i| sample(&space, &dist[i * width..(i + 1) * width], rng))
             .collect();
 
-        obs_out.extend_from_slice(current_obs);
+        out.obs.extend_from_slice(current_obs);
         for s in &sampled {
-            actions.extend_from_slice(&s.encoded);
-            logp.push(s.logp);
+            out.actions.extend_from_slice(&s.encoded);
+            out.logp.push(s.logp);
         }
 
-        // Environment step on the PS cores.
-        let acts: Vec<crate::envs::Action> =
-            sampled.iter().map(|s| s.action.clone()).collect();
-        let step = profiler.time(Phase::EnvironmentRun, || envs.step_all(&acts));
+        // Environment step on the PS cores (into the reused step planes).
+        acts.clear();
+        acts.extend(sampled.iter().map(|s| s.action.clone()));
+        profiler.time(Phase::EnvironmentRun, || {
+            envs.step_all_into(&acts, &mut bufs.step)
+        });
 
         // Store the (reward, value) rows into the stacks.
         profiler.time(Phase::StoringTrajectories, || {
-            reward_stack.push_row(&step.rewards).expect("stack sized for T");
-            value_stack.push_row(&values_row).expect("stack sized for T+1");
+            bufs.reward_stack
+                .push_row(&bufs.step.rewards)
+                .expect("stack sized for T");
+            bufs.value_stack
+                .push_row(&values_row)
+                .expect("stack sized for T+1");
         });
 
-        for d in &step.dones {
-            done_mask.push(if *d { 1.0 } else { 0.0 });
+        for d in &bufs.step.dones {
+            out.done_mask.push(if *d { 1.0 } else { 0.0 });
         }
-        for &(_, ret, _) in &step.finished {
-            finished_returns.push(ret);
+        for &(_, ret, _) in &bufs.step.finished {
+            out.finished_returns.push(ret);
         }
-        *current_obs = step.obs;
+        current_obs.clear();
+        current_obs.extend_from_slice(&bufs.step.obs);
     }
 
     // Bootstrap value of the final state.
     let (_, boot_values) =
         profiler.time(Phase::DnnInference, || policy.forward(current_obs))?;
     profiler.time(Phase::StoringTrajectories, || {
-        value_stack.push_row(&boot_values).expect("bootstrap row");
+        bufs.value_stack.push_row(&boot_values).expect("bootstrap row");
     });
 
     // Drain the stacks into contiguous timestep-major planes.
-    let mut rewards = vec![0.0f32; t_len * batch];
-    let mut values = vec![0.0f32; (t_len + 1) * batch];
+    out.rewards.resize(t_len * batch, 0.0);
+    out.values.resize((t_len + 1) * batch, 0.0);
     for t in 0..t_len {
-        rewards[t * batch..(t + 1) * batch]
-            .copy_from_slice(reward_stack.row(t).unwrap());
+        out.rewards[t * batch..(t + 1) * batch]
+            .copy_from_slice(bufs.reward_stack.row(t).unwrap());
     }
     for t in 0..=t_len {
-        values[t * batch..(t + 1) * batch]
-            .copy_from_slice(value_stack.row(t).unwrap());
+        out.values[t * batch..(t + 1) * batch]
+            .copy_from_slice(bufs.value_stack.row(t).unwrap());
     }
+    if keep_raw {
+        out.raw_rewards.extend_from_slice(&out.rewards);
+        out.raw_values.extend_from_slice(&out.values);
+    }
+    Ok(())
+}
 
-    Ok(Rollout {
-        t_len,
-        batch,
-        obs_dim,
-        obs: obs_out,
-        actions,
-        act_width,
-        logp,
-        raw_rewards: rewards.clone(),
-        raw_values: values.clone(),
-        rewards,
-        values,
-        done_mask,
-        finished_returns,
-    })
+/// Allocate-and-collect convenience (tests, diagnostics benches): fresh
+/// buffers every call, raw planes kept. The training loop uses
+/// [`collect_into`] with recycled storage instead.
+pub fn collect(
+    envs: &mut VecEnv,
+    policy: &mut dyn PolicyFn,
+    current_obs: &mut Vec<f32>,
+    t_len: usize,
+    rng: &mut Rng,
+    profiler: &mut PhaseProfiler,
+) -> anyhow::Result<Rollout> {
+    let mut bufs = CollectBuffers::new(envs.len(), t_len);
+    let mut out = Rollout::empty();
+    collect_into(
+        envs, policy, current_obs, t_len, rng, profiler, &mut bufs, &mut out, true,
+    )?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -197,6 +288,9 @@ mod tests {
         assert_eq!(r.done_mask.len(), 64);
         // CartPole: every reward is 1.0 pre-codec.
         assert!(r.rewards.iter().all(|&x| x == 1.0));
+        // The convenience wrapper keeps the raw diagnostic planes.
+        assert_eq!(r.raw_rewards, r.rewards);
+        assert_eq!(r.raw_values, r.values);
         // Profiler saw all three collection phases.
         assert!(prof.total(Phase::DnnInference) > std::time::Duration::ZERO);
         assert!(prof.total(Phase::EnvironmentRun) > std::time::Duration::ZERO);
@@ -229,5 +323,51 @@ mod tests {
         let dones = r.done_mask.iter().filter(|&&d| d == 1.0).count();
         assert!(dones > 0, "random cartpole must fail within 256 steps");
         assert_eq!(r.finished_returns.len(), dones);
+    }
+
+    #[test]
+    fn collect_into_reuses_allocations_and_matches_collect() {
+        // Same seeds through the reuse path and the allocating wrapper
+        // must agree bit-for-bit; the second refill must not reallocate.
+        let fresh = {
+            let mut envs = VecEnv::new("cartpole", 4, 9, ThreadPool::new(2)).unwrap();
+            let mut obs = envs.reset_all();
+            let mut rng = Rng::new(7);
+            let mut prof = PhaseProfiler::new();
+            let mut pol = uniform_policy(2, 4);
+            let a = collect(&mut envs, &mut pol, &mut obs, 32, &mut rng, &mut prof)
+                .unwrap();
+            let b = collect(&mut envs, &mut pol, &mut obs, 32, &mut rng, &mut prof)
+                .unwrap();
+            (a, b)
+        };
+        let mut envs = VecEnv::new("cartpole", 4, 9, ThreadPool::new(2)).unwrap();
+        let mut obs = envs.reset_all();
+        let mut rng = Rng::new(7);
+        let mut prof = PhaseProfiler::new();
+        let mut pol = uniform_policy(2, 4);
+        let mut bufs = CollectBuffers::new(4, 32);
+        let mut out = Rollout::empty();
+        collect_into(
+            &mut envs, &mut pol, &mut obs, 32, &mut rng, &mut prof, &mut bufs,
+            &mut out, false,
+        )
+        .unwrap();
+        assert_eq!(out.rewards, fresh.0.rewards);
+        assert_eq!(out.obs, fresh.0.obs);
+        assert!(out.raw_rewards.is_empty(), "raw planes are gated off");
+        let ptrs = (out.obs.as_ptr(), out.rewards.as_ptr(), out.values.as_ptr());
+        collect_into(
+            &mut envs, &mut pol, &mut obs, 32, &mut rng, &mut prof, &mut bufs,
+            &mut out, false,
+        )
+        .unwrap();
+        assert_eq!(out.rewards, fresh.1.rewards);
+        assert_eq!(out.obs, fresh.1.obs);
+        assert_eq!(
+            ptrs,
+            (out.obs.as_ptr(), out.rewards.as_ptr(), out.values.as_ptr()),
+            "warm refill must not reallocate the rollout planes"
+        );
     }
 }

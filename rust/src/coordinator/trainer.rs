@@ -1,16 +1,46 @@
 //! The full PPO trainer — ties rollout, GAE stage, and update together
-//! under the SoC phase machine, with Table-I phase profiling throughout.
+//! under the SoC phase-lane machine, with Table-I phase profiling
+//! throughout.
+//!
+//! [`Trainer::iterate`] is split into three stages —
+//! [`Trainer::collect_stage`], [`Trainer::gae_stage`],
+//! [`Trainer::update_stage`] — scheduled per
+//! [`PipelineMode`]:
+//!
+//! - **`Sequential`** (default) runs them back to back with the inline
+//!   GAE backend: the paper's §III-A schedule, bit-identical to the
+//!   pre-pipeline trainer at the same seed.
+//! - **`Overlapped`** dispatches the GAE planes to an in-process
+//!   [`GaeService`] worker pool and overlaps the wait with the
+//!   advantage-independent half of the update (epoch permutations +
+//!   minibatch gathers). The PJRT runtime is thread-pinned (its
+//!   executable cache is `Rc`), so the policy/update artifacts stay on
+//!   this thread and only the GAE compute fans out — which preserves the
+//!   sequential dependency graph exactly, so `Overlapped` produces the
+//!   same `IterStats` stream bit-for-bit (the service's per-column math
+//!   is bit-identical to the inline stage; only `hw_cycles` accounting
+//!   differs on the hwsim backend). Rollout storage is a recycled
+//!   buffer refilled in place, so the collection path allocates nothing
+//!   per iteration (the trainer holds at most one rollout in flight;
+//!   true double buffering lives in the threaded driver).
+//!
+//! The fully-threaded cross-iteration overlap (collection of *i+1*
+//! concurrent with GAE+update of *i*) lives in
+//! [`super::pipeline::run_stages`] for `Send` stage sets; see
+//! `benches/pipeline_overlap.rs` for the wall-clock comparison.
 
 use super::config::TrainerConfig;
-use super::gae_stage::{run_gae_stage, GaeResult};
-use super::phases::{PhaseMachine, SocPhase};
-use super::ppo::{update, Losses, NetState, UpdateParams};
-use super::profiler::PhaseProfiler;
-use super::rollout::collect;
+use super::gae_stage::{codec_stage, run_gae_stage, GaeBackend, GaeResult};
+use super::phases::{PipelineLanes, SocPhase};
+use super::pipeline::PipelineMode;
+use super::ppo::{execute_update, prepare_update, update, Losses, NetState, UpdateParams};
+use super::profiler::{Phase, PhaseProfiler};
+use super::rollout::{collect_into, CollectBuffers, Rollout};
 use crate::envs::vec_env::VecEnv;
 use crate::gae::GaeParams;
 use crate::quant::RewardValueCodec;
 use crate::runtime::{Runtime, Tensor};
+use crate::service::{GaeService, ServiceConfig};
 use crate::stats::RollingMean;
 use crate::util::threadpool::ThreadPool;
 use crate::util::Rng;
@@ -26,7 +56,8 @@ pub struct IterStats {
     /// Episodes completed so far.
     pub episodes: usize,
     pub losses: Losses,
-    /// HwSim cycles this iteration, if that backend ran.
+    /// HwSim cycles this iteration, if that backend ran (in `Overlapped`
+    /// mode: summed over the service batches the columns rode in).
     pub hw_cycles: Option<u64>,
 }
 
@@ -44,9 +75,17 @@ pub struct Trainer {
     episodes: usize,
     steps: usize,
     pub profiler: PhaseProfiler,
-    pub phases: PhaseMachine,
+    /// Phase lanes: `Sequential` cycles lane 0; `Overlapped` alternates
+    /// lanes so the schedule (and its PS↔PL handshake accounting) is
+    /// auditable per in-flight iteration.
+    pub phases: PipelineLanes,
     policy_artifact: String,
     train_artifact: String,
+    /// Recycled rollout storage (refilled in place every iteration).
+    scratch: Rollout,
+    collect_bufs: CollectBuffers,
+    /// In-process GAE service (`Overlapped` mode only).
+    service: Option<GaeService>,
 }
 
 impl Trainer {
@@ -56,43 +95,79 @@ impl Trainer {
         let runtime = Runtime::new(&config.artifact_dir)?;
         let geo = runtime.manifest.geometry;
         let pool = ThreadPool::new(config.env_threads);
-        let envs = VecEnv::new(&config.env, geo.num_envs, config.seed ^ 0xE57, pool)?;
+        let mut envs = VecEnv::new(&config.env, geo.num_envs, config.seed ^ 0xE57, pool)?;
         let params = runtime
             .manifest
             .load_blob_f32(&format!("{}_init_params", config.env))?;
-        let mut rng = Rng::new(config.seed);
-        let mut envs = envs;
         let current_obs = envs.reset_all();
-        let _ = &mut rng;
+        let gae_params = GaeParams::new(geo.gamma, geo.lambda);
+        let service = match config.pipeline {
+            PipelineMode::Sequential => None,
+            PipelineMode::Overlapped => {
+                anyhow::ensure!(
+                    config.backend != GaeBackend::Hlo,
+                    "the overlapped pipeline serves GAE through the worker pool, \
+                     which cannot host the hlo backend; use scalar/batched/hwsim \
+                     or --pipeline sequential"
+                );
+                Some(GaeService::start(ServiceConfig {
+                    workers: config.service_workers.max(1),
+                    backend: config.backend,
+                    // Backpressured plane submission: capacity just needs
+                    // to cover one iteration's columns without shedding.
+                    queue_capacity: geo.num_envs.max(256),
+                    gae: gae_params,
+                    ..ServiceConfig::default()
+                })?)
+            }
+        };
         Ok(Trainer {
             policy_artifact: format!("{}_policy_fwd", config.env),
             train_artifact: format!("{}_train_step", config.env),
-            gae_params: GaeParams::new(geo.gamma, geo.lambda),
+            gae_params,
             codec: RewardValueCodec::new(config.codec, config.quant_bits),
             state: NetState::fresh(params),
             rolling_return: RollingMean::new(100),
             episodes: 0,
             steps: 0,
             profiler: PhaseProfiler::new(),
-            phases: PhaseMachine::new(),
-            rng,
+            phases: PipelineLanes::new(2),
+            rng: Rng::new(config.seed),
             current_obs,
+            scratch: Rollout::empty(),
+            collect_bufs: CollectBuffers::new(geo.num_envs, geo.rollout_t),
+            service,
             envs,
             runtime,
             config,
         })
     }
 
-    /// Run one PPO iteration (rollout → GAE → update).
-    pub fn iterate(&mut self, iter: usize) -> anyhow::Result<IterStats> {
-        let geo = self.runtime.manifest.geometry;
+    fn lane_step(&mut self, lane: usize, next: SocPhase) -> anyhow::Result<()> {
+        self.phases
+            .transition(lane, next)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+    }
 
-        // --- trajectory collection -----------------------------------
-        if self.phases.current() == SocPhase::Idle {
-            self.phases.transition(SocPhase::TrajectoryCollection).unwrap();
-        } else {
-            self.phases.transition(SocPhase::TrajectoryCollection).unwrap();
+    /// The PPO hyper-parameters for one update call — single source for
+    /// both schedules (divergence here is exactly what the equivalence
+    /// tests exist to prevent).
+    fn update_params(&self) -> UpdateParams {
+        UpdateParams {
+            epochs: self.config.epochs,
+            lr: self.config.lr,
+            clip_eps: self.config.clip_eps,
+            ent_coef: self.config.ent_coef,
+            standardize_advantages: self.config.standardize_advantages,
         }
+    }
+
+    /// Trajectory-collection stage: fill a recycled rollout buffer with
+    /// `rollout_t` steps from the vectorized envs under the current
+    /// policy parameters.
+    fn collect_stage(&mut self, lane: usize) -> anyhow::Result<Rollout> {
+        self.lane_step(lane, SocPhase::TrajectoryCollection)?;
+        let geo = self.runtime.manifest.geometry;
         let exe = self.runtime.load(&self.policy_artifact)?;
         let num_envs = self.envs.len();
         let obs_dim = self.envs.obs_dim();
@@ -105,52 +180,131 @@ impl Trainer {
             let out = exe.call_literals(&[&params_lit, &obs_lit])?;
             Ok((out[0].data.clone(), out[1].data.clone()))
         };
-        let mut rollout = collect(
+        let mut rollout = std::mem::take(&mut self.scratch);
+        collect_into(
             &mut self.envs,
             &mut policy,
             &mut self.current_obs,
             geo.rollout_t,
             &mut self.rng,
             &mut self.profiler,
+            &mut self.collect_bufs,
+            &mut rollout,
+            self.config.keep_raw_planes,
         )?;
         for &r in &rollout.finished_returns {
             self.rolling_return.push(r);
             self.episodes += 1;
         }
         self.steps += rollout.transitions();
+        Ok(rollout)
+    }
 
-        // --- GAE phase -------------------------------------------------
-        self.phases.transition(SocPhase::DataPrep).unwrap();
-        self.phases.transition(SocPhase::GaeCompute).unwrap();
-        let gae: GaeResult = run_gae_stage(
+    /// Inline GAE stage (sequential schedule).
+    fn gae_stage(&mut self, lane: usize, rollout: &mut Rollout) -> anyhow::Result<GaeResult> {
+        self.lane_step(lane, SocPhase::DataPrep)?;
+        self.lane_step(lane, SocPhase::GaeCompute)?;
+        run_gae_stage(
             self.config.backend,
             &self.gae_params,
-            &mut rollout,
+            rollout,
             &mut self.codec,
             Some(&self.runtime),
             &mut self.profiler,
-        )?;
+        )
+    }
 
-        // --- update ----------------------------------------------------
-        self.phases.transition(SocPhase::LossAndUpdate).unwrap();
-        let up = UpdateParams {
-            epochs: self.config.epochs,
-            lr: self.config.lr,
-            clip_eps: self.config.clip_eps,
-            ent_coef: self.config.ent_coef,
-            standardize_advantages: self.config.standardize_advantages,
-        };
+    /// Loss + update stage.
+    fn update_stage(
+        &mut self,
+        lane: usize,
+        rollout: &Rollout,
+        gae: &GaeResult,
+    ) -> anyhow::Result<Losses> {
+        self.lane_step(lane, SocPhase::LossAndUpdate)?;
+        let up = self.update_params();
         let losses = update(
+            &self.runtime,
+            &self.train_artifact,
+            &mut self.state,
+            rollout,
+            gae,
+            &up,
+            &mut self.rng,
+            &mut self.profiler,
+        )?;
+        self.lane_step(lane, SocPhase::Idle)?;
+        Ok(losses)
+    }
+
+    /// One iteration on the overlapped schedule: GAE runs on the service
+    /// worker pool while this thread prepares the update's
+    /// advantage-independent half.
+    fn iterate_overlapped(&mut self, lane: usize) -> anyhow::Result<(GaeResult, Losses, Rollout)> {
+        let mut rollout = self.collect_stage(lane)?;
+        self.lane_step(lane, SocPhase::DataPrep)?;
+        codec_stage(&mut rollout, &mut self.codec, &mut self.profiler);
+        self.lane_step(lane, SocPhase::GaeCompute)?;
+        let service = self.service.as_ref().expect("overlapped mode owns a service");
+        let pending = service.submit_planes(
+            rollout.t_len,
+            rollout.batch,
+            &rollout.rewards,
+            &rollout.values,
+            &rollout.done_mask,
+        )?;
+        // ---- the overlap: while the worker pool computes advantages,
+        // draw the epoch permutations (same RNG stream order as the
+        // sequential path — the stream does not depend on GAE results)
+        // and gather the advantage-independent minibatch tensors.
+        let plan = prepare_update(
+            &self.runtime,
+            &self.train_artifact,
+            &rollout,
+            self.config.epochs,
+            &mut self.rng,
+            true, // pre-gather: this work hides under the service wait
+        )?;
+        let gae: GaeResult = self
+            .profiler
+            .time(Phase::GaeComputation, || pending.wait())?
+            .into();
+        self.lane_step(lane, SocPhase::LossAndUpdate)?;
+        let up = self.update_params();
+        let losses = execute_update(
             &self.runtime,
             &self.train_artifact,
             &mut self.state,
             &rollout,
             &gae,
+            plan,
             &up,
-            &mut self.rng,
             &mut self.profiler,
         )?;
+        self.lane_step(lane, SocPhase::Idle)?;
+        Ok((gae, losses, rollout))
+    }
 
+    /// Run one PPO iteration (rollout → GAE → update) on the configured
+    /// schedule.
+    pub fn iterate(&mut self, iter: usize) -> anyhow::Result<IterStats> {
+        let wall_start = std::time::Instant::now();
+        let (gae, losses) = match self.config.pipeline {
+            PipelineMode::Sequential => {
+                let lane = 0;
+                let mut rollout = self.collect_stage(lane)?;
+                let gae = self.gae_stage(lane, &mut rollout)?;
+                let losses = self.update_stage(lane, &rollout, &gae)?;
+                self.scratch = rollout;
+                (gae, losses)
+            }
+            PipelineMode::Overlapped => {
+                let (gae, losses, rollout) = self.iterate_overlapped(iter % 2)?;
+                self.scratch = rollout;
+                (gae, losses)
+            }
+        };
+        self.profiler.add_iteration_wall(wall_start.elapsed());
         Ok(IterStats {
             iter,
             steps: self.steps,

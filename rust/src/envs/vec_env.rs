@@ -15,7 +15,7 @@ use crate::util::Rng;
 use std::sync::Mutex;
 
 /// Result of stepping all environments once.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct VecStep {
     /// `[N * obs_dim]` row-major observations (post-autoreset).
     pub obs: Vec<f32>,
@@ -103,13 +103,29 @@ impl VecEnv {
 
     /// Step every environment with its action; autoresets finished ones.
     pub fn step_all(&mut self, actions: &[Action]) -> VecStep {
+        let mut out = VecStep::default();
+        self.step_all_into(actions, &mut out);
+        out
+    }
+
+    /// [`VecEnv::step_all`] into caller-owned output planes — the
+    /// zero-allocation path the pipelined trainer steps through every
+    /// timestep (the planes are recycled across the whole run).
+    pub fn step_all_into(&mut self, actions: &[Action], out: &mut VecStep) {
         let n = self.slots.len();
         assert_eq!(actions.len(), n, "need one action per env");
         let d = self.obs_dim;
-        let obs = Mutex::new(vec![0.0f32; n * d]);
-        let rewards = Mutex::new(vec![0.0f32; n]);
-        let dones = Mutex::new(vec![false; n]);
-        let finished = Mutex::new(Vec::new());
+        // resize without clear: a warm buffer of the right length is
+        // left as-is (every slot is overwritten below), so the hot path
+        // pays no per-step memset.
+        out.obs.resize(n * d, 0.0);
+        out.rewards.resize(n, 0.0);
+        out.dones.resize(n, false);
+        out.finished.clear();
+        let obs = Mutex::new(std::mem::take(&mut out.obs));
+        let rewards = Mutex::new(std::mem::take(&mut out.rewards));
+        let dones = Mutex::new(std::mem::take(&mut out.dones));
+        let finished = Mutex::new(std::mem::take(&mut out.finished));
         self.pool.scoped_for(n, |i| {
             let mut guard = self.slots[i].lock().unwrap();
             let slot = &mut *guard;
@@ -132,12 +148,10 @@ impl VecEnv {
             };
             obs.lock().unwrap()[i * d..(i + 1) * d].copy_from_slice(&next_obs);
         });
-        VecStep {
-            obs: obs.into_inner().unwrap(),
-            rewards: rewards.into_inner().unwrap(),
-            dones: dones.into_inner().unwrap(),
-            finished: finished.into_inner().unwrap(),
-        }
+        out.obs = obs.into_inner().unwrap();
+        out.rewards = rewards.into_inner().unwrap();
+        out.dones = dones.into_inner().unwrap();
+        out.finished = finished.into_inner().unwrap();
     }
 }
 
@@ -199,6 +213,31 @@ mod tests {
         let obs = v.reset_all();
         // Different RNG streams ⇒ different initial states.
         assert_ne!(&obs[0..3], &obs[3..6]);
+    }
+
+    #[test]
+    fn step_all_into_reuses_buffers() {
+        let mut v = VecEnv::new("cartpole", 4, 3, pool()).unwrap();
+        v.reset_all();
+        let actions: Vec<Action> = (0..4).map(|i| Action::Discrete(i % 2)).collect();
+        let mut out = VecStep::default();
+        v.step_all_into(&actions, &mut out);
+        assert_eq!(out.obs.len(), 16);
+        let ptr = out.obs.as_ptr();
+        v.step_all_into(&actions, &mut out);
+        assert_eq!(ptr, out.obs.as_ptr(), "warm step must not reallocate");
+        // And the into-variant agrees with the allocating one.
+        let mut a = VecEnv::new("cartpole", 2, 5, pool()).unwrap();
+        let mut b = VecEnv::new("cartpole", 2, 5, pool()).unwrap();
+        a.reset_all();
+        b.reset_all();
+        let acts: Vec<Action> = (0..2).map(|_| Action::Discrete(0)).collect();
+        let want = a.step_all(&acts);
+        let mut got = VecStep::default();
+        b.step_all_into(&acts, &mut got);
+        assert_eq!(want.obs, got.obs);
+        assert_eq!(want.rewards, got.rewards);
+        assert_eq!(want.dones, got.dones);
     }
 
     #[test]

@@ -47,12 +47,13 @@ fn main() {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let config = TrainerConfig::from_args(args)?;
     println!(
-        "training {} for {} iters (codec exp{}, {}-bit, backend {}, seed {})",
+        "training {} for {} iters (codec exp{}, {}-bit, backend {}, pipeline {}, seed {})",
         config.env,
         config.iters,
         config.codec.index(),
         config.quant_bits,
         config.backend.label(),
+        config.pipeline.label(),
         config.seed
     );
     let mut trainer = Trainer::new(config)?;

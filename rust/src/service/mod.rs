@@ -64,4 +64,4 @@ pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile};
 pub use metrics::{LatencyQuantiles, MetricsSnapshot, ServiceMetrics};
 pub use queue::{BoundedQueue, PushError};
 pub use request::{GaeResponse, RequestTiming, ResponseHandle, ServiceError};
-pub use server::{GaeService, ServiceConfig};
+pub use server::{GaeService, PlaneGae, PlanesPending, ServiceConfig};

@@ -33,6 +33,11 @@ pub struct GaeResponse {
     pub hw_cycles: Option<u64>,
     /// Index of the worker shard that served the request.
     pub worker: usize,
+    /// Sequence number of the coalesced batch within that worker —
+    /// `(worker, batch_seq)` uniquely identifies the batch this request
+    /// rode in, so aggregators can count shared-batch figures (like
+    /// `hw_cycles`) exactly once.
+    pub batch_seq: u64,
     pub timing: RequestTiming,
 }
 
@@ -56,6 +61,9 @@ pub enum ServiceError {
     Timeout,
     /// The configured backend cannot run inside the service.
     UnsupportedBackend(String),
+    /// A plane-shaped submission's buffer length disagrees with its
+    /// declared `[T, B]` geometry.
+    ShapeMismatch { plane: &'static str, got: usize, want: usize },
 }
 
 impl fmt::Display for ServiceError {
@@ -73,6 +81,10 @@ impl fmt::Display for ServiceError {
             ServiceError::UnsupportedBackend(b) => {
                 write!(f, "backend {b:?} is not servable (use scalar, batched, or hwsim)")
             }
+            ServiceError::ShapeMismatch { plane, got, want } => write!(
+                f,
+                "plane {plane:?} holds {got} elements, geometry implies {want}"
+            ),
         }
     }
 }
@@ -129,6 +141,9 @@ mod tests {
         assert!(ServiceError::UnsupportedBackend("hlo".into())
             .to_string()
             .contains("hwsim"));
+        let s = ServiceError::ShapeMismatch { plane: "values", got: 9, want: 10 }
+            .to_string();
+        assert!(s.contains("values") && s.contains('9') && s.contains("10"), "{s}");
     }
 
     #[test]
@@ -147,6 +162,7 @@ mod tests {
             outputs: vec![],
             hw_cycles: None,
             worker: 0,
+            batch_seq: 0,
             timing: RequestTiming {
                 queue: Duration::ZERO,
                 compute: Duration::ZERO,

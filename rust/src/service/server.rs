@@ -200,6 +200,55 @@ impl GaeService {
             .collect()
     }
 
+    /// The pipelined trainer's in-process seam: submit one iteration's
+    /// timestep-major `(rewards [T·B], values [(T+1)·B], done-mask
+    /// [T·B])` planes and get a [`PlanesPending`] to await while other
+    /// work overlaps the GAE compute.
+    ///
+    /// Each env column becomes one single-lane request (the dynamic
+    /// batcher then coalesces columns into its leak-free padded tiles
+    /// across the worker shards), and column results scatter back into
+    /// `[T, B]` planes on [`PlanesPending::wait`]. Admission is
+    /// backpressured, never shed — trainer iterations must all complete.
+    ///
+    /// The per-column math is bit-identical to the inline
+    /// [`crate::coordinator::gae_stage::run_gae_stage`] on the same
+    /// backend: scalar/hwsim mask or split at dones exactly as the
+    /// trainer's column splitter does, and the batcher's padding is a
+    /// fixed point of the recurrence.
+    pub fn submit_planes(
+        &self,
+        t_len: usize,
+        batch: usize,
+        rewards: &[f32],
+        values: &[f32],
+        done_mask: &[f32],
+    ) -> Result<PlanesPending, ServiceError> {
+        let check = |plane: &'static str, got: usize, want: usize| {
+            if got != want {
+                Err(ServiceError::ShapeMismatch { plane, got, want })
+            } else {
+                Ok(())
+            }
+        };
+        check("rewards", rewards.len(), t_len * batch)?;
+        check("values", values.len(), (t_len + 1) * batch)?;
+        check("done_mask", done_mask.len(), t_len * batch)?;
+        if t_len == 0 || batch == 0 {
+            return Err(ServiceError::EmptyRequest);
+        }
+        let mut handles = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let column = Trajectory::new(
+                (0..t_len).map(|t| rewards[t * batch + i]).collect(),
+                (0..=t_len).map(|t| values[t * batch + i]).collect(),
+                (0..t_len).map(|t| done_mask[t * batch + i] == 1.0).collect(),
+            );
+            handles.push(self.enqueue_blocking(vec![column])?);
+        }
+        Ok(PlanesPending { t_len, batch, handles })
+    }
+
     pub fn config(&self) -> &ServiceConfig {
         &self.config
     }
@@ -233,6 +282,77 @@ impl GaeService {
 impl Drop for GaeService {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// In-flight plane-shaped request set returned by
+/// [`GaeService::submit_planes`]: one [`ResponseHandle`] per env column.
+#[derive(Debug)]
+pub struct PlanesPending {
+    t_len: usize,
+    batch: usize,
+    handles: Vec<ResponseHandle>,
+}
+
+/// Reassembled `[T, B]` GAE planes for one trainer iteration.
+#[derive(Debug, Clone)]
+pub struct PlaneGae {
+    /// `[T * B]` advantages, timestep-major.
+    pub advantages: Vec<f32>,
+    /// `[T * B]` rewards-to-go, timestep-major.
+    pub rewards_to_go: Vec<f32>,
+    /// Simulated cycles summed over the *distinct* coalesced batches the
+    /// columns rode in (hwsim backend only): columns sharing a batch
+    /// share its cycle count, so each `(worker, batch_seq)` is counted
+    /// once. An aggregate work gauge, not the single-batch figure the
+    /// inline stage reports.
+    pub hw_cycles: Option<u64>,
+}
+
+impl From<PlaneGae> for crate::coordinator::gae_stage::GaeResult {
+    /// The plane seam's results are exactly a GAE-stage result — the
+    /// single conversion point the trainer, benches, and equivalence
+    /// tests all share.
+    fn from(p: PlaneGae) -> Self {
+        crate::coordinator::gae_stage::GaeResult {
+            advantages: p.advantages,
+            rewards_to_go: p.rewards_to_go,
+            hw_cycles: p.hw_cycles,
+        }
+    }
+}
+
+impl PlanesPending {
+    /// Await every column and scatter the per-column outputs back into
+    /// timestep-major `[T, B]` planes.
+    pub fn wait(self) -> Result<PlaneGae, ServiceError> {
+        let (t_len, batch) = (self.t_len, self.batch);
+        let mut advantages = vec![0.0f32; t_len * batch];
+        let mut rewards_to_go = vec![0.0f32; t_len * batch];
+        let mut hw_cycles: Option<u64> = None;
+        let mut counted: std::collections::HashSet<(usize, u64)> =
+            std::collections::HashSet::new();
+        for (i, handle) in self.handles.into_iter().enumerate() {
+            let resp = handle.wait()?;
+            let out = &resp.outputs[0];
+            debug_assert_eq!(out.advantages.len(), t_len);
+            for (t, (&a, &r)) in
+                out.advantages.iter().zip(&out.rewards_to_go).enumerate()
+            {
+                advantages[t * batch + i] = a;
+                rewards_to_go[t * batch + i] = r;
+            }
+            if let Some(c) = resp.hw_cycles {
+                if counted.insert((resp.worker, resp.batch_seq)) {
+                    hw_cycles = Some(hw_cycles.unwrap_or(0) + c);
+                }
+            }
+        }
+        Ok(PlaneGae { advantages, rewards_to_go, hw_cycles })
+    }
+
+    pub fn columns(&self) -> usize {
+        self.handles.len()
     }
 }
 
@@ -323,6 +443,120 @@ mod tests {
         for h in handles {
             h.wait().unwrap();
         }
+    }
+
+    #[test]
+    fn submit_planes_matches_per_column_reference_bitwise() {
+        // The trainer seam's contract: plane results are bit-identical
+        // to the inline stage's per-column computation (masking at dones
+        // equals splitting at dones, multiplications by exact 0.0/1.0).
+        for backend in [GaeBackend::Scalar, GaeBackend::Batched] {
+            let svc = GaeService::with_workers(3, backend).unwrap();
+            let mut g = Gen::new(21);
+            let (t_len, batch) = (40, 6);
+            let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+            let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+            let done_mask: Vec<f32> = (0..t_len * batch)
+                .map(|_| if g.bool_p(0.07) { 1.0 } else { 0.0 })
+                .collect();
+            let pending = svc
+                .submit_planes(t_len, batch, &rewards, &values, &done_mask)
+                .unwrap();
+            assert_eq!(pending.columns(), batch);
+            let got = pending.wait().unwrap();
+            for i in 0..batch {
+                let column = Trajectory::new(
+                    (0..t_len).map(|t| rewards[t * batch + i]).collect(),
+                    (0..=t_len).map(|t| values[t * batch + i]).collect(),
+                    (0..t_len).map(|t| done_mask[t * batch + i] == 1.0).collect(),
+                );
+                let want = gae_trajectory(&GaeParams::default(), &column);
+                for t in 0..t_len {
+                    assert_eq!(
+                        got.advantages[t * batch + i].to_bits(),
+                        want.advantages[t].to_bits(),
+                        "{backend:?} col {i} t {t}"
+                    );
+                    assert_eq!(
+                        got.rewards_to_go[t * batch + i].to_bits(),
+                        want.rewards_to_go[t].to_bits(),
+                        "{backend:?} rtg col {i} t {t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn submit_planes_rejects_bad_shapes() {
+        let svc = GaeService::with_workers(1, GaeBackend::Scalar).unwrap();
+        assert!(matches!(
+            svc.submit_planes(4, 2, &[0.0; 7], &[0.0; 10], &[0.0; 8]),
+            Err(ServiceError::ShapeMismatch { plane: "rewards", got: 7, want: 8 })
+        ));
+        assert!(matches!(
+            svc.submit_planes(4, 2, &[0.0; 8], &[0.0; 9], &[0.0; 8]),
+            Err(ServiceError::ShapeMismatch { plane: "values", .. })
+        ));
+        assert!(matches!(
+            svc.submit_planes(4, 2, &[0.0; 8], &[0.0; 10], &[0.0; 7]),
+            Err(ServiceError::ShapeMismatch { plane: "done_mask", .. })
+        ));
+        assert_eq!(
+            svc.submit_planes(0, 0, &[], &[], &[]).unwrap_err(),
+            ServiceError::EmptyRequest
+        );
+    }
+
+    #[test]
+    fn planes_wait_counts_each_coalesced_batch_once() {
+        use crate::gae::GaeOutput;
+        use crate::service::request::RequestTiming;
+        use std::time::Duration;
+        // Three columns: two rode the same worker batch (cycles 100),
+        // one rode its own (cycles 40). Total must be 140, not 240.
+        let t_len = 2;
+        let mut handles = Vec::new();
+        for (worker, batch_seq, cycles) in [(0, 7, 100), (0, 7, 100), (1, 0, 40)] {
+            let (tx, rx) = std::sync::mpsc::channel();
+            tx.send(GaeResponse {
+                id: 0,
+                outputs: vec![GaeOutput {
+                    advantages: vec![0.0; t_len],
+                    rewards_to_go: vec![0.0; t_len],
+                }],
+                hw_cycles: Some(cycles),
+                worker,
+                batch_seq,
+                timing: RequestTiming {
+                    queue: Duration::ZERO,
+                    compute: Duration::ZERO,
+                    total: Duration::ZERO,
+                },
+            })
+            .unwrap();
+            handles.push(crate::service::request::ResponseHandle { id: 0, rx });
+        }
+        let pending = PlanesPending { t_len, batch: 3, handles };
+        assert_eq!(pending.wait().unwrap().hw_cycles, Some(140));
+    }
+
+    #[test]
+    fn submit_planes_hwsim_reports_cycles() {
+        let svc = GaeService::with_workers(2, GaeBackend::HwSim).unwrap();
+        let t_len = 16;
+        let batch = 4;
+        let mut g = Gen::new(5);
+        let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+        let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+        let done_mask = vec![0.0; t_len * batch];
+        let got = svc
+            .submit_planes(t_len, batch, &rewards, &values, &done_mask)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(got.hw_cycles.unwrap() > 0);
+        assert_eq!(got.advantages.len(), t_len * batch);
     }
 
     #[test]

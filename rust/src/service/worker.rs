@@ -36,12 +36,14 @@ pub(crate) struct WorkerContext {
 
 /// Run until the queue is closed and drained.
 pub(crate) fn worker_loop(ctx: WorkerContext) {
+    let mut batch_seq = 0u64;
     while let Some(group) = ctx.batcher.next_group(&ctx.queue) {
-        process_group(&ctx, group);
+        process_group(&ctx, group, batch_seq);
+        batch_seq += 1;
     }
 }
 
-fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>) {
+fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>, batch_seq: u64) {
     let picked_at = Instant::now();
     let lanes: Vec<&Trajectory> =
         group.iter().flat_map(|item| item.trajectories.iter()).collect();
@@ -70,6 +72,7 @@ fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>) {
             outputs: item_outputs,
             hw_cycles,
             worker: ctx.index,
+            batch_seq,
             timing,
         });
     }

@@ -44,6 +44,45 @@ pub fn ragged_trajectories(
         .collect()
 }
 
+/// FNV-1a over f32 bit patterns — a bit-exact stream digest shared by
+/// the pipeline-equivalence tests and the overlap bench (two schedules
+/// agree iff their digests agree).
+pub fn digest_f32(xs: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in xs {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A deterministic, parameter-free linear policy over `[B, obs_dim]`
+/// observations: logits `±s` and value `0.25·s` from a fixed projection
+/// seeded by `phase`. No feedback from any update stage, so sequential
+/// and overlapped schedules see identical trajectories — the stage-set
+/// shape the pipeline driver's equivalence tests and benches need.
+pub fn linear_policy(
+    batch: usize,
+    obs_dim: usize,
+    phase: f32,
+) -> impl FnMut(&[f32]) -> crate::Result<(Vec<f32>, Vec<f32>)> + Send {
+    let weights: Vec<f32> = (0..obs_dim)
+        .map(|k| ((k as f32) * 0.37 + phase).sin())
+        .collect();
+    move |obs: &[f32]| {
+        let mut dist = vec![0.0f32; batch * 2];
+        let mut values = vec![0.0f32; batch];
+        for i in 0..batch {
+            let o = &obs[i * obs_dim..(i + 1) * obs_dim];
+            let s: f32 = o.iter().zip(&weights).map(|(&x, &w)| x * w).sum();
+            dist[i * 2] = s;
+            dist[i * 2 + 1] = -s;
+            values[i] = 0.25 * s;
+        }
+        Ok((dist, values))
+    }
+}
+
 /// Gate for artifact-dependent integration tests: `Some(Runtime)` only
 /// when `dir` holds a manifest **and** the PJRT client initializes
 /// (i.e. a real `xla_extension` is linked, not the offline stub).
