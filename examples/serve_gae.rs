@@ -1,32 +1,39 @@
-//! Load generator for the GAE serving subsystem ([`heppo::service`]):
-//! closed-loop and open-loop (Poisson arrivals) traffic against a
-//! sharded, dynamically-batched `GaeService`.
+//! Load generator + network front-end driver for the GAE serving
+//! subsystem ([`heppo::service`] + [`heppo::net`]). Three modes:
 //!
-//! - **closed loop** (default): `--clients` threads each keep exactly one
-//!   request in flight through the backpressured `submit_blocking` path —
-//!   the classic saturation benchmark; nothing sheds, clients just wait.
-//! - **open loop** (`--open-loop`): requests arrive on a Poisson process
-//!   at `--rate` req/s regardless of service state — the production
-//!   regime where admission control matters; overload shows up as shed
-//!   requests, not as silent queue growth.
-//!
-//! Reports service-measured (enqueue→reply) p50/p95/p99 latency, shed
-//! count, sustained throughput, and the service's metrics snapshot.
+//! - **in-process** (default): closed-loop / open-loop (Poisson) traffic
+//!   against a `GaeService` in this process — the PR-1 benchmark.
+//! - **`--listen ADDR`**: start the service plus the TCP front-end
+//!   ([`heppo::net::NetServer`]) with per-tenant quotas, the response
+//!   cache, and size-threshold backend routing; serve until killed (or
+//!   `--serve-secs N`).
+//! - **`--connect ADDR`**: drive a remote front-end with the pipelined
+//!   [`heppo::net::NetClient`] — `--inflight N` frames in flight over
+//!   one socket, quantized (`--codec exp5`) or f32 (`--codec exp1`)
+//!   payloads — and report latency, shed/quota/cache behavior, and the
+//!   measured wire reduction vs f32.
 //!
 //! ```text
 //! cargo run --release --example serve_gae -- --workers 8 --open-loop
-//! cargo run --release --example serve_gae -- --workers 4 --backend batched \
-//!     --clients 16 --requests 4000 --trajectories 32 --timesteps 256
+//! cargo run --release --example serve_gae -- --listen 127.0.0.1:7070 \
+//!     --workers 8 --cache-entries 4096 --quota-elem-per-s 500000 \
+//!     --route-threshold 512
+//! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
+//!     --inflight 16 --codec exp5 --requests 2000
 //! ```
 
 use heppo::bench::format_si;
 use heppo::coordinator::GaeBackend;
 use heppo::gae::{GaeParams, Trajectory};
+use heppo::net::{ErrorKind, QuotaConfig};
+use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig};
+use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
 use heppo::stats::Summary;
 use heppo::testing::ragged_trajectories;
 use heppo::util::cli::Args;
 use heppo::util::Rng;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One client request: `n_traj` variable-length trajectories (50%..100%
@@ -35,10 +42,212 @@ fn make_request(rng: &mut Rng, n_traj: usize, t_len: usize) -> Vec<Trajectory> {
     ragged_trajectories(rng, n_traj, (t_len / 2).max(1), t_len, 0.02)
 }
 
+/// The service knobs shared by the in-process and `--listen` modes.
+fn service_config(args: &Args) -> anyhow::Result<ServiceConfig> {
+    Ok(ServiceConfig {
+        workers: args.get_or("workers", 8usize),
+        backend: GaeBackend::parse_cli(&args.str_or("backend", "hwsim"))?,
+        queue_capacity: args.get_or("queue-cap", 256usize),
+        batcher: BatcherConfig {
+            max_batch_lanes: args.get_or("batch-lanes", 256usize),
+            tile_lanes: args.get_or("tile", 64usize),
+            max_wait: Duration::from_micros(args.get_or("max-wait-us", 200u64)),
+        },
+        sim_rows: args.get_or("rows", 64usize),
+        scalar_route_max_elements: args.get_or("route-threshold", 0usize),
+        gae: GaeParams::default(),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if let Some(addr) = args.opt("listen") {
+        let addr = addr.to_string();
+        return run_listen(&args, &addr);
+    }
+    if let Some(addr) = args.opt("connect") {
+        let addr = addr.to_string();
+        return run_connect(&args, &addr);
+    }
+    run_in_process(&args)
+}
+
+// ---------------------------------------------------------------- listen
+
+fn run_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
+    let config = service_config(args)?;
+    let quota_rate = args.get_or("quota-elem-per-s", 0.0f64);
+    let net_config = NetServerConfig {
+        quota: (quota_rate > 0.0).then(|| {
+            // Default burst comes from QuotaConfig::per_sec (one second
+            // of elements); --quota-burst overrides it.
+            let mut quota = QuotaConfig::per_sec(quota_rate);
+            quota.burst_elements = args.get_or("quota-burst", quota.burst_elements);
+            quota
+        }),
+        cache_entries: args.get_or("cache-entries", 1024usize),
+        shed_on_overload: !args.flag("backpressure"),
+    };
+    let serve_secs = args.get_or("serve-secs", 0u64);
+
+    let service = Arc::new(GaeService::start(config)?);
+    let server = NetServer::start(Arc::clone(&service), addr, net_config.clone())?;
+    println!(
+        "listening on {} — {} x {} workers, cache {} entries, quota {}, {}",
+        server.local_addr(),
+        config.workers,
+        config.backend.label(),
+        net_config.cache_entries,
+        match &net_config.quota {
+            Some(q) => format!("{:.0} elem/s (burst {:.0})", q.elements_per_sec, q.burst_elements),
+            None => "off".to_string(),
+        },
+        if net_config.shed_on_overload { "shedding on overload" } else { "backpressured" },
+    );
+    if config.scalar_route_max_elements > 0 {
+        println!(
+            "routing: groups <= {} elements run the scalar loop",
+            config.scalar_route_max_elements
+        );
+    }
+
+    let started = Instant::now();
+    let tick = if serve_secs == 0 { 10 } else { serve_secs.clamp(1, 10) };
+    loop {
+        std::thread::sleep(Duration::from_secs(tick));
+        println!(
+            "[{}s] {} frames received\n{}",
+            started.elapsed().as_secs(),
+            server.frames_received(),
+            service.metrics()
+        );
+        if serve_secs > 0 && started.elapsed() >= Duration::from_secs(serve_secs) {
+            break;
+        }
+    }
+    server.shutdown();
+    println!("\nfinal service metrics:\n{}", service.metrics());
+    println!("serve_gae OK");
+    Ok(())
+}
+
+// --------------------------------------------------------------- connect
+
+fn run_connect(args: &Args, addr: &str) -> anyhow::Result<()> {
+    let n_requests = args.get_or("requests", 500usize);
+    let inflight = args.get_or("inflight", 8usize).max(1);
+    let t_len = args.get_or("timesteps", 128usize).max(1);
+    let batch = args.get_or("trajectories", 16usize).max(1);
+    let seed = args.get_or("seed", 9u64);
+    let codec = CodecKind::parse(&args.str_or("codec", "exp5"))
+        .ok_or_else(|| anyhow::anyhow!("unknown codec (use exp1..exp5/baseline/heppo)"))?;
+    let client_config = NetClientConfig {
+        tenant: args.str_or("tenant", "default"),
+        codec,
+        bits: args.get_or("bits", 8u8),
+    };
+    let client = NetClient::connect(addr, client_config)?;
+    println!(
+        "connected to {addr}: {n_requests} frames of [{t_len} x {batch}] planes, \
+         {inflight} in flight, codec exp{} @ {} bits, tenant {:?}",
+        client.config().codec.index(),
+        client.config().bits,
+        client.config().tenant,
+    );
+
+    let mut rng = Rng::new(seed);
+    let mut latencies_us = Vec::with_capacity(n_requests);
+    let mut window = std::collections::VecDeque::new();
+    let mut cache_hits = 0u64;
+    let mut quota_refused = 0u64;
+    let mut shed = 0u64;
+    let mut other_errors = 0u64;
+    let mut elements = 0u64;
+
+    let mut finish = |sent_at: Instant,
+                      pending: heppo::net::NetPending,
+                      latencies_us: &mut Vec<f64>|
+     -> anyhow::Result<()> {
+        match pending.wait() {
+            Ok(gae) => {
+                latencies_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
+                elements += gae.advantages.len() as u64;
+                if gae.cache_hit {
+                    cache_hits += 1;
+                }
+            }
+            Err(e) => match e.remote_kind() {
+                Some(ErrorKind::Quota) => quota_refused += 1,
+                Some(ErrorKind::Shed) => shed += 1,
+                _ => {
+                    other_errors += 1;
+                    eprintln!("frame failed: {e}");
+                }
+            },
+        }
+        Ok(())
+    };
+
+    let t0 = Instant::now();
+    for _ in 0..n_requests {
+        let mut rewards = vec![0.0f32; t_len * batch];
+        let mut values = vec![0.0f32; (t_len + 1) * batch];
+        rng.fill_normal_f32(&mut rewards);
+        rng.fill_normal_f32(&mut values);
+        let done_mask: Vec<f32> = (0..t_len * batch)
+            .map(|_| if rng.uniform() < 0.02 { 1.0 } else { 0.0 })
+            .collect();
+        let sent_at = Instant::now();
+        match client.submit_planes(t_len, batch, &rewards, &values, &done_mask) {
+            Ok(pending) => window.push_back((sent_at, pending)),
+            Err(e) => anyhow::bail!("submit failed: {e}"),
+        }
+        while window.len() >= inflight {
+            let (sent_at, pending) = window.pop_front().unwrap();
+            finish(sent_at, pending, &mut latencies_us)?;
+        }
+    }
+    while let Some((sent_at, pending)) = window.pop_front() {
+        finish(sent_at, pending, &mut latencies_us)?;
+    }
+    let wall = t0.elapsed();
+    drop(finish);
+
+    let s = Summary::of(&latencies_us);
+    let stats = client.wire_stats();
+    println!();
+    println!(
+        "latency (µs): p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}  (client-measured, n={})",
+        s.p50,
+        s.p95,
+        s.p99,
+        s.max,
+        latencies_us.len()
+    );
+    println!(
+        "outcomes: {} ok ({cache_hits} cache hits), {quota_refused} quota, {shed} shed, {other_errors} other",
+        latencies_us.len()
+    );
+    println!(
+        "throughput: {} elem/s, {:.1} frames/s over {:.2}s wall",
+        format_si(elements as f64 / wall.as_secs_f64()),
+        latencies_us.len() as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64()
+    );
+    println!(
+        "wire: {} payload bytes ({} on the wire), reduction vs f32 = {:.2}x",
+        stats.payload_bytes,
+        stats.wire_bytes,
+        stats.reduction_vs_f32()
+    );
+    println!("serve_gae OK");
+    Ok(())
+}
+
+// ------------------------------------------------------------ in-process
+
+fn run_in_process(args: &Args) -> anyhow::Result<()> {
     let workers = args.get_or("workers", 8usize);
-    let backend = GaeBackend::parse_cli(&args.str_or("backend", "hwsim"))?;
     let n_requests = args.get_or("requests", 2000usize);
     let n_traj = args.get_or("trajectories", 16usize);
     let t_len = args.get_or("timesteps", 128usize);
@@ -47,18 +256,8 @@ fn main() -> anyhow::Result<()> {
     let clients = args.get_or("clients", (workers * 2).max(2));
     let seed = args.get_or("seed", 9u64);
 
-    let config = ServiceConfig {
-        workers,
-        backend,
-        queue_capacity: args.get_or("queue-cap", 256usize),
-        batcher: BatcherConfig {
-            max_batch_lanes: args.get_or("batch-lanes", 256usize),
-            tile_lanes: args.get_or("tile", 64usize),
-            max_wait: Duration::from_micros(args.get_or("max-wait-us", 200u64)),
-        },
-        sim_rows: args.get_or("rows", 64usize),
-        gae: GaeParams::default(),
-    };
+    let config = service_config(args)?;
+    let backend = config.backend;
     let service = GaeService::start(config)?;
     println!(
         "GaeService: {workers} x {} workers, queue cap {}, tile {} lanes, linger {:?}",

@@ -1,0 +1,325 @@
+//! Network front-end throughput sweep: in-flight depth × payload codec
+//! × worker count over a loopback TCP socket, against the in-process
+//! `submit_planes` baseline.
+//!
+//! What it demonstrates:
+//!
+//! - **Pipelining beats RTT**: depth-1 clients serialize on the round
+//!   trip; deeper windows recover the in-process throughput.
+//! - **Quantized transport is the bandwidth lever**: the exp5 8-bit
+//!   codec must move ≥ 3.5× fewer request-payload bytes than f32 frames
+//!   at the same request count (shape check, from the measured
+//!   `reduction_vs_f32`).
+//! - **The f32 escape hatch is exact**: one frame per worker config is
+//!   checked bit-identical against in-process `submit_planes`.
+//!
+//! The response cache is disabled and every frame carries distinct
+//! payloads, so the sweep measures transport + compute, not replay.
+//! Emits a markdown table, CSV under `results/`, and one JSON row per
+//! configuration in `results/net_throughput.jsonl`.
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep for CI.
+
+use heppo::bench::format_si;
+use heppo::coordinator::GaeBackend;
+use heppo::gae::GaeParams;
+use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig};
+use heppo::quant::CodecKind;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::stats::Summary;
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use heppo::util::Rng;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Workload {
+    t_len: usize,
+    batch: usize,
+    rewards: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+    done_masks: Vec<Vec<f32>>,
+}
+
+impl Workload {
+    fn generate(n_requests: usize, t_len: usize, batch: usize, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let mut rewards = Vec::with_capacity(n_requests);
+        let mut values = Vec::with_capacity(n_requests);
+        let mut done_masks = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let mut r = vec![0.0f32; t_len * batch];
+            let mut v = vec![0.0f32; (t_len + 1) * batch];
+            rng.fill_normal_f32(&mut r);
+            rng.fill_normal_f32(&mut v);
+            rewards.push(r);
+            values.push(v);
+            done_masks.push(
+                (0..t_len * batch)
+                    .map(|_| if rng.uniform() < 0.02 { 1.0 } else { 0.0 })
+                    .collect(),
+            );
+        }
+        Workload { t_len, batch, rewards, values, done_masks }
+    }
+
+    fn len(&self) -> usize {
+        self.rewards.len()
+    }
+}
+
+struct RunResult {
+    elem_per_sec: f64,
+    req_per_sec: f64,
+    p50_us: f64,
+    p99_us: f64,
+    payload_bytes: u64,
+    reduction_vs_f32: f64,
+}
+
+fn service(workers: usize) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers,
+            backend: GaeBackend::Batched,
+            queue_capacity: 4096, // saturation sweep: no shedding wanted
+            batcher: BatcherConfig {
+                max_batch_lanes: 256,
+                tile_lanes: 64,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 64,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+        })
+        .expect("service start"),
+    )
+}
+
+/// Drive the workload through one TCP client keeping `depth` in flight.
+fn run_net(addr: &str, codec: CodecKind, depth: usize, w: &Workload) -> RunResult {
+    let client = NetClient::connect(
+        addr,
+        NetClientConfig { tenant: "bench".to_string(), codec, bits: 8 },
+    )
+    .expect("connect");
+    let mut latencies = Vec::with_capacity(w.len());
+    let mut elements = 0u64;
+    let mut window: VecDeque<(Instant, heppo::net::NetPending)> = VecDeque::new();
+    let mut finish = |pair: (Instant, heppo::net::NetPending),
+                      latencies: &mut Vec<f64>| {
+        let (sent_at, pending) = pair;
+        let gae = pending.wait().expect("net frame");
+        latencies.push(sent_at.elapsed().as_secs_f64() * 1e6);
+        elements += gae.advantages.len() as u64;
+    };
+    let t0 = Instant::now();
+    for i in 0..w.len() {
+        let pending = client
+            .submit_planes(w.t_len, w.batch, &w.rewards[i], &w.values[i], &w.done_masks[i])
+            .expect("submit");
+        window.push_back((Instant::now(), pending));
+        while window.len() >= depth.max(1) {
+            let pair = window.pop_front().unwrap();
+            finish(pair, &mut latencies);
+        }
+    }
+    while let Some(pair) = window.pop_front() {
+        finish(pair, &mut latencies);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(finish);
+    let stats = client.wire_stats();
+    let s = Summary::of(&latencies);
+    RunResult {
+        elem_per_sec: elements as f64 / wall,
+        req_per_sec: latencies.len() as f64 / wall,
+        p50_us: s.p50,
+        p99_us: s.p99,
+        payload_bytes: stats.payload_bytes,
+        reduction_vs_f32: stats.reduction_vs_f32(),
+    }
+}
+
+/// The same workload through in-process `submit_planes`, one in flight.
+fn run_in_process(svc: &GaeService, w: &Workload) -> RunResult {
+    let mut latencies = Vec::with_capacity(w.len());
+    let mut elements = 0u64;
+    let t0 = Instant::now();
+    for i in 0..w.len() {
+        let sent_at = Instant::now();
+        let gae = svc
+            .submit_planes(w.t_len, w.batch, &w.rewards[i], &w.values[i], &w.done_masks[i])
+            .expect("submit_planes")
+            .wait()
+            .expect("planes wait");
+        latencies.push(sent_at.elapsed().as_secs_f64() * 1e6);
+        elements += gae.advantages.len() as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&latencies);
+    RunResult {
+        elem_per_sec: elements as f64 / wall,
+        req_per_sec: latencies.len() as f64 / wall,
+        p50_us: s.p50,
+        p99_us: s.p99,
+        payload_bytes: 0,
+        reduction_vs_f32: 1.0,
+    }
+}
+
+/// Bit-identity spot check: one f32 frame vs in-process, same planes.
+fn check_f32_bit_identity(addr: &str, svc: &GaeService, w: &Workload) {
+    let client = NetClient::connect(
+        addr,
+        NetClientConfig {
+            tenant: "bench".to_string(),
+            codec: CodecKind::Exp1Baseline,
+            bits: 8,
+        },
+    )
+    .expect("connect");
+    let remote = client
+        .call_planes(w.t_len, w.batch, &w.rewards[0], &w.values[0], &w.done_masks[0])
+        .expect("f32 frame");
+    let local = svc
+        .submit_planes(w.t_len, w.batch, &w.rewards[0], &w.values[0], &w.done_masks[0])
+        .expect("submit_planes")
+        .wait()
+        .expect("planes wait");
+    for (a, b) in remote.advantages.iter().zip(&local.advantages) {
+        assert_eq!(a.to_bits(), b.to_bits(), "f32 codec must be bit-identical");
+    }
+    for (a, b) in remote.rewards_to_go.iter().zip(&local.rewards_to_go) {
+        assert_eq!(a.to_bits(), b.to_bits(), "f32 rtg must be bit-identical");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let (n_requests, t_len, batch) = if fast { (64, 64, 8) } else { (400, 256, 16) };
+    let worker_counts: &[usize] = if fast { &[2] } else { &[1, 4] };
+    let depths: &[usize] = if fast { &[1, 8] } else { &[1, 4, 16] };
+    let codecs = [CodecKind::Exp1Baseline, CodecKind::Exp5DynamicBlock];
+
+    println!(
+        "net throughput sweep: {n_requests} frames of [{t_len} x {batch}] planes, \
+         loopback TCP vs in-process\n"
+    );
+    let mut table = CsvTable::new(&[
+        "transport", "codec", "workers", "inflight", "elem_per_sec", "req_per_sec",
+        "p50_us", "p99_us", "payload_bytes", "reduction_vs_f32",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let emit = |table: &mut CsvTable,
+                    json_rows: &mut Vec<String>,
+                    transport: &str,
+                    codec: &str,
+                    workers: usize,
+                    depth: usize,
+                    r: &RunResult| {
+        println!(
+            "{transport:<10} {codec:<5} workers {workers} inflight {depth:<3} -> {} elem/s, \
+             {:.1} req/s, p50 {:.0}µs p99 {:.0}µs, {} payload B, {:.2}x vs f32",
+            format_si(r.elem_per_sec),
+            r.req_per_sec,
+            r.p50_us,
+            r.p99_us,
+            r.payload_bytes,
+            r.reduction_vs_f32,
+        );
+        table.row(&[
+            transport.to_string(),
+            codec.to_string(),
+            workers.to_string(),
+            depth.to_string(),
+            format!("{:.3e}", r.elem_per_sec),
+            format!("{:.1}", r.req_per_sec),
+            format!("{:.0}", r.p50_us),
+            format!("{:.0}", r.p99_us),
+            r.payload_bytes.to_string(),
+            format!("{:.3}", r.reduction_vs_f32),
+        ]);
+        json_rows.push(
+            Json::obj(vec![
+                ("bench", Json::from("net_throughput")),
+                ("transport", Json::from(transport)),
+                ("codec", Json::from(codec)),
+                ("workers", Json::from(workers)),
+                ("inflight", Json::from(depth)),
+                ("requests", Json::from(n_requests)),
+                ("timesteps", Json::from(t_len)),
+                ("batch", Json::from(batch)),
+                ("elem_per_sec", Json::from(r.elem_per_sec)),
+                ("req_per_sec", Json::from(r.req_per_sec)),
+                ("p50_us", Json::from(r.p50_us)),
+                ("p99_us", Json::from(r.p99_us)),
+                ("payload_bytes", Json::from(r.payload_bytes as usize)),
+                ("reduction_vs_f32", Json::from(r.reduction_vs_f32)),
+            ])
+            .to_string(),
+        );
+    };
+
+    let workload = Workload::generate(n_requests, t_len, batch, 42);
+    let mut f32_payload = None;
+    let mut q8_payload = None;
+    let mut q8_rate = None;
+    let mut f32_rate = None;
+
+    for &workers in worker_counts {
+        let svc = service(workers);
+        let server = NetServer::start(
+            Arc::clone(&svc),
+            "127.0.0.1:0",
+            NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+        )?;
+        let addr = server.local_addr().to_string();
+
+        check_f32_bit_identity(&addr, &svc, &workload);
+        println!("workers {workers}: f32 bit-identity vs in-process OK");
+
+        let baseline = run_in_process(&svc, &workload);
+        emit(&mut table, &mut json_rows, "in-process", "f32", workers, 1, &baseline);
+
+        for &codec in &codecs {
+            let label = if codec == CodecKind::Exp1Baseline { "exp1" } else { "exp5" };
+            for &depth in depths {
+                let r = run_net(&addr, codec, depth, &workload);
+                if codec == CodecKind::Exp1Baseline {
+                    f32_payload = Some(r.payload_bytes);
+                    f32_rate = Some(r.req_per_sec);
+                } else {
+                    q8_payload = Some(r.payload_bytes);
+                    q8_rate = Some(r.req_per_sec);
+                }
+                emit(&mut table, &mut json_rows, "tcp", label, workers, depth, &r);
+            }
+        }
+        server.shutdown();
+    }
+
+    println!("\n{}", table.to_markdown());
+    std::fs::create_dir_all("results")?;
+    table.save("results/net_throughput.csv")?;
+    std::fs::write("results/net_throughput.jsonl", json_rows.join("\n") + "\n")?;
+    println!("-> results/net_throughput.csv, results/net_throughput.jsonl");
+
+    if let (Some(f32b), Some(q8b)) = (f32_payload, q8_payload) {
+        let ratio = f32b as f64 / q8b.max(1) as f64;
+        println!(
+            "\nshape check: quantized codec moved {ratio:.2}x fewer request-payload bytes \
+             than f32 frames for the same {n_requests} frames (target >= 3.5x) -> {}",
+            if ratio >= 3.5 { "PASS" } else { "FAIL" }
+        );
+        if let (Some(fr), Some(qr)) = (f32_rate, q8_rate) {
+            println!(
+                "request rates at the deepest window: f32 {fr:.1}/s vs quantized {qr:.1}/s"
+            );
+        }
+        anyhow::ensure!(ratio >= 3.5, "quantized reduction {ratio:.2}x below 3.5x");
+    }
+    println!("net_throughput OK");
+    Ok(())
+}

@@ -59,6 +59,7 @@ fn run_config(
             max_wait: Duration::from_micros(100),
         },
         sim_rows: 64,
+        scalar_route_max_elements: 0,
         gae: GaeParams::default(),
     })
     .expect("service start");

@@ -9,22 +9,46 @@
 
 use super::{GaeOutput, GaeParams, Trajectory};
 
-/// Compute advantages and rewards-to-go for one trajectory with the
-/// sequential recurrence (paper Eq. 4–5).
-pub fn gae_trajectory(params: &GaeParams, traj: &Trajectory) -> GaeOutput {
-    let t_len = traj.len();
+/// The sequential recurrence (paper Eq. 4–5) over *indexed* accessors:
+/// `reward(t)` for `t in 0..t_len`, `value(t)` for `t in 0..=t_len`
+/// (`value(t_len)` bootstraps the tail), `done(t)` for `t in 0..t_len`.
+///
+/// This is the single scalar kernel behind both [`gae_trajectory`]
+/// (contiguous per-trajectory buffers) and the serving subsystem's
+/// borrowed plane columns (strided `[T, B]` views) — the accessor
+/// indirection keeps the float expressions, and therefore the bits of
+/// the result, identical across both layouts.
+pub fn gae_indexed(
+    params: &GaeParams,
+    t_len: usize,
+    reward: impl Fn(usize) -> f32,
+    value: impl Fn(usize) -> f32,
+    done: impl Fn(usize) -> bool,
+) -> GaeOutput {
     let mut advantages = vec![0.0f32; t_len];
     let mut rewards_to_go = vec![0.0f32; t_len];
     let mut carry = 0.0f32; // A_{t+1}
     for t in (0..t_len).rev() {
-        let not_done = if traj.dones[t] { 0.0 } else { 1.0 };
-        let delta = traj.rewards[t] + params.gamma * traj.values[t + 1] * not_done
-            - traj.values[t];
+        let not_done = if done(t) { 0.0 } else { 1.0 };
+        let v_t = value(t);
+        let delta = reward(t) + params.gamma * value(t + 1) * not_done - v_t;
         carry = delta + params.c() * not_done * carry;
         advantages[t] = carry;
-        rewards_to_go[t] = carry + traj.values[t]; // Eq. 5
+        rewards_to_go[t] = carry + v_t; // Eq. 5
     }
     GaeOutput { advantages, rewards_to_go }
+}
+
+/// Compute advantages and rewards-to-go for one trajectory with the
+/// sequential recurrence (paper Eq. 4–5).
+pub fn gae_trajectory(params: &GaeParams, traj: &Trajectory) -> GaeOutput {
+    gae_indexed(
+        params,
+        traj.len(),
+        |t| traj.rewards[t],
+        |t| traj.values[t],
+        |t| traj.dones[t],
+    )
 }
 
 /// Compute GAE for a list of trajectories sequentially — the exact shape

@@ -30,6 +30,7 @@
 //! | [`runtime`] | PJRT client wrapper: load + execute HLO artifacts |
 //! | [`coordinator`] | the PPO training system (rollout, GAE stage, update) |
 //! | [`service`] | GAE serving: dynamic batching, sharded workers, admission control |
+//! | [`net`] | network front-end: quantized wire protocol, TCP server, pipelined client |
 //! | [`bench`] | micro-benchmark harness used by `cargo bench` targets |
 //! | [`testing`] | mini property-test harness used across the test suite |
 
@@ -39,6 +40,7 @@ pub mod envs;
 pub mod gae;
 pub mod hwsim;
 pub mod memory;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod service;

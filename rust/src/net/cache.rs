@@ -1,0 +1,244 @@
+//! Response cache: hash of a request's quantized payload → its GAE
+//! result.
+//!
+//! Quantization makes caching *work*: two clients whose raw f32 planes
+//! differ below the 8-bit step quantize to identical codewords, so their
+//! frames hash identically and the second one is answered without
+//! touching the compute queue. The key is the FNV-1a digest of the
+//! payload section ([`RequestFrame::payload_hash`]
+//! (crate::net::wire::RequestFrame)), which covers codec, bits, geometry
+//! and every payload byte. FNV-1a is fast, not collision-resistant:
+//! accidental 64-bit collisions are negligible, but a client could
+//! *construct* one — acceptable under the front-end's current trust
+//! model (unauthenticated, tenants trusted; see ROADMAP), where such a
+//! client could equally submit wrong data directly. Authenticated
+//! deployments should key per-tenant or switch to a keyed hash.
+//!
+//! Eviction is lazy LRU: every touch appends a `(key, tick)` pair to an
+//! order queue; eviction pops from the front, skipping pairs whose tick
+//! is stale (the entry was touched again later). The order queue is
+//! compacted when it outgrows the live map, so memory stays
+//! `O(capacity)` amortized with no per-hit allocation beyond the pair.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// One cached GAE result (response planes travel f32, so this is exact).
+#[derive(Debug, Clone)]
+pub struct CachedGae {
+    pub t_len: usize,
+    pub batch: usize,
+    pub advantages: Vec<f32>,
+    pub rewards_to_go: Vec<f32>,
+    /// Cycles of the *original* compute; replayed verbatim on hits.
+    pub hw_cycles: Option<u64>,
+}
+
+/// Frozen cache counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+struct Entry {
+    /// `Arc` so a hit hands back a reference, not a plane memcpy, while
+    /// the (global) cache mutex is held.
+    value: Arc<CachedGae>,
+    /// Last-touch tick; order-queue pairs with an older tick are stale.
+    tick: u64,
+}
+
+struct CacheInner {
+    map: HashMap<u64, Entry>,
+    order: VecDeque<(u64, u64)>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// A bounded, thread-safe LRU response cache.
+pub struct ResponseCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl ResponseCache {
+    /// A cache holding at most `capacity` entries (min 1).
+    pub fn new(capacity: usize) -> Self {
+        ResponseCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up a payload hash; counts the hit/miss and refreshes recency.
+    /// Returns a shared handle — no plane copies under the cache lock.
+    pub fn get(&self, key: u64) -> Option<Arc<CachedGae>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        // Clone the Arc out of the entry first so the map borrow ends
+        // before the counters and order queue are touched.
+        let value = inner.map.get_mut(&key).map(|entry| {
+            entry.tick = tick;
+            Arc::clone(&entry.value)
+        });
+        match value {
+            Some(v) => {
+                inner.hits += 1;
+                inner.order.push_back((key, tick));
+                Self::maybe_compact(&mut inner);
+                Some(v)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the least recently used
+    /// entries beyond capacity. Takes an `Arc` so the inserter can keep
+    /// reading the same planes (e.g. to encode the response) without
+    /// copying them.
+    pub fn insert(&self, key: u64, value: Arc<CachedGae>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, Entry { value, tick });
+        inner.order.push_back((key, tick));
+        while inner.map.len() > self.capacity {
+            match inner.order.pop_front() {
+                Some((old_key, old_tick)) => {
+                    let stale = inner
+                        .map
+                        .get(&old_key)
+                        .map(|e| e.tick != old_tick)
+                        .unwrap_or(true);
+                    if !stale {
+                        inner.map.remove(&old_key);
+                    }
+                }
+                // Unreachable: the map outgrowing capacity implies
+                // order pairs exist; keep the loop total anyway.
+                None => break,
+            }
+        }
+        Self::maybe_compact(&mut inner);
+    }
+
+    /// Rebuild the order queue from live entries when stale pairs
+    /// dominate it (hit-heavy workloads).
+    fn maybe_compact(inner: &mut CacheInner) {
+        if inner.order.len() > inner.map.len() * 8 + 16 {
+            let mut live: Vec<(u64, u64)> =
+                inner.map.iter().map(|(&k, e)| (k, e.tick)).collect();
+            live.sort_by_key(|&(_, t)| t);
+            inner.order = live.into_iter().collect();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats { hits: inner.hits, misses: inner.misses, entries: inner.map.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gae(tag: f32) -> Arc<CachedGae> {
+        Arc::new(CachedGae {
+            t_len: 1,
+            batch: 1,
+            advantages: vec![tag],
+            rewards_to_go: vec![tag],
+            hw_cycles: None,
+        })
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let c = ResponseCache::new(4);
+        assert!(c.get(1).is_none());
+        c.insert(1, gae(1.0));
+        assert_eq!(c.get(1).unwrap().advantages, vec![1.0]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let c = ResponseCache::new(2);
+        c.insert(1, gae(1.0));
+        c.insert(2, gae(2.0));
+        // Touch 1 so 2 becomes the LRU entry.
+        assert!(c.get(1).is_some());
+        c.insert(3, gae(3.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(2).is_none(), "LRU entry must be evicted");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let c = ResponseCache::new(2);
+        c.insert(1, gae(1.0));
+        c.insert(1, gae(1.5));
+        c.insert(2, gae(2.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(1).unwrap().advantages, vec![1.5]);
+    }
+
+    #[test]
+    fn hit_heavy_workload_keeps_order_queue_bounded() {
+        let c = ResponseCache::new(4);
+        for k in 0..4u64 {
+            c.insert(k, gae(k as f32));
+        }
+        for _ in 0..10_000 {
+            for k in 0..4u64 {
+                assert!(c.get(k).is_some());
+            }
+        }
+        let inner = c.inner.lock().unwrap();
+        assert!(
+            inner.order.len() <= inner.map.len() * 8 + 17,
+            "order queue grew to {}",
+            inner.order.len()
+        );
+    }
+
+    #[test]
+    fn capacity_one_always_holds_the_newest() {
+        let c = ResponseCache::new(0); // clamped to 1
+        assert_eq!(c.capacity(), 1);
+        for k in 0..16u64 {
+            c.insert(k, gae(k as f32));
+            assert!(c.get(k).is_some());
+        }
+        assert_eq!(c.len(), 1);
+    }
+}

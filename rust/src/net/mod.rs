@@ -1,0 +1,60 @@
+//! Network front-end for the GAE serving subsystem: a quantized wire
+//! protocol, a multi-tenant TCP server, and a pipelined client.
+//!
+//! The paper's thesis is that GAE is a *communication* problem — §I
+//! blames CPU↔GPU transfers, and §II-C's 8-bit strategic
+//! standardization exists to cut the bytes moved 4×. PR 1/2 reproduced
+//! the compute side in-process; this module is the same argument applied
+//! to the wire between machines:
+//!
+//! ```text
+//!             NetClient (client.rs)
+//!   submit_planes ──► wire::encode_request      8-bit codes + (μ, σ)
+//!         │                 │                    or the f32 escape hatch
+//!         │        one TCP socket, N frames in flight (seq-numbered)
+//!         ▼                 ▼
+//!   NetPending ◄── reader thread ◄── responses/errors, any order
+//!
+//!             NetServer (server.rs), per connection:
+//!   reader ── decode ─► quota (quota.rs, per-tenant token buckets)
+//!                         │ over-budget → typed Quota error frame
+//!                         ▼
+//!                       cache (cache.rs, payload-hash LRU)
+//!                         │ hit → response frame, cache_hit flag
+//!                         ▼
+//!                       GaeService::try_submit_plane_set  (zero-copy:
+//!                         │ shed → typed Shed error frame  decode buffers
+//!                         ▼                                move, not copy)
+//!                       completer ─► writer ─► socket
+//! ```
+//!
+//! Layer boundaries:
+//!
+//! - [`wire`] owns bytes: framing, versioning, checksums, the quantized
+//!   plane encoding, and the per-frame `reduction_vs_f32` accounting.
+//! - [`quota`] and [`cache`] are self-contained policies the server
+//!   composes; both surface their counters through the service's
+//!   [`MetricsSnapshot`](crate::service::MetricsSnapshot).
+//! - [`server`]/[`client`] own sockets and threads; neither computes
+//!   GAE — the service behind [`GaeService`](crate::service::GaeService)
+//!   stays the single compute path, so network and in-process clients
+//!   see bit-identical results (for the f32 codec) from the same pool.
+//!
+//! Driven by `examples/serve_gae.rs` (`--listen` / `--connect`) and
+//! swept by `benches/net_throughput.rs`; the loopback integration test
+//! lives in `rust/tests/net_loopback.rs`.
+
+pub mod cache;
+pub mod client;
+pub mod quota;
+pub mod server;
+pub mod wire;
+
+pub use cache::{CacheStats, CachedGae, ResponseCache};
+pub use client::{NetClient, NetClientConfig, NetError, NetGae, NetPending, WireStats};
+pub use quota::{QuotaConfig, TokenBuckets};
+pub use server::{NetServer, NetServerConfig};
+pub use wire::{
+    EncodedRequest, ErrorFrame, ErrorKind, Frame, RequestFrame, ResponseFrame,
+    WireDecodeError,
+};

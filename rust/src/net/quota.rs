@@ -1,0 +1,210 @@
+//! Per-tenant token-bucket quotas, layered in front of the service's
+//! admission controller.
+//!
+//! The two mechanisms answer different questions: the bounded queue
+//! (PR-1 admission control) bounds *total* work in flight, while quotas
+//! bound *who* may submit it — one hot tenant exhausts its own bucket
+//! and is refused with a typed `Quota` error frame long before it can
+//! drive the shared queue to its shed limit.
+//!
+//! Tokens are **GAE elements** (`T·B` per plane frame), not requests, so
+//! one tenant cannot smuggle arbitrary work through a fixed request
+//! budget by inflating frame geometry. Buckets refill lazily at
+//! [`QuotaConfig::elements_per_sec`] up to a burst cap and start full,
+//! so a cold tenant's first burst always passes.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One tenant's refill policy (shared by all tenants of a server).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuotaConfig {
+    /// Sustained rate, GAE elements per second.
+    pub elements_per_sec: f64,
+    /// Bucket capacity: the largest single burst a tenant can spend.
+    /// A frame costing more than this can never be admitted.
+    pub burst_elements: f64,
+}
+
+impl QuotaConfig {
+    /// Rate with a default burst of one second's worth of elements.
+    pub fn per_sec(elements_per_sec: f64) -> QuotaConfig {
+        QuotaConfig { elements_per_sec, burst_elements: elements_per_sec.max(1.0) }
+    }
+}
+
+#[derive(Debug)]
+struct Bucket {
+    tokens: f64,
+    last_refill: Instant,
+}
+
+/// Most tenants tracked at once. Tenant ids arrive on the wire
+/// (client-chosen), so the map must not grow without bound on a
+/// long-lived server; past the cap the longest-untouched bucket is
+/// evicted. An evicted tenant that returns starts with a full burst —
+/// a bounded, documented softening of the quota, not a correctness
+/// hole, since the cap only bites with thousands of *distinct* live
+/// tenants.
+const MAX_TENANTS: usize = 4096;
+
+/// Thread-safe lazy-refill token buckets, one per tenant id (bounded at
+/// [`MAX_TENANTS`], LRU-evicted).
+#[derive(Debug)]
+pub struct TokenBuckets {
+    config: QuotaConfig,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl TokenBuckets {
+    pub fn new(config: QuotaConfig) -> Self {
+        TokenBuckets { config, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn config(&self) -> QuotaConfig {
+        self.config
+    }
+
+    /// Try to spend `cost` tokens for `tenant` now.
+    pub fn try_acquire(&self, tenant: &str, cost: f64) -> bool {
+        self.try_acquire_at(tenant, cost, Instant::now())
+    }
+
+    /// Deterministic core: refill from the elapsed time since the last
+    /// touch, then spend-or-refuse atomically under the map lock.
+    pub fn try_acquire_at(&self, tenant: &str, cost: f64, now: Instant) -> bool {
+        let mut map = self.buckets.lock().unwrap();
+        if !map.contains_key(tenant) && map.len() >= MAX_TENANTS {
+            // Evict the longest-untouched tenant (O(n), but only on a
+            // *new* tenant while at the cap).
+            if let Some(stalest) = map
+                .iter()
+                .min_by_key(|(_, b)| b.last_refill)
+                .map(|(k, _)| k.clone())
+            {
+                map.remove(&stalest);
+            }
+        }
+        let bucket = map.entry(tenant.to_string()).or_insert(Bucket {
+            tokens: self.config.burst_elements,
+            last_refill: now,
+        });
+        let dt = now.saturating_duration_since(bucket.last_refill).as_secs_f64();
+        bucket.tokens = (bucket.tokens + dt * self.config.elements_per_sec)
+            .min(self.config.burst_elements);
+        bucket.last_refill = now;
+        if bucket.tokens >= cost {
+            bucket.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return `cost` tokens to `tenant` (capped at the burst size) —
+    /// for frames that were charged but then refused without any work
+    /// being performed (admission shed, malformed planes), so overload
+    /// and quota don't double-penalize. A tenant evicted in between
+    /// simply loses the refund (it restarts with a full bucket anyway).
+    pub fn refund(&self, tenant: &str, cost: f64) {
+        let mut map = self.buckets.lock().unwrap();
+        if let Some(bucket) = map.get_mut(tenant) {
+            bucket.tokens =
+                (bucket.tokens + cost).min(self.config.burst_elements);
+        }
+    }
+
+    /// Distinct tenants seen so far.
+    pub fn tenants(&self) -> usize {
+        self.buckets.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn burst_spends_then_refuses() {
+        let q = TokenBuckets::new(QuotaConfig {
+            elements_per_sec: 0.0, // no refill: pure burst accounting
+            burst_elements: 100.0,
+        });
+        let t0 = Instant::now();
+        assert!(q.try_acquire_at("a", 60.0, t0));
+        assert!(q.try_acquire_at("a", 40.0, t0));
+        assert!(!q.try_acquire_at("a", 1.0, t0), "bucket must be empty");
+        // Per-tenant isolation: tenant b has its own full bucket.
+        assert!(q.try_acquire_at("b", 100.0, t0));
+        assert_eq!(q.tenants(), 2);
+    }
+
+    #[test]
+    fn refill_restores_tokens_at_the_configured_rate() {
+        let q = TokenBuckets::new(QuotaConfig {
+            elements_per_sec: 50.0,
+            burst_elements: 100.0,
+        });
+        let t0 = Instant::now();
+        assert!(q.try_acquire_at("a", 100.0, t0));
+        // 1s at 50 elem/s refilled 50 tokens: 60 is refused, 50 passes.
+        assert!(!q.try_acquire_at("a", 60.0, t0 + Duration::from_secs(1)));
+        assert!(q.try_acquire_at("a", 50.0, t0 + Duration::from_secs(1)));
+        // Refill caps at the burst size.
+        assert!(!q.try_acquire_at("a", 101.0, t0 + Duration::from_secs(3600)));
+        assert!(q.try_acquire_at("a", 100.0, t0 + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn oversized_cost_never_passes() {
+        let q = TokenBuckets::new(QuotaConfig::per_sec(10.0));
+        let t0 = Instant::now();
+        assert!(!q.try_acquire_at("a", 11.0, t0));
+        // And stays refused forever — it exceeds the burst cap.
+        assert!(!q.try_acquire_at("a", 11.0, t0 + Duration::from_secs(100)));
+    }
+
+    #[test]
+    fn refund_restores_tokens_up_to_the_burst_cap() {
+        let q = TokenBuckets::new(QuotaConfig {
+            elements_per_sec: 0.0,
+            burst_elements: 100.0,
+        });
+        let t0 = Instant::now();
+        assert!(q.try_acquire_at("a", 80.0, t0));
+        assert!(!q.try_acquire_at("a", 30.0, t0));
+        q.refund("a", 80.0); // the shed frame's cost comes back
+        assert!(q.try_acquire_at("a", 100.0, t0));
+        // Refunds cannot mint tokens past the burst size.
+        q.refund("a", 1e9);
+        assert!(!q.try_acquire_at("a", 101.0, t0));
+        // Refunding an unknown tenant is a no-op, not an insert.
+        q.refund("ghost", 50.0);
+        assert_eq!(q.tenants(), 1);
+    }
+
+    #[test]
+    fn tenant_map_is_bounded_with_lru_eviction() {
+        let q = TokenBuckets::new(QuotaConfig::per_sec(10.0));
+        let t0 = Instant::now();
+        for i in 0..(MAX_TENANTS + 10) {
+            let when = t0 + Duration::from_millis(i as u64);
+            assert!(q.try_acquire_at(&format!("tenant-{i}"), 1.0, when));
+        }
+        assert!(q.tenants() <= MAX_TENANTS, "map grew to {}", q.tenants());
+        // The most recently touched tenant survived the evictions.
+        let last = format!("tenant-{}", MAX_TENANTS + 9);
+        let before = q.tenants();
+        assert!(q.try_acquire_at(&last, 1.0, t0 + Duration::from_secs(10)));
+        assert_eq!(q.tenants(), before, "touching a live tenant must not evict");
+    }
+
+    #[test]
+    fn per_sec_constructor_defaults_burst_to_one_second() {
+        let q = QuotaConfig::per_sec(250.0);
+        assert_eq!(q.burst_elements, 250.0);
+        assert_eq!(QuotaConfig::per_sec(0.0).burst_elements, 1.0);
+    }
+}

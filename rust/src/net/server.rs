@@ -1,0 +1,481 @@
+//! The multi-tenant TCP front-end: decode frames, enforce quotas,
+//! consult the response cache, bridge onto the serving subsystem.
+//!
+//! ## Per-connection threading
+//!
+//! ```text
+//!  socket ──► reader ──────────────► completer ──► writer ──► socket
+//!             │  decode frame          │ wait each       │ frame bytes
+//!             │  quota check ──Quota──────────────────────►
+//!             │  cache lookup ──hit───────────────────────►
+//!             │  try_submit_plane_set──Shed───────────────►
+//!             └──(seq, PlanesPending)─►│ insert cache
+//!                                      └─ encode response ─►
+//! ```
+//!
+//! The reader never blocks on compute: it decodes, admits, and hands the
+//! [`PlanesPending`] to the completer, so a pipelined client's N
+//! in-flight frames overlap inside the service's worker pool exactly as
+//! N in-process clients would. Error frames (quota, shed, malformed) and
+//! cache hits leave from the reader directly; both paths merge in the
+//! writer thread, which owns the socket's write half.
+//!
+//! ## Request lifecycle
+//!
+//! 1. **Quota** — the tenant's token bucket ([`TokenBuckets`]) is
+//!    charged `T·B` elements; refusal is a typed `Quota` error frame
+//!    and a `quota_shed` metrics tick. Quotas are checked *before* the
+//!    cache so a hot tenant cannot dodge its budget by replaying
+//!    cacheable payloads; the charge is refunded if the frame is later
+//!    refused (shed/malformed) with no work performed.
+//! 2. **Cache** — the payload-hash keyed [`ResponseCache`]; a hit
+//!    answers immediately with the `cache_hit` response flag set.
+//! 3. **Admission** — the decoded planes move (zero-copy) into
+//!    [`GaeService::try_submit_plane_set`]; the admission controller's
+//!    `Overloaded` becomes a typed `Shed` error frame
+//!    ([`NetServerConfig::shed_on_overload`] `false` switches to the
+//!    backpressured [`GaeService::submit_plane_set`], which stalls the
+//!    connection instead — closed-loop deployments).
+//!
+//! All cache/quota events land in the service's
+//! [`MetricsSnapshot`](crate::service::MetricsSnapshot), so one snapshot
+//! covers queue, batcher, and network behavior.
+
+use crate::net::cache::{CachedGae, ResponseCache};
+use crate::net::quota::{QuotaConfig, TokenBuckets};
+use crate::net::wire::{self, ErrorKind, Frame, RequestFrame};
+use crate::service::{GaeService, PlaneSet, PlanesPending, ServiceError};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Front-end deployment knobs.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Per-tenant token-bucket quota; `None` admits every tenant.
+    pub quota: Option<QuotaConfig>,
+    /// Response-cache capacity in entries; `0` disables the cache.
+    pub cache_entries: usize,
+    /// `true`: fail-fast admission — overload answers typed `Shed`
+    /// frames (open-loop / production). `false`: backpressure the
+    /// connection instead (closed-loop).
+    pub shed_on_overload: bool,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { quota: None, cache_entries: 1024, shed_on_overload: true }
+    }
+}
+
+struct Shared {
+    service: Arc<GaeService>,
+    config: NetServerConfig,
+    quota: Option<TokenBuckets>,
+    cache: Option<ResponseCache>,
+    shutdown: AtomicBool,
+    /// Clones of *live* accepted streams (keyed by connection id), for
+    /// interrupting blocked reads at shutdown; a connection removes its
+    /// own entry on exit so closed sockets don't pin fds forever.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+    next_conn_id: AtomicU64,
+    frames_received: AtomicU64,
+}
+
+/// A running TCP front-end over one [`GaeService`]. Dropping it stops
+/// accepting, interrupts every connection, and joins all threads; the
+/// service itself is left running (it may have in-process clients too).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections.
+    pub fn start(
+        service: Arc<GaeService>,
+        addr: &str,
+        config: NetServerConfig,
+    ) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let quota = config.quota.map(TokenBuckets::new);
+        let cache = (config.cache_entries > 0)
+            .then(|| ResponseCache::new(config.cache_entries));
+        let shared = Arc::new(Shared {
+            service,
+            config,
+            quota,
+            cache,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            conn_threads: Mutex::new(Vec::new()),
+            next_conn_id: AtomicU64::new(0),
+            frames_received: AtomicU64::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_thread =
+            std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(NetServer { local_addr, shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Request frames decoded so far.
+    pub fn frames_received(&self) -> u64 {
+        self.shared.frames_received.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, interrupt every connection, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for (_, stream) in self.shared.conns.lock().unwrap().drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Second pass: a connection accepted while the first drain ran
+        // registers its stream before its thread spawns, so with the
+        // accept loop joined this catches every straggler.
+        for (_, stream) in self.shared.conns.lock().unwrap().drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let threads: Vec<JoinHandle<()>> =
+            self.shared.conn_threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Accepted sockets must be blocking regardless of what
+                // they inherit from the nonblocking listener.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().insert(conn_id, clone);
+                }
+                let conn_shared = Arc::clone(&shared);
+                let handle = std::thread::spawn(move || {
+                    connection_loop(stream, conn_id, conn_shared)
+                });
+                // Reap handles of connections that already finished so a
+                // long-lived server doesn't accumulate one per client.
+                let mut threads = shared.conn_threads.lock().unwrap();
+                threads.retain(|t| !t.is_finished());
+                threads.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failures (ECONNABORTED, EMFILE, …)
+                // must not kill the accept path of a live server; back
+                // off briefly and keep listening.
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// One admitted request travelling from reader to completer.
+struct InFlight {
+    seq: u64,
+    t_len: usize,
+    batch: usize,
+    cache_key: Option<u64>,
+    pending: PlanesPending,
+}
+
+/// Encoded frames the writer may buffer per connection before the
+/// producers (reader, completer) block. A client that submits without
+/// reading replies stalls its own connection here instead of growing an
+/// unbounded response backlog in server memory — the backpressure path
+/// for replies that never touch the service queue (cache hits, typed
+/// errors).
+const WRITER_BACKLOG_FRAMES: usize = 256;
+
+/// Admitted-but-unanswered frames the completer may have queued before
+/// the reader blocks. Without this bound a client that never reads its
+/// socket would keep admitting work whose computed response planes pile
+/// up in completed-request buffers; with it, a stalled connection stops
+/// decoding (and therefore admitting) once the completer backlog fills.
+const COMPLETER_BACKLOG_FRAMES: usize = 256;
+
+fn connection_loop(stream: TcpStream, conn_id: u64, shared: Arc<Shared>) {
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            shared.conns.lock().unwrap().remove(&conn_id);
+            return;
+        }
+    };
+    let (out_tx, out_rx) = mpsc::sync_channel::<Vec<u8>>(WRITER_BACKLOG_FRAMES);
+    let (done_tx, done_rx) = mpsc::sync_channel::<InFlight>(COMPLETER_BACKLOG_FRAMES);
+    let writer = std::thread::spawn(move || writer_loop(stream, out_rx));
+    let completer_shared = Arc::clone(&shared);
+    let completer_out = out_tx.clone();
+    let completer = std::thread::spawn(move || {
+        completer_loop(done_rx, completer_out, completer_shared)
+    });
+
+    read_loop(read_half, &shared, &done_tx, &out_tx);
+
+    // Closing both senders lets the completer drain in-flight work and
+    // the writer flush whatever the drain produced, then both exit.
+    drop(done_tx);
+    drop(out_tx);
+    let _ = completer.join();
+    let _ = writer.join();
+    // Deregister so the fd clone doesn't outlive the connection.
+    shared.conns.lock().unwrap().remove(&conn_id);
+}
+
+fn read_loop(
+    stream: TcpStream,
+    shared: &Shared,
+    done_tx: &mpsc::SyncSender<InFlight>,
+    out_tx: &mpsc::SyncSender<Vec<u8>>,
+) {
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(Some(frame)) => frame,
+            Ok(None) | Err(_) => return, // EOF or dead socket
+        };
+        match wire::decode_frame(&frame) {
+            Ok(Frame::Request(req)) => handle_request(req, shared, done_tx, out_tx),
+            Ok(_) => {
+                // Only clients speak first; a response/error from one is
+                // a protocol violation worth closing over.
+                let _ = out_tx.send(wire::encode_error(
+                    0,
+                    ErrorKind::Malformed,
+                    "unexpected frame type from client",
+                ));
+                return;
+            }
+            Err(e) => {
+                // Connection-level: after a framing error the stream
+                // offset can no longer be trusted.
+                let _ = out_tx.send(wire::encode_error(
+                    0,
+                    ErrorKind::Malformed,
+                    &e.to_string(),
+                ));
+                return;
+            }
+        }
+    }
+}
+
+fn handle_request(
+    req: RequestFrame,
+    shared: &Shared,
+    done_tx: &mpsc::SyncSender<InFlight>,
+    out_tx: &mpsc::SyncSender<Vec<u8>>,
+) {
+    shared.frames_received.fetch_add(1, Ordering::Relaxed);
+    let RequestFrame {
+        seq,
+        tenant,
+        t_len,
+        batch,
+        rewards,
+        values,
+        done_mask,
+        payload_hash,
+        ..
+    } = req;
+
+    // 1. Quota: charge the tenant before any work happens on its behalf.
+    let cost = (t_len * batch) as f64;
+    if let Some(quota) = &shared.quota {
+        if !quota.try_acquire(&tenant, cost) {
+            shared.service.metrics_handle().record_quota_shed();
+            let _ = out_tx.send(wire::encode_error(
+                seq,
+                ErrorKind::Quota,
+                &format!(
+                    "tenant {tenant:?} over quota (frame costs {} elements)",
+                    cost as u64
+                ),
+            ));
+            return;
+        }
+    }
+    // Give the charge back when the frame is refused downstream with no
+    // work performed — overload and quota must not double-penalize.
+    let refund_charge = || {
+        if let Some(quota) = &shared.quota {
+            quota.refund(&tenant, cost);
+        }
+    };
+
+    // 2. Cache: identical quantized payloads replay the stored result.
+    let mut cache_key = None;
+    if let Some(cache) = &shared.cache {
+        if let Some(hit) = cache.get(payload_hash) {
+            if hit.t_len == t_len && hit.batch == batch {
+                shared.service.metrics_handle().record_cache_hit();
+                let _ = out_tx.send(wire::encode_response(
+                    seq,
+                    hit.t_len,
+                    hit.batch,
+                    &hit.advantages,
+                    &hit.rewards_to_go,
+                    hit.hw_cycles,
+                    true,
+                ));
+                return;
+            }
+            // 64-bit collision across geometries: treat as a miss.
+        }
+        shared.service.metrics_handle().record_cache_miss();
+        cache_key = Some(payload_hash);
+    }
+
+    // 3. Admission: move the decoded planes straight into the service.
+    let planes = match PlaneSet::new(t_len, batch, rewards, values, done_mask) {
+        Ok(planes) => planes,
+        Err(e) => {
+            refund_charge();
+            let _ = out_tx.send(wire::encode_error(
+                seq,
+                ErrorKind::Malformed,
+                &e.to_string(),
+            ));
+            return;
+        }
+    };
+    let submitted = if shared.config.shed_on_overload {
+        shared.service.try_submit_plane_set(planes)
+    } else {
+        shared.service.submit_plane_set(planes)
+    };
+    match submitted {
+        Ok(pending) => {
+            let _ = done_tx.send(InFlight { seq, t_len, batch, cache_key, pending });
+        }
+        Err(ServiceError::Overloaded { depth, limit }) => {
+            refund_charge();
+            let _ = out_tx.send(wire::encode_error(
+                seq,
+                ErrorKind::Shed,
+                &format!("admission control shed the frame (depth {depth}/{limit})"),
+            ));
+        }
+        Err(ServiceError::ShuttingDown) => {
+            refund_charge();
+            let _ = out_tx.send(wire::encode_error(
+                seq,
+                ErrorKind::Shutdown,
+                "service is shutting down",
+            ));
+        }
+        Err(e) => {
+            refund_charge();
+            let _ = out_tx.send(wire::encode_error(
+                seq,
+                ErrorKind::Internal,
+                &e.to_string(),
+            ));
+        }
+    }
+}
+
+fn completer_loop(
+    done_rx: mpsc::Receiver<InFlight>,
+    out_tx: mpsc::SyncSender<Vec<u8>>,
+    shared: Arc<Shared>,
+) {
+    while let Ok(inflight) = done_rx.recv() {
+        match inflight.pending.wait() {
+            Ok(gae) => {
+                // Move the planes into one shared result; the cache (if
+                // any) and the response encode read the same buffers —
+                // no per-response plane copies. Insert happens *before*
+                // the response leaves, so a client that waits for its
+                // reply is guaranteed a hit on an identical resend.
+                let cached = Arc::new(CachedGae {
+                    t_len: inflight.t_len,
+                    batch: inflight.batch,
+                    advantages: gae.advantages,
+                    rewards_to_go: gae.rewards_to_go,
+                    hw_cycles: gae.hw_cycles,
+                });
+                if let (Some(cache), Some(key)) = (&shared.cache, inflight.cache_key) {
+                    cache.insert(key, Arc::clone(&cached));
+                }
+                let _ = out_tx.send(wire::encode_response(
+                    inflight.seq,
+                    cached.t_len,
+                    cached.batch,
+                    &cached.advantages,
+                    &cached.rewards_to_go,
+                    cached.hw_cycles,
+                    false,
+                ));
+            }
+            Err(ServiceError::ShuttingDown) => {
+                let _ = out_tx.send(wire::encode_error(
+                    inflight.seq,
+                    ErrorKind::Shutdown,
+                    "service shut down while the frame was in flight",
+                ));
+            }
+            Err(e) => {
+                let _ = out_tx.send(wire::encode_error(
+                    inflight.seq,
+                    ErrorKind::Internal,
+                    &e.to_string(),
+                ));
+            }
+        }
+    }
+}
+
+fn writer_loop(stream: TcpStream, out_rx: mpsc::Receiver<Vec<u8>>) {
+    let mut writer = std::io::BufWriter::new(stream);
+    while let Ok(frame) = out_rx.recv() {
+        if writer.write_all(&frame).is_err() {
+            return;
+        }
+        // Drain whatever else is already queued before paying the flush.
+        while let Ok(next) = out_rx.try_recv() {
+            if writer.write_all(&next).is_err() {
+                return;
+            }
+        }
+        if writer.flush().is_err() {
+            return;
+        }
+    }
+}

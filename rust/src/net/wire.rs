@@ -1,0 +1,1039 @@
+//! The HGAE wire protocol: versioned, length-prefixed binary frames
+//! whose reward/value payloads travel as 8-bit codes plus per-block
+//! scale/offset — the transport form of the paper's §II-C finding that
+//! standardized 8-bit storage cuts memory *and bandwidth* 4× with no
+//! training-quality loss.
+//!
+//! ## Frame layout (version 1)
+//!
+//! Every frame on the socket is `u32 LE length N` followed by `N` frame
+//! bytes (the length prefix excludes itself):
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0      | 4    | magic `"HGAE"` |
+//! | 4      | 1    | version (currently `1`) |
+//! | 5      | 1    | frame type: 1=Request, 2=Response, 3=Error |
+//! | 6      | N−10 | type-specific body (below) |
+//! | N−4    | 4    | checksum: folded FNV-1a over frame bytes `0..N−4` |
+//!
+//! **Request body** (all integers LE):
+//!
+//! | field | size |
+//! |-------|-----:|
+//! | `seq` | u64 (client-assigned; `0` is reserved for connection-level errors) |
+//! | tenant | u8 length + UTF-8 bytes (≤ 255) |
+//! | — payload section (hashed for the response cache) — | |
+//! | codec | u8, the Table III experiment index (1..=5) |
+//! | bits  | u8 quantizer width (ignored for f32 codecs) |
+//! | `t_len`, `batch` | u32 each |
+//! | rewards plane | `[T·B]` elements, encoded per codec |
+//! | values plane | `[(T+1)·B]` elements, encoded per codec |
+//! | done bitset | ⌈T·B/8⌉ bytes, LSB-first (bit j = element j) |
+//!
+//! Plane encoding: codecs 1–2 (`Exp1Baseline`, `Exp2DynamicStd`) are the
+//! **f32 escape hatch** — raw LE f32, bit-exact. Codecs 3–5 quantize:
+//! `f32 μ, f32 σ` (the per-block scale/offset, computed per frame per
+//! plane exactly like
+//! [`block_standardize`](crate::quant::block_std::block_standardize)),
+//! then ⌈n·bits/8⌉ bytes of
+//! LSB-first packed [`UniformQuantizer`] codewords over the standardized
+//! elements. The training-time distinction between dynamic and block
+//! standardization is a *storage-side* concern; over the wire every
+//! quantized plane carries its own self-contained (μ, σ) so frames need
+//! no cross-frame state.
+//!
+//! **Response body**: `seq` u64, `t_len`/`batch` u32, flags u8 (bit 0 =
+//! served from cache, bit 1 = `hw_cycles` present), optional u64
+//! `hw_cycles`, then advantages and rewards-to-go as raw `[T·B]` f32
+//! planes — responses always travel f32 so the f32 request codec is
+//! end-to-end bit-exact against in-process submission.
+//!
+//! **Error body**: `seq` u64, code u8 ([`ErrorKind`]: 1=Quota, 2=Shed,
+//! 3=Malformed, 4=Shutdown, 5=Internal), u32 message length + UTF-8.
+//!
+//! ## Version rules
+//!
+//! The format is rigid within a version: a frame must parse *exactly*
+//! (trailing bytes are rejected), and any layout change — field added,
+//! reordered, re-encoded — bumps the version byte. A decoder rejects
+//! frames whose version it does not implement with
+//! [`WireDecodeError::BadVersion`]; there is no in-band negotiation, so
+//! deploy servers before clients when bumping.
+//!
+//! ## Accounting
+//!
+//! [`encode_request`] reports the payload-section size next to what the
+//! f32 escape hatch would have used for the same geometry
+//! ([`EncodedRequest::reduction_vs_f32`]) — the measured per-frame
+//! bandwidth lever the `net_throughput` bench sweeps (§V's 4× claim,
+//! minus the fixed per-plane stats and the done bitset).
+
+use crate::quant::block_std::BlockStats;
+use crate::quant::{CodecKind, UniformQuantizer};
+use std::fmt;
+use std::io::Read;
+
+/// Frame magic: `"HGAE"`.
+pub const MAGIC: [u8; 4] = *b"HGAE";
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// Upper bound on a single frame (sanity guard against corrupt length
+/// prefixes allocating unbounded buffers).
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+/// Upper bound on a request's `T·B` elements. Low-bit payloads expand
+/// ~45× on decode (packed codes → u16 codes → f32 planes), so the frame
+/// length alone does not bound decoded memory; this does. Enforced at
+/// both encode and decode, *before* any plane allocation.
+pub const MAX_PLANE_ELEMENTS: usize = 1 << 24;
+
+const FRAME_TYPE_REQUEST: u8 = 1;
+const FRAME_TYPE_RESPONSE: u8 = 2;
+const FRAME_TYPE_ERROR: u8 = 3;
+
+/// Fixed bytes before the body: magic + version + frame type.
+const HEADER_BYTES: usize = 6;
+const CHECKSUM_BYTES: usize = 4;
+/// Longest error message the encoder will put on the wire.
+const MAX_ERROR_MESSAGE: usize = 1024;
+
+/// FNV-1a over a byte slice (the digest the payload cache keys on).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// 32-bit frame checksum: FNV-1a folded onto itself.
+fn checksum(bytes: &[u8]) -> u32 {
+    let h = fnv1a(bytes);
+    (h ^ (h >> 32)) as u32
+}
+
+/// Why a frame was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireDecodeError {
+    /// The frame ended before a field did.
+    Truncated { need: usize, have: usize },
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    BadFrameType(u8),
+    BadCodec(u8),
+    BadChecksum { want: u32, got: u32 },
+    /// Declared length exceeds [`MAX_FRAME_BYTES`] (or is impossibly small).
+    BadLength(usize),
+    /// Structurally invalid content.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for WireDecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireDecodeError::Truncated { need, have } => {
+                write!(f, "truncated frame: needs {need} bytes, has {have}")
+            }
+            WireDecodeError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            WireDecodeError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {VERSION})")
+            }
+            WireDecodeError::BadFrameType(t) => write!(f, "unknown frame type {t}"),
+            WireDecodeError::BadCodec(c) => {
+                write!(f, "unknown codec index {c} (valid: 1..=5)")
+            }
+            WireDecodeError::BadChecksum { want, got } => {
+                write!(f, "checksum mismatch: frame says {want:#010x}, computed {got:#010x}")
+            }
+            WireDecodeError::BadLength(n) => {
+                write!(f, "frame length {n} outside sane bounds (max {MAX_FRAME_BYTES})")
+            }
+            WireDecodeError::Malformed(what) => write!(f, "malformed frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireDecodeError {}
+
+/// Typed error a server puts in an Error frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The tenant's token bucket refused the frame.
+    Quota,
+    /// Service admission control shed the frame (queue at depth limit).
+    Shed,
+    /// The frame did not decode or validate.
+    Malformed,
+    /// The service is shutting down.
+    Shutdown,
+    /// Anything else.
+    Internal,
+}
+
+impl ErrorKind {
+    fn code(self) -> u8 {
+        match self {
+            ErrorKind::Quota => 1,
+            ErrorKind::Shed => 2,
+            ErrorKind::Malformed => 3,
+            ErrorKind::Shutdown => 4,
+            ErrorKind::Internal => 5,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<ErrorKind> {
+        match code {
+            1 => Some(ErrorKind::Quota),
+            2 => Some(ErrorKind::Shed),
+            3 => Some(ErrorKind::Malformed),
+            4 => Some(ErrorKind::Shutdown),
+            5 => Some(ErrorKind::Internal),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorKind::Quota => "quota",
+            ErrorKind::Shed => "shed",
+            ErrorKind::Malformed => "malformed",
+            ErrorKind::Shutdown => "shutdown",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A decoded request frame: planes reconstructed to f32 (lossy for the
+/// quantized codecs, bit-exact for the f32 escape hatch).
+#[derive(Debug, Clone)]
+pub struct RequestFrame {
+    pub seq: u64,
+    pub tenant: String,
+    pub codec: CodecKind,
+    pub bits: u8,
+    pub t_len: usize,
+    pub batch: usize,
+    pub rewards: Vec<f32>,
+    pub values: Vec<f32>,
+    pub done_mask: Vec<f32>,
+    /// FNV-1a over the payload section — the response-cache key.
+    pub payload_hash: u64,
+    /// Payload-section size on the wire.
+    pub payload_bytes: usize,
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone)]
+pub struct ResponseFrame {
+    pub seq: u64,
+    pub t_len: usize,
+    pub batch: usize,
+    pub advantages: Vec<f32>,
+    pub rewards_to_go: Vec<f32>,
+    pub hw_cycles: Option<u64>,
+    /// The server answered from its response cache.
+    pub cache_hit: bool,
+}
+
+/// A decoded error frame.
+#[derive(Debug, Clone)]
+pub struct ErrorFrame {
+    /// The request this error answers; `0` = connection-level.
+    pub seq: u64,
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+/// Any decoded frame.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    Request(RequestFrame),
+    Response(ResponseFrame),
+    Error(ErrorFrame),
+}
+
+/// An encoded request plus its transport accounting.
+#[derive(Debug, Clone)]
+pub struct EncodedRequest {
+    /// Length-prefixed wire bytes, ready to write.
+    pub bytes: Vec<u8>,
+    /// Payload-section bytes actually used.
+    pub payload_bytes: usize,
+    /// Payload-section bytes the f32 escape hatch would use for the same
+    /// geometry.
+    pub f32_payload_bytes: usize,
+}
+
+impl EncodedRequest {
+    /// Measured per-frame bandwidth reduction vs f32 transport.
+    pub fn reduction_vs_f32(&self) -> f64 {
+        self.f32_payload_bytes as f64 / self.payload_bytes.max(1) as f64
+    }
+}
+
+/// Do this codec's planes travel quantized (vs the f32 escape hatch)?
+pub fn codec_is_quantized(kind: CodecKind) -> bool {
+    matches!(
+        kind,
+        CodecKind::Exp3BlockDestd | CodecKind::Exp4BlockKeepStd | CodecKind::Exp5DynamicBlock
+    )
+}
+
+fn codec_from_index(index: u8) -> Option<CodecKind> {
+    match index {
+        1 => Some(CodecKind::Exp1Baseline),
+        2 => Some(CodecKind::Exp2DynamicStd),
+        3 => Some(CodecKind::Exp3BlockDestd),
+        4 => Some(CodecKind::Exp4BlockKeepStd),
+        5 => Some(CodecKind::Exp5DynamicBlock),
+        _ => None,
+    }
+}
+
+/// Payload-section bytes for a geometry under the f32 escape hatch:
+/// codec subheader + two f32 planes + the done bitset.
+pub fn f32_payload_bytes(t_len: usize, batch: usize) -> usize {
+    let n = t_len * batch;
+    10 + 4 * n + 4 * ((t_len + 1) * batch) + n.div_ceil(8)
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Wrap a frame body: prepend magic/version/type, append the checksum,
+/// and prefix the total length.
+fn finish_frame(frame_type: u8, body: &[u8]) -> Vec<u8> {
+    let frame_len = HEADER_BYTES + body.len() + CHECKSUM_BYTES;
+    let mut out = Vec::with_capacity(4 + frame_len);
+    put_u32(&mut out, frame_len as u32);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame_type);
+    out.extend_from_slice(body);
+    let sum = checksum(&out[4..]);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+fn encode_plane(out: &mut Vec<u8>, data: &[f32], quantized: bool, q: &UniformQuantizer) {
+    if !quantized {
+        for &x in data {
+            put_f32(out, x);
+        }
+        return;
+    }
+    let stats = BlockStats::of(data);
+    put_f32(out, stats.mean);
+    put_f32(out, stats.std);
+    let codes: Vec<u16> = data
+        .iter()
+        .map(|&x| q.quantize((x - stats.mean) / stats.std))
+        .collect();
+    out.extend_from_slice(&q.pack(&codes));
+}
+
+fn encode_done_bitset(out: &mut Vec<u8>, done_mask: &[f32]) {
+    let mut byte = 0u8;
+    for (j, &d) in done_mask.iter().enumerate() {
+        if d == 1.0 {
+            byte |= 1 << (j % 8);
+        }
+        if j % 8 == 7 {
+            out.push(byte);
+            byte = 0;
+        }
+    }
+    if done_mask.len() % 8 != 0 {
+        out.push(byte);
+    }
+}
+
+/// Encode one plane-shaped GAE request. The done mask must be exactly
+/// 0.0/1.0 per element (the service's plane convention) — the bitset
+/// transport is otherwise lossy.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_request(
+    seq: u64,
+    tenant: &str,
+    codec: CodecKind,
+    bits: u8,
+    t_len: usize,
+    batch: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+) -> anyhow::Result<EncodedRequest> {
+    anyhow::ensure!(seq != 0, "seq 0 is reserved for connection-level errors");
+    anyhow::ensure!(tenant.len() <= 255, "tenant id longer than 255 bytes");
+    anyhow::ensure!((1..=16).contains(&bits), "quantizer bits must be in 1..=16");
+    anyhow::ensure!(t_len >= 1 && batch >= 1, "empty plane geometry");
+    anyhow::ensure!(
+        t_len <= u32::MAX as usize && batch <= u32::MAX as usize,
+        "plane geometry exceeds u32"
+    );
+    anyhow::ensure!(
+        t_len.checked_mul(batch).is_some_and(|n| n <= MAX_PLANE_ELEMENTS),
+        "plane geometry exceeds MAX_PLANE_ELEMENTS ({MAX_PLANE_ELEMENTS})"
+    );
+    let n = t_len * batch;
+    anyhow::ensure!(rewards.len() == n, "rewards plane holds {} != {n}", rewards.len());
+    anyhow::ensure!(
+        values.len() == (t_len + 1) * batch,
+        "values plane holds {} != {}",
+        values.len(),
+        (t_len + 1) * batch
+    );
+    anyhow::ensure!(done_mask.len() == n, "done plane holds {} != {n}", done_mask.len());
+
+    let quantized = codec_is_quantized(codec);
+    if quantized {
+        // Non-finite data would poison the per-plane (μ, σ) and the
+        // decoder rejects non-finite stats at connection level; refuse
+        // locally instead. The f32 escape hatch carries NaN/Inf exactly.
+        let finite = |d: &[f32]| d.iter().all(|x| x.is_finite());
+        anyhow::ensure!(
+            finite(rewards) && finite(values),
+            "quantized codecs require finite plane data (use the f32 codec for NaN/Inf)"
+        );
+    }
+    let q = UniformQuantizer::new(if quantized { bits } else { 8 });
+
+    let mut body = Vec::with_capacity(32 + tenant.len() + f32_payload_bytes(t_len, batch));
+    put_u64(&mut body, seq);
+    body.push(tenant.len() as u8);
+    body.extend_from_slice(tenant.as_bytes());
+    let payload_start = body.len();
+    body.push(codec.index() as u8);
+    body.push(bits);
+    put_u32(&mut body, t_len as u32);
+    put_u32(&mut body, batch as u32);
+    encode_plane(&mut body, rewards, quantized, &q);
+    encode_plane(&mut body, values, quantized, &q);
+    encode_done_bitset(&mut body, done_mask);
+    let payload_bytes = body.len() - payload_start;
+
+    anyhow::ensure!(
+        HEADER_BYTES + body.len() + CHECKSUM_BYTES <= MAX_FRAME_BYTES,
+        "frame exceeds MAX_FRAME_BYTES"
+    );
+    Ok(EncodedRequest {
+        bytes: finish_frame(FRAME_TYPE_REQUEST, &body),
+        payload_bytes,
+        f32_payload_bytes: f32_payload_bytes(t_len, batch),
+    })
+}
+
+/// Encode a response frame (planes always travel f32).
+pub fn encode_response(
+    seq: u64,
+    t_len: usize,
+    batch: usize,
+    advantages: &[f32],
+    rewards_to_go: &[f32],
+    hw_cycles: Option<u64>,
+    cache_hit: bool,
+) -> Vec<u8> {
+    debug_assert_eq!(advantages.len(), t_len * batch);
+    debug_assert_eq!(rewards_to_go.len(), t_len * batch);
+    let mut body = Vec::with_capacity(32 + 8 * advantages.len());
+    put_u64(&mut body, seq);
+    put_u32(&mut body, t_len as u32);
+    put_u32(&mut body, batch as u32);
+    let mut flags = 0u8;
+    if cache_hit {
+        flags |= 1;
+    }
+    if hw_cycles.is_some() {
+        flags |= 2;
+    }
+    body.push(flags);
+    if let Some(c) = hw_cycles {
+        put_u64(&mut body, c);
+    }
+    for &x in advantages {
+        put_f32(&mut body, x);
+    }
+    for &x in rewards_to_go {
+        put_f32(&mut body, x);
+    }
+    finish_frame(FRAME_TYPE_RESPONSE, &body)
+}
+
+/// Encode a typed error frame (message truncated at 1 KiB).
+pub fn encode_error(seq: u64, kind: ErrorKind, message: &str) -> Vec<u8> {
+    let mut msg = message.as_bytes();
+    if msg.len() > MAX_ERROR_MESSAGE {
+        // Truncate on a char boundary by shrinking until valid UTF-8.
+        let mut end = MAX_ERROR_MESSAGE;
+        while end > 0 && !message.is_char_boundary(end) {
+            end -= 1;
+        }
+        msg = &message.as_bytes()[..end];
+    }
+    let mut body = Vec::with_capacity(16 + msg.len());
+    put_u64(&mut body, seq);
+    body.push(kind.code());
+    put_u32(&mut body, msg.len() as u32);
+    body.extend_from_slice(msg);
+    finish_frame(FRAME_TYPE_ERROR, &body)
+}
+
+// ---------------------------------------------------------------- decode
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireDecodeError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(WireDecodeError::Malformed("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(WireDecodeError::Truncated { need: end, have: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireDecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireDecodeError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireDecodeError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireDecodeError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// `a * b` with wire-integer inputs: overflow is a malformed frame, not
+/// a panic.
+fn wire_mul(a: usize, b: usize) -> Result<usize, WireDecodeError> {
+    a.checked_mul(b).ok_or(WireDecodeError::Malformed("size overflow"))
+}
+
+fn decode_plane(
+    r: &mut Reader<'_>,
+    n: usize,
+    quantized: bool,
+    q: &UniformQuantizer,
+) -> Result<Vec<f32>, WireDecodeError> {
+    if !quantized {
+        let raw = r.take(wire_mul(n, 4)?)?;
+        return Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect());
+    }
+    let mean = r.f32()?;
+    let std = r.f32()?;
+    if !mean.is_finite() || !std.is_finite() {
+        return Err(WireDecodeError::Malformed("non-finite plane stats"));
+    }
+    let nbytes = wire_mul(n, q.bits as usize)?.div_ceil(8);
+    let raw = r.take(nbytes)?;
+    let codes = q.unpack(raw, n);
+    Ok(codes.into_iter().map(|c| q.dequantize(c) * std + mean).collect())
+}
+
+fn decode_request_body(r: &mut Reader<'_>) -> Result<RequestFrame, WireDecodeError> {
+    let seq = r.u64()?;
+    if seq == 0 {
+        // Mirrors the encoder: a seq-0 request would make its per-frame
+        // error replies indistinguishable from connection-level ones.
+        return Err(WireDecodeError::Malformed("seq 0 is reserved"));
+    }
+    let tenant_len = r.u8()? as usize;
+    let tenant = std::str::from_utf8(r.take(tenant_len)?)
+        .map_err(|_| WireDecodeError::Malformed("tenant is not UTF-8"))?
+        .to_string();
+    let payload_start = r.pos;
+    let codec_index = r.u8()?;
+    let codec = codec_from_index(codec_index).ok_or(WireDecodeError::BadCodec(codec_index))?;
+    let bits = r.u8()?;
+    if !(1..=16).contains(&bits) {
+        return Err(WireDecodeError::Malformed("quantizer bits outside 1..=16"));
+    }
+    let t_len = r.u32()? as usize;
+    let batch = r.u32()? as usize;
+    if t_len == 0 || batch == 0 {
+        return Err(WireDecodeError::Malformed("empty plane geometry"));
+    }
+    let n = t_len
+        .checked_mul(batch)
+        .ok_or(WireDecodeError::Malformed("plane geometry overflow"))?;
+    // Reject oversized geometry *before* any plane allocation: a packed
+    // low-bit payload expands ~45x on decode, so the frame-length bound
+    // alone would let one frame allocate gigabytes.
+    if n > MAX_PLANE_ELEMENTS {
+        return Err(WireDecodeError::Malformed("plane geometry exceeds element cap"));
+    }
+    let quantized = codec_is_quantized(codec);
+    let q = UniformQuantizer::new(if quantized { bits } else { 8 });
+    let rewards = decode_plane(r, n, quantized, &q)?;
+    let values = decode_plane(r, wire_mul(t_len + 1, batch)?, quantized, &q)?;
+    let done_raw = r.take(n.div_ceil(8))?;
+    let done_mask: Vec<f32> = (0..n)
+        .map(|j| if (done_raw[j / 8] >> (j % 8)) & 1 == 1 { 1.0 } else { 0.0 })
+        .collect();
+    let payload_bytes = r.pos - payload_start;
+    let payload_hash = fnv1a(&r.buf[payload_start..r.pos]);
+    Ok(RequestFrame {
+        seq,
+        tenant,
+        codec,
+        bits,
+        t_len,
+        batch,
+        rewards,
+        values,
+        done_mask,
+        payload_hash,
+        payload_bytes,
+    })
+}
+
+fn decode_response_body(r: &mut Reader<'_>) -> Result<ResponseFrame, WireDecodeError> {
+    let seq = r.u64()?;
+    let t_len = r.u32()? as usize;
+    let batch = r.u32()? as usize;
+    let flags = r.u8()?;
+    if flags & !0b11 != 0 {
+        return Err(WireDecodeError::Malformed("unknown response flags"));
+    }
+    let hw_cycles = if flags & 2 != 0 { Some(r.u64()?) } else { None };
+    let n = t_len
+        .checked_mul(batch)
+        .ok_or(WireDecodeError::Malformed("plane geometry overflow"))?;
+    let read_plane = |r: &mut Reader<'_>| -> Result<Vec<f32>, WireDecodeError> {
+        let raw = r.take(wire_mul(n, 4)?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    };
+    let advantages = read_plane(r)?;
+    let rewards_to_go = read_plane(r)?;
+    Ok(ResponseFrame {
+        seq,
+        t_len,
+        batch,
+        advantages,
+        rewards_to_go,
+        hw_cycles,
+        cache_hit: flags & 1 != 0,
+    })
+}
+
+fn decode_error_body(r: &mut Reader<'_>) -> Result<ErrorFrame, WireDecodeError> {
+    let seq = r.u64()?;
+    let code = r.u8()?;
+    let kind =
+        ErrorKind::from_code(code).ok_or(WireDecodeError::Malformed("unknown error code"))?;
+    let msg_len = r.u32()? as usize;
+    let message = std::str::from_utf8(r.take(msg_len)?)
+        .map_err(|_| WireDecodeError::Malformed("error message is not UTF-8"))?
+        .to_string();
+    Ok(ErrorFrame { seq, kind, message })
+}
+
+/// Decode one frame (the bytes *after* the length prefix). Verifies the
+/// checksum before touching any field, so arbitrary corruption is
+/// rejected, never mis-parsed.
+pub fn decode_frame(frame: &[u8]) -> Result<Frame, WireDecodeError> {
+    if frame.len() < HEADER_BYTES + CHECKSUM_BYTES {
+        return Err(WireDecodeError::Truncated {
+            need: HEADER_BYTES + CHECKSUM_BYTES,
+            have: frame.len(),
+        });
+    }
+    let body_end = frame.len() - CHECKSUM_BYTES;
+    let want = u32::from_le_bytes([
+        frame[body_end],
+        frame[body_end + 1],
+        frame[body_end + 2],
+        frame[body_end + 3],
+    ]);
+    let got = checksum(&frame[..body_end]);
+    if want != got {
+        return Err(WireDecodeError::BadChecksum { want, got });
+    }
+    let mut r = Reader { buf: &frame[..body_end], pos: 0 };
+    let magic = r.take(4)?;
+    if magic != MAGIC {
+        return Err(WireDecodeError::BadMagic([magic[0], magic[1], magic[2], magic[3]]));
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(WireDecodeError::BadVersion(version));
+    }
+    let frame_type = r.u8()?;
+    let frame = match frame_type {
+        FRAME_TYPE_REQUEST => Frame::Request(decode_request_body(&mut r)?),
+        FRAME_TYPE_RESPONSE => Frame::Response(decode_response_body(&mut r)?),
+        FRAME_TYPE_ERROR => Frame::Error(decode_error_body(&mut r)?),
+        t => return Err(WireDecodeError::BadFrameType(t)),
+    };
+    if r.pos != body_end {
+        return Err(WireDecodeError::Malformed("trailing bytes after body"));
+    }
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame off a stream. `Ok(None)` = clean EOF
+/// at a frame boundary; an EOF mid-frame or a bad length is an error.
+pub fn read_frame(reader: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match reader.read(&mut len_buf[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "EOF inside a frame length prefix",
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len < HEADER_BYTES + CHECKSUM_BYTES || len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            WireDecodeError::BadLength(len).to_string(),
+        ));
+    }
+    let mut frame = vec![0u8; len];
+    reader.read_exact(&mut frame)?;
+    Ok(Some(frame))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Gen};
+
+    fn random_planes(g: &mut Gen, t_len: usize, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+        let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+        let done_mask = (0..t_len * batch)
+            .map(|_| if g.bool_p(0.1) { 1.0 } else { 0.0 })
+            .collect();
+        (rewards, values, done_mask)
+    }
+
+    fn encode(
+        g: &mut Gen,
+        codec: CodecKind,
+        bits: u8,
+        t_len: usize,
+        batch: usize,
+    ) -> (EncodedRequest, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (rewards, values, done_mask) = random_planes(g, t_len, batch);
+        let enc = encode_request(
+            7, "tenant-a", codec, bits, t_len, batch, &rewards, &values, &done_mask,
+        )
+        .unwrap();
+        (enc, rewards, values, done_mask)
+    }
+
+    fn decode_request(enc: &EncodedRequest) -> RequestFrame {
+        match decode_frame(&enc.bytes[4..]).unwrap() {
+            Frame::Request(req) => req,
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_all_codecs_random_lengths() {
+        check("wire request roundtrip", 40, |g| {
+            let t_len = g.usize_in(1, 70);
+            let batch = g.usize_in(1, 9);
+            let codec = *g.choose(&CodecKind::all());
+            let bits = g.usize_in(3, 10) as u8;
+            let (enc, rewards, values, done_mask) = encode(g, codec, bits, t_len, batch);
+            let req = decode_request(&enc);
+            assert_eq!(req.seq, 7);
+            assert_eq!(req.tenant, "tenant-a");
+            assert_eq!(req.codec, codec);
+            assert_eq!((req.t_len, req.batch), (t_len, batch));
+            assert_eq!(req.payload_bytes, enc.payload_bytes);
+            // Done bitset is always exact.
+            assert_eq!(req.done_mask, done_mask);
+            if !codec_is_quantized(codec) {
+                // f32 escape hatch: bit-exact planes, reduction 1.0.
+                for (a, b) in req.rewards.iter().zip(&rewards) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in req.values.iter().zip(&values) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert!((enc.reduction_vs_f32() - 1.0).abs() < 1e-12);
+            } else {
+                // Quantized: bounded reconstruction error in σ units.
+                let q = UniformQuantizer::new(bits);
+                for (plane, orig) in [(&req.rewards, &rewards), (&req.values, &values)] {
+                    let stats = crate::quant::BlockStats::of(orig);
+                    let tol = q.max_in_range_error() * stats.std.abs().max(1e-3) + 1e-4;
+                    for (a, b) in plane.iter().zip(orig.iter()) {
+                        assert!(
+                            (a - b).abs() <= tol,
+                            "{codec:?} bits={bits}: {a} vs {b} tol={tol}"
+                        );
+                    }
+                }
+                assert!(enc.reduction_vs_f32() > 1.0);
+            }
+        });
+    }
+
+    #[test]
+    fn eight_bit_reduction_clears_three_point_five_x() {
+        let mut g = Gen::new(5);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 128, 16);
+        let red = enc.reduction_vs_f32();
+        assert!(red >= 3.5, "reduction={red}");
+        assert!(red < 4.0, "reduction={red} (stats overhead must show)");
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_rejected() {
+        check("wire rejects damage", 40, |g| {
+            let t_len = g.usize_in(1, 40);
+            let batch = g.usize_in(1, 6);
+            let codec = *g.choose(&CodecKind::all());
+            let (enc, ..) = encode(g, codec, 8, t_len, batch);
+            let frame = &enc.bytes[4..];
+            // Truncation at any point fails.
+            let cut = g.usize_in(0, frame.len() - 1);
+            assert!(decode_frame(&frame[..cut]).is_err(), "cut at {cut} accepted");
+            // Any single flipped bit fails (checksum-first decode).
+            let mut corrupt = frame.to_vec();
+            let byte = g.usize_in(0, corrupt.len() - 1);
+            let bit = g.usize_in(0, 7);
+            corrupt[byte] ^= 1 << bit;
+            assert!(
+                decode_frame(&corrupt).is_err(),
+                "flip {byte}:{bit} accepted"
+            );
+        });
+    }
+
+    #[test]
+    fn garbage_bytes_never_panic() {
+        check("wire survives garbage", 60, |g| {
+            let len = g.usize_in(0, 200);
+            let bytes: Vec<u8> =
+                (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+            let _ = decode_frame(&bytes); // must not panic
+        });
+    }
+
+    #[test]
+    fn version_and_type_are_enforced() {
+        let mut g = Gen::new(8);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp1Baseline, 8, 4, 2);
+        let frame = &enc.bytes[4..];
+        // Bump the version and re-checksum: must fail as BadVersion.
+        let mut v2 = frame.to_vec();
+        v2[4] = VERSION + 1;
+        let body_end = v2.len() - 4;
+        let sum = super::checksum(&v2[..body_end]);
+        v2[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&v2),
+            Err(WireDecodeError::BadVersion(v)) if v == VERSION + 1
+        ));
+        // Unknown frame type likewise.
+        let mut t9 = frame.to_vec();
+        t9[5] = 9;
+        let sum = super::checksum(&t9[..body_end]);
+        t9[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode_frame(&t9), Err(WireDecodeError::BadFrameType(9))));
+        // A request claiming the reserved seq 0 is refused on decode
+        // (the seq field sits right after the 6-byte header).
+        let mut s0 = frame.to_vec();
+        s0[6..14].copy_from_slice(&0u64.to_le_bytes());
+        let sum = super::checksum(&s0[..body_end]);
+        s0[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&s0),
+            Err(WireDecodeError::Malformed("seq 0 is reserved"))
+        ));
+    }
+
+    #[test]
+    fn non_finite_planes_refused_for_quantized_carried_exactly_by_f32() {
+        let mut rewards = vec![0.5f32; 8];
+        rewards[3] = f32::NAN;
+        let values = vec![0.25f32; 10]; // (T+1)·B for T=4, B=2
+        let dones = vec![0.0f32; 8];
+        // Quantized: refused locally, never a poison frame on the wire.
+        let err = encode_request(
+            1, "t", CodecKind::Exp5DynamicBlock, 8, 4, 2, &rewards, &values, &dones,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("finite"), "{err}");
+        // f32 escape hatch: NaN travels bit-exactly.
+        let enc = encode_request(
+            1, "t", CodecKind::Exp1Baseline, 8, 4, 2, &rewards, &values, &dones,
+        )
+        .unwrap();
+        let req = decode_request(&enc);
+        assert_eq!(req.rewards[3].to_bits(), f32::NAN.to_bits());
+    }
+
+    #[test]
+    fn oversized_geometry_is_rejected_before_any_allocation() {
+        // Encoding refuses it outright…
+        let n_side = 1usize << 20; // (2^20)^2 elements >> MAX_PLANE_ELEMENTS
+        let err = encode_request(
+            1, "t", CodecKind::Exp5DynamicBlock, 8, n_side, n_side, &[], &[], &[],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("MAX_PLANE_ELEMENTS"), "{err}");
+        // …and a hand-patched frame declaring huge T·B over a tiny body
+        // dies on the geometry cap, not on an allocation attempt.
+        let mut g = Gen::new(19);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 4, 2);
+        let mut frame = enc.bytes[4..].to_vec();
+        let geo = 6 + 8 + 1 + "tenant-a".len() + 2; // header+seq+tenant+codec+bits
+        frame[geo..geo + 4].copy_from_slice(&(1u32 << 20).to_le_bytes());
+        frame[geo + 4..geo + 8].copy_from_slice(&(1u32 << 20).to_le_bytes());
+        let body_end = frame.len() - 4;
+        let sum = super::checksum(&frame[..body_end]);
+        frame[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&frame),
+            Err(WireDecodeError::Malformed("plane geometry exceeds element cap"))
+        ));
+    }
+
+    #[test]
+    fn response_roundtrip_with_and_without_cycles() {
+        let mut g = Gen::new(11);
+        let (t_len, batch) = (6, 3);
+        let adv = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+        let rtg = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+        for (cycles, hit) in [(Some(912u64), true), (None, false)] {
+            let bytes = encode_response(42, t_len, batch, &adv, &rtg, cycles, hit);
+            match decode_frame(&bytes[4..]).unwrap() {
+                Frame::Response(resp) => {
+                    assert_eq!(resp.seq, 42);
+                    assert_eq!(resp.hw_cycles, cycles);
+                    assert_eq!(resp.cache_hit, hit);
+                    for (a, b) in resp.advantages.iter().zip(&adv) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                    for (a, b) in resp.rewards_to_go.iter().zip(&rtg) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                other => panic!("expected response, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn error_roundtrip_and_truncation_of_long_messages() {
+        let long = "x".repeat(5000);
+        let bytes = encode_error(3, ErrorKind::Quota, &long);
+        match decode_frame(&bytes[4..]).unwrap() {
+            Frame::Error(err) => {
+                assert_eq!(err.seq, 3);
+                assert_eq!(err.kind, ErrorKind::Quota);
+                assert_eq!(err.message.len(), 1024);
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        for kind in [
+            ErrorKind::Quota,
+            ErrorKind::Shed,
+            ErrorKind::Malformed,
+            ErrorKind::Shutdown,
+            ErrorKind::Internal,
+        ] {
+            let bytes = encode_error(1, kind, "m");
+            match decode_frame(&bytes[4..]).unwrap() {
+                Frame::Error(err) => assert_eq!(err.kind, kind),
+                other => panic!("expected error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn identical_payloads_hash_identically_and_differ_otherwise() {
+        let mut g = Gen::new(13);
+        let (rewards, values, done_mask) = random_planes(&mut g, 12, 4);
+        let enc = |seq: u64, tenant: &str, r: &[f32]| {
+            encode_request(
+                seq, tenant, CodecKind::Exp5DynamicBlock, 8, 12, 4, r, &values, &done_mask,
+            )
+            .unwrap()
+        };
+        let a = decode_request(&enc(1, "a", &rewards));
+        // Different seq + tenant, same payload → same hash (cache key).
+        let b = decode_request(&enc(2, "b", &rewards));
+        assert_eq!(a.payload_hash, b.payload_hash);
+        let mut other = rewards.clone();
+        other[0] += 1.0;
+        let c = decode_request(&enc(1, "a", &other));
+        assert_ne!(a.payload_hash, c.payload_hash);
+    }
+
+    #[test]
+    fn frame_reader_handles_boundaries() {
+        let mut g = Gen::new(17);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp1Baseline, 8, 3, 2);
+        // Two frames back to back, then clean EOF.
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&enc.bytes);
+        stream.extend_from_slice(&enc.bytes);
+        let mut cursor = &stream[..];
+        let f1 = read_frame(&mut cursor).unwrap().unwrap();
+        let f2 = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(f1, f2);
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+        // EOF mid-frame is an error, not a silent None.
+        let mut partial = &enc.bytes[..enc.bytes.len() - 3];
+        assert!(read_frame(&mut partial).is_err());
+        // An insane length prefix is refused before allocation.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 16]);
+        let mut cursor = &bad[..];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

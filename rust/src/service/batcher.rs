@@ -33,6 +33,7 @@
 
 use crate::gae::batched::GaeBatch;
 use crate::gae::{GaeOutput, Trajectory};
+use crate::service::plane::Lane;
 use crate::service::queue::BoundedQueue;
 use crate::service::request::WorkItem;
 use std::time::{Duration, Instant};
@@ -81,13 +82,13 @@ impl DynamicBatcher {
     /// as a latency floor.
     pub(crate) fn next_group(&self, queue: &BoundedQueue<WorkItem>) -> Option<Vec<WorkItem>> {
         let first = queue.pop()?;
-        let mut lanes = first.lanes;
+        let mut lanes = first.lane_count;
         let mut group = vec![first];
         // Free drain: everything that queued up while we were busy.
         while lanes < self.config.max_batch_lanes {
             match queue.try_pop() {
                 Some(item) => {
-                    lanes += item.lanes;
+                    lanes += item.lane_count;
                     group.push(item);
                 }
                 None => break,
@@ -99,7 +100,7 @@ impl DynamicBatcher {
             while lanes < self.config.max_batch_lanes {
                 match queue.pop_deadline(deadline) {
                     Some(item) => {
-                        lanes += item.lanes;
+                        lanes += item.lane_count;
                         group.push(item);
                     }
                     None => break,
@@ -131,27 +132,59 @@ pub struct PaddedTile {
 impl PaddedTile {
     /// Tile up a set of ragged lanes (at least one, each of length ≥ 0).
     pub fn from_lanes(trajs: &[&Trajectory]) -> PaddedTile {
-        assert!(!trajs.is_empty(), "a tile needs at least one lane");
-        let lanes = trajs.len();
-        let t_len = trajs.iter().map(|t| t.len()).max().unwrap();
+        Self::build(
+            trajs.len(),
+            |i| trajs[i].len(),
+            |i, t| trajs[i].rewards[t],
+            |i, t| trajs[i].values[t],
+            |i, t| trajs[i].dones[t],
+        )
+    }
+
+    /// The same tiling over service [`Lane`]s (owned trajectories or
+    /// borrowed plane columns) — the worker-side gather point of the
+    /// zero-copy submission path.
+    pub(crate) fn from_lane_views(lanes: &[&Lane]) -> PaddedTile {
+        Self::build(
+            lanes.len(),
+            |i| lanes[i].len(),
+            |i, t| lanes[i].reward(t),
+            |i, t| lanes[i].value(t),
+            |i, t| lanes[i].done(t),
+        )
+    }
+
+    /// Shared tile construction over indexed accessors: lane `i` has
+    /// `len_of(i)` steps, `reward(i, t)` / `done(i, t)` for `t < len`,
+    /// `value(i, t)` for `t <= len`.
+    fn build(
+        n: usize,
+        len_of: impl Fn(usize) -> usize,
+        reward: impl Fn(usize, usize) -> f32,
+        value: impl Fn(usize, usize) -> f32,
+        done: impl Fn(usize, usize) -> bool,
+    ) -> PaddedTile {
+        assert!(n > 0, "a tile needs at least one lane");
+        let lanes = n;
+        let t_len = (0..n).map(&len_of).max().unwrap();
         let mut rewards = vec![0.0f32; t_len * lanes];
         let mut values = vec![0.0f32; (t_len + 1) * lanes];
         let mut done_mask = vec![0.0f32; t_len * lanes];
         let mut lens = Vec::with_capacity(lanes);
-        for (i, traj) in trajs.iter().enumerate() {
-            let len = traj.len();
+        for i in 0..n {
+            let len = len_of(i);
             lens.push(len);
             for t in 0..len {
-                rewards[t * lanes + i] = traj.rewards[t];
-                done_mask[t * lanes + i] = if traj.dones[t] { 1.0 } else { 0.0 };
+                rewards[t * lanes + i] = reward(i, t);
+                done_mask[t * lanes + i] = if done(i, t) { 1.0 } else { 0.0 };
             }
             for t in 0..=len {
-                values[t * lanes + i] = traj.values[t];
+                values[t * lanes + i] = value(i, t);
             }
             // Pad region: done everywhere; the first pad row repeats the
             // bootstrap as its reward so its delta is exactly zero.
             if len < t_len {
-                rewards[len * lanes + i] = traj.values[len];
+                rewards[len * lanes + i] = value(i, len);
                 for t in len..t_len {
                     done_mask[t * lanes + i] = 1.0;
                 }
@@ -246,8 +279,9 @@ pub fn unpack_lanes(lens: &[usize], lanes: usize, out: &GaeOutput) -> Vec<GaeOut
         .collect()
 }
 
-/// Cut a flat lane list into tiles of at most `tile_lanes` lanes.
-pub fn tile_lanes<'a>(lanes: &[&'a Trajectory], tile_width: usize) -> Vec<Vec<&'a Trajectory>> {
+/// Cut a flat lane list into tiles of at most `tile_lanes` lanes
+/// (generic over the lane representation: `&Trajectory` or `&Lane`).
+pub fn tile_lanes<'a, T: ?Sized>(lanes: &[&'a T], tile_width: usize) -> Vec<Vec<&'a T>> {
     let tile_width = tile_width.max(1);
     lanes.chunks(tile_width).map(|c| c.to_vec()).collect()
 }

@@ -54,6 +54,13 @@ pub struct ServiceMetrics {
     batches: AtomicU64,
     batch_lanes: AtomicU64,
     hw_cycles: AtomicU64,
+    /// Network-layer counters (the TCP front-end records into the same
+    /// snapshot so one view covers the whole stack).
+    quota_shed: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    /// Coalesced groups sent to the scalar loop by size-threshold routing.
+    routed_small: AtomicU64,
     hists: Mutex<PhaseHists>,
 }
 
@@ -74,6 +81,10 @@ impl ServiceMetrics {
             batches: AtomicU64::new(0),
             batch_lanes: AtomicU64::new(0),
             hw_cycles: AtomicU64::new(0),
+            quota_shed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            routed_small: AtomicU64::new(0),
             hists: Mutex::new(PhaseHists::new()),
         }
     }
@@ -86,6 +97,26 @@ impl ServiceMetrics {
     /// Admission control rejected the request.
     pub(crate) fn record_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The network front-end refused a frame on its tenant's quota.
+    pub(crate) fn record_quota_shed(&self) {
+        self.quota_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The network front-end answered a frame from the response cache.
+    pub(crate) fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The response cache was consulted and had no entry.
+    pub(crate) fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Size-threshold routing sent one coalesced group to the scalar loop.
+    pub(crate) fn record_routed_small(&self) {
+        self.routed_small.fetch_add(1, Ordering::Relaxed);
     }
 
     /// A worker flushed one coalesced group of `lanes` trajectories.
@@ -115,9 +146,15 @@ impl ServiceMetrics {
         self.shed.load(Ordering::Relaxed)
     }
 
-    /// Point-in-time snapshot; queue depth/peak come from the caller
-    /// (the service owns the queue).
-    pub fn snapshot(&self, queue_depth: usize, peak_queue_depth: usize) -> MetricsSnapshot {
+    /// Point-in-time snapshot; queue depth/peak and the routing
+    /// threshold come from the caller (the service owns the queue and
+    /// the config).
+    pub fn snapshot(
+        &self,
+        queue_depth: usize,
+        peak_queue_depth: usize,
+        scalar_route_max_elements: usize,
+    ) -> MetricsSnapshot {
         let uptime = self.started_at.elapsed();
         let h = self.hists.lock().unwrap();
         let batches = self.batches.load(Ordering::Relaxed);
@@ -127,6 +164,11 @@ impl ServiceMetrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            quota_shed: self.quota_shed.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            routed_small: self.routed_small.load(Ordering::Relaxed),
+            scalar_route_max_elements,
             queue_depth,
             peak_queue_depth,
             batches,
@@ -172,6 +214,16 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Requests rejected by admission control.
     pub shed: u64,
+    /// Frames refused by the network front-end's per-tenant quotas.
+    pub quota_shed: u64,
+    /// Frames answered from the network front-end's response cache.
+    pub cache_hits: u64,
+    /// Cache lookups that missed (cache enabled, no entry).
+    pub cache_misses: u64,
+    /// Coalesced groups sent to the scalar loop by size-threshold routing.
+    pub routed_small: u64,
+    /// The routing threshold in force (0 = routing disabled).
+    pub scalar_route_max_elements: usize,
     pub queue_depth: usize,
     pub peak_queue_depth: usize,
     /// Coalesced groups flushed by workers.
@@ -198,6 +250,15 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "batches:  {} flushed, {:.1} lanes/batch mean",
             self.batches, self.mean_batch_lanes
+        )?;
+        writeln!(
+            f,
+            "net:      cache {} hit / {} miss | quota shed {} | routed-to-scalar {} (threshold {})",
+            self.cache_hits,
+            self.cache_misses,
+            self.quota_shed,
+            self.routed_small,
+            self.scalar_route_max_elements
         )?;
         writeln!(
             f,
@@ -236,12 +297,22 @@ mod tests {
         m.record_submitted();
         m.record_submitted();
         m.record_shed();
+        m.record_quota_shed();
+        m.record_cache_hit();
+        m.record_cache_miss();
+        m.record_cache_miss();
+        m.record_routed_small();
         m.record_batch(32, Some(1000));
         m.record_batch(16, None);
         m.record_completion(4096, &timing(50, 200));
-        let s = m.snapshot(3, 7);
+        let s = m.snapshot(3, 7, 512);
         assert_eq!(s.submitted, 2);
         assert_eq!(s.shed, 1);
+        assert_eq!(s.quota_shed, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 2);
+        assert_eq!(s.routed_small, 1);
+        assert_eq!(s.scalar_route_max_elements, 512);
         assert_eq!(s.completed, 1);
         assert_eq!(s.elements, 4096);
         assert_eq!(s.batches, 2);
@@ -262,7 +333,7 @@ mod tests {
         for _ in 0..900 {
             m.record_completion(1, &timing(0, 1000));
         }
-        let s = m.snapshot(0, 0);
+        let s = m.snapshot(0, 0, 0);
         let p50 = s.compute_us.p50;
         assert!((900.0..1150.0).contains(&p50), "p50 = {p50}");
         // Total-phase p99 within the log-bin resolution of 1100µs.
@@ -275,8 +346,8 @@ mod tests {
         let m = ServiceMetrics::new();
         m.record_submitted();
         m.record_completion(10, &timing(5, 10));
-        let text = m.snapshot(0, 1).to_string();
-        for needle in ["p50", "p95", "p99", "shed", "elem/s"] {
+        let text = m.snapshot(0, 1, 0).to_string();
+        for needle in ["p50", "p95", "p99", "shed", "elem/s", "cache", "quota"] {
             assert!(text.contains(needle), "missing {needle}: {text}");
         }
     }

@@ -44,6 +44,13 @@
 //! - **Shards share nothing on the compute path** — each worker owns its
 //!   backend (its own [`GaeHwSim`](crate::hwsim::GaeHwSim) row array for
 //!   `hwsim`), so N workers scale like N accelerator instances.
+//! - **Plane submissions are zero-copy** — `[T, B]` plane sets ride as
+//!   one shared [`PlaneSet`] and per-column [`Lane::Column`] strided
+//!   views (plane.rs), never gathered on the submitting thread; the
+//!   network front-end ([`crate::net`]) moves its decode buffers
+//!   straight into this path.
+//! - **Small groups route to the scalar loop** — see
+//!   [`ServiceConfig::scalar_route_max_elements`].
 //!
 //! Entry points: [`GaeService::start`] with a [`ServiceConfig`], then
 //! [`GaeService::submit`] (sync, fail-fast), [`GaeService::submit_blocking`]
@@ -55,6 +62,7 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod plane;
 pub mod queue;
 pub mod request;
 pub mod server;
@@ -62,6 +70,7 @@ pub mod worker;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile};
 pub use metrics::{LatencyQuantiles, MetricsSnapshot, ServiceMetrics};
+pub use plane::{Lane, PlaneSet};
 pub use queue::{BoundedQueue, PushError};
 pub use request::{GaeResponse, RequestTiming, ResponseHandle, ServiceError};
 pub use server::{GaeService, PlaneGae, PlanesPending, ServiceConfig};

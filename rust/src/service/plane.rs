@@ -1,0 +1,217 @@
+//! Zero-copy plane submission: shared `[T, B]` plane buffers and the
+//! borrowed column views the workers compute on.
+//!
+//! The pipelined trainer (and the network front-end) hands the service
+//! one iteration's timestep-major planes — `rewards [T·B]`, `values
+//! [(T+1)·B]`, `done_mask [T·B]`. The first-generation seam gathered
+//! each env column into its own [`Trajectory`] on the *submitting*
+//! thread: `B × 3` allocations plus `B` strided gather passes on the
+//! trainer's critical path. This module removes that copy entirely:
+//!
+//! - [`PlaneSet`] — the three planes, moved (not copied) into one
+//!   `Arc` at submission time;
+//! - [`Lane`] — the unit the queue carries: either an owned
+//!   [`Trajectory`] (the classic client path) or a **borrowed column**
+//!   of a shared `PlaneSet` (`planes[t * batch + col]` strided reads).
+//!
+//! Workers read lanes through the [`Lane::reward`]/[`Lane::value`]/
+//! [`Lane::done`] accessors, so the gather either disappears (the
+//! scalar backend streams the strides directly through
+//! [`gae_indexed`](crate::gae::reference::gae_indexed)) or happens once
+//! inside the worker where it is paid in parallel (tile packing,
+//! episode splitting). Results are bit-identical to the owned path: the
+//! accessors return the very same `f32` values the per-column gather
+//! would have copied.
+
+use crate::gae::Trajectory;
+use crate::service::request::ServiceError;
+use std::sync::Arc;
+
+/// A timestep-major `[T, B]` set of GAE input planes, shared (via `Arc`)
+/// by the per-column work items of one plane-shaped submission.
+#[derive(Debug, Clone)]
+pub struct PlaneSet {
+    /// Timesteps `T`.
+    pub t_len: usize,
+    /// Env columns `B`.
+    pub batch: usize,
+    /// `[T * B]` rewards.
+    pub rewards: Vec<f32>,
+    /// `[(T+1) * B]` values; row `T` bootstraps every column.
+    pub values: Vec<f32>,
+    /// `[T * B]` terminal mask (1.0 = done at that step).
+    pub done_mask: Vec<f32>,
+}
+
+impl PlaneSet {
+    /// Validate the geometry and take ownership of the plane buffers.
+    /// Shape errors mirror [`ServiceError::ShapeMismatch`]; a zero-area
+    /// plane set is an [`ServiceError::EmptyRequest`].
+    pub fn new(
+        t_len: usize,
+        batch: usize,
+        rewards: Vec<f32>,
+        values: Vec<f32>,
+        done_mask: Vec<f32>,
+    ) -> Result<PlaneSet, ServiceError> {
+        let check = |plane: &'static str, got: usize, want: usize| {
+            if got != want {
+                Err(ServiceError::ShapeMismatch { plane, got, want })
+            } else {
+                Ok(())
+            }
+        };
+        check("rewards", rewards.len(), t_len * batch)?;
+        check("values", values.len(), (t_len + 1) * batch)?;
+        check("done_mask", done_mask.len(), t_len * batch)?;
+        if t_len == 0 || batch == 0 {
+            return Err(ServiceError::EmptyRequest);
+        }
+        Ok(PlaneSet { t_len, batch, rewards, values, done_mask })
+    }
+
+    /// GAE elements per column × columns — the admission/quota cost unit.
+    pub fn elements(&self) -> usize {
+        self.t_len * self.batch
+    }
+}
+
+/// One lane of GAE input as the queue carries it: an owned trajectory or
+/// a borrowed column of a shared [`PlaneSet`].
+#[derive(Debug, Clone)]
+pub enum Lane {
+    /// A client-supplied trajectory, moved into the work item.
+    Owned(Trajectory),
+    /// Column `col` of a shared plane set — strided, never copied.
+    Column {
+        planes: Arc<PlaneSet>,
+        col: usize,
+    },
+}
+
+impl Lane {
+    /// Timesteps in this lane.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Lane::Owned(t) => t.len(),
+            Lane::Column { planes, .. } => planes.t_len,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reward at step `t` (`t < len`).
+    #[inline]
+    pub fn reward(&self, t: usize) -> f32 {
+        match self {
+            Lane::Owned(traj) => traj.rewards[t],
+            Lane::Column { planes, col } => planes.rewards[t * planes.batch + col],
+        }
+    }
+
+    /// Value at step `t` (`t <= len`; `t == len` is the bootstrap).
+    #[inline]
+    pub fn value(&self, t: usize) -> f32 {
+        match self {
+            Lane::Owned(traj) => traj.values[t],
+            Lane::Column { planes, col } => planes.values[t * planes.batch + col],
+        }
+    }
+
+    /// Terminal flag at step `t` (`t < len`).
+    #[inline]
+    pub fn done(&self, t: usize) -> bool {
+        match self {
+            Lane::Owned(traj) => traj.dones[t],
+            Lane::Column { planes, col } => {
+                planes.done_mask[t * planes.batch + col] == 1.0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Gen;
+
+    fn plane_set(g: &mut Gen, t_len: usize, batch: usize) -> PlaneSet {
+        PlaneSet::new(
+            t_len,
+            batch,
+            g.vec_normal_f32(t_len * batch, 0.0, 1.0),
+            g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0),
+            (0..t_len * batch)
+                .map(|_| if g.bool_p(0.1) { 1.0 } else { 0.0 })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn column_lane_reads_the_same_values_as_a_gathered_trajectory() {
+        let mut g = Gen::new(3);
+        let (t_len, batch) = (17, 5);
+        let planes = Arc::new(plane_set(&mut g, t_len, batch));
+        for col in 0..batch {
+            let gathered = Trajectory::new(
+                (0..t_len).map(|t| planes.rewards[t * batch + col]).collect(),
+                (0..=t_len).map(|t| planes.values[t * batch + col]).collect(),
+                (0..t_len)
+                    .map(|t| planes.done_mask[t * batch + col] == 1.0)
+                    .collect(),
+            );
+            let lane = Lane::Column { planes: Arc::clone(&planes), col };
+            assert_eq!(lane.len(), t_len);
+            for t in 0..t_len {
+                assert_eq!(lane.reward(t).to_bits(), gathered.rewards[t].to_bits());
+                assert_eq!(lane.done(t), gathered.dones[t]);
+            }
+            for t in 0..=t_len {
+                assert_eq!(lane.value(t).to_bits(), gathered.values[t].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn plane_set_validates_geometry() {
+        assert!(matches!(
+            PlaneSet::new(4, 2, vec![0.0; 7], vec![0.0; 10], vec![0.0; 8]),
+            Err(ServiceError::ShapeMismatch { plane: "rewards", got: 7, want: 8 })
+        ));
+        assert!(matches!(
+            PlaneSet::new(4, 2, vec![0.0; 8], vec![0.0; 9], vec![0.0; 8]),
+            Err(ServiceError::ShapeMismatch { plane: "values", .. })
+        ));
+        assert!(matches!(
+            PlaneSet::new(4, 2, vec![0.0; 8], vec![0.0; 10], vec![0.0; 7]),
+            Err(ServiceError::ShapeMismatch { plane: "done_mask", .. })
+        ));
+        assert_eq!(
+            PlaneSet::new(0, 0, vec![], vec![], vec![]).unwrap_err(),
+            ServiceError::EmptyRequest
+        );
+        let ok = PlaneSet::new(2, 3, vec![0.0; 6], vec![0.0; 9], vec![0.0; 6]).unwrap();
+        assert_eq!(ok.elements(), 6);
+    }
+
+    #[test]
+    fn owned_lane_passes_through() {
+        let traj = Trajectory::new(
+            vec![1.0, 2.0],
+            vec![0.5, 1.5, 2.5],
+            vec![false, true],
+        );
+        let lane = Lane::Owned(traj);
+        assert_eq!(lane.len(), 2);
+        assert!(!lane.is_empty());
+        assert_eq!(lane.reward(1), 2.0);
+        assert_eq!(lane.value(2), 2.5);
+        assert!(lane.done(1));
+        assert!(!lane.done(0));
+    }
+}

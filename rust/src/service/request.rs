@@ -6,7 +6,8 @@
 //! the simulated accelerator cycles of the coalesced batch the request
 //! rode in.
 
-use crate::gae::{GaeOutput, Trajectory};
+use crate::gae::GaeOutput;
+use crate::service::plane::Lane;
 use std::fmt;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -119,12 +120,13 @@ impl ResponseHandle {
     }
 }
 
-/// Internal queue entry: the request plus its reply channel.
+/// Internal queue entry: the request's lanes (owned trajectories or
+/// borrowed plane columns) plus its reply channel.
 pub(crate) struct WorkItem {
     pub id: u64,
-    pub trajectories: Vec<Trajectory>,
-    /// Cached `trajectories.len()` — the batcher's lane budget unit.
-    pub lanes: usize,
+    pub lanes: Vec<Lane>,
+    /// Cached `lanes.len()` — the batcher's lane budget unit.
+    pub lane_count: usize,
     pub enqueued_at: Instant,
     pub tx: mpsc::Sender<GaeResponse>,
 }

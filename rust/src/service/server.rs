@@ -6,6 +6,7 @@ use crate::gae::{GaeParams, Trajectory};
 use crate::hwsim::{GaeHwSim, SimConfig};
 use crate::service::batcher::{BatcherConfig, DynamicBatcher};
 use crate::service::metrics::{MetricsSnapshot, ServiceMetrics};
+use crate::service::plane::{Lane, PlaneSet};
 use crate::service::queue::{BoundedQueue, PushError};
 use crate::service::request::{GaeResponse, ResponseHandle, ServiceError, WorkItem};
 use crate::service::worker::{worker_loop, WorkerContext};
@@ -28,6 +29,11 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// Systolic rows per worker's private `hwsim` instance.
     pub sim_rows: usize,
+    /// Size-threshold backend routing: coalesced groups of at most this
+    /// many GAE elements run the scalar loop instead of the configured
+    /// backend (small groups don't amortize tile packing or the
+    /// simulator's loader pipeline). 0 disables routing.
+    pub scalar_route_max_elements: usize,
     /// GAE hyper-parameters applied to every request.
     pub gae: GaeParams,
 }
@@ -40,6 +46,7 @@ impl Default for ServiceConfig {
             queue_capacity: 256,
             batcher: BatcherConfig::default(),
             sim_rows: 64,
+            scalar_route_max_elements: 0,
             gae: GaeParams::default(),
         }
     }
@@ -90,6 +97,7 @@ impl GaeService {
                     })
                 }),
                 batcher: DynamicBatcher::new(config.batcher),
+                scalar_route_max_elements: config.scalar_route_max_elements,
                 queue: Arc::clone(&queue),
                 metrics: Arc::clone(&metrics),
             };
@@ -111,27 +119,23 @@ impl GaeService {
 
     fn make_item(
         &self,
-        trajectories: Vec<Trajectory>,
+        lanes: Vec<Lane>,
     ) -> Result<(WorkItem, mpsc::Receiver<GaeResponse>), ServiceError> {
-        if trajectories.is_empty() || trajectories.iter().any(|t| t.is_empty()) {
+        if lanes.is_empty() || lanes.iter().any(|l| l.is_empty()) {
             return Err(ServiceError::EmptyRequest);
         }
         self.metrics.record_submitted();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let lanes = trajectories.len();
-        let item = WorkItem { id, trajectories, lanes, enqueued_at: Instant::now(), tx };
+        let lane_count = lanes.len();
+        let item = WorkItem { id, lanes, lane_count, enqueued_at: Instant::now(), tx };
         Ok((item, rx))
     }
 
-    /// Admit a request without waiting for its result. Admission control
-    /// sheds with [`ServiceError::Overloaded`] when the queue is at its
-    /// depth limit — the open-loop / fail-fast path.
-    pub fn enqueue(
-        &self,
-        trajectories: Vec<Trajectory>,
-    ) -> Result<ResponseHandle, ServiceError> {
-        let (item, rx) = self.make_item(trajectories)?;
+    /// Fail-fast admission of a prepared lane set (shared by the public
+    /// trajectory path and the plane-column path).
+    fn enqueue_lanes(&self, lanes: Vec<Lane>) -> Result<ResponseHandle, ServiceError> {
+        let (item, rx) = self.make_item(lanes)?;
         let id = item.id;
         match self.queue.try_push(item) {
             Ok(()) => Ok(ResponseHandle { id, rx }),
@@ -149,14 +153,12 @@ impl GaeService {
         }
     }
 
-    /// Admit with **backpressure**: block until a queue slot frees
-    /// instead of shedding — the closed-loop client path. Fails only
-    /// when the request is empty or the service is shutting down.
-    pub fn enqueue_blocking(
+    /// Backpressured admission of a prepared lane set.
+    fn enqueue_lanes_blocking(
         &self,
-        trajectories: Vec<Trajectory>,
+        lanes: Vec<Lane>,
     ) -> Result<ResponseHandle, ServiceError> {
-        let (item, rx) = self.make_item(trajectories)?;
+        let (item, rx) = self.make_item(lanes)?;
         let id = item.id;
         match self.queue.push(item) {
             Ok(()) => Ok(ResponseHandle { id, rx }),
@@ -165,6 +167,26 @@ impl GaeService {
                 Err(ServiceError::ShuttingDown)
             }
         }
+    }
+
+    /// Admit a request without waiting for its result. Admission control
+    /// sheds with [`ServiceError::Overloaded`] when the queue is at its
+    /// depth limit — the open-loop / fail-fast path.
+    pub fn enqueue(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<ResponseHandle, ServiceError> {
+        self.enqueue_lanes(trajectories.into_iter().map(Lane::Owned).collect())
+    }
+
+    /// Admit with **backpressure**: block until a queue slot frees
+    /// instead of shedding — the closed-loop client path. Fails only
+    /// when the request is empty or the service is shutting down.
+    pub fn enqueue_blocking(
+        &self,
+        trajectories: Vec<Trajectory>,
+    ) -> Result<ResponseHandle, ServiceError> {
+        self.enqueue_lanes_blocking(trajectories.into_iter().map(Lane::Owned).collect())
     }
 
     /// Synchronous fail-fast request: admit (or shed), wait, return.
@@ -211,6 +233,12 @@ impl GaeService {
     /// `[T, B]` planes on [`PlanesPending::wait`]. Admission is
     /// backpressured, never shed — trainer iterations must all complete.
     ///
+    /// **Zero-copy**: the borrowed planes are copied once into a shared
+    /// [`PlaneSet`] and every column rides as a strided
+    /// [`Lane::Column`] view — no per-column gather on the submitting
+    /// thread. Callers that own their planes skip even that single copy
+    /// via [`GaeService::submit_plane_set`].
+    ///
     /// The per-column math is bit-identical to the inline
     /// [`crate::coordinator::gae_stage::run_gae_stage`] on the same
     /// backend: scalar/hwsim mask or split at dones exactly as the
@@ -224,27 +252,55 @@ impl GaeService {
         values: &[f32],
         done_mask: &[f32],
     ) -> Result<PlanesPending, ServiceError> {
-        let check = |plane: &'static str, got: usize, want: usize| {
-            if got != want {
-                Err(ServiceError::ShapeMismatch { plane, got, want })
-            } else {
-                Ok(())
-            }
-        };
-        check("rewards", rewards.len(), t_len * batch)?;
-        check("values", values.len(), (t_len + 1) * batch)?;
-        check("done_mask", done_mask.len(), t_len * batch)?;
-        if t_len == 0 || batch == 0 {
-            return Err(ServiceError::EmptyRequest);
-        }
+        let planes = PlaneSet::new(
+            t_len,
+            batch,
+            rewards.to_vec(),
+            values.to_vec(),
+            done_mask.to_vec(),
+        )?;
+        self.submit_plane_set(planes)
+    }
+
+    /// Zero-copy plane submission: take ownership of a validated
+    /// [`PlaneSet`] (no plane copies at all — the network front-end's
+    /// decode buffers land here by move) and enqueue one borrowed-column
+    /// lane per env column, backpressured.
+    pub fn submit_plane_set(
+        &self,
+        planes: PlaneSet,
+    ) -> Result<PlanesPending, ServiceError> {
+        self.submit_plane_set_inner(planes, true)
+    }
+
+    /// Fail-fast variant of [`GaeService::submit_plane_set`]: sheds with
+    /// [`ServiceError::Overloaded`] the moment admission control refuses
+    /// a column. Columns admitted before the refusal are abandoned —
+    /// exactly the dropped-[`ResponseHandle`] semantics, so their
+    /// results are computed and discarded (overload-path waste only).
+    pub fn try_submit_plane_set(
+        &self,
+        planes: PlaneSet,
+    ) -> Result<PlanesPending, ServiceError> {
+        self.submit_plane_set_inner(planes, false)
+    }
+
+    fn submit_plane_set_inner(
+        &self,
+        planes: PlaneSet,
+        blocking: bool,
+    ) -> Result<PlanesPending, ServiceError> {
+        let (t_len, batch) = (planes.t_len, planes.batch);
+        let planes = Arc::new(planes);
         let mut handles = Vec::with_capacity(batch);
-        for i in 0..batch {
-            let column = Trajectory::new(
-                (0..t_len).map(|t| rewards[t * batch + i]).collect(),
-                (0..=t_len).map(|t| values[t * batch + i]).collect(),
-                (0..t_len).map(|t| done_mask[t * batch + i] == 1.0).collect(),
-            );
-            handles.push(self.enqueue_blocking(vec![column])?);
+        for col in 0..batch {
+            let lane = Lane::Column { planes: Arc::clone(&planes), col };
+            let handle = if blocking {
+                self.enqueue_lanes_blocking(vec![lane])?
+            } else {
+                self.enqueue_lanes(vec![lane])?
+            };
+            handles.push(handle);
         }
         Ok(PlanesPending { t_len, batch, handles })
     }
@@ -260,8 +316,17 @@ impl GaeService {
 
     /// Frozen metrics view (counters, shed, latency quantiles, elem/s).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics
-            .snapshot(self.queue.len(), self.queue.peak_depth())
+        self.metrics.snapshot(
+            self.queue.len(),
+            self.queue.peak_depth(),
+            self.config.scalar_route_max_elements,
+        )
+    }
+
+    /// The live metrics recorder — the network front-end records its
+    /// cache/quota events here so one snapshot covers the whole stack.
+    pub(crate) fn metrics_handle(&self) -> &ServiceMetrics {
+        &self.metrics
     }
 
     /// Stop admitting, drain accepted work, join the workers.

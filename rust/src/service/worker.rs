@@ -9,14 +9,28 @@
 //! backend — a scalar loop, a batched-CPU engine, or a private
 //! [`GaeHwSim`] instance — N workers model N independent accelerator
 //! row-arrays on one SoC, with zero shared state on the compute path.
+//!
+//! Lanes arrive as [`Lane`]s — owned trajectories or borrowed columns
+//! of a shared plane set (the zero-copy submission path) — and are read
+//! through the lane accessors, so neither representation is gathered
+//! until (and unless) a backend needs a contiguous layout.
+//!
+//! **Size-threshold routing**: when
+//! [`ServiceConfig::scalar_route_max_elements`](crate::service::ServiceConfig)
+//! is nonzero, coalesced groups at or below that many GAE elements run
+//! the scalar loop instead of the configured backend — small groups
+//! don't amortize tile packing or the simulator's loader pipeline, so
+//! routing them to the plain loop is strictly cheaper. Routed groups
+//! are counted in the metrics (`routed_small`) and report no `hw_cycles`.
 
 use crate::coordinator::gae_stage::{split_at_dones, GaeBackend};
-use crate::gae::reference::gae_trajectory;
 use crate::gae::batched::gae_batched;
+use crate::gae::reference::gae_indexed;
 use crate::gae::{GaeOutput, GaeParams, Trajectory};
 use crate::hwsim::GaeHwSim;
 use crate::service::batcher::{tile_lanes, unpack_lanes, DynamicBatcher, PaddedTile};
 use crate::service::metrics::ServiceMetrics;
+use crate::service::plane::Lane;
 use crate::service::queue::BoundedQueue;
 use crate::service::request::{GaeResponse, RequestTiming, WorkItem};
 use std::sync::Arc;
@@ -30,6 +44,9 @@ pub(crate) struct WorkerContext {
     /// Private accelerator model (hwsim backend only).
     pub sim: Option<GaeHwSim>,
     pub batcher: DynamicBatcher,
+    /// Size-threshold routing: groups of at most this many elements run
+    /// the scalar loop (0 disables routing).
+    pub scalar_route_max_elements: usize,
     pub queue: Arc<BoundedQueue<WorkItem>>,
     pub metrics: Arc<ServiceMetrics>,
 }
@@ -45,8 +62,8 @@ pub(crate) fn worker_loop(ctx: WorkerContext) {
 
 fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>, batch_seq: u64) {
     let picked_at = Instant::now();
-    let lanes: Vec<&Trajectory> =
-        group.iter().flat_map(|item| item.trajectories.iter()).collect();
+    let lanes: Vec<&Lane> =
+        group.iter().flat_map(|item| item.lanes.iter()).collect();
     let total_lanes = lanes.len();
 
     let compute_start = Instant::now();
@@ -57,7 +74,7 @@ fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>, batch_seq: u64) {
 
     // Hand each request its slice of the lane outputs, input order.
     for item in group {
-        let rest = outputs.split_off(item.lanes);
+        let rest = outputs.split_off(item.lane_count);
         let item_outputs = std::mem::replace(&mut outputs, rest);
         let elements: usize = item_outputs.iter().map(|o| o.advantages.len()).sum();
         let timing = RequestTiming {
@@ -79,20 +96,43 @@ fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>, batch_seq: u64) {
     debug_assert!(outputs.is_empty(), "every lane output must be consumed");
 }
 
+/// The scalar loop over one lane (owned or strided column) — delegates
+/// to the shared indexed kernel, so the bits match [`gae_trajectory`]
+/// (crate::gae::reference::gae_trajectory) on the gathered equivalent.
+fn gae_lane(params: &GaeParams, lane: &Lane) -> GaeOutput {
+    gae_indexed(
+        params,
+        lane.len(),
+        |t| lane.reward(t),
+        |t| lane.value(t),
+        |t| lane.done(t),
+    )
+}
+
+/// Pick the backend for one coalesced group: the configured one, unless
+/// size-threshold routing sends a small group to the scalar loop.
+fn route_backend(ctx: &WorkerContext, lanes: &[&Lane]) -> GaeBackend {
+    if ctx.scalar_route_max_elements > 0 && ctx.backend != GaeBackend::Scalar {
+        let elements: usize = lanes.iter().map(|l| l.len()).sum();
+        if elements <= ctx.scalar_route_max_elements {
+            ctx.metrics.record_routed_small();
+            return GaeBackend::Scalar;
+        }
+    }
+    ctx.backend
+}
+
 /// Compute GAE for a flat list of lanes on this worker's backend.
 /// Returns per-lane outputs (input order) and, for hwsim, the simulated
 /// cycle count of the coalesced batch.
 fn compute_lanes(
     ctx: &WorkerContext,
-    lanes: &[&Trajectory],
+    lanes: &[&Lane],
 ) -> (Vec<GaeOutput>, Option<u64>) {
-    match ctx.backend {
+    match route_backend(ctx, lanes) {
         GaeBackend::Scalar => {
             // The per-trajectory CPU loop — the baseline shape.
-            let outs = lanes
-                .iter()
-                .map(|traj| gae_trajectory(&ctx.params, traj))
-                .collect();
+            let outs = lanes.iter().map(|lane| gae_lane(&ctx.params, lane)).collect();
             (outs, None)
         }
         GaeBackend::Batched | GaeBackend::Hlo => {
@@ -100,7 +140,7 @@ fn compute_lanes(
             // is rejected at service start; the arm keeps the match total.)
             let mut outs = Vec::with_capacity(lanes.len());
             for tile_set in tile_lanes(lanes, ctx.batcher.config.tile_lanes) {
-                let (batch, lens) = PaddedTile::from_lanes(&tile_set).into_parts();
+                let (batch, lens) = PaddedTile::from_lane_views(&tile_set).into_parts();
                 let out = gae_batched(&ctx.params, &batch);
                 outs.extend(unpack_lanes(&lens, batch.batch, &out));
             }
@@ -112,12 +152,12 @@ fn compute_lanes(
             // dones (same preprocessing as the trainer's GAE stage).
             let mut segments: Vec<Trajectory> = Vec::new();
             let mut index: Vec<(usize, usize, usize)> = Vec::new(); // (lane, start, len)
-            for (lane_idx, traj) in lanes.iter().enumerate() {
+            for (lane_idx, lane) in lanes.iter().enumerate() {
                 for (start, seg) in split_at_dones(
-                    |t| traj.rewards[t],
-                    |t| traj.values[t],
-                    |t| traj.dones[t],
-                    traj.len(),
+                    |t| lane.reward(t),
+                    |t| lane.value(t),
+                    |t| lane.done(t),
+                    lane.len(),
                 ) {
                     index.push((lane_idx, start, seg.len()));
                     segments.push(seg);
@@ -127,9 +167,9 @@ fn compute_lanes(
             // Stitch segments back into per-lane outputs.
             let mut outs: Vec<GaeOutput> = lanes
                 .iter()
-                .map(|traj| GaeOutput {
-                    advantages: vec![0.0; traj.len()],
-                    rewards_to_go: vec![0.0; traj.len()],
+                .map(|lane| GaeOutput {
+                    advantages: vec![0.0; lane.len()],
+                    rewards_to_go: vec![0.0; lane.len()],
                 })
                 .collect();
             for ((lane_idx, start, len), seg_out) in
@@ -148,8 +188,10 @@ fn compute_lanes(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gae::reference::gae_trajectory;
     use crate::hwsim::SimConfig;
     use crate::service::batcher::BatcherConfig;
+    use crate::service::plane::PlaneSet;
     use crate::testing::{check, Gen};
 
     fn ctx(backend: GaeBackend) -> WorkerContext {
@@ -165,25 +207,32 @@ mod tests {
                 tile_lanes: 4,
                 ..BatcherConfig::default()
             }),
+            scalar_route_max_elements: 0,
             queue: Arc::new(BoundedQueue::new(1)),
             metrics: Arc::new(ServiceMetrics::new()),
         }
     }
 
+    fn random_lanes(g: &mut Gen) -> Vec<Trajectory> {
+        (0..g.usize_in(1, 10))
+            .map(|_| {
+                let t_len = g.usize_in(1, 24);
+                Trajectory::new(
+                    g.vec_normal_f32(t_len, 0.0, 1.0),
+                    g.vec_normal_f32(t_len + 1, 0.0, 1.0),
+                    (0..t_len).map(|_| g.bool_p(0.1)).collect(),
+                )
+            })
+            .collect()
+    }
+
     #[test]
     fn every_backend_matches_the_scalar_reference() {
         check("service backends == reference", 15, |g| {
-            let trajs: Vec<Trajectory> = (0..g.usize_in(1, 10))
-                .map(|_| {
-                    let t_len = g.usize_in(1, 24);
-                    Trajectory::new(
-                        g.vec_normal_f32(t_len, 0.0, 1.0),
-                        g.vec_normal_f32(t_len + 1, 0.0, 1.0),
-                        (0..t_len).map(|_| g.bool_p(0.1)).collect(),
-                    )
-                })
-                .collect();
-            let lanes: Vec<&Trajectory> = trajs.iter().collect();
+            let trajs = random_lanes(g);
+            let owned: Vec<Lane> =
+                trajs.iter().cloned().map(Lane::Owned).collect();
+            let lanes: Vec<&Lane> = owned.iter().collect();
             for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
                 let c = ctx(backend);
                 let (outs, cycles) = compute_lanes(&c, &lanes);
@@ -206,5 +255,90 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn column_lanes_match_owned_lanes_bitwise() {
+        // The zero-copy contract: a borrowed plane column computes the
+        // exact bits of its gathered per-column trajectory, per backend.
+        check("column lanes == owned lanes (bitwise)", 8, |g| {
+            let (t_len, batch) = (g.usize_in(2, 24), g.usize_in(1, 5));
+            let planes = Arc::new(
+                PlaneSet::new(
+                    t_len,
+                    batch,
+                    g.vec_normal_f32(t_len * batch, 0.0, 1.0),
+                    g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0),
+                    (0..t_len * batch)
+                        .map(|_| if g.bool_p(0.1) { 1.0 } else { 0.0 })
+                        .collect(),
+                )
+                .unwrap(),
+            );
+            let columns: Vec<Lane> = (0..batch)
+                .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
+                .collect();
+            let gathered: Vec<Lane> = (0..batch)
+                .map(|i| {
+                    Lane::Owned(Trajectory::new(
+                        (0..t_len).map(|t| planes.rewards[t * batch + i]).collect(),
+                        (0..=t_len).map(|t| planes.values[t * batch + i]).collect(),
+                        (0..t_len)
+                            .map(|t| planes.done_mask[t * batch + i] == 1.0)
+                            .collect(),
+                    ))
+                })
+                .collect();
+            for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
+                let c = ctx(backend);
+                let col_refs: Vec<&Lane> = columns.iter().collect();
+                let own_refs: Vec<&Lane> = gathered.iter().collect();
+                let (col_out, _) = compute_lanes(&c, &col_refs);
+                let (own_out, _) = compute_lanes(&c, &own_refs);
+                for (a, b) in col_out.iter().zip(&own_out) {
+                    for t in 0..a.advantages.len() {
+                        assert_eq!(
+                            a.advantages[t].to_bits(),
+                            b.advantages[t].to_bits(),
+                            "{backend:?} t={t}"
+                        );
+                        assert_eq!(
+                            a.rewards_to_go[t].to_bits(),
+                            b.rewards_to_go[t].to_bits(),
+                            "{backend:?} rtg t={t}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn small_groups_route_to_scalar_and_are_counted() {
+        let mut g = Gen::new(9);
+        let trajs = random_lanes(&mut g);
+        let owned: Vec<Lane> = trajs.iter().cloned().map(Lane::Owned).collect();
+        let lanes: Vec<&Lane> = owned.iter().collect();
+        let elements: usize = trajs.iter().map(|t| t.len()).sum();
+
+        // Threshold above the group size: routed (no cycles reported).
+        let mut c = ctx(GaeBackend::HwSim);
+        c.scalar_route_max_elements = elements;
+        let (outs, cycles) = compute_lanes(&c, &lanes);
+        assert!(cycles.is_none(), "routed group must not report hw cycles");
+        assert_eq!(c.metrics.snapshot(0, 0, c.scalar_route_max_elements).routed_small, 1);
+        for (traj, got) in trajs.iter().zip(&outs) {
+            let want = gae_trajectory(&GaeParams::default(), traj);
+            for t in 0..traj.len() {
+                assert_eq!(got.advantages[t].to_bits(), want.advantages[t].to_bits());
+            }
+        }
+
+        // Threshold below the group size (or 0 = disabled): not routed.
+        let mut c = ctx(GaeBackend::HwSim);
+        c.scalar_route_max_elements = elements - 1;
+        let (_, cycles) = compute_lanes(&c, &lanes);
+        assert!(cycles.unwrap() > 0);
+        assert_eq!(c.metrics.snapshot(0, 0, 0).routed_small, 0);
     }
 }

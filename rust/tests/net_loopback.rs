@@ -1,0 +1,313 @@
+//! Loopback integration of the network front-end: a real TCP socket
+//! between [`NetClient`] and [`NetServer`] over a live `GaeService` —
+//! f32 bit-identity against in-process submission, pipelined
+//! out-of-order completion, response-cache hits, per-tenant quota
+//! refusals, admission-control sheds, and malformed-frame handling.
+
+use heppo::coordinator::GaeBackend;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::net::{
+    ErrorKind, NetClient, NetClientConfig, NetError, NetServer, NetServerConfig,
+    QuotaConfig,
+};
+use heppo::quant::CodecKind;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::testing::Gen;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers,
+            backend,
+            queue_capacity,
+            batcher: BatcherConfig {
+                max_batch_lanes: 64,
+                tile_lanes: 16,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn planes(g: &mut Gen, t_len: usize, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+    let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+    let done_mask = (0..t_len * batch)
+        .map(|_| if g.bool_p(0.05) { 1.0 } else { 0.0 })
+        .collect();
+    (rewards, values, done_mask)
+}
+
+fn f32_client(addr: &str) -> NetClient {
+    NetClient::connect(
+        addr,
+        NetClientConfig {
+            tenant: "test".to_string(),
+            codec: CodecKind::Exp1Baseline,
+            bits: 8,
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn f32_codec_is_bit_identical_to_in_process_submission() {
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let client = f32_client(&server.local_addr().to_string());
+
+    let mut g = Gen::new(1);
+    for case in 0..4 {
+        let (t_len, batch) = (g.usize_in(1, 40), g.usize_in(1, 6));
+        let (rewards, values, done_mask) = planes(&mut g, t_len, batch);
+        let local = svc
+            .submit_planes(t_len, batch, &rewards, &values, &done_mask)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let remote = client
+            .call_planes(t_len, batch, &rewards, &values, &done_mask)
+            .unwrap();
+        assert!(!remote.cache_hit);
+        assert_eq!(remote.advantages.len(), t_len * batch);
+        for (i, (a, b)) in remote.advantages.iter().zip(&local.advantages).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} adv {i}");
+        }
+        for (i, (a, b)) in
+            remote.rewards_to_go.iter().zip(&local.rewards_to_go).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} rtg {i}");
+        }
+    }
+    assert_eq!(client.wire_stats().frames, 4);
+    server.shutdown();
+}
+
+#[test]
+fn pipelined_frames_complete_out_of_order_safely() {
+    let svc = service(4, GaeBackend::Batched, 256);
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
+            .unwrap();
+    let client = f32_client(&server.local_addr().to_string());
+
+    // Mixed sizes so completion order differs from submission order;
+    // every result must still land on its own sequence number.
+    let mut g = Gen::new(7);
+    let mut expected = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..24 {
+        let t_len = if i % 3 == 0 { 200 } else { 4 };
+        let (rewards, values, done_mask) = planes(&mut g, t_len, 2);
+        let want = svc
+            .submit_planes(t_len, 2, &rewards, &values, &done_mask)
+            .unwrap()
+            .wait()
+            .unwrap();
+        expected.push(want);
+        handles.push(
+            client.submit_planes(t_len, 2, &rewards, &values, &done_mask).unwrap(),
+        );
+    }
+    for (i, (handle, want)) in handles.into_iter().zip(expected).enumerate() {
+        let got = handle.wait().unwrap();
+        assert_eq!(got.advantages.len(), want.advantages.len(), "frame {i}");
+        for (a, b) in got.advantages.iter().zip(&want.advantages) {
+            assert_eq!(a.to_bits(), b.to_bits(), "frame {i}");
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn identical_quantized_payloads_hit_the_response_cache() {
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 64, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let client = NetClient::connect(
+        &server.local_addr().to_string(),
+        NetClientConfig::default(), // exp5 @ 8 bits — the quantized path
+    )
+    .unwrap();
+
+    let mut g = Gen::new(3);
+    let (t_len, batch) = (24, 3);
+    let (rewards, values, done_mask) = planes(&mut g, t_len, batch);
+    let first = client.call_planes(t_len, batch, &rewards, &values, &done_mask).unwrap();
+    assert!(!first.cache_hit, "first frame must compute");
+    let second = client.call_planes(t_len, batch, &rewards, &values, &done_mask).unwrap();
+    assert!(second.cache_hit, "identical payload must hit the cache");
+    // Cached responses replay the original result exactly.
+    for (a, b) in first.advantages.iter().zip(&second.advantages) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // A different payload misses again.
+    let (r2, v2, d2) = planes(&mut g, t_len, batch);
+    assert!(!client.call_planes(t_len, batch, &r2, &v2, &d2).unwrap().cache_hit);
+
+    let snap = svc.metrics();
+    assert_eq!(snap.cache_hits, 1);
+    assert_eq!(snap.cache_misses, 2);
+    server.shutdown();
+}
+
+#[test]
+fn per_tenant_quotas_refuse_with_typed_error_frames() {
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let (t_len, batch) = (16, 4); // 64 elements per frame
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            quota: Some(QuotaConfig {
+                elements_per_sec: 0.0, // no refill: a pure burst budget
+                burst_elements: (2 * t_len * batch) as f64,
+            }),
+            cache_entries: 0,
+            shed_on_overload: true,
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let limited = NetClient::connect(
+        &addr,
+        NetClientConfig { tenant: "hog".to_string(), ..NetClientConfig::default() },
+    )
+    .unwrap();
+    let mut g = Gen::new(5);
+    // Exactly two frames fit the burst; the third must be refused.
+    for i in 0..2 {
+        let (r, v, d) = planes(&mut g, t_len, batch);
+        limited.call_planes(t_len, batch, &r, &v, &d).unwrap_or_else(|e| {
+            panic!("frame {i} within budget refused: {e}")
+        });
+    }
+    let (r, v, d) = planes(&mut g, t_len, batch);
+    let err = limited.call_planes(t_len, batch, &r, &v, &d).unwrap_err();
+    assert_eq!(err.remote_kind(), Some(ErrorKind::Quota), "{err}");
+
+    // Another tenant on the same server has its own untouched bucket.
+    let fresh = NetClient::connect(
+        &addr,
+        NetClientConfig { tenant: "polite".to_string(), ..NetClientConfig::default() },
+    )
+    .unwrap();
+    let (r, v, d) = planes(&mut g, t_len, batch);
+    fresh.call_planes(t_len, batch, &r, &v, &d).unwrap();
+
+    assert_eq!(svc.metrics().quota_shed, 1);
+    server.shutdown();
+}
+
+#[test]
+fn overload_sheds_with_typed_error_frames() {
+    // One worker pinned busy + a capacity-2 queue: an 8-column frame
+    // cannot fully admit, so fail-fast admission must shed it.
+    let svc = service(1, GaeBackend::Scalar, 2);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let client = f32_client(&server.local_addr().to_string());
+
+    // Pin the worker: a large request it will be computing while the
+    // frame's columns try to enqueue.
+    let mut g = Gen::new(11);
+    let big: Vec<Trajectory> = (0..8)
+        .map(|_| {
+            Trajectory::without_dones(
+                g.vec_normal_f32(600_000, 0.0, 1.0),
+                g.vec_normal_f32(600_001, 0.0, 1.0),
+            )
+        })
+        .collect();
+    let busy = svc.enqueue(big).unwrap();
+
+    let mut shed = 0;
+    for _ in 0..4 {
+        let (r, v, d) = planes(&mut g, 8, 8);
+        match client.call_planes(8, 8, &r, &v, &d) {
+            Err(e) if e.remote_kind() == Some(ErrorKind::Shed) => shed += 1,
+            Err(e) => panic!("unexpected failure: {e}"),
+            Ok(_) => {}
+        }
+    }
+    assert!(shed > 0, "an 8-column frame against a capacity-2 queue must shed");
+    assert!(svc.metrics().shed > 0);
+    busy.wait().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn malformed_frames_get_a_typed_error_and_a_clean_close() {
+    use heppo::net::wire;
+    use std::io::Write;
+
+    let svc = service(1, GaeBackend::Scalar, 16);
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
+            .unwrap();
+    let mut raw = std::net::TcpStream::connect(server.local_addr()).unwrap();
+
+    // A length-prefixed frame of garbage: structurally a frame, but the
+    // checksum cannot match.
+    let garbage = [0xAAu8; 64];
+    raw.write_all(&(garbage.len() as u32).to_le_bytes()).unwrap();
+    raw.write_all(&garbage).unwrap();
+    raw.flush().unwrap();
+
+    let mut reader = std::io::BufReader::new(raw.try_clone().unwrap());
+    let frame = wire::read_frame(&mut reader).unwrap().expect("error frame");
+    match wire::decode_frame(&frame).unwrap() {
+        wire::Frame::Error(err) => {
+            assert_eq!(err.seq, 0, "framing errors are connection-level");
+            assert_eq!(err.kind, ErrorKind::Malformed);
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    // The server closes the connection after a framing error.
+    assert!(wire::read_frame(&mut reader).unwrap().is_none());
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_fails_pending_calls_instead_of_hanging() {
+    let svc = service(1, GaeBackend::Scalar, 16);
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
+            .unwrap();
+    let client = f32_client(&server.local_addr().to_string());
+    let mut g = Gen::new(13);
+    let (r, v, d) = planes(&mut g, 8, 2);
+    // Sanity round trip, then kill the server and submit again.
+    client.call_planes(8, 2, &r, &v, &d).unwrap();
+    server.shutdown();
+    // The submit may fail at write time or come back as a dead channel;
+    // either way it must be an error, promptly, not a hang.
+    match client.submit_planes(8, 2, &r, &v, &d) {
+        Ok(pending) => {
+            assert!(pending.wait().is_err());
+        }
+        Err(e) => {
+            assert!(matches!(e, NetError::Io(_) | NetError::Disconnected), "{e}");
+        }
+    }
+}

@@ -29,6 +29,7 @@ fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> GaeSer
             max_wait: Duration::from_micros(100),
         },
         sim_rows: 16,
+        scalar_route_max_elements: 0,
         gae: GaeParams::default(),
     })
     .unwrap()
@@ -195,6 +196,7 @@ fn admission_control_sheds_when_the_queue_is_at_its_limit() {
             max_wait: Duration::from_micros(1),
         },
         sim_rows: 16,
+        scalar_route_max_elements: 0,
         gae: GaeParams::default(),
     })
     .unwrap();
