@@ -1,0 +1,376 @@
+//! Worker hot-path microbench: the slab fast path vs the scratch-packed
+//! tile vs the seed-shaped per-group tile build, across group shapes.
+//!
+//! Three modes, all computing the identical group of lanes:
+//!
+//! - **slab** — `slab_of` detection + `gae_batched_strided_into`
+//!   directly on the shared `PlaneSet` (aligned groups only): zero plane
+//!   bytes gathered, zero steady-state allocations.
+//! - **packed** — `PaddedTile::pack_lane_views` into a reused scratch
+//!   tile + the same kernel into reused output planes: a full `[T, B]`
+//!   gather per group, zero steady-state allocations.
+//! - **seed** — `PaddedTile::from_lane_views` + `gae_batched`, the
+//!   pre-scratch worker path: the same gather plus ≥ 4 fresh plane
+//!   allocations per group.
+//!
+//! Each row reports ns/group, sustained element throughput, **bytes
+//! gathered per group** (analytic: the tile planes copied), and
+//! **allocations per group** in the mode-dependent prep+kernel section,
+//! measured with a counting global allocator after a warm-up pass (the
+//! per-lane response vectors of the unpack are identical across modes
+//! and excluded). Emits a markdown table plus the standard CSV and
+//! JSONL rows under `results/`.
+//!
+//! Shape checks (the acceptance bar of the slab work): the slab mode
+//! must gather zero bytes and allocate zero times per group in steady
+//! state, the seed mode must show the `[T, B]` copy and ≥ 4 allocations
+//! it exists to retire, and all three modes must agree bit-for-bit.
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep; `HEPPO_BENCH_ITERS=N` caps
+//! the per-row iteration count (CI smoke-runs use both).
+
+use heppo::bench::format_si;
+use heppo::gae::batched::{gae_batched, gae_batched_strided_into};
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::service::batcher::{unpack_lanes_into, PaddedTile};
+use heppo::service::plane::{slab_of, Lane, PlaneSet};
+use heppo::service::WorkerScratch;
+use heppo::testing::Gen;
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Counting pass-through allocator: every alloc/realloc ticks a global
+/// counter, so a measured section's allocation count is exact.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Slab,
+    Packed,
+    Seed,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Slab => "slab",
+            Mode::Packed => "packed",
+            Mode::Seed => "seed",
+        }
+    }
+}
+
+struct RowResult {
+    ns_per_group: f64,
+    elem_per_sec: f64,
+    gathered_bytes_per_group: u64,
+    prep_allocs_per_group: f64,
+    /// First-iteration outputs, for the cross-mode bit-identity check.
+    outs: Vec<heppo::gae::GaeOutput>,
+}
+
+fn aligned_lanes(g: &mut Gen, t_len: usize, width: usize) -> Vec<Lane> {
+    let planes = Arc::new(
+        PlaneSet::new(
+            t_len,
+            width,
+            g.vec_normal_f32(t_len * width, 0.0, 1.0),
+            g.vec_normal_f32((t_len + 1) * width, 0.0, 1.0),
+            (0..t_len * width)
+                .map(|_| if g.bool_p(0.05) { 1.0 } else { 0.0 })
+                .collect(),
+        )
+        .unwrap(),
+    );
+    (0..width)
+        .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
+        .collect()
+}
+
+fn ragged_lanes(g: &mut Gen, t_len: usize, width: usize) -> Vec<Lane> {
+    (0..width)
+        .map(|_| {
+            let len = g.usize_in((t_len / 2).max(1), t_len);
+            Lane::Owned(Trajectory::new(
+                g.vec_normal_f32(len, 0.0, 1.0),
+                g.vec_normal_f32(len + 1, 0.0, 1.0),
+                (0..len).map(|_| g.bool_p(0.05)).collect(),
+            ))
+        })
+        .collect()
+}
+
+/// Plane bytes a packed tile copies for this lane set (rewards + done
+/// mask `[T·B]` each, values `[(T+1)·B]`, 4 bytes per element).
+fn gather_bytes(lanes: &[Lane]) -> u64 {
+    let t = lanes.iter().map(|l| l.len()).max().unwrap_or(0);
+    let b = lanes.len();
+    4 * (2 * t * b + (t + 1) * b) as u64
+}
+
+fn run_mode(mode: Mode, lanes: &[Lane], params: &GaeParams, iters: usize) -> RowResult {
+    let mut scratch = WorkerScratch::new();
+    let mut lens: Vec<usize> = Vec::new();
+    let mut outs: Vec<heppo::gae::GaeOutput> = Vec::new();
+    let mut first_outs = Vec::new();
+    let real_elements: usize = lanes.iter().map(|l| l.len()).sum();
+    let mut prep_allocs = 0u64;
+    let mut elapsed_ns = 0u128;
+
+    // Two warm-up passes grow every scratch buffer to this shape, then
+    // the measured passes run the steady state.
+    for iter in 0..iters + 2 {
+        let measured = iter >= 2;
+        outs.clear();
+        let t0 = Instant::now();
+        let a0 = allocs();
+        match mode {
+            Mode::Slab => {
+                let slab = slab_of(lanes).expect("slab mode needs aligned lanes");
+                let t_len = slab.planes.t_len;
+                gae_batched_strided_into(
+                    params,
+                    t_len,
+                    slab.width,
+                    slab.planes.batch,
+                    slab.rewards(),
+                    slab.values(),
+                    slab.done_mask(),
+                    &mut scratch.out_adv,
+                    &mut scratch.out_rtg,
+                );
+                lens.clear();
+                lens.resize(slab.width, t_len);
+            }
+            Mode::Packed => {
+                scratch.tile.pack_lane_views(lanes);
+                gae_batched_strided_into(
+                    params,
+                    scratch.tile.t_len,
+                    scratch.tile.lanes,
+                    scratch.tile.lanes,
+                    &scratch.tile.rewards,
+                    &scratch.tile.values,
+                    &scratch.tile.done_mask,
+                    &mut scratch.out_adv,
+                    &mut scratch.out_rtg,
+                );
+                lens.clear();
+                lens.extend_from_slice(&scratch.tile.lens);
+            }
+            Mode::Seed => {
+                // The pre-scratch path: fresh tile, fresh outputs, every
+                // group.
+                let tile = PaddedTile::from_lane_views(lanes);
+                let (batch, tile_lens) = tile.into_parts();
+                let out = gae_batched(params, &batch);
+                scratch.out_adv.clear();
+                scratch.out_adv.extend_from_slice(&out.advantages);
+                scratch.out_rtg.clear();
+                scratch.out_rtg.extend_from_slice(&out.rewards_to_go);
+                lens.clear();
+                lens.extend_from_slice(&tile_lens);
+            }
+        }
+        let section_allocs = allocs() - a0;
+        unpack_lanes_into(&lens, lens.len(), &scratch.out_adv, &scratch.out_rtg, &mut outs);
+        let dt = t0.elapsed();
+        black_box(&outs);
+        if measured {
+            prep_allocs += section_allocs;
+            elapsed_ns += dt.as_nanos();
+        }
+        if iter == 0 {
+            first_outs = outs.clone();
+        }
+    }
+
+    let per_group_ns = elapsed_ns as f64 / iters as f64;
+    RowResult {
+        ns_per_group: per_group_ns,
+        elem_per_sec: real_elements as f64 / (per_group_ns * 1e-9),
+        gathered_bytes_per_group: match mode {
+            Mode::Slab => 0,
+            Mode::Packed | Mode::Seed => gather_bytes(lanes),
+        },
+        prep_allocs_per_group: prep_allocs as f64 / iters as f64,
+        outs: first_outs,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let iters = std::env::var("HEPPO_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(if fast { 30 } else { 300 });
+    let shapes: &[(usize, usize)] =
+        if fast { &[(64, 8), (128, 16)] } else { &[(64, 8), (256, 16), (512, 64)] };
+    let params = GaeParams::default();
+
+    println!("worker hot-path sweep: {iters} groups/row, shapes {shapes:?}\n");
+    let mut table = CsvTable::new(&[
+        "mode",
+        "group",
+        "t_len",
+        "width",
+        "ns_per_group",
+        "elem_per_sec",
+        "gathered_bytes_per_group",
+        "prep_allocs_per_group",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut ok = true;
+
+    for &(t_len, width) in shapes {
+        for ragged in [false, true] {
+            let mut g = Gen::new(42 + t_len as u64 + width as u64);
+            let lanes = if ragged {
+                ragged_lanes(&mut g, t_len, width)
+            } else {
+                aligned_lanes(&mut g, t_len, width)
+            };
+            let group = if ragged { "ragged" } else { "aligned" };
+            let modes: &[Mode] = if ragged {
+                &[Mode::Packed, Mode::Seed]
+            } else {
+                &[Mode::Slab, Mode::Packed, Mode::Seed]
+            };
+            let mut reference: Option<Vec<heppo::gae::GaeOutput>> = None;
+            for &mode in modes {
+                let r = run_mode(mode, &lanes, &params, iters);
+                println!(
+                    "{:<7} {group:<7} T={t_len:<4} B={width:<3} -> {:>9.0} ns/group, {} elem/s, {} B gathered, {:.2} allocs",
+                    mode.label(),
+                    r.ns_per_group,
+                    format_si(r.elem_per_sec),
+                    r.gathered_bytes_per_group,
+                    r.prep_allocs_per_group,
+                );
+                // Every mode must produce the same bits.
+                match &reference {
+                    None => reference = Some(r.outs.clone()),
+                    Some(want) => {
+                        assert_eq!(want.len(), r.outs.len());
+                        for (a, b) in want.iter().zip(&r.outs) {
+                            for t in 0..a.advantages.len() {
+                                assert_eq!(
+                                    a.advantages[t].to_bits(),
+                                    b.advantages[t].to_bits(),
+                                    "{} adv diverges from the reference mode",
+                                    mode.label()
+                                );
+                                assert_eq!(
+                                    a.rewards_to_go[t].to_bits(),
+                                    b.rewards_to_go[t].to_bits(),
+                                    "{} rtg diverges from the reference mode",
+                                    mode.label()
+                                );
+                            }
+                        }
+                    }
+                }
+                match mode {
+                    Mode::Slab => {
+                        if r.gathered_bytes_per_group != 0 || r.prep_allocs_per_group != 0.0 {
+                            println!(
+                                "  FAIL: slab must gather 0 bytes / alloc 0 times, got {} B / {}",
+                                r.gathered_bytes_per_group, r.prep_allocs_per_group
+                            );
+                            ok = false;
+                        }
+                    }
+                    Mode::Packed => {
+                        if r.prep_allocs_per_group != 0.0 {
+                            println!(
+                                "  FAIL: packed scratch path must be allocation-free, got {}",
+                                r.prep_allocs_per_group
+                            );
+                            ok = false;
+                        }
+                    }
+                    Mode::Seed => {
+                        if r.prep_allocs_per_group < 4.0 {
+                            println!(
+                                "  FAIL: seed path expected >= 4 allocs/group, got {}",
+                                r.prep_allocs_per_group
+                            );
+                            ok = false;
+                        }
+                    }
+                }
+                table.row(&[
+                    mode.label().to_string(),
+                    group.to_string(),
+                    t_len.to_string(),
+                    width.to_string(),
+                    format!("{:.0}", r.ns_per_group),
+                    format!("{:.3e}", r.elem_per_sec),
+                    r.gathered_bytes_per_group.to_string(),
+                    format!("{:.2}", r.prep_allocs_per_group),
+                ]);
+                json_rows.push(
+                    Json::obj(vec![
+                        ("bench", Json::from("worker_hotpath")),
+                        ("mode", Json::from(mode.label())),
+                        ("group", Json::from(group)),
+                        ("t_len", Json::from(t_len)),
+                        ("width", Json::from(width)),
+                        ("iters", Json::from(iters)),
+                        ("ns_per_group", Json::from(r.ns_per_group)),
+                        ("elem_per_sec", Json::from(r.elem_per_sec)),
+                        (
+                            "gathered_bytes_per_group",
+                            Json::from(r.gathered_bytes_per_group as usize),
+                        ),
+                        ("prep_allocs_per_group", Json::from(r.prep_allocs_per_group)),
+                    ])
+                    .to_string(),
+                );
+            }
+        }
+    }
+
+    println!("\n{}", table.to_markdown());
+    table.save("results/worker_hotpath.csv")?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/worker_hotpath.jsonl", json_rows.join("\n") + "\n")?;
+    println!("-> results/worker_hotpath.csv, results/worker_hotpath.jsonl");
+
+    anyhow::ensure!(
+        ok,
+        "worker_hotpath shape checks failed (see FAIL lines above)"
+    );
+    println!("worker_hotpath OK: slab gathers 0 B / 0 allocs; seed pays the copy + allocs");
+    Ok(())
+}

@@ -14,7 +14,7 @@
 
 use super::profiler::{Phase, PhaseProfiler};
 use super::rollout::Rollout;
-use crate::gae::batched::{gae_batched, GaeBatch};
+use crate::gae::batched::gae_batched_strided_into;
 use crate::gae::reference::gae_trajectory;
 use crate::gae::{GaeParams, Trajectory};
 use crate::hwsim::{GaeHwSim, SimConfig};
@@ -99,25 +99,52 @@ pub fn split_at_dones(
     t_len: usize,
 ) -> Vec<(usize, Trajectory)> {
     let mut out = Vec::new();
+    let mut pool = Vec::new();
+    split_at_dones_with(rewards, values, dones, t_len, &mut pool, |start, seg| {
+        out.push((start, seg))
+    });
+    out
+}
+
+/// Pool-backed form of [`split_at_dones`]: each emitted segment is built
+/// in a [`Trajectory`] recycled from `pool` (or fresh while the pool
+/// warms), and the caller returns the buffers to the pool after use.
+/// The serving hot path splits thousands of lanes per second; this form
+/// keeps it from allocating three vectors per episode in steady state.
+/// Segment contents are identical to the allocating path by
+/// construction.
+pub fn split_at_dones_with(
+    rewards: impl Fn(usize) -> f32,
+    values: impl Fn(usize) -> f32,
+    dones: impl Fn(usize) -> bool,
+    t_len: usize,
+    pool: &mut Vec<Trajectory>,
+    mut emit: impl FnMut(usize, Trajectory),
+) {
     let mut start = 0usize;
     for t in 0..t_len {
         let done = dones(t);
         if done || t == t_len - 1 {
             let end = t + 1;
-            let seg_rewards: Vec<f32> = (start..end).map(&rewards).collect();
-            let mut seg_values: Vec<f32> = (start..=end).map(&values).collect();
+            let mut seg = pool.pop().unwrap_or_else(|| Trajectory {
+                rewards: Vec::new(),
+                values: Vec::new(),
+                dones: Vec::new(),
+            });
+            seg.rewards.clear();
+            seg.rewards.extend((start..end).map(&rewards));
+            seg.values.clear();
+            seg.values.extend((start..=end).map(&values));
+            seg.dones.clear();
+            seg.dones.resize(end - start, false);
             if done {
-                seg_values[end - start] = 0.0; // terminal: no bootstrap
+                *seg.values.last_mut().unwrap() = 0.0; // terminal: no bootstrap
+                *seg.dones.last_mut().unwrap() = true;
             }
-            let mut seg_dones = vec![false; end - start];
-            if done {
-                *seg_dones.last_mut().unwrap() = true;
-            }
-            out.push((start, Trajectory::new(seg_rewards, seg_values, seg_dones)));
+            emit(start, seg);
             start = end;
         }
     }
-    out
 }
 
 /// Split one env's column into single-episode trajectories for the
@@ -187,15 +214,23 @@ pub fn run_gae_stage(
             (adv, rtg)
         }),
         GaeBackend::Batched => profiler.time(Phase::GaeComputation, || {
-            let batch = GaeBatch {
+            // Plane-resident: the kernel reads the rollout's timestep-
+            // major planes directly (stride == width == B), no staging
+            // copy into a GaeBatch.
+            let mut adv = Vec::new();
+            let mut rtg = Vec::new();
+            gae_batched_strided_into(
+                params,
                 t_len,
-                batch: b,
-                rewards: rollout.rewards.clone(),
-                values: rollout.values.clone(),
-                done_mask: rollout.done_mask.clone(),
-            };
-            let out = gae_batched(params, &batch);
-            (out.advantages, out.rewards_to_go)
+                b,
+                b,
+                &rollout.rewards,
+                &rollout.values,
+                &rollout.done_mask,
+                &mut adv,
+                &mut rtg,
+            );
+            (adv, rtg)
         }),
         GaeBackend::Hlo => {
             let rt = runtime
@@ -374,6 +409,46 @@ mod tests {
         for b in GaeBackend::ALL {
             assert!(err.contains(b.label()), "error must list {}: {err}", b.label());
         }
+    }
+
+    #[test]
+    fn pooled_splitter_matches_the_allocating_splitter() {
+        // Recycled trajectory buffers must not leak stale contents: run
+        // the pool through a first lane, then verify a second lane's
+        // segments are identical to the fresh-allocation path.
+        check("split_at_dones_with == split_at_dones", 20, |g| {
+            let mut pool: Vec<Trajectory> = Vec::new();
+            for _ in 0..2 {
+                let t_len = g.usize_in(1, 48);
+                let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+                let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+                let dones: Vec<bool> = (0..t_len).map(|_| g.bool_p(0.15)).collect();
+                let want = split_at_dones(
+                    |t| rewards[t],
+                    |t| values[t],
+                    |t| dones[t],
+                    t_len,
+                );
+                let mut got: Vec<(usize, Trajectory)> = Vec::new();
+                split_at_dones_with(
+                    |t| rewards[t],
+                    |t| values[t],
+                    |t| dones[t],
+                    t_len,
+                    &mut pool,
+                    |start, seg| got.push((start, seg)),
+                );
+                assert_eq!(got.len(), want.len());
+                for ((ws, wt), (gs, gt)) in want.iter().zip(&got) {
+                    assert_eq!(ws, gs);
+                    assert_eq!(wt.rewards, gt.rewards);
+                    assert_eq!(wt.values, gt.values);
+                    assert_eq!(wt.dones, gt.dones);
+                }
+                // Return the buffers so the next round exercises reuse.
+                pool.extend(got.into_iter().map(|(_, seg)| seg));
+            }
+        });
     }
 
     #[test]

@@ -66,40 +66,133 @@ impl GaeBatch {
     }
 }
 
-/// Batched GAE: one backward pass over `T`, vector work over `B`.
-pub fn gae_batched(params: &GaeParams, b: &GaeBatch) -> GaeOutput {
-    let (t_len, batch) = (b.t_len, b.batch);
-    let mut advantages = vec![0.0f32; t_len * batch];
-    let mut rewards_to_go = vec![0.0f32; t_len * batch];
-    let mut carry = vec![0.0f32; batch]; // A_{t+1} per trajectory
-    let c = params.c();
-    let gamma = params.gamma;
+/// Width of one register-blocked lane group: wide enough to fill a
+/// 256-bit SIMD row of f32s, small enough that the per-block carry and
+/// `v_next` state live entirely in registers across the whole backward
+/// sweep — the software shape of the paper's per-PE register pair.
+pub const LANE_BLOCK: usize = 8;
+
+/// One lane block's full backward sweep: `bw <= LANE_BLOCK` lanes at
+/// column offset `base`, reading rows `t * stride + base` of the input
+/// planes and writing rows `t * width + base` of the dense outputs.
+/// Carry (`A_{t+1}`) and the original `V(s_{t+1})` row live in
+/// fixed-size register arrays for the whole sweep; the caller invokes
+/// this with the constant `LANE_BLOCK` for full blocks so LLVM sees a
+/// fixed trip count and vectorizes the inner loop.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn lane_block_pass(
+    gamma: f32,
+    c: f32,
+    t_len: usize,
+    stride: usize,
+    width: usize,
+    base: usize,
+    bw: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+    adv: &mut [f32],
+    rtg: &mut [f32],
+) {
+    debug_assert!(bw <= LANE_BLOCK);
+    let mut carry = [0.0f32; LANE_BLOCK];
+    let mut v_next = [0.0f32; LANE_BLOCK];
+    let boot = t_len * stride + base;
+    v_next[..bw].copy_from_slice(&values[boot..boot + bw]);
     for t in (0..t_len).rev() {
-        let row = t * batch;
-        let vrow = &b.values[row..row + batch];
-        let vnext = &b.values[row + batch..row + 2 * batch];
-        let r = &b.rewards[row..row + batch];
-        let dm = &b.done_mask[row..row + batch];
-        let adv = &mut advantages[row..row + batch];
-        let rtg = &mut rewards_to_go[row..row + batch];
-        // Branch-free, dependency-free across the batch lane ⇒ the
-        // compiler vectorizes this to the lane width (§Perf log).
-        for (((((ci, ai), gi), &ri), &vi), (&vni, &di)) in carry
-            .iter_mut()
-            .zip(adv.iter_mut())
-            .zip(rtg.iter_mut())
-            .zip(r)
-            .zip(vrow)
-            .zip(vnext.iter().zip(dm))
-        {
-            let not_done = 1.0 - di;
-            let delta = ri + gamma * vni * not_done - vi;
-            let a = delta + c * not_done * *ci;
-            *ci = a;
-            *ai = a;
-            *gi = a + vi;
+        let row = t * stride + base;
+        let out = t * width + base;
+        for j in 0..bw {
+            let not_done = 1.0 - done_mask[row + j];
+            let v = values[row + j];
+            let delta = rewards[row + j] + gamma * v_next[j] * not_done - v;
+            let a = delta + c * not_done * carry[j];
+            carry[j] = a;
+            v_next[j] = v; // register the original value for row t-1
+            adv[out + j] = a;
+            rtg[out + j] = a + v;
         }
     }
+}
+
+/// Backward GAE over a **strided** `[T, W]` slab, written into reusable
+/// output planes. Input rows of `width` live lanes sit `stride` elements
+/// apart (`stride == width` is the dense tile case; `stride > width` is
+/// a column window of a wider resident plane set — the serving worker's
+/// slab fast path, which computes directly on a shared `[T, B]`
+/// `PlaneSet` with zero gather). Outputs are dense `[T, W]`; `adv` and
+/// `rtg` are cleared and resized in place, so a warmed caller performs
+/// zero allocations.
+///
+/// Per-lane float expressions are identical to the scalar reference
+/// ([`gae_indexed`](crate::gae::reference::gae_indexed)), so results are
+/// bit-identical to gathering each lane and running the scalar loop.
+#[allow(clippy::too_many_arguments)]
+pub fn gae_batched_strided_into(
+    params: &GaeParams,
+    t_len: usize,
+    width: usize,
+    stride: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+    adv: &mut Vec<f32>,
+    rtg: &mut Vec<f32>,
+) {
+    assert!(stride >= width, "row stride {stride} must cover lane width {width}");
+    adv.clear();
+    adv.resize(t_len * width, 0.0);
+    rtg.clear();
+    rtg.resize(t_len * width, 0.0);
+    if t_len == 0 || width == 0 {
+        return;
+    }
+    debug_assert!(rewards.len() >= (t_len - 1) * stride + width);
+    debug_assert!(values.len() >= t_len * stride + width);
+    debug_assert!(done_mask.len() >= (t_len - 1) * stride + width);
+    let c = params.c();
+    let gamma = params.gamma;
+    let mut base = 0usize;
+    while base < width {
+        let bw = (width - base).min(LANE_BLOCK);
+        if bw == LANE_BLOCK {
+            // Constant trip count: the vectorized hot case.
+            lane_block_pass(
+                gamma, c, t_len, stride, width, base, LANE_BLOCK, rewards, values,
+                done_mask, adv, rtg,
+            );
+        } else {
+            lane_block_pass(
+                gamma, c, t_len, stride, width, base, bw, rewards, values, done_mask,
+                adv, rtg,
+            );
+        }
+        base += bw;
+    }
+}
+
+/// Scratch-reusing form of [`gae_batched`]: outputs land in
+/// caller-provided planes (cleared + resized, capacity reused).
+pub fn gae_batched_into(
+    params: &GaeParams,
+    b: &GaeBatch,
+    adv: &mut Vec<f32>,
+    rtg: &mut Vec<f32>,
+) {
+    gae_batched_strided_into(
+        params, b.t_len, b.batch, b.batch, &b.rewards, &b.values, &b.done_mask, adv,
+        rtg,
+    );
+}
+
+/// Batched GAE: one backward pass over `T`, register-blocked vector work
+/// over `B` (see [`gae_batched_strided_into`] for the allocation-free
+/// form this wraps).
+pub fn gae_batched(params: &GaeParams, b: &GaeBatch) -> GaeOutput {
+    let mut advantages = Vec::new();
+    let mut rewards_to_go = Vec::new();
+    gae_batched_into(params, b, &mut advantages, &mut rewards_to_go);
     GaeOutput { advantages, rewards_to_go }
 }
 
@@ -194,6 +287,88 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn blocked_kernel_is_bit_identical_to_the_scalar_reference() {
+        // The lane-blocked kernel shares the reference's float
+        // expressions, so every width — below, at, and across the
+        // LANE_BLOCK boundary — must match the gathered scalar loop
+        // *bitwise*, not just within tolerance.
+        check("blocked batched == scalar (bitwise)", 20, |g| {
+            let t_len = g.usize_in(1, 33);
+            let batch = *g.choose(&[1usize, 7, 8, 9, 15, 16, 17, 23]);
+            let trajs = random_batch(g, t_len, batch);
+            let b = GaeBatch::from_trajectories(&trajs);
+            let out = gae_batched(&GaeParams::default(), &b);
+            for (i, traj) in trajs.iter().enumerate() {
+                let want = gae_trajectory(&GaeParams::default(), traj);
+                for t in 0..t_len {
+                    assert_eq!(
+                        out.advantages[b.idx(t, i)].to_bits(),
+                        want.advantages[t].to_bits(),
+                        "lane {i} t {t}"
+                    );
+                    assert_eq!(
+                        out.rewards_to_go[b.idx(t, i)].to_bits(),
+                        want.rewards_to_go[t].to_bits(),
+                        "rtg lane {i} t {t}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn strided_window_matches_the_packed_subset_bitwise() {
+        // A column window [col0, col0+width) of a wide [T, B] plane,
+        // computed in place with stride B, must equal packing those
+        // columns into a dense tile and computing that — bit for bit.
+        check("strided window == packed subset", 20, |g| {
+            let t_len = g.usize_in(1, 24);
+            let batch = g.usize_in(2, 20);
+            let trajs = random_batch(g, t_len, batch);
+            let wide = GaeBatch::from_trajectories(&trajs);
+            let col0 = g.usize_in(0, batch - 1);
+            let width = g.usize_in(1, batch - col0);
+            let mut adv = Vec::new();
+            let mut rtg = Vec::new();
+            gae_batched_strided_into(
+                &GaeParams::default(),
+                t_len,
+                width,
+                batch,
+                &wide.rewards[col0..],
+                &wide.values[col0..],
+                &wide.done_mask[col0..],
+                &mut adv,
+                &mut rtg,
+            );
+            let dense = GaeBatch::from_trajectories(&trajs[col0..col0 + width]);
+            let want = gae_batched(&GaeParams::default(), &dense);
+            assert_eq!(adv.len(), t_len * width);
+            for k in 0..t_len * width {
+                assert_eq!(adv[k].to_bits(), want.advantages[k].to_bits(), "adv {k}");
+                assert_eq!(rtg[k].to_bits(), want.rewards_to_go[k].to_bits(), "rtg {k}");
+            }
+        });
+    }
+
+    #[test]
+    fn into_form_reuses_capacity_across_shrinking_reruns() {
+        let mut g = Gen::new(11);
+        let big = GaeBatch::from_trajectories(&random_batch(&mut g, 32, 9));
+        let small = GaeBatch::from_trajectories(&random_batch(&mut g, 4, 3));
+        let mut adv = Vec::new();
+        let mut rtg = Vec::new();
+        gae_batched_into(&GaeParams::default(), &big, &mut adv, &mut rtg);
+        let cap = adv.capacity();
+        gae_batched_into(&GaeParams::default(), &small, &mut adv, &mut rtg);
+        assert_eq!(adv.len(), 4 * 3);
+        assert_eq!(adv.capacity(), cap, "shrinking rerun must not reallocate");
+        let want = gae_batched(&GaeParams::default(), &small);
+        assert_eq!(adv, want.advantages);
+        assert_eq!(rtg, want.rewards_to_go);
     }
 
     #[test]

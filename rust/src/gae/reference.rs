@@ -25,8 +25,35 @@ pub fn gae_indexed(
     value: impl Fn(usize) -> f32,
     done: impl Fn(usize) -> bool,
 ) -> GaeOutput {
-    let mut advantages = vec![0.0f32; t_len];
-    let mut rewards_to_go = vec![0.0f32; t_len];
+    let mut out = GaeOutput { advantages: Vec::new(), rewards_to_go: Vec::new() };
+    gae_indexed_into(
+        params,
+        t_len,
+        reward,
+        value,
+        done,
+        &mut out.advantages,
+        &mut out.rewards_to_go,
+    );
+    out
+}
+
+/// Scratch-reusing form of [`gae_indexed`]: outputs land in
+/// caller-provided vectors (cleared + resized, capacity reused), so a
+/// warmed caller performs zero allocations per pass.
+pub fn gae_indexed_into(
+    params: &GaeParams,
+    t_len: usize,
+    reward: impl Fn(usize) -> f32,
+    value: impl Fn(usize) -> f32,
+    done: impl Fn(usize) -> bool,
+    advantages: &mut Vec<f32>,
+    rewards_to_go: &mut Vec<f32>,
+) {
+    advantages.clear();
+    advantages.resize(t_len, 0.0);
+    rewards_to_go.clear();
+    rewards_to_go.resize(t_len, 0.0);
     let mut carry = 0.0f32; // A_{t+1}
     for t in (0..t_len).rev() {
         let not_done = if done(t) { 0.0 } else { 1.0 };
@@ -36,7 +63,6 @@ pub fn gae_indexed(
         advantages[t] = carry;
         rewards_to_go[t] = carry + v_t; // Eq. 5
     }
-    GaeOutput { advantages, rewards_to_go }
 }
 
 /// Compute advantages and rewards-to-go for one trajectory with the

@@ -16,12 +16,13 @@
 //!   NetPending ◄── reader thread ◄── responses/errors, any order
 //!
 //!             NetServer (server.rs), per connection:
-//!   reader ── decode ─► quota (quota.rs, per-tenant token buckets)
-//!                         │ over-budget → typed Quota error frame
-//!                         ▼
-//!                       cache (cache.rs, payload-hash LRU)
+//!   reader ── lazy header parse ─► quota (quota.rs, token buckets)
+//!               (no dequantize)      │ over-budget → typed Quota frame
+//!                                    ▼
+//!                       cache (cache.rs, raw-payload-hash LRU)
 //!                         │ hit → response frame, cache_hit flag
 //!                         ▼
+//!                       decode planes (deferred) ─►
 //!                       GaeService::try_submit_plane_set  (zero-copy:
 //!                         │ shed → typed Shed error frame  decode buffers
 //!                         ▼                                move, not copy)
@@ -55,6 +56,6 @@ pub use client::{NetClient, NetClientConfig, NetError, NetGae, NetPending, WireS
 pub use quota::{QuotaConfig, TokenBuckets};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{
-    EncodedRequest, ErrorFrame, ErrorKind, Frame, RequestFrame, ResponseFrame,
-    WireDecodeError,
+    EncodedRequest, ErrorFrame, ErrorKind, Frame, LazyFrame, LazyRequest,
+    RequestFrame, ResponseFrame, WireDecodeError,
 };

@@ -5,9 +5,10 @@
 //!
 //! ```text
 //!  socket ──► reader ──────────────► completer ──► writer ──► socket
-//!             │  decode frame          │ wait each       │ frame bytes
+//!             │  lazy header parse     │ wait each       │ frame bytes
 //!             │  quota check ──Quota──────────────────────►
 //!             │  cache lookup ──hit───────────────────────►
+//!             │  decode planes (deferred)
 //!             │  try_submit_plane_set──Shed───────────────►
 //!             └──(seq, PlanesPending)─►│ insert cache
 //!                                      └─ encode response ─►
@@ -22,15 +23,22 @@
 //!
 //! ## Request lifecycle
 //!
+//! Frames arrive through the **lazy decode** split
+//! ([`wire::decode_frame_lazy`]): the reader validates the header and
+//! gets the payload hash over the raw packed bytes, but f32 planes are
+//! only materialized for frames that pass both policy gates — quota
+//! refusals and cache hits never dequantize.
+//!
 //! 1. **Quota** — the tenant's token bucket ([`TokenBuckets`]) is
-//!    charged `T·B` elements; refusal is a typed `Quota` error frame
+//!    charged `T·B` elements (header geometry alone); refusal is a
+//!    typed `Quota` error frame
 //!    and a `quota_shed` metrics tick. Quotas are checked *before* the
 //!    cache so a hot tenant cannot dodge its budget by replaying
 //!    cacheable payloads; the charge is refunded if the frame is later
 //!    refused (shed/malformed) with no work performed.
 //! 2. **Cache** — the payload-hash keyed [`ResponseCache`]; a hit
 //!    answers immediately with the `cache_hit` response flag set.
-//! 3. **Admission** — the decoded planes move (zero-copy) into
+//! 3. **Admission** — the lazily-decoded planes move (zero-copy) into
 //!    [`GaeService::try_submit_plane_set`]; the admission controller's
 //!    `Overloaded` becomes a typed `Shed` error frame
 //!    ([`NetServerConfig::shed_on_overload`] `false` switches to the
@@ -43,7 +51,7 @@
 
 use crate::net::cache::{CachedGae, ResponseCache};
 use crate::net::quota::{QuotaConfig, TokenBuckets};
-use crate::net::wire::{self, ErrorKind, Frame, RequestFrame};
+use crate::net::wire::{self, ErrorKind, LazyFrame, LazyRequest};
 use crate::service::{GaeService, PlaneSet, PlanesPending, ServiceError};
 use std::collections::HashMap;
 use std::io::Write;
@@ -270,8 +278,11 @@ fn read_loop(
             Ok(Some(frame)) => frame,
             Ok(None) | Err(_) => return, // EOF or dead socket
         };
-        match wire::decode_frame(&frame) {
-            Ok(Frame::Request(req)) => handle_request(req, shared, done_tx, out_tx),
+        // Lazy decode: the header parse alone admits or refuses the
+        // frame; plane dequantization is deferred into handle_request,
+        // past the quota and cache checks.
+        match wire::decode_frame_lazy(&frame) {
+            Ok(LazyFrame::Request(req)) => handle_request(req, shared, done_tx, out_tx),
             Ok(_) => {
                 // Only clients speak first; a response/error from one is
                 // a protocol violation worth closing over.
@@ -297,28 +308,20 @@ fn read_loop(
 }
 
 fn handle_request(
-    req: RequestFrame,
+    req: LazyRequest<'_>,
     shared: &Shared,
     done_tx: &mpsc::SyncSender<InFlight>,
     out_tx: &mpsc::SyncSender<Vec<u8>>,
 ) {
     shared.frames_received.fetch_add(1, Ordering::Relaxed);
-    let RequestFrame {
-        seq,
-        tenant,
-        t_len,
-        batch,
-        rewards,
-        values,
-        done_mask,
-        payload_hash,
-        ..
-    } = req;
+    let (seq, t_len, batch) = (req.seq, req.t_len, req.batch);
+    let tenant = req.tenant;
 
-    // 1. Quota: charge the tenant before any work happens on its behalf.
-    let cost = (t_len * batch) as f64;
+    // 1. Quota: charge the tenant before any work happens on its behalf
+    //    — the cost needs only the header geometry, no plane decode.
+    let cost = req.elements() as f64;
     if let Some(quota) = &shared.quota {
-        if !quota.try_acquire(&tenant, cost) {
+        if !quota.try_acquire(tenant, cost) {
             shared.service.metrics_handle().record_quota_shed();
             let _ = out_tx.send(wire::encode_error(
                 seq,
@@ -335,13 +338,17 @@ fn handle_request(
     // work performed — overload and quota must not double-penalize.
     let refund_charge = || {
         if let Some(quota) = &shared.quota {
-            quota.refund(&tenant, cost);
+            quota.refund(tenant, cost);
         }
     };
 
     // 2. Cache: identical quantized payloads replay the stored result.
+    //    The key hashes the raw packed bytes (computed only now — a
+    //    quota refusal above skipped even this pass), so a hit answers
+    //    without ever materializing the f32 planes.
     let mut cache_key = None;
     if let Some(cache) = &shared.cache {
+        let payload_hash = req.payload_hash();
         if let Some(hit) = cache.get(payload_hash) {
             if hit.t_len == t_len && hit.batch == batch {
                 shared.service.metrics_handle().record_cache_hit();
@@ -362,7 +369,9 @@ fn handle_request(
         cache_key = Some(payload_hash);
     }
 
-    // 3. Admission: move the decoded planes straight into the service.
+    // 3. Deferred decode + admission: only frames that compute pay the
+    //    dequantize; the planes then move (zero-copy) into the service.
+    let (rewards, values, done_mask) = req.decode_planes();
     let planes = match PlaneSet::new(t_len, batch, rewards, values, done_mask) {
         Ok(planes) => planes,
         Err(e) => {

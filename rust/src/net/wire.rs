@@ -68,6 +68,20 @@
 //! ([`EncodedRequest::reduction_vs_f32`]) — the measured per-frame
 //! bandwidth lever the `net_throughput` bench sweeps (§V's 4× claim,
 //! minus the fixed per-plane stats and the done bitset).
+//!
+//! ## Lazy decode
+//!
+//! Request decode is split in two: [`decode_frame_lazy`] parses and
+//! validates the *header* — seq, tenant, geometry, plane-section
+//! lengths, finite (μ, σ), trailing bytes — without materializing any
+//! f32 plane or even hashing the payload; the cache key
+//! ([`LazyRequest::payload_hash`]) is one on-demand FNV pass over the
+//! **raw packed bytes**. The server answers quota refusals from the
+//! header alone and cache hits from header + hash;
+//! [`LazyRequest::decode_planes`] runs the deferred dequantize only for
+//! frames that actually compute. [`decode_frame`] (the client/test
+//! shape) is the lazy parse plus an immediate `decode_planes`, so both
+//! paths accept exactly the same frames by construction.
 
 use crate::quant::block_std::BlockStats;
 use crate::quant::{CodecKind, UniformQuantizer};
@@ -255,6 +269,103 @@ pub struct ErrorFrame {
 #[derive(Debug, Clone)]
 pub enum Frame {
     Request(RequestFrame),
+    Response(ResponseFrame),
+    Error(ErrorFrame),
+}
+
+/// A request frame parsed to its **header only**: everything the
+/// front-end needs for quota and cache decisions — seq, tenant,
+/// geometry, and (on demand, via [`LazyRequest::payload_hash`]) the
+/// cache key over the raw packed bytes — without materializing any f32
+/// plane. Quota refusals answer from the header alone, cache hits add
+/// one hash pass; only frames that will actually compute pay the
+/// dequantize via [`LazyRequest::decode_planes`].
+///
+/// The header parse runs *every* structural check the eager
+/// [`decode_frame`] runs (section lengths, geometry caps, finite plane
+/// stats, trailing bytes), so lazy and eager accept exactly the same
+/// frames; `decode_planes` cannot fail.
+#[derive(Debug, Clone)]
+pub struct LazyRequest<'a> {
+    pub seq: u64,
+    /// Borrowed from the frame buffer — the reader owns the bytes for
+    /// the duration of request handling.
+    pub tenant: &'a str,
+    pub codec: CodecKind,
+    pub bits: u8,
+    pub t_len: usize,
+    pub batch: usize,
+    /// Payload-section size on the wire.
+    pub payload_bytes: usize,
+    /// The whole raw packed payload section (what the cache key hashes).
+    payload: &'a [u8],
+    rewards_raw: &'a [u8],
+    values_raw: &'a [u8],
+    done_raw: &'a [u8],
+}
+
+impl LazyRequest<'_> {
+    /// GAE elements (`T·B`) — the quota cost unit, free of any decode.
+    pub fn elements(&self) -> usize {
+        self.t_len * self.batch
+    }
+
+    /// FNV-1a over the raw packed payload section — the response-cache
+    /// key. Computed **on demand** (one O(payload) pass, no
+    /// dequantization), so a frame refused at the quota gate — which
+    /// never consults the cache — does no per-plane work at all.
+    pub fn payload_hash(&self) -> u64 {
+        fnv1a(self.payload)
+    }
+
+    /// The deferred half of the decode: dequantize the rewards, values,
+    /// and done-mask planes to f32 (lossy for quantized codecs,
+    /// bit-exact for the f32 escape hatch — exactly as [`decode_frame`]
+    /// would have produced).
+    pub fn decode_planes(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let quantized = codec_is_quantized(self.codec);
+        let q = UniformQuantizer::new(if quantized { self.bits } else { 8 });
+        let n = self.t_len * self.batch;
+        let rewards = dequantize_plane(self.rewards_raw, n, quantized, &q);
+        let values =
+            dequantize_plane(self.values_raw, (self.t_len + 1) * self.batch, quantized, &q);
+        let done_mask = (0..n)
+            .map(|j| {
+                if (self.done_raw[j / 8] >> (j % 8)) & 1 == 1 {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        (rewards, values, done_mask)
+    }
+
+    /// Full materialization into the eager [`RequestFrame`] shape.
+    pub fn into_frame(self) -> RequestFrame {
+        let (rewards, values, done_mask) = self.decode_planes();
+        RequestFrame {
+            seq: self.seq,
+            tenant: self.tenant.to_string(),
+            codec: self.codec,
+            bits: self.bits,
+            t_len: self.t_len,
+            batch: self.batch,
+            rewards,
+            values,
+            done_mask,
+            payload_hash: self.payload_hash(),
+            payload_bytes: self.payload_bytes,
+        }
+    }
+}
+
+/// Any decoded frame whose request planes stay packed until asked for
+/// — the server-side shape ([`decode_frame_lazy`]). Responses and
+/// errors are small and decode eagerly either way.
+#[derive(Debug)]
+pub enum LazyFrame<'a> {
+    Request(LazyRequest<'a>),
     Response(ResponseFrame),
     Error(ErrorFrame),
 }
@@ -530,11 +641,6 @@ impl<'a> Reader<'a> {
         let b = self.take(8)?;
         Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
-
-    fn f32(&mut self) -> Result<f32, WireDecodeError> {
-        let b = self.take(4)?;
-        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-    }
 }
 
 /// `a * b` with wire-integer inputs: overflow is a malformed frame, not
@@ -543,31 +649,51 @@ fn wire_mul(a: usize, b: usize) -> Result<usize, WireDecodeError> {
     a.checked_mul(b).ok_or(WireDecodeError::Malformed("size overflow"))
 }
 
-fn decode_plane(
-    r: &mut Reader<'_>,
+/// Take one plane's raw wire section *without* dequantizing: the f32
+/// escape hatch is `4·n` bytes, a quantized plane is `(μ, σ)` (8 bytes,
+/// validated finite here so laziness never accepts a frame the eager
+/// path would refuse) followed by the packed codes.
+fn take_plane_raw<'a>(
+    r: &mut Reader<'a>,
     n: usize,
     quantized: bool,
     q: &UniformQuantizer,
-) -> Result<Vec<f32>, WireDecodeError> {
+) -> Result<&'a [u8], WireDecodeError> {
     if !quantized {
-        let raw = r.take(wire_mul(n, 4)?)?;
-        return Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect());
+        return r.take(wire_mul(n, 4)?);
     }
-    let mean = r.f32()?;
-    let std = r.f32()?;
+    let nbytes = wire_mul(n, q.bits as usize)?
+        .div_ceil(8)
+        .checked_add(8)
+        .ok_or(WireDecodeError::Malformed("size overflow"))?;
+    let raw = r.take(nbytes)?;
+    let mean = f32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
+    let std = f32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
     if !mean.is_finite() || !std.is_finite() {
         return Err(WireDecodeError::Malformed("non-finite plane stats"));
     }
-    let nbytes = wire_mul(n, q.bits as usize)?.div_ceil(8);
-    let raw = r.take(nbytes)?;
-    let codes = q.unpack(raw, n);
-    Ok(codes.into_iter().map(|c| q.dequantize(c) * std + mean).collect())
+    Ok(raw)
 }
 
-fn decode_request_body(r: &mut Reader<'_>) -> Result<RequestFrame, WireDecodeError> {
+/// Materialize one plane from its raw section (validated by
+/// [`take_plane_raw`], so this cannot fail).
+fn dequantize_plane(raw: &[u8], n: usize, quantized: bool, q: &UniformQuantizer) -> Vec<f32> {
+    if !quantized {
+        debug_assert_eq!(raw.len(), n * 4);
+        return raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+    }
+    let mean = f32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
+    let std = f32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
+    let codes = q.unpack(&raw[8..], n);
+    codes.into_iter().map(|c| q.dequantize(c) * std + mean).collect()
+}
+
+fn decode_request_body_lazy<'a>(
+    r: &mut Reader<'a>,
+) -> Result<LazyRequest<'a>, WireDecodeError> {
     let seq = r.u64()?;
     if seq == 0 {
         // Mirrors the encoder: a seq-0 request would make its per-frame
@@ -576,8 +702,7 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<RequestFrame, WireDecodeErr
     }
     let tenant_len = r.u8()? as usize;
     let tenant = std::str::from_utf8(r.take(tenant_len)?)
-        .map_err(|_| WireDecodeError::Malformed("tenant is not UTF-8"))?
-        .to_string();
+        .map_err(|_| WireDecodeError::Malformed("tenant is not UTF-8"))?;
     let payload_start = r.pos;
     let codec_index = r.u8()?;
     let codec = codec_from_index(codec_index).ok_or(WireDecodeError::BadCodec(codec_index))?;
@@ -601,26 +726,26 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<RequestFrame, WireDecodeErr
     }
     let quantized = codec_is_quantized(codec);
     let q = UniformQuantizer::new(if quantized { bits } else { 8 });
-    let rewards = decode_plane(r, n, quantized, &q)?;
-    let values = decode_plane(r, wire_mul(t_len + 1, batch)?, quantized, &q)?;
+    let rewards_raw = take_plane_raw(r, n, quantized, &q)?;
+    let values_raw = take_plane_raw(r, wire_mul(t_len + 1, batch)?, quantized, &q)?;
     let done_raw = r.take(n.div_ceil(8))?;
-    let done_mask: Vec<f32> = (0..n)
-        .map(|j| if (done_raw[j / 8] >> (j % 8)) & 1 == 1 { 1.0 } else { 0.0 })
-        .collect();
     let payload_bytes = r.pos - payload_start;
-    let payload_hash = fnv1a(&r.buf[payload_start..r.pos]);
-    Ok(RequestFrame {
+    // The cache key hashes these raw packed bytes — but lazily
+    // ([`LazyRequest::payload_hash`]), so a quota-refused frame never
+    // pays even the hash pass.
+    let payload = &r.buf[payload_start..r.pos];
+    Ok(LazyRequest {
         seq,
         tenant,
         codec,
         bits,
         t_len,
         batch,
-        rewards,
-        values,
-        done_mask,
-        payload_hash,
         payload_bytes,
+        payload,
+        rewards_raw,
+        values_raw,
+        done_raw,
     })
 }
 
@@ -668,10 +793,13 @@ fn decode_error_body(r: &mut Reader<'_>) -> Result<ErrorFrame, WireDecodeError> 
     Ok(ErrorFrame { seq, kind, message })
 }
 
-/// Decode one frame (the bytes *after* the length prefix). Verifies the
-/// checksum before touching any field, so arbitrary corruption is
-/// rejected, never mis-parsed.
-pub fn decode_frame(frame: &[u8]) -> Result<Frame, WireDecodeError> {
+/// Decode one frame (the bytes *after* the length prefix), leaving
+/// request planes packed ([`LazyRequest`]). Verifies the checksum before
+/// touching any field, so arbitrary corruption is rejected, never
+/// mis-parsed — and runs every structural check of the eager path, so
+/// the two accept exactly the same frames. This is the server reader's
+/// entry point: quota refusals and cache hits never dequantize.
+pub fn decode_frame_lazy(frame: &[u8]) -> Result<LazyFrame<'_>, WireDecodeError> {
     if frame.len() < HEADER_BYTES + CHECKSUM_BYTES {
         return Err(WireDecodeError::Truncated {
             need: HEADER_BYTES + CHECKSUM_BYTES,
@@ -700,15 +828,25 @@ pub fn decode_frame(frame: &[u8]) -> Result<Frame, WireDecodeError> {
     }
     let frame_type = r.u8()?;
     let frame = match frame_type {
-        FRAME_TYPE_REQUEST => Frame::Request(decode_request_body(&mut r)?),
-        FRAME_TYPE_RESPONSE => Frame::Response(decode_response_body(&mut r)?),
-        FRAME_TYPE_ERROR => Frame::Error(decode_error_body(&mut r)?),
+        FRAME_TYPE_REQUEST => LazyFrame::Request(decode_request_body_lazy(&mut r)?),
+        FRAME_TYPE_RESPONSE => LazyFrame::Response(decode_response_body(&mut r)?),
+        FRAME_TYPE_ERROR => LazyFrame::Error(decode_error_body(&mut r)?),
         t => return Err(WireDecodeError::BadFrameType(t)),
     };
     if r.pos != body_end {
         return Err(WireDecodeError::Malformed("trailing bytes after body"));
     }
     Ok(frame)
+}
+
+/// Decode one frame eagerly (request planes materialized to f32) — the
+/// client-side and test-side shape, layered over [`decode_frame_lazy`].
+pub fn decode_frame(frame: &[u8]) -> Result<Frame, WireDecodeError> {
+    Ok(match decode_frame_lazy(frame)? {
+        LazyFrame::Request(req) => Frame::Request(req.into_frame()),
+        LazyFrame::Response(resp) => Frame::Response(resp),
+        LazyFrame::Error(err) => Frame::Error(err),
+    })
 }
 
 /// Read one length-prefixed frame off a stream. `Ok(None)` = clean EOF
@@ -817,6 +955,82 @@ mod tests {
                 assert!(enc.reduction_vs_f32() > 1.0);
             }
         });
+    }
+
+    #[test]
+    fn lazy_decode_matches_eager_decode_exactly() {
+        check("lazy header + deferred planes == eager", 40, |g| {
+            let t_len = g.usize_in(1, 50);
+            let batch = g.usize_in(1, 8);
+            let codec = *g.choose(&CodecKind::all());
+            let bits = g.usize_in(3, 10) as u8;
+            let (enc, ..) = encode(g, codec, bits, t_len, batch);
+            let eager = decode_request(&enc);
+            let lazy = match decode_frame_lazy(&enc.bytes[4..]).unwrap() {
+                LazyFrame::Request(req) => req,
+                other => panic!("expected request, got {other:?}"),
+            };
+            // Header fields agree without any plane decode.
+            assert_eq!(lazy.seq, eager.seq);
+            assert_eq!(lazy.tenant, eager.tenant);
+            assert_eq!(lazy.codec, eager.codec);
+            assert_eq!(lazy.bits, eager.bits);
+            assert_eq!((lazy.t_len, lazy.batch), (eager.t_len, eager.batch));
+            assert_eq!(lazy.elements(), t_len * batch);
+            assert_eq!(lazy.payload_hash(), eager.payload_hash);
+            assert_eq!(lazy.payload_bytes, eager.payload_bytes);
+            // The deferred decode reproduces the eager planes bit for bit.
+            let (rewards, values, done_mask) = lazy.decode_planes();
+            for (a, b) in rewards.iter().zip(&eager.rewards) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in values.iter().zip(&eager.values) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(done_mask, eager.done_mask);
+        });
+    }
+
+    #[test]
+    fn lazy_decode_rejects_damage_like_the_eager_path() {
+        check("lazy rejects what eager rejects", 40, |g| {
+            let t_len = g.usize_in(1, 30);
+            let batch = g.usize_in(1, 5);
+            let codec = *g.choose(&CodecKind::all());
+            let (enc, ..) = encode(g, codec, 8, t_len, batch);
+            let frame = &enc.bytes[4..];
+            let cut = g.usize_in(0, frame.len() - 1);
+            assert!(decode_frame_lazy(&frame[..cut]).is_err());
+            let mut corrupt = frame.to_vec();
+            let byte = g.usize_in(0, corrupt.len() - 1);
+            corrupt[byte] ^= 1 << g.usize_in(0, 7);
+            assert!(decode_frame_lazy(&corrupt).is_err());
+        });
+    }
+
+    #[test]
+    fn lazy_header_parse_still_validates_plane_stats() {
+        // Non-finite (μ, σ) must be refused at the header parse — being
+        // lazy about the bulk dequantize must not admit frames the eager
+        // decoder would have bounced.
+        let mut g = Gen::new(23);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 4, 2);
+        let mut frame = enc.bytes[4..].to_vec();
+        // header(6) + seq(8) + tenant_len(1) + "tenant-a"(8) + codec(1)
+        // + bits(1) + t_len(4) + batch(4) = rewards μ offset.
+        let mu = 6 + 8 + 1 + "tenant-a".len() + 1 + 1 + 4 + 4;
+        frame[mu..mu + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        let body_end = frame.len() - 4;
+        let sum = super::checksum(&frame[..body_end]);
+        frame[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            decode_frame_lazy(&frame),
+            Err(WireDecodeError::Malformed("non-finite plane stats"))
+        ));
+        assert!(matches!(
+            decode_frame(&frame),
+            Err(WireDecodeError::Malformed("non-finite plane stats"))
+        ));
     }
 
     #[test]

@@ -30,6 +30,32 @@
 //! Pad advantages are therefore exactly zero and real rows match the
 //! unpadded recurrence bit-for-bit; [`PaddedTile::unpack`] then trims
 //! each lane back to its true length.
+//!
+//! ## The `WorkerScratch` lifecycle
+//!
+//! Every worker shard owns one [`WorkerScratch`] for the lifetime of its
+//! thread — created before the first group, never dropped until the
+//! queue closes. It is the arena behind the zero-allocation steady
+//! state of the compute path:
+//!
+//! 1. **Group intake** — the group's lanes are *moved* out of the work
+//!    items into `flat` (capacity reused; the per-item `lane_count`
+//!    stays behind for the response split).
+//! 2. **Compute** — the batched path either runs the **slab fast path**
+//!    ([`slab_of`](crate::service::plane::slab_of)) straight on the
+//!    shared plane set, or repacks the ragged fallback into `tile` via
+//!    [`PaddedTile::pack_lane_views`] (plane buffers cleared + resized
+//!    in place). Either way the kernel writes into the `out_adv` /
+//!    `out_rtg` planes; the hwsim path refills `segments` from the
+//!    recycled `seg_pool` trajectory buffers.
+//! 3. **Unpack** — [`unpack_lanes_into`] appends per-lane outputs onto
+//!    `outs`. The per-lane vectors are the *response payload* (they
+//!    leave with the reply), so they are the only allocations a warmed
+//!    worker still makes; every plane-sized buffer is scratch-resident.
+//! 4. **Reset** — `flat`, `outs`, `segments`, `lens` are cleared (not
+//!    shrunk) and the next group reuses their capacity. After one
+//!    maximum-shape group, per-group heap traffic on the compute path
+//!    is zero.
 
 use crate::gae::batched::GaeBatch;
 use crate::gae::{GaeOutput, Trajectory};
@@ -130,6 +156,20 @@ pub struct PaddedTile {
 }
 
 impl PaddedTile {
+    /// An empty tile shell — the scratch form. Repack it per group with
+    /// [`PaddedTile::pack_lane_views`]; the plane buffers keep their
+    /// capacity across repacks.
+    pub fn empty() -> PaddedTile {
+        PaddedTile {
+            t_len: 0,
+            lanes: 0,
+            rewards: Vec::new(),
+            values: Vec::new(),
+            done_mask: Vec::new(),
+            lens: Vec::new(),
+        }
+    }
+
     /// Tile up a set of ragged lanes (at least one, each of length ≥ 0).
     pub fn from_lanes(trajs: &[&Trajectory]) -> PaddedTile {
         Self::build(
@@ -142,16 +182,28 @@ impl PaddedTile {
     }
 
     /// The same tiling over service [`Lane`]s (owned trajectories or
-    /// borrowed plane columns) — the worker-side gather point of the
-    /// zero-copy submission path.
-    pub(crate) fn from_lane_views(lanes: &[&Lane]) -> PaddedTile {
-        Self::build(
+    /// borrowed plane columns), allocating a fresh tile per call — the
+    /// seed-shaped gather the scratch path ([`PaddedTile::pack_lane_views`])
+    /// exists to retire; kept as the baseline the `worker_hotpath`
+    /// bench measures against.
+    pub fn from_lane_views(lanes: &[Lane]) -> PaddedTile {
+        let mut tile = PaddedTile::empty();
+        tile.pack_lane_views(lanes);
+        tile
+    }
+
+    /// Scratch-path tiling: repack `lanes` into `self` in place, reusing
+    /// the plane buffers' capacity — zero allocations once warm. This is
+    /// the worker's ragged fallback when [`slab_of`](crate::service::plane::slab_of)
+    /// finds no resident slab.
+    pub fn pack_lane_views(&mut self, lanes: &[Lane]) {
+        self.rebuild(
             lanes.len(),
             |i| lanes[i].len(),
             |i, t| lanes[i].reward(t),
             |i, t| lanes[i].value(t),
             |i, t| lanes[i].done(t),
-        )
+        );
     }
 
     /// Shared tile construction over indexed accessors: lane `i` has
@@ -164,16 +216,39 @@ impl PaddedTile {
         value: impl Fn(usize, usize) -> f32,
         done: impl Fn(usize, usize) -> bool,
     ) -> PaddedTile {
+        let mut tile = PaddedTile::empty();
+        tile.rebuild(n, len_of, reward, value, done);
+        tile
+    }
+
+    /// In-place form of [`PaddedTile::build`]: clears and resizes the
+    /// plane buffers (capacity reused), then fills exactly as the
+    /// allocating path does — the two are bit-identical by construction.
+    fn rebuild(
+        &mut self,
+        n: usize,
+        len_of: impl Fn(usize) -> usize,
+        reward: impl Fn(usize, usize) -> f32,
+        value: impl Fn(usize, usize) -> f32,
+        done: impl Fn(usize, usize) -> bool,
+    ) {
         assert!(n > 0, "a tile needs at least one lane");
         let lanes = n;
         let t_len = (0..n).map(&len_of).max().unwrap();
-        let mut rewards = vec![0.0f32; t_len * lanes];
-        let mut values = vec![0.0f32; (t_len + 1) * lanes];
-        let mut done_mask = vec![0.0f32; t_len * lanes];
-        let mut lens = Vec::with_capacity(lanes);
+        self.t_len = t_len;
+        self.lanes = lanes;
+        self.rewards.clear();
+        self.rewards.resize(t_len * lanes, 0.0);
+        self.values.clear();
+        self.values.resize((t_len + 1) * lanes, 0.0);
+        self.done_mask.clear();
+        self.done_mask.resize(t_len * lanes, 0.0);
+        self.lens.clear();
+        let (rewards, values, done_mask) =
+            (&mut self.rewards, &mut self.values, &mut self.done_mask);
         for i in 0..n {
             let len = len_of(i);
-            lens.push(len);
+            self.lens.push(len);
             for t in 0..len {
                 rewards[t * lanes + i] = reward(i, t);
                 done_mask[t * lanes + i] = if done(i, t) { 1.0 } else { 0.0 };
@@ -190,7 +265,6 @@ impl PaddedTile {
                 }
             }
         }
-        PaddedTile { t_len, lanes, rewards, values, done_mask, lens }
     }
 
     /// Materialize the `[T * B]` segment mask (1.0 = real element, 0.0 =
@@ -265,25 +339,80 @@ impl PaddedTile {
 /// Trim a `[T, B]` batched output (`lanes` = B) back to per-lane
 /// outputs of the given true lengths, input order.
 pub fn unpack_lanes(lens: &[usize], lanes: usize, out: &GaeOutput) -> Vec<GaeOutput> {
-    lens.iter()
-        .enumerate()
-        .map(|(i, &len)| {
-            let mut advantages = Vec::with_capacity(len);
-            let mut rewards_to_go = Vec::with_capacity(len);
-            for t in 0..len {
-                advantages.push(out.advantages[t * lanes + i]);
-                rewards_to_go.push(out.rewards_to_go[t * lanes + i]);
-            }
-            GaeOutput { advantages, rewards_to_go }
-        })
-        .collect()
+    let mut outs = Vec::with_capacity(lens.len());
+    unpack_lanes_into(lens, lanes, &out.advantages, &out.rewards_to_go, &mut outs);
+    outs
 }
 
-/// Cut a flat lane list into tiles of at most `tile_lanes` lanes
-/// (generic over the lane representation: `&Trajectory` or `&Lane`).
-pub fn tile_lanes<'a, T: ?Sized>(lanes: &[&'a T], tile_width: usize) -> Vec<Vec<&'a T>> {
-    let tile_width = tile_width.max(1);
-    lanes.chunks(tile_width).map(|c| c.to_vec()).collect()
+/// Scratch-path unpack: append per-lane outputs (trimmed to their true
+/// lengths, input order) onto `outs` from dense `[T, B]` advantage /
+/// rewards-to-go planes. The per-lane vectors are the response payload
+/// and leave with the reply — they are the only per-group allocations
+/// remaining on the warmed worker hot path.
+pub fn unpack_lanes_into(
+    lens: &[usize],
+    lanes: usize,
+    adv: &[f32],
+    rtg: &[f32],
+    outs: &mut Vec<GaeOutput>,
+) {
+    for (i, &len) in lens.iter().enumerate() {
+        let mut advantages = Vec::with_capacity(len);
+        let mut rewards_to_go = Vec::with_capacity(len);
+        for t in 0..len {
+            advantages.push(adv[t * lanes + i]);
+            rewards_to_go.push(rtg[t * lanes + i]);
+        }
+        outs.push(GaeOutput { advantages, rewards_to_go });
+    }
+}
+
+/// Reusable per-worker arena for the group compute path — see the
+/// module docs for the full lifecycle. Public so the `worker_hotpath`
+/// bench can drive the exact buffers the worker reuses.
+pub struct WorkerScratch {
+    /// The group's lanes, moved out of the work items (flattened, group
+    /// order) so the tile chunking sees one contiguous slice.
+    pub(crate) flat: Vec<Lane>,
+    /// Packed-tile planes for the ragged fallback path.
+    pub tile: PaddedTile,
+    /// Dense `[T, W]` advantage plane the batched kernel writes into.
+    pub out_adv: Vec<f32>,
+    /// Dense `[T, W]` rewards-to-go plane.
+    pub out_rtg: Vec<f32>,
+    /// Per-lane true lengths handed to the unpack (slab path: all equal).
+    pub(crate) lens: Vec<usize>,
+    /// Per-lane outputs of one group, drained into the responses.
+    pub(crate) outs: Vec<GaeOutput>,
+    /// hwsim episode segments of the current group.
+    pub(crate) segments: Vec<Trajectory>,
+    /// `(lane, start, len)` of each segment, for stitching results back.
+    pub(crate) seg_index: Vec<(usize, usize, usize)>,
+    /// Recycled trajectory buffers behind `segments` — refilled by the
+    /// splitter, drained back after each simulate call.
+    pub(crate) seg_pool: Vec<Trajectory>,
+}
+
+impl WorkerScratch {
+    pub fn new() -> WorkerScratch {
+        WorkerScratch {
+            flat: Vec::new(),
+            tile: PaddedTile::empty(),
+            out_adv: Vec::new(),
+            out_rtg: Vec::new(),
+            lens: Vec::new(),
+            outs: Vec::new(),
+            segments: Vec::new(),
+            seg_index: Vec::new(),
+            seg_pool: Vec::new(),
+        }
+    }
+}
+
+impl Default for WorkerScratch {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 #[cfg(test)]
@@ -374,11 +503,52 @@ mod tests {
     }
 
     #[test]
-    fn tiling_respects_width() {
-        let t = Trajectory::without_dones(vec![0.0], vec![0.0, 0.0]);
-        let lanes: Vec<&Trajectory> = (0..10).map(|_| &t).collect();
-        let tiles = tile_lanes(&lanes, 4);
-        let widths: Vec<usize> = tiles.iter().map(|t| t.len()).collect();
-        assert_eq!(widths, vec![4, 4, 2]);
+    fn pack_lane_views_matches_the_allocating_build_after_reuse() {
+        check("repacked tile == fresh tile (bitwise)", 20, |g| {
+            let trajs = ragged_lanes(g, g.usize_in(1, 10), 24);
+            let refs: Vec<&Trajectory> = trajs.iter().collect();
+            let want = PaddedTile::from_lanes(&refs);
+            let owned: Vec<Lane> = trajs.iter().cloned().map(Lane::Owned).collect();
+            // Warm the scratch tile with a differently-shaped group
+            // first: the repack must fully overwrite stale state.
+            let warm = ragged_lanes(g, 3, 40);
+            let warm_lanes: Vec<Lane> =
+                warm.iter().cloned().map(Lane::Owned).collect();
+            let mut tile = PaddedTile::empty();
+            tile.pack_lane_views(&warm_lanes);
+            tile.pack_lane_views(&owned);
+            assert_eq!((tile.t_len, tile.lanes), (want.t_len, want.lanes));
+            assert_eq!(tile.lens, want.lens);
+            for (planes, want_planes) in [
+                (&tile.rewards, &want.rewards),
+                (&tile.values, &want.values),
+                (&tile.done_mask, &want.done_mask),
+            ] {
+                assert_eq!(planes.len(), want_planes.len());
+                for (a, b) in planes.iter().zip(want_planes) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        });
     }
+
+    #[test]
+    fn unpack_lanes_into_appends_exactly_what_unpack_returns() {
+        let mut g = Gen::new(5);
+        let trajs = ragged_lanes(&mut g, 6, 20);
+        let refs: Vec<&Trajectory> = trajs.iter().collect();
+        let tile = PaddedTile::from_lanes(&refs);
+        let out = gae_batched(&GaeParams::default(), &tile.to_gae_batch());
+        let want = tile.unpack(&out);
+        let mut outs = Vec::new();
+        unpack_lanes_into(
+            &tile.lens,
+            tile.lanes,
+            &out.advantages,
+            &out.rewards_to_go,
+            &mut outs,
+        );
+        assert_eq!(outs, want);
+    }
+
 }

@@ -61,6 +61,12 @@ pub struct ServiceMetrics {
     cache_misses: AtomicU64,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     routed_small: AtomicU64,
+    /// Tiles computed in place on a resident plane slab (zero gather).
+    slab_tiles: AtomicU64,
+    /// Tiles that fell back to the packed-tile gather.
+    packed_tiles: AtomicU64,
+    /// Plane bytes copied into packed tiles (slab tiles gather zero).
+    gathered_bytes: AtomicU64,
     hists: Mutex<PhaseHists>,
 }
 
@@ -85,6 +91,9 @@ impl ServiceMetrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             routed_small: AtomicU64::new(0),
+            slab_tiles: AtomicU64::new(0),
+            packed_tiles: AtomicU64::new(0),
+            gathered_bytes: AtomicU64::new(0),
             hists: Mutex::new(PhaseHists::new()),
         }
     }
@@ -120,21 +129,42 @@ impl ServiceMetrics {
     }
 
     /// A worker flushed one coalesced group of `lanes` trajectories.
-    pub(crate) fn record_batch(&self, lanes: usize, hw_cycles: Option<u64>) {
+    /// The group's backend compute is recorded into the compute
+    /// histogram here, **once per group** — every request in the group
+    /// rode the same computation, so recording it per request (as the
+    /// first generation did) inflated the compute p95/p99 by the group
+    /// fan-out.
+    pub(crate) fn record_batch(
+        &self,
+        lanes: usize,
+        hw_cycles: Option<u64>,
+        compute: Duration,
+    ) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_lanes.fetch_add(lanes as u64, Ordering::Relaxed);
         if let Some(c) = hw_cycles {
             self.hw_cycles.fetch_add(c, Ordering::Relaxed);
         }
+        self.hists.lock().unwrap().compute_us.push(log_us(compute));
     }
 
-    /// One request finished; `elements` = GAE elements it carried.
+    /// Tile-path accounting for one coalesced group: how many tiles ran
+    /// the slab fast path vs the packed gather, and the plane bytes the
+    /// packed tiles copied.
+    pub(crate) fn record_tiles(&self, slab: u64, packed: u64, gathered_bytes: u64) {
+        self.slab_tiles.fetch_add(slab, Ordering::Relaxed);
+        self.packed_tiles.fetch_add(packed, Ordering::Relaxed);
+        self.gathered_bytes.fetch_add(gathered_bytes, Ordering::Relaxed);
+    }
+
+    /// One request finished; `elements` = GAE elements it carried. The
+    /// compute phase is recorded per *group* in
+    /// [`ServiceMetrics::record_batch`], not here.
     pub(crate) fn record_completion(&self, elements: usize, timing: &RequestTiming) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(elements as u64, Ordering::Relaxed);
         let mut h = self.hists.lock().unwrap();
         h.queue_us.push(log_us(timing.queue));
-        h.compute_us.push(log_us(timing.compute));
         h.total_us.push(log_us(timing.total));
     }
 
@@ -146,15 +176,12 @@ impl ServiceMetrics {
         self.shed.load(Ordering::Relaxed)
     }
 
-    /// Point-in-time snapshot; queue depth/peak and the routing
-    /// threshold come from the caller (the service owns the queue and
-    /// the config).
-    pub fn snapshot(
-        &self,
-        queue_depth: usize,
-        peak_queue_depth: usize,
-        scalar_route_max_elements: usize,
-    ) -> MetricsSnapshot {
+    /// Point-in-time snapshot; the queue gauges and routing threshold
+    /// ride in as [`SnapshotInputs`] (the service owns the queue and the
+    /// config, not the recorder).
+    pub fn snapshot(&self, inputs: SnapshotInputs) -> MetricsSnapshot {
+        let SnapshotInputs { queue_depth, peak_queue_depth, scalar_route_max_elements } =
+            inputs;
         let uptime = self.started_at.elapsed();
         let h = self.hists.lock().unwrap();
         let batches = self.batches.load(Ordering::Relaxed);
@@ -168,6 +195,9 @@ impl ServiceMetrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             routed_small: self.routed_small.load(Ordering::Relaxed),
+            slab_tiles: self.slab_tiles.load(Ordering::Relaxed),
+            packed_tiles: self.packed_tiles.load(Ordering::Relaxed),
+            gathered_bytes: self.gathered_bytes.load(Ordering::Relaxed),
             scalar_route_max_elements,
             queue_depth,
             peak_queue_depth,
@@ -185,6 +215,20 @@ impl ServiceMetrics {
             total_us: LatencyQuantiles::of(&h.total_us),
         }
     }
+}
+
+/// Caller-owned gauges fed into [`ServiceMetrics::snapshot`]: the
+/// service owns the queue and the routing config, so their point-in-time
+/// values ride in by name instead of as three bare positional `usize`s
+/// (which tests used to call as an inscrutable `snapshot(0, 0, 0)`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SnapshotInputs {
+    /// Live queue depth.
+    pub queue_depth: usize,
+    /// High-water queue depth since start.
+    pub peak_queue_depth: usize,
+    /// The routing threshold in force (0 = routing disabled).
+    pub scalar_route_max_elements: usize,
 }
 
 /// p50/p95/p99 of one latency phase, in microseconds.
@@ -222,6 +266,13 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     pub routed_small: u64,
+    /// Tiles computed in place on a resident plane slab (zero gather).
+    pub slab_tiles: u64,
+    /// Tiles that fell back to the packed-tile gather.
+    pub packed_tiles: u64,
+    /// Plane bytes copied into packed tiles; the slab fast path
+    /// contributes zero here by construction.
+    pub gathered_bytes: u64,
     /// The routing threshold in force (0 = routing disabled).
     pub scalar_route_max_elements: usize,
     pub queue_depth: usize,
@@ -248,8 +299,12 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "batches:  {} flushed, {:.1} lanes/batch mean",
-            self.batches, self.mean_batch_lanes
+            "batches:  {} flushed, {:.1} lanes/batch mean | tiles {} slab / {} packed ({} B gathered)",
+            self.batches,
+            self.mean_batch_lanes,
+            self.slab_tiles,
+            self.packed_tiles,
+            self.gathered_bytes
         )?;
         writeln!(
             f,
@@ -287,6 +342,7 @@ mod tests {
         RequestTiming {
             queue: Duration::from_micros(queue_us),
             compute: Duration::from_micros(compute_us),
+            group_compute: Duration::from_micros(compute_us),
             total: Duration::from_micros(queue_us + compute_us),
         }
     }
@@ -302,16 +358,24 @@ mod tests {
         m.record_cache_miss();
         m.record_cache_miss();
         m.record_routed_small();
-        m.record_batch(32, Some(1000));
-        m.record_batch(16, None);
+        m.record_batch(32, Some(1000), Duration::from_micros(200));
+        m.record_batch(16, None, Duration::from_micros(100));
+        m.record_tiles(2, 1, 4096);
         m.record_completion(4096, &timing(50, 200));
-        let s = m.snapshot(3, 7, 512);
+        let s = m.snapshot(SnapshotInputs {
+            queue_depth: 3,
+            peak_queue_depth: 7,
+            scalar_route_max_elements: 512,
+        });
         assert_eq!(s.submitted, 2);
         assert_eq!(s.shed, 1);
         assert_eq!(s.quota_shed, 1);
         assert_eq!(s.cache_hits, 1);
         assert_eq!(s.cache_misses, 2);
         assert_eq!(s.routed_small, 1);
+        assert_eq!(s.slab_tiles, 2);
+        assert_eq!(s.packed_tiles, 1);
+        assert_eq!(s.gathered_bytes, 4096);
         assert_eq!(s.scalar_route_max_elements, 512);
         assert_eq!(s.completed, 1);
         assert_eq!(s.elements, 4096);
@@ -326,15 +390,15 @@ mod tests {
     #[test]
     fn log_histogram_quantiles_are_accurate_enough() {
         let m = ServiceMetrics::new();
-        // 100 requests at 100µs, 900 at 1000µs: p50 ~1000, p99 ~1000.
+        // 100 requests at 100µs, 900 at 1000µs total: p50 ~1000.
         for _ in 0..100 {
-            m.record_completion(1, &timing(0, 100));
+            m.record_completion(1, &timing(100, 0));
         }
         for _ in 0..900 {
-            m.record_completion(1, &timing(0, 1000));
+            m.record_completion(1, &timing(1000, 0));
         }
-        let s = m.snapshot(0, 0, 0);
-        let p50 = s.compute_us.p50;
+        let s = m.snapshot(SnapshotInputs::default());
+        let p50 = s.queue_us.p50;
         assert!((900.0..1150.0).contains(&p50), "p50 = {p50}");
         // Total-phase p99 within the log-bin resolution of 1100µs.
         let p99 = s.total_us.p99;
@@ -342,12 +406,35 @@ mod tests {
     }
 
     #[test]
+    fn compute_histogram_records_once_per_group() {
+        // Ten single-lane requests riding one coalesced group must leave
+        // exactly one compute sample (the group's), not ten — the p50 of
+        // a one-sample histogram is that sample.
+        let m = ServiceMetrics::new();
+        m.record_batch(10, None, Duration::from_micros(5000));
+        for _ in 0..10 {
+            m.record_completion(8, &timing(10, 500));
+        }
+        let s = m.snapshot(SnapshotInputs::default());
+        let p50 = s.compute_us.p50;
+        assert!(
+            (4000.0..6500.0).contains(&p50),
+            "compute p50 must reflect the single group sample, got {p50}"
+        );
+        assert_eq!(s.completed, 10);
+    }
+
+    #[test]
     fn display_mentions_the_headline_numbers() {
         let m = ServiceMetrics::new();
         m.record_submitted();
         m.record_completion(10, &timing(5, 10));
-        let text = m.snapshot(0, 1, 0).to_string();
-        for needle in ["p50", "p95", "p99", "shed", "elem/s", "cache", "quota"] {
+        let text = m
+            .snapshot(SnapshotInputs { peak_queue_depth: 1, ..Default::default() })
+            .to_string();
+        for needle in
+            ["p50", "p95", "p99", "shed", "elem/s", "cache", "quota", "slab"]
+        {
             assert!(text.contains(needle), "missing {needle}: {text}");
         }
     }

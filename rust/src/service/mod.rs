@@ -49,6 +49,14 @@
 //!   views (plane.rs), never gathered on the submitting thread; the
 //!   network front-end ([`crate::net`]) moves its decode buffers
 //!   straight into this path.
+//! - **The compute path is plane-resident and allocation-free in steady
+//!   state** — tiles whose lanes are consecutive columns of one shared
+//!   plane set take the **slab fast path** ([`slab_of`]): the batched
+//!   recurrence runs directly on the resident strided planes, zero bytes
+//!   gathered. Ragged tiles repack into the worker's long-lived
+//!   [`WorkerScratch`] arena (batcher.rs), so after warm-up neither path
+//!   allocates plane-sized buffers per group; the split is observable as
+//!   `slab_tiles` / `packed_tiles` / `gathered_bytes` in the snapshot.
 //! - **Small groups route to the scalar loop** — see
 //!   [`ServiceConfig::scalar_route_max_elements`].
 //!
@@ -68,9 +76,9 @@ pub mod request;
 pub mod server;
 pub mod worker;
 
-pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile};
-pub use metrics::{LatencyQuantiles, MetricsSnapshot, ServiceMetrics};
-pub use plane::{Lane, PlaneSet};
+pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile, WorkerScratch};
+pub use metrics::{LatencyQuantiles, MetricsSnapshot, ServiceMetrics, SnapshotInputs};
+pub use plane::{slab_of, Lane, PlaneSet, Slab};
 pub use queue::{BoundedQueue, PushError};
 pub use request::{GaeResponse, RequestTiming, ResponseHandle, ServiceError};
 pub use server::{GaeService, PlaneGae, PlanesPending, ServiceConfig};

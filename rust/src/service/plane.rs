@@ -67,6 +67,14 @@ impl PlaneSet {
         if t_len == 0 || batch == 0 {
             return Err(ServiceError::EmptyRequest);
         }
+        // The mask must be strictly binary: the slab fast path feeds it
+        // into the branch-free kernel as `not_done = 1.0 - mask`, while
+        // the lane accessors test `== 1.0` — any other value would make
+        // the two (bit-identical by contract) paths diverge, so it is
+        // rejected at the single entry point instead.
+        if let Some(index) = done_mask.iter().position(|&d| d != 0.0 && d != 1.0) {
+            return Err(ServiceError::NonBinaryDoneMask { index });
+        }
         Ok(PlaneSet { t_len, batch, rewards, values, done_mask })
     }
 
@@ -132,6 +140,69 @@ impl Lane {
             }
         }
     }
+}
+
+/// A contiguous column window of one shared [`PlaneSet`]: lanes
+/// `col0 .. col0 + width` of the same resident `[T, B]` planes, detected
+/// by [`slab_of`]. The worker's **slab fast path** runs the batched
+/// backward recurrence directly on these strided planes
+/// ([`gae_batched_strided_into`](crate::gae::batched::gae_batched_strided_into)
+/// with `stride = batch`), so the common coalesced group — equal-length
+/// columns of one `submit_plane_set` submission — computes with zero
+/// plane bytes gathered and zero allocations.
+#[derive(Debug, Clone, Copy)]
+pub struct Slab<'a> {
+    /// The shared plane set every lane in the window borrows.
+    pub planes: &'a PlaneSet,
+    /// First column of the window.
+    pub col0: usize,
+    /// Columns in the window.
+    pub width: usize,
+}
+
+impl<'a> Slab<'a> {
+    /// Rewards plane sliced to the window's first column: rows of
+    /// `width` live lanes every [`PlaneSet::batch`] elements.
+    pub fn rewards(&self) -> &'a [f32] {
+        &self.planes.rewards[self.col0..]
+    }
+
+    /// Values plane sliced likewise (`t_len + 1` rows; the last
+    /// bootstraps every lane).
+    pub fn values(&self) -> &'a [f32] {
+        &self.planes.values[self.col0..]
+    }
+
+    /// Done-mask plane sliced likewise.
+    pub fn done_mask(&self) -> &'a [f32] {
+        &self.planes.done_mask[self.col0..]
+    }
+}
+
+/// Detect the slab fast path: every lane is a borrowed column of the
+/// *same* plane set (pointer-equal `Arc`) and the columns form one
+/// contiguous ascending run. This is the shape `submit_plane_set`
+/// traffic arrives in — columns enqueued `0..B` in order and drained
+/// FIFO — so the common case computes in place on the resident planes;
+/// anything else (owned lanes, mixed sets, shuffled or gapped columns)
+/// returns `None` and falls back to the packed tile.
+pub fn slab_of(lanes: &[Lane]) -> Option<Slab<'_>> {
+    let (first, col0) = match lanes.first()? {
+        Lane::Column { planes, col } => (planes, *col),
+        Lane::Owned(_) => return None,
+    };
+    let mut next = col0 + 1;
+    for lane in &lanes[1..] {
+        match lane {
+            Lane::Column { planes, col }
+                if Arc::ptr_eq(planes, first) && *col == next =>
+            {
+                next += 1;
+            }
+            _ => return None,
+        }
+    }
+    Some(Slab { planes: first, col0, width: lanes.len() })
 }
 
 #[cfg(test)]
@@ -200,6 +271,22 @@ mod tests {
     }
 
     #[test]
+    fn non_binary_done_masks_are_rejected_at_the_entry_point() {
+        // The slab kernel consumes the mask as `1 - mask` while the lane
+        // accessors test `== 1.0`; a fractional value would make the two
+        // bit-identical-by-contract paths diverge, so it never gets in.
+        for bad in [0.5f32, -1.0, 2.0, f32::NAN] {
+            let mut mask = vec![0.0f32; 6];
+            mask[4] = bad;
+            let err = PlaneSet::new(2, 3, vec![0.0; 6], vec![0.0; 9], mask).unwrap_err();
+            assert_eq!(err, ServiceError::NonBinaryDoneMask { index: 4 }, "{bad}");
+            assert!(err.to_string().contains("done_mask[4]"), "{err}");
+        }
+        // Exact 0.0 / 1.0 everywhere is fine.
+        PlaneSet::new(2, 3, vec![0.0; 6], vec![0.0; 9], vec![1.0; 6]).unwrap();
+    }
+
+    #[test]
     fn owned_lane_passes_through() {
         let traj = Trajectory::new(
             vec![1.0, 2.0],
@@ -213,5 +300,64 @@ mod tests {
         assert_eq!(lane.value(2), 2.5);
         assert!(lane.done(1));
         assert!(!lane.done(0));
+    }
+
+    fn columns(planes: &Arc<PlaneSet>, cols: &[usize]) -> Vec<Lane> {
+        cols.iter()
+            .map(|&col| Lane::Column { planes: Arc::clone(planes), col })
+            .collect()
+    }
+
+    #[test]
+    fn slab_detects_contiguous_columns_of_one_set() {
+        let mut g = Gen::new(7);
+        let planes = Arc::new(plane_set(&mut g, 9, 6));
+        // Full run, interior window, and a single column all qualify.
+        for (cols, col0, width) in [
+            (vec![0, 1, 2, 3, 4, 5], 0, 6),
+            (vec![2, 3, 4], 2, 3),
+            (vec![5], 5, 1),
+        ] {
+            let lanes = columns(&planes, &cols);
+            let slab = slab_of(&lanes).expect("contiguous columns form a slab");
+            assert_eq!((slab.col0, slab.width), (col0, width));
+            assert_eq!(slab.planes.t_len, 9);
+            // The sliced planes index the right elements: row t of the
+            // window starts at t * batch within the slice.
+            assert_eq!(
+                slab.rewards()[2 * 6].to_bits(),
+                planes.rewards[2 * 6 + col0].to_bits()
+            );
+            assert_eq!(
+                slab.values()[9 * 6].to_bits(),
+                planes.values[9 * 6 + col0].to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn slab_rejects_everything_else() {
+        let mut g = Gen::new(8);
+        let planes = Arc::new(plane_set(&mut g, 5, 4));
+        let other = Arc::new(plane_set(&mut g, 5, 4));
+        // Gapped, descending, and duplicated columns.
+        for cols in [vec![0, 2], vec![3, 2], vec![1, 1]] {
+            assert!(slab_of(&columns(&planes, &cols)).is_none(), "{cols:?}");
+        }
+        // Two different plane sets, even with consecutive column ids.
+        let mut mixed = columns(&planes, &[0]);
+        mixed.extend(columns(&other, &[1]));
+        assert!(slab_of(&mixed).is_none());
+        // Any owned lane poisons the group.
+        let owned = Lane::Owned(Trajectory::new(
+            vec![1.0; 5],
+            vec![0.0; 6],
+            vec![false; 5],
+        ));
+        let mut with_owned = columns(&planes, &[0, 1]);
+        with_owned.push(owned);
+        assert!(slab_of(&with_owned).is_none());
+        // The empty group is no slab.
+        assert!(slab_of(&[]).is_none());
     }
 }

@@ -17,8 +17,15 @@ use std::time::{Duration, Instant};
 pub struct RequestTiming {
     /// Enqueue → picked up by a worker (queueing delay).
     pub queue: Duration,
-    /// Backend compute of the coalesced batch this request rode in.
+    /// This request's share of the coalesced group's backend compute,
+    /// pro-rated by element count. The whole group computes at once, so
+    /// attributing [`RequestTiming::group_compute`] to every member
+    /// would multiply-count the same wall time in any aggregate.
     pub compute: Duration,
+    /// Backend compute of the entire coalesced group this request rode
+    /// in — identical for every member of the group. The service-level
+    /// compute histogram records this once per group, not per request.
+    pub group_compute: Duration,
     /// Enqueue → response sent.
     pub total: Duration,
 }
@@ -65,6 +72,11 @@ pub enum ServiceError {
     /// A plane-shaped submission's buffer length disagrees with its
     /// declared `[T, B]` geometry.
     ShapeMismatch { plane: &'static str, got: usize, want: usize },
+    /// A plane-shaped submission's done mask holds a value other than
+    /// exactly 0.0 / 1.0 at `index`. The mask feeds the branch-free
+    /// kernels as `1 - mask`, so anything non-binary would silently
+    /// leak fractional bootstrap credit.
+    NonBinaryDoneMask { index: usize },
 }
 
 impl fmt::Display for ServiceError {
@@ -85,6 +97,11 @@ impl fmt::Display for ServiceError {
             ServiceError::ShapeMismatch { plane, got, want } => write!(
                 f,
                 "plane {plane:?} holds {got} elements, geometry implies {want}"
+            ),
+            ServiceError::NonBinaryDoneMask { index } => write!(
+                f,
+                "done_mask[{index}] is not exactly 0.0 or 1.0; plane submissions \
+                 require a strict binary mask"
             ),
         }
     }
@@ -168,6 +185,7 @@ mod tests {
             timing: RequestTiming {
                 queue: Duration::ZERO,
                 compute: Duration::ZERO,
+                group_compute: Duration::ZERO,
                 total: Duration::ZERO,
             },
         })

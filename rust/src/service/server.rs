@@ -5,7 +5,7 @@ use crate::coordinator::gae_stage::GaeBackend;
 use crate::gae::{GaeParams, Trajectory};
 use crate::hwsim::{GaeHwSim, SimConfig};
 use crate::service::batcher::{BatcherConfig, DynamicBatcher};
-use crate::service::metrics::{MetricsSnapshot, ServiceMetrics};
+use crate::service::metrics::{MetricsSnapshot, ServiceMetrics, SnapshotInputs};
 use crate::service::plane::{Lane, PlaneSet};
 use crate::service::queue::{BoundedQueue, PushError};
 use crate::service::request::{GaeResponse, ResponseHandle, ServiceError, WorkItem};
@@ -316,11 +316,11 @@ impl GaeService {
 
     /// Frozen metrics view (counters, shed, latency quantiles, elem/s).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot(
-            self.queue.len(),
-            self.queue.peak_depth(),
-            self.config.scalar_route_max_elements,
-        )
+        self.metrics.snapshot(SnapshotInputs {
+            queue_depth: self.queue.len(),
+            peak_queue_depth: self.queue.peak_depth(),
+            scalar_route_max_elements: self.config.scalar_route_max_elements,
+        })
     }
 
     /// The live metrics recorder — the network front-end records its
@@ -596,6 +596,7 @@ mod tests {
                 timing: RequestTiming {
                     queue: Duration::ZERO,
                     compute: Duration::ZERO,
+                    group_compute: Duration::ZERO,
                     total: Duration::ZERO,
                 },
             })

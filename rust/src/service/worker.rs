@@ -15,6 +15,18 @@
 //! through the lane accessors, so neither representation is gathered
 //! until (and unless) a backend needs a contiguous layout.
 //!
+//! **Slab fast path**: when a tile's lanes are consecutive columns of
+//! one shared [`PlaneSet`](crate::service::plane::PlaneSet) (detected by
+//! [`slab_of`]) — the shape `submit_plane_set` and the net server's
+//! decode buffers arrive in — the batched backward recurrence runs
+//! *directly on the resident strided planes*: zero plane bytes gathered,
+//! zero allocations. Ragged or mixed tiles fall back to the packed
+//! [`PaddedTile`](crate::service::batcher::PaddedTile), repacked into
+//! the worker's [`WorkerScratch`] so even the fallback allocates nothing
+//! once warm. Both paths are bit-identical to the scalar reference (the
+//! per-lane float expressions are the same); the split is counted in the
+//! metrics (`slab_tiles` / `packed_tiles` / `gathered_bytes`).
+//!
 //! **Size-threshold routing**: when
 //! [`ServiceConfig::scalar_route_max_elements`](crate::service::ServiceConfig)
 //! is nonzero, coalesced groups at or below that many GAE elements run
@@ -23,14 +35,14 @@
 //! routing them to the plain loop is strictly cheaper. Routed groups
 //! are counted in the metrics (`routed_small`) and report no `hw_cycles`.
 
-use crate::coordinator::gae_stage::{split_at_dones, GaeBackend};
-use crate::gae::batched::gae_batched;
+use crate::coordinator::gae_stage::{split_at_dones_with, GaeBackend};
+use crate::gae::batched::gae_batched_strided_into;
 use crate::gae::reference::gae_indexed;
-use crate::gae::{GaeOutput, GaeParams, Trajectory};
+use crate::gae::{GaeOutput, GaeParams};
 use crate::hwsim::GaeHwSim;
-use crate::service::batcher::{tile_lanes, unpack_lanes, DynamicBatcher, PaddedTile};
+use crate::service::batcher::{unpack_lanes_into, DynamicBatcher, WorkerScratch};
 use crate::service::metrics::ServiceMetrics;
-use crate::service::plane::Lane;
+use crate::service::plane::{slab_of, Lane};
 use crate::service::queue::BoundedQueue;
 use crate::service::request::{GaeResponse, RequestTiming, WorkItem};
 use std::sync::Arc;
@@ -51,35 +63,63 @@ pub(crate) struct WorkerContext {
     pub metrics: Arc<ServiceMetrics>,
 }
 
-/// Run until the queue is closed and drained.
+/// Run until the queue is closed and drained. The scratch arena lives
+/// for the whole loop: after one maximum-shape group its buffers stop
+/// growing and per-group heap traffic on the compute path is zero.
 pub(crate) fn worker_loop(ctx: WorkerContext) {
+    let mut scratch = WorkerScratch::new();
     let mut batch_seq = 0u64;
     while let Some(group) = ctx.batcher.next_group(&ctx.queue) {
-        process_group(&ctx, group, batch_seq);
+        process_group(&ctx, &mut scratch, group, batch_seq);
         batch_seq += 1;
     }
 }
 
-fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>, batch_seq: u64) {
+fn process_group(
+    ctx: &WorkerContext,
+    scratch: &mut WorkerScratch,
+    mut group: Vec<WorkItem>,
+    batch_seq: u64,
+) {
     let picked_at = Instant::now();
-    let lanes: Vec<&Lane> =
-        group.iter().flat_map(|item| item.lanes.iter()).collect();
-    let total_lanes = lanes.len();
+    // Move (not gather) every item's lanes into the reusable flat list;
+    // `lane_count` stays behind on the item for the response split.
+    let mut flat = std::mem::take(&mut scratch.flat);
+    debug_assert!(flat.is_empty());
+    for item in &mut group {
+        flat.append(&mut item.lanes);
+    }
+    let total_lanes = flat.len();
+    let group_elements: usize = flat.iter().map(|l| l.len()).sum();
 
+    scratch.outs.clear();
     let compute_start = Instant::now();
-    let (mut outputs, hw_cycles) = compute_lanes(ctx, &lanes);
+    let hw_cycles = compute_lanes(ctx, scratch, &flat);
     let compute = compute_start.elapsed();
+    // Dropping the lanes releases the clients' plane references; the
+    // flat list itself keeps its capacity for the next group.
+    flat.clear();
+    scratch.flat = flat;
 
-    ctx.metrics.record_batch(total_lanes, hw_cycles);
+    // The group's compute is recorded once here; per-item timings below
+    // carry their pro-rata share (see RequestTiming::compute).
+    ctx.metrics.record_batch(total_lanes, hw_cycles, compute);
 
+    let mut outputs = std::mem::take(&mut scratch.outs);
+    debug_assert_eq!(outputs.len(), total_lanes);
     // Hand each request its slice of the lane outputs, input order.
     for item in group {
-        let rest = outputs.split_off(item.lane_count);
-        let item_outputs = std::mem::replace(&mut outputs, rest);
+        let item_outputs: Vec<GaeOutput> = outputs.drain(..item.lane_count).collect();
         let elements: usize = item_outputs.iter().map(|o| o.advantages.len()).sum();
+        let share = if group_elements == 0 {
+            0.0
+        } else {
+            elements as f64 / group_elements as f64
+        };
         let timing = RequestTiming {
             queue: picked_at.duration_since(item.enqueued_at),
-            compute,
+            compute: compute.mul_f64(share),
+            group_compute: compute,
             total: item.enqueued_at.elapsed(),
         };
         ctx.metrics.record_completion(elements, &timing);
@@ -94,6 +134,7 @@ fn process_group(ctx: &WorkerContext, group: Vec<WorkItem>, batch_seq: u64) {
         });
     }
     debug_assert!(outputs.is_empty(), "every lane output must be consumed");
+    scratch.outs = outputs;
 }
 
 /// The scalar loop over one lane (owned or strided column) — delegates
@@ -111,7 +152,7 @@ fn gae_lane(params: &GaeParams, lane: &Lane) -> GaeOutput {
 
 /// Pick the backend for one coalesced group: the configured one, unless
 /// size-threshold routing sends a small group to the scalar loop.
-fn route_backend(ctx: &WorkerContext, lanes: &[&Lane]) -> GaeBackend {
+fn route_backend(ctx: &WorkerContext, lanes: &[Lane]) -> GaeBackend {
     if ctx.scalar_route_max_elements > 0 && ctx.backend != GaeBackend::Scalar {
         let elements: usize = lanes.iter().map(|l| l.len()).sum();
         if elements <= ctx.scalar_route_max_elements {
@@ -122,65 +163,117 @@ fn route_backend(ctx: &WorkerContext, lanes: &[&Lane]) -> GaeBackend {
     ctx.backend
 }
 
-/// Compute GAE for a flat list of lanes on this worker's backend.
-/// Returns per-lane outputs (input order) and, for hwsim, the simulated
-/// cycle count of the coalesced batch.
+/// Compute GAE for a flat list of lanes on this worker's backend,
+/// appending one output per lane (input order) onto `scratch.outs`.
+/// Returns the simulated cycle count of the coalesced batch (hwsim
+/// backend only) and records the slab/packed tile split in the metrics.
 fn compute_lanes(
     ctx: &WorkerContext,
-    lanes: &[&Lane],
-) -> (Vec<GaeOutput>, Option<u64>) {
+    scratch: &mut WorkerScratch,
+    lanes: &[Lane],
+) -> Option<u64> {
     match route_backend(ctx, lanes) {
         GaeBackend::Scalar => {
             // The per-trajectory CPU loop — the baseline shape.
-            let outs = lanes.iter().map(|lane| gae_lane(&ctx.params, lane)).collect();
-            (outs, None)
+            for lane in lanes {
+                scratch.outs.push(gae_lane(&ctx.params, lane));
+            }
+            None
         }
         GaeBackend::Batched | GaeBackend::Hlo => {
             // Fixed [T, B] tiles through the timestep-major engine. (Hlo
             // is rejected at service start; the arm keeps the match total.)
-            let mut outs = Vec::with_capacity(lanes.len());
-            for tile_set in tile_lanes(lanes, ctx.batcher.config.tile_lanes) {
-                let (batch, lens) = PaddedTile::from_lane_views(&tile_set).into_parts();
-                let out = gae_batched(&ctx.params, &batch);
-                outs.extend(unpack_lanes(&lens, batch.batch, &out));
+            let width = ctx.batcher.config.tile_lanes.max(1);
+            let (mut slab_tiles, mut packed_tiles, mut gathered_bytes) = (0u64, 0u64, 0u64);
+            let WorkerScratch { tile, out_adv, out_rtg, lens, outs, .. } = scratch;
+            for tile_set in lanes.chunks(width) {
+                if let Some(slab) = slab_of(tile_set) {
+                    // Slab fast path: the recurrence runs directly on the
+                    // shared plane set's strided columns — nothing copied.
+                    let t_len = slab.planes.t_len;
+                    gae_batched_strided_into(
+                        &ctx.params,
+                        t_len,
+                        slab.width,
+                        slab.planes.batch,
+                        slab.rewards(),
+                        slab.values(),
+                        slab.done_mask(),
+                        out_adv,
+                        out_rtg,
+                    );
+                    lens.clear();
+                    lens.resize(slab.width, t_len);
+                    slab_tiles += 1;
+                } else {
+                    // Ragged fallback: gather into the scratch tile
+                    // (leak-free padding), then the same kernel.
+                    tile.pack_lane_views(tile_set);
+                    gae_batched_strided_into(
+                        &ctx.params,
+                        tile.t_len,
+                        tile.lanes,
+                        tile.lanes,
+                        &tile.rewards,
+                        &tile.values,
+                        &tile.done_mask,
+                        out_adv,
+                        out_rtg,
+                    );
+                    lens.clear();
+                    lens.extend_from_slice(&tile.lens);
+                    packed_tiles += 1;
+                    gathered_bytes += 4
+                        * (2 * tile.padded_elements()
+                            + (tile.t_len + 1) * tile.lanes)
+                            as u64;
+                }
+                unpack_lanes_into(lens, lens.len(), out_adv, out_rtg, outs);
             }
-            (outs, None)
+            ctx.metrics.record_tiles(slab_tiles, packed_tiles, gathered_bytes);
+            None
         }
         GaeBackend::HwSim => {
             let sim = ctx.sim.as_ref().expect("hwsim worker owns a sim");
             // Rows take single-episode vectors: split each lane at its
-            // dones (same preprocessing as the trainer's GAE stage).
-            let mut segments: Vec<Trajectory> = Vec::new();
-            let mut index: Vec<(usize, usize, usize)> = Vec::new(); // (lane, start, len)
+            // dones (same preprocessing as the trainer's GAE stage),
+            // refilling recycled trajectory buffers from the pool.
+            let WorkerScratch { segments, seg_index, seg_pool, outs, .. } = scratch;
+            debug_assert!(segments.is_empty());
+            seg_index.clear();
             for (lane_idx, lane) in lanes.iter().enumerate() {
-                for (start, seg) in split_at_dones(
+                split_at_dones_with(
                     |t| lane.reward(t),
                     |t| lane.value(t),
                     |t| lane.done(t),
                     lane.len(),
-                ) {
-                    index.push((lane_idx, start, seg.len()));
-                    segments.push(seg);
-                }
+                    seg_pool,
+                    |start, seg| {
+                        seg_index.push((lane_idx, start, seg.len()));
+                        segments.push(seg);
+                    },
+                );
             }
-            let rep = sim.simulate(&segments);
+            let rep = sim.simulate(segments);
             // Stitch segments back into per-lane outputs.
-            let mut outs: Vec<GaeOutput> = lanes
-                .iter()
-                .map(|lane| GaeOutput {
+            let base = outs.len();
+            for lane in lanes {
+                outs.push(GaeOutput {
                     advantages: vec![0.0; lane.len()],
                     rewards_to_go: vec![0.0; lane.len()],
-                })
-                .collect();
-            for ((lane_idx, start, len), seg_out) in
-                index.into_iter().zip(rep.outputs)
+                });
+            }
+            for (&(lane_idx, start, len), seg_out) in
+                seg_index.iter().zip(rep.outputs)
             {
-                outs[lane_idx].advantages[start..start + len]
+                outs[base + lane_idx].advantages[start..start + len]
                     .copy_from_slice(&seg_out.advantages);
-                outs[lane_idx].rewards_to_go[start..start + len]
+                outs[base + lane_idx].rewards_to_go[start..start + len]
                     .copy_from_slice(&seg_out.rewards_to_go);
             }
-            (outs, Some(rep.cycles))
+            // Return the segment buffers to the pool for the next group.
+            seg_pool.extend(segments.drain(..));
+            Some(rep.cycles)
         }
     }
 }
@@ -189,8 +282,10 @@ fn compute_lanes(
 mod tests {
     use super::*;
     use crate::gae::reference::gae_trajectory;
+    use crate::gae::Trajectory;
     use crate::hwsim::SimConfig;
     use crate::service::batcher::BatcherConfig;
+    use crate::service::metrics::SnapshotInputs;
     use crate::service::plane::PlaneSet;
     use crate::testing::{check, Gen};
 
@@ -213,6 +308,14 @@ mod tests {
         }
     }
 
+    /// Test shim over the worker's exact compute path: fresh scratch,
+    /// outputs handed back.
+    fn run(ctx: &WorkerContext, lanes: &[Lane]) -> (Vec<GaeOutput>, Option<u64>) {
+        let mut scratch = WorkerScratch::new();
+        let cycles = compute_lanes(ctx, &mut scratch, lanes);
+        (std::mem::take(&mut scratch.outs), cycles)
+    }
+
     fn random_lanes(g: &mut Gen) -> Vec<Trajectory> {
         (0..g.usize_in(1, 10))
             .map(|_| {
@@ -226,16 +329,40 @@ mod tests {
             .collect()
     }
 
+    fn random_plane_set(g: &mut Gen, t_len: usize, batch: usize) -> PlaneSet {
+        PlaneSet::new(
+            t_len,
+            batch,
+            g.vec_normal_f32(t_len * batch, 0.0, 1.0),
+            g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0),
+            (0..t_len * batch)
+                .map(|_| if g.bool_p(0.1) { 1.0 } else { 0.0 })
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    fn column_reference(planes: &PlaneSet, col: usize) -> GaeOutput {
+        let (t_len, batch) = (planes.t_len, planes.batch);
+        let gathered = Trajectory::new(
+            (0..t_len).map(|t| planes.rewards[t * batch + col]).collect(),
+            (0..=t_len).map(|t| planes.values[t * batch + col]).collect(),
+            (0..t_len)
+                .map(|t| planes.done_mask[t * batch + col] == 1.0)
+                .collect(),
+        );
+        gae_trajectory(&GaeParams::default(), &gathered)
+    }
+
     #[test]
     fn every_backend_matches_the_scalar_reference() {
         check("service backends == reference", 15, |g| {
             let trajs = random_lanes(g);
             let owned: Vec<Lane> =
                 trajs.iter().cloned().map(Lane::Owned).collect();
-            let lanes: Vec<&Lane> = owned.iter().collect();
             for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
                 let c = ctx(backend);
-                let (outs, cycles) = compute_lanes(&c, &lanes);
+                let (outs, cycles) = run(&c, &owned);
                 assert_eq!(outs.len(), trajs.len());
                 if backend == GaeBackend::HwSim {
                     assert!(cycles.unwrap() > 0);
@@ -261,20 +388,11 @@ mod tests {
     fn column_lanes_match_owned_lanes_bitwise() {
         // The zero-copy contract: a borrowed plane column computes the
         // exact bits of its gathered per-column trajectory, per backend.
+        // On the batched backend this pits the slab fast path (columns)
+        // against the packed-tile path (owned) directly.
         check("column lanes == owned lanes (bitwise)", 8, |g| {
             let (t_len, batch) = (g.usize_in(2, 24), g.usize_in(1, 5));
-            let planes = Arc::new(
-                PlaneSet::new(
-                    t_len,
-                    batch,
-                    g.vec_normal_f32(t_len * batch, 0.0, 1.0),
-                    g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0),
-                    (0..t_len * batch)
-                        .map(|_| if g.bool_p(0.1) { 1.0 } else { 0.0 })
-                        .collect(),
-                )
-                .unwrap(),
-            );
+            let planes = Arc::new(random_plane_set(g, t_len, batch));
             let columns: Vec<Lane> = (0..batch)
                 .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
                 .collect();
@@ -291,10 +409,8 @@ mod tests {
                 .collect();
             for backend in [GaeBackend::Scalar, GaeBackend::Batched, GaeBackend::HwSim] {
                 let c = ctx(backend);
-                let col_refs: Vec<&Lane> = columns.iter().collect();
-                let own_refs: Vec<&Lane> = gathered.iter().collect();
-                let (col_out, _) = compute_lanes(&c, &col_refs);
-                let (own_out, _) = compute_lanes(&c, &own_refs);
+                let (col_out, _) = run(&c, &columns);
+                let (own_out, _) = run(&c, &gathered);
                 for (a, b) in col_out.iter().zip(&own_out) {
                     for t in 0..a.advantages.len() {
                         assert_eq!(
@@ -314,19 +430,156 @@ mod tests {
     }
 
     #[test]
+    fn slab_fast_path_engages_for_aligned_groups_and_gathers_nothing() {
+        let mut g = Gen::new(31);
+        let (t_len, batch) = (12, 6);
+        let planes = Arc::new(random_plane_set(&mut g, t_len, batch));
+        let columns: Vec<Lane> = (0..batch)
+            .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
+            .collect();
+        let c = ctx(GaeBackend::Batched); // tile_lanes = 4 → tiles [4, 2]
+        let (outs, _) = run(&c, &columns);
+        let snap = c.metrics.snapshot(SnapshotInputs::default());
+        assert_eq!(snap.slab_tiles, 2, "both tiles must take the slab path");
+        assert_eq!(snap.packed_tiles, 0);
+        assert_eq!(snap.gathered_bytes, 0, "slab path must gather zero bytes");
+        for (col, got) in outs.iter().enumerate() {
+            let want = column_reference(&planes, col);
+            for t in 0..t_len {
+                assert_eq!(got.advantages[t].to_bits(), want.advantages[t].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn shuffled_columns_fall_back_to_the_packed_tile_with_identical_bits() {
+        // Reversed column order defeats the contiguity check, so the
+        // same data must flow through the packed gather — and come out
+        // bit-identical to the slab path's answer.
+        let mut g = Gen::new(32);
+        let (t_len, batch) = (9, 4);
+        let planes = Arc::new(random_plane_set(&mut g, t_len, batch));
+        let reversed: Vec<Lane> = (0..batch)
+            .rev()
+            .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
+            .collect();
+        let c = ctx(GaeBackend::Batched);
+        let (outs, _) = run(&c, &reversed);
+        let snap = c.metrics.snapshot(SnapshotInputs::default());
+        assert_eq!(snap.slab_tiles, 0);
+        assert_eq!(snap.packed_tiles, 1);
+        assert!(snap.gathered_bytes > 0);
+        for (i, got) in outs.iter().enumerate() {
+            let want = column_reference(&planes, batch - 1 - i);
+            for t in 0..t_len {
+                assert_eq!(got.advantages[t].to_bits(), want.advantages[t].to_bits());
+                assert_eq!(
+                    got.rewards_to_go[t].to_bits(),
+                    want.rewards_to_go[t].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_groups_stays_bit_exact() {
+        // One long-lived scratch over alternating slab / ragged / hwsim
+        // groups — exactly the worker loop's life — must never let a
+        // previous group's state leak into the next result.
+        check("scratch reuse == fresh scratch", 6, |g| {
+            let c = ctx(GaeBackend::Batched);
+            let mut scratch = WorkerScratch::new();
+            for _ in 0..4 {
+                let lanes: Vec<Lane> = if g.bool_p(0.5) {
+                    let (t_len, batch) = (g.usize_in(1, 20), g.usize_in(1, 6));
+                    let planes = Arc::new(random_plane_set(g, t_len, batch));
+                    (0..batch)
+                        .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
+                        .collect()
+                } else {
+                    random_lanes(g).into_iter().map(Lane::Owned).collect()
+                };
+                scratch.outs.clear();
+                compute_lanes(&c, &mut scratch, &lanes);
+                let reused = std::mem::take(&mut scratch.outs);
+                let (fresh, _) = run(&c, &lanes);
+                assert_eq!(reused.len(), fresh.len());
+                for (a, b) in reused.iter().zip(&fresh) {
+                    for t in 0..a.advantages.len() {
+                        assert_eq!(a.advantages[t].to_bits(), b.advantages[t].to_bits());
+                        assert_eq!(
+                            a.rewards_to_go[t].to_bits(),
+                            b.rewards_to_go[t].to_bits()
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn per_item_compute_is_a_share_of_group_compute() {
+        use std::sync::mpsc;
+        let c = ctx(GaeBackend::Scalar);
+        let mut scratch = WorkerScratch::new();
+        let mut g = Gen::new(41);
+        // Two items of very different sizes riding one group.
+        let sizes = [60usize, 12];
+        let mut rxs = Vec::new();
+        let mut group = Vec::new();
+        for (id, &t_len) in sizes.iter().enumerate() {
+            let traj = Trajectory::new(
+                g.vec_normal_f32(t_len, 0.0, 1.0),
+                g.vec_normal_f32(t_len + 1, 0.0, 1.0),
+                vec![false; t_len],
+            );
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            group.push(WorkItem {
+                id: id as u64,
+                lanes: vec![Lane::Owned(traj)],
+                lane_count: 1,
+                enqueued_at: Instant::now(),
+                tx,
+            });
+        }
+        process_group(&c, &mut scratch, group, 0);
+        let big = rxs[0].recv().unwrap();
+        let small = rxs[1].recv().unwrap();
+        // Same group → same group_compute; shares are proportional and
+        // sum back to (at most) the whole.
+        assert_eq!(big.timing.group_compute, small.timing.group_compute);
+        assert!(big.timing.compute <= big.timing.group_compute);
+        assert!(small.timing.compute <= small.timing.group_compute);
+        assert!(
+            big.timing.compute >= small.timing.compute,
+            "the larger item must carry the larger share"
+        );
+        let sum = big.timing.compute + small.timing.compute;
+        let whole = big.timing.group_compute;
+        assert!(
+            sum <= whole + std::time::Duration::from_nanos(2),
+            "shares must not exceed the group compute: {sum:?} vs {whole:?}"
+        );
+    }
+
+    #[test]
     fn small_groups_route_to_scalar_and_are_counted() {
         let mut g = Gen::new(9);
         let trajs = random_lanes(&mut g);
         let owned: Vec<Lane> = trajs.iter().cloned().map(Lane::Owned).collect();
-        let lanes: Vec<&Lane> = owned.iter().collect();
         let elements: usize = trajs.iter().map(|t| t.len()).sum();
 
         // Threshold above the group size: routed (no cycles reported).
         let mut c = ctx(GaeBackend::HwSim);
         c.scalar_route_max_elements = elements;
-        let (outs, cycles) = compute_lanes(&c, &lanes);
+        let (outs, cycles) = run(&c, &owned);
         assert!(cycles.is_none(), "routed group must not report hw cycles");
-        assert_eq!(c.metrics.snapshot(0, 0, c.scalar_route_max_elements).routed_small, 1);
+        let snap = c.metrics.snapshot(SnapshotInputs {
+            scalar_route_max_elements: c.scalar_route_max_elements,
+            ..Default::default()
+        });
+        assert_eq!(snap.routed_small, 1);
         for (traj, got) in trajs.iter().zip(&outs) {
             let want = gae_trajectory(&GaeParams::default(), traj);
             for t in 0..traj.len() {
@@ -337,8 +590,8 @@ mod tests {
         // Threshold below the group size (or 0 = disabled): not routed.
         let mut c = ctx(GaeBackend::HwSim);
         c.scalar_route_max_elements = elements - 1;
-        let (_, cycles) = compute_lanes(&c, &lanes);
+        let (_, cycles) = run(&c, &owned);
         assert!(cycles.unwrap() > 0);
-        assert_eq!(c.metrics.snapshot(0, 0, 0).routed_small, 0);
+        assert_eq!(c.metrics.snapshot(SnapshotInputs::default()).routed_small, 0);
     }
 }

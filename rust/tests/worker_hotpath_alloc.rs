@@ -1,0 +1,315 @@
+//! Steady-state allocation guard + bit-identity property tests for the
+//! worker hot path.
+//!
+//! The guard drives the exact public functions the worker's compute
+//! path is built from — `slab_of` + `gae_batched_strided_into` (slab
+//! fast path) and `PaddedTile::pack_lane_views` + the same kernel
+//! (ragged fallback) — under a counting allocator, and asserts the
+//! warmed paths allocate **zero** times per group while the seed-shaped
+//! `from_lane_views` path pays ≥ 4 allocations. Counting is
+//! thread-local so parallel test threads cannot pollute a measurement.
+//!
+//! The property test pins the acceptance bar: the slab path, the
+//! packed-tile path, and the scalar reference are bit-identical across
+//! random ragged and aligned groups (including column windows with
+//! `stride > width`).
+
+use heppo::coordinator::GaeBackend;
+use heppo::gae::batched::{gae_batched, gae_batched_strided_into};
+use heppo::gae::reference::gae_indexed;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::service::batcher::unpack_lanes_into;
+use heppo::service::plane::{slab_of, Lane, PlaneSet};
+use heppo::service::{GaeService, PaddedTile, ServiceConfig};
+use heppo::testing::{check, Gen};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+thread_local! {
+    static TLS_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Pass-through allocator counting per-thread allocations (realloc
+/// included — growing a vector is an allocation event).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TLS_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TLS_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    TLS_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+fn plane_set(g: &mut Gen, t_len: usize, batch: usize) -> PlaneSet {
+    PlaneSet::new(
+        t_len,
+        batch,
+        g.vec_normal_f32(t_len * batch, 0.0, 1.0),
+        g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0),
+        (0..t_len * batch)
+            .map(|_| if g.bool_p(0.1) { 1.0 } else { 0.0 })
+            .collect(),
+    )
+    .unwrap()
+}
+
+fn column_lanes(planes: &Arc<PlaneSet>, cols: std::ops::Range<usize>) -> Vec<Lane> {
+    cols.map(|col| Lane::Column { planes: Arc::clone(planes), col }).collect()
+}
+
+fn ragged_owned(g: &mut Gen, n: usize, max_t: usize) -> Vec<Lane> {
+    (0..n)
+        .map(|_| {
+            let len = g.usize_in(1, max_t);
+            Lane::Owned(Trajectory::new(
+                g.vec_normal_f32(len, 0.0, 1.0),
+                g.vec_normal_f32(len + 1, 0.0, 1.0),
+                (0..len).map(|_| g.bool_p(0.1)).collect(),
+            ))
+        })
+        .collect()
+}
+
+#[test]
+fn slab_path_steady_state_allocates_nothing() {
+    let mut g = Gen::new(1);
+    let params = GaeParams::default();
+    let planes = Arc::new(plane_set(&mut g, 128, 16));
+    let lanes = column_lanes(&planes, 0..16);
+    let mut adv = Vec::new();
+    let mut rtg = Vec::new();
+    let mut lens: Vec<usize> = Vec::new();
+    // Warm-up grows the scratch buffers once.
+    let slab = slab_of(&lanes).expect("aligned columns form a slab");
+    gae_batched_strided_into(
+        &params,
+        slab.planes.t_len,
+        slab.width,
+        slab.planes.batch,
+        slab.rewards(),
+        slab.values(),
+        slab.done_mask(),
+        &mut adv,
+        &mut rtg,
+    );
+    lens.resize(slab.width, slab.planes.t_len);
+
+    let before = thread_allocs();
+    for _ in 0..32 {
+        let slab = slab_of(&lanes).unwrap();
+        gae_batched_strided_into(
+            &params,
+            slab.planes.t_len,
+            slab.width,
+            slab.planes.batch,
+            slab.rewards(),
+            slab.values(),
+            slab.done_mask(),
+            &mut adv,
+            &mut rtg,
+        );
+        lens.clear();
+        lens.resize(slab.width, slab.planes.t_len);
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "slab fast path must be allocation-free in steady state"
+    );
+    assert!(adv.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn packed_scratch_is_allocation_free_and_seed_path_is_not() {
+    let mut g = Gen::new(2);
+    let params = GaeParams::default();
+    let lanes = ragged_owned(&mut g, 12, 64);
+    let mut tile = PaddedTile::empty();
+    let mut adv = Vec::new();
+    let mut rtg = Vec::new();
+    // Warm-up.
+    tile.pack_lane_views(&lanes);
+    gae_batched_strided_into(
+        &params,
+        tile.t_len,
+        tile.lanes,
+        tile.lanes,
+        &tile.rewards,
+        &tile.values,
+        &tile.done_mask,
+        &mut adv,
+        &mut rtg,
+    );
+
+    // Warmed scratch repack: zero allocations per group.
+    let before = thread_allocs();
+    for _ in 0..32 {
+        tile.pack_lane_views(&lanes);
+        gae_batched_strided_into(
+            &params,
+            tile.t_len,
+            tile.lanes,
+            tile.lanes,
+            &tile.rewards,
+            &tile.values,
+            &tile.done_mask,
+            &mut adv,
+            &mut rtg,
+        );
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "warmed packed fallback must be allocation-free"
+    );
+
+    // The seed-shaped path: a fresh tile (4 plane/len vectors) plus a
+    // fresh output pair, every single group.
+    let before = thread_allocs();
+    let fresh = PaddedTile::from_lane_views(&lanes);
+    let (batch, _lens) = fresh.into_parts();
+    let out = gae_batched(&params, &batch);
+    let seed_allocs = thread_allocs() - before;
+    assert!(
+        seed_allocs >= 4,
+        "seed path should allocate >= 4 times per group, counted {seed_allocs}"
+    );
+    assert_eq!(out.advantages.len(), batch.t_len * batch.batch);
+}
+
+#[test]
+fn slab_packed_and_scalar_reference_are_bit_identical() {
+    check("slab == packed == scalar (random groups)", 25, |g| {
+        let params = GaeParams::default();
+        // Aligned: a column window (stride >= width) of a wider set.
+        let t_len = g.usize_in(1, 48);
+        let width = g.usize_in(1, 12);
+        let batch = width + g.usize_in(0, 5);
+        let col0 = g.usize_in(0, batch - width);
+        let planes = Arc::new(plane_set(g, t_len, batch));
+        let lanes = column_lanes(&planes, col0..col0 + width);
+
+        let slab = slab_of(&lanes).expect("window must be a slab");
+        assert_eq!((slab.col0, slab.width), (col0, width));
+        let mut slab_adv = Vec::new();
+        let mut slab_rtg = Vec::new();
+        gae_batched_strided_into(
+            &params,
+            t_len,
+            slab.width,
+            slab.planes.batch,
+            slab.rewards(),
+            slab.values(),
+            slab.done_mask(),
+            &mut slab_adv,
+            &mut slab_rtg,
+        );
+
+        let (tile_batch, lens) = PaddedTile::from_lane_views(&lanes).into_parts();
+        let packed = gae_batched(&params, &tile_batch);
+
+        for (i, lane) in lanes.iter().enumerate() {
+            let want = gae_indexed(
+                &params,
+                lane.len(),
+                |t| lane.reward(t),
+                |t| lane.value(t),
+                |t| lane.done(t),
+            );
+            for t in 0..t_len {
+                let w = want.advantages[t].to_bits();
+                assert_eq!(slab_adv[t * width + i].to_bits(), w, "slab col {i} t {t}");
+                assert_eq!(
+                    packed.advantages[t * width + i].to_bits(),
+                    w,
+                    "packed col {i} t {t}"
+                );
+                let wr = want.rewards_to_go[t].to_bits();
+                assert_eq!(slab_rtg[t * width + i].to_bits(), wr);
+                assert_eq!(packed.rewards_to_go[t * width + i].to_bits(), wr);
+            }
+        }
+        assert_eq!(lens, vec![t_len; width]);
+
+        // Ragged: owned lanes through the packed fallback vs scalar.
+        let ragged = ragged_owned(g, g.usize_in(1, 8), 24);
+        let (rb, rlens) = PaddedTile::from_lane_views(&ragged).into_parts();
+        let rout = gae_batched(&params, &rb);
+        let mut per_lane = Vec::new();
+        unpack_lanes_into(&rlens, rb.batch, &rout.advantages, &rout.rewards_to_go, &mut per_lane);
+        for (lane, got) in ragged.iter().zip(&per_lane) {
+            let want = gae_indexed(
+                &params,
+                lane.len(),
+                |t| lane.reward(t),
+                |t| lane.value(t),
+                |t| lane.done(t),
+            );
+            assert_eq!(got.advantages.len(), lane.len());
+            for t in 0..lane.len() {
+                assert_eq!(got.advantages[t].to_bits(), want.advantages[t].to_bits());
+                assert_eq!(
+                    got.rewards_to_go[t].to_bits(),
+                    want.rewards_to_go[t].to_bits()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn service_counts_slab_tiles_for_plane_sets_and_packed_for_ragged() {
+    let svc = GaeService::start(ServiceConfig {
+        workers: 1,
+        backend: GaeBackend::Batched,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let mut g = Gen::new(9);
+    let (t_len, batch) = (32, 8);
+    let planes = plane_set(&mut g, t_len, batch);
+    let got = svc
+        .submit_plane_set(planes)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(got.advantages.len(), t_len * batch);
+    let snap = svc.metrics();
+    assert!(snap.slab_tiles > 0, "plane-set traffic must ride the slab path");
+    assert_eq!(snap.gathered_bytes, 0, "slab groups must gather zero bytes");
+    assert_eq!(snap.packed_tiles, 0);
+
+    // Ragged owned trajectories force the packed fallback.
+    let trajs: Vec<Trajectory> = (0..5)
+        .map(|i| {
+            let len = 6 + i;
+            Trajectory::new(
+                g.vec_normal_f32(len, 0.0, 1.0),
+                g.vec_normal_f32(len + 1, 0.0, 1.0),
+                vec![false; len],
+            )
+        })
+        .collect();
+    svc.submit(trajs).unwrap();
+    let snap = svc.metrics();
+    assert!(snap.packed_tiles > 0, "ragged traffic must take the packed fallback");
+    assert!(snap.gathered_bytes > 0);
+    svc.shutdown();
+}
