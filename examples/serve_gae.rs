@@ -10,8 +10,14 @@
 //! - **`--connect ADDR`**: drive a remote front-end with the pipelined
 //!   [`heppo::net::NetClient`] — `--inflight N` frames in flight over
 //!   one socket, quantized (`--codec exp5`) or f32 (`--codec exp1`)
-//!   payloads — and report latency, shed/quota/cache behavior, and the
-//!   measured wire reduction vs f32.
+//!   payloads, optionally quantized *replies* (`--resp-codec exp5`) —
+//!   and report latency, shed/quota/cache behavior, and the measured
+//!   wire reduction vs f32. With `--clients M` (and `--pool-sockets S`)
+//!   the M logical clients share S multiplexed sockets through the
+//!   fabric's [`heppo::fabric::ClientPool`] instead of opening M
+//!   connections. A comma-separated ADDR list drives a sharded fleet
+//!   through [`heppo::fabric::GaeFabric`]: rendezvous-routed requests,
+//!   automatic failover, and a fleet-view report.
 //!
 //! ```text
 //! cargo run --release --example serve_gae -- --workers 8 --open-loop
@@ -20,12 +26,19 @@
 //!     --route-threshold 512
 //! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
 //!     --inflight 16 --codec exp5 --requests 2000
+//! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
+//!     --clients 32 --pool-sockets 4 --requests 4000
+//! cargo run --release --example serve_gae -- \
+//!     --connect 127.0.0.1:7070,127.0.0.1:7071 --clients 16 --requests 4000
 //! ```
 
 use heppo::bench::format_si;
 use heppo::coordinator::GaeBackend;
+use heppo::fabric::{
+    ClientPool, FabricConfig, GaeFabric, PoolConfig, ShardBackend,
+};
 use heppo::gae::{GaeParams, Trajectory};
-use heppo::net::{ErrorKind, QuotaConfig};
+use heppo::net::{ErrorKind, PlaneCodec, QuotaConfig};
 use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig};
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
@@ -133,18 +146,311 @@ fn run_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
 
 // --------------------------------------------------------------- connect
 
-fn run_connect(args: &Args, addr: &str) -> anyhow::Result<()> {
-    let n_requests = args.get_or("requests", 500usize);
-    let inflight = args.get_or("inflight", 8usize).max(1);
-    let t_len = args.get_or("timesteps", 128usize).max(1);
-    let batch = args.get_or("trajectories", 16usize).max(1);
-    let seed = args.get_or("seed", 9u64);
+/// Knobs shared by the three connect shapes (single socket, pooled,
+/// fabric).
+struct ConnectParams {
+    n_requests: usize,
+    inflight: usize,
+    t_len: usize,
+    batch: usize,
+    seed: u64,
+    tenant: String,
+    codec: CodecKind,
+    bits: u8,
+    resp: PlaneCodec,
+    clients: usize,
+    pool_sockets: usize,
+}
+
+fn connect_params(args: &Args) -> anyhow::Result<ConnectParams> {
     let codec = CodecKind::parse(&args.str_or("codec", "exp5"))
         .ok_or_else(|| anyhow::anyhow!("unknown codec (use exp1..exp5/baseline/heppo)"))?;
-    let client_config = NetClientConfig {
+    let resp_kind = CodecKind::parse(&args.str_or("resp-codec", "exp1"))
+        .ok_or_else(|| anyhow::anyhow!("unknown resp codec (use exp1..exp5)"))?;
+    Ok(ConnectParams {
+        n_requests: args.get_or("requests", 500usize),
+        inflight: args.get_or("inflight", 8usize).max(1),
+        t_len: args.get_or("timesteps", 128usize).max(1),
+        batch: args.get_or("trajectories", 16usize).max(1),
+        seed: args.get_or("seed", 9u64),
         tenant: args.str_or("tenant", "default"),
         codec,
         bits: args.get_or("bits", 8u8),
+        resp: PlaneCodec { kind: resp_kind, bits: args.get_or("resp-bits", 8u8) },
+        clients: args.get_or("clients", 1usize).max(1),
+        pool_sockets: args.get_or("pool-sockets", 2usize).max(1),
+    })
+}
+
+/// Per-client traffic accounting, merged at the end of a run.
+#[derive(Default)]
+struct Outcomes {
+    latencies_us: Vec<f64>,
+    elements: u64,
+    cache_hits: u64,
+    quota: u64,
+    shed: u64,
+    other: u64,
+    failovers: u64,
+}
+
+impl Outcomes {
+    fn absorb(&mut self, part: Outcomes) {
+        self.latencies_us.extend(part.latencies_us);
+        self.elements += part.elements;
+        self.cache_hits += part.cache_hits;
+        self.quota += part.quota;
+        self.shed += part.shed;
+        self.other += part.other;
+        self.failovers += part.failovers;
+    }
+
+    fn print(&self, wall: Duration) {
+        let s = Summary::of(&self.latencies_us);
+        println!();
+        println!(
+            "latency (µs): p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}  (client-measured, n={})",
+            s.p50,
+            s.p95,
+            s.p99,
+            s.max,
+            self.latencies_us.len()
+        );
+        println!(
+            "outcomes: {} ok ({} cache hits, {} failovers), {} quota, {} shed, {} other",
+            self.latencies_us.len(),
+            self.cache_hits,
+            self.failovers,
+            self.quota,
+            self.shed,
+            self.other
+        );
+        println!(
+            "throughput: {} elem/s, {:.1} frames/s over {:.2}s wall",
+            format_si(self.elements as f64 / wall.as_secs_f64()),
+            self.latencies_us.len() as f64 / wall.as_secs_f64(),
+            wall.as_secs_f64()
+        );
+    }
+}
+
+fn random_planes(
+    rng: &mut Rng,
+    t_len: usize,
+    batch: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rewards = vec![0.0f32; t_len * batch];
+    let mut values = vec![0.0f32; (t_len + 1) * batch];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let done_mask = (0..t_len * batch)
+        .map(|_| if rng.uniform() < 0.02 { 1.0 } else { 0.0 })
+        .collect();
+    (rewards, values, done_mask)
+}
+
+fn run_connect(args: &Args, addr: &str) -> anyhow::Result<()> {
+    let p = connect_params(args)?;
+    let addrs: Vec<String> = addr
+        .split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--connect needs at least one address");
+    if addrs.len() > 1 {
+        return run_connect_fabric(&p, &addrs);
+    }
+    if p.clients > 1 || args.opt("pool-sockets").is_some() {
+        return run_connect_pool(&p, &addrs[0]);
+    }
+    run_connect_single(&p, &addrs[0])
+}
+
+/// Pooled connect: `clients` logical submitters sharing `pool_sockets`
+/// multiplexed connections — the many-client load-generator shape that
+/// used to cost one socket per client.
+fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
+    let pool = ClientPool::connect(
+        addr,
+        PoolConfig {
+            sockets: p.pool_sockets,
+            codec: PlaneCodec { kind: p.codec, bits: p.bits },
+            resp: p.resp,
+        },
+    )?;
+    println!(
+        "pooled connect to {addr}: {} clients over {} sockets, {} frames of \
+         [{} x {}] planes, {} in flight per client, tenant {:?}",
+        p.clients, p.pool_sockets, p.n_requests, p.t_len, p.batch, p.inflight, p.tenant,
+    );
+    let per_client = p.n_requests.div_ceil(p.clients);
+    let t0 = Instant::now();
+    let results: Vec<anyhow::Result<Outcomes>> = std::thread::scope(|s| {
+        let pool = &pool;
+        let joins: Vec<_> = (0..p.clients)
+            .map(|c| {
+                let quota = per_client.min(p.n_requests.saturating_sub(c * per_client));
+                let submitter = pool.submitter(&p.tenant);
+                let mut rng = Rng::new(p.seed ^ (0x9e37 + c as u64));
+                s.spawn(move || -> anyhow::Result<Outcomes> {
+                    let mut out = Outcomes::default();
+                    let mut window = std::collections::VecDeque::new();
+                    let finish =
+                        |pair: (Instant, heppo::fabric::PoolPending),
+                         out: &mut Outcomes| {
+                            let (sent_at, pending) = pair;
+                            match pending.wait() {
+                                Ok(gae) => {
+                                    out.latencies_us
+                                        .push(sent_at.elapsed().as_secs_f64() * 1e6);
+                                    out.elements += gae.advantages.len() as u64;
+                                    if gae.cache_hit {
+                                        out.cache_hits += 1;
+                                    }
+                                }
+                                Err(e) => match e.remote_kind() {
+                                    Some(ErrorKind::Quota) => out.quota += 1,
+                                    Some(ErrorKind::Shed) => out.shed += 1,
+                                    _ => out.other += 1,
+                                },
+                            }
+                        };
+                    for _ in 0..quota {
+                        let (rewards, values, done_mask) =
+                            random_planes(&mut rng, p.t_len, p.batch);
+                        let sent_at = Instant::now();
+                        match submitter.submit_planes(
+                            p.t_len, p.batch, &rewards, &values, &done_mask,
+                        ) {
+                            Ok(pending) => window.push_back((sent_at, pending)),
+                            Err(_) => out.other += 1,
+                        }
+                        while window.len() >= p.inflight {
+                            let pair = window.pop_front().unwrap();
+                            finish(pair, &mut out);
+                        }
+                    }
+                    while let Some(pair) = window.pop_front() {
+                        finish(pair, &mut out);
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+    let mut total = Outcomes::default();
+    for r in results {
+        total.absorb(r?);
+    }
+    total.print(wall);
+    let stats = pool.wire_stats();
+    println!(
+        "wire: {} payload bytes ({} on the wire), reduction vs f32 = {:.2}x, \
+         {} frames over {} sockets",
+        stats.payload_bytes,
+        stats.wire_bytes,
+        stats.reduction_vs_f32(),
+        stats.frames,
+        pool.sockets(),
+    );
+    println!("serve_gae OK");
+    Ok(())
+}
+
+/// Fabric connect: a comma-separated endpoint list becomes a sharded
+/// fleet — rendezvous-routed requests, automatic failover, fleet view.
+fn run_connect_fabric(p: &ConnectParams, addrs: &[String]) -> anyhow::Result<()> {
+    let pool_config = PoolConfig {
+        sockets: p.pool_sockets,
+        codec: PlaneCodec { kind: p.codec, bits: p.bits },
+        resp: p.resp,
+    };
+    let mut shards = Vec::with_capacity(addrs.len());
+    for (i, addr) in addrs.iter().enumerate() {
+        shards.push((format!("shard-{i}@{addr}"), ShardBackend::remote(addr, pool_config)?));
+    }
+    let fabric = GaeFabric::new(shards, FabricConfig::default())?;
+    println!(
+        "fabric connect: {} shards, {} clients, {} frames of [{} x {}] planes, \
+         {} in flight per client, tenant {:?}",
+        fabric.shard_count(), p.clients, p.n_requests, p.t_len, p.batch, p.inflight, p.tenant,
+    );
+    let per_client = p.n_requests.div_ceil(p.clients);
+    let t0 = Instant::now();
+    let results: Vec<anyhow::Result<Outcomes>> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..p.clients)
+            .map(|c| {
+                let quota = per_client.min(p.n_requests.saturating_sub(c * per_client));
+                let fabric = fabric.clone();
+                let mut rng = Rng::new(p.seed ^ (0x85eb + c as u64));
+                let tenant = p.tenant.clone();
+                s.spawn(move || -> anyhow::Result<Outcomes> {
+                    let mut out = Outcomes::default();
+                    let mut window = std::collections::VecDeque::new();
+                    let finish = |pair: (Instant, heppo::fabric::FabricPending),
+                                      out: &mut Outcomes| {
+                        let (sent_at, pending) = pair;
+                        match pending.wait() {
+                            Ok(gae) => {
+                                out.latencies_us
+                                    .push(sent_at.elapsed().as_secs_f64() * 1e6);
+                                out.elements += gae.advantages.len() as u64;
+                                out.failovers += gae.failovers as u64;
+                                if gae.cache_hit {
+                                    out.cache_hits += 1;
+                                }
+                            }
+                            Err(_) => out.other += 1,
+                        }
+                    };
+                    for i in 0..quota {
+                        let (rewards, values, done_mask) =
+                            random_planes(&mut rng, p.t_len, p.batch);
+                        let key = ((c as u64) << 32) | i as u64;
+                        let sent_at = Instant::now();
+                        match fabric.submit(
+                            &tenant, key, p.t_len, p.batch, rewards, values, done_mask,
+                        ) {
+                            Ok(pending) => window.push_back((sent_at, pending)),
+                            Err(_) => out.other += 1,
+                        }
+                        while window.len() >= p.inflight {
+                            let pair = window.pop_front().unwrap();
+                            finish(pair, &mut out);
+                        }
+                    }
+                    while let Some(pair) = window.pop_front() {
+                        finish(pair, &mut out);
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed();
+    let mut total = Outcomes::default();
+    for r in results {
+        total.absorb(r?);
+    }
+    total.print(wall);
+    println!();
+    println!("{}", fabric.fleet());
+    println!("serve_gae OK");
+    Ok(())
+}
+
+fn run_connect_single(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
+    let (n_requests, inflight, t_len, batch, seed) =
+        (p.n_requests, p.inflight, p.t_len, p.batch, p.seed);
+    let client_config = NetClientConfig {
+        tenant: p.tenant.clone(),
+        codec: p.codec,
+        bits: p.bits,
+        resp: p.resp,
     };
     let client = NetClient::connect(addr, client_config)?;
     println!(

@@ -1,0 +1,508 @@
+//! Fabric scaling sweep: shards × replicas × pool sockets.
+//!
+//! What it demonstrates:
+//!
+//! - **Shard count is the throughput axis**: at saturating closed-loop
+//!   load, 2 single-worker shards must sustain ≥ 1.6× the aggregate
+//!   element rate of 1 shard (asserted whenever the host has ≥ 4
+//!   cores; printed either way).
+//! - **Routing is compute-transparent**: every routed result is checked
+//!   bit-identical to the scalar reference — including requests that
+//!   survive a forced mid-load failover (one shard is killed while the
+//!   stream is in flight; everything still completes, rerouted).
+//! - **Pool sockets multiplex**: the same many-client load through 1 vs
+//!   several shared TCP sockets (rows for comparison).
+//!
+//! Emits a markdown table, CSV under `results/`, and one JSON row per
+//! configuration in `results/fabric_scaling.jsonl`.
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep; `HEPPO_BENCH_ITERS=N` caps
+//! requests per replica (floored where timing needs signal).
+
+use heppo::bench::format_si;
+use heppo::coordinator::GaeBackend;
+use heppo::fabric::{
+    ClientPool, FabricConfig, GaeFabric, PoolConfig, ShardBackend,
+};
+use heppo::gae::reference::gae_trajectory;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::net::{NetServer, NetServerConfig, PlaneCodec};
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::stats::Summary;
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use heppo::util::Rng;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Pre-generated request payloads, shared so submitter threads pay a
+/// memcpy per request instead of RNG generation (which would cap the
+/// offered load below saturation).
+struct Workload {
+    t_len: usize,
+    batch: usize,
+    rewards: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+    done_masks: Vec<Vec<f32>>,
+}
+
+impl Workload {
+    fn generate(distinct: usize, t_len: usize, batch: usize, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed);
+        let mut w = Workload {
+            t_len,
+            batch,
+            rewards: Vec::with_capacity(distinct),
+            values: Vec::with_capacity(distinct),
+            done_masks: Vec::with_capacity(distinct),
+        };
+        for _ in 0..distinct {
+            let mut r = vec![0.0f32; t_len * batch];
+            let mut v = vec![0.0f32; (t_len + 1) * batch];
+            rng.fill_normal_f32(&mut r);
+            rng.fill_normal_f32(&mut v);
+            w.rewards.push(r);
+            w.values.push(v);
+            w.done_masks.push(
+                (0..t_len * batch)
+                    .map(|_| if rng.uniform() < 0.03 { 1.0 } else { 0.0 })
+                    .collect(),
+            );
+        }
+        w
+    }
+
+    fn distinct(&self) -> usize {
+        self.rewards.len()
+    }
+}
+
+fn shard_service(workers: usize, queue_capacity: usize) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers,
+            backend: GaeBackend::Scalar,
+            queue_capacity,
+            batcher: BatcherConfig {
+                max_batch_lanes: 128,
+                tile_lanes: 16,
+                max_wait: Duration::from_micros(50),
+            },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+        })
+        .expect("shard service"),
+    )
+}
+
+fn build_fabric(shards: usize) -> (GaeFabric, Vec<Arc<GaeService>>) {
+    let services: Vec<Arc<GaeService>> =
+        (0..shards).map(|_| shard_service(1, 4096)).collect();
+    let slots = services
+        .iter()
+        .enumerate()
+        .map(|(i, svc)| (format!("shard-{i}"), ShardBackend::in_process(Arc::clone(svc))))
+        .collect();
+    (GaeFabric::new(slots, FabricConfig::default()).expect("fabric"), services)
+}
+
+struct RunResult {
+    elem_per_sec: f64,
+    p50_us: f64,
+    p99_us: f64,
+    failovers: u64,
+}
+
+/// Closed-loop drive: `replicas` submitter threads, `window` in flight
+/// each, `reqs` requests per replica, distinct keys.
+fn drive_fabric(fabric: &GaeFabric, w: &Workload, replicas: usize, reqs: usize) -> RunResult {
+    let window_depth = 4;
+    let t0 = Instant::now();
+    let results: Vec<(Vec<f64>, u64, u64)> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..replicas)
+            .map(|r| {
+                s.spawn(move || {
+                    let mut latencies = Vec::with_capacity(reqs);
+                    let mut elements = 0u64;
+                    let mut failovers = 0u64;
+                    let mut window = VecDeque::new();
+                    let finish =
+                        |pair: (Instant, heppo::fabric::FabricPending),
+                         latencies: &mut Vec<f64>,
+                         elements: &mut u64,
+                         failovers: &mut u64| {
+                            let (sent_at, pending) = pair;
+                            let gae = pending.wait().expect("fabric request");
+                            latencies.push(sent_at.elapsed().as_secs_f64() * 1e6);
+                            *elements += gae.advantages.len() as u64;
+                            *failovers += gae.failovers as u64;
+                        };
+                    for i in 0..reqs {
+                        let slot = (r * 31 + i * 7) % w.distinct();
+                        let key = ((r as u64) << 32) | i as u64;
+                        let sent_at = Instant::now();
+                        let pending = fabric
+                            .submit(
+                                "bench",
+                                key,
+                                w.t_len,
+                                w.batch,
+                                w.rewards[slot].clone(),
+                                w.values[slot].clone(),
+                                w.done_masks[slot].clone(),
+                            )
+                            .expect("fabric submit");
+                        window.push_back((sent_at, pending));
+                        while window.len() >= window_depth {
+                            let pair = window.pop_front().unwrap();
+                            finish(pair, &mut latencies, &mut elements, &mut failovers);
+                        }
+                    }
+                    while let Some(pair) = window.pop_front() {
+                        finish(pair, &mut latencies, &mut elements, &mut failovers);
+                    }
+                    (latencies, elements, failovers)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut latencies = Vec::new();
+    let mut elements = 0u64;
+    let mut failovers = 0u64;
+    for (l, e, f) in results {
+        latencies.extend(l);
+        elements += e;
+        failovers += f;
+    }
+    assert_eq!(latencies.len(), replicas * reqs, "every request must complete");
+    let s = Summary::of(&latencies);
+    RunResult {
+        elem_per_sec: elements as f64 / wall,
+        p50_us: s.p50,
+        p99_us: s.p99,
+        failovers,
+    }
+}
+
+/// The scalar reference for one `[T, B]` payload, column by column —
+/// what every routed result must match bit for bit.
+fn reference(w: &Workload, slot: usize) -> (Vec<f32>, Vec<f32>) {
+    let (t_len, batch) = (w.t_len, w.batch);
+    let mut adv = vec![0.0f32; t_len * batch];
+    let mut rtg = vec![0.0f32; t_len * batch];
+    for col in 0..batch {
+        let traj = Trajectory::new(
+            (0..t_len).map(|t| w.rewards[slot][t * batch + col]).collect(),
+            (0..=t_len).map(|t| w.values[slot][t * batch + col]).collect(),
+            (0..t_len).map(|t| w.done_masks[slot][t * batch + col] == 1.0).collect(),
+        );
+        let want = gae_trajectory(&GaeParams::default(), &traj);
+        for t in 0..t_len {
+            adv[t * batch + col] = want.advantages[t];
+            rtg[t * batch + col] = want.rewards_to_go[t];
+        }
+    }
+    (adv, rtg)
+}
+
+fn assert_bit_identical(got: &heppo::fabric::FabricGae, want: &(Vec<f32>, Vec<f32>), what: &str) {
+    for (i, (a, b)) in got.advantages.iter().zip(&want.0).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: adv[{i}]");
+    }
+    for (i, (a, b)) in got.rewards_to_go.iter().zip(&want.1).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: rtg[{i}]");
+    }
+}
+
+/// Bit-identity under normal routing and across a forced mid-load
+/// failover: kill shard 0 with the stream in flight, require every
+/// request to complete and match the scalar reference exactly.
+fn failover_bit_identity(iters: usize) -> u64 {
+    let (fabric, services) = build_fabric(2);
+    let w = Workload::generate(16, 64, 8, 77);
+    let refs: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..w.distinct()).map(|s| reference(&w, s)).collect();
+    let reqs = iters.max(30);
+    let mut pending = VecDeque::new();
+    let kill_at = reqs / 3;
+    for i in 0..reqs {
+        if i == kill_at {
+            services[0].begin_shutdown();
+        }
+        let slot = i % w.distinct();
+        let p = fabric
+            .submit(
+                "bench",
+                i as u64,
+                w.t_len,
+                w.batch,
+                w.rewards[slot].clone(),
+                w.values[slot].clone(),
+                w.done_masks[slot].clone(),
+            )
+            .expect("submit during failover");
+        pending.push_back((slot, i, p));
+        // Keep a bounded window so the kill lands mid-stream with
+        // requests genuinely in flight on both shards.
+        while pending.len() >= 8 {
+            let (slot, i, p) = pending.pop_front().unwrap();
+            let gae = p.wait().expect("request lost in failover");
+            assert_bit_identical(&gae, &refs[slot], &format!("req {i}"));
+        }
+    }
+    while let Some((slot, i, p)) = pending.pop_front() {
+        let gae = p.wait().expect("request lost in failover");
+        assert_bit_identical(&gae, &refs[slot], &format!("req {i}"));
+    }
+    // Deterministic spill: a key whose primary is the dead shard must
+    // still complete, bit-identically, on the survivor.
+    let key = (0..1024u64)
+        .find(|&k| fabric.rank("bench", k)[0] == 0)
+        .expect("some key ranks shard 0 first");
+    let gae = fabric
+        .call(
+            "bench",
+            key,
+            w.t_len,
+            w.batch,
+            w.rewards[0].clone(),
+            w.values[0].clone(),
+            w.done_masks[0].clone(),
+        )
+        .expect("forced failover request");
+    assert_eq!(gae.shard, 1, "dead primary must spill to the survivor");
+    assert_bit_identical(&gae, &refs[0], "forced failover");
+    let fleet = fabric.fleet();
+    assert!(!fabric.is_healthy(0));
+    assert!(
+        fleet.failed_over >= 1,
+        "the forced spill must show in the fleet view"
+    );
+    assert_eq!(
+        fleet.completed,
+        reqs as u64 + 1,
+        "every submitted request must complete"
+    );
+    fleet.failed_over
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let iters = std::env::var("HEPPO_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(if fast { 60 } else { 200 });
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    println!("fabric scaling sweep: {iters} reqs/replica cap, {cores} cores\n");
+    let mut table = CsvTable::new(&[
+        "section", "shards", "replicas", "sockets", "t_len", "batch", "requests",
+        "elem_per_sec", "p50_us", "p99_us", "failovers",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let emit = |table: &mut CsvTable,
+                    json_rows: &mut Vec<String>,
+                    section: &str,
+                    shards: usize,
+                    replicas: usize,
+                    sockets: usize,
+                    w: (usize, usize),
+                    requests: usize,
+                    r: &RunResult| {
+        println!(
+            "{section:<10} shards {shards} replicas {replicas} sockets {sockets} -> \
+             {} elem/s, p50 {:.0}µs p99 {:.0}µs, {} failovers",
+            format_si(r.elem_per_sec),
+            r.p50_us,
+            r.p99_us,
+            r.failovers,
+        );
+        table.row(&[
+            section.to_string(),
+            shards.to_string(),
+            replicas.to_string(),
+            sockets.to_string(),
+            w.0.to_string(),
+            w.1.to_string(),
+            requests.to_string(),
+            format!("{:.3e}", r.elem_per_sec),
+            format!("{:.0}", r.p50_us),
+            format!("{:.0}", r.p99_us),
+            r.failovers.to_string(),
+        ]);
+        json_rows.push(
+            Json::obj(vec![
+                ("bench", Json::from("fabric_scaling")),
+                ("section", Json::from(section)),
+                ("shards", Json::from(shards)),
+                ("replicas", Json::from(replicas)),
+                ("sockets", Json::from(sockets)),
+                ("t_len", Json::from(w.0)),
+                ("batch", Json::from(w.1)),
+                ("requests", Json::from(requests)),
+                ("elem_per_sec", Json::from(r.elem_per_sec)),
+                ("p50_us", Json::from(r.p50_us)),
+                ("p99_us", Json::from(r.p99_us)),
+                ("failovers", Json::from(r.failovers as usize)),
+            ])
+            .to_string(),
+        );
+    };
+
+    // ---- Section 1: shard scaling at saturating closed-loop load.
+    // Heavy planes so backend compute (the shard's single worker)
+    // dominates; requests floored so the timing has signal even under a
+    // tiny HEPPO_BENCH_ITERS smoke cap.
+    let (t_len, batch) = (512, 32);
+    let scale_reqs = iters.max(32);
+    let w = Workload::generate(24, t_len, batch, 42);
+    let shard_counts: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    let replica_counts: &[usize] = if fast { &[8] } else { &[4, 8] };
+    let mut rate_at: Vec<(usize, f64)> = Vec::new();
+    for &shards in shard_counts {
+        for &replicas in replica_counts {
+            // Best-of-2: the fabric and services are rebuilt per pass so
+            // cold-start costs don't leak into the comparison.
+            let mut best: Option<RunResult> = None;
+            for _ in 0..2 {
+                let (fabric, _services) = build_fabric(shards);
+                let r = drive_fabric(&fabric, &w, replicas, scale_reqs);
+                assert_eq!(r.failovers, 0, "healthy fleet must not fail over");
+                if best.as_ref().map_or(true, |b| r.elem_per_sec > b.elem_per_sec) {
+                    best = Some(r);
+                }
+            }
+            let best = best.unwrap();
+            if replicas == *replica_counts.last().unwrap() {
+                rate_at.push((shards, best.elem_per_sec));
+            }
+            emit(
+                &mut table, &mut json_rows, "fabric", shards, replicas, 0,
+                (t_len, batch), scale_reqs, &best,
+            );
+        }
+    }
+
+    // ---- Section 2: bit-identity incl. forced failover.
+    let failovers = failover_bit_identity(iters);
+    println!(
+        "\nfailover: every request completed bit-identical to the scalar \
+         reference across a mid-load shard kill ({failovers} spills) -> PASS"
+    );
+
+    // ---- Section 3: pool sockets over loopback TCP.
+    let (pt, pb) = (64, 8);
+    let pool_w = Workload::generate(16, pt, pb, 99);
+    let pool_reqs = iters.clamp(16, 120);
+    let socket_counts: &[usize] = if fast { &[1, 4] } else { &[1, 2, 4] };
+    for &sockets in socket_counts {
+        let svc = shard_service(4, 4096);
+        let server = NetServer::start(
+            Arc::clone(&svc),
+            "127.0.0.1:0",
+            NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+        )?;
+        let addr = server.local_addr().to_string();
+        let pool = ClientPool::connect(
+            &addr,
+            PoolConfig { sockets, codec: PlaneCodec::Q8, resp: PlaneCodec::F32 },
+        )?;
+        let clients = 8;
+        let t0 = Instant::now();
+        let results: Vec<(Vec<f64>, u64)> = std::thread::scope(|s| {
+            let pool = &pool;
+            let pool_w = &pool_w;
+            let joins: Vec<_> = (0..clients)
+                .map(|c| {
+                    let submitter = pool.submitter("bench");
+                    s.spawn(move || {
+                        let mut latencies = Vec::with_capacity(pool_reqs);
+                        let mut elements = 0u64;
+                        let mut window = VecDeque::new();
+                        for i in 0..pool_reqs {
+                            let slot = (c * 13 + i) % pool_w.distinct();
+                            let sent_at = Instant::now();
+                            let p = submitter
+                                .submit_planes(
+                                    pool_w.t_len,
+                                    pool_w.batch,
+                                    &pool_w.rewards[slot],
+                                    &pool_w.values[slot],
+                                    &pool_w.done_masks[slot],
+                                )
+                                .expect("pool submit");
+                            window.push_back((sent_at, p));
+                            while window.len() >= 8 {
+                                let (sent_at, p) = window.pop_front().unwrap();
+                                let gae = p.wait().expect("pool frame");
+                                latencies
+                                    .push(sent_at.elapsed().as_secs_f64() * 1e6);
+                                elements += gae.advantages.len() as u64;
+                            }
+                        }
+                        while let Some((sent_at, p)) = window.pop_front() {
+                            let gae = p.wait().expect("pool frame");
+                            latencies.push(sent_at.elapsed().as_secs_f64() * 1e6);
+                            elements += gae.advantages.len() as u64;
+                        }
+                        (latencies, elements)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let mut latencies = Vec::new();
+        let mut elements = 0u64;
+        for (l, e) in results {
+            latencies.extend(l);
+            elements += e;
+        }
+        assert_eq!(latencies.len(), clients * pool_reqs, "pool must complete all");
+        assert_eq!(pool.wire_stats().frames, (clients * pool_reqs) as u64);
+        let s = Summary::of(&latencies);
+        let r = RunResult {
+            elem_per_sec: elements as f64 / wall,
+            p50_us: s.p50,
+            p99_us: s.p99,
+            failovers: 0,
+        };
+        emit(
+            &mut table, &mut json_rows, "pool", 1, clients, sockets, (pt, pb),
+            pool_reqs, &r,
+        );
+        server.shutdown();
+    }
+
+    println!("\n{}", table.to_markdown());
+    std::fs::create_dir_all("results")?;
+    table.save("results/fabric_scaling.csv")?;
+    std::fs::write("results/fabric_scaling.jsonl", json_rows.join("\n") + "\n")?;
+    println!("-> results/fabric_scaling.csv, results/fabric_scaling.jsonl");
+
+    // ---- Shape check: 2 shards ≥ 1.6× 1 shard at saturating load.
+    let one = rate_at.iter().find(|(s, _)| *s == 1).map(|(_, r)| *r);
+    let two = rate_at.iter().find(|(s, _)| *s == 2).map(|(_, r)| *r);
+    if let (Some(one), Some(two)) = (one, two) {
+        let ratio = two / one;
+        println!(
+            "\nshape check: 2 shards = {ratio:.2}x the aggregate elem/s of 1 shard \
+             (target >= 1.6x) -> {}",
+            if ratio >= 1.6 { "PASS" } else { "FAIL" }
+        );
+        if cores >= 4 {
+            anyhow::ensure!(
+                ratio >= 1.6,
+                "2-shard scaling {ratio:.2}x below the 1.6x bar"
+            );
+        } else {
+            println!("(not asserted: only {cores} cores available)");
+        }
+    }
+    println!("fabric_scaling OK");
+    Ok(())
+}

@@ -23,7 +23,7 @@
 use heppo::bench::format_si;
 use heppo::coordinator::GaeBackend;
 use heppo::gae::GaeParams;
-use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig};
+use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig, PlaneCodec};
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
 use heppo::stats::Summary;
@@ -101,7 +101,12 @@ fn service(workers: usize) -> Arc<GaeService> {
 fn run_net(addr: &str, codec: CodecKind, depth: usize, w: &Workload) -> RunResult {
     let client = NetClient::connect(
         addr,
-        NetClientConfig { tenant: "bench".to_string(), codec, bits: 8 },
+        NetClientConfig {
+            tenant: "bench".to_string(),
+            codec,
+            bits: 8,
+            resp: PlaneCodec::F32,
+        },
     )
     .expect("connect");
     let mut latencies = Vec::with_capacity(w.len());
@@ -177,6 +182,7 @@ fn check_f32_bit_identity(addr: &str, svc: &GaeService, w: &Workload) {
             tenant: "bench".to_string(),
             codec: CodecKind::Exp1Baseline,
             bits: 8,
+            resp: PlaneCodec::F32,
         },
     )
     .expect("connect");

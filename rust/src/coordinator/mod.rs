@@ -57,6 +57,8 @@ pub mod trainer;
 
 pub use config::TrainerConfig;
 pub use gae_stage::GaeBackend;
-pub use pipeline::{run_stages, PipelineMode, PipelineRun, StageTimes};
+pub use pipeline::{
+    run_stage_fleet, run_stages, FleetRun, PipelineMode, PipelineRun, StageTimes,
+};
 pub use profiler::{Phase, PhaseProfiler};
 pub use trainer::{IterStats, Trainer};

@@ -17,11 +17,16 @@
 //!   which preserves the exact sequential dependency graph, so
 //!   `Overlapped` is *also* bit-identical at a given seed.
 //! - **[`run_stages`]** is the fully-threaded two-lane driver for `Send`
-//!   stage sets (closure policies: benches, tests, future sharded
-//!   trainers): a collector thread fills recycled [`Rollout`] buffers
-//!   from a bounded pool while the consumer thread runs GAE + update on
-//!   the previous buffer, with [`PipelineLanes`] enforcing that the
-//!   overlapped schedule never violates the per-iteration phase order.
+//!   stage sets (closure policies: benches, tests, sharded trainers): a
+//!   collector thread fills recycled [`Rollout`] buffers from a bounded
+//!   pool while the consumer thread runs GAE + update on the previous
+//!   buffer, with [`PipelineLanes`] enforcing that the overlapped
+//!   schedule never violates the per-iteration phase order.
+//! - **[`run_stage_fleet`]** scales the driver *out*: N coordinator
+//!   replicas, each its own `run_stages` instance, concurrently feeding
+//!   one shared GAE substrate (typically a
+//!   [`GaeFabric`](crate::fabric::GaeFabric)) — the sharded-trainer
+//!   shape ROADMAP named with the stage driver as its substrate.
 //!
 //! The steady-state schedule `run_stages` realizes, two buffers deep:
 //!
@@ -110,6 +115,85 @@ pub struct PipelineRun<S> {
     pub stats: Vec<S>,
     pub times: StageTimes,
     pub lanes: PipelineLanes,
+}
+
+/// Result of [`run_stage_fleet`]: every replica's [`PipelineRun`] plus
+/// the fleet's end-to-end wall clock.
+#[derive(Debug)]
+pub struct FleetRun<S> {
+    /// One run per coordinator replica, replica order.
+    pub replicas: Vec<PipelineRun<S>>,
+    /// Wall clock of the whole fleet (spawn → last join).
+    pub wall: Duration,
+}
+
+impl<S> FleetRun<S> {
+    /// Iterations completed across the fleet.
+    pub fn total_iters(&self) -> usize {
+        self.replicas.iter().map(|r| r.times.iters).sum()
+    }
+
+    /// Stage times summed over replicas, with the fleet wall clock —
+    /// `aggregate().stage_sum()` vs `wall` quantifies how much compute
+    /// the replicas overlapped on top of each replica's own pipeline
+    /// overlap.
+    pub fn aggregate(&self) -> StageTimes {
+        let mut t = StageTimes {
+            wall: self.wall,
+            iters: self.total_iters(),
+            ..StageTimes::default()
+        };
+        for r in &self.replicas {
+            t.collect += r.times.collect;
+            t.gae += r.times.gae;
+            t.update += r.times.update;
+        }
+        t
+    }
+}
+
+/// The multi-replica trainer mode: run `replicas` coordinator
+/// stage-driver replicas concurrently, each feeding the same shared GAE
+/// substrate (a [`GaeService`](crate::service::GaeService) or a
+/// [`GaeFabric`](crate::fabric::GaeFabric)) from its own stage set.
+///
+/// `run_replica(r)` builds and drives replica `r` — typically a
+/// [`run_stages`] call over closures that own the replica's envs, RNG
+/// streams, and fabric submitter; sharing mutable state across replicas
+/// is the caller's (non-)problem exactly as with `run_stages`' stage
+/// closures. Replicas that keep their state private produce the same
+/// per-replica stats streams at any replica count — the property
+/// `tests/fabric_integration.rs` pins against a live fabric.
+///
+/// All replicas run even if one fails; the first error (replica order)
+/// is then reported, so a poisoned replica can't strand the others'
+/// threads mid-scope.
+pub fn run_stage_fleet<S, F>(
+    replicas: usize,
+    run_replica: F,
+) -> anyhow::Result<FleetRun<S>>
+where
+    S: Send,
+    F: Fn(usize) -> anyhow::Result<PipelineRun<S>> + Sync,
+{
+    anyhow::ensure!(replicas >= 1, "fleet needs at least one replica");
+    let start = Instant::now();
+    let results: Vec<anyhow::Result<PipelineRun<S>>> = std::thread::scope(|scope| {
+        let run_replica = &run_replica;
+        let handles: Vec<_> = (0..replicas)
+            .map(|r| scope.spawn(move || run_replica(r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica must not panic"))
+            .collect()
+    });
+    let wall = start.elapsed();
+    let mut runs = Vec::with_capacity(replicas);
+    for (r, result) in results.into_iter().enumerate() {
+        runs.push(result.map_err(|e| e.context(format!("replica {r} failed")))?);
+    }
+    Ok(FleetRun { replicas: runs, wall })
 }
 
 /// Shared lane state for the threaded driver. The collector must stall
@@ -426,6 +510,59 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("gae exploded"), "{err}");
+    }
+
+    #[test]
+    fn stage_fleet_replicas_run_independently_and_in_order() {
+        let fleet = run_stage_fleet(3, |replica| {
+            run_stages(
+                PipelineMode::Sequential,
+                4,
+                move |i, buf: &mut Rollout| {
+                    buf.rewards.clear();
+                    buf.rewards
+                        .extend((0..4).map(|k| (replica * 1000 + i * 10 + k) as f32));
+                    Ok(())
+                },
+                |_i, buf| Ok(fake_gae(buf)),
+                |_i, _buf, g: &GaeResult| Ok(g.advantages.iter().sum::<f32>()),
+            )
+        })
+        .unwrap();
+        assert_eq!(fleet.replicas.len(), 3);
+        assert_eq!(fleet.total_iters(), 12);
+        // Replica order is preserved and each stream matches the same
+        // stage set run solo.
+        for (replica, run) in fleet.replicas.iter().enumerate() {
+            let want: Vec<f32> = (0..4)
+                .map(|i| (0..4).map(|k| (replica * 1000 + i * 10 + k) as f32).sum())
+                .collect();
+            assert_eq!(run.stats, want, "replica {replica}");
+        }
+        let agg = fleet.aggregate();
+        assert_eq!(agg.iters, 12);
+        assert_eq!(agg.wall, fleet.wall);
+    }
+
+    #[test]
+    fn stage_fleet_reports_the_first_failing_replica() {
+        let err = run_stage_fleet(3, |replica| {
+            run_stages(
+                PipelineMode::Sequential,
+                2,
+                move |_i, _buf: &mut Rollout| {
+                    anyhow::ensure!(replica != 1, "replica went down");
+                    Ok(())
+                },
+                |_i, buf| Ok(fake_gae(buf)),
+                |_i, _buf, _g| Ok(()),
+            )
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("replica 1"), "{msg}");
+        assert!(msg.contains("replica went down"), "{msg}");
+        assert!(run_stage_fleet::<(), _>(0, |_| unreachable!()).is_err());
     }
 
     #[test]

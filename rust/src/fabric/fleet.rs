@@ -1,0 +1,226 @@
+//! The fleet view: per-shard [`MetricsSnapshot`]s aggregated into one
+//! picture of the whole fabric, with the per-tenant breakdown merged
+//! across shards.
+//!
+//! In-process shards contribute their full service snapshot (queue,
+//! batcher, tile, latency, per-tenant counters); remote shards are
+//! observed from the client side only (the wire carries results, not
+//! metrics), so they contribute the router's own counters — submitted,
+//! completed, failed-over — and their service column reads `None`.
+//! Totals are therefore exact for routing behavior on every shard and
+//! exact for service behavior on in-process shards; a metrics RPC for
+//! remote shards is a listed follow-up (ROADMAP: Fabric).
+
+use crate::service::{MetricsSnapshot, TenantSnapshot};
+use std::collections::HashMap;
+use std::fmt;
+
+/// One shard's slice of the fleet view.
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    pub label: String,
+    /// Raw health flag (an unhealthy shard may still be probed once its
+    /// cooldown elapses).
+    pub healthy: bool,
+    /// Router-side submit attempts against this shard.
+    pub submitted: u64,
+    /// Requests this shard completed.
+    pub completed: u64,
+    /// Requests this shard failed that another shard absorbed.
+    pub failed_over: u64,
+    /// Full service metrics — in-process shards only.
+    pub service: Option<MetricsSnapshot>,
+}
+
+/// Aggregated point-in-time view of a [`GaeFabric`](crate::fabric::GaeFabric).
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    pub shards: Vec<ShardStatus>,
+    /// Router-side submit attempts summed over shards.
+    pub submitted: u64,
+    /// Requests completed, summed over shards.
+    pub completed: u64,
+    /// Failover events, summed over shards.
+    pub failed_over: u64,
+    /// Shards currently marked healthy.
+    pub healthy_shards: usize,
+    /// GAE elements computed by in-process shards (their snapshots).
+    pub elements: u64,
+    /// Per-tenant breakdown merged across in-process shard snapshots,
+    /// heaviest (by elements) first.
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+impl FleetSnapshot {
+    /// Fold per-shard statuses into fleet totals and the merged
+    /// per-tenant breakdown.
+    pub fn aggregate(shards: Vec<ShardStatus>) -> FleetSnapshot {
+        let submitted = shards.iter().map(|s| s.submitted).sum();
+        let completed = shards.iter().map(|s| s.completed).sum();
+        let failed_over = shards.iter().map(|s| s.failed_over).sum();
+        let healthy_shards = shards.iter().filter(|s| s.healthy).count();
+        let elements = shards
+            .iter()
+            .filter_map(|s| s.service.as_ref())
+            .map(|m| m.elements)
+            .sum();
+        let tenants = merge_tenants(
+            shards
+                .iter()
+                .filter_map(|s| s.service.as_ref())
+                .flat_map(|m| m.tenants.iter()),
+        );
+        FleetSnapshot {
+            shards,
+            submitted,
+            completed,
+            failed_over,
+            healthy_shards,
+            elements,
+            tenants,
+        }
+    }
+}
+
+/// Merge tenant slices from many shard snapshots: counters sum per
+/// tenant id; the result sorts heaviest (by elements) first with the
+/// name as a deterministic tie-break.
+pub fn merge_tenants<'a>(
+    slices: impl Iterator<Item = &'a TenantSnapshot>,
+) -> Vec<TenantSnapshot> {
+    let mut merged: HashMap<String, TenantSnapshot> = HashMap::new();
+    for t in slices {
+        match merged.get_mut(&t.tenant) {
+            Some(m) => {
+                m.requests += t.requests;
+                m.elements += t.elements;
+                m.shed += t.shed;
+                m.quota_shed += t.quota_shed;
+            }
+            None => {
+                merged.insert(t.tenant.clone(), t.clone());
+            }
+        }
+    }
+    let mut out: Vec<TenantSnapshot> = merged.into_values().collect();
+    out.sort_by(|a, b| {
+        b.elements.cmp(&a.elements).then_with(|| a.tenant.cmp(&b.tenant))
+    });
+    out
+}
+
+impl fmt::Display for FleetSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "fleet:    {} shards ({} healthy) | {} submitted, {} completed, {} failed over | {} elements (in-process)",
+            self.shards.len(),
+            self.healthy_shards,
+            self.submitted,
+            self.completed,
+            self.failed_over,
+            self.elements,
+        )?;
+        for s in &self.shards {
+            writeln!(
+                f,
+                "  {:<12} {} | {} submitted / {} completed / {} failed over{}",
+                s.label,
+                if s.healthy { "healthy" } else { "UNHEALTHY" },
+                s.submitted,
+                s.completed,
+                s.failed_over,
+                match &s.service {
+                    Some(m) => format!(
+                        " | {} elem, queue {}, shed {}",
+                        m.elements, m.queue_depth, m.shed
+                    ),
+                    None => " | remote".to_string(),
+                },
+            )?;
+        }
+        if self.tenants.is_empty() {
+            write!(f, "  tenants: none attributed")?;
+        } else {
+            write!(f, "  tenants:")?;
+            for t in self.tenants.iter().take(6) {
+                write!(
+                    f,
+                    " {}: {} req / {} elem ({} shed, {} quota)",
+                    t.tenant, t.requests, t.elements, t.shed, t.quota_shed
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenant(name: &str, requests: u64, elements: u64) -> TenantSnapshot {
+        TenantSnapshot { tenant: name.to_string(), requests, elements, shed: 0, quota_shed: 0 }
+    }
+
+    fn status(label: &str, completed: u64, tenants: Vec<TenantSnapshot>) -> ShardStatus {
+        // A service snapshot solely to carry tenants/elements: build it
+        // from a live recorder so the struct stays construction-honest.
+        let m = crate::service::ServiceMetrics::new();
+        for t in &tenants {
+            for _ in 0..t.requests {
+                m.record_tenant_request(&t.tenant, t.elements / t.requests.max(1));
+            }
+        }
+        let snap = m.snapshot(crate::service::SnapshotInputs::default());
+        ShardStatus {
+            label: label.to_string(),
+            healthy: true,
+            submitted: completed,
+            completed,
+            failed_over: 0,
+            service: Some(snap),
+        }
+    }
+
+    #[test]
+    fn aggregate_sums_shards_and_merges_tenants() {
+        let fleet = FleetSnapshot::aggregate(vec![
+            status("s0", 3, vec![tenant("a", 2, 20), tenant("b", 1, 5)]),
+            status("s1", 2, vec![tenant("a", 1, 10)]),
+        ]);
+        assert_eq!(fleet.completed, 5);
+        assert_eq!(fleet.healthy_shards, 2);
+        assert_eq!(fleet.tenants.len(), 2);
+        assert_eq!(fleet.tenants[0].tenant, "a", "heaviest tenant first");
+        assert_eq!(fleet.tenants[0].requests, 3);
+        assert_eq!(fleet.tenants[0].elements, 30);
+        let text = fleet.to_string();
+        assert!(text.contains("2 shards") && text.contains("tenants:"), "{text}");
+    }
+
+    #[test]
+    fn merge_is_deterministic_under_ties() {
+        let a = vec![tenant("x", 1, 10), tenant("y", 1, 10)];
+        let merged = merge_tenants(a.iter());
+        assert_eq!(merged[0].tenant, "x");
+        assert_eq!(merged[1].tenant, "y");
+    }
+
+    #[test]
+    fn remote_shards_contribute_router_counters_only() {
+        let fleet = FleetSnapshot::aggregate(vec![ShardStatus {
+            label: "remote-0".to_string(),
+            healthy: false,
+            submitted: 7,
+            completed: 6,
+            failed_over: 1,
+            service: None,
+        }]);
+        assert_eq!(fleet.submitted, 7);
+        assert_eq!(fleet.elements, 0);
+        assert_eq!(fleet.healthy_shards, 0);
+        assert!(fleet.tenants.is_empty());
+        assert!(fleet.to_string().contains("UNHEALTHY"));
+    }
+}

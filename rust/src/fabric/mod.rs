@@ -1,0 +1,63 @@
+//! The GAE service fabric: a horizontally sharded fleet behind one
+//! submit API.
+//!
+//! PR 1–4 built a single `GaeService` and taught it to serve a socket;
+//! this module is the layer above — the point where "a service" becomes
+//! "a fleet", which is where RL serving throughput actually scales
+//! (Stooke & Abbeel: many coordinated actors feeding shared compute):
+//!
+//! ```text
+//!   trainer replicas / load generators / serve_gae --connect a,b,c
+//!        │                 │                  │
+//!        ▼                 ▼                  ▼
+//!   GaeFabric::submit(tenant, key, planes)          (router.rs)
+//!        │  rendezvous hash over (tenant, key) → shard rank
+//!        │  unhealthy shards skipped; spill chain = rank order
+//!        ├────────────┬──────────────────┐
+//!        ▼            ▼                  ▼
+//!   InProcess      InProcess          Remote (TCP)
+//!   GaeService     GaeService         ClientPool    (pool.rs)
+//!        │            │                  │  few pipelined sockets,
+//!        │            │                  │  many submitters, seq-space
+//!        │            │                  │  partitioned completions
+//!        ▼            ▼                  ▼
+//!   FabricPending::wait — retries through the rank order if the
+//!   serving shard dies mid-flight; results bit-identical to the
+//!   single-service path (f32 transport).
+//!
+//!   GaeFabric::fleet() → FleetSnapshot                (fleet.rs)
+//!   per-shard status + aggregated totals + merged per-tenant view
+//! ```
+//!
+//! Layer boundaries:
+//!
+//! - [`router`] owns placement and failure policy: rendezvous ranking,
+//!   health/cooldown state, the attempt budget, retry-on-wait.
+//! - [`pool`] owns remote transport: the connection-multiplexing
+//!   [`ClientPool`] that replaces one-socket-per-client fan-out.
+//! - [`fleet`] owns observability: per-shard
+//!   [`MetricsSnapshot`](crate::service::MetricsSnapshot)s folded into
+//!   one [`FleetSnapshot`] with the per-tenant breakdown merged.
+//! - Compute stays in [`crate::service`] — the fabric never computes
+//!   GAE, which is what keeps routed results bit-identical to the
+//!   in-process path no matter which shard (or how many failovers) a
+//!   request crossed.
+//!
+//! The multi-replica trainer mode
+//! ([`crate::coordinator::pipeline::run_stage_fleet`]) drives several
+//! PR-2 stage-driver replicas into one fabric; `benches/fabric_scaling.rs`
+//! sweeps shards × replicas × pool sockets, and
+//! `tests/fabric_integration.rs` kills shards mid-load and checks every
+//! request still completes bit-identically.
+
+pub mod fleet;
+pub mod pool;
+pub mod router;
+
+pub use fleet::{merge_tenants, FleetSnapshot, ShardStatus};
+pub use pool::{
+    seq_for, seq_space, submitter_of, ClientPool, PoolClient, PoolConfig, PoolPending,
+};
+pub use router::{
+    FabricConfig, FabricError, FabricGae, FabricPending, GaeFabric, ShardBackend,
+};

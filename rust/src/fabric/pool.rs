@@ -1,0 +1,536 @@
+//! The connection-multiplexing client pool: many logical submitters
+//! sharing a few pipelined sockets per endpoint.
+//!
+//! The PR-3 [`NetClient`](crate::net::NetClient) answered *latency*
+//! (pipeline N frames over one socket); a many-client load generator —
+//! or a fabric front-end speaking for hundreds of trainer replicas —
+//! still paid one socket, one reader thread, and one globally-locked
+//! pending map per client. This module folds that fan-in:
+//!
+//! - **Few sockets, many submitters.** A [`ClientPool`] opens
+//!   [`PoolConfig::sockets`] pipelined connections; every
+//!   [`PoolClient`] (a cheap logical submitter) is pinned to one of
+//!   them round-robin. A thousand submitters cost a thousand small
+//!   structs, not a thousand fds and threads.
+//! - **Seq-space partitioning.** Frame sequence numbers are
+//!   `(submitter_space << 32) | frame`, so every submitter owns a
+//!   disjoint 2³²-frame space ([`seq_for`]) and the response's target
+//!   is derivable from its seq alone. Completions route through the
+//!   submitter's **private** slot map: the reader takes the
+//!   connection-global registry only as a *read* lock (written once per
+//!   submitter registration), so no frame ever serializes unrelated
+//!   submitters on a shared mutex — the per-frame locks are between one
+//!   submitter and its reader only.
+//! - **Self-healing sockets.** A dead connection fails its in-flight
+//!   frames (each submitter sees [`NetError::Disconnected`]) and is
+//!   re-dialed transparently on the next submit ([`PoolConn::live`]);
+//!   the old reader is joined *before* the replacement registers, so a
+//!   late failure broadcast can never kill fresh frames.
+//!
+//! The fabric's [`ShardRouter`](crate::fabric::GaeFabric) uses one pool
+//! per remote shard; `serve_gae --connect --clients M --pool-sockets S`
+//! drives M closed-loop submitters over S sockets.
+
+use crate::net::client::{NetError, NetGae, WireStats};
+use crate::net::wire::{self, Frame, PlaneCodec};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Bound on one dial attempt. Re-dials happen under the connection's
+/// write lock (so submitters pinned to that socket wait), and the
+/// router leans on pool submits failing *fast* to spill a dead shard —
+/// the OS default connect timeout (minutes on a blackholed host) would
+/// turn fail-fast failover into a fleet-wide stall.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Dial with [`CONNECT_TIMEOUT`] per resolved address.
+fn dial(addr: &str) -> std::io::Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for sock_addr in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sock_addr, CONNECT_TIMEOUT) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            "address resolved to no socket addresses",
+        )
+    }))
+}
+
+/// Pool deployment knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Pipelined TCP connections to the endpoint; submitters are pinned
+    /// round-robin across them.
+    pub sockets: usize,
+    /// Request-plane transport codec.
+    pub codec: PlaneCodec,
+    /// Reply-plane transport codec ([`PlaneCodec::F32`] = bit-exact).
+    pub resp: PlaneCodec,
+}
+
+impl Default for PoolConfig {
+    /// Two sockets, the paper's 8-bit request transport, exact replies.
+    fn default() -> Self {
+        PoolConfig { sockets: 2, codec: PlaneCodec::Q8, resp: PlaneCodec::F32 }
+    }
+}
+
+/// The high 32 bits of every seq a submitter emits — its id plus one,
+/// so seq 0 (reserved) and the plain-`NetClient` low space (high bits
+/// zero) are never produced.
+pub fn seq_space(submitter: u32) -> u32 {
+    submitter
+        .checked_add(1)
+        .expect("submitter id space exhausted (u32::MAX submitters)")
+}
+
+/// The wire sequence number of frame `frame` from `submitter`: the two
+/// spaces of distinct submitters are disjoint by construction, so a
+/// completion's target falls out of its seq with no shared state.
+pub fn seq_for(submitter: u32, frame: u32) -> u64 {
+    ((seq_space(submitter) as u64) << 32) | frame as u64
+}
+
+/// Recover the submitter id a pool seq belongs to (`None` for seqs
+/// outside any pool space, e.g. a plain `NetClient`'s counter).
+pub fn submitter_of(seq: u64) -> Option<u32> {
+    ((seq >> 32) as u32).checked_sub(1)
+}
+
+type Reply = Result<wire::ResponseFrame, NetError>;
+/// One submitter's private in-flight slots, keyed by the low 32 seq
+/// bits. Locked only by that submitter and the connection reader.
+type SlotMap = Arc<Mutex<HashMap<u32, mpsc::Sender<Reply>>>>;
+/// Seq-space (high 32 bits) → the owning submitter's slot map. Written
+/// once per submitter registration; the frame path only read-locks it.
+type Registry = Arc<RwLock<HashMap<u32, SlotMap>>>;
+
+/// Route one reply to its owner entirely from the seq: space → private
+/// slot map → slot. Unknown spaces/slots are dropped (abandoned
+/// handles), exactly like `NetClient`.
+fn route(registry: &Registry, seq: u64, reply: Reply) {
+    let space = (seq >> 32) as u32;
+    let slot = seq as u32;
+    let map = registry.read().unwrap().get(&space).cloned();
+    if let Some(map) = map {
+        if let Some(tx) = map.lock().unwrap().remove(&slot) {
+            let _ = tx.send(reply);
+        }
+    }
+}
+
+/// Fail every in-flight frame of every submitter on this connection.
+/// Sets `closed` *before* draining, so a slot registered after the
+/// drain is caught by the submitter's own post-write check.
+fn fail_all(registry: &Registry, closed: &AtomicBool, error: NetError) {
+    closed.store(true, Ordering::SeqCst);
+    let maps: Vec<SlotMap> = registry.read().unwrap().values().cloned().collect();
+    for map in maps {
+        let slots: Vec<mpsc::Sender<Reply>> =
+            map.lock().unwrap().drain().map(|(_, tx)| tx).collect();
+        for tx in slots {
+            let _ = tx.send(Err(error.clone()));
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, registry: Registry, closed: Arc<AtomicBool>) {
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(Some(frame)) => frame,
+            Ok(None) | Err(_) => {
+                fail_all(&registry, &closed, NetError::Disconnected);
+                return;
+            }
+        };
+        match wire::decode_frame(&frame) {
+            Ok(Frame::Response(resp)) => route(&registry, resp.seq, Ok(resp)),
+            Ok(Frame::Error(err)) => {
+                let remote =
+                    NetError::Remote { kind: err.kind, message: err.message };
+                if err.seq == 0 {
+                    fail_all(&registry, &closed, remote);
+                    return;
+                }
+                route(&registry, err.seq, Err(remote));
+            }
+            Ok(Frame::Request(_)) => {
+                fail_all(
+                    &registry,
+                    &closed,
+                    NetError::Decode("server sent a request frame".to_string()),
+                );
+                return;
+            }
+            Err(e) => {
+                fail_all(&registry, &closed, NetError::Decode(e.to_string()));
+                return;
+            }
+        }
+    }
+}
+
+/// One live socket generation: write half + reader thread.
+struct ConnInner {
+    writer: Mutex<std::io::BufWriter<TcpStream>>,
+    /// Clone of the socket, for interrupting a blocked reader.
+    stream: TcpStream,
+    closed: Arc<AtomicBool>,
+    reader: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ConnInner {
+    fn connect(addr: &str, registry: Registry) -> std::io::Result<Arc<ConnInner>> {
+        let stream = dial(addr)?;
+        stream.set_nodelay(true)?;
+        let read_half = stream.try_clone()?;
+        let write_half = stream.try_clone()?;
+        let closed = Arc::new(AtomicBool::new(false));
+        let reader_closed = Arc::clone(&closed);
+        let reader = std::thread::spawn(move || {
+            reader_loop(read_half, registry, reader_closed)
+        });
+        Ok(Arc::new(ConnInner {
+            writer: Mutex::new(std::io::BufWriter::new(write_half)),
+            stream,
+            closed,
+            reader: Mutex::new(Some(reader)),
+        }))
+    }
+
+    /// Interrupt the reader and join it — its failure broadcast (if
+    /// any) completes before this returns, so a replacement connection
+    /// can safely register fresh slots.
+    fn abort(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _ = self.stream.shutdown(Shutdown::Both);
+        let handle = self.reader.lock().unwrap().take();
+        if let Some(handle) = handle {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ConnInner {
+    fn drop(&mut self) {
+        self.abort();
+    }
+}
+
+/// One pooled endpoint connection across socket generations: the
+/// registry of submitter slot maps survives re-dials.
+struct PoolConn {
+    addr: String,
+    registry: Registry,
+    inner: RwLock<Arc<ConnInner>>,
+}
+
+impl PoolConn {
+    fn open(addr: &str) -> std::io::Result<PoolConn> {
+        let registry: Registry = Arc::new(RwLock::new(HashMap::new()));
+        let inner = ConnInner::connect(addr, Arc::clone(&registry))?;
+        Ok(PoolConn {
+            addr: addr.to_string(),
+            registry,
+            inner: RwLock::new(inner),
+        })
+    }
+
+    /// The current socket generation, transparently re-dialing a dead
+    /// one. The old reader is joined under the write lock *before* the
+    /// replacement exists, so its failure broadcast cannot touch frames
+    /// submitted on the fresh socket.
+    fn live(&self) -> Result<Arc<ConnInner>, NetError> {
+        let conn = self.inner.read().unwrap().clone();
+        if !conn.closed.load(Ordering::SeqCst) {
+            return Ok(conn);
+        }
+        let mut guard = self.inner.write().unwrap();
+        if !guard.closed.load(Ordering::SeqCst) {
+            return Ok(Arc::clone(&guard)); // someone else re-dialed first
+        }
+        guard.abort();
+        match ConnInner::connect(&self.addr, Arc::clone(&self.registry)) {
+            Ok(fresh) => {
+                *guard = fresh;
+                Ok(Arc::clone(&guard))
+            }
+            Err(e) => Err(NetError::Io(e.to_string())),
+        }
+    }
+}
+
+#[derive(Default)]
+struct PoolStats {
+    frames: AtomicU64,
+    payload_bytes: AtomicU64,
+    f32_payload_bytes: AtomicU64,
+    wire_bytes: AtomicU64,
+}
+
+struct PoolShared {
+    config: PoolConfig,
+    conns: Vec<PoolConn>,
+    next_submitter: AtomicU32,
+    stats: PoolStats,
+}
+
+/// A pool of pipelined connections to one GAE endpoint. Create once,
+/// then mint cheap [`PoolClient`] submitters from any thread.
+pub struct ClientPool {
+    shared: Arc<PoolShared>,
+}
+
+impl ClientPool {
+    /// Dial `config.sockets` connections to a
+    /// [`NetServer`](crate::net::NetServer).
+    pub fn connect(addr: &str, config: PoolConfig) -> anyhow::Result<ClientPool> {
+        anyhow::ensure!(config.sockets >= 1, "pool needs at least one socket");
+        let mut conns = Vec::with_capacity(config.sockets);
+        for _ in 0..config.sockets {
+            conns.push(PoolConn::open(addr)?);
+        }
+        Ok(ClientPool {
+            shared: Arc::new(PoolShared {
+                config,
+                conns,
+                next_submitter: AtomicU32::new(0),
+                stats: PoolStats::default(),
+            }),
+        })
+    }
+
+    pub fn config(&self) -> PoolConfig {
+        self.shared.config
+    }
+
+    pub fn sockets(&self) -> usize {
+        self.shared.conns.len()
+    }
+
+    /// Mint a logical submitter for `tenant`: a disjoint seq space, a
+    /// private slot map, and a round-robin-pinned socket.
+    pub fn submitter(&self, tenant: &str) -> PoolClient {
+        let id = self.shared.next_submitter.fetch_add(1, Ordering::Relaxed);
+        assert!(id < u32::MAX, "submitter id space exhausted");
+        let conn_index = id as usize % self.shared.conns.len();
+        let slots: SlotMap = Arc::new(Mutex::new(HashMap::new()));
+        self.shared.conns[conn_index]
+            .registry
+            .write()
+            .unwrap()
+            .insert(seq_space(id), Arc::clone(&slots));
+        PoolClient {
+            shared: Arc::clone(&self.shared),
+            conn_index,
+            id,
+            tenant: tenant.to_string(),
+            slots,
+            next_frame: AtomicU64::new(0),
+        }
+    }
+
+    /// Transport accounting summed over every socket and submitter.
+    pub fn wire_stats(&self) -> WireStats {
+        let s = &self.shared.stats;
+        WireStats {
+            frames: s.frames.load(Ordering::Relaxed),
+            payload_bytes: s.payload_bytes.load(Ordering::Relaxed),
+            f32_payload_bytes: s.f32_payload_bytes.load(Ordering::Relaxed),
+            wire_bytes: s.wire_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One logical submitter of a [`ClientPool`]: owns seq space
+/// `seq_space(id)`, shares its pinned socket with every other submitter
+/// pinned there. `&self` methods are thread-safe.
+pub struct PoolClient {
+    shared: Arc<PoolShared>,
+    conn_index: usize,
+    id: u32,
+    tenant: String,
+    slots: SlotMap,
+    next_frame: AtomicU64,
+}
+
+impl PoolClient {
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Frames of this submitter currently awaiting a response.
+    pub fn in_flight(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// Encode and write one plane-shaped request on the pinned socket;
+    /// returns immediately with a handle (the pipelined shape).
+    pub fn submit_planes(
+        &self,
+        t_len: usize,
+        batch: usize,
+        rewards: &[f32],
+        values: &[f32],
+        done_mask: &[f32],
+    ) -> Result<PoolPending, NetError> {
+        let slot = self.next_frame.fetch_add(1, Ordering::Relaxed) as u32;
+        let seq = seq_for(self.id, slot);
+        let encoded = wire::encode_request(
+            seq,
+            &self.tenant,
+            self.shared.config.codec,
+            self.shared.config.resp,
+            t_len,
+            batch,
+            rewards,
+            values,
+            done_mask,
+        )
+        .map_err(|e| NetError::InvalidRequest(e.to_string()))?;
+
+        let conn = self.shared.conns[self.conn_index].live()?;
+        let (tx, rx) = mpsc::channel();
+        // Register before writing so a lightning-fast response cannot
+        // race past an unregistered slot.
+        self.slots.lock().unwrap().insert(slot, tx);
+        let write_result = {
+            let mut writer = conn.writer.lock().unwrap();
+            writer.write_all(&encoded.bytes).and_then(|_| writer.flush())
+        };
+        if let Err(e) = write_result {
+            self.slots.lock().unwrap().remove(&slot);
+            // Mark the generation dead; the next submit re-dials.
+            conn.closed.store(true, Ordering::SeqCst);
+            return Err(NetError::Io(e.to_string()));
+        }
+        let s = &self.shared.stats;
+        s.frames.fetch_add(1, Ordering::Relaxed);
+        s.payload_bytes
+            .fetch_add(encoded.payload_bytes as u64, Ordering::Relaxed);
+        s.f32_payload_bytes
+            .fetch_add(encoded.f32_payload_bytes as u64, Ordering::Relaxed);
+        s.wire_bytes
+            .fetch_add(encoded.bytes.len() as u64, Ordering::Relaxed);
+        // The reader sets `closed` *before* draining the slot maps, so a
+        // slot registered after the drain is caught here and never leaks.
+        if conn.closed.load(Ordering::SeqCst) {
+            self.slots.lock().unwrap().remove(&slot);
+            return Err(NetError::Disconnected);
+        }
+        Ok(PoolPending { seq, rx })
+    }
+
+    /// Synchronous convenience: submit one frame and wait for it.
+    pub fn call_planes(
+        &self,
+        t_len: usize,
+        batch: usize,
+        rewards: &[f32],
+        values: &[f32],
+        done_mask: &[f32],
+    ) -> Result<NetGae, NetError> {
+        self.submit_planes(t_len, batch, rewards, values, done_mask)?.wait()
+    }
+}
+
+impl Drop for PoolClient {
+    /// Deregister the seq space so a long-lived pool doesn't accumulate
+    /// dead submitters. Frames still in flight are abandoned: their
+    /// [`PoolPending::wait`] fails with [`NetError::Disconnected`]
+    /// (the slot map dies with the submitter), never hangs.
+    fn drop(&mut self) {
+        self.shared.conns[self.conn_index]
+            .registry
+            .write()
+            .unwrap()
+            .remove(&seq_space(self.id));
+    }
+}
+
+/// Handle to one in-flight pooled frame.
+#[derive(Debug)]
+pub struct PoolPending {
+    seq: u64,
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl PoolPending {
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Block until the endpoint answers this frame (out-of-order safe).
+    pub fn wait(self) -> Result<NetGae, NetError> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(NetGae {
+                advantages: resp.advantages,
+                rewards_to_go: resp.rewards_to_go,
+                hw_cycles: resp.hw_cycles,
+                cache_hit: resp.cache_hit,
+                quantized: resp.quantized,
+            }),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(NetError::Disconnected),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn seq_spaces_are_disjoint_and_recoverable() {
+        check("pool seq partition", 200, |g| {
+            let a = g.usize_in(0, 1 << 20) as u32;
+            let b = g.usize_in(0, 1 << 20) as u32;
+            let x = g.usize_in(0, u32::MAX as usize) as u32;
+            let y = g.usize_in(0, u32::MAX as usize) as u32;
+            let sa = seq_for(a, x);
+            let sb = seq_for(b, y);
+            assert_ne!(sa, 0, "seq 0 is reserved");
+            assert_eq!(submitter_of(sa), Some(a));
+            assert_eq!(submitter_of(sb), Some(b));
+            if a != b {
+                // Different submitters can never collide, whatever
+                // their frame counters are — the partition property.
+                assert_ne!(sa, sb);
+            } else if x != y {
+                assert_ne!(sa, sb);
+            }
+        });
+    }
+
+    #[test]
+    fn plain_client_seqs_fall_outside_every_space() {
+        // NetClient seqs are small counters: high bits zero.
+        assert_eq!(submitter_of(1), None);
+        assert_eq!(submitter_of(u32::MAX as u64), None);
+        // The first pool space starts just above.
+        assert_eq!(submitter_of(1 << 32), Some(0));
+    }
+
+    #[test]
+    fn default_config_is_quantized_requests_exact_replies() {
+        let c = PoolConfig::default();
+        assert!(c.sockets >= 1);
+        assert!(c.codec.is_quantized());
+        assert!(!c.resp.is_quantized());
+    }
+}

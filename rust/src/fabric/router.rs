@@ -1,0 +1,922 @@
+//! The shard router: rendezvous hashing over `(tenant, trajectory
+//! key)` across N GAE shards, with health-tracked failover.
+//!
+//! ## Routing
+//!
+//! Every request carries a routing key; the router scores each shard
+//! with an FNV-1a rendezvous hash over `(tenant, key, shard index)` and
+//! prefers shards in descending score order ([`GaeFabric::rank`]).
+//! Rendezvous (highest-random-weight) hashing gives the two properties
+//! a shard fleet needs and a modulo hash lacks:
+//!
+//! - **Stability** — adding or removing one shard remaps only the keys
+//!   that scored highest on it (~1/N of traffic), not everything.
+//! - **A total failover order** — the rank vector *is* the spill
+//!   chain: when a shard sheds or its connection drops, the request
+//!   moves to the next-ranked shard, so one dead shard's key range
+//!   spreads evenly over the survivors instead of dogpiling one.
+//!
+//! ## Health and failover
+//!
+//! A shard that sheds (`Overloaded`), refuses (`ShuttingDown`), or
+//! drops its connection is marked unhealthy and skipped by routing
+//! until a cooldown elapses; after the cooldown one request whose rank
+//! prefers it probes it again (half-open), re-marking it on failure and
+//! fully restoring it on success. Failures *after* admission — a shard
+//! dying with the request in flight — are retried through the same
+//! rank order by [`FabricPending::wait`], bounded by
+//! [`FabricConfig::max_attempts`], so "every submitted request
+//! completes" holds as long as any shard survives. Replication is
+//! deliberately absent (see ROADMAP): a request lives on exactly one
+//! shard at a time, and failover re-computes rather than re-reads.
+//!
+//! Results are **bit-identical** to the in-process scalar path for f32
+//! transport regardless of which shard served them — every shard runs
+//! the same service compute ([`crate::service`]), and the integration
+//! suite (`tests/fabric_integration.rs`) pins that down across forced
+//! mid-load failovers.
+
+use crate::fabric::fleet::{FleetSnapshot, ShardStatus};
+use crate::fabric::pool::{ClientPool, PoolClient, PoolConfig, PoolPending};
+use crate::net::client::NetError;
+use crate::service::{GaeService, PlaneSet, PlanesPending, ServiceError};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Fabric deployment knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricConfig {
+    /// How long an unhealthy shard sits out before one request probes
+    /// it again (half-open recovery).
+    pub cooldown: Duration,
+    /// Submit attempts per request across the whole fleet before
+    /// [`FabricError::Exhausted`]; `0` = twice the shard count.
+    pub max_attempts: usize,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig { cooldown: Duration::from_millis(500), max_attempts: 0 }
+    }
+}
+
+/// Where one shard's compute lives.
+pub enum ShardBackend {
+    /// A service in this process (the sharded-trainer shape).
+    InProcess(Arc<GaeService>),
+    /// A remote TCP endpoint behind a connection-multiplexing pool.
+    Remote {
+        pool: ClientPool,
+        /// One pooled submitter per tenant, created on demand,
+        /// LRU-bounded like the quota and tenant-metrics maps.
+        submitters: Mutex<SubmitterCache>,
+    },
+}
+
+/// Most per-tenant submitters cached per remote shard. At the cap the
+/// longest-untouched tenant's submitter is evicted (O(n), only on a new
+/// tenant at the cap) — an *active* tenant is by definition recently
+/// touched, so eviction lands on idle submitters; a dropped submitter
+/// deregisters its seq space, and any frame somehow still in flight
+/// fails over through the router rather than hanging.
+const MAX_CACHED_SUBMITTERS: usize = 4096;
+
+/// Tenant → (submitter, last-touch tick), bounded at
+/// [`MAX_CACHED_SUBMITTERS`].
+#[derive(Default)]
+pub struct SubmitterCache {
+    map: HashMap<String, (Arc<PoolClient>, u64)>,
+    tick: u64,
+}
+
+impl SubmitterCache {
+    fn get_or_insert(
+        &mut self,
+        tenant: &str,
+        make: impl FnOnce() -> PoolClient,
+    ) -> Arc<PoolClient> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((s, last)) = self.map.get_mut(tenant) {
+            *last = tick;
+            return Arc::clone(s);
+        }
+        if self.map.len() >= MAX_CACHED_SUBMITTERS {
+            if let Some(stalest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, last))| *last)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&stalest);
+            }
+        }
+        let s = Arc::new(make());
+        self.map.insert(tenant.to_string(), (Arc::clone(&s), tick));
+        s
+    }
+}
+
+impl ShardBackend {
+    /// An in-process shard over an `Arc`-shared service.
+    pub fn in_process(service: Arc<GaeService>) -> ShardBackend {
+        ShardBackend::InProcess(service)
+    }
+
+    /// Dial a remote shard endpoint.
+    pub fn remote(addr: &str, pool: PoolConfig) -> anyhow::Result<ShardBackend> {
+        Ok(ShardBackend::Remote {
+            pool: ClientPool::connect(addr, pool)?,
+            submitters: Mutex::new(SubmitterCache::default()),
+        })
+    }
+}
+
+/// How long one half-open probe may hold the probe slot before it is
+/// presumed lost and another request may probe. Longer than the pool's
+/// dial timeout so a hung probe cannot wedge recovery, short enough
+/// that an abandoned claim (the probing request succeeded elsewhere
+/// first) delays the next probe by seconds, not forever.
+const PROBE_GRACE: Duration = Duration::from_secs(5);
+
+/// Health timestamps of one shard, behind one short mutex.
+#[derive(Debug, Default)]
+struct HealthTimes {
+    /// Last failure (re-armed by every failed probe).
+    failed_at: Option<Instant>,
+    /// A half-open probe currently holds the slot (set when routing
+    /// lets one request through to an unhealthy shard).
+    probe_started: Option<Instant>,
+}
+
+/// One shard slot: backend + health + counters.
+pub(crate) struct Shard {
+    pub(crate) label: String,
+    pub(crate) backend: ShardBackend,
+    healthy: AtomicBool,
+    times: Mutex<HealthTimes>,
+    pub(crate) submitted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) failed_over: AtomicU64,
+}
+
+impl Shard {
+    fn new(label: String, backend: ShardBackend) -> Shard {
+        Shard {
+            label,
+            backend,
+            healthy: AtomicBool::new(true),
+            times: Mutex::new(HealthTimes::default()),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed_over: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn is_healthy(&self) -> bool {
+        self.healthy.load(Ordering::Acquire)
+    }
+
+    /// Routable now: healthy, or unhealthy with the cooldown elapsed
+    /// AND the half-open probe slot free — in which case the caller
+    /// *claims* the slot, so exactly one request probes a recovering
+    /// shard instead of a thundering herd piling onto a possibly-dead
+    /// connection. The claim self-expires after [`PROBE_GRACE`] in case
+    /// the claiming request never actually reaches the shard.
+    fn routable(&self, cooldown: Duration) -> bool {
+        if self.is_healthy() {
+            return true;
+        }
+        let mut t = self.times.lock().unwrap();
+        let cooled = match t.failed_at {
+            Some(at) => at.elapsed() >= cooldown,
+            None => true,
+        };
+        if !cooled {
+            return false;
+        }
+        match t.probe_started {
+            Some(since) if since.elapsed() < PROBE_GRACE => false,
+            _ => {
+                t.probe_started = Some(Instant::now());
+                true
+            }
+        }
+    }
+
+    fn mark_unhealthy(&self) {
+        self.healthy.store(false, Ordering::Release);
+        let mut t = self.times.lock().unwrap();
+        t.failed_at = Some(Instant::now());
+        t.probe_started = None;
+    }
+
+    fn mark_healthy(&self) {
+        self.healthy.store(true, Ordering::Release);
+        let mut t = self.times.lock().unwrap();
+        t.failed_at = None;
+        t.probe_started = None;
+    }
+
+    fn submitter_for(&self, tenant: &str) -> Option<Arc<PoolClient>> {
+        match &self.backend {
+            ShardBackend::InProcess(_) => None,
+            ShardBackend::Remote { pool, submitters } => Some(
+                submitters
+                    .lock()
+                    .unwrap()
+                    .get_or_insert(tenant, || pool.submitter(tenant)),
+            ),
+        }
+    }
+}
+
+/// Why a fabric request failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FabricError {
+    /// The request is invalid everywhere (bad geometry, non-binary
+    /// mask, tenant over quota): retrying it on another shard can never
+    /// succeed.
+    Rejected(String),
+    /// Every submit attempt across the fleet failed.
+    Exhausted { attempts: usize, last: String },
+}
+
+impl fmt::Display for FabricError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FabricError::Rejected(e) => write!(f, "request rejected (not retryable): {e}"),
+            FabricError::Exhausted { attempts, last } => write!(
+                f,
+                "all shards refused after {attempts} attempts (last: {last})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+/// One request's planes, shared so a failover can resubmit without the
+/// submitter keeping its own copy alive.
+#[derive(Debug)]
+struct FabricPayload {
+    t_len: usize,
+    batch: usize,
+    rewards: Vec<f32>,
+    values: Vec<f32>,
+    done_mask: Vec<f32>,
+}
+
+impl FabricPayload {
+    /// Mirror of [`PlaneSet::new`]'s checks, run once at the fabric
+    /// boundary so an invalid request is a [`FabricError::Rejected`]
+    /// before any shard (or clone) is touched.
+    fn validate(&self) -> Result<(), FabricError> {
+        let reject = |e: ServiceError| Err(FabricError::Rejected(e.to_string()));
+        if self.t_len == 0 || self.batch == 0 {
+            return reject(ServiceError::EmptyRequest);
+        }
+        let n = self.t_len * self.batch;
+        if self.rewards.len() != n {
+            return reject(ServiceError::ShapeMismatch {
+                plane: "rewards",
+                got: self.rewards.len(),
+                want: n,
+            });
+        }
+        if self.values.len() != (self.t_len + 1) * self.batch {
+            return reject(ServiceError::ShapeMismatch {
+                plane: "values",
+                got: self.values.len(),
+                want: (self.t_len + 1) * self.batch,
+            });
+        }
+        if self.done_mask.len() != n {
+            return reject(ServiceError::ShapeMismatch {
+                plane: "done_mask",
+                got: self.done_mask.len(),
+                want: n,
+            });
+        }
+        if let Some(index) =
+            self.done_mask.iter().position(|&d| d != 0.0 && d != 1.0)
+        {
+            return reject(ServiceError::NonBinaryDoneMask { index });
+        }
+        Ok(())
+    }
+
+    fn elements(&self) -> u64 {
+        (self.t_len * self.batch) as u64
+    }
+}
+
+/// An admitted request sitting on one shard.
+enum Attempt {
+    InProcess(PlanesPending),
+    Remote(PoolPending),
+}
+
+enum TryFail {
+    /// Shard-local failure: mark unhealthy, spill to the next shard.
+    Retryable(String),
+    /// Request-level failure: no shard will accept it.
+    Fatal(String),
+}
+
+pub(crate) struct FabricInner {
+    pub(crate) shards: Vec<Shard>,
+    config: FabricConfig,
+}
+
+impl FabricInner {
+    fn max_attempts(&self) -> usize {
+        if self.config.max_attempts > 0 {
+            self.config.max_attempts
+        } else {
+            (self.shards.len() * 2).max(2)
+        }
+    }
+
+    /// Rendezvous score of `shard` for `(tenant, key)`.
+    fn score(tenant: &str, key: u64, shard: usize) -> u64 {
+        let mut h = crate::net::wire::Fnv1a::new();
+        h.write(tenant.as_bytes());
+        h.write_u8(0xFE); // domain separator: tenant bytes never alias the key
+        h.write_u64(key);
+        h.write_u64(shard as u64);
+        h.finish()
+    }
+
+    /// Shard preference order for `(tenant, key)`: descending rendezvous
+    /// score, index as the deterministic tie-break.
+    fn rank(&self, tenant: &str, key: u64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&s| (std::cmp::Reverse(Self::score(tenant, key, s)), s));
+        order
+    }
+
+    /// One submit attempt against one shard.
+    fn try_shard(
+        &self,
+        idx: usize,
+        tenant: &str,
+        payload: &FabricPayload,
+    ) -> Result<Attempt, TryFail> {
+        let shard = &self.shards[idx];
+        shard.submitted.fetch_add(1, Ordering::Relaxed);
+        match &shard.backend {
+            ShardBackend::InProcess(svc) => {
+                // Validated at the fabric boundary, so this cannot fail.
+                let planes = PlaneSet::new(
+                    payload.t_len,
+                    payload.batch,
+                    payload.rewards.clone(),
+                    payload.values.clone(),
+                    payload.done_mask.clone(),
+                )
+                .map_err(|e| TryFail::Fatal(e.to_string()))?;
+                // Fail-fast admission: a shedding shard spills instead
+                // of stalling the submitter.
+                match svc.try_submit_plane_set(planes) {
+                    // Per-tenant accounting happens at *completion*
+                    // (the wait path), so a request that fails over
+                    // mid-flight is never double-counted.
+                    Ok(pending) => Ok(Attempt::InProcess(pending)),
+                    Err(e @ ServiceError::Overloaded { .. }) => {
+                        svc.metrics_handle().record_tenant_shed(tenant);
+                        Err(TryFail::Retryable(e.to_string()))
+                    }
+                    Err(e @ ServiceError::ShuttingDown) => {
+                        Err(TryFail::Retryable(e.to_string()))
+                    }
+                    Err(e) => Err(TryFail::Fatal(e.to_string())),
+                }
+            }
+            ShardBackend::Remote { .. } => {
+                let submitter = shard
+                    .submitter_for(tenant)
+                    .expect("remote backend always yields a submitter");
+                match submitter.submit_planes(
+                    payload.t_len,
+                    payload.batch,
+                    &payload.rewards,
+                    &payload.values,
+                    &payload.done_mask,
+                ) {
+                    Ok(pending) => Ok(Attempt::Remote(pending)),
+                    Err(NetError::InvalidRequest(e)) => Err(TryFail::Fatal(e)),
+                    Err(e) => Err(TryFail::Retryable(e.to_string())),
+                }
+            }
+        }
+    }
+
+    /// Walk the rank order — available shards first, desperation probes
+    /// of cooling-down shards after — until one admits the request or
+    /// the attempt budget runs out. `exclude` skips the shard a retry
+    /// just watched fail.
+    fn submit_with_budget(
+        &self,
+        tenant: &str,
+        key: u64,
+        payload: &FabricPayload,
+        attempts_used: &mut usize,
+        exclude: Option<usize>,
+    ) -> Result<(usize, Attempt), FabricError> {
+        let budget = self.max_attempts();
+        let order = self.rank(tenant, key);
+        // Routability is evaluated exactly once per shard: `routable`
+        // claims the half-open probe slot as a side effect, so calling
+        // it twice would burn a second claim.
+        let mut routable = Vec::new();
+        let mut desperate = Vec::new();
+        for &s in &order {
+            if Some(s) == exclude {
+                continue;
+            }
+            if self.shards[s].routable(self.config.cooldown) {
+                routable.push(s);
+            } else {
+                // Last resort only: tried when every routable shard
+                // refused, rather than skipped outright.
+                desperate.push(s);
+            }
+        }
+        let candidates: Vec<usize> = routable.into_iter().chain(desperate).collect();
+        let mut last = "no routable shard".to_string();
+        for s in candidates {
+            if *attempts_used >= budget {
+                break;
+            }
+            *attempts_used += 1;
+            match self.try_shard(s, tenant, payload) {
+                Ok(attempt) => return Ok((s, attempt)),
+                Err(TryFail::Retryable(e)) => {
+                    self.shards[s].mark_unhealthy();
+                    self.shards[s].failed_over.fetch_add(1, Ordering::Relaxed);
+                    last = format!("{} ({e})", self.shards[s].label);
+                }
+                Err(TryFail::Fatal(e)) => return Err(FabricError::Rejected(e)),
+            }
+        }
+        Err(FabricError::Exhausted { attempts: *attempts_used, last })
+    }
+}
+
+/// A horizontally sharded GAE fleet behind one submit API: requests
+/// route by rendezvous hash over `(tenant, key)`, spill to the
+/// next-ranked shard on failure, and return results bit-identical to
+/// the single-service path. Cheap to clone (`Arc` inside).
+#[derive(Clone)]
+pub struct GaeFabric {
+    inner: Arc<FabricInner>,
+}
+
+impl GaeFabric {
+    /// Build a fabric over `(label, backend)` shard slots.
+    pub fn new(
+        shards: Vec<(String, ShardBackend)>,
+        config: FabricConfig,
+    ) -> anyhow::Result<GaeFabric> {
+        anyhow::ensure!(!shards.is_empty(), "fabric needs at least one shard");
+        let shards = shards
+            .into_iter()
+            .map(|(label, backend)| Shard::new(label, backend))
+            .collect();
+        Ok(GaeFabric { inner: Arc::new(FabricInner { shards, config }) })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    pub fn shard_label(&self, idx: usize) -> &str {
+        &self.inner.shards[idx].label
+    }
+
+    /// The shard's raw health flag (not probe eligibility).
+    pub fn is_healthy(&self, idx: usize) -> bool {
+        self.inner.shards[idx].is_healthy()
+    }
+
+    /// Shard preference order for `(tenant, key)` — index 0 is the
+    /// primary, the rest is the spill chain.
+    pub fn rank(&self, tenant: &str, key: u64) -> Vec<usize> {
+        self.inner.rank(tenant, key)
+    }
+
+    /// Route one plane-shaped request into the fleet. Returns once a
+    /// shard admits it; [`FabricPending::wait`] completes it, retrying
+    /// through the spill chain if the serving shard dies mid-flight.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit(
+        &self,
+        tenant: &str,
+        key: u64,
+        t_len: usize,
+        batch: usize,
+        rewards: Vec<f32>,
+        values: Vec<f32>,
+        done_mask: Vec<f32>,
+    ) -> Result<FabricPending, FabricError> {
+        let payload =
+            Arc::new(FabricPayload { t_len, batch, rewards, values, done_mask });
+        payload.validate()?;
+        let mut attempts_used = 0;
+        let (shard, attempt) = self.inner.submit_with_budget(
+            tenant,
+            key,
+            &payload,
+            &mut attempts_used,
+            None,
+        )?;
+        Ok(FabricPending {
+            inner: Arc::clone(&self.inner),
+            tenant: tenant.to_string(),
+            key,
+            payload,
+            shard,
+            attempt,
+            attempts_used,
+            failovers: attempts_used.saturating_sub(1) as u32,
+        })
+    }
+
+    /// Synchronous convenience: submit and wait.
+    #[allow(clippy::too_many_arguments)]
+    pub fn call(
+        &self,
+        tenant: &str,
+        key: u64,
+        t_len: usize,
+        batch: usize,
+        rewards: Vec<f32>,
+        values: Vec<f32>,
+        done_mask: Vec<f32>,
+    ) -> Result<FabricGae, FabricError> {
+        self.submit(tenant, key, t_len, batch, rewards, values, done_mask)?.wait()
+    }
+
+    /// Point-in-time fleet view: per-shard status plus aggregated
+    /// totals and the merged per-tenant breakdown.
+    pub fn fleet(&self) -> FleetSnapshot {
+        let shards: Vec<ShardStatus> = self
+            .inner
+            .shards
+            .iter()
+            .map(|s| ShardStatus {
+                label: s.label.clone(),
+                healthy: s.is_healthy(),
+                submitted: s.submitted.load(Ordering::Relaxed),
+                completed: s.completed.load(Ordering::Relaxed),
+                failed_over: s.failed_over.load(Ordering::Relaxed),
+                service: match &s.backend {
+                    ShardBackend::InProcess(svc) => Some(svc.metrics()),
+                    ShardBackend::Remote { .. } => None,
+                },
+            })
+            .collect();
+        FleetSnapshot::aggregate(shards)
+    }
+}
+
+/// A completed fabric request.
+#[derive(Debug, Clone)]
+pub struct FabricGae {
+    /// `[T * B]` advantages, timestep-major.
+    pub advantages: Vec<f32>,
+    /// `[T * B]` rewards-to-go, timestep-major.
+    pub rewards_to_go: Vec<f32>,
+    pub hw_cycles: Option<u64>,
+    /// A remote shard answered from its response cache (always `false`
+    /// for in-process shards, which sit below the network cache).
+    pub cache_hit: bool,
+    /// Shard that ultimately served the request.
+    pub shard: usize,
+    /// Shards this request had to leave before completing (0 = the
+    /// primary served it).
+    pub failovers: u32,
+}
+
+enum Outcome {
+    Done {
+        advantages: Vec<f32>,
+        rewards_to_go: Vec<f32>,
+        hw_cycles: Option<u64>,
+        cache_hit: bool,
+    },
+    Retry(String),
+    Fatal(String),
+}
+
+/// One in-flight fabric request. Dropping it abandons the result
+/// (computed and discarded, like a dropped service handle).
+pub struct FabricPending {
+    inner: Arc<FabricInner>,
+    tenant: String,
+    key: u64,
+    payload: Arc<FabricPayload>,
+    shard: usize,
+    attempt: Attempt,
+    attempts_used: usize,
+    failovers: u32,
+}
+
+impl FabricPending {
+    /// The shard currently holding the request.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until a shard completes the request, spilling to the next
+    /// ranked shard if the serving one dies mid-flight. Fails only when
+    /// the request is invalid ([`FabricError::Rejected`]) or every
+    /// shard refused within the attempt budget
+    /// ([`FabricError::Exhausted`]).
+    pub fn wait(self) -> Result<FabricGae, FabricError> {
+        let FabricPending {
+            inner,
+            tenant,
+            key,
+            payload,
+            mut shard,
+            mut attempt,
+            mut attempts_used,
+            mut failovers,
+        } = self;
+        loop {
+            let outcome = match attempt {
+                Attempt::InProcess(pending) => match pending.wait() {
+                    Ok(gae) => Outcome::Done {
+                        advantages: gae.advantages,
+                        rewards_to_go: gae.rewards_to_go,
+                        hw_cycles: gae.hw_cycles,
+                        cache_hit: false,
+                    },
+                    // The service died with the request in flight; the
+                    // computation is lost, not the request.
+                    Err(e @ ServiceError::ShuttingDown) => {
+                        Outcome::Retry(e.to_string())
+                    }
+                    Err(e) => Outcome::Fatal(e.to_string()),
+                },
+                Attempt::Remote(pending) => match pending.wait() {
+                    Ok(gae) => Outcome::Done {
+                        advantages: gae.advantages,
+                        rewards_to_go: gae.rewards_to_go,
+                        hw_cycles: gae.hw_cycles,
+                        cache_hit: gae.cache_hit,
+                    },
+                    Err(e) => match &e {
+                        // Request-level refusals follow the request.
+                        NetError::InvalidRequest(_) => Outcome::Fatal(e.to_string()),
+                        NetError::Remote { kind, .. } => match kind {
+                            crate::net::ErrorKind::Quota
+                            | crate::net::ErrorKind::Malformed => {
+                                Outcome::Fatal(e.to_string())
+                            }
+                            // Shed/shutdown/internal: shard-local.
+                            _ => Outcome::Retry(e.to_string()),
+                        },
+                        // Dead socket, undecodable frame: shard-local.
+                        _ => Outcome::Retry(e.to_string()),
+                    },
+                },
+            };
+            match outcome {
+                Outcome::Done { advantages, rewards_to_go, hw_cycles, cache_hit } => {
+                    let served = &inner.shards[shard];
+                    served.completed.fetch_add(1, Ordering::Relaxed);
+                    served.mark_healthy();
+                    // Tenant accounting lands on the shard that actually
+                    // answered — "requests answered with a result", once
+                    // per request even across failovers. (Remote shards
+                    // record on their own server side.)
+                    if let ShardBackend::InProcess(svc) = &served.backend {
+                        svc.metrics_handle()
+                            .record_tenant_request(&tenant, payload.elements());
+                    }
+                    return Ok(FabricGae {
+                        advantages,
+                        rewards_to_go,
+                        hw_cycles,
+                        cache_hit,
+                        shard,
+                        failovers,
+                    });
+                }
+                Outcome::Retry(_reason) => {
+                    inner.shards[shard].mark_unhealthy();
+                    inner.shards[shard].failed_over.fetch_add(1, Ordering::Relaxed);
+                    failovers += 1;
+                    let (next_shard, next_attempt) = inner.submit_with_budget(
+                        &tenant,
+                        key,
+                        &payload,
+                        &mut attempts_used,
+                        Some(shard),
+                    )?;
+                    shard = next_shard;
+                    attempt = next_attempt;
+                }
+                Outcome::Fatal(reason) => return Err(FabricError::Rejected(reason)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GaeBackend;
+    use crate::gae::reference::gae_trajectory;
+    use crate::gae::{GaeParams, Trajectory};
+    use crate::testing::Gen;
+
+    fn in_process_fabric(shards: usize, config: FabricConfig) -> GaeFabric {
+        let slots = (0..shards)
+            .map(|i| {
+                let svc = Arc::new(
+                    GaeService::with_workers(1, GaeBackend::Scalar).unwrap(),
+                );
+                (format!("shard-{i}"), ShardBackend::in_process(svc))
+            })
+            .collect();
+        GaeFabric::new(slots, config).unwrap()
+    }
+
+    fn planes(g: &mut Gen, t_len: usize, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+        let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+        let done_mask = (0..t_len * batch)
+            .map(|_| if g.bool_p(0.06) { 1.0 } else { 0.0 })
+            .collect();
+        (rewards, values, done_mask)
+    }
+
+    #[test]
+    fn rank_is_deterministic_total_and_key_sensitive() {
+        let fabric = in_process_fabric(4, FabricConfig::default());
+        let mut moved = 0;
+        for key in 0..256u64 {
+            let order = fabric.rank("tenant", key);
+            assert_eq!(order.len(), 4);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "rank must be a permutation");
+            assert_eq!(order, fabric.rank("tenant", key), "rank must be stable");
+            if order != fabric.rank("other-tenant", key) {
+                moved += 1;
+            }
+        }
+        // Tenant participates in the hash: most keys route differently
+        // under a different tenant.
+        assert!(moved > 128, "only {moved}/256 keys moved across tenants");
+    }
+
+    #[test]
+    fn rendezvous_spreads_keys_over_all_shards() {
+        let fabric = in_process_fabric(4, FabricConfig::default());
+        let mut counts = [0usize; 4];
+        for key in 0..4096u64 {
+            counts[fabric.rank("t", key)[0]] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            // Expect ~1024 per shard; even a loose bound catches a
+            // broken hash (all-on-one or dead shards).
+            assert!(c > 512 && c < 1536, "shard {i} got {c}/4096 keys");
+        }
+    }
+
+    #[test]
+    fn routed_results_are_bit_identical_to_the_scalar_reference() {
+        let fabric = in_process_fabric(3, FabricConfig::default());
+        let mut g = Gen::new(17);
+        for key in 0..8u64 {
+            let (t_len, batch) = (g.usize_in(3, 24), g.usize_in(1, 5));
+            let (rewards, values, done_mask) = planes(&mut g, t_len, batch);
+            let got = fabric
+                .call(
+                    "tenant",
+                    key,
+                    t_len,
+                    batch,
+                    rewards.clone(),
+                    values.clone(),
+                    done_mask.clone(),
+                )
+                .unwrap();
+            assert_eq!(got.failovers, 0);
+            for col in 0..batch {
+                let traj = Trajectory::new(
+                    (0..t_len).map(|t| rewards[t * batch + col]).collect(),
+                    (0..=t_len).map(|t| values[t * batch + col]).collect(),
+                    (0..t_len).map(|t| done_mask[t * batch + col] == 1.0).collect(),
+                );
+                let want = gae_trajectory(&GaeParams::default(), &traj);
+                for t in 0..t_len {
+                    assert_eq!(
+                        got.advantages[t * batch + col].to_bits(),
+                        want.advantages[t].to_bits(),
+                        "key {key} col {col} t {t}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_primary_spills_to_next_ranked_shard() {
+        let fabric = in_process_fabric(
+            2,
+            FabricConfig { cooldown: Duration::from_secs(3600), ..Default::default() },
+        );
+        let mut g = Gen::new(5);
+        // Find a key whose primary is shard 0, then kill shard 0.
+        let key = (0..64u64)
+            .find(|&k| fabric.rank("t", k)[0] == 0)
+            .expect("some key must rank shard 0 first");
+        match &fabric.inner.shards[0].backend {
+            ShardBackend::InProcess(svc) => svc.begin_shutdown(),
+            _ => unreachable!(),
+        }
+        let (rewards, values, done_mask) = planes(&mut g, 8, 2);
+        let got = fabric.call("t", key, 8, 2, rewards, values, done_mask).unwrap();
+        assert_eq!(got.shard, 1, "must spill to the surviving shard");
+        assert!(got.failovers >= 1);
+        assert!(!fabric.is_healthy(0), "failed shard must be marked");
+        assert!(fabric.is_healthy(1));
+        let fleet = fabric.fleet();
+        assert_eq!(fleet.completed, 1);
+        assert!(fleet.failed_over >= 1);
+        // With the long cooldown, the dead shard is no longer probed
+        // first: the same key now routes straight to shard 1.
+        let (rewards, values, done_mask) = planes(&mut g, 8, 2);
+        let got = fabric.call("t", key, 8, 2, rewards, values, done_mask).unwrap();
+        assert_eq!(got.shard, 1);
+        assert_eq!(got.failovers, 0, "unavailable shards are skipped, not probed");
+    }
+
+    #[test]
+    fn all_shards_down_reports_exhausted() {
+        let fabric = in_process_fabric(2, FabricConfig::default());
+        for shard in &fabric.inner.shards {
+            match &shard.backend {
+                ShardBackend::InProcess(svc) => svc.begin_shutdown(),
+                _ => unreachable!(),
+            }
+        }
+        let mut g = Gen::new(9);
+        let (rewards, values, done_mask) = planes(&mut g, 4, 1);
+        let err = fabric
+            .call("t", 1, 4, 1, rewards, values, done_mask)
+            .unwrap_err();
+        match err {
+            FabricError::Exhausted { attempts, .. } => assert!(attempts >= 2),
+            other => panic!("expected Exhausted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected_without_touching_shards() {
+        let fabric = in_process_fabric(2, FabricConfig::default());
+        // Shape mismatch.
+        let err = fabric
+            .call("t", 1, 4, 2, vec![0.0; 7], vec![0.0; 10], vec![0.0; 8])
+            .unwrap_err();
+        assert!(matches!(err, FabricError::Rejected(_)), "{err:?}");
+        // Non-binary done mask.
+        let err = fabric
+            .call("t", 1, 2, 1, vec![0.0; 2], vec![0.0; 3], vec![0.5, 0.0])
+            .unwrap_err();
+        assert!(matches!(err, FabricError::Rejected(_)), "{err:?}");
+        let fleet = fabric.fleet();
+        assert_eq!(fleet.submitted, 0, "rejections must not count as submissions");
+        assert!(fabric.is_healthy(0) && fabric.is_healthy(1));
+    }
+
+    #[test]
+    fn per_tenant_breakdown_reaches_the_fleet_view() {
+        let fabric = in_process_fabric(2, FabricConfig::default());
+        let mut g = Gen::new(3);
+        for (tenant, n) in [("alpha", 4u64), ("beta", 2)] {
+            for key in 0..n {
+                let (rewards, values, done_mask) = planes(&mut g, 6, 2);
+                fabric
+                    .call(tenant, key, 6, 2, rewards, values, done_mask)
+                    .unwrap();
+            }
+        }
+        let fleet = fabric.fleet();
+        assert_eq!(fleet.completed, 6);
+        let alpha = fleet.tenants.iter().find(|t| t.tenant == "alpha").unwrap();
+        assert_eq!(alpha.requests, 4);
+        assert_eq!(alpha.elements, 4 * 12);
+        let beta = fleet.tenants.iter().find(|t| t.tenant == "beta").unwrap();
+        assert_eq!(beta.requests, 2);
+    }
+}

@@ -31,12 +31,14 @@
 //! | [`coordinator`] | the PPO training system (rollout, GAE stage, update) |
 //! | [`service`] | GAE serving: dynamic batching, sharded workers, admission control |
 //! | [`net`] | network front-end: quantized wire protocol, TCP server, pipelined client |
+//! | [`fabric`] | sharded service fleet: consistent-hash router, client pool, fleet metrics |
 //! | [`bench`] | micro-benchmark harness used by `cargo bench` targets |
 //! | [`testing`] | mini property-test harness used across the test suite |
 
 pub mod bench;
 pub mod coordinator;
 pub mod envs;
+pub mod fabric;
 pub mod gae;
 pub mod hwsim;
 pub mod memory;

@@ -1,18 +1,20 @@
 //! Response cache: hash of a request's quantized payload → its GAE
-//! result.
+//! result, keyed **per tenant**.
 //!
-//! Quantization makes caching *work*: two clients whose raw f32 planes
-//! differ below the 8-bit step quantize to identical codewords, so their
-//! frames hash identically and the second one is answered without
-//! touching the compute queue. The key is the FNV-1a digest of the
-//! payload section ([`RequestFrame::payload_hash`]
-//! (crate::net::wire::RequestFrame)), which covers codec, bits, geometry
-//! and every payload byte. FNV-1a is fast, not collision-resistant:
-//! accidental 64-bit collisions are negligible, but a client could
-//! *construct* one — acceptable under the front-end's current trust
-//! model (unauthenticated, tenants trusted; see ROADMAP), where such a
-//! client could equally submit wrong data directly. Authenticated
-//! deployments should key per-tenant or switch to a keyed hash.
+//! Quantization makes caching *work*: two frames from one tenant whose
+//! raw f32 planes differ below the 8-bit step quantize to identical
+//! codewords, so they hash identically and the second is answered
+//! without touching the compute queue. The key is [`scoped_key`]: the
+//! FNV-1a digest of the payload section ([`RequestFrame::payload_hash`]
+//! (crate::net::wire::RequestFrame)) — codec, bits, geometry and every
+//! payload byte — folded together with the tenant id. FNV-1a is fast,
+//! not collision-resistant: accidental 64-bit collisions are
+//! negligible, but a client could *construct* one. Tenant scoping
+//! bounds the blast radius of that construction to the attacker's own
+//! entries — a tenant can at worst poison results replayed to itself
+//! (which it could do anyway by submitting wrong data), never another
+//! tenant's. The remaining step for untrusted deployments is
+//! authenticating the tenant id itself (see ROADMAP: TLS/auth).
 //!
 //! Eviction is lazy LRU: every touch appends a `(key, tick)` pair to an
 //! order queue; eviction pops from the front, skipping pairs whose tick
@@ -22,6 +24,20 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
+
+/// The cache key for one `(tenant, payload)` pair: FNV-1a over the
+/// tenant bytes, a `0xFF` domain separator (tenant ids are UTF-8, so no
+/// tenant byte equals `0xFF` at a string boundary ambiguity), then the
+/// payload hash's little-endian bytes. Two tenants replaying the *same*
+/// payload get distinct keys, so a constructible payload-hash collision
+/// can only ever poison the colliding tenant's own entries.
+pub fn scoped_key(tenant: &str, payload_hash: u64) -> u64 {
+    let mut h = crate::net::wire::Fnv1a::new();
+    h.write(tenant.as_bytes());
+    h.write_u8(0xFF);
+    h.write_u64(payload_hash);
+    h.finish()
+}
 
 /// One cached GAE result (response planes travel f32, so this is exact).
 #[derive(Debug, Clone)]
@@ -176,6 +192,21 @@ mod tests {
             rewards_to_go: vec![tag],
             hw_cycles: None,
         })
+    }
+
+    #[test]
+    fn scoped_keys_isolate_tenants_and_are_stable() {
+        // Same payload, different tenants: distinct keys (no
+        // cross-tenant replay); same pair: deterministic.
+        let payload = 0xdead_beef_cafe_f00d;
+        let a = scoped_key("tenant-a", payload);
+        let b = scoped_key("tenant-b", payload);
+        assert_ne!(a, b);
+        assert_eq!(a, scoped_key("tenant-a", payload));
+        // Same tenant, different payloads: distinct keys.
+        assert_ne!(a, scoped_key("tenant-a", payload ^ 1));
+        // Prefix tenants don't alias thanks to the domain separator.
+        assert_ne!(scoped_key("ab", payload), scoped_key("a", payload));
     }
 
     #[test]

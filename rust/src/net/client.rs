@@ -14,7 +14,7 @@
 //! against what the f32 escape hatch would have moved — the measured
 //! `reduction_vs_f32` the `net_throughput` bench reports.
 
-use crate::net::wire::{self, ErrorKind, Frame};
+use crate::net::wire::{self, ErrorKind, Frame, PlaneCodec};
 use crate::quant::CodecKind;
 use std::collections::HashMap;
 use std::io::Write;
@@ -33,15 +33,21 @@ pub struct NetClientConfig {
     pub codec: CodecKind,
     /// Quantizer width (ignored by the f32 codecs).
     pub bits: u8,
+    /// Codec the *reply* planes should travel in. The default is
+    /// [`PlaneCodec::F32`]: bit-exact responses. A quantized pair asks
+    /// the server for the symmetric bandwidth lever (lossy replies).
+    pub resp: PlaneCodec,
 }
 
 impl Default for NetClientConfig {
-    /// The paper's operating point: 8-bit Exp-5 transport.
+    /// The paper's operating point: 8-bit Exp-5 request transport with
+    /// bit-exact f32 replies.
     fn default() -> Self {
         NetClientConfig {
             tenant: "default".to_string(),
             codec: CodecKind::Exp5DynamicBlock,
             bits: 8,
+            resp: PlaneCodec::F32,
         }
     }
 }
@@ -56,6 +62,9 @@ pub struct NetGae {
     pub hw_cycles: Option<u64>,
     /// The server answered from its response cache.
     pub cache_hit: bool,
+    /// The reply planes travelled quantized (lossy). Always `false`
+    /// under the default f32 response codec.
+    pub quantized: bool,
 }
 
 /// Why a network call failed.
@@ -124,6 +133,7 @@ impl NetPending {
                 rewards_to_go: resp.rewards_to_go,
                 hw_cycles: resp.hw_cycles,
                 cache_hit: resp.cache_hit,
+                quantized: resp.quantized,
             }),
             Ok(Err(e)) => Err(e),
             Err(_) => Err(NetError::Disconnected),
@@ -218,8 +228,8 @@ impl NetClient {
         let encoded = wire::encode_request(
             seq,
             &self.config.tenant,
-            self.config.codec,
-            self.config.bits,
+            PlaneCodec { kind: self.config.codec, bits: self.config.bits },
+            self.config.resp,
             t_len,
             batch,
             rewards,

@@ -56,6 +56,6 @@ pub use client::{NetClient, NetClientConfig, NetError, NetGae, NetPending, WireS
 pub use quota::{QuotaConfig, TokenBuckets};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{
-    EncodedRequest, ErrorFrame, ErrorKind, Frame, LazyFrame, LazyRequest,
-    RequestFrame, ResponseFrame, WireDecodeError,
+    EncodedRequest, ErrorFrame, ErrorKind, Fnv1a, Frame, LazyFrame, LazyRequest,
+    PlaneCodec, RequestFrame, ResponseFrame, WireDecodeError,
 };

@@ -36,8 +36,12 @@
 //!    cache so a hot tenant cannot dodge its budget by replaying
 //!    cacheable payloads; the charge is refunded if the frame is later
 //!    refused (shed/malformed) with no work performed.
-//! 2. **Cache** — the payload-hash keyed [`ResponseCache`]; a hit
-//!    answers immediately with the `cache_hit` response flag set.
+//! 2. **Cache** — the [`ResponseCache`], keyed per tenant
+//!    ([`cache::scoped_key`] folds the tenant id into the payload hash,
+//!    so a constructible FNV collision can only poison the colliding
+//!    tenant's own entries); a hit answers immediately with the
+//!    `cache_hit` response flag set, re-encoded under the requester's
+//!    reply codec.
 //! 3. **Admission** — the lazily-decoded planes move (zero-copy) into
 //!    [`GaeService::try_submit_plane_set`]; the admission controller's
 //!    `Overloaded` becomes a typed `Shed` error frame
@@ -49,9 +53,9 @@
 //! [`MetricsSnapshot`](crate::service::MetricsSnapshot), so one snapshot
 //! covers queue, batcher, and network behavior.
 
-use crate::net::cache::{CachedGae, ResponseCache};
+use crate::net::cache::{self, CachedGae, ResponseCache};
 use crate::net::quota::{QuotaConfig, TokenBuckets};
-use crate::net::wire::{self, ErrorKind, LazyFrame, LazyRequest};
+use crate::net::wire::{self, ErrorKind, LazyFrame, LazyRequest, PlaneCodec};
 use crate::service::{GaeService, PlaneSet, PlanesPending, ServiceError};
 use std::collections::HashMap;
 use std::io::Write;
@@ -216,9 +220,12 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 /// One admitted request travelling from reader to completer.
 struct InFlight {
     seq: u64,
+    tenant: String,
     t_len: usize,
     batch: usize,
     cache_key: Option<u64>,
+    /// The reply codec the client asked for (f32 unless it opted in).
+    resp: PlaneCodec,
     pending: PlanesPending,
 }
 
@@ -316,6 +323,7 @@ fn handle_request(
     shared.frames_received.fetch_add(1, Ordering::Relaxed);
     let (seq, t_len, batch) = (req.seq, req.t_len, req.batch);
     let tenant = req.tenant;
+    let resp = req.resp;
 
     // 1. Quota: charge the tenant before any work happens on its behalf
     //    — the cost needs only the header geometry, no plane decode.
@@ -323,6 +331,7 @@ fn handle_request(
     if let Some(quota) = &shared.quota {
         if !quota.try_acquire(tenant, cost) {
             shared.service.metrics_handle().record_quota_shed();
+            shared.service.metrics_handle().record_tenant_quota_shed(tenant);
             let _ = out_tx.send(wire::encode_error(
                 seq,
                 ErrorKind::Quota,
@@ -342,16 +351,21 @@ fn handle_request(
         }
     };
 
-    // 2. Cache: identical quantized payloads replay the stored result.
-    //    The key hashes the raw packed bytes (computed only now — a
-    //    quota refusal above skipped even this pass), so a hit answers
-    //    without ever materializing the f32 planes.
+    // 2. Cache: identical quantized payloads from the *same tenant*
+    //    replay the stored result — the key folds the tenant id into
+    //    the raw-packed-bytes hash (computed only now; a quota refusal
+    //    above skipped even this pass), so a hit answers without ever
+    //    materializing the f32 planes and never crosses tenants.
     let mut cache_key = None;
     if let Some(cache) = &shared.cache {
-        let payload_hash = req.payload_hash();
-        if let Some(hit) = cache.get(payload_hash) {
+        let key = cache::scoped_key(tenant, req.payload_hash());
+        if let Some(hit) = cache.get(key) {
             if hit.t_len == t_len && hit.batch == batch {
                 shared.service.metrics_handle().record_cache_hit();
+                shared
+                    .service
+                    .metrics_handle()
+                    .record_tenant_request(tenant, (t_len * batch) as u64);
                 let _ = out_tx.send(wire::encode_response(
                     seq,
                     hit.t_len,
@@ -360,13 +374,14 @@ fn handle_request(
                     &hit.rewards_to_go,
                     hit.hw_cycles,
                     true,
+                    resp,
                 ));
                 return;
             }
             // 64-bit collision across geometries: treat as a miss.
         }
         shared.service.metrics_handle().record_cache_miss();
-        cache_key = Some(payload_hash);
+        cache_key = Some(key);
     }
 
     // 3. Deferred decode + admission: only frames that compute pay the
@@ -390,11 +405,22 @@ fn handle_request(
         shared.service.submit_plane_set(planes)
     };
     match submitted {
+        // Per-tenant accounting for computed requests happens in the
+        // completer ("requests answered with a result"), not here.
         Ok(pending) => {
-            let _ = done_tx.send(InFlight { seq, t_len, batch, cache_key, pending });
+            let _ = done_tx.send(InFlight {
+                seq,
+                tenant: tenant.to_string(),
+                t_len,
+                batch,
+                cache_key,
+                resp,
+                pending,
+            });
         }
         Err(ServiceError::Overloaded { depth, limit }) => {
             refund_charge();
+            shared.service.metrics_handle().record_tenant_shed(tenant);
             let _ = out_tx.send(wire::encode_error(
                 seq,
                 ErrorKind::Shed,
@@ -443,6 +469,10 @@ fn completer_loop(
                 if let (Some(cache), Some(key)) = (&shared.cache, inflight.cache_key) {
                     cache.insert(key, Arc::clone(&cached));
                 }
+                shared.service.metrics_handle().record_tenant_request(
+                    &inflight.tenant,
+                    (inflight.t_len * inflight.batch) as u64,
+                );
                 let _ = out_tx.send(wire::encode_response(
                     inflight.seq,
                     cached.t_len,
@@ -451,6 +481,7 @@ fn completer_loop(
                     &cached.rewards_to_go,
                     cached.hw_cycles,
                     false,
+                    inflight.resp,
                 ));
             }
             Err(ServiceError::ShuttingDown) => {

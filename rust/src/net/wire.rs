@@ -4,7 +4,7 @@
 //! standardized 8-bit storage cuts memory *and bandwidth* 4× with no
 //! training-quality loss.
 //!
-//! ## Frame layout (version 1)
+//! ## Frame layout (version 2)
 //!
 //! Every frame on the socket is `u32 LE length N` followed by `N` frame
 //! bytes (the length prefix excludes itself):
@@ -12,7 +12,7 @@
 //! | offset | size | field |
 //! |-------:|-----:|-------|
 //! | 0      | 4    | magic `"HGAE"` |
-//! | 4      | 1    | version (currently `1`) |
+//! | 4      | 1    | version (currently `2`) |
 //! | 5      | 1    | frame type: 1=Request, 2=Response, 3=Error |
 //! | 6      | N−10 | type-specific body (below) |
 //! | N−4    | 4    | checksum: folded FNV-1a over frame bytes `0..N−4` |
@@ -23,6 +23,8 @@
 //! |-------|-----:|
 //! | `seq` | u64 (client-assigned; `0` is reserved for connection-level errors) |
 //! | tenant | u8 length + UTF-8 bytes (≤ 255) |
+//! | resp codec | u8, the codec the *response* planes should travel in (v2) |
+//! | resp bits  | u8 response quantizer width (ignored for f32 codecs) |
 //! | — payload section (hashed for the response cache) — | |
 //! | codec | u8, the Table III experiment index (1..=5) |
 //! | bits  | u8 quantizer width (ignored for f32 codecs) |
@@ -30,6 +32,11 @@
 //! | rewards plane | `[T·B]` elements, encoded per codec |
 //! | values plane | `[(T+1)·B]` elements, encoded per codec |
 //! | done bitset | ⌈T·B/8⌉ bytes, LSB-first (bit j = element j) |
+//!
+//! The response-codec pair sits in the *header* section, outside the
+//! hashed payload: the cached result is stored as f32 planes either
+//! way, so two clients asking for the same computation under different
+//! reply codecs share one cache entry and each gets its own encoding.
 //!
 //! Plane encoding: codecs 1–2 (`Exp1Baseline`, `Exp2DynamicStd`) are the
 //! **f32 escape hatch** — raw LE f32, bit-exact. Codecs 3–5 quantize:
@@ -44,10 +51,15 @@
 //! no cross-frame state.
 //!
 //! **Response body**: `seq` u64, `t_len`/`batch` u32, flags u8 (bit 0 =
-//! served from cache, bit 1 = `hw_cycles` present), optional u64
-//! `hw_cycles`, then advantages and rewards-to-go as raw `[T·B]` f32
-//! planes — responses always travel f32 so the f32 request codec is
-//! end-to-end bit-exact against in-process submission.
+//! served from cache, bit 1 = `hw_cycles` present, bit 2 = quantized
+//! reply planes), optional u64 `hw_cycles`, then — when bit 2 is set —
+//! `codec` u8 + `bits` u8 followed by advantages and rewards-to-go in
+//! the same per-plane `(μ, σ)` + packed-code encoding requests use, or
+//! — when clear (the default) — raw `[T·B]` f32 planes. f32 replies
+//! keep the f32 request codec end-to-end bit-exact against in-process
+//! submission; quantized replies are the symmetric bandwidth lever for
+//! clients that asked for them (non-finite result planes silently fall
+//! back to f32, which carries NaN/Inf exactly).
 //!
 //! **Error body**: `seq` u64, code u8 ([`ErrorKind`]: 1=Quota, 2=Shed,
 //! 3=Malformed, 4=Shutdown, 5=Internal), u32 message length + UTF-8.
@@ -59,7 +71,10 @@
 //! reordered, re-encoded — bumps the version byte. A decoder rejects
 //! frames whose version it does not implement with
 //! [`WireDecodeError::BadVersion`]; there is no in-band negotiation, so
-//! deploy servers before clients when bumping.
+//! deploy servers before clients when bumping. Version 2 added the
+//! response-codec pair to the request header and the quantized reply
+//! arm to the response body (v1 decoders rejected the new flag bit, so
+//! nothing mis-parses across the bump).
 //!
 //! ## Accounting
 //!
@@ -91,7 +106,7 @@ use std::io::Read;
 /// Frame magic: `"HGAE"`.
 pub const MAGIC: [u8; 4] = *b"HGAE";
 /// Current protocol version.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 /// Upper bound on a single frame (sanity guard against corrupt length
 /// prefixes allocating unbounded buffers).
 pub const MAX_FRAME_BYTES: usize = 256 << 20;
@@ -111,14 +126,49 @@ const CHECKSUM_BYTES: usize = 4;
 /// Longest error message the encoder will put on the wire.
 const MAX_ERROR_MESSAGE: usize = 1024;
 
+/// Incremental FNV-1a — the crate's one digest primitive, shared by
+/// the frame checksum, the payload cache key ([`crate::net::cache`]),
+/// and the fabric's rendezvous scores, so a future switch to a keyed
+/// hash has a single home.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf29ce484222325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn write_u8(&mut self, b: u8) {
+        self.write(&[b]);
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
 /// FNV-1a over a byte slice (the digest the payload cache keys on).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
 }
 
 /// 32-bit frame checksum: FNV-1a folded onto itself.
@@ -232,6 +282,8 @@ pub struct RequestFrame {
     pub tenant: String,
     pub codec: CodecKind,
     pub bits: u8,
+    /// The codec the client asked the *response* planes to travel in.
+    pub resp: PlaneCodec,
     pub t_len: usize,
     pub batch: usize,
     pub rewards: Vec<f32>,
@@ -254,6 +306,9 @@ pub struct ResponseFrame {
     pub hw_cycles: Option<u64>,
     /// The server answered from its response cache.
     pub cache_hit: bool,
+    /// The reply planes travelled quantized (lossy); `false` means raw
+    /// f32, bit-exact.
+    pub quantized: bool,
 }
 
 /// A decoded error frame.
@@ -293,6 +348,8 @@ pub struct LazyRequest<'a> {
     pub tenant: &'a str,
     pub codec: CodecKind,
     pub bits: u8,
+    /// The codec the client asked the *response* planes to travel in.
+    pub resp: PlaneCodec,
     pub t_len: usize,
     pub batch: usize,
     /// Payload-section size on the wire.
@@ -349,6 +406,7 @@ impl LazyRequest<'_> {
             tenant: self.tenant.to_string(),
             codec: self.codec,
             bits: self.bits,
+            resp: self.resp,
             t_len: self.t_len,
             batch: self.batch,
             rewards,
@@ -386,6 +444,38 @@ impl EncodedRequest {
     /// Measured per-frame bandwidth reduction vs f32 transport.
     pub fn reduction_vs_f32(&self) -> f64 {
         self.f32_payload_bytes as f64 / self.payload_bytes.max(1) as f64
+    }
+}
+
+/// One plane direction's transport encoding: a [`CodecKind`] plus the
+/// quantizer width it uses when quantized. Requests and responses each
+/// carry their own pair, so a client can submit quantized planes and
+/// still receive bit-exact f32 replies (the default) — or opt into
+/// quantized replies for symmetric bandwidth savings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlaneCodec {
+    pub kind: CodecKind,
+    /// Quantizer width, 1..=16 (ignored by the f32 codecs).
+    pub bits: u8,
+}
+
+impl PlaneCodec {
+    /// The f32 escape hatch: bit-exact planes, no quantization.
+    pub const F32: PlaneCodec = PlaneCodec { kind: CodecKind::Exp1Baseline, bits: 8 };
+
+    /// The paper's operating point: 8-bit Exp-5 transport.
+    pub const Q8: PlaneCodec =
+        PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 8 };
+
+    /// Do planes under this codec travel quantized?
+    pub fn is_quantized(self) -> bool {
+        codec_is_quantized(self.kind)
+    }
+}
+
+impl Default for PlaneCodec {
+    fn default() -> Self {
+        PlaneCodec::F32
     }
 }
 
@@ -477,24 +567,30 @@ fn encode_done_bitset(out: &mut Vec<u8>, done_mask: &[f32]) {
     }
 }
 
-/// Encode one plane-shaped GAE request. The done mask must be exactly
-/// 0.0/1.0 per element (the service's plane convention) — the bitset
-/// transport is otherwise lossy.
+/// Encode one plane-shaped GAE request under `codec`, asking for reply
+/// planes in `resp` (use [`PlaneCodec::F32`] for bit-exact replies).
+/// The done mask must be exactly 0.0/1.0 per element (the service's
+/// plane convention) — the bitset transport is otherwise lossy.
 #[allow(clippy::too_many_arguments)]
 pub fn encode_request(
     seq: u64,
     tenant: &str,
-    codec: CodecKind,
-    bits: u8,
+    codec: PlaneCodec,
+    resp: PlaneCodec,
     t_len: usize,
     batch: usize,
     rewards: &[f32],
     values: &[f32],
     done_mask: &[f32],
 ) -> anyhow::Result<EncodedRequest> {
+    let PlaneCodec { kind: codec, bits } = codec;
     anyhow::ensure!(seq != 0, "seq 0 is reserved for connection-level errors");
     anyhow::ensure!(tenant.len() <= 255, "tenant id longer than 255 bytes");
     anyhow::ensure!((1..=16).contains(&bits), "quantizer bits must be in 1..=16");
+    anyhow::ensure!(
+        (1..=16).contains(&resp.bits),
+        "response quantizer bits must be in 1..=16"
+    );
     anyhow::ensure!(t_len >= 1 && batch >= 1, "empty plane geometry");
     anyhow::ensure!(
         t_len <= u32::MAX as usize && batch <= u32::MAX as usize,
@@ -531,6 +627,10 @@ pub fn encode_request(
     put_u64(&mut body, seq);
     body.push(tenant.len() as u8);
     body.extend_from_slice(tenant.as_bytes());
+    // Response-codec pair: header section, deliberately outside the
+    // hashed payload (see the module docs).
+    body.push(resp.kind.index() as u8);
+    body.push(resp.bits);
     let payload_start = body.len();
     body.push(codec.index() as u8);
     body.push(bits);
@@ -552,7 +652,13 @@ pub fn encode_request(
     })
 }
 
-/// Encode a response frame (planes always travel f32).
+/// Encode a response frame. `resp` selects the reply-plane transport:
+/// [`PlaneCodec::F32`] (the default everywhere) keeps responses
+/// bit-exact; a quantized codec ships per-plane `(μ, σ)` + packed codes
+/// exactly like quantized requests. Non-finite result planes silently
+/// fall back to f32 — NaN/Inf cannot ride a quantized (μ, σ), and the
+/// escape hatch carries them exactly.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_response(
     seq: u64,
     t_len: usize,
@@ -561,9 +667,15 @@ pub fn encode_response(
     rewards_to_go: &[f32],
     hw_cycles: Option<u64>,
     cache_hit: bool,
+    resp: PlaneCodec,
 ) -> Vec<u8> {
     debug_assert_eq!(advantages.len(), t_len * batch);
     debug_assert_eq!(rewards_to_go.len(), t_len * batch);
+    let finite = |d: &[f32]| d.iter().all(|x| x.is_finite());
+    let quantized = resp.is_quantized()
+        && (1..=16).contains(&resp.bits)
+        && finite(advantages)
+        && finite(rewards_to_go);
     let mut body = Vec::with_capacity(32 + 8 * advantages.len());
     put_u64(&mut body, seq);
     put_u32(&mut body, t_len as u32);
@@ -575,15 +687,26 @@ pub fn encode_response(
     if hw_cycles.is_some() {
         flags |= 2;
     }
+    if quantized {
+        flags |= 4;
+    }
     body.push(flags);
     if let Some(c) = hw_cycles {
         put_u64(&mut body, c);
     }
-    for &x in advantages {
-        put_f32(&mut body, x);
-    }
-    for &x in rewards_to_go {
-        put_f32(&mut body, x);
+    if quantized {
+        body.push(resp.kind.index() as u8);
+        body.push(resp.bits);
+        let q = UniformQuantizer::new(resp.bits);
+        encode_plane(&mut body, advantages, true, &q);
+        encode_plane(&mut body, rewards_to_go, true, &q);
+    } else {
+        for &x in advantages {
+            put_f32(&mut body, x);
+        }
+        for &x in rewards_to_go {
+            put_f32(&mut body, x);
+        }
     }
     finish_frame(FRAME_TYPE_RESPONSE, &body)
 }
@@ -703,6 +826,14 @@ fn decode_request_body_lazy<'a>(
     let tenant_len = r.u8()? as usize;
     let tenant = std::str::from_utf8(r.take(tenant_len)?)
         .map_err(|_| WireDecodeError::Malformed("tenant is not UTF-8"))?;
+    let resp_index = r.u8()?;
+    let resp_kind =
+        codec_from_index(resp_index).ok_or(WireDecodeError::BadCodec(resp_index))?;
+    let resp_bits = r.u8()?;
+    if !(1..=16).contains(&resp_bits) {
+        return Err(WireDecodeError::Malformed("response quantizer bits outside 1..=16"));
+    }
+    let resp = PlaneCodec { kind: resp_kind, bits: resp_bits };
     let payload_start = r.pos;
     let codec_index = r.u8()?;
     let codec = codec_from_index(codec_index).ok_or(WireDecodeError::BadCodec(codec_index))?;
@@ -739,6 +870,7 @@ fn decode_request_body_lazy<'a>(
         tenant,
         codec,
         bits,
+        resp,
         t_len,
         batch,
         payload_bytes,
@@ -754,22 +886,42 @@ fn decode_response_body(r: &mut Reader<'_>) -> Result<ResponseFrame, WireDecodeE
     let t_len = r.u32()? as usize;
     let batch = r.u32()? as usize;
     let flags = r.u8()?;
-    if flags & !0b11 != 0 {
+    if flags & !0b111 != 0 {
         return Err(WireDecodeError::Malformed("unknown response flags"));
     }
     let hw_cycles = if flags & 2 != 0 { Some(r.u64()?) } else { None };
+    let quantized = flags & 4 != 0;
     let n = t_len
         .checked_mul(batch)
         .ok_or(WireDecodeError::Malformed("plane geometry overflow"))?;
-    let read_plane = |r: &mut Reader<'_>| -> Result<Vec<f32>, WireDecodeError> {
-        let raw = r.take(wire_mul(n, 4)?)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+    if n > MAX_PLANE_ELEMENTS {
+        return Err(WireDecodeError::Malformed("plane geometry exceeds element cap"));
+    }
+    let (advantages, rewards_to_go) = if quantized {
+        let codec_index = r.u8()?;
+        let codec =
+            codec_from_index(codec_index).ok_or(WireDecodeError::BadCodec(codec_index))?;
+        if !codec_is_quantized(codec) {
+            return Err(WireDecodeError::Malformed("f32 codec under quantized flag"));
+        }
+        let bits = r.u8()?;
+        if !(1..=16).contains(&bits) {
+            return Err(WireDecodeError::Malformed("quantizer bits outside 1..=16"));
+        }
+        let q = UniformQuantizer::new(bits);
+        let adv_raw = take_plane_raw(r, n, true, &q)?;
+        let rtg_raw = take_plane_raw(r, n, true, &q)?;
+        (dequantize_plane(adv_raw, n, true, &q), dequantize_plane(rtg_raw, n, true, &q))
+    } else {
+        let read_plane = |r: &mut Reader<'_>| -> Result<Vec<f32>, WireDecodeError> {
+            let raw = r.take(wire_mul(n, 4)?)?;
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        (read_plane(r)?, read_plane(r)?)
     };
-    let advantages = read_plane(r)?;
-    let rewards_to_go = read_plane(r)?;
     Ok(ResponseFrame {
         seq,
         t_len,
@@ -778,6 +930,7 @@ fn decode_response_body(r: &mut Reader<'_>) -> Result<ResponseFrame, WireDecodeE
         rewards_to_go,
         hw_cycles,
         cache_hit: flags & 1 != 0,
+        quantized,
     })
 }
 
@@ -901,7 +1054,15 @@ mod tests {
     ) -> (EncodedRequest, Vec<f32>, Vec<f32>, Vec<f32>) {
         let (rewards, values, done_mask) = random_planes(g, t_len, batch);
         let enc = encode_request(
-            7, "tenant-a", codec, bits, t_len, batch, &rewards, &values, &done_mask,
+            7,
+            "tenant-a",
+            PlaneCodec { kind: codec, bits },
+            PlaneCodec::F32,
+            t_len,
+            batch,
+            &rewards,
+            &values,
+            &done_mask,
         )
         .unwrap();
         (enc, rewards, values, done_mask)
@@ -926,6 +1087,7 @@ mod tests {
             assert_eq!(req.seq, 7);
             assert_eq!(req.tenant, "tenant-a");
             assert_eq!(req.codec, codec);
+            assert_eq!(req.resp, PlaneCodec::F32);
             assert_eq!((req.t_len, req.batch), (t_len, batch));
             assert_eq!(req.payload_bytes, enc.payload_bytes);
             // Done bitset is always exact.
@@ -975,6 +1137,7 @@ mod tests {
             assert_eq!(lazy.tenant, eager.tenant);
             assert_eq!(lazy.codec, eager.codec);
             assert_eq!(lazy.bits, eager.bits);
+            assert_eq!(lazy.resp, eager.resp);
             assert_eq!((lazy.t_len, lazy.batch), (eager.t_len, eager.batch));
             assert_eq!(lazy.elements(), t_len * batch);
             assert_eq!(lazy.payload_hash(), eager.payload_hash);
@@ -1016,9 +1179,10 @@ mod tests {
         let mut g = Gen::new(23);
         let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 4, 2);
         let mut frame = enc.bytes[4..].to_vec();
-        // header(6) + seq(8) + tenant_len(1) + "tenant-a"(8) + codec(1)
-        // + bits(1) + t_len(4) + batch(4) = rewards μ offset.
-        let mu = 6 + 8 + 1 + "tenant-a".len() + 1 + 1 + 4 + 4;
+        // header(6) + seq(8) + tenant_len(1) + "tenant-a"(8) + resp codec
+        // pair(2) + codec(1) + bits(1) + t_len(4) + batch(4) = rewards μ
+        // offset.
+        let mu = 6 + 8 + 1 + "tenant-a".len() + 2 + 1 + 1 + 4 + 4;
         frame[mu..mu + 4].copy_from_slice(&f32::NAN.to_le_bytes());
         let body_end = frame.len() - 4;
         let sum = super::checksum(&frame[..body_end]);
@@ -1116,13 +1280,13 @@ mod tests {
         let dones = vec![0.0f32; 8];
         // Quantized: refused locally, never a poison frame on the wire.
         let err = encode_request(
-            1, "t", CodecKind::Exp5DynamicBlock, 8, 4, 2, &rewards, &values, &dones,
+            1, "t", PlaneCodec::Q8, PlaneCodec::F32, 4, 2, &rewards, &values, &dones,
         )
         .unwrap_err();
         assert!(err.to_string().contains("finite"), "{err}");
         // f32 escape hatch: NaN travels bit-exactly.
         let enc = encode_request(
-            1, "t", CodecKind::Exp1Baseline, 8, 4, 2, &rewards, &values, &dones,
+            1, "t", PlaneCodec::F32, PlaneCodec::F32, 4, 2, &rewards, &values, &dones,
         )
         .unwrap();
         let req = decode_request(&enc);
@@ -1134,7 +1298,7 @@ mod tests {
         // Encoding refuses it outright…
         let n_side = 1usize << 20; // (2^20)^2 elements >> MAX_PLANE_ELEMENTS
         let err = encode_request(
-            1, "t", CodecKind::Exp5DynamicBlock, 8, n_side, n_side, &[], &[], &[],
+            1, "t", PlaneCodec::Q8, PlaneCodec::F32, n_side, n_side, &[], &[], &[],
         )
         .unwrap_err();
         assert!(err.to_string().contains("MAX_PLANE_ELEMENTS"), "{err}");
@@ -1143,7 +1307,8 @@ mod tests {
         let mut g = Gen::new(19);
         let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 4, 2);
         let mut frame = enc.bytes[4..].to_vec();
-        let geo = 6 + 8 + 1 + "tenant-a".len() + 2; // header+seq+tenant+codec+bits
+        // header+seq+tenant+resp pair+codec+bits precede the geometry.
+        let geo = 6 + 8 + 1 + "tenant-a".len() + 2 + 2;
         frame[geo..geo + 4].copy_from_slice(&(1u32 << 20).to_le_bytes());
         frame[geo + 4..geo + 8].copy_from_slice(&(1u32 << 20).to_le_bytes());
         let body_end = frame.len() - 4;
@@ -1162,12 +1327,14 @@ mod tests {
         let adv = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
         let rtg = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
         for (cycles, hit) in [(Some(912u64), true), (None, false)] {
-            let bytes = encode_response(42, t_len, batch, &adv, &rtg, cycles, hit);
+            let bytes =
+                encode_response(42, t_len, batch, &adv, &rtg, cycles, hit, PlaneCodec::F32);
             match decode_frame(&bytes[4..]).unwrap() {
                 Frame::Response(resp) => {
                     assert_eq!(resp.seq, 42);
                     assert_eq!(resp.hw_cycles, cycles);
                     assert_eq!(resp.cache_hit, hit);
+                    assert!(!resp.quantized, "f32 replies must not set the flag");
                     for (a, b) in resp.advantages.iter().zip(&adv) {
                         assert_eq!(a.to_bits(), b.to_bits());
                     }
@@ -1178,6 +1345,87 @@ mod tests {
                 other => panic!("expected response, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn quantized_response_roundtrip_has_bounded_error() {
+        check("quantized reply planes", 40, |g| {
+            let (t_len, batch) = (g.usize_in(1, 60), g.usize_in(1, 8));
+            let n = t_len * batch;
+            let adv = g.vec_normal_f32(n, 0.0, 2.0);
+            let rtg = g.vec_normal_f32(n, 1.0, 3.0);
+            let bits = g.usize_in(4, 12) as u8;
+            let resp = PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits };
+            let bytes =
+                encode_response(9, t_len, batch, &adv, &rtg, Some(4), false, resp);
+            // Quantized replies are smaller than the f32 encoding for
+            // the same geometry once the (μ, σ) overhead amortizes.
+            if bits == 8 && n >= 64 {
+                let f32_bytes =
+                    encode_response(9, t_len, batch, &adv, &rtg, Some(4), false, PlaneCodec::F32);
+                assert!(bytes.len() < f32_bytes.len());
+            }
+            match decode_frame(&bytes[4..]).unwrap() {
+                Frame::Response(got) => {
+                    assert!(got.quantized);
+                    assert_eq!(got.hw_cycles, Some(4));
+                    let q = UniformQuantizer::new(bits);
+                    for (plane, orig) in
+                        [(&got.advantages, &adv), (&got.rewards_to_go, &rtg)]
+                    {
+                        let stats = crate::quant::BlockStats::of(orig);
+                        let tol =
+                            q.max_in_range_error() * stats.std.abs().max(1e-3) + 1e-4;
+                        for (a, b) in plane.iter().zip(orig.iter()) {
+                            assert!((a - b).abs() <= tol, "bits={bits}: {a} vs {b}");
+                        }
+                    }
+                }
+                other => panic!("expected response, got {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn non_finite_reply_planes_fall_back_to_exact_f32() {
+        let mut adv = vec![0.5f32; 6];
+        adv[2] = f32::NAN;
+        let rtg = vec![1.0f32; 6];
+        let bytes = encode_response(3, 3, 2, &adv, &rtg, None, false, PlaneCodec::Q8);
+        match decode_frame(&bytes[4..]).unwrap() {
+            Frame::Response(resp) => {
+                assert!(!resp.quantized, "NaN cannot ride a quantized (μ, σ)");
+                assert_eq!(resp.advantages[2].to_bits(), f32::NAN.to_bits());
+            }
+            other => panic!("expected response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_carries_the_response_codec_pair() {
+        let mut g = Gen::new(31);
+        let (rewards, values, done_mask) = random_planes(&mut g, 6, 2);
+        let resp = PlaneCodec { kind: CodecKind::Exp3BlockDestd, bits: 6 };
+        let enc = encode_request(
+            5, "t", PlaneCodec::F32, resp, 6, 2, &rewards, &values, &done_mask,
+        )
+        .unwrap();
+        let req = decode_request(&enc);
+        assert_eq!(req.resp, resp);
+        // The pair is header-section: same payload under a different
+        // reply codec hashes identically (shared cache entry).
+        let enc2 = encode_request(
+            5, "t", PlaneCodec::F32, PlaneCodec::F32, 6, 2, &rewards, &values,
+            &done_mask,
+        )
+        .unwrap();
+        assert_eq!(req.payload_hash, decode_request(&enc2).payload_hash);
+        // Out-of-range response bits are refused locally.
+        let bad = PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 0 };
+        assert!(encode_request(
+            5, "t", PlaneCodec::F32, bad, 6, 2, &rewards, &values, &done_mask,
+        )
+        .is_err());
     }
 
     #[test]
@@ -1213,7 +1461,8 @@ mod tests {
         let (rewards, values, done_mask) = random_planes(&mut g, 12, 4);
         let enc = |seq: u64, tenant: &str, r: &[f32]| {
             encode_request(
-                seq, tenant, CodecKind::Exp5DynamicBlock, 8, 12, 4, r, &values, &done_mask,
+                seq, tenant, PlaneCodec::Q8, PlaneCodec::F32, 12, 4, r, &values,
+                &done_mask,
             )
             .unwrap()
         };

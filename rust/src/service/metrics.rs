@@ -12,9 +12,61 @@
 
 use crate::service::request::RequestTiming;
 use crate::stats::Histogram;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Most tenants tracked by the per-tenant breakdown. Tenant ids arrive
+/// on the wire (client-chosen), so the map must not grow without bound
+/// on a long-lived server; past the cap the longest-untouched tenant's
+/// counters are evicted — the same bounded-softening policy as the
+/// quota map ([`crate::net::quota`]).
+const MAX_TENANT_STATS: usize = 4096;
+
+/// One tenant's accumulated counters.
+#[derive(Debug, Clone, Copy, Default)]
+struct TenantCounters {
+    /// Frames/requests answered with a result (computed or cache).
+    requests: u64,
+    /// GAE elements those requests carried.
+    elements: u64,
+    /// Requests refused by admission control.
+    shed: u64,
+    /// Frames refused by the tenant's quota bucket.
+    quota_shed: u64,
+    /// Last-touch tick, for LRU eviction at the cap.
+    last_touch: u64,
+}
+
+#[derive(Debug, Default)]
+struct TenantMap {
+    map: HashMap<String, TenantCounters>,
+    tick: u64,
+}
+
+impl TenantMap {
+    /// Get-or-insert a tenant's counters, evicting the longest-untouched
+    /// tenant when a *new* tenant arrives at the cap (O(n) then, O(1)
+    /// otherwise — the quota map's trade-off).
+    fn entry(&mut self, tenant: &str) -> &mut TenantCounters {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.map.contains_key(tenant) && self.map.len() >= MAX_TENANT_STATS {
+            if let Some(stalest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, c)| c.last_touch)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&stalest);
+            }
+        }
+        let c = self.map.entry(tenant.to_string()).or_default();
+        c.last_touch = tick;
+        c
+    }
+}
 
 /// log10(1+µs) histogram range: 0 .. 10^8 µs (100 s).
 const LOG_US_HI: f64 = 8.0;
@@ -68,6 +120,10 @@ pub struct ServiceMetrics {
     /// Plane bytes copied into packed tiles (slab tiles gather zero).
     gathered_bytes: AtomicU64,
     hists: Mutex<PhaseHists>,
+    /// Per-tenant breakdown for traffic whose tenant is known (the
+    /// network front-end and the fabric router attribute their
+    /// submissions; anonymous in-process clients are not broken down).
+    tenants: Mutex<TenantMap>,
 }
 
 impl Default for ServiceMetrics {
@@ -95,7 +151,27 @@ impl ServiceMetrics {
             packed_tiles: AtomicU64::new(0),
             gathered_bytes: AtomicU64::new(0),
             hists: Mutex::new(PhaseHists::new()),
+            tenants: Mutex::new(TenantMap::default()),
         }
+    }
+
+    /// One tenant-attributed request was answered with a result
+    /// (computed or served from cache) carrying `elements` GAE elements.
+    pub(crate) fn record_tenant_request(&self, tenant: &str, elements: u64) {
+        let mut t = self.tenants.lock().unwrap();
+        let c = t.entry(tenant);
+        c.requests += 1;
+        c.elements += elements;
+    }
+
+    /// Admission control shed a tenant-attributed request.
+    pub(crate) fn record_tenant_shed(&self, tenant: &str) {
+        self.tenants.lock().unwrap().entry(tenant).shed += 1;
+    }
+
+    /// The tenant's quota bucket refused a frame.
+    pub(crate) fn record_tenant_quota_shed(&self, tenant: &str) {
+        self.tenants.lock().unwrap().entry(tenant).quota_shed += 1;
     }
 
     /// An admission attempt (admitted *or* shed).
@@ -183,10 +259,28 @@ impl ServiceMetrics {
         let SnapshotInputs { queue_depth, peak_queue_depth, scalar_route_max_elements } =
             inputs;
         let uptime = self.started_at.elapsed();
+        let mut tenants: Vec<TenantSnapshot> = {
+            let t = self.tenants.lock().unwrap();
+            t.map
+                .iter()
+                .map(|(tenant, c)| TenantSnapshot {
+                    tenant: tenant.clone(),
+                    requests: c.requests,
+                    elements: c.elements,
+                    shed: c.shed,
+                    quota_shed: c.quota_shed,
+                })
+                .collect()
+        };
+        // Heaviest tenants first; name breaks ties deterministically.
+        tenants.sort_by(|a, b| {
+            b.elements.cmp(&a.elements).then_with(|| a.tenant.cmp(&b.tenant))
+        });
         let h = self.hists.lock().unwrap();
         let batches = self.batches.load(Ordering::Relaxed);
         let elements = self.elements.load(Ordering::Relaxed);
         MetricsSnapshot {
+            tenants,
             uptime,
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -229,6 +323,21 @@ pub struct SnapshotInputs {
     pub peak_queue_depth: usize,
     /// The routing threshold in force (0 = routing disabled).
     pub scalar_route_max_elements: usize,
+}
+
+/// One tenant's slice of a [`MetricsSnapshot`] — the substrate the
+/// fabric's fleet view aggregates across shards.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    /// Requests answered with a result (computed or cache).
+    pub requests: u64,
+    /// GAE elements those requests carried.
+    pub elements: u64,
+    /// Requests refused by admission control.
+    pub shed: u64,
+    /// Frames refused by the tenant's quota bucket.
+    pub quota_shed: u64,
 }
 
 /// p50/p95/p99 of one latency phase, in microseconds.
@@ -288,6 +397,10 @@ pub struct MetricsSnapshot {
     pub queue_us: LatencyQuantiles,
     pub compute_us: LatencyQuantiles,
     pub total_us: LatencyQuantiles,
+    /// Per-tenant breakdown, heaviest (by elements) first. Covers
+    /// tenant-attributed traffic only (network front-end, fabric);
+    /// bounded at 4096 tenants with LRU eviction like the quota map.
+    pub tenants: Vec<TenantSnapshot>,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -315,6 +428,17 @@ impl std::fmt::Display for MetricsSnapshot {
             self.routed_small,
             self.scalar_route_max_elements
         )?;
+        if !self.tenants.is_empty() {
+            write!(f, "tenants:  {} tracked |", self.tenants.len())?;
+            for t in self.tenants.iter().take(4) {
+                write!(
+                    f,
+                    " {}: {} req / {} elem ({} shed, {} quota)",
+                    t.tenant, t.requests, t.elements, t.shed, t.quota_shed
+                )?;
+            }
+            writeln!(f)?;
+        }
         writeln!(
             f,
             "latency (µs): total p50 {:.0}  p95 {:.0}  p99 {:.0} | queue p50 {:.0} | compute p50 {:.0}",
@@ -385,6 +509,41 @@ mod tests {
         assert_eq!(s.queue_depth, 3);
         assert_eq!(s.peak_queue_depth, 7);
         assert!(s.sustained_elem_per_sec > 0.0);
+    }
+
+    #[test]
+    fn tenant_breakdown_accumulates_and_sorts_by_elements() {
+        let m = ServiceMetrics::new();
+        m.record_tenant_request("small", 10);
+        m.record_tenant_request("big", 500);
+        m.record_tenant_request("big", 500);
+        m.record_tenant_shed("small");
+        m.record_tenant_quota_shed("hog");
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.tenants.len(), 3);
+        assert_eq!(s.tenants[0].tenant, "big");
+        assert_eq!(s.tenants[0].requests, 2);
+        assert_eq!(s.tenants[0].elements, 1000);
+        let small = s.tenants.iter().find(|t| t.tenant == "small").unwrap();
+        assert_eq!((small.requests, small.elements, small.shed), (1, 10, 1));
+        let hog = s.tenants.iter().find(|t| t.tenant == "hog").unwrap();
+        assert_eq!((hog.requests, hog.quota_shed), (0, 1));
+        // The breakdown shows up in the human-readable dump.
+        let text = s.to_string();
+        assert!(text.contains("tenants:") && text.contains("big"), "{text}");
+    }
+
+    #[test]
+    fn tenant_map_is_bounded_with_lru_eviction() {
+        let m = ServiceMetrics::new();
+        for i in 0..(MAX_TENANT_STATS + 8) {
+            m.record_tenant_request(&format!("t{i}"), 1);
+        }
+        let s = m.snapshot(SnapshotInputs::default());
+        assert!(s.tenants.len() <= MAX_TENANT_STATS, "grew to {}", s.tenants.len());
+        // The most recently touched tenant survived.
+        let last = format!("t{}", MAX_TENANT_STATS + 7);
+        assert!(s.tenants.iter().any(|t| t.tenant == last));
     }
 
     #[test]

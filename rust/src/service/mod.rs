@@ -77,7 +77,9 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile, WorkerScratch};
-pub use metrics::{LatencyQuantiles, MetricsSnapshot, ServiceMetrics, SnapshotInputs};
+pub use metrics::{
+    LatencyQuantiles, MetricsSnapshot, ServiceMetrics, SnapshotInputs, TenantSnapshot,
+};
 pub use plane::{slab_of, Lane, PlaneSet, Slab};
 pub use queue::{BoundedQueue, PushError};
 pub use request::{GaeResponse, RequestTiming, ResponseHandle, ServiceError};

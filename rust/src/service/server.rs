@@ -329,6 +329,18 @@ impl GaeService {
         &self.metrics
     }
 
+    /// Stop admitting new work **without consuming the service**: the
+    /// queue closes, already-accepted requests drain through the workers
+    /// (their handles still complete), and every later submission fails
+    /// with [`ServiceError::ShuttingDown`]. The worker threads are
+    /// joined later, on drop/[`GaeService::shutdown`]. This is the
+    /// "kill one shard mid-load" seam the fabric's failover tests lean
+    /// on: an `Arc`-shared service can be taken out of rotation while
+    /// other shards keep serving.
+    pub fn begin_shutdown(&self) {
+        self.queue.close();
+    }
+
     /// Stop admitting, drain accepted work, join the workers.
     pub fn shutdown(self) -> MetricsSnapshot {
         // Drop runs shutdown_inner; take the snapshot after the drain so
@@ -628,7 +640,7 @@ mod tests {
     #[test]
     fn submit_after_shutdown_reports_shutting_down() {
         let svc = GaeService::with_workers(1, GaeBackend::Scalar).unwrap();
-        svc.queue.close();
+        svc.begin_shutdown();
         let mut g = Gen::new(4);
         assert_eq!(
             svc.submit(request(&mut g, 1, 4)).unwrap_err(),

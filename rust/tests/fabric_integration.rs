@@ -1,0 +1,497 @@
+//! Integration of the GAE service fabric: shard failover under live
+//! multi-threaded load (every submitted request completes, rerouted,
+//! bit-identical to the scalar reference), client-pool seq-space
+//! isolation over real sockets, a mixed in-process/remote fleet
+//! surviving a remote endpoint death, and the multi-replica coordinator
+//! mode feeding one fabric.
+
+use heppo::coordinator::pipeline::{run_stage_fleet, run_stages, PipelineMode};
+use heppo::coordinator::GaeBackend;
+use heppo::fabric::{
+    ClientPool, FabricConfig, GaeFabric, PoolConfig, ShardBackend,
+};
+use heppo::gae::reference::gae_trajectory;
+use heppo::gae::{GaeParams, Trajectory};
+use heppo::net::{NetServer, NetServerConfig, PlaneCodec};
+use heppo::quant::CodecKind;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::testing::{digest_f32, Gen};
+use heppo::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn scalar_service(workers: usize) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers,
+            backend: GaeBackend::Scalar,
+            queue_capacity: 1024,
+            batcher: BatcherConfig {
+                max_batch_lanes: 64,
+                tile_lanes: 16,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn in_process_fabric(shards: usize) -> (GaeFabric, Vec<Arc<GaeService>>) {
+    let services: Vec<Arc<GaeService>> = (0..shards).map(|_| scalar_service(1)).collect();
+    let slots = services
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (format!("shard-{i}"), ShardBackend::in_process(Arc::clone(s))))
+        .collect();
+    (GaeFabric::new(slots, FabricConfig::default()).unwrap(), services)
+}
+
+/// Deterministic planes for `(stream, index)` — distinct across
+/// streams, reproducible for the reference computation.
+fn planes_for(
+    stream: u64,
+    index: u64,
+    t_len: usize,
+    batch: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(0xfab0 + stream * 7919 + index);
+    let mut rewards = vec![0.0f32; t_len * batch];
+    let mut values = vec![0.0f32; (t_len + 1) * batch];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let done_mask = (0..t_len * batch)
+        .map(|_| if rng.uniform() < 0.05 { 1.0 } else { 0.0 })
+        .collect();
+    (rewards, values, done_mask)
+}
+
+/// The scalar reference, column by column, timestep-major planes out.
+fn reference(
+    t_len: usize,
+    batch: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut adv = vec![0.0f32; t_len * batch];
+    let mut rtg = vec![0.0f32; t_len * batch];
+    for col in 0..batch {
+        let traj = Trajectory::new(
+            (0..t_len).map(|t| rewards[t * batch + col]).collect(),
+            (0..=t_len).map(|t| values[t * batch + col]).collect(),
+            (0..t_len).map(|t| done_mask[t * batch + col] == 1.0).collect(),
+        );
+        let want = gae_trajectory(&GaeParams::default(), &traj);
+        for t in 0..t_len {
+            adv[t * batch + col] = want.advantages[t];
+            rtg[t * batch + col] = want.rewards_to_go[t];
+        }
+    }
+    (adv, rtg)
+}
+
+fn assert_planes_eq(got_adv: &[f32], got_rtg: &[f32], want: &(Vec<f32>, Vec<f32>), what: &str) {
+    assert_eq!(got_adv.len(), want.0.len(), "{what}: shape");
+    for (i, (a, b)) in got_adv.iter().zip(&want.0).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: adv[{i}]");
+    }
+    for (i, (a, b)) in got_rtg.iter().zip(&want.1).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: rtg[{i}]");
+    }
+}
+
+#[test]
+fn killing_a_shard_mid_load_loses_nothing_and_stays_bit_identical() {
+    let (fabric, services) = in_process_fabric(3);
+    let (t_len, batch) = (24, 4);
+    let threads = 6u64;
+    let per_thread = 15u64;
+
+    // Concurrent load; one shard dies while all streams are in flight.
+    std::thread::scope(|s| {
+        for stream in 0..threads {
+            let fabric = fabric.clone();
+            s.spawn(move || {
+                let mut window = std::collections::VecDeque::new();
+                let check = |(index, pending): (u64, heppo::fabric::FabricPending)| {
+                    let gae = pending.wait().unwrap_or_else(|e| {
+                        panic!("stream {stream} req {index} lost: {e}")
+                    });
+                    let (rewards, values, done_mask) =
+                        planes_for(stream, index, t_len, batch);
+                    let want = reference(t_len, batch, &rewards, &values, &done_mask);
+                    assert_planes_eq(
+                        &gae.advantages,
+                        &gae.rewards_to_go,
+                        &want,
+                        &format!("stream {stream} req {index}"),
+                    );
+                };
+                for index in 0..per_thread {
+                    let (rewards, values, done_mask) =
+                        planes_for(stream, index, t_len, batch);
+                    let key = (stream << 32) | index;
+                    let pending = fabric
+                        .submit("load", key, t_len, batch, rewards, values, done_mask)
+                        .unwrap_or_else(|e| {
+                            panic!("stream {stream} submit {index}: {e}")
+                        });
+                    window.push_back((index, pending));
+                    while window.len() >= 4 {
+                        check(window.pop_front().unwrap());
+                    }
+                }
+                while let Some(pair) = window.pop_front() {
+                    check(pair);
+                }
+            });
+        }
+        // Kill one shard while the six streams run. Even if the timing
+        // lands late, the deterministic spill below still forces a
+        // failover through the dead shard.
+        std::thread::sleep(Duration::from_millis(2));
+        services[1].begin_shutdown();
+    });
+
+    // Deterministic forced spill: a key whose primary is the dead shard
+    // must complete on a survivor, bit-identically.
+    let key = (0..1024u64)
+        .find(|&k| fabric.rank("load", k)[0] == 1)
+        .expect("some key must rank shard 1 first");
+    let (rewards, values, done_mask) = planes_for(99, 0, t_len, batch);
+    let want = reference(t_len, batch, &rewards, &values, &done_mask);
+    let gae = fabric
+        .call("load", key, t_len, batch, rewards, values, done_mask)
+        .expect("forced spill must complete");
+    assert_ne!(gae.shard, 1, "dead shard cannot serve");
+    assert!(gae.failovers >= 1 || !fabric.is_healthy(1));
+    assert_planes_eq(&gae.advantages, &gae.rewards_to_go, &want, "forced spill");
+
+    let fleet = fabric.fleet();
+    assert_eq!(
+        fleet.completed,
+        threads * per_thread + 1,
+        "every submitted request must complete: {fleet}"
+    );
+    assert!(!fabric.is_healthy(1));
+    assert!(fleet.healthy_shards >= 2);
+    // The tenant breakdown made it through the in-process shards.
+    let load = fleet.tenants.iter().find(|t| t.tenant == "load").unwrap();
+    assert_eq!(load.requests, threads * per_thread + 1);
+}
+
+#[test]
+fn pool_submitters_share_sockets_without_crossing_seq_spaces() {
+    let svc = scalar_service(2);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let pool = ClientPool::connect(
+        &server.local_addr().to_string(),
+        // f32 both ways so results are bit-exact against the reference.
+        PoolConfig {
+            sockets: 2,
+            codec: PlaneCodec::F32,
+            resp: PlaneCodec::F32,
+        },
+    )
+    .unwrap();
+
+    let submitters = 6u64;
+    let frames = 10u64;
+    let (t_len, batch) = (12, 2);
+    std::thread::scope(|s| {
+        for sub in 0..submitters {
+            let submitter = pool.submitter(&format!("sub-{sub}"));
+            s.spawn(move || {
+                // Pipeline 5 in flight, complete out of order; every
+                // completion must carry *this* submitter's payload
+                // result — a crossed seq space would mismatch.
+                let mut window = std::collections::VecDeque::new();
+                let check = |(index, pending): (u64, heppo::fabric::PoolPending)| {
+                    let gae = pending.wait().unwrap_or_else(|e| {
+                        panic!("submitter {sub} frame {index}: {e}")
+                    });
+                    let (rewards, values, done_mask) =
+                        planes_for(1000 + sub, index, t_len, batch);
+                    let want = reference(t_len, batch, &rewards, &values, &done_mask);
+                    assert_planes_eq(
+                        &gae.advantages,
+                        &gae.rewards_to_go,
+                        &want,
+                        &format!("submitter {sub} frame {index}"),
+                    );
+                };
+                for index in 0..frames {
+                    let (rewards, values, done_mask) =
+                        planes_for(1000 + sub, index, t_len, batch);
+                    let pending = submitter
+                        .submit_planes(t_len, batch, &rewards, &values, &done_mask)
+                        .unwrap();
+                    // The wire seq must sit inside this submitter's space.
+                    assert_eq!(
+                        heppo::fabric::submitter_of(pending.seq()),
+                        Some(submitter.id()),
+                    );
+                    window.push_back((index, pending));
+                    while window.len() >= 5 {
+                        check(window.pop_front().unwrap());
+                    }
+                }
+                while let Some(pair) = window.pop_front() {
+                    check(pair);
+                }
+            });
+        }
+    });
+    assert_eq!(pool.wire_stats().frames, submitters * frames);
+    // Every frame becomes one service request per env column.
+    assert_eq!(svc.metrics().completed, submitters * frames * batch as u64);
+    server.shutdown();
+}
+
+#[test]
+fn pool_reports_dead_endpoint_promptly_instead_of_hanging() {
+    let svc = scalar_service(1);
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
+            .unwrap();
+    let pool = ClientPool::connect(
+        &server.local_addr().to_string(),
+        PoolConfig { sockets: 1, ..PoolConfig::default() },
+    )
+    .unwrap();
+    let submitter = pool.submitter("t");
+    let (rewards, values, done_mask) = planes_for(0, 0, 8, 2);
+    submitter.call_planes(8, 2, &rewards, &values, &done_mask).unwrap();
+    server.shutdown();
+    // Every subsequent attempt fails promptly — at the write, at the
+    // re-dial, or as a dead in-flight frame — never hangs.
+    for _ in 0..3 {
+        if let Ok(pending) = submitter.submit_planes(8, 2, &rewards, &values, &done_mask)
+        {
+            assert!(pending.wait().is_err());
+        }
+    }
+}
+
+#[test]
+fn mixed_fleet_survives_a_remote_endpoint_death_with_frames_in_flight() {
+    let remote_svc = scalar_service(1);
+    let server = NetServer::start(
+        Arc::clone(&remote_svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let local_svc = scalar_service(1);
+    let fabric = GaeFabric::new(
+        vec![
+            (
+                "remote-0".to_string(),
+                ShardBackend::remote(
+                    &server.local_addr().to_string(),
+                    PoolConfig {
+                        sockets: 1,
+                        codec: PlaneCodec::F32,
+                        resp: PlaneCodec::F32,
+                    },
+                )
+                .unwrap(),
+            ),
+            ("local-0".to_string(), ShardBackend::in_process(Arc::clone(&local_svc))),
+        ],
+        FabricConfig { cooldown: Duration::from_millis(50), max_attempts: 8 },
+    )
+    .unwrap();
+    let (t_len, batch) = (16, 3);
+
+    // Phase A: both shards healthy; everything bit-identical.
+    for index in 0..10u64 {
+        let (rewards, values, done_mask) = planes_for(7, index, t_len, batch);
+        let want = reference(t_len, batch, &rewards, &values, &done_mask);
+        let gae = fabric
+            .call("mixed", index, t_len, batch, rewards, values, done_mask)
+            .unwrap();
+        assert_planes_eq(&gae.advantages, &gae.rewards_to_go, &want, "phase A");
+    }
+
+    // Phase B: submit a window, then kill the remote endpoint with
+    // frames potentially in flight on it. Every request must still
+    // complete (retried onto the in-process shard) bit-identically.
+    let mut pending = Vec::new();
+    for index in 100..108u64 {
+        let (rewards, values, done_mask) = planes_for(7, index, t_len, batch);
+        pending.push((
+            index,
+            fabric
+                .submit("mixed", index, t_len, batch, rewards, values, done_mask)
+                .unwrap(),
+        ));
+    }
+    server.shutdown();
+    for (index, p) in pending {
+        let gae = p.wait().unwrap_or_else(|e| panic!("req {index} lost: {e}"));
+        let (rewards, values, done_mask) = planes_for(7, index, t_len, batch);
+        let want = reference(t_len, batch, &rewards, &values, &done_mask);
+        assert_planes_eq(
+            &gae.advantages,
+            &gae.rewards_to_go,
+            &want,
+            &format!("phase B req {index}"),
+        );
+    }
+
+    // Phase C: with the endpoint gone, new load still completes on the
+    // surviving shard.
+    for index in 200..206u64 {
+        let (rewards, values, done_mask) = planes_for(7, index, t_len, batch);
+        let want = reference(t_len, batch, &rewards, &values, &done_mask);
+        let gae = fabric
+            .call("mixed", index, t_len, batch, rewards, values, done_mask)
+            .unwrap_or_else(|e| panic!("phase C req {index}: {e}"));
+        assert_eq!(gae.shard, 1, "only the in-process shard survives");
+        assert_planes_eq(&gae.advantages, &gae.rewards_to_go, &want, "phase C");
+    }
+    let fleet = fabric.fleet();
+    assert_eq!(fleet.completed, 24, "{fleet}");
+}
+
+#[test]
+fn coordinator_replicas_feed_one_fabric_with_solo_identical_streams() {
+    let (fabric, _services) = in_process_fabric(2);
+    let (t_len, batch) = (10, 3);
+    let iters = 4;
+
+    // Each replica runs the PR-2 stage driver; its GAE stage submits
+    // the rollout planes through the shared fabric.
+    let run_replica = |replica: usize| {
+        let fabric = fabric.clone();
+        run_stages(
+            PipelineMode::Sequential,
+            iters,
+            move |i, buf: &mut heppo::coordinator::rollout::Rollout| {
+                let (rewards, values, done_mask) =
+                    planes_for(replica as u64, i as u64, t_len, batch);
+                buf.t_len = t_len;
+                buf.batch = batch;
+                buf.rewards = rewards;
+                buf.values = values;
+                buf.done_mask = done_mask;
+                Ok(())
+            },
+            move |i, buf| {
+                let key = ((replica as u64) << 32) | i as u64;
+                let gae = fabric
+                    .call(
+                        &format!("replica-{replica}"),
+                        key,
+                        buf.t_len,
+                        buf.batch,
+                        buf.rewards.clone(),
+                        buf.values.clone(),
+                        buf.done_mask.clone(),
+                    )
+                    .map_err(|e| anyhow::anyhow!("fabric gae: {e}"))?;
+                Ok(heppo::coordinator::gae_stage::GaeResult {
+                    advantages: gae.advantages,
+                    rewards_to_go: gae.rewards_to_go,
+                    hw_cycles: gae.hw_cycles,
+                })
+            },
+            |_i, _buf, g| Ok(digest_f32(&g.advantages) ^ digest_f32(&g.rewards_to_go)),
+        )
+    };
+
+    let fleet_run = run_stage_fleet(3, run_replica).unwrap();
+    assert_eq!(fleet_run.replicas.len(), 3);
+    assert_eq!(fleet_run.total_iters(), 3 * iters);
+
+    // Every replica's stream equals the scalar-reference digest stream:
+    // the fabric changed where GAE ran, not what it computed.
+    for (replica, run) in fleet_run.replicas.iter().enumerate() {
+        let want: Vec<u64> = (0..iters)
+            .map(|i| {
+                let (rewards, values, done_mask) =
+                    planes_for(replica as u64, i as u64, t_len, batch);
+                let (adv, rtg) = reference(t_len, batch, &rewards, &values, &done_mask);
+                digest_f32(&adv) ^ digest_f32(&rtg)
+            })
+            .collect();
+        assert_eq!(run.stats, want, "replica {replica}");
+    }
+
+    let fleet = fabric.fleet();
+    assert_eq!(fleet.completed, 3 * iters as u64);
+    assert_eq!(fleet.tenants.len(), 3, "one tenant per replica: {fleet}");
+}
+
+#[test]
+fn quantized_replies_roundtrip_through_pool_with_bounded_error() {
+    // The resp-codec satellite, end to end through the pool: quantized
+    // replies come back lossy-but-close; the same planes through the
+    // f32 default stay bit-exact.
+    let svc = scalar_service(2);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let q_pool = ClientPool::connect(
+        &addr,
+        PoolConfig {
+            sockets: 1,
+            codec: PlaneCodec::F32,
+            resp: PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 8 },
+        },
+    )
+    .unwrap();
+    let f_pool = ClientPool::connect(
+        &addr,
+        PoolConfig { sockets: 1, codec: PlaneCodec::F32, resp: PlaneCodec::F32 },
+    )
+    .unwrap();
+
+    let mut g = Gen::new(41);
+    let (t_len, batch) = (30, 4);
+    let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+    let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+    let done_mask: Vec<f32> = (0..t_len * batch)
+        .map(|_| if g.bool_p(0.05) { 1.0 } else { 0.0 })
+        .collect();
+    let want = reference(t_len, batch, &rewards, &values, &done_mask);
+
+    let exact = f_pool
+        .submitter("exact")
+        .call_planes(t_len, batch, &rewards, &values, &done_mask)
+        .unwrap();
+    assert!(!exact.quantized);
+    assert_planes_eq(&exact.advantages, &exact.rewards_to_go, &want, "f32 replies");
+
+    let lossy = q_pool
+        .submitter("lossy")
+        .call_planes(t_len, batch, &rewards, &values, &done_mask)
+        .unwrap();
+    assert!(lossy.quantized, "server must honor the requested reply codec");
+    // 8-bit quantization: bounded by the quantizer's in-range step over
+    // each plane's own (μ, σ) — the same bound the wire tests use.
+    let q = heppo::quant::UniformQuantizer::new(8);
+    for (plane, exact_plane) in
+        [(&lossy.advantages, &want.0), (&lossy.rewards_to_go, &want.1)]
+    {
+        let stats = heppo::quant::BlockStats::of(exact_plane);
+        let tol = q.max_in_range_error() * stats.std.abs().max(1e-3) + 1e-4;
+        for (a, b) in plane.iter().zip(exact_plane.iter()) {
+            assert!((a - b).abs() <= tol, "quantized {a} vs {b} (tol {tol})");
+        }
+    }
+    server.shutdown();
+}

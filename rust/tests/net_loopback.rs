@@ -8,7 +8,7 @@ use heppo::coordinator::GaeBackend;
 use heppo::gae::{GaeParams, Trajectory};
 use heppo::net::{
     ErrorKind, NetClient, NetClientConfig, NetError, NetServer, NetServerConfig,
-    QuotaConfig,
+    PlaneCodec, QuotaConfig,
 };
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
@@ -51,6 +51,7 @@ fn f32_client(addr: &str) -> NetClient {
             tenant: "test".to_string(),
             codec: CodecKind::Exp1Baseline,
             bits: 8,
+            resp: PlaneCodec::F32,
         },
     )
     .unwrap()
@@ -163,6 +164,110 @@ fn identical_quantized_payloads_hit_the_response_cache() {
     let snap = svc.metrics();
     assert_eq!(snap.cache_hits, 1);
     assert_eq!(snap.cache_misses, 2);
+    server.shutdown();
+}
+
+#[test]
+fn cache_is_keyed_per_tenant() {
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 64, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let client = |tenant: &str| {
+        NetClient::connect(
+            &addr,
+            NetClientConfig { tenant: tenant.to_string(), ..NetClientConfig::default() },
+        )
+        .unwrap()
+    };
+    let a = client("tenant-a");
+    let b = client("tenant-b");
+    let mut g = Gen::new(29);
+    let (t_len, batch) = (16, 2);
+    let (r, v, d) = planes(&mut g, t_len, batch);
+
+    assert!(!a.call_planes(t_len, batch, &r, &v, &d).unwrap().cache_hit);
+    assert!(
+        a.call_planes(t_len, batch, &r, &v, &d).unwrap().cache_hit,
+        "same tenant replaying the same payload must hit"
+    );
+    // The *identical* payload from another tenant must not replay
+    // tenant a's entry — keys are tenant-scoped.
+    assert!(
+        !b.call_planes(t_len, batch, &r, &v, &d).unwrap().cache_hit,
+        "cache must never answer across tenants"
+    );
+    assert!(b.call_planes(t_len, batch, &r, &v, &d).unwrap().cache_hit);
+
+    let snap = svc.metrics();
+    assert_eq!((snap.cache_hits, snap.cache_misses), (2, 2));
+    // The per-tenant breakdown saw both tenants' served requests.
+    for tenant in ["tenant-a", "tenant-b"] {
+        let t = snap
+            .tenants
+            .iter()
+            .find(|t| t.tenant == tenant)
+            .unwrap_or_else(|| panic!("{tenant} missing from {snap}"));
+        assert_eq!(t.requests, 2);
+        assert_eq!(t.elements, 2 * (t_len * batch) as u64);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn quantized_replies_are_opt_in_lossy_and_cache_consistent() {
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 64, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let client = NetClient::connect(
+        &server.local_addr().to_string(),
+        NetClientConfig {
+            tenant: "q".to_string(),
+            codec: CodecKind::Exp1Baseline, // exact requests
+            bits: 8,
+            resp: PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 8 },
+        },
+    )
+    .unwrap();
+    let mut g = Gen::new(31);
+    let (t_len, batch) = (20, 3);
+    let (r, v, d) = planes(&mut g, t_len, batch);
+    let exact = svc
+        .submit_planes(t_len, batch, &r, &v, &d)
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    let first = client.call_planes(t_len, batch, &r, &v, &d).unwrap();
+    assert!(first.quantized, "server must honor the requested reply codec");
+    assert!(!first.cache_hit);
+    // Bounded reconstruction error against the exact in-process result.
+    let q = heppo::quant::UniformQuantizer::new(8);
+    for (plane, exact_plane) in [
+        (&first.advantages, &exact.advantages),
+        (&first.rewards_to_go, &exact.rewards_to_go),
+    ] {
+        let stats = heppo::quant::BlockStats::of(exact_plane);
+        let tol = q.max_in_range_error() * stats.std.abs().max(1e-3) + 1e-4;
+        for (got, want) in plane.iter().zip(exact_plane.iter()) {
+            assert!((got - want).abs() <= tol, "{got} vs {want} (tol {tol})");
+        }
+    }
+    // A cache hit re-encodes the stored f32 planes under the same reply
+    // codec — bit-identical to the first (computed) reply.
+    let second = client.call_planes(t_len, batch, &r, &v, &d).unwrap();
+    assert!(second.cache_hit && second.quantized);
+    for (a, b) in second.advantages.iter().zip(&first.advantages) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
     server.shutdown();
 }
 
