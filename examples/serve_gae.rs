@@ -19,6 +19,14 @@
 //!   through [`heppo::fabric::GaeFabric`]: rendezvous-routed requests,
 //!   automatic failover, and a fleet-view report.
 //!
+//! Observability flags (any mode): `--trace-out PATH` enables the
+//! request-scoped span recorder ([`heppo::obs`]) and writes a
+//! Chrome-trace/Perfetto JSON on exit (open in `chrome://tracing` or
+//! <https://ui.perfetto.dev>). In `--connect` modes,
+//! `--metrics-interval SECS` periodically fetches the remote shard's
+//! full [`MetricsSnapshot`](heppo::service::MetricsSnapshot) over the
+//! wire metrics RPC (the fleet view for a sharded fleet) and prints it.
+//!
 //! ```text
 //! cargo run --release --example serve_gae -- --workers 8 --open-loop
 //! cargo run --release --example serve_gae -- --listen 127.0.0.1:7070 \
@@ -27,9 +35,10 @@
 //! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
 //!     --inflight 16 --codec exp5 --requests 2000
 //! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
-//!     --clients 32 --pool-sockets 4 --requests 4000
+//!     --clients 32 --pool-sockets 4 --requests 4000 --metrics-interval 5
 //! cargo run --release --example serve_gae -- \
 //!     --connect 127.0.0.1:7070,127.0.0.1:7071 --clients 16 --requests 4000
+//! cargo run --release --example serve_gae -- --trace-out trace.json
 //! ```
 
 use heppo::bench::format_si;
@@ -46,6 +55,7 @@ use heppo::stats::Summary;
 use heppo::testing::ragged_trajectories;
 use heppo::util::cli::Args;
 use heppo::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -74,15 +84,31 @@ fn service_config(args: &Args) -> anyhow::Result<ServiceConfig> {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    if let Some(addr) = args.opt("listen") {
-        let addr = addr.to_string();
-        return run_listen(&args, &addr);
+    // --trace-out arms the span recorder for the whole run; the ring
+    // buffers are drained into a Chrome-trace JSON on the way out.
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        heppo::obs::set_enabled(true);
     }
-    if let Some(addr) = args.opt("connect") {
+    let result = if let Some(addr) = args.opt("listen") {
         let addr = addr.to_string();
-        return run_connect(&args, &addr);
+        run_listen(&args, &addr)
+    } else if let Some(addr) = args.opt("connect") {
+        let addr = addr.to_string();
+        run_connect(&args, &addr)
+    } else {
+        run_in_process(&args)
+    };
+    if let Some(path) = trace_out {
+        let events = heppo::obs::take_events();
+        heppo::obs::export::write_chrome_trace(std::path::Path::new(&path), &events)?;
+        let dropped = heppo::obs::trace::dropped_events();
+        println!(
+            "trace: wrote {} events to {path} ({dropped} dropped by ring overwrite)",
+            events.len()
+        );
     }
-    run_in_process(&args)
+    result
 }
 
 // ---------------------------------------------------------------- listen
@@ -160,6 +186,38 @@ struct ConnectParams {
     resp: PlaneCodec,
     clients: usize,
     pool_sockets: usize,
+    /// Seconds between periodic remote-metrics dumps over the wire
+    /// metrics RPC (`0` = off).
+    metrics_interval: u64,
+}
+
+/// Spawn the periodic metrics reporter inside `scope` when enabled:
+/// every `interval` seconds (polled coarsely so shutdown is prompt) it
+/// calls `fetch` and prints the result until `stop` is set.
+fn spawn_metrics_ticker<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    interval: u64,
+    stop: &'scope AtomicBool,
+    fetch: impl Fn() -> anyhow::Result<String> + Send + 'scope,
+) {
+    if interval == 0 {
+        return;
+    }
+    let interval = Duration::from_secs(interval);
+    scope.spawn(move || {
+        let mut next = Instant::now() + interval;
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(100));
+            if Instant::now() < next {
+                continue;
+            }
+            match fetch() {
+                Ok(report) => println!("\n[metrics RPC]\n{report}"),
+                Err(e) => eprintln!("[metrics RPC] fetch failed: {e}"),
+            }
+            next = Instant::now() + interval;
+        }
+    });
 }
 
 fn connect_params(args: &Args) -> anyhow::Result<ConnectParams> {
@@ -179,6 +237,7 @@ fn connect_params(args: &Args) -> anyhow::Result<ConnectParams> {
         resp: PlaneCodec { kind: resp_kind, bits: args.get_or("resp-bits", 8u8) },
         clients: args.get_or("clients", 1usize).max(1),
         pool_sockets: args.get_or("pool-sockets", 2usize).max(1),
+        metrics_interval: args.get_or("metrics-interval", 0u64),
     })
 }
 
@@ -285,9 +344,15 @@ fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
         p.clients, p.pool_sockets, p.n_requests, p.t_len, p.batch, p.inflight, p.tenant,
     );
     let per_client = p.n_requests.div_ceil(p.clients);
+    let stop = AtomicBool::new(false);
     let t0 = Instant::now();
     let results: Vec<anyhow::Result<Outcomes>> = std::thread::scope(|s| {
         let pool = &pool;
+        spawn_metrics_ticker(s, p.metrics_interval, &stop, move || {
+            pool.fetch_metrics()
+                .map(|m| m.to_string())
+                .map_err(|e| anyhow::anyhow!("{e}"))
+        });
         let joins: Vec<_> = (0..p.clients)
             .map(|c| {
                 let quota = per_client.min(p.n_requests.saturating_sub(c * per_client));
@@ -338,7 +403,9 @@ fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
                 })
             })
             .collect();
-        joins.into_iter().map(|j| j.join().unwrap()).collect()
+        let r = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        stop.store(true, Ordering::Relaxed);
+        r
     });
     let wall = t0.elapsed();
     let mut total = Outcomes::default();
@@ -346,6 +413,12 @@ fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
         total.absorb(r?);
     }
     total.print(wall);
+    if p.metrics_interval > 0 {
+        match pool.fetch_metrics() {
+            Ok(m) => println!("\nfinal remote service metrics (via RPC):\n{m}"),
+            Err(e) => eprintln!("final metrics RPC failed: {e}"),
+        }
+    }
     let stats = pool.wire_stats();
     println!(
         "wire: {} payload bytes ({} on the wire), reduction vs f32 = {:.2}x, \
@@ -379,8 +452,14 @@ fn run_connect_fabric(p: &ConnectParams, addrs: &[String]) -> anyhow::Result<()>
         fabric.shard_count(), p.clients, p.n_requests, p.t_len, p.batch, p.inflight, p.tenant,
     );
     let per_client = p.n_requests.div_ceil(p.clients);
+    let stop = AtomicBool::new(false);
     let t0 = Instant::now();
     let results: Vec<anyhow::Result<Outcomes>> = std::thread::scope(|s| {
+        let fabric_ref = &fabric;
+        spawn_metrics_ticker(s, p.metrics_interval, &stop, move || {
+            // fleet() pulls remote snapshots over the metrics RPC.
+            Ok(fabric_ref.fleet().to_string())
+        });
         let joins: Vec<_> = (0..p.clients)
             .map(|c| {
                 let quota = per_client.min(p.n_requests.saturating_sub(c * per_client));
@@ -429,7 +508,9 @@ fn run_connect_fabric(p: &ConnectParams, addrs: &[String]) -> anyhow::Result<()>
                 })
             })
             .collect();
-        joins.into_iter().map(|j| j.join().unwrap()).collect()
+        let r = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        stop.store(true, Ordering::Relaxed);
+        r
     });
     let wall = t0.elapsed();
     let mut total = Outcomes::default();
@@ -494,28 +575,43 @@ fn run_connect_single(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
         Ok(())
     };
 
+    let stop = AtomicBool::new(false);
     let t0 = Instant::now();
-    for _ in 0..n_requests {
-        let mut rewards = vec![0.0f32; t_len * batch];
-        let mut values = vec![0.0f32; (t_len + 1) * batch];
-        rng.fill_normal_f32(&mut rewards);
-        rng.fill_normal_f32(&mut values);
-        let done_mask: Vec<f32> = (0..t_len * batch)
-            .map(|_| if rng.uniform() < 0.02 { 1.0 } else { 0.0 })
-            .collect();
-        let sent_at = Instant::now();
-        match client.submit_planes(t_len, batch, &rewards, &values, &done_mask) {
-            Ok(pending) => window.push_back((sent_at, pending)),
-            Err(e) => anyhow::bail!("submit failed: {e}"),
-        }
-        while window.len() >= inflight {
-            let (sent_at, pending) = window.pop_front().unwrap();
-            finish(sent_at, pending, &mut latencies_us)?;
-        }
-    }
-    while let Some((sent_at, pending)) = window.pop_front() {
-        finish(sent_at, pending, &mut latencies_us)?;
-    }
+    std::thread::scope(|s| {
+        let client = &client;
+        spawn_metrics_ticker(s, p.metrics_interval, &stop, move || {
+            client
+                .fetch_metrics()
+                .map(|m| m.to_string())
+                .map_err(|e| anyhow::anyhow!("{e}"))
+        });
+        let r = (|| -> anyhow::Result<()> {
+            for _ in 0..n_requests {
+                let mut rewards = vec![0.0f32; t_len * batch];
+                let mut values = vec![0.0f32; (t_len + 1) * batch];
+                rng.fill_normal_f32(&mut rewards);
+                rng.fill_normal_f32(&mut values);
+                let done_mask: Vec<f32> = (0..t_len * batch)
+                    .map(|_| if rng.uniform() < 0.02 { 1.0 } else { 0.0 })
+                    .collect();
+                let sent_at = Instant::now();
+                match client.submit_planes(t_len, batch, &rewards, &values, &done_mask) {
+                    Ok(pending) => window.push_back((sent_at, pending)),
+                    Err(e) => anyhow::bail!("submit failed: {e}"),
+                }
+                while window.len() >= inflight {
+                    let (sent_at, pending) = window.pop_front().unwrap();
+                    finish(sent_at, pending, &mut latencies_us)?;
+                }
+            }
+            while let Some((sent_at, pending)) = window.pop_front() {
+                finish(sent_at, pending, &mut latencies_us)?;
+            }
+            Ok(())
+        })();
+        stop.store(true, Ordering::Relaxed);
+        r
+    })?;
     let wall = t0.elapsed();
     drop(finish);
 

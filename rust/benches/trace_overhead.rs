@@ -1,0 +1,322 @@
+//! Tracing overhead bench: the cost of the [`heppo::obs`] span recorder
+//! on the worker's slab fast path, in its three states:
+//!
+//! - **untraced** — the bare slab compute loop, no instrumentation
+//!   calls at all: the PR-4 baseline.
+//! - **disabled** — the production worker shape: span/instant calls
+//!   compiled in (one `Relaxed` atomic load each) with tracing off.
+//!   This is the state the zero-allocation guarantee must survive.
+//! - **enabled** — tracing on: every group records a `worker.batch`
+//!   span and a `worker.compute` instant into the per-thread ring.
+//!
+//! The acceptance bar (enforced — the bench exits nonzero on failure):
+//! the disabled mode gathers **0 bytes** (the slab path computes in
+//! place) and performs **0 steady-state allocations** per group, and its
+//! wall time stays within noise of the untraced baseline (< 2x). The
+//! enabled mode stays **bounded**: 0 steady-state allocations (events
+//! are `Copy` into a preallocated ring) and at most
+//! [`RING_CAPACITY`](heppo::obs::trace::RING_CAPACITY) retained events
+//! per recording thread. Emits the standard CSV and JSONL rows under
+//! `results/`.
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep; `HEPPO_BENCH_ITERS=N` caps
+//! the per-row iteration count (CI smoke-runs use both).
+
+use heppo::bench::format_si;
+use heppo::gae::batched::gae_batched_strided_into;
+use heppo::gae::GaeParams;
+use heppo::obs::trace::RING_CAPACITY;
+use heppo::service::plane::{slab_of, Lane, PlaneSet};
+use heppo::service::WorkerScratch;
+use heppo::testing::Gen;
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Counting pass-through allocator: every alloc/realloc ticks a global
+/// counter, so a measured section's allocation count is exact.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    /// No instrumentation calls in the loop at all.
+    Untraced,
+    /// Instrumentation calls present, recorder off.
+    Disabled,
+    /// Instrumentation calls present, recorder on.
+    Enabled,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Untraced => "untraced",
+            Mode::Disabled => "disabled",
+            Mode::Enabled => "enabled",
+        }
+    }
+}
+
+fn aligned_lanes(g: &mut Gen, t_len: usize, width: usize) -> Vec<Lane> {
+    let planes = Arc::new(
+        PlaneSet::new(
+            t_len,
+            width,
+            g.vec_normal_f32(t_len * width, 0.0, 1.0),
+            g.vec_normal_f32((t_len + 1) * width, 0.0, 1.0),
+            (0..t_len * width)
+                .map(|_| if g.bool_p(0.05) { 1.0 } else { 0.0 })
+                .collect(),
+        )
+        .unwrap(),
+    );
+    (0..width)
+        .map(|col| Lane::Column { planes: Arc::clone(&planes), col })
+        .collect()
+}
+
+struct RowResult {
+    ns_per_group: f64,
+    elem_per_sec: f64,
+    allocs_per_group: f64,
+}
+
+/// The slab fast path with the worker's exact instrumentation shape:
+/// trace minted only when the recorder is on (the production
+/// `auto_trace` pattern), one group span plus one per-item instant.
+fn run_mode(mode: Mode, lanes: &[Lane], params: &GaeParams, iters: usize) -> RowResult {
+    heppo::obs::set_enabled(mode == Mode::Enabled);
+    let mut scratch = WorkerScratch::new();
+    let elements: usize = lanes.iter().map(|l| l.len()).sum();
+    let mut steady_allocs = 0u64;
+    let mut elapsed_ns = 0u128;
+
+    // Two warm-up passes grow the scratch buffers (and, when enabled,
+    // allocate the thread's ring on first record); the measured passes
+    // run the steady state.
+    for iter in 0..iters + 2 {
+        let measured = iter >= 2;
+        let t0 = Instant::now();
+        let a0 = allocs();
+        let slab = slab_of(lanes).expect("aligned lanes must form a slab");
+        let t_len = slab.planes.t_len;
+        match mode {
+            Mode::Untraced => {
+                gae_batched_strided_into(
+                    params,
+                    t_len,
+                    slab.width,
+                    slab.planes.batch,
+                    slab.rewards(),
+                    slab.values(),
+                    slab.done_mask(),
+                    &mut scratch.out_adv,
+                    &mut scratch.out_rtg,
+                );
+            }
+            Mode::Disabled | Mode::Enabled => {
+                let trace = if heppo::obs::enabled() {
+                    heppo::obs::mint_trace_id()
+                } else {
+                    0
+                };
+                let _span = heppo::obs::span("worker.batch", trace);
+                if trace != 0 {
+                    heppo::obs::instant("worker.compute", trace);
+                }
+                gae_batched_strided_into(
+                    params,
+                    t_len,
+                    slab.width,
+                    slab.planes.batch,
+                    slab.rewards(),
+                    slab.values(),
+                    slab.done_mask(),
+                    &mut scratch.out_adv,
+                    &mut scratch.out_rtg,
+                );
+            }
+        }
+        let section_allocs = allocs() - a0;
+        let dt = t0.elapsed();
+        black_box(&scratch.out_adv);
+        if measured {
+            steady_allocs += section_allocs;
+            elapsed_ns += dt.as_nanos();
+        }
+    }
+
+    let ns_per_group = elapsed_ns as f64 / iters as f64;
+    RowResult {
+        ns_per_group,
+        elem_per_sec: elements as f64 / (ns_per_group * 1e-9),
+        allocs_per_group: steady_allocs as f64 / iters as f64,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let iters = std::env::var("HEPPO_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(if fast { 50 } else { 500 });
+    let shapes: &[(usize, usize)] =
+        if fast { &[(128, 16)] } else { &[(128, 16), (256, 32)] };
+    let params = GaeParams::default();
+
+    println!("trace overhead sweep: {iters} groups/row, shapes {shapes:?}\n");
+    let mut table = CsvTable::new(&[
+        "mode",
+        "t_len",
+        "width",
+        "ns_per_group",
+        "elem_per_sec",
+        "gathered_bytes_per_group",
+        "allocs_per_group",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut ok = true;
+
+    for &(t_len, width) in shapes {
+        let mut g = Gen::new(7 + t_len as u64 + width as u64);
+        let lanes = aligned_lanes(&mut g, t_len, width);
+        let mut untraced_ns = f64::NAN;
+        heppo::obs::take_events(); // start each shape from empty rings
+        for mode in [Mode::Untraced, Mode::Disabled, Mode::Enabled] {
+            let r = run_mode(mode, &lanes, &params, iters);
+            println!(
+                "{:<9} T={t_len:<4} B={width:<3} -> {:>9.0} ns/group, {} elem/s, {:.2} allocs/group",
+                mode.label(),
+                r.ns_per_group,
+                format_si(r.elem_per_sec),
+                r.allocs_per_group,
+            );
+            match mode {
+                Mode::Untraced => untraced_ns = r.ns_per_group,
+                Mode::Disabled => {
+                    // The PR-4 guarantee with tracing compiled in: the
+                    // slab path still gathers nothing and allocates
+                    // nothing, and the disabled check is within noise.
+                    if r.allocs_per_group != 0.0 {
+                        println!(
+                            "  FAIL: disabled tracing must not allocate on the slab path, got {}",
+                            r.allocs_per_group
+                        );
+                        ok = false;
+                    }
+                    let ratio = r.ns_per_group / untraced_ns;
+                    if ratio > 2.0 {
+                        println!(
+                            "  FAIL: disabled tracing cost {ratio:.2}x the untraced loop (bar: 2x)"
+                        );
+                        ok = false;
+                    }
+                }
+                Mode::Enabled => {
+                    if r.allocs_per_group != 0.0 {
+                        println!(
+                            "  FAIL: enabled steady state must be allocation-free (ring is preallocated), got {}",
+                            r.allocs_per_group
+                        );
+                        ok = false;
+                    }
+                }
+            }
+            table.row(&[
+                mode.label().to_string(),
+                t_len.to_string(),
+                width.to_string(),
+                format!("{:.0}", r.ns_per_group),
+                format!("{:.3e}", r.elem_per_sec),
+                "0".to_string(), // slab path: nothing gathered, by construction
+                format!("{:.2}", r.allocs_per_group),
+            ]);
+            json_rows.push(
+                Json::obj(vec![
+                    ("bench", Json::from("trace_overhead")),
+                    ("mode", Json::from(mode.label())),
+                    ("t_len", Json::from(t_len)),
+                    ("width", Json::from(width)),
+                    ("iters", Json::from(iters)),
+                    ("ns_per_group", Json::from(r.ns_per_group)),
+                    ("elem_per_sec", Json::from(r.elem_per_sec)),
+                    ("gathered_bytes_per_group", Json::from(0usize)),
+                    ("allocs_per_group", Json::from(r.allocs_per_group)),
+                ])
+                .to_string(),
+            );
+        }
+        // Bounded memory: one recording thread retains at most
+        // RING_CAPACITY events no matter how many groups ran.
+        let events = heppo::obs::take_events();
+        let per_iter = 3; // span begin + end + instant
+        let expected = (iters + 2) * per_iter;
+        println!(
+            "  enabled pass retained {} events ({} recorded, {} dropped so far)",
+            events.len(),
+            expected,
+            heppo::obs::trace::dropped_events(),
+        );
+        if events.is_empty() {
+            println!("  FAIL: enabled pass must record events");
+            ok = false;
+        }
+        if events.len() > RING_CAPACITY {
+            println!(
+                "  FAIL: retained events {} exceed the ring capacity {}",
+                events.len(),
+                RING_CAPACITY
+            );
+            ok = false;
+        }
+        if expected <= RING_CAPACITY && events.len() != expected {
+            println!(
+                "  FAIL: under capacity nothing may be dropped: retained {} of {}",
+                events.len(),
+                expected
+            );
+            ok = false;
+        }
+    }
+
+    println!("\n{}", table.to_markdown());
+    table.save("results/trace_overhead.csv")?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/trace_overhead.jsonl", json_rows.join("\n") + "\n")?;
+    println!("-> results/trace_overhead.csv, results/trace_overhead.jsonl");
+
+    anyhow::ensure!(ok, "trace_overhead bars failed (see FAIL lines above)");
+    println!(
+        "trace_overhead OK: disabled = 0 B gathered / 0 allocs / within noise; enabled = bounded ring"
+    );
+    Ok(())
+}

@@ -297,6 +297,12 @@ where
     let gate = LaneGate::new(2);
     let mut times = StageTimes { iters, ..StageTimes::default() };
     let mut stats = Vec::with_capacity(iters);
+    // One trace id per run: every stage span across both threads joins
+    // the same timeline, so `Overlapped` renders its collect spans
+    // *overlapping* the previous iteration's gae/update spans while
+    // `Sequential` renders them back to back.
+    let run_trace =
+        if crate::obs::enabled() { crate::obs::mint_trace_id() } else { 0 };
     let run_start = Instant::now();
 
     match mode {
@@ -307,16 +313,25 @@ where
             for i in 0..iters {
                 gate.step(0, SocPhase::TrajectoryCollection)?;
                 let t0 = Instant::now();
-                collect(i, &mut buf)?;
+                {
+                    let _span = crate::obs::span("pipeline.collect", run_trace);
+                    collect(i, &mut buf)?;
+                }
                 times.collect += t0.elapsed();
                 gate.step(0, SocPhase::DataPrep)?;
                 gate.step(0, SocPhase::GaeCompute)?;
                 let t0 = Instant::now();
-                let g = gae(i, &mut buf)?;
+                let g = {
+                    let _span = crate::obs::span("pipeline.gae", run_trace);
+                    gae(i, &mut buf)?
+                };
                 times.gae += t0.elapsed();
                 gate.step(0, SocPhase::LossAndUpdate)?;
                 let t0 = Instant::now();
-                stats.push(update(i, &mut buf, &g)?);
+                {
+                    let _span = crate::obs::span("pipeline.update", run_trace);
+                    stats.push(update(i, &mut buf, &g)?);
+                }
                 times.update += t0.elapsed();
                 gate.step(0, SocPhase::Idle)?;
             }
@@ -351,10 +366,13 @@ where
                                 }
                             }
                             let t0 = Instant::now();
+                            let span =
+                                crate::obs::span("pipeline.collect", run_trace);
                             if let Err(e) = collect(i, &mut buf) {
                                 *collector_err.lock().unwrap() = Some(e);
                                 return total;
                             }
+                            drop(span);
                             total += t0.elapsed();
                             if full_tx.send((i, buf)).is_err() {
                                 return total; // consumer bailed; its error wins
@@ -382,11 +400,18 @@ where
                         gate.step(lane, SocPhase::DataPrep)?;
                         gate.step(lane, SocPhase::GaeCompute)?;
                         let t0 = Instant::now();
-                        let g = gae(i, &mut buf)?;
+                        let g = {
+                            let _span = crate::obs::span("pipeline.gae", run_trace);
+                            gae(i, &mut buf)?
+                        };
                         times.gae += t0.elapsed();
                         gate.step(lane, SocPhase::LossAndUpdate)?;
                         let t0 = Instant::now();
-                        stats.push(update(i, &mut buf, &g)?);
+                        {
+                            let _span =
+                                crate::obs::span("pipeline.update", run_trace);
+                            stats.push(update(i, &mut buf, &g)?);
+                        }
                         times.update += t0.elapsed();
                         gate.step(lane, SocPhase::Idle)?;
                         let _ = free_tx.send(buf); // collector may be done

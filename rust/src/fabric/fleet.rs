@@ -3,13 +3,14 @@
 //! across shards.
 //!
 //! In-process shards contribute their full service snapshot (queue,
-//! batcher, tile, latency, per-tenant counters); remote shards are
-//! observed from the client side only (the wire carries results, not
-//! metrics), so they contribute the router's own counters — submitted,
-//! completed, failed-over — and their service column reads `None`.
-//! Totals are therefore exact for routing behavior on every shard and
-//! exact for service behavior on in-process shards; a metrics RPC for
-//! remote shards is a listed follow-up (ROADMAP: Fabric).
+//! batcher, tile, latency, per-tenant counters) directly; remote shards
+//! answer the wire metrics RPC
+//! ([`FRAME_TYPE_METRICS_REQUEST`](crate::net::wire)), so they
+//! contribute the same full snapshot when reachable. A remote shard
+//! that cannot answer — dead connection, pre-v3 peer — degrades to the
+//! router's own counters (submitted, completed, failed-over) with its
+//! service column reading `None`, which the aggregation treats as
+//! "unknown", not zero.
 
 use crate::service::{MetricsSnapshot, TenantSnapshot};
 use std::collections::HashMap;
@@ -28,7 +29,9 @@ pub struct ShardStatus {
     pub completed: u64,
     /// Requests this shard failed that another shard absorbed.
     pub failed_over: u64,
-    /// Full service metrics — in-process shards only.
+    /// Full service metrics: snapshotted directly for in-process
+    /// shards, fetched over the wire metrics RPC for remote shards.
+    /// `None` when a remote shard could not answer the RPC.
     pub service: Option<MetricsSnapshot>,
 }
 
@@ -208,7 +211,9 @@ mod tests {
     }
 
     #[test]
-    fn remote_shards_contribute_router_counters_only() {
+    fn unreachable_remote_shards_contribute_router_counters_only() {
+        // A remote shard whose metrics RPC failed reports `service:
+        // None`; its router counters still land in the totals.
         let fleet = FleetSnapshot::aggregate(vec![ShardStatus {
             label: "remote-0".to_string(),
             healthy: false,

@@ -33,6 +33,7 @@
 
 use crate::net::client::{NetError, NetGae, WireStats};
 use crate::net::wire::{self, Frame, PlaneCodec};
+use crate::service::metrics::MetricsSnapshot;
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, TcpStream, ToSocketAddrs};
@@ -113,6 +114,11 @@ type SlotMap = Arc<Mutex<HashMap<u32, mpsc::Sender<Reply>>>>;
 /// Seq-space (high 32 bits) → the owning submitter's slot map. Written
 /// once per submitter registration; the frame path only read-locks it.
 type Registry = Arc<RwLock<HashMap<u32, SlotMap>>>;
+type MetricsReply = Result<MetricsSnapshot, NetError>;
+/// In-flight metrics RPCs on one connection, keyed by full seq. Metrics
+/// seqs live in the reserved space 0 (high 32 bits zero — no submitter
+/// ever produces them), so they can never shadow a plane frame.
+type MetricsSlotMap = Arc<Mutex<HashMap<u64, mpsc::Sender<MetricsReply>>>>;
 
 /// Route one reply to its owner entirely from the seq: space → private
 /// slot map → slot. Unknown spaces/slots are dropped (abandoned
@@ -128,10 +134,16 @@ fn route(registry: &Registry, seq: u64, reply: Reply) {
     }
 }
 
-/// Fail every in-flight frame of every submitter on this connection.
-/// Sets `closed` *before* draining, so a slot registered after the
-/// drain is caught by the submitter's own post-write check.
-fn fail_all(registry: &Registry, closed: &AtomicBool, error: NetError) {
+/// Fail every in-flight frame of every submitter on this connection,
+/// plus pending metrics RPCs. Sets `closed` *before* draining, so a
+/// slot registered after the drain is caught by the submitter's own
+/// post-write check.
+fn fail_all(
+    registry: &Registry,
+    metrics: &MetricsSlotMap,
+    closed: &AtomicBool,
+    error: NetError,
+) {
     closed.store(true, Ordering::SeqCst);
     let maps: Vec<SlotMap> = registry.read().unwrap().values().cloned().collect();
     for map in maps {
@@ -141,39 +153,60 @@ fn fail_all(registry: &Registry, closed: &AtomicBool, error: NetError) {
             let _ = tx.send(Err(error.clone()));
         }
     }
+    let slots: Vec<mpsc::Sender<MetricsReply>> =
+        metrics.lock().unwrap().drain().map(|(_, tx)| tx).collect();
+    for tx in slots {
+        let _ = tx.send(Err(error.clone()));
+    }
 }
 
-fn reader_loop(stream: TcpStream, registry: Registry, closed: Arc<AtomicBool>) {
+fn reader_loop(
+    stream: TcpStream,
+    registry: Registry,
+    metrics: MetricsSlotMap,
+    closed: Arc<AtomicBool>,
+) {
     let mut reader = std::io::BufReader::new(stream);
     loop {
         let frame = match wire::read_frame(&mut reader) {
             Ok(Some(frame)) => frame,
             Ok(None) | Err(_) => {
-                fail_all(&registry, &closed, NetError::Disconnected);
+                fail_all(&registry, &metrics, &closed, NetError::Disconnected);
                 return;
             }
         };
         match wire::decode_frame(&frame) {
             Ok(Frame::Response(resp)) => route(&registry, resp.seq, Ok(resp)),
+            Ok(Frame::MetricsResponse(m)) => {
+                if let Some(tx) = metrics.lock().unwrap().remove(&m.seq) {
+                    let _ = tx.send(Ok(m.snapshot));
+                }
+            }
             Ok(Frame::Error(err)) => {
                 let remote =
                     NetError::Remote { kind: err.kind, message: err.message };
                 if err.seq == 0 {
-                    fail_all(&registry, &closed, remote);
+                    fail_all(&registry, &metrics, &closed, remote);
                     return;
                 }
-                route(&registry, err.seq, Err(remote));
+                // A per-frame error may answer a metrics RPC too.
+                if let Some(tx) = metrics.lock().unwrap().remove(&err.seq) {
+                    let _ = tx.send(Err(remote));
+                } else {
+                    route(&registry, err.seq, Err(remote));
+                }
             }
-            Ok(Frame::Request(_)) => {
+            Ok(Frame::Request(_)) | Ok(Frame::MetricsRequest(_)) => {
                 fail_all(
                     &registry,
+                    &metrics,
                     &closed,
                     NetError::Decode("server sent a request frame".to_string()),
                 );
                 return;
             }
             Err(e) => {
-                fail_all(&registry, &closed, NetError::Decode(e.to_string()));
+                fail_all(&registry, &metrics, &closed, NetError::Decode(e.to_string()));
                 return;
             }
         }
@@ -190,7 +223,11 @@ struct ConnInner {
 }
 
 impl ConnInner {
-    fn connect(addr: &str, registry: Registry) -> std::io::Result<Arc<ConnInner>> {
+    fn connect(
+        addr: &str,
+        registry: Registry,
+        metrics: MetricsSlotMap,
+    ) -> std::io::Result<Arc<ConnInner>> {
         let stream = dial(addr)?;
         stream.set_nodelay(true)?;
         let read_half = stream.try_clone()?;
@@ -198,7 +235,7 @@ impl ConnInner {
         let closed = Arc::new(AtomicBool::new(false));
         let reader_closed = Arc::clone(&closed);
         let reader = std::thread::spawn(move || {
-            reader_loop(read_half, registry, reader_closed)
+            reader_loop(read_half, registry, metrics, reader_closed)
         });
         Ok(Arc::new(ConnInner {
             writer: Mutex::new(std::io::BufWriter::new(write_half)),
@@ -232,16 +269,21 @@ impl Drop for ConnInner {
 struct PoolConn {
     addr: String,
     registry: Registry,
+    /// Pending metrics RPCs; like the registry it survives re-dials.
+    metrics: MetricsSlotMap,
     inner: RwLock<Arc<ConnInner>>,
 }
 
 impl PoolConn {
     fn open(addr: &str) -> std::io::Result<PoolConn> {
         let registry: Registry = Arc::new(RwLock::new(HashMap::new()));
-        let inner = ConnInner::connect(addr, Arc::clone(&registry))?;
+        let metrics: MetricsSlotMap = Arc::new(Mutex::new(HashMap::new()));
+        let inner =
+            ConnInner::connect(addr, Arc::clone(&registry), Arc::clone(&metrics))?;
         Ok(PoolConn {
             addr: addr.to_string(),
             registry,
+            metrics,
             inner: RwLock::new(inner),
         })
     }
@@ -260,7 +302,11 @@ impl PoolConn {
             return Ok(Arc::clone(&guard)); // someone else re-dialed first
         }
         guard.abort();
-        match ConnInner::connect(&self.addr, Arc::clone(&self.registry)) {
+        match ConnInner::connect(
+            &self.addr,
+            Arc::clone(&self.registry),
+            Arc::clone(&self.metrics),
+        ) {
             Ok(fresh) => {
                 *guard = fresh;
                 Ok(Arc::clone(&guard))
@@ -276,12 +322,16 @@ struct PoolStats {
     payload_bytes: AtomicU64,
     f32_payload_bytes: AtomicU64,
     wire_bytes: AtomicU64,
+    traced_frames: AtomicU64,
 }
 
 struct PoolShared {
     config: PoolConfig,
     conns: Vec<PoolConn>,
     next_submitter: AtomicU32,
+    /// Metrics-RPC seqs live in the reserved space 0 (high bits zero),
+    /// which no submitter can produce; start at 1 (seq 0 is reserved).
+    next_metrics_seq: AtomicU64,
     stats: PoolStats,
 }
 
@@ -305,6 +355,7 @@ impl ClientPool {
                 config,
                 conns,
                 next_submitter: AtomicU32::new(0),
+                next_metrics_seq: AtomicU64::new(1),
                 stats: PoolStats::default(),
             }),
         })
@@ -340,7 +391,42 @@ impl ClientPool {
         }
     }
 
+    /// Fetch the endpoint's full
+    /// [`MetricsSnapshot`](crate::service::MetricsSnapshot) over the
+    /// wire (the fleet-metrics RPC), on the first pooled socket. The
+    /// RPC's seq lives in the reserved space 0, so it can never shadow
+    /// a submitter's plane frame.
+    pub fn fetch_metrics(&self) -> Result<MetricsSnapshot, NetError> {
+        let pool_conn = &self.shared.conns[0];
+        let conn = pool_conn.live()?;
+        let seq = self.shared.next_metrics_seq.fetch_add(1, Ordering::Relaxed);
+        debug_assert_eq!(submitter_of(seq), None, "metrics seqs stay in space 0");
+        let bytes = wire::encode_metrics_request(seq);
+        let (tx, rx) = mpsc::channel();
+        pool_conn.metrics.lock().unwrap().insert(seq, tx);
+        let write_result = {
+            let mut writer = conn.writer.lock().unwrap();
+            writer.write_all(&bytes).and_then(|_| writer.flush())
+        };
+        if let Err(e) = write_result {
+            pool_conn.metrics.lock().unwrap().remove(&seq);
+            conn.closed.store(true, Ordering::SeqCst);
+            return Err(NetError::Io(e.to_string()));
+        }
+        self.shared
+            .stats
+            .wire_bytes
+            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        if conn.closed.load(Ordering::SeqCst) {
+            pool_conn.metrics.lock().unwrap().remove(&seq);
+            return Err(NetError::Disconnected);
+        }
+        rx.recv().map_err(|_| NetError::Disconnected)?
+    }
+
     /// Transport accounting summed over every socket and submitter.
+    /// Round-trip timing is a per-`NetClient` measure; pooled slots
+    /// don't carry submit timestamps, so the RTT fields stay zero here.
     pub fn wire_stats(&self) -> WireStats {
         let s = &self.shared.stats;
         WireStats {
@@ -348,6 +434,10 @@ impl ClientPool {
             payload_bytes: s.payload_bytes.load(Ordering::Relaxed),
             f32_payload_bytes: s.f32_payload_bytes.load(Ordering::Relaxed),
             wire_bytes: s.wire_bytes.load(Ordering::Relaxed),
+            rtt_count: 0,
+            rtt_total_us: 0,
+            rtt_max_us: 0,
+            traced_frames: s.traced_frames.load(Ordering::Relaxed),
         }
     }
 }
@@ -379,7 +469,8 @@ impl PoolClient {
     }
 
     /// Encode and write one plane-shaped request on the pinned socket;
-    /// returns immediately with a handle (the pipelined shape).
+    /// returns immediately with a handle (the pipelined shape). Mints a
+    /// fresh trace id while tracing is on.
     pub fn submit_planes(
         &self,
         t_len: usize,
@@ -388,6 +479,27 @@ impl PoolClient {
         values: &[f32],
         done_mask: &[f32],
     ) -> Result<PoolPending, NetError> {
+        let trace = if crate::obs::enabled() {
+            crate::obs::mint_trace_id()
+        } else {
+            0
+        };
+        self.submit_planes_traced(t_len, batch, rewards, values, done_mask, trace)
+    }
+
+    /// [`PoolClient::submit_planes`] under a caller-supplied trace id
+    /// (`0` = untraced). The fabric router uses this so one id spans
+    /// every failover attempt of a single logical request.
+    pub fn submit_planes_traced(
+        &self,
+        t_len: usize,
+        batch: usize,
+        rewards: &[f32],
+        values: &[f32],
+        done_mask: &[f32],
+        trace: u64,
+    ) -> Result<PoolPending, NetError> {
+        let _submit_span = crate::obs::span("client.submit", trace);
         let slot = self.next_frame.fetch_add(1, Ordering::Relaxed) as u32;
         let seq = seq_for(self.id, slot);
         let encoded = wire::encode_request(
@@ -395,6 +507,7 @@ impl PoolClient {
             &self.tenant,
             self.shared.config.codec,
             self.shared.config.resp,
+            trace,
             t_len,
             batch,
             rewards,
@@ -426,6 +539,9 @@ impl PoolClient {
             .fetch_add(encoded.f32_payload_bytes as u64, Ordering::Relaxed);
         s.wire_bytes
             .fetch_add(encoded.bytes.len() as u64, Ordering::Relaxed);
+        if trace != 0 {
+            s.traced_frames.fetch_add(1, Ordering::Relaxed);
+        }
         // The reader sets `closed` *before* draining the slot maps, so a
         // slot registered after the drain is caught here and never leaks.
         if conn.closed.load(Ordering::SeqCst) {

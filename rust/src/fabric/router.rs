@@ -268,6 +268,11 @@ struct FabricPayload {
     rewards: Vec<f32>,
     values: Vec<f32>,
     done_mask: Vec<f32>,
+    /// Trace id minted once at [`GaeFabric::submit`]; every submit
+    /// attempt — including failover resubmits to other shards — carries
+    /// the same id, so a request that crosses shards still renders as
+    /// one causal timeline (`0` = untraced).
+    trace: u64,
 }
 
 impl FabricPayload {
@@ -368,6 +373,9 @@ impl FabricInner {
     ) -> Result<Attempt, TryFail> {
         let shard = &self.shards[idx];
         shard.submitted.fetch_add(1, Ordering::Relaxed);
+        // One instant per attempt: a failover shows up as two (or more)
+        // `fabric.attempt` events under the same trace id.
+        crate::obs::instant("fabric.attempt", payload.trace);
         match &shard.backend {
             ShardBackend::InProcess(svc) => {
                 // Validated at the fabric boundary, so this cannot fail.
@@ -381,7 +389,7 @@ impl FabricInner {
                 .map_err(|e| TryFail::Fatal(e.to_string()))?;
                 // Fail-fast admission: a shedding shard spills instead
                 // of stalling the submitter.
-                match svc.try_submit_plane_set(planes) {
+                match svc.try_submit_plane_set_traced(planes, payload.trace) {
                     // Per-tenant accounting happens at *completion*
                     // (the wait path), so a request that fails over
                     // mid-flight is never double-counted.
@@ -400,12 +408,13 @@ impl FabricInner {
                 let submitter = shard
                     .submitter_for(tenant)
                     .expect("remote backend always yields a submitter");
-                match submitter.submit_planes(
+                match submitter.submit_planes_traced(
                     payload.t_len,
                     payload.batch,
                     &payload.rewards,
                     &payload.values,
                     &payload.done_mask,
+                    payload.trace,
                 ) {
                     Ok(pending) => Ok(Attempt::Remote(pending)),
                     Err(NetError::InvalidRequest(e)) => Err(TryFail::Fatal(e)),
@@ -523,8 +532,18 @@ impl GaeFabric {
         values: Vec<f32>,
         done_mask: Vec<f32>,
     ) -> Result<FabricPending, FabricError> {
-        let payload =
-            Arc::new(FabricPayload { t_len, batch, rewards, values, done_mask });
+        // Minted once here; failover resubmits reuse it so the whole
+        // request — across any number of shard attempts — is one trace.
+        let trace =
+            if crate::obs::enabled() { crate::obs::mint_trace_id() } else { 0 };
+        let payload = Arc::new(FabricPayload {
+            t_len,
+            batch,
+            rewards,
+            values,
+            done_mask,
+            trace,
+        });
         payload.validate()?;
         let mut attempts_used = 0;
         let (shard, attempt) = self.inner.submit_with_budget(
@@ -576,7 +595,10 @@ impl GaeFabric {
                 failed_over: s.failed_over.load(Ordering::Relaxed),
                 service: match &s.backend {
                     ShardBackend::InProcess(svc) => Some(svc.metrics()),
-                    ShardBackend::Remote { .. } => None,
+                    // Full snapshot over the metrics RPC; a shard that
+                    // cannot answer (dead, pre-v3 peer) reports `None`
+                    // and still contributes its router-side counters.
+                    ShardBackend::Remote { pool, .. } => pool.fetch_metrics().ok(),
                 },
             })
             .collect();

@@ -31,6 +31,7 @@
 //! | [`coordinator`] | the PPO training system (rollout, GAE stage, update) |
 //! | [`service`] | GAE serving: dynamic batching, sharded workers, admission control |
 //! | [`net`] | network front-end: quantized wire protocol, TCP server, pipelined client |
+//! | [`obs`] | request-scoped tracing: span rings, trace-id propagation, Chrome-trace export |
 //! | [`fabric`] | sharded service fleet: consistent-hash router, client pool, fleet metrics |
 //! | [`bench`] | micro-benchmark harness used by `cargo bench` targets |
 //! | [`testing`] | mini property-test harness used across the test suite |
@@ -43,6 +44,7 @@ pub mod gae;
 pub mod hwsim;
 pub mod memory;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod service;

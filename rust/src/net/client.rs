@@ -16,12 +16,14 @@
 
 use crate::net::wire::{self, ErrorKind, Frame, PlaneCodec};
 use crate::quant::CodecKind;
+use crate::service::metrics::MetricsSnapshot;
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Client-side identity and payload encoding.
 #[derive(Debug, Clone)]
@@ -111,7 +113,27 @@ impl std::fmt::Display for NetError {
 impl std::error::Error for NetError {}
 
 type Reply = Result<wire::ResponseFrame, NetError>;
-type PendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<Reply>>>>;
+
+/// One in-flight frame's client-side bookkeeping: the reply channel plus
+/// what the reader needs to close the loop — the submit instant (RTT)
+/// and the trace id (the `client.complete` marker).
+struct PendingSlot {
+    tx: mpsc::Sender<Reply>,
+    submitted_at: Instant,
+    trace: u64,
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, PendingSlot>>>;
+type MetricsReply = Result<MetricsSnapshot, NetError>;
+type MetricsPendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<MetricsReply>>>>;
+
+/// Round-trip accounting the reader thread updates as replies land.
+#[derive(Default)]
+struct RttStats {
+    count: AtomicU64,
+    total_us: AtomicU64,
+    max_us: AtomicU64,
+}
 
 /// Handle to one in-flight frame.
 #[derive(Debug)]
@@ -152,12 +174,26 @@ pub struct WireStats {
     pub f32_payload_bytes: u64,
     /// Total wire bytes written (frames incl. headers + length prefixes).
     pub wire_bytes: u64,
+    /// Replies routed back to a pending slot (responses *and* typed
+    /// per-frame errors — each is one measured round trip).
+    pub rtt_count: u64,
+    /// Summed submit → reply round-trip time, microseconds.
+    pub rtt_total_us: u64,
+    /// Worst single round trip, microseconds.
+    pub rtt_max_us: u64,
+    /// Request frames that carried a nonzero trace id in their header.
+    pub traced_frames: u64,
 }
 
 impl WireStats {
     /// Measured request-payload reduction vs f32 transport.
     pub fn reduction_vs_f32(&self) -> f64 {
         self.f32_payload_bytes as f64 / self.payload_bytes.max(1) as f64
+    }
+
+    /// Mean submit → reply round trip, microseconds (0 with no replies).
+    pub fn mean_rtt_us(&self) -> f64 {
+        self.rtt_total_us as f64 / self.rtt_count.max(1) as f64
     }
 }
 
@@ -170,6 +206,10 @@ pub struct NetClient {
     /// Clone of the socket, for shutdown.
     stream: TcpStream,
     pending: PendingMap,
+    /// In-flight metrics RPCs, a separate map so snapshot replies can
+    /// never collide with a plane response slot.
+    metrics_pending: MetricsPendingMap,
+    rtt: Arc<RttStats>,
     reader: Option<JoinHandle<()>>,
     /// Set by the reader on exit; submits after that fail immediately
     /// instead of registering slots nobody will ever answer.
@@ -179,6 +219,7 @@ pub struct NetClient {
     payload_bytes: AtomicU64,
     f32_payload_bytes: AtomicU64,
     wire_bytes: AtomicU64,
+    traced_frames: AtomicU64,
 }
 
 impl NetClient {
@@ -189,17 +230,23 @@ impl NetClient {
         let read_half = stream.try_clone()?;
         let write_half = stream.try_clone()?;
         let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let metrics_pending: MetricsPendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let rtt = Arc::new(RttStats::default());
         let closed = Arc::new(AtomicBool::new(false));
         let reader_pending = Arc::clone(&pending);
+        let reader_metrics = Arc::clone(&metrics_pending);
+        let reader_rtt = Arc::clone(&rtt);
         let reader_closed = Arc::clone(&closed);
         let reader = std::thread::spawn(move || {
-            reader_loop(read_half, reader_pending, reader_closed)
+            reader_loop(read_half, reader_pending, reader_metrics, reader_rtt, reader_closed)
         });
         Ok(NetClient {
             config,
             writer: Mutex::new(std::io::BufWriter::new(write_half)),
             stream,
             pending,
+            metrics_pending,
+            rtt,
             reader: Some(reader),
             closed,
             next_seq: AtomicU64::new(1),
@@ -207,6 +254,7 @@ impl NetClient {
             payload_bytes: AtomicU64::new(0),
             f32_payload_bytes: AtomicU64::new(0),
             wire_bytes: AtomicU64::new(0),
+            traced_frames: AtomicU64::new(0),
         })
     }
 
@@ -225,11 +273,21 @@ impl NetClient {
         done_mask: &[f32],
     ) -> Result<NetPending, NetError> {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        // While tracing is on, every frame gets a fresh request-scoped
+        // id that rides the wire header — the server's spans join this
+        // timeline. Off, `0` keeps the header one flag byte.
+        let trace = if crate::obs::enabled() {
+            crate::obs::mint_trace_id()
+        } else {
+            0
+        };
+        let _submit_span = crate::obs::span("client.submit", trace);
         let encoded = wire::encode_request(
             seq,
             &self.config.tenant,
             PlaneCodec { kind: self.config.codec, bits: self.config.bits },
             self.config.resp,
+            trace,
             t_len,
             batch,
             rewards,
@@ -241,7 +299,10 @@ impl NetClient {
         let (tx, rx) = mpsc::channel();
         // Register before writing so a lightning-fast response cannot
         // race past an unregistered sequence number.
-        self.pending.lock().unwrap().insert(seq, tx);
+        self.pending
+            .lock()
+            .unwrap()
+            .insert(seq, PendingSlot { tx, submitted_at: Instant::now(), trace });
         let write_result = {
             let mut writer = self.writer.lock().unwrap();
             writer.write_all(&encoded.bytes).and_then(|_| writer.flush())
@@ -259,6 +320,9 @@ impl NetClient {
             .fetch_add(encoded.f32_payload_bytes as u64, Ordering::Relaxed);
         self.wire_bytes
             .fetch_add(encoded.bytes.len() as u64, Ordering::Relaxed);
+        if trace != 0 {
+            self.traced_frames.fetch_add(1, Ordering::Relaxed);
+        }
         // The reader sets `closed` *before* draining the map, so a slot
         // registered after the drain is caught here and never leaks.
         if self.closed.load(Ordering::SeqCst) {
@@ -280,6 +344,33 @@ impl NetClient {
         self.submit_planes(t_len, batch, rewards, values, done_mask)?.wait()
     }
 
+    /// Fetch the serving side's full [`MetricsSnapshot`] over the wire —
+    /// the fleet-metrics RPC. Pipelines like any other frame; the reader
+    /// routes the reply by sequence number.
+    pub fn fetch_metrics(&self) -> Result<MetricsSnapshot, NetError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(NetError::Disconnected);
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let bytes = wire::encode_metrics_request(seq);
+        let (tx, rx) = mpsc::channel();
+        self.metrics_pending.lock().unwrap().insert(seq, tx);
+        let write_result = {
+            let mut writer = self.writer.lock().unwrap();
+            writer.write_all(&bytes).and_then(|_| writer.flush())
+        };
+        if let Err(e) = write_result {
+            self.metrics_pending.lock().unwrap().remove(&seq);
+            return Err(NetError::Io(e.to_string()));
+        }
+        self.wire_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        if self.closed.load(Ordering::SeqCst) {
+            self.metrics_pending.lock().unwrap().remove(&seq);
+            return Err(NetError::Disconnected);
+        }
+        rx.recv().map_err(|_| NetError::Disconnected)?
+    }
+
     /// Transport accounting since connect.
     pub fn wire_stats(&self) -> WireStats {
         WireStats {
@@ -287,6 +378,10 @@ impl NetClient {
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
             f32_payload_bytes: self.f32_payload_bytes.load(Ordering::Relaxed),
             wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            rtt_count: self.rtt.count.load(Ordering::Relaxed),
+            rtt_total_us: self.rtt.total_us.load(Ordering::Relaxed),
+            rtt_max_us: self.rtt.max_us.load(Ordering::Relaxed),
+            traced_frames: self.traced_frames.load(Ordering::Relaxed),
         }
     }
 
@@ -306,26 +401,46 @@ impl Drop for NetClient {
 }
 
 /// Route one reply to its pending slot (unknown seqs are dropped — the
-/// caller may have abandoned its handle).
-fn route(pending: &PendingMap, seq: u64, reply: Reply) {
-    if let Some(tx) = pending.lock().unwrap().remove(&seq) {
-        let _ = tx.send(reply);
+/// caller may have abandoned its handle). Each routed reply is one
+/// measured round trip.
+fn route(pending: &PendingMap, rtt: &RttStats, seq: u64, reply: Reply) {
+    if let Some(slot) = pending.lock().unwrap().remove(&seq) {
+        let us = slot.submitted_at.elapsed().as_micros() as u64;
+        rtt.count.fetch_add(1, Ordering::Relaxed);
+        rtt.total_us.fetch_add(us, Ordering::Relaxed);
+        rtt.max_us.fetch_max(us, Ordering::Relaxed);
+        if slot.trace != 0 {
+            crate::obs::instant("client.complete", slot.trace);
+        }
+        let _ = slot.tx.send(reply);
     }
 }
 
-/// Fail every in-flight call with the same error and stop reading.
-fn broadcast(pending: &PendingMap, error: NetError) {
-    let slots: Vec<mpsc::Sender<Reply>> =
-        pending.lock().unwrap().drain().map(|(_, tx)| tx).collect();
+/// Fail every in-flight call (planes and metrics) with the same error
+/// and stop reading.
+fn broadcast(pending: &PendingMap, metrics: &MetricsPendingMap, error: NetError) {
+    let slots: Vec<PendingSlot> =
+        pending.lock().unwrap().drain().map(|(_, slot)| slot).collect();
+    for slot in slots {
+        let _ = slot.tx.send(Err(error.clone()));
+    }
+    let slots: Vec<mpsc::Sender<MetricsReply>> =
+        metrics.lock().unwrap().drain().map(|(_, tx)| tx).collect();
     for tx in slots {
         let _ = tx.send(Err(error.clone()));
     }
 }
 
-fn reader_loop(stream: TcpStream, pending: PendingMap, closed: Arc<AtomicBool>) {
+fn reader_loop(
+    stream: TcpStream,
+    pending: PendingMap,
+    metrics_pending: MetricsPendingMap,
+    rtt: Arc<RttStats>,
+    closed: Arc<AtomicBool>,
+) {
     let fail_all = |error: NetError| {
         closed.store(true, Ordering::SeqCst);
-        broadcast(&pending, error);
+        broadcast(&pending, &metrics_pending, error);
     };
     let mut reader = std::io::BufReader::new(stream);
     loop {
@@ -337,7 +452,12 @@ fn reader_loop(stream: TcpStream, pending: PendingMap, closed: Arc<AtomicBool>) 
             }
         };
         match wire::decode_frame(&frame) {
-            Ok(Frame::Response(resp)) => route(&pending, resp.seq, Ok(resp)),
+            Ok(Frame::Response(resp)) => route(&pending, &rtt, resp.seq, Ok(resp)),
+            Ok(Frame::MetricsResponse(m)) => {
+                if let Some(tx) = metrics_pending.lock().unwrap().remove(&m.seq) {
+                    let _ = tx.send(Ok(m.snapshot));
+                }
+            }
             Ok(Frame::Error(err)) => {
                 let remote =
                     NetError::Remote { kind: err.kind, message: err.message };
@@ -347,9 +467,14 @@ fn reader_loop(stream: TcpStream, pending: PendingMap, closed: Arc<AtomicBool>) 
                     fail_all(remote);
                     return;
                 }
-                route(&pending, err.seq, Err(remote));
+                // A per-frame error may answer either kind of call.
+                if let Some(tx) = metrics_pending.lock().unwrap().remove(&err.seq) {
+                    let _ = tx.send(Err(remote));
+                } else {
+                    route(&pending, &rtt, err.seq, Err(remote));
+                }
             }
-            Ok(Frame::Request(_)) => {
+            Ok(Frame::Request(_)) | Ok(Frame::MetricsRequest(_)) => {
                 fail_all(NetError::Decode("server sent a request frame".to_string()));
                 return;
             }

@@ -57,5 +57,6 @@ pub use quota::{QuotaConfig, TokenBuckets};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{
     EncodedRequest, ErrorFrame, ErrorKind, Fnv1a, Frame, LazyFrame, LazyRequest,
-    PlaneCodec, RequestFrame, ResponseFrame, WireDecodeError,
+    MetricsRequestFrame, MetricsResponseFrame, PlaneCodec, RequestFrame,
+    ResponseFrame, WireDecodeError,
 };

@@ -226,6 +226,9 @@ struct InFlight {
     cache_key: Option<u64>,
     /// The reply codec the client asked for (f32 unless it opted in).
     resp: PlaneCodec,
+    /// Request-scoped trace id from the frame header (`0` = untraced),
+    /// echoed in the response so the client can close its span.
+    trace: u64,
     pending: PlanesPending,
 }
 
@@ -290,6 +293,12 @@ fn read_loop(
         // past the quota and cache checks.
         match wire::decode_frame_lazy(&frame) {
             Ok(LazyFrame::Request(req)) => handle_request(req, shared, done_tx, out_tx),
+            Ok(LazyFrame::MetricsRequest(m)) => {
+                // The metrics RPC is answered inline — a full snapshot is
+                // cheap (no plane work) and must not queue behind compute.
+                let snapshot = shared.service.metrics();
+                let _ = out_tx.send(wire::encode_metrics_response(m.seq, &snapshot));
+            }
             Ok(_) => {
                 // Only clients speak first; a response/error from one is
                 // a protocol violation worth closing over.
@@ -324,6 +333,11 @@ fn handle_request(
     let (seq, t_len, batch) = (req.seq, req.t_len, req.batch);
     let tenant = req.tenant;
     let resp = req.resp;
+    // The client's trace id rode the frame header; from here every
+    // server-side event joins its timeline.
+    let trace = req.trace;
+    crate::obs::instant("server.decode", trace);
+    let _admit_span = crate::obs::span("server.admit", trace);
 
     // 1. Quota: charge the tenant before any work happens on its behalf
     //    — the cost needs only the header geometry, no plane decode.
@@ -375,6 +389,7 @@ fn handle_request(
                     hit.hw_cycles,
                     true,
                     resp,
+                    trace,
                 ));
                 return;
             }
@@ -400,14 +415,15 @@ fn handle_request(
         }
     };
     let submitted = if shared.config.shed_on_overload {
-        shared.service.try_submit_plane_set(planes)
+        shared.service.try_submit_plane_set_traced(planes, trace)
     } else {
-        shared.service.submit_plane_set(planes)
+        shared.service.submit_plane_set_traced(planes, trace)
     };
     match submitted {
         // Per-tenant accounting for computed requests happens in the
         // completer ("requests answered with a result"), not here.
         Ok(pending) => {
+            crate::obs::instant("server.enqueue", trace);
             let _ = done_tx.send(InFlight {
                 seq,
                 tenant: tenant.to_string(),
@@ -415,6 +431,7 @@ fn handle_request(
                 batch,
                 cache_key,
                 resp,
+                trace,
                 pending,
             });
         }
@@ -473,7 +490,11 @@ fn completer_loop(
                     &inflight.tenant,
                     (inflight.t_len * inflight.batch) as u64,
                 );
-                let _ = out_tx.send(wire::encode_response(
+                // Time the wire encode — the one phase the worker cannot
+                // see (the frame is built after its reply was sent).
+                let encode_span = crate::obs::span("server.encode", inflight.trace);
+                let encode_start = std::time::Instant::now();
+                let frame = wire::encode_response(
                     inflight.seq,
                     cached.t_len,
                     cached.batch,
@@ -482,7 +503,14 @@ fn completer_loop(
                     cached.hw_cycles,
                     false,
                     inflight.resp,
-                ));
+                    inflight.trace,
+                );
+                shared
+                    .service
+                    .metrics_handle()
+                    .record_encode(encode_start.elapsed());
+                drop(encode_span);
+                let _ = out_tx.send(frame);
             }
             Err(ServiceError::ShuttingDown) => {
                 let _ = out_tx.send(wire::encode_error(

@@ -4,7 +4,7 @@
 //! standardized 8-bit storage cuts memory *and bandwidth* 4× with no
 //! training-quality loss.
 //!
-//! ## Frame layout (version 2)
+//! ## Frame layout (version 3)
 //!
 //! Every frame on the socket is `u32 LE length N` followed by `N` frame
 //! bytes (the length prefix excludes itself):
@@ -12,8 +12,8 @@
 //! | offset | size | field |
 //! |-------:|-----:|-------|
 //! | 0      | 4    | magic `"HGAE"` |
-//! | 4      | 1    | version (currently `2`) |
-//! | 5      | 1    | frame type: 1=Request, 2=Response, 3=Error |
+//! | 4      | 1    | version (currently `3`) |
+//! | 5      | 1    | frame type: 1=Request, 2=Response, 3=Error, 4=MetricsRequest, 5=MetricsResponse |
 //! | 6      | N−10 | type-specific body (below) |
 //! | N−4    | 4    | checksum: folded FNV-1a over frame bytes `0..N−4` |
 //!
@@ -25,6 +25,8 @@
 //! | tenant | u8 length + UTF-8 bytes (≤ 255) |
 //! | resp codec | u8, the codec the *response* planes should travel in (v2) |
 //! | resp bits  | u8 response quantizer width (ignored for f32 codecs) |
+//! | header flags | u8 (v3; bit 0 = trace id present, others must be 0) |
+//! | trace id | u64, only when header-flag bit 0 is set |
 //! | — payload section (hashed for the response cache) — | |
 //! | codec | u8, the Table III experiment index (1..=5) |
 //! | bits  | u8 quantizer width (ignored for f32 codecs) |
@@ -33,10 +35,15 @@
 //! | values plane | `[(T+1)·B]` elements, encoded per codec |
 //! | done bitset | ⌈T·B/8⌉ bytes, LSB-first (bit j = element j) |
 //!
-//! The response-codec pair sits in the *header* section, outside the
-//! hashed payload: the cached result is stored as f32 planes either
-//! way, so two clients asking for the same computation under different
-//! reply codecs share one cache entry and each gets its own encoding.
+//! The response-codec pair, header flags, and trace id sit in the
+//! *header* section, outside the hashed payload: the cached result is
+//! stored as f32 planes either way, so two clients asking for the same
+//! computation under different reply codecs — or under different trace
+//! ids — share one cache entry and each gets its own encoding. The
+//! trace id is the request-scoped correlation key of [`crate::obs`]:
+//! every span the request produces, on whichever thread or shard,
+//! carries it, so one causal timeline survives the network hop and
+//! fabric failovers.
 //!
 //! Plane encoding: codecs 1–2 (`Exp1Baseline`, `Exp2DynamicStd`) are the
 //! **f32 escape hatch** — raw LE f32, bit-exact. Codecs 3–5 quantize:
@@ -52,7 +59,9 @@
 //!
 //! **Response body**: `seq` u64, `t_len`/`batch` u32, flags u8 (bit 0 =
 //! served from cache, bit 1 = `hw_cycles` present, bit 2 = quantized
-//! reply planes), optional u64 `hw_cycles`, then — when bit 2 is set —
+//! reply planes, bit 3 = trace id echoed), optional u64 `hw_cycles`,
+//! optional u64 trace id (bit 3; the request's id echoed back so the
+//! client closes the timeline it opened), then — when bit 2 is set —
 //! `codec` u8 + `bits` u8 followed by advantages and rewards-to-go in
 //! the same per-plane `(μ, σ)` + packed-code encoding requests use, or
 //! — when clear (the default) — raw `[T·B]` f32 planes. f32 replies
@@ -64,6 +73,14 @@
 //! **Error body**: `seq` u64, code u8 ([`ErrorKind`]: 1=Quota, 2=Shed,
 //! 3=Malformed, 4=Shutdown, 5=Internal), u32 message length + UTF-8.
 //!
+//! **MetricsRequest body** (v3): `seq` u64 — a telemetry poll; no
+//! payload. **MetricsResponse body** (v3): `seq` u64 followed by a
+//! serialized [`MetricsSnapshot`] (durations as u64 nanoseconds, f64
+//! via `to_bits`, a u32-counted per-tenant list). This is the fleet
+//! metrics RPC: the fabric polls it so remote shards contribute full
+//! snapshots — tenant breakdowns included — to the fleet view instead
+//! of router-side counters only.
+//!
 //! ## Version rules
 //!
 //! The format is rigid within a version: a frame must parse *exactly*
@@ -74,7 +91,9 @@
 //! deploy servers before clients when bumping. Version 2 added the
 //! response-codec pair to the request header and the quantized reply
 //! arm to the response body (v1 decoders rejected the new flag bit, so
-//! nothing mis-parses across the bump).
+//! nothing mis-parses across the bump). Version 3 added the request
+//! header-flags byte with the optional trace id, the response trace
+//! echo (flag bit 3), and the metrics frame pair.
 //!
 //! ## Accounting
 //!
@@ -100,13 +119,15 @@
 
 use crate::quant::block_std::BlockStats;
 use crate::quant::{CodecKind, UniformQuantizer};
+use crate::service::metrics::{LatencyQuantiles, MetricsSnapshot, TenantSnapshot};
 use std::fmt;
 use std::io::Read;
+use std::time::Duration;
 
 /// Frame magic: `"HGAE"`.
 pub const MAGIC: [u8; 4] = *b"HGAE";
 /// Current protocol version.
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 /// Upper bound on a single frame (sanity guard against corrupt length
 /// prefixes allocating unbounded buffers).
 pub const MAX_FRAME_BYTES: usize = 256 << 20;
@@ -119,6 +140,16 @@ pub const MAX_PLANE_ELEMENTS: usize = 1 << 24;
 const FRAME_TYPE_REQUEST: u8 = 1;
 const FRAME_TYPE_RESPONSE: u8 = 2;
 const FRAME_TYPE_ERROR: u8 = 3;
+const FRAME_TYPE_METRICS_REQUEST: u8 = 4;
+const FRAME_TYPE_METRICS_RESPONSE: u8 = 5;
+
+/// Request header flag: a u64 trace id follows the flags byte.
+const REQ_FLAG_TRACE: u8 = 1;
+/// Response flag: a u64 trace id is echoed after `hw_cycles`.
+const RESP_FLAG_TRACE: u8 = 8;
+/// Most tenants a MetricsResponse may carry (the recorder itself caps
+/// at 4096; this is the hostile-frame allocation guard).
+const MAX_WIRE_TENANTS: usize = 65_536;
 
 /// Fixed bytes before the body: magic + version + frame type.
 const HEADER_BYTES: usize = 6;
@@ -284,6 +315,8 @@ pub struct RequestFrame {
     pub bits: u8,
     /// The codec the client asked the *response* planes to travel in.
     pub resp: PlaneCodec,
+    /// Request-scoped trace id ([`crate::obs`]); `0` = untraced.
+    pub trace: u64,
     pub t_len: usize,
     pub batch: usize,
     pub rewards: Vec<f32>,
@@ -309,6 +342,21 @@ pub struct ResponseFrame {
     /// The reply planes travelled quantized (lossy); `false` means raw
     /// f32, bit-exact.
     pub quantized: bool,
+    /// The request's trace id echoed back; `0` = untraced.
+    pub trace: u64,
+}
+
+/// A decoded metrics poll (no payload beyond the sequence number).
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsRequestFrame {
+    pub seq: u64,
+}
+
+/// A decoded metrics reply: the remote service's full snapshot.
+#[derive(Debug, Clone)]
+pub struct MetricsResponseFrame {
+    pub seq: u64,
+    pub snapshot: MetricsSnapshot,
 }
 
 /// A decoded error frame.
@@ -326,6 +374,8 @@ pub enum Frame {
     Request(RequestFrame),
     Response(ResponseFrame),
     Error(ErrorFrame),
+    MetricsRequest(MetricsRequestFrame),
+    MetricsResponse(MetricsResponseFrame),
 }
 
 /// A request frame parsed to its **header only**: everything the
@@ -350,6 +400,9 @@ pub struct LazyRequest<'a> {
     pub bits: u8,
     /// The codec the client asked the *response* planes to travel in.
     pub resp: PlaneCodec,
+    /// Request-scoped trace id ([`crate::obs`]); `0` = untraced. Header
+    /// section, so tracing a request does not split its cache entry.
+    pub trace: u64,
     pub t_len: usize,
     pub batch: usize,
     /// Payload-section size on the wire.
@@ -407,6 +460,7 @@ impl LazyRequest<'_> {
             codec: self.codec,
             bits: self.bits,
             resp: self.resp,
+            trace: self.trace,
             t_len: self.t_len,
             batch: self.batch,
             rewards,
@@ -426,6 +480,8 @@ pub enum LazyFrame<'a> {
     Request(LazyRequest<'a>),
     Response(ResponseFrame),
     Error(ErrorFrame),
+    MetricsRequest(MetricsRequestFrame),
+    MetricsResponse(MetricsResponseFrame),
 }
 
 /// An encoded request plus its transport accounting.
@@ -571,12 +627,15 @@ fn encode_done_bitset(out: &mut Vec<u8>, done_mask: &[f32]) {
 /// planes in `resp` (use [`PlaneCodec::F32`] for bit-exact replies).
 /// The done mask must be exactly 0.0/1.0 per element (the service's
 /// plane convention) — the bitset transport is otherwise lossy.
+/// `trace` is the request-scoped trace id (`0` = untraced; it rides the
+/// header section behind a flag bit, outside the hashed payload).
 #[allow(clippy::too_many_arguments)]
 pub fn encode_request(
     seq: u64,
     tenant: &str,
     codec: PlaneCodec,
     resp: PlaneCodec,
+    trace: u64,
     t_len: usize,
     batch: usize,
     rewards: &[f32],
@@ -627,10 +686,16 @@ pub fn encode_request(
     put_u64(&mut body, seq);
     body.push(tenant.len() as u8);
     body.extend_from_slice(tenant.as_bytes());
-    // Response-codec pair: header section, deliberately outside the
-    // hashed payload (see the module docs).
+    // Response-codec pair, header flags, and trace id: header section,
+    // deliberately outside the hashed payload (see the module docs).
     body.push(resp.kind.index() as u8);
     body.push(resp.bits);
+    if trace != 0 {
+        body.push(REQ_FLAG_TRACE);
+        put_u64(&mut body, trace);
+    } else {
+        body.push(0);
+    }
     let payload_start = body.len();
     body.push(codec.index() as u8);
     body.push(bits);
@@ -657,7 +722,8 @@ pub fn encode_request(
 /// bit-exact; a quantized codec ships per-plane `(μ, σ)` + packed codes
 /// exactly like quantized requests. Non-finite result planes silently
 /// fall back to f32 — NaN/Inf cannot ride a quantized (μ, σ), and the
-/// escape hatch carries them exactly.
+/// escape hatch carries them exactly. `trace` echoes the request's
+/// trace id back to the client (`0` = untraced, nothing emitted).
 #[allow(clippy::too_many_arguments)]
 pub fn encode_response(
     seq: u64,
@@ -668,6 +734,7 @@ pub fn encode_response(
     hw_cycles: Option<u64>,
     cache_hit: bool,
     resp: PlaneCodec,
+    trace: u64,
 ) -> Vec<u8> {
     debug_assert_eq!(advantages.len(), t_len * batch);
     debug_assert_eq!(rewards_to_go.len(), t_len * batch);
@@ -690,9 +757,15 @@ pub fn encode_response(
     if quantized {
         flags |= 4;
     }
+    if trace != 0 {
+        flags |= RESP_FLAG_TRACE;
+    }
     body.push(flags);
     if let Some(c) = hw_cycles {
         put_u64(&mut body, c);
+    }
+    if trace != 0 {
+        put_u64(&mut body, trace);
     }
     if quantized {
         body.push(resp.kind.index() as u8);
@@ -728,6 +801,158 @@ pub fn encode_error(seq: u64, kind: ErrorKind, message: &str) -> Vec<u8> {
     put_u32(&mut body, msg.len() as u32);
     body.extend_from_slice(msg);
     finish_frame(FRAME_TYPE_ERROR, &body)
+}
+
+/// Encode a metrics poll (the fleet metrics RPC's request half).
+pub fn encode_metrics_request(seq: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(8);
+    put_u64(&mut body, seq);
+    finish_frame(FRAME_TYPE_METRICS_REQUEST, &body)
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_quantiles(out: &mut Vec<u8>, q: &LatencyQuantiles) {
+    put_f64(out, q.p50);
+    put_f64(out, q.p95);
+    put_f64(out, q.p99);
+}
+
+/// Encode a [`MetricsSnapshot`] reply (the fleet metrics RPC's response
+/// half). Field order is the snapshot's declaration order; durations
+/// travel as u64 nanoseconds, f64s as `to_bits`.
+pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
+    let mut body = Vec::with_capacity(256 + 40 * s.tenants.len());
+    put_u64(&mut body, seq);
+    put_u64(&mut body, s.uptime.as_nanos().min(u64::MAX as u128) as u64);
+    put_u64(&mut body, s.submitted);
+    put_u64(&mut body, s.completed);
+    put_u64(&mut body, s.shed);
+    put_u64(&mut body, s.quota_shed);
+    put_u64(&mut body, s.cache_hits);
+    put_u64(&mut body, s.cache_misses);
+    put_u64(&mut body, s.routed_small);
+    put_u64(&mut body, s.slab_tiles);
+    put_u64(&mut body, s.packed_tiles);
+    put_u64(&mut body, s.gathered_bytes);
+    put_u64(&mut body, s.scalar_route_max_elements as u64);
+    put_u64(&mut body, s.queue_depth as u64);
+    put_u64(&mut body, s.peak_queue_depth as u64);
+    put_u64(&mut body, s.batches);
+    put_f64(&mut body, s.mean_batch_lanes);
+    put_u64(&mut body, s.elements);
+    put_f64(&mut body, s.sustained_elem_per_sec);
+    put_u64(&mut body, s.hw_cycles);
+    put_quantiles(&mut body, &s.queue_us);
+    put_quantiles(&mut body, &s.batch_us);
+    put_quantiles(&mut body, &s.compute_us);
+    put_quantiles(&mut body, &s.encode_us);
+    put_quantiles(&mut body, &s.total_us);
+    put_u32(&mut body, s.tenants.len().min(MAX_WIRE_TENANTS) as u32);
+    for t in s.tenants.iter().take(MAX_WIRE_TENANTS) {
+        let name = &t.tenant.as_bytes()[..t.tenant.len().min(255)];
+        body.push(name.len() as u8);
+        body.extend_from_slice(name);
+        put_u64(&mut body, t.requests);
+        put_u64(&mut body, t.elements);
+        put_u64(&mut body, t.shed);
+        put_u64(&mut body, t.quota_shed);
+    }
+    finish_frame(FRAME_TYPE_METRICS_RESPONSE, &body)
+}
+
+fn take_f64(r: &mut Reader<'_>) -> Result<f64, WireDecodeError> {
+    Ok(f64::from_bits(r.u64()?))
+}
+
+fn take_quantiles(r: &mut Reader<'_>) -> Result<LatencyQuantiles, WireDecodeError> {
+    Ok(LatencyQuantiles { p50: take_f64(r)?, p95: take_f64(r)?, p99: take_f64(r)? })
+}
+
+fn decode_metrics_request_body(
+    r: &mut Reader<'_>,
+) -> Result<MetricsRequestFrame, WireDecodeError> {
+    Ok(MetricsRequestFrame { seq: r.u64()? })
+}
+
+fn decode_metrics_response_body(
+    r: &mut Reader<'_>,
+) -> Result<MetricsResponseFrame, WireDecodeError> {
+    let seq = r.u64()?;
+    let uptime = Duration::from_nanos(r.u64()?);
+    let submitted = r.u64()?;
+    let completed = r.u64()?;
+    let shed = r.u64()?;
+    let quota_shed = r.u64()?;
+    let cache_hits = r.u64()?;
+    let cache_misses = r.u64()?;
+    let routed_small = r.u64()?;
+    let slab_tiles = r.u64()?;
+    let packed_tiles = r.u64()?;
+    let gathered_bytes = r.u64()?;
+    let scalar_route_max_elements = r.u64()? as usize;
+    let queue_depth = r.u64()? as usize;
+    let peak_queue_depth = r.u64()? as usize;
+    let batches = r.u64()?;
+    let mean_batch_lanes = take_f64(r)?;
+    let elements = r.u64()?;
+    let sustained_elem_per_sec = take_f64(r)?;
+    let hw_cycles = r.u64()?;
+    let queue_us = take_quantiles(r)?;
+    let batch_us = take_quantiles(r)?;
+    let compute_us = take_quantiles(r)?;
+    let encode_us = take_quantiles(r)?;
+    let total_us = take_quantiles(r)?;
+    let tenant_count = r.u32()? as usize;
+    if tenant_count > MAX_WIRE_TENANTS {
+        return Err(WireDecodeError::Malformed("tenant list exceeds cap"));
+    }
+    let mut tenants = Vec::with_capacity(tenant_count.min(4096));
+    for _ in 0..tenant_count {
+        let name_len = r.u8()? as usize;
+        let tenant = std::str::from_utf8(r.take(name_len)?)
+            .map_err(|_| WireDecodeError::Malformed("tenant is not UTF-8"))?
+            .to_string();
+        tenants.push(TenantSnapshot {
+            tenant,
+            requests: r.u64()?,
+            elements: r.u64()?,
+            shed: r.u64()?,
+            quota_shed: r.u64()?,
+        });
+    }
+    Ok(MetricsResponseFrame {
+        seq,
+        snapshot: MetricsSnapshot {
+            uptime,
+            submitted,
+            completed,
+            shed,
+            quota_shed,
+            cache_hits,
+            cache_misses,
+            routed_small,
+            slab_tiles,
+            packed_tiles,
+            gathered_bytes,
+            scalar_route_max_elements,
+            queue_depth,
+            peak_queue_depth,
+            batches,
+            mean_batch_lanes,
+            elements,
+            sustained_elem_per_sec,
+            hw_cycles,
+            queue_us,
+            batch_us,
+            compute_us,
+            encode_us,
+            total_us,
+            tenants,
+        },
+    })
 }
 
 // ---------------------------------------------------------------- decode
@@ -834,6 +1059,11 @@ fn decode_request_body_lazy<'a>(
         return Err(WireDecodeError::Malformed("response quantizer bits outside 1..=16"));
     }
     let resp = PlaneCodec { kind: resp_kind, bits: resp_bits };
+    let header_flags = r.u8()?;
+    if header_flags & !REQ_FLAG_TRACE != 0 {
+        return Err(WireDecodeError::Malformed("unknown request header flags"));
+    }
+    let trace = if header_flags & REQ_FLAG_TRACE != 0 { r.u64()? } else { 0 };
     let payload_start = r.pos;
     let codec_index = r.u8()?;
     let codec = codec_from_index(codec_index).ok_or(WireDecodeError::BadCodec(codec_index))?;
@@ -871,6 +1101,7 @@ fn decode_request_body_lazy<'a>(
         codec,
         bits,
         resp,
+        trace,
         t_len,
         batch,
         payload_bytes,
@@ -886,10 +1117,11 @@ fn decode_response_body(r: &mut Reader<'_>) -> Result<ResponseFrame, WireDecodeE
     let t_len = r.u32()? as usize;
     let batch = r.u32()? as usize;
     let flags = r.u8()?;
-    if flags & !0b111 != 0 {
+    if flags & !0b1111 != 0 {
         return Err(WireDecodeError::Malformed("unknown response flags"));
     }
     let hw_cycles = if flags & 2 != 0 { Some(r.u64()?) } else { None };
+    let trace = if flags & RESP_FLAG_TRACE != 0 { r.u64()? } else { 0 };
     let quantized = flags & 4 != 0;
     let n = t_len
         .checked_mul(batch)
@@ -931,6 +1163,7 @@ fn decode_response_body(r: &mut Reader<'_>) -> Result<ResponseFrame, WireDecodeE
         hw_cycles,
         cache_hit: flags & 1 != 0,
         quantized,
+        trace,
     })
 }
 
@@ -984,6 +1217,12 @@ pub fn decode_frame_lazy(frame: &[u8]) -> Result<LazyFrame<'_>, WireDecodeError>
         FRAME_TYPE_REQUEST => LazyFrame::Request(decode_request_body_lazy(&mut r)?),
         FRAME_TYPE_RESPONSE => LazyFrame::Response(decode_response_body(&mut r)?),
         FRAME_TYPE_ERROR => LazyFrame::Error(decode_error_body(&mut r)?),
+        FRAME_TYPE_METRICS_REQUEST => {
+            LazyFrame::MetricsRequest(decode_metrics_request_body(&mut r)?)
+        }
+        FRAME_TYPE_METRICS_RESPONSE => {
+            LazyFrame::MetricsResponse(decode_metrics_response_body(&mut r)?)
+        }
         t => return Err(WireDecodeError::BadFrameType(t)),
     };
     if r.pos != body_end {
@@ -999,6 +1238,8 @@ pub fn decode_frame(frame: &[u8]) -> Result<Frame, WireDecodeError> {
         LazyFrame::Request(req) => Frame::Request(req.into_frame()),
         LazyFrame::Response(resp) => Frame::Response(resp),
         LazyFrame::Error(err) => Frame::Error(err),
+        LazyFrame::MetricsRequest(m) => Frame::MetricsRequest(m),
+        LazyFrame::MetricsResponse(m) => Frame::MetricsResponse(m),
     })
 }
 
@@ -1058,6 +1299,7 @@ mod tests {
             "tenant-a",
             PlaneCodec { kind: codec, bits },
             PlaneCodec::F32,
+            0,
             t_len,
             batch,
             &rewards,
@@ -1180,9 +1422,9 @@ mod tests {
         let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 4, 2);
         let mut frame = enc.bytes[4..].to_vec();
         // header(6) + seq(8) + tenant_len(1) + "tenant-a"(8) + resp codec
-        // pair(2) + codec(1) + bits(1) + t_len(4) + batch(4) = rewards μ
-        // offset.
-        let mu = 6 + 8 + 1 + "tenant-a".len() + 2 + 1 + 1 + 4 + 4;
+        // pair(2) + header flags(1) + codec(1) + bits(1) + t_len(4) +
+        // batch(4) = rewards μ offset.
+        let mu = 6 + 8 + 1 + "tenant-a".len() + 2 + 1 + 1 + 1 + 4 + 4;
         frame[mu..mu + 4].copy_from_slice(&f32::NAN.to_le_bytes());
         let body_end = frame.len() - 4;
         let sum = super::checksum(&frame[..body_end]);
@@ -1280,13 +1522,13 @@ mod tests {
         let dones = vec![0.0f32; 8];
         // Quantized: refused locally, never a poison frame on the wire.
         let err = encode_request(
-            1, "t", PlaneCodec::Q8, PlaneCodec::F32, 4, 2, &rewards, &values, &dones,
+            1, "t", PlaneCodec::Q8, PlaneCodec::F32, 0, 4, 2, &rewards, &values, &dones,
         )
         .unwrap_err();
         assert!(err.to_string().contains("finite"), "{err}");
         // f32 escape hatch: NaN travels bit-exactly.
         let enc = encode_request(
-            1, "t", PlaneCodec::F32, PlaneCodec::F32, 4, 2, &rewards, &values, &dones,
+            1, "t", PlaneCodec::F32, PlaneCodec::F32, 0, 4, 2, &rewards, &values, &dones,
         )
         .unwrap();
         let req = decode_request(&enc);
@@ -1298,7 +1540,7 @@ mod tests {
         // Encoding refuses it outright…
         let n_side = 1usize << 20; // (2^20)^2 elements >> MAX_PLANE_ELEMENTS
         let err = encode_request(
-            1, "t", PlaneCodec::Q8, PlaneCodec::F32, n_side, n_side, &[], &[], &[],
+            1, "t", PlaneCodec::Q8, PlaneCodec::F32, 0, n_side, n_side, &[], &[], &[],
         )
         .unwrap_err();
         assert!(err.to_string().contains("MAX_PLANE_ELEMENTS"), "{err}");
@@ -1307,8 +1549,9 @@ mod tests {
         let mut g = Gen::new(19);
         let (enc, ..) = encode(&mut g, CodecKind::Exp5DynamicBlock, 8, 4, 2);
         let mut frame = enc.bytes[4..].to_vec();
-        // header+seq+tenant+resp pair+codec+bits precede the geometry.
-        let geo = 6 + 8 + 1 + "tenant-a".len() + 2 + 2;
+        // header+seq+tenant+resp pair+header flags+codec+bits precede
+        // the geometry.
+        let geo = 6 + 8 + 1 + "tenant-a".len() + 2 + 1 + 2;
         frame[geo..geo + 4].copy_from_slice(&(1u32 << 20).to_le_bytes());
         frame[geo + 4..geo + 8].copy_from_slice(&(1u32 << 20).to_le_bytes());
         let body_end = frame.len() - 4;
@@ -1327,8 +1570,9 @@ mod tests {
         let adv = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
         let rtg = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
         for (cycles, hit) in [(Some(912u64), true), (None, false)] {
-            let bytes =
-                encode_response(42, t_len, batch, &adv, &rtg, cycles, hit, PlaneCodec::F32);
+            let bytes = encode_response(
+                42, t_len, batch, &adv, &rtg, cycles, hit, PlaneCodec::F32, 0,
+            );
             match decode_frame(&bytes[4..]).unwrap() {
                 Frame::Response(resp) => {
                     assert_eq!(resp.seq, 42);
@@ -1357,12 +1601,13 @@ mod tests {
             let bits = g.usize_in(4, 12) as u8;
             let resp = PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits };
             let bytes =
-                encode_response(9, t_len, batch, &adv, &rtg, Some(4), false, resp);
+                encode_response(9, t_len, batch, &adv, &rtg, Some(4), false, resp, 0);
             // Quantized replies are smaller than the f32 encoding for
             // the same geometry once the (μ, σ) overhead amortizes.
             if bits == 8 && n >= 64 {
-                let f32_bytes =
-                    encode_response(9, t_len, batch, &adv, &rtg, Some(4), false, PlaneCodec::F32);
+                let f32_bytes = encode_response(
+                    9, t_len, batch, &adv, &rtg, Some(4), false, PlaneCodec::F32, 0,
+                );
                 assert!(bytes.len() < f32_bytes.len());
             }
             match decode_frame(&bytes[4..]).unwrap() {
@@ -1391,7 +1636,7 @@ mod tests {
         let mut adv = vec![0.5f32; 6];
         adv[2] = f32::NAN;
         let rtg = vec![1.0f32; 6];
-        let bytes = encode_response(3, 3, 2, &adv, &rtg, None, false, PlaneCodec::Q8);
+        let bytes = encode_response(3, 3, 2, &adv, &rtg, None, false, PlaneCodec::Q8, 0);
         match decode_frame(&bytes[4..]).unwrap() {
             Frame::Response(resp) => {
                 assert!(!resp.quantized, "NaN cannot ride a quantized (μ, σ)");
@@ -1407,7 +1652,7 @@ mod tests {
         let (rewards, values, done_mask) = random_planes(&mut g, 6, 2);
         let resp = PlaneCodec { kind: CodecKind::Exp3BlockDestd, bits: 6 };
         let enc = encode_request(
-            5, "t", PlaneCodec::F32, resp, 6, 2, &rewards, &values, &done_mask,
+            5, "t", PlaneCodec::F32, resp, 0, 6, 2, &rewards, &values, &done_mask,
         )
         .unwrap();
         let req = decode_request(&enc);
@@ -1415,7 +1660,7 @@ mod tests {
         // The pair is header-section: same payload under a different
         // reply codec hashes identically (shared cache entry).
         let enc2 = encode_request(
-            5, "t", PlaneCodec::F32, PlaneCodec::F32, 6, 2, &rewards, &values,
+            5, "t", PlaneCodec::F32, PlaneCodec::F32, 0, 6, 2, &rewards, &values,
             &done_mask,
         )
         .unwrap();
@@ -1423,9 +1668,143 @@ mod tests {
         // Out-of-range response bits are refused locally.
         let bad = PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 0 };
         assert!(encode_request(
-            5, "t", PlaneCodec::F32, bad, 6, 2, &rewards, &values, &done_mask,
+            5, "t", PlaneCodec::F32, bad, 0, 6, 2, &rewards, &values, &done_mask,
         )
         .is_err());
+    }
+
+    #[test]
+    fn trace_id_rides_the_header_and_echoes_in_the_response() {
+        let mut g = Gen::new(41);
+        let (rewards, values, done_mask) = random_planes(&mut g, 5, 2);
+        let trace = 0xABCD_EF01_2345_6789u64;
+        let enc = encode_request(
+            4, "t", PlaneCodec::Q8, PlaneCodec::F32, trace, 5, 2, &rewards, &values,
+            &done_mask,
+        )
+        .unwrap();
+        let req = decode_request(&enc);
+        assert_eq!(req.trace, trace);
+        // The trace id is header-section: the same payload untraced
+        // hashes identically, so tracing never splits a cache entry.
+        let untraced = encode_request(
+            4, "t", PlaneCodec::Q8, PlaneCodec::F32, 0, 5, 2, &rewards, &values,
+            &done_mask,
+        )
+        .unwrap();
+        let u = decode_request(&untraced);
+        assert_eq!(u.trace, 0);
+        assert_eq!(req.payload_hash, u.payload_hash);
+        assert_eq!(enc.bytes.len(), untraced.bytes.len() + 8);
+        // Response echo: the id comes back on flag bit 3.
+        let adv = vec![1.0f32; 10];
+        let rtg = vec![2.0f32; 10];
+        let bytes =
+            encode_response(4, 5, 2, &adv, &rtg, Some(7), false, PlaneCodec::F32, trace);
+        match decode_frame(&bytes[4..]).unwrap() {
+            Frame::Response(resp) => {
+                assert_eq!(resp.trace, trace);
+                assert_eq!(resp.hw_cycles, Some(7));
+            }
+            other => panic!("expected response, got {other:?}"),
+        }
+        let bytes =
+            encode_response(4, 5, 2, &adv, &rtg, None, false, PlaneCodec::F32, 0);
+        match decode_frame(&bytes[4..]).unwrap() {
+            Frame::Response(resp) => assert_eq!(resp.trace, 0),
+            other => panic!("expected response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_request_header_flags_are_rejected() {
+        let mut g = Gen::new(43);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp1Baseline, 8, 3, 2);
+        let mut frame = enc.bytes[4..].to_vec();
+        // The header-flags byte sits right after the resp codec pair.
+        let flags_at = 6 + 8 + 1 + "tenant-a".len() + 2;
+        frame[flags_at] = 0b10;
+        let body_end = frame.len() - 4;
+        let sum = super::checksum(&frame[..body_end]);
+        frame[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&frame),
+            Err(WireDecodeError::Malformed("unknown request header flags"))
+        ));
+    }
+
+    #[test]
+    fn metrics_rpc_frames_round_trip() {
+        let bytes = encode_metrics_request(99);
+        match decode_frame(&bytes[4..]).unwrap() {
+            Frame::MetricsRequest(m) => assert_eq!(m.seq, 99),
+            other => panic!("expected metrics request, got {other:?}"),
+        }
+        let q = |p50: f64| LatencyQuantiles { p50, p95: p50 * 2.0, p99: p50 * 3.0 };
+        let snapshot = MetricsSnapshot {
+            uptime: Duration::from_millis(12_345),
+            submitted: 10,
+            completed: 9,
+            shed: 1,
+            quota_shed: 2,
+            cache_hits: 3,
+            cache_misses: 4,
+            routed_small: 5,
+            slab_tiles: 6,
+            packed_tiles: 7,
+            gathered_bytes: 8,
+            scalar_route_max_elements: 512,
+            queue_depth: 11,
+            peak_queue_depth: 13,
+            batches: 14,
+            mean_batch_lanes: 3.25,
+            elements: 15,
+            sustained_elem_per_sec: 1234.5,
+            hw_cycles: 16,
+            queue_us: q(10.0),
+            batch_us: q(20.0),
+            compute_us: q(30.0),
+            encode_us: q(40.0),
+            total_us: q(50.0),
+            tenants: vec![
+                TenantSnapshot {
+                    tenant: "heavy".into(),
+                    requests: 6,
+                    elements: 6000,
+                    shed: 1,
+                    quota_shed: 0,
+                },
+                TenantSnapshot {
+                    tenant: "light".into(),
+                    requests: 3,
+                    elements: 30,
+                    shed: 0,
+                    quota_shed: 2,
+                },
+            ],
+        };
+        let bytes = encode_metrics_response(7, &snapshot);
+        let got = match decode_frame(&bytes[4..]).unwrap() {
+            Frame::MetricsResponse(m) => m,
+            other => panic!("expected metrics response, got {other:?}"),
+        };
+        assert_eq!(got.seq, 7);
+        let s = got.snapshot;
+        assert_eq!(s.uptime, snapshot.uptime);
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 9);
+        assert_eq!(s.gathered_bytes, 8);
+        assert_eq!(s.scalar_route_max_elements, 512);
+        assert_eq!(s.peak_queue_depth, 13);
+        assert_eq!(s.mean_batch_lanes, 3.25);
+        assert_eq!(s.sustained_elem_per_sec, 1234.5);
+        assert_eq!(s.queue_us, snapshot.queue_us);
+        assert_eq!(s.batch_us, snapshot.batch_us);
+        assert_eq!(s.encode_us, snapshot.encode_us);
+        assert_eq!(s.total_us, snapshot.total_us);
+        assert_eq!(s.tenants, snapshot.tenants);
+        // Truncation dies cleanly, like every other frame type.
+        assert!(decode_frame(&bytes[4..bytes.len() - 9]).is_err());
     }
 
     #[test]
@@ -1461,7 +1840,7 @@ mod tests {
         let (rewards, values, done_mask) = random_planes(&mut g, 12, 4);
         let enc = |seq: u64, tenant: &str, r: &[f32]| {
             encode_request(
-                seq, tenant, PlaneCodec::Q8, PlaneCodec::F32, 12, 4, r, &values,
+                seq, tenant, PlaneCodec::Q8, PlaneCodec::F32, 0, 12, 4, r, &values,
                 &done_mask,
             )
             .unwrap()

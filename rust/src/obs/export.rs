@@ -1,0 +1,151 @@
+//! Trace exporters: Chrome-trace/Perfetto JSON and line-delimited JSON.
+//!
+//! The Chrome-trace form is the `traceEvents` array format consumed by
+//! `chrome://tracing` and <https://ui.perfetto.dev>: `B`/`E` duration
+//! events nest per thread track, `i` instants draw markers, and each
+//! event's request trace id rides in `args.trace` (as a hex string —
+//! trace ids are full u64s and would lose bits as a JSON double).
+//! The JSONL form emits one compact object per line for `grep`/`jq`.
+
+use crate::obs::trace::{Event, EventKind};
+use crate::util::json::Json;
+use std::path::Path;
+
+fn phase(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Begin => "B",
+        EventKind::End => "E",
+        EventKind::Instant => "i",
+    }
+}
+
+fn event_json(e: &Event) -> Json {
+    let mut pairs = vec![
+        ("name", Json::from(e.name)),
+        ("ph", Json::from(phase(e.kind))),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::Num(e.tid as f64)),
+        // Chrome-trace timestamps are microseconds (fractional allowed).
+        ("ts", Json::Num(e.ts_ns as f64 / 1000.0)),
+    ];
+    if e.kind == EventKind::Instant {
+        // Thread-scoped instant marker.
+        pairs.push(("s", Json::from("t")));
+    }
+    if e.trace != 0 {
+        pairs.push((
+            "args",
+            Json::obj(vec![("trace", Json::Str(format!("{:#018x}", e.trace)))]),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+/// Build the Chrome-trace document for a batch of events.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events.iter().map(event_json).collect())),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+/// Write [`chrome_trace`] to `path`, creating parent directories.
+pub fn write_chrome_trace(path: &Path, events: &[Event]) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(events).to_string())?;
+    Ok(())
+}
+
+/// One compact JSON object per event, newline-delimited.
+pub fn jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let mut pairs = vec![
+            ("ph", Json::from(phase(e.kind))),
+            ("name", Json::from(e.name)),
+            ("tid", Json::Num(e.tid as f64)),
+            ("ts_ns", Json::Num(e.ts_ns as f64)),
+        ];
+        if e.trace != 0 {
+            pairs.push(("trace", Json::Str(format!("{:#018x}", e.trace))));
+        }
+        out.push_str(&Json::obj(pairs).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write [`jsonl`] to `path`, creating parent directories.
+pub fn write_jsonl(path: &Path, events: &[Event]) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, jsonl(events))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Event> {
+        vec![
+            Event {
+                kind: EventKind::Begin,
+                name: "client.submit",
+                trace: 0xDEAD_BEEF_0000_0001,
+                ts_ns: 1_500,
+                tid: 1,
+            },
+            Event {
+                kind: EventKind::Instant,
+                name: "worker.compute",
+                trace: 0xDEAD_BEEF_0000_0001,
+                ts_ns: 2_000,
+                tid: 2,
+            },
+            Event {
+                kind: EventKind::End,
+                name: "client.submit",
+                trace: 0,
+                ts_ns: 3_000,
+                tid: 1,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_expected_shape() {
+        let doc = chrome_trace(&sample()).to_string();
+        let v = Json::parse(&doc).unwrap();
+        let events = v.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        let b = &events[0];
+        assert_eq!(b.req("ph").unwrap().as_str().unwrap(), "B");
+        assert_eq!(b.req("name").unwrap().as_str().unwrap(), "client.submit");
+        assert_eq!(b.req("ts").unwrap().as_f64().unwrap(), 1.5);
+        let trace = b.req("args").unwrap().req("trace").unwrap();
+        assert_eq!(trace.as_str().unwrap(), "0xdeadbeef00000001");
+        // Instants carry the scope marker; untraced events omit args.
+        assert_eq!(events[1].req("s").unwrap().as_str().unwrap(), "t");
+        assert!(events[2].get("args").is_none());
+    }
+
+    #[test]
+    fn jsonl_emits_one_parseable_line_per_event() {
+        let text = jsonl(&sample());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        assert!(lines[1].contains("worker.compute"));
+        assert!(lines[1].contains("0xdeadbeef00000001"));
+    }
+}

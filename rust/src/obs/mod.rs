@@ -1,0 +1,44 @@
+//! Cross-layer tracing & telemetry: request-scoped spans from wire to
+//! worker, with Chrome-trace export.
+//!
+//! The service stack already aggregates (per-phase histograms in
+//! [`crate::service::metrics`], trainer phase timers in the
+//! coordinator's profiler), but aggregates cannot show *causality*: to
+//! prove the overlapped pipeline actually overlaps, or to find which
+//! stage delayed one slow request, you need the decode, quota, cache,
+//! queue-wait, batch, compute, encode, and write of a **single request**
+//! on one timeline — even when a fabric failover moved the request
+//! between shards mid-flight.
+//!
+//! Design, in the order the constraints force it:
+//!
+//! - **Disabled means free.** Tracing is compiled in everywhere
+//!   (including the worker slab hot path, which carries a zero-allocation
+//!   guarantee), so the disabled path must be a single `Relaxed` atomic
+//!   load and nothing else — no thread-local touch, no timestamp, no
+//!   allocation. `benches/trace_overhead.rs` enforces this.
+//! - **Enabled means bounded.** Each recording thread owns a
+//!   fixed-capacity ring ([`trace::RING_CAPACITY`] events, preallocated
+//!   on first record) that overwrites its oldest entry when full.
+//!   Steady-state recording allocates nothing: events are `Copy` and
+//!   span names are `&'static str`.
+//! - **Trace ids ride the wire.** A request-scoped id is minted at
+//!   client submit ([`trace::mint_trace_id`]) and carried in the wire
+//!   frame *header* behind a flag bit — outside the hashed payload, so
+//!   identical payloads still share a response-cache entry — then
+//!   propagated through the net server, the service queue, the batcher,
+//!   the worker, and echoed back in the response. The fabric router
+//!   reuses one id across failover attempts, so both serving-shard
+//!   attempts land on the same timeline.
+//!
+//! Exporters ([`export`]) emit Chrome-trace/Perfetto JSON (open in
+//! `chrome://tracing` or <https://ui.perfetto.dev>) and line-delimited
+//! JSON for ad-hoc grepping; both tag events with their trace id.
+
+pub mod export;
+pub mod trace;
+
+pub use trace::{
+    enabled, instant, mint_trace_id, set_enabled, span, span_begin, span_end,
+    take_events, Event, EventKind, Span,
+};

@@ -1,0 +1,319 @@
+//! Span recording: per-thread bounded rings behind one global switch.
+//!
+//! The recording fast path is deliberately two-tier. When tracing is
+//! disabled (the default), every instrumentation site reduces to one
+//! `Relaxed` load of [`ENABLED`] — no thread-local access, no clock
+//! read — so instrumented hot loops keep their zero-overhead and
+//! zero-allocation guarantees. When enabled, a thread's first record
+//! registers a preallocated fixed-capacity ring in a global registry;
+//! every later record is a clock read plus an uncontended mutex push
+//! into that ring, overwriting the oldest event once full (tracing a
+//! long run bounds memory instead of growing it).
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Events each recording thread retains before overwriting its oldest.
+pub const RING_CAPACITY: usize = 8192;
+
+/// What one recorded event marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A span opened (matched by an [`EventKind::End`] with the same
+    /// name on the same thread).
+    Begin,
+    /// A span closed.
+    End,
+    /// A point event with no duration.
+    Instant,
+}
+
+/// One recorded trace event. `Copy` with a `&'static str` name so the
+/// record path never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub kind: EventKind,
+    pub name: &'static str,
+    /// Request-scoped trace id; `0` = not tied to a request.
+    pub trace: u64,
+    /// Nanoseconds since the process trace epoch (first clock use).
+    pub ts_ns: u64,
+    /// Recorder-assigned thread id (dense, starts at 1).
+    pub tid: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing on? One `Relaxed` load — this is the entire cost of an
+/// instrumentation site while tracing is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch recording on or off (off drops nothing already recorded).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process trace epoch.
+fn now_ns() -> u64 {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().saturating_duration_since(epoch).as_nanos() as u64
+}
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+static TRACE_SEED: OnceLock<u64> = OnceLock::new();
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(0);
+
+/// Mint a fresh nonzero request-scoped trace id: a process-unique seed
+/// (wall clock × pid, mixed) combined with a monotonic counter, so ids
+/// from concurrent clients almost never collide and `0` stays reserved
+/// for "untraced".
+pub fn mint_trace_id() -> u64 {
+    let seed = *TRACE_SEED.get_or_init(|| {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        splitmix64(nanos ^ ((std::process::id() as u64) << 32))
+    });
+    let n = NEXT_TRACE.fetch_add(1, Ordering::Relaxed);
+    splitmix64(seed ^ n).max(1)
+}
+
+/// One thread's bounded event ring.
+struct Ring {
+    events: Vec<Event>,
+    /// Next overwrite index once the ring is full.
+    head: usize,
+    /// Events overwritten since the last drain.
+    dropped: u64,
+}
+
+struct ThreadRecorder {
+    tid: u64,
+    ring: Mutex<Ring>,
+}
+
+/// Every thread that ever recorded. Recorders outlive their threads
+/// (the `Arc` keeps a dead thread's tail drainable) and the list is
+/// bounded by the number of threads the process ever spawned.
+static REGISTRY: Mutex<Vec<Arc<ThreadRecorder>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<ThreadRecorder>> = const { OnceCell::new() };
+}
+
+fn record(kind: EventKind, name: &'static str, trace: u64) {
+    let ts_ns = now_ns();
+    LOCAL.with(|cell| {
+        let rec = cell.get_or_init(|| {
+            let rec = Arc::new(ThreadRecorder {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                ring: Mutex::new(Ring {
+                    events: Vec::with_capacity(RING_CAPACITY),
+                    head: 0,
+                    dropped: 0,
+                }),
+            });
+            REGISTRY.lock().unwrap().push(Arc::clone(&rec));
+            rec
+        });
+        let mut ring = rec.ring.lock().unwrap();
+        let e = Event { kind, name, trace, ts_ns, tid: rec.tid };
+        if ring.events.len() < RING_CAPACITY {
+            ring.events.push(e);
+        } else {
+            let head = ring.head;
+            ring.events[head] = e;
+            ring.head = (head + 1) % RING_CAPACITY;
+            ring.dropped += 1;
+        }
+    });
+}
+
+/// Record a span opening (no-op while disabled).
+#[inline]
+pub fn span_begin(name: &'static str, trace: u64) {
+    if enabled() {
+        record(EventKind::Begin, name, trace);
+    }
+}
+
+/// Record a span closing (no-op while disabled).
+#[inline]
+pub fn span_end(name: &'static str, trace: u64) {
+    if enabled() {
+        record(EventKind::End, name, trace);
+    }
+}
+
+/// Record a point event (no-op while disabled).
+#[inline]
+pub fn instant(name: &'static str, trace: u64) {
+    if enabled() {
+        record(EventKind::Instant, name, trace);
+    }
+}
+
+/// RAII span: begins on construction, ends on drop. Remembers whether
+/// it actually opened, so flipping tracing on mid-span cannot emit an
+/// unmatched `End`.
+pub struct Span {
+    name: &'static str,
+    trace: u64,
+    armed: bool,
+}
+
+/// Open a scope-bound span (no-op guard while disabled).
+#[inline]
+pub fn span(name: &'static str, trace: u64) -> Span {
+    let armed = enabled();
+    if armed {
+        record(EventKind::Begin, name, trace);
+    }
+    Span { name, trace, armed }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            record(EventKind::End, self.name, self.trace);
+        }
+    }
+}
+
+/// Drain every thread's ring: returns all retained events sorted by
+/// timestamp and leaves the rings empty (capacity kept, so draining
+/// does not disturb the steady-state no-allocation property).
+pub fn take_events() -> Vec<Event> {
+    let recorders: Vec<Arc<ThreadRecorder>> = REGISTRY.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for rec in recorders {
+        let mut ring = rec.ring.lock().unwrap();
+        let head = ring.head;
+        if ring.events.len() == RING_CAPACITY && head > 0 {
+            out.extend_from_slice(&ring.events[head..]);
+            out.extend_from_slice(&ring.events[..head]);
+        } else {
+            out.extend_from_slice(&ring.events);
+        }
+        ring.events.clear();
+        ring.head = 0;
+    }
+    out.sort_by_key(|e| e.ts_ns);
+    out
+}
+
+/// Total events overwritten (ring full) since the process started.
+pub fn dropped_events() -> u64 {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|r| r.ring.lock().unwrap().dropped)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global; every test that records or
+    // drains must hold this lock so parallel test threads don't steal
+    // each other's events.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_enabled(false);
+        let _ = take_events();
+        span_begin("t.off", 7);
+        instant("t.off", 7);
+        span_end("t.off", 7);
+        {
+            let _s = span("t.off.guard", 7);
+        }
+        assert!(take_events().is_empty());
+    }
+
+    #[test]
+    fn spans_and_instants_round_trip_with_their_trace_id() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_enabled(true);
+        let _ = take_events();
+        let trace = mint_trace_id();
+        span_begin("t.work", trace);
+        instant("t.mark", trace);
+        span_end("t.work", trace);
+        set_enabled(false);
+        let events = take_events();
+        let mine: Vec<&Event> =
+            events.iter().filter(|e| e.trace == trace).collect();
+        assert_eq!(mine.len(), 3, "{events:?}");
+        assert_eq!(mine[0].kind, EventKind::Begin);
+        assert_eq!(mine[1].kind, EventKind::Instant);
+        assert_eq!(mine[2].kind, EventKind::End);
+        assert!(mine[0].ts_ns <= mine[1].ts_ns && mine[1].ts_ns <= mine[2].ts_ns);
+        assert_eq!(mine[0].name, "t.work");
+    }
+
+    #[test]
+    fn guard_armed_at_open_does_not_emit_unmatched_end() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_enabled(false);
+        let _ = take_events();
+        let s = span("t.mid", 3);
+        set_enabled(true); // flipped on mid-span
+        drop(s);
+        set_enabled(false);
+        assert!(
+            take_events().iter().all(|e| e.name != "t.mid"),
+            "a span opened while disabled must not close into the ring"
+        );
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_stays_bounded() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_enabled(true);
+        let _ = take_events();
+        let before = dropped_events();
+        for i in 0..(RING_CAPACITY + 64) {
+            instant(if i < 64 { "t.old" } else { "t.new" }, 0);
+        }
+        set_enabled(false);
+        let events: Vec<Event> = take_events()
+            .into_iter()
+            .filter(|e| e.name == "t.old" || e.name == "t.new")
+            .collect();
+        assert!(events.len() <= RING_CAPACITY);
+        assert!(dropped_events() >= before + 64);
+        // The oldest 64 were the ones overwritten.
+        assert!(events.iter().all(|e| e.name == "t.new"), "oldest must go first");
+        // Chronological order survives the wrap.
+        assert!(events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+    }
+
+    #[test]
+    fn minted_ids_are_nonzero_and_distinct() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+}

@@ -7,8 +7,8 @@
 //! fixed-bin substrate the quantizer diagnostics use). Quantiles come
 //! from [`Histogram::quantile`] and are exponentiated back to µs.
 //!
-//! Everything is shared-state-cheap: counters are atomics; the three
-//! histograms sit behind one short-critical-section mutex.
+//! Everything is shared-state-cheap: counters are atomics; the
+//! per-phase histograms sit behind one short-critical-section mutex.
 
 use crate::service::request::RequestTiming;
 use crate::stats::Histogram;
@@ -82,7 +82,9 @@ fn unlog_us(x: f64) -> f64 {
 
 struct PhaseHists {
     queue_us: Histogram,
+    batch_us: Histogram,
     compute_us: Histogram,
+    encode_us: Histogram,
     total_us: Histogram,
 }
 
@@ -90,7 +92,9 @@ impl PhaseHists {
     fn new() -> Self {
         PhaseHists {
             queue_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
+            batch_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
             compute_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
+            encode_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
             total_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
         }
     }
@@ -235,13 +239,23 @@ impl ServiceMetrics {
 
     /// One request finished; `elements` = GAE elements it carried. The
     /// compute phase is recorded per *group* in
-    /// [`ServiceMetrics::record_batch`], not here.
+    /// [`ServiceMetrics::record_batch`], not here; the encode phase per
+    /// wire frame in [`ServiceMetrics::record_encode`], since the worker
+    /// has already sent the timing by the time a frame is built.
     pub(crate) fn record_completion(&self, elements: usize, timing: &RequestTiming) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(elements as u64, Ordering::Relaxed);
         let mut h = self.hists.lock().unwrap();
         h.queue_us.push(log_us(timing.queue));
+        h.batch_us.push(log_us(timing.batch));
         h.total_us.push(log_us(timing.total));
+    }
+
+    /// The network front-end encoded one response frame in `encode` —
+    /// the only phase the worker cannot time itself (the frame is built
+    /// after the worker's reply is sent).
+    pub(crate) fn record_encode(&self, encode: Duration) {
+        self.hists.lock().unwrap().encode_us.push(log_us(encode));
     }
 
     pub fn completed(&self) -> u64 {
@@ -305,7 +319,9 @@ impl ServiceMetrics {
             sustained_elem_per_sec: elements as f64 / uptime.as_secs_f64().max(1e-9),
             hw_cycles: self.hw_cycles.load(Ordering::Relaxed),
             queue_us: LatencyQuantiles::of(&h.queue_us),
+            batch_us: LatencyQuantiles::of(&h.batch_us),
             compute_us: LatencyQuantiles::of(&h.compute_us),
+            encode_us: LatencyQuantiles::of(&h.encode_us),
             total_us: LatencyQuantiles::of(&h.total_us),
         }
     }
@@ -395,7 +411,12 @@ pub struct MetricsSnapshot {
     /// Accumulated simulated accelerator cycles (hwsim backend).
     pub hw_cycles: u64,
     pub queue_us: LatencyQuantiles,
+    /// Batch-assembly wait: pickup → backend compute start.
+    pub batch_us: LatencyQuantiles,
     pub compute_us: LatencyQuantiles,
+    /// Response-frame wire encode (network front-end only; in-process
+    /// submissions move their responses and record nothing here).
+    pub encode_us: LatencyQuantiles,
     pub total_us: LatencyQuantiles,
     /// Per-tenant breakdown, heaviest (by elements) first. Covers
     /// tenant-attributed traffic only (network front-end, fabric);
@@ -441,12 +462,14 @@ impl std::fmt::Display for MetricsSnapshot {
         }
         writeln!(
             f,
-            "latency (µs): total p50 {:.0}  p95 {:.0}  p99 {:.0} | queue p50 {:.0} | compute p50 {:.0}",
+            "latency (µs): total p50 {:.0}  p95 {:.0}  p99 {:.0} | queue p50 {:.0} | batch p50 {:.0} | compute p50 {:.0} | encode p50 {:.0}",
             self.total_us.p50,
             self.total_us.p95,
             self.total_us.p99,
             self.queue_us.p50,
-            self.compute_us.p50
+            self.batch_us.p50,
+            self.compute_us.p50,
+            self.encode_us.p50
         )?;
         write!(
             f,
@@ -465,8 +488,10 @@ mod tests {
     fn timing(queue_us: u64, compute_us: u64) -> RequestTiming {
         RequestTiming {
             queue: Duration::from_micros(queue_us),
+            batch: Duration::ZERO,
             compute: Duration::from_micros(compute_us),
             group_compute: Duration::from_micros(compute_us),
+            encode: Duration::ZERO,
             total: Duration::from_micros(queue_us + compute_us),
         }
     }
@@ -544,6 +569,46 @@ mod tests {
         // The most recently touched tenant survived.
         let last = format!("t{}", MAX_TENANT_STATS + 7);
         assert!(s.tenants.iter().any(|t| t.tenant == last));
+    }
+
+    #[test]
+    fn lru_eviction_removes_the_longest_untouched_tenant() {
+        let m = ServiceMetrics::new();
+        for i in 0..MAX_TENANT_STATS {
+            m.record_tenant_request(&format!("t{i}"), 1);
+        }
+        // Refresh the oldest tenant; "t1" becomes the stalest.
+        m.record_tenant_request("t0", 1);
+        // A new tenant at the cap evicts the stalest — not the refreshed one.
+        m.record_tenant_request("fresh", 1);
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.tenants.len(), MAX_TENANT_STATS);
+        assert!(s.tenants.iter().any(|t| t.tenant == "t0"), "refreshed must survive");
+        assert!(s.tenants.iter().any(|t| t.tenant == "fresh"));
+        assert!(
+            !s.tenants.iter().any(|t| t.tenant == "t1"),
+            "the longest-untouched tenant must be the one evicted"
+        );
+    }
+
+    #[test]
+    fn batch_and_encode_phases_have_their_own_histograms() {
+        let m = ServiceMetrics::new();
+        let t = RequestTiming {
+            queue: Duration::from_micros(10),
+            batch: Duration::from_micros(300),
+            compute: Duration::from_micros(40),
+            group_compute: Duration::from_micros(40),
+            encode: Duration::ZERO,
+            total: Duration::from_micros(400),
+        };
+        m.record_completion(1, &t);
+        m.record_encode(Duration::from_micros(70));
+        let s = m.snapshot(SnapshotInputs::default());
+        assert!((250.0..400.0).contains(&s.batch_us.p50), "batch p50 = {}", s.batch_us.p50);
+        assert!((55.0..90.0).contains(&s.encode_us.p50), "encode p50 = {}", s.encode_us.p50);
+        let text = s.to_string();
+        assert!(text.contains("batch p50") && text.contains("encode p50"), "{text}");
     }
 
     #[test]

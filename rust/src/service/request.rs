@@ -12,11 +12,18 @@ use std::fmt;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Per-phase timing of one request's trip through the service.
+/// Per-phase timing of one request's trip through the service: the
+/// full queue → batch → compute → encode breakdown that
+/// [`MetricsSnapshot`](crate::service::metrics::MetricsSnapshot)
+/// histograms per phase.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestTiming {
     /// Enqueue → picked up by a worker (queueing delay).
     pub queue: Duration,
+    /// Pickup → backend compute start: the batch-assembly wait, i.e.
+    /// the time this request's coalesced group spent being gathered
+    /// into tiles before the backend ran.
+    pub batch: Duration,
     /// This request's share of the coalesced group's backend compute,
     /// pro-rated by element count. The whole group computes at once, so
     /// attributing [`RequestTiming::group_compute`] to every member
@@ -26,6 +33,12 @@ pub struct RequestTiming {
     /// in — identical for every member of the group. The service-level
     /// compute histogram records this once per group, not per request.
     pub group_compute: Duration,
+    /// Response-encode time. Zero for in-process submissions (the
+    /// response is moved, not encoded); the network front-end measures
+    /// its wire encode separately and records it into the encode
+    /// histogram, since the worker has already sent this struct by the
+    /// time the frame is built.
+    pub encode: Duration,
     /// Enqueue → response sent.
     pub total: Duration,
 }
@@ -145,6 +158,10 @@ pub(crate) struct WorkItem {
     /// Cached `lanes.len()` — the batcher's lane budget unit.
     pub lane_count: usize,
     pub enqueued_at: Instant,
+    /// Request-scoped trace id ([`crate::obs`]); `0` = untraced. Rides
+    /// the item through queue → batcher → worker so worker-side spans
+    /// join the submitting request's timeline.
+    pub trace: u64,
     pub tx: mpsc::Sender<GaeResponse>,
 }
 
@@ -184,8 +201,10 @@ mod tests {
             batch_seq: 0,
             timing: RequestTiming {
                 queue: Duration::ZERO,
+                batch: Duration::ZERO,
                 compute: Duration::ZERO,
                 group_compute: Duration::ZERO,
+                encode: Duration::ZERO,
                 total: Duration::ZERO,
             },
         })

@@ -120,22 +120,29 @@ impl GaeService {
     fn make_item(
         &self,
         lanes: Vec<Lane>,
+        trace: u64,
     ) -> Result<(WorkItem, mpsc::Receiver<GaeResponse>), ServiceError> {
         if lanes.is_empty() || lanes.iter().any(|l| l.is_empty()) {
             return Err(ServiceError::EmptyRequest);
         }
         self.metrics.record_submitted();
+        crate::obs::instant("service.enqueue", trace);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let lane_count = lanes.len();
-        let item = WorkItem { id, lanes, lane_count, enqueued_at: Instant::now(), tx };
+        let item =
+            WorkItem { id, lanes, lane_count, enqueued_at: Instant::now(), trace, tx };
         Ok((item, rx))
     }
 
     /// Fail-fast admission of a prepared lane set (shared by the public
     /// trajectory path and the plane-column path).
-    fn enqueue_lanes(&self, lanes: Vec<Lane>) -> Result<ResponseHandle, ServiceError> {
-        let (item, rx) = self.make_item(lanes)?;
+    fn enqueue_lanes(
+        &self,
+        lanes: Vec<Lane>,
+        trace: u64,
+    ) -> Result<ResponseHandle, ServiceError> {
+        let (item, rx) = self.make_item(lanes, trace)?;
         let id = item.id;
         match self.queue.try_push(item) {
             Ok(()) => Ok(ResponseHandle { id, rx }),
@@ -157,8 +164,9 @@ impl GaeService {
     fn enqueue_lanes_blocking(
         &self,
         lanes: Vec<Lane>,
+        trace: u64,
     ) -> Result<ResponseHandle, ServiceError> {
-        let (item, rx) = self.make_item(lanes)?;
+        let (item, rx) = self.make_item(lanes, trace)?;
         let id = item.id;
         match self.queue.push(item) {
             Ok(()) => Ok(ResponseHandle { id, rx }),
@@ -176,7 +184,10 @@ impl GaeService {
         &self,
         trajectories: Vec<Trajectory>,
     ) -> Result<ResponseHandle, ServiceError> {
-        self.enqueue_lanes(trajectories.into_iter().map(Lane::Owned).collect())
+        self.enqueue_lanes(
+            trajectories.into_iter().map(Lane::Owned).collect(),
+            auto_trace(),
+        )
     }
 
     /// Admit with **backpressure**: block until a queue slot frees
@@ -186,7 +197,10 @@ impl GaeService {
         &self,
         trajectories: Vec<Trajectory>,
     ) -> Result<ResponseHandle, ServiceError> {
-        self.enqueue_lanes_blocking(trajectories.into_iter().map(Lane::Owned).collect())
+        self.enqueue_lanes_blocking(
+            trajectories.into_iter().map(Lane::Owned).collect(),
+            auto_trace(),
+        )
     }
 
     /// Synchronous fail-fast request: admit (or shed), wait, return.
@@ -270,7 +284,20 @@ impl GaeService {
         &self,
         planes: PlaneSet,
     ) -> Result<PlanesPending, ServiceError> {
-        self.submit_plane_set_inner(planes, true)
+        self.submit_plane_set_inner(planes, true, auto_trace())
+    }
+
+    /// [`GaeService::submit_plane_set`] under a caller-supplied trace id
+    /// (`0` = untraced): every column's queue → worker journey records
+    /// into that request's timeline. The network front-end and the
+    /// fabric use this so one id spans the whole wire-to-worker path
+    /// (and survives fabric failover retries).
+    pub fn submit_plane_set_traced(
+        &self,
+        planes: PlaneSet,
+        trace: u64,
+    ) -> Result<PlanesPending, ServiceError> {
+        self.submit_plane_set_inner(planes, true, trace)
     }
 
     /// Fail-fast variant of [`GaeService::submit_plane_set`]: sheds with
@@ -282,13 +309,24 @@ impl GaeService {
         &self,
         planes: PlaneSet,
     ) -> Result<PlanesPending, ServiceError> {
-        self.submit_plane_set_inner(planes, false)
+        self.submit_plane_set_inner(planes, false, auto_trace())
+    }
+
+    /// Fail-fast plane submission under a caller-supplied trace id —
+    /// the traced twin of [`GaeService::try_submit_plane_set`].
+    pub fn try_submit_plane_set_traced(
+        &self,
+        planes: PlaneSet,
+        trace: u64,
+    ) -> Result<PlanesPending, ServiceError> {
+        self.submit_plane_set_inner(planes, false, trace)
     }
 
     fn submit_plane_set_inner(
         &self,
         planes: PlaneSet,
         blocking: bool,
+        trace: u64,
     ) -> Result<PlanesPending, ServiceError> {
         let (t_len, batch) = (planes.t_len, planes.batch);
         let planes = Arc::new(planes);
@@ -296,9 +334,9 @@ impl GaeService {
         for col in 0..batch {
             let lane = Lane::Column { planes: Arc::clone(&planes), col };
             let handle = if blocking {
-                self.enqueue_lanes_blocking(vec![lane])?
+                self.enqueue_lanes_blocking(vec![lane], trace)?
             } else {
-                self.enqueue_lanes(vec![lane])?
+                self.enqueue_lanes(vec![lane], trace)?
             };
             handles.push(handle);
         }
@@ -359,6 +397,18 @@ impl GaeService {
 impl Drop for GaeService {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// Trace id for submissions whose caller did not supply one: mint a
+/// fresh id while tracing is on (each in-process request gets its own
+/// timeline), `0` (untraced) otherwise — so the disabled path stays one
+/// relaxed load.
+fn auto_trace() -> u64 {
+    if crate::obs::enabled() {
+        crate::obs::mint_trace_id()
+    } else {
+        0
     }
 }
 
@@ -607,8 +657,10 @@ mod tests {
                 batch_seq,
                 timing: RequestTiming {
                     queue: Duration::ZERO,
+                    batch: Duration::ZERO,
                     compute: Duration::ZERO,
                     group_compute: Duration::ZERO,
+                    encode: Duration::ZERO,
                     total: Duration::ZERO,
                 },
             })

@@ -82,6 +82,11 @@ fn process_group(
     batch_seq: u64,
 ) {
     let picked_at = Instant::now();
+    // One span per coalesced group, on the first traced member's
+    // timeline (groups mix requests; the batch itself has no id of its
+    // own). Per-member attribution rides the `worker.compute` instants.
+    let group_trace = group.iter().map(|i| i.trace).find(|&t| t != 0).unwrap_or(0);
+    let _batch_span = crate::obs::span("worker.batch", group_trace);
     // Move (not gather) every item's lanes into the reusable flat list;
     // `lane_count` stays behind on the item for the response split.
     let mut flat = std::mem::take(&mut scratch.flat);
@@ -116,10 +121,17 @@ fn process_group(
         } else {
             elements as f64 / group_elements as f64
         };
+        if item.trace != 0 {
+            crate::obs::instant("worker.compute", item.trace);
+        }
         let timing = RequestTiming {
             queue: picked_at.duration_since(item.enqueued_at),
+            batch: compute_start.duration_since(picked_at),
             compute: compute.mul_f64(share),
             group_compute: compute,
+            // The worker never encodes; the net front-end records its
+            // wire encode into the histogram directly.
+            encode: std::time::Duration::ZERO,
             total: item.enqueued_at.elapsed(),
         };
         ctx.metrics.record_completion(elements, &timing);
@@ -540,6 +552,7 @@ mod tests {
                 lanes: vec![Lane::Owned(traj)],
                 lane_count: 1,
                 enqueued_at: Instant::now(),
+                trace: 0,
                 tx,
             });
         }

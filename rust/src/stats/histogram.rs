@@ -155,6 +155,54 @@ mod tests {
     }
 
     #[test]
+    fn quantile_of_empty_histogram_is_zero() {
+        let h = Histogram::new(0.0, 100.0, 10);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_of_single_sample_lands_in_its_bin() {
+        let mut h = Histogram::new(0.0, 100.0, 10);
+        h.push(37.0);
+        // Every quantile of a one-sample histogram must fall inside the
+        // covering bin [30, 40) — interpolation cannot escape it.
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!((30.0..=40.0).contains(&v), "q={q} gave {v}");
+        }
+        // q=0 short-circuits through the underflow check to lo.
+        assert_eq!(h.quantile(0.0), 0.0);
+    }
+
+    #[test]
+    fn quantile_with_saturated_top_bucket_stays_clamped() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        // All mass in the last in-range bin plus heavy overflow: the
+        // estimate must never exceed hi, and high quantiles must not
+        // fall below the saturated bin's lower edge.
+        for _ in 0..100 {
+            h.push(9.5);
+        }
+        for _ in 0..900 {
+            h.push(1e9);
+        }
+        for q in [0.5, 0.95, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(v <= 10.0, "q={q} escaped the range: {v}");
+            assert!(v >= 9.0, "q={q} fell below the top bucket: {v}");
+        }
+        // Mass entirely past the top edge: everything clamps to hi.
+        let mut all_over = Histogram::new(0.0, 10.0, 10);
+        for _ in 0..10 {
+            all_over.push(100.0);
+        }
+        assert_eq!(all_over.quantile(0.5), 10.0);
+        assert_eq!(all_over.quantile(1.0), 10.0);
+    }
+
+    #[test]
     fn bin_centers() {
         let h = Histogram::new(0.0, 1.0, 4);
         assert!((h.bin_center(0) - 0.125).abs() < 1e-12);

@@ -3,7 +3,7 @@
 //! Controlled by `HEPPO_LOG` (error|warn|info|debug|trace, default info)
 //! or programmatically via [`set_level`].
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 
 /// Log severity, ordered.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -17,13 +17,29 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 
+/// Set once the first unrecognized `HEPPO_LOG` value has been reported,
+/// so a typo warns exactly once instead of on every lazy init race.
+static WARNED_BAD_LEVEL: AtomicBool = AtomicBool::new(false);
+
 fn env_level() -> Level {
     match std::env::var("HEPPO_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok(other) => {
+            // A typo'd HEPPO_LOG used to silently mean "info"; say so
+            // once so a missing debug stream is diagnosable.
+            if !WARNED_BAD_LEVEL.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "[heppo WARN ] unrecognized HEPPO_LOG={other:?} \
+                     (valid: error|warn|info|debug|trace); defaulting to info"
+                );
+            }
+            Level::Info
+        }
+        Err(_) => Level::Info,
     }
 }
 
@@ -71,6 +87,8 @@ macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util
 macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {
@@ -88,5 +106,16 @@ mod tests {
         assert_eq!(level(), Level::Debug);
         set_level(Level::Info);
         assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn trace_macro_gates_on_level() {
+        // Compiles and routes through the same gate as the other
+        // macros; suppressed below Trace, emitted at Trace.
+        set_level(Level::Error);
+        crate::log_trace!("suppressed: {}", 42);
+        set_level(Level::Trace);
+        crate::log_trace!("emitted at trace");
+        set_level(Level::Info);
     }
 }

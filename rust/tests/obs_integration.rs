@@ -1,0 +1,305 @@
+//! Integration of the cross-layer tracing subsystem ([`heppo::obs`]):
+//! one net-loopback request produces a single connected span tree —
+//! client submit → wire decode → queue → batch → worker compute →
+//! encode → client complete — sharing one trace id; a forced fabric
+//! failover keeps both serving-shard attempts on that one timeline; and
+//! the fleet view pulls full remote [`MetricsSnapshot`]s over the wire
+//! metrics RPC.
+//!
+//! The span recorder and its drain ([`heppo::obs::take_events`]) are
+//! process-global, so every test here serializes on [`OBS_LOCK`] and
+//! drains the rings before and after its traced section.
+
+use heppo::coordinator::GaeBackend;
+use heppo::fabric::{
+    ClientPool, FabricConfig, GaeFabric, PoolConfig, ShardBackend,
+};
+use heppo::net::{
+    NetClient, NetClientConfig, NetServer, NetServerConfig, PlaneCodec,
+};
+use heppo::obs::{Event, EventKind};
+use heppo::quant::CodecKind;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::util::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Serializes every test that enables tracing or drains the rings.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers,
+            backend,
+            queue_capacity,
+            batcher: BatcherConfig {
+                max_batch_lanes: 64,
+                tile_lanes: 16,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: Default::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn f32_client(addr: &str) -> NetClient {
+    NetClient::connect(
+        addr,
+        NetClientConfig {
+            tenant: "test".to_string(),
+            codec: CodecKind::Exp1Baseline,
+            bits: 8,
+            resp: PlaneCodec::F32,
+        },
+    )
+    .unwrap()
+}
+
+fn planes(seed: u64, t_len: usize, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut rewards = vec![0.0f32; t_len * batch];
+    let mut values = vec![0.0f32; (t_len + 1) * batch];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let done_mask = (0..t_len * batch)
+        .map(|_| if rng.uniform() < 0.05 { 1.0 } else { 0.0 })
+        .collect();
+    (rewards, values, done_mask)
+}
+
+fn events_named<'a>(events: &'a [Event], trace: u64, name: &str) -> Vec<&'a Event> {
+    events
+        .iter()
+        .filter(|e| e.trace == trace && e.name == name)
+        .collect()
+}
+
+#[test]
+fn one_loopback_request_is_one_connected_span_tree() {
+    let _g = obs_guard();
+    let svc = service(2, GaeBackend::Scalar, 256);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let client = f32_client(&server.local_addr().to_string());
+
+    heppo::obs::take_events(); // discard anything from earlier activity
+    heppo::obs::set_enabled(true);
+    let (t_len, batch) = (16, 4);
+    let (rewards, values, done_mask) = planes(11, t_len, batch);
+    let gae = client
+        .submit_planes(t_len, batch, &rewards, &values, &done_mask)
+        .unwrap()
+        .wait()
+        .unwrap();
+    heppo::obs::set_enabled(false);
+    assert_eq!(gae.advantages.len(), t_len * batch);
+
+    let events = heppo::obs::take_events();
+    // Exactly one request was submitted while tracing was on; its trace
+    // id is the one on the client.submit span.
+    let submits: Vec<&Event> = events
+        .iter()
+        .filter(|e| e.name == "client.submit" && e.kind == EventKind::Begin)
+        .collect();
+    assert_eq!(submits.len(), 1, "one traced submit, got {submits:?}");
+    let trace = submits[0].trace;
+    assert_ne!(trace, 0, "an enabled submit must mint a nonzero trace id");
+
+    // Every stage of the request's life shares that id.
+    for name in [
+        "client.submit",
+        "server.decode",
+        "server.admit",
+        "server.enqueue",
+        "service.enqueue",
+        "worker.compute",
+        "server.encode",
+        "client.complete",
+    ] {
+        assert!(
+            !events_named(&events, trace, name).is_empty(),
+            "stage {name} missing from trace {trace:#x}: {events:?}"
+        );
+    }
+    // The worker group span joined the same timeline.
+    assert!(
+        !events_named(&events, trace, "worker.batch").is_empty(),
+        "worker.batch must carry the first traced member's id"
+    );
+    // Causal order holds across threads (all timestamps share the
+    // process trace epoch).
+    let ts = |name: &str| events_named(&events, trace, name)[0].ts_ns;
+    let submit_ts = ts("client.submit");
+    let complete_ts = ts("client.complete");
+    assert!(submit_ts <= ts("server.decode"), "submit before decode");
+    assert!(ts("server.decode") <= complete_ts, "decode before complete");
+    assert!(submit_ts <= ts("worker.compute"), "submit before compute");
+    assert!(ts("worker.compute") <= complete_ts, "compute before complete");
+    // At least two distinct threads contributed (client + server side).
+    let tids: std::collections::HashSet<u64> =
+        events.iter().filter(|e| e.trace == trace).map(|e| e.tid).collect();
+    assert!(tids.len() >= 2, "span tree must cross threads: {tids:?}");
+
+    // The client saw the traced frame and measured its round trip.
+    let stats = client.wire_stats();
+    assert_eq!(stats.traced_frames, 1);
+    assert!(stats.rtt_count >= 1);
+
+    // Export the tree — CI uploads this as the `trace-sample` artifact.
+    heppo::obs::export::write_chrome_trace(
+        std::path::Path::new("results/trace_sample.json"),
+        &events,
+    )
+    .unwrap();
+    let json = std::fs::read_to_string("results/trace_sample.json").unwrap();
+    assert!(json.contains("traceEvents") && json.contains("client.submit"));
+
+    server.shutdown();
+}
+
+#[test]
+fn a_forced_failover_keeps_both_attempts_on_one_timeline() {
+    let _g = obs_guard();
+    let services: Vec<Arc<GaeService>> =
+        (0..2).map(|_| service(1, GaeBackend::Scalar, 256)).collect();
+    let slots = services
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (format!("shard-{i}"), ShardBackend::in_process(Arc::clone(s))))
+        .collect();
+    let fabric = GaeFabric::new(slots, FabricConfig::default()).unwrap();
+
+    // Pick a key whose primary is shard 0, then kill shard 0 so the
+    // request must attempt it, fail, and spill to shard 1.
+    let key = (0..1024u64)
+        .find(|&k| fabric.rank("t", k)[0] == 0)
+        .expect("some key must rank shard 0 first");
+    services[0].begin_shutdown();
+
+    heppo::obs::take_events();
+    heppo::obs::set_enabled(true);
+    let (t_len, batch) = (12, 2);
+    let (rewards, values, done_mask) = planes(23, t_len, batch);
+    let gae = fabric
+        .call("t", key, t_len, batch, rewards, values, done_mask)
+        .expect("the surviving shard must serve the request");
+    heppo::obs::set_enabled(false);
+    assert_eq!(gae.shard, 1);
+    assert!(gae.failovers >= 1);
+
+    let events = heppo::obs::take_events();
+    let attempts: Vec<&Event> =
+        events.iter().filter(|e| e.name == "fabric.attempt").collect();
+    assert!(!attempts.is_empty());
+    let trace = attempts[0].trace;
+    assert_ne!(trace, 0);
+    assert!(
+        attempts.iter().all(|e| e.trace == trace),
+        "one request, one trace id across shard attempts: {attempts:?}"
+    );
+    assert!(
+        attempts.len() >= 2,
+        "dead primary + survivor = at least two attempts: {attempts:?}"
+    );
+    // The compute on the surviving shard landed on the same timeline as
+    // the failed first attempt.
+    assert!(
+        !events_named(&events, trace, "worker.compute").is_empty(),
+        "survivor's compute must join the request's trace: {events:?}"
+    );
+    assert!(!events_named(&events, trace, "service.enqueue").is_empty());
+}
+
+#[test]
+fn fleet_view_pulls_remote_snapshots_over_the_metrics_rpc() {
+    let remote_svc = service(1, GaeBackend::Scalar, 256);
+    let server = NetServer::start(
+        Arc::clone(&remote_svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let local_svc = service(1, GaeBackend::Scalar, 256);
+    let fabric = GaeFabric::new(
+        vec![
+            (
+                "remote-0".to_string(),
+                ShardBackend::remote(
+                    &server.local_addr().to_string(),
+                    PoolConfig {
+                        sockets: 1,
+                        codec: PlaneCodec::F32,
+                        resp: PlaneCodec::F32,
+                    },
+                )
+                .unwrap(),
+            ),
+            ("local-0".to_string(), ShardBackend::in_process(local_svc)),
+        ],
+        FabricConfig::default(),
+    )
+    .unwrap();
+
+    // Deterministically land at least one request on each shard: for
+    // each shard, find a key whose rank prefers it.
+    let (t_len, batch) = (10, 3);
+    for shard in 0..2usize {
+        let key = (0..1024u64)
+            .find(|&k| fabric.rank("obs", k)[0] == shard)
+            .expect("rendezvous must rank every shard first for some key");
+        let (rewards, values, done_mask) = planes(31 + shard as u64, t_len, batch);
+        let gae = fabric
+            .call("obs", key, t_len, batch, rewards, values, done_mask)
+            .unwrap();
+        assert_eq!(gae.shard, shard);
+    }
+
+    let fleet = fabric.fleet();
+    let remote = fleet.shards.iter().find(|s| s.label == "remote-0").unwrap();
+    let snap = remote
+        .service
+        .as_ref()
+        .expect("a live remote shard must answer the metrics RPC");
+    assert!(snap.completed >= 1, "remote snapshot must be populated: {snap:?}");
+    assert!(snap.elements > 0);
+    let remote_tenant = snap.tenants.iter().find(|t| t.tenant == "obs");
+    assert!(
+        remote_tenant.is_some_and(|t| t.requests >= 1),
+        "remote tenant breakdown must ride the RPC: {:?}",
+        snap.tenants
+    );
+    // The merged fleet breakdown spans both shards' requests.
+    let merged = fleet.tenants.iter().find(|t| t.tenant == "obs").unwrap();
+    assert!(merged.requests >= 2, "both shards' tenant rows must merge: {fleet}");
+
+    // The RPC also answers outside the fabric, straight off a pool.
+    let pool = ClientPool::connect(
+        &server.local_addr().to_string(),
+        PoolConfig { sockets: 1, codec: PlaneCodec::F32, resp: PlaneCodec::F32 },
+    )
+    .unwrap();
+    let direct = pool.fetch_metrics().unwrap();
+    assert!(direct.completed >= 1);
+
+    // A dead endpoint degrades to None instead of failing the view.
+    server.shutdown();
+    std::thread::sleep(Duration::from_millis(20));
+    let fleet = fabric.fleet();
+    let remote = fleet.shards.iter().find(|s| s.label == "remote-0").unwrap();
+    assert!(
+        remote.service.is_none(),
+        "an unreachable shard's snapshot must read None"
+    );
+}
