@@ -6,7 +6,10 @@
 //! - **`--listen ADDR`**: start the service plus the TCP front-end
 //!   ([`heppo::net::NetServer`]) with per-tenant quotas, the response
 //!   cache, and size-threshold backend routing; serve until killed (or
-//!   `--serve-secs N`).
+//!   `--serve-secs N`). `--server-mode reactor` (Linux) swaps the
+//!   per-connection threads for the epoll reactor front-end
+//!   (`--reactor-threads N`, `--max-connections N`) and best-effort
+//!   raises the process fd limit to hold the fleet.
 //! - **`--connect ADDR`**: drive a remote front-end with the pipelined
 //!   [`heppo::net::NetClient`] — `--inflight N` frames in flight over
 //!   one socket, quantized (`--codec exp5`) or f32 (`--codec exp1`)
@@ -32,6 +35,8 @@
 //! cargo run --release --example serve_gae -- --listen 127.0.0.1:7070 \
 //!     --workers 8 --cache-entries 4096 --quota-elem-per-s 500000 \
 //!     --route-threshold 512
+//! cargo run --release --example serve_gae -- --listen 127.0.0.1:7070 \
+//!     --server-mode reactor --reactor-threads 4 --max-connections 100000
 //! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
 //!     --inflight 16 --codec exp5 --requests 2000
 //! cargo run --release --example serve_gae -- --connect 127.0.0.1:7070 \
@@ -47,7 +52,7 @@ use heppo::fabric::{
     ClientPool, FabricConfig, GaeFabric, PoolConfig, ShardBackend,
 };
 use heppo::gae::{GaeParams, Trajectory};
-use heppo::net::{ErrorKind, PlaneCodec, QuotaConfig};
+use heppo::net::{ErrorKind, PlaneCodec, QuotaConfig, ServerMode};
 use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig};
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
@@ -116,6 +121,7 @@ fn main() -> anyhow::Result<()> {
 fn run_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
     let config = service_config(args)?;
     let quota_rate = args.get_or("quota-elem-per-s", 0.0f64);
+    let mode: ServerMode = args.str_or("server-mode", "threads").parse()?;
     let net_config = NetServerConfig {
         quota: (quota_rate > 0.0).then(|| {
             // Default burst comes from QuotaConfig::per_sec (one second
@@ -126,14 +132,31 @@ fn run_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
         }),
         cache_entries: args.get_or("cache-entries", 1024usize),
         shed_on_overload: !args.flag("backpressure"),
+        mode,
+        reactor_threads: args.get_or("reactor-threads", 2usize),
+        max_connections: args.get_or("max-connections", 65_536usize),
+        ..NetServerConfig::default()
     };
     let serve_secs = args.get_or("serve-secs", 0u64);
+
+    if mode == ServerMode::Reactor {
+        // The slab can only fill if the process may hold that many fds
+        // (one per connection, plus the service's own handles).
+        match heppo::net::raise_fd_limit(net_config.max_connections as u64 + 1024) {
+            Ok(soft) => println!("fd limit: soft {soft}"),
+            Err(e) => eprintln!("fd limit raise failed ({e}); large fleets may be refused"),
+        }
+    }
 
     let service = Arc::new(GaeService::start(config)?);
     let server = NetServer::start(Arc::clone(&service), addr, net_config.clone())?;
     println!(
-        "listening on {} — {} x {} workers, cache {} entries, quota {}, {}",
+        "listening on {} ({} mode) — {} x {} workers, cache {} entries, quota {}, {}",
         server.local_addr(),
+        match mode {
+            ServerMode::Threads => "threads",
+            ServerMode::Reactor => "reactor",
+        },
         config.workers,
         config.backend.label(),
         net_config.cache_entries,

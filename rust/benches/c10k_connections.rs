@@ -1,0 +1,328 @@
+//! C10K: hold ≥10k concurrent mostly-idle connections on a handful of
+//! reactor threads while a hot subset saturates the service, and show
+//! the hot path's tail latency does not care about the idle fleet.
+//!
+//! This is the deployment shape the reactor front-end exists for: a
+//! wide fleet of actor connections that are each mostly idle (an idle
+//! connection costs one slab slot and one epoll registration — no
+//! threads, no stacks), plus a few busy peers pipelining frames. The
+//! threaded mode would need 3 threads per connection — 30k threads for
+//! this fleet; the reactor holds it on `reactor_threads` event loops.
+//!
+//! Measured: per-round p50/p99 of the hot clients' request latency
+//! while the idle fleet is connected, early-vs-late p99 drift across
+//! rounds (steady-state check), and connections per reactor thread. A
+//! post-measurement probe sends a frame over sampled *idle*
+//! connections to prove the server still holds them live.
+//!
+//! Skips cleanly (exit 0, `SKIP` on stdout) when the host cannot hold
+//! the fleet: non-Linux (no reactor), or an fd hard limit too low even
+//! after [`raise_fd_limit`] — both ends of every connection live in
+//! this one process, so ~2 fds per connection.
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks rounds/requests; `HEPPO_BENCH_ITERS=N`
+//! caps measurement rounds (CI smoke uses 5). Emits a markdown table,
+//! `results/c10k_connections.csv`, and one JSON row per round plus a
+//! summary row in `results/c10k_connections.jsonl`.
+
+use heppo::bench::format_si;
+use heppo::coordinator::GaeBackend;
+use heppo::gae::GaeParams;
+use heppo::net::{
+    raise_fd_limit, wire, NetClient, NetClientConfig, NetServer, NetServerConfig,
+    PlaneCodec, ServerMode,
+};
+use heppo::quant::CodecKind;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::stats::Summary;
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use heppo::util::Rng;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const IDLE_TARGET: usize = 10_000;
+const REACTOR_THREADS: usize = 4;
+const HOT_CLIENTS: usize = 8;
+const DEPTH: usize = 8;
+const T_LEN: usize = 64;
+const BATCH: usize = 4;
+
+fn service() -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers: 4,
+            backend: GaeBackend::Batched,
+            queue_capacity: 4096,
+            batcher: BatcherConfig {
+                max_batch_lanes: 256,
+                tile_lanes: 64,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 64,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+        })
+        .expect("service start"),
+    )
+}
+
+/// One hot client running `requests` pipelined frames; returns each
+/// request's latency in µs.
+fn hot_round(addr: &str, seed: u64, requests: usize) -> Vec<f64> {
+    let client = NetClient::connect(
+        addr,
+        NetClientConfig {
+            tenant: format!("hot-{seed}"),
+            codec: CodecKind::Exp5DynamicBlock,
+            bits: 8,
+            resp: PlaneCodec::F32,
+        },
+    )
+    .expect("hot client connect");
+    let mut rng = Rng::new(seed);
+    let mut rewards = vec![0.0f32; T_LEN * BATCH];
+    let mut values = vec![0.0f32; (T_LEN + 1) * BATCH];
+    let done = vec![0.0f32; T_LEN * BATCH];
+    let mut latencies = Vec::with_capacity(requests);
+    let mut window: VecDeque<(Instant, heppo::net::NetPending)> = VecDeque::new();
+    for _ in 0..requests {
+        rng.fill_normal_f32(&mut rewards);
+        rng.fill_normal_f32(&mut values);
+        let pending = client
+            .submit_planes(T_LEN, BATCH, &rewards, &values, &done)
+            .expect("submit");
+        window.push_back((Instant::now(), pending));
+        while window.len() >= DEPTH {
+            let (sent_at, p) = window.pop_front().unwrap();
+            p.wait().expect("hot frame");
+            latencies.push(sent_at.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    while let Some((sent_at, p)) = window.pop_front() {
+        p.wait().expect("hot frame");
+        latencies.push(sent_at.elapsed().as_secs_f64() * 1e6);
+    }
+    latencies
+}
+
+/// Prove an idle connection is still live server-side: one raw frame
+/// over it must come back as a response.
+fn probe_idle(conn: &mut TcpStream, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut rewards = vec![0.0f32; 8];
+    let mut values = vec![0.0f32; 9];
+    rng.fill_normal_f32(&mut rewards);
+    rng.fill_normal_f32(&mut values);
+    let frame = wire::encode_request(
+        1,
+        "idle-probe",
+        PlaneCodec::F32,
+        PlaneCodec::F32,
+        0,
+        8,
+        1,
+        &rewards,
+        &values,
+        &[0.0; 8],
+    )
+    .expect("encode probe")
+    .bytes;
+    conn.write_all(&frame).expect("idle conn went dead");
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = std::io::BufReader::new(conn);
+    let resp = wire::read_frame(&mut reader)
+        .expect("idle conn read")
+        .expect("idle conn closed by server");
+    match wire::decode_frame(&resp).expect("decode probe reply") {
+        wire::Frame::Response(r) => assert_eq!(r.seq, 1),
+        other => panic!("idle probe got {other:?}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    if !cfg!(target_os = "linux") {
+        println!("SKIP: c10k_connections needs the Linux reactor (epoll)");
+        return Ok(());
+    }
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let rounds_default = if fast { 6 } else { 20 };
+    let rounds = std::env::var("HEPPO_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map_or(rounds_default, |n| n.clamp(2, rounds_default));
+    let requests_per_client = if fast { 100 } else { 400 };
+
+    // Both ends of every connection live in this process: ~2 fds per
+    // connection, plus clients, reactors, and harness overhead.
+    let want_fds = (2 * IDLE_TARGET + 1024) as u64;
+    let soft = match raise_fd_limit(want_fds) {
+        Ok(soft) => soft,
+        Err(e) => {
+            println!("SKIP: cannot query/raise the fd limit ({e})");
+            return Ok(());
+        }
+    };
+    let idle_budget = (soft.saturating_sub(1024) / 2) as usize;
+    let idle_count = idle_budget.min(IDLE_TARGET);
+    if idle_count < 1000 {
+        println!(
+            "SKIP: fd limit {soft} leaves room for only {idle_budget} idle \
+             connections (< 1000); raise `ulimit -n` to run this bench"
+        );
+        return Ok(());
+    }
+    let scaled = idle_count < IDLE_TARGET;
+    if scaled {
+        println!(
+            "note: fd limit {soft} caps the idle fleet at {idle_count} \
+             (target {IDLE_TARGET}); running scaled"
+        );
+    }
+
+    let svc = service();
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            cache_entries: 0,
+            mode: ServerMode::Reactor,
+            reactor_threads: REACTOR_THREADS,
+            max_connections: 2 * IDLE_TARGET,
+            ..NetServerConfig::default()
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+
+    println!(
+        "c10k: opening {idle_count} idle connections against {REACTOR_THREADS} \
+         reactor threads ..."
+    );
+    let t_open = Instant::now();
+    let mut idle: Vec<TcpStream> = Vec::with_capacity(idle_count);
+    for i in 0..idle_count {
+        match TcpStream::connect(&addr) {
+            Ok(conn) => idle.push(conn),
+            Err(e) => {
+                println!("SKIP: connect {i} failed ({e}); host cannot hold the fleet");
+                return Ok(());
+            }
+        }
+        if (i + 1) % 2000 == 0 {
+            println!("  {} connections open", i + 1);
+        }
+    }
+    let open_secs = t_open.elapsed().as_secs_f64();
+    let total_conns = idle.len() + HOT_CLIENTS;
+    let conns_per_thread = total_conns as f64 / REACTOR_THREADS as f64;
+    println!(
+        "c10k: {total_conns} connections live ({} conns/reactor-thread), \
+         opened in {open_secs:.1}s\n",
+        format_si(conns_per_thread)
+    );
+
+    let mut table = CsvTable::new(&["round", "req_per_sec", "p50_us", "p99_us"]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut round_p99: Vec<f64> = Vec::new();
+    for round in 0..rounds {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..HOT_CLIENTS)
+            .map(|c| {
+                let addr = addr.clone();
+                let seed = (round * HOT_CLIENTS + c) as u64 + 1;
+                std::thread::spawn(move || hot_round(&addr, seed, requests_per_client))
+            })
+            .collect();
+        let mut latencies: Vec<f64> = Vec::new();
+        for h in handles {
+            latencies.extend(h.join().expect("hot client thread"));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&latencies);
+        let rate = latencies.len() as f64 / wall;
+        round_p99.push(s.p99);
+        println!(
+            "round {round:>2}: {} req/s over {total_conns} conns, p50 {:.0}µs p99 {:.0}µs",
+            format_si(rate),
+            s.p50,
+            s.p99
+        );
+        table.row(&[
+            round.to_string(),
+            format!("{rate:.1}"),
+            format!("{:.0}", s.p50),
+            format!("{:.0}", s.p99),
+        ]);
+        json_rows.push(
+            Json::obj(vec![
+                ("bench", Json::from("c10k_connections")),
+                ("round", Json::from(round)),
+                ("connections", Json::from(total_conns)),
+                ("reactor_threads", Json::from(REACTOR_THREADS)),
+                ("req_per_sec", Json::from(rate)),
+                ("p50_us", Json::from(s.p50)),
+                ("p99_us", Json::from(s.p99)),
+            ])
+            .to_string(),
+        );
+    }
+
+    // Steady-state: the hot path's tail must not drift as rounds pass
+    // over the standing idle fleet. First vs last third of rounds.
+    let third = (round_p99.len() / 3).max(1);
+    let early = round_p99[..third].iter().sum::<f64>() / third as f64;
+    let late_slice = &round_p99[round_p99.len() - third..];
+    let late = late_slice.iter().sum::<f64>() / third as f64;
+    let drift = late / early.max(1e-9);
+    println!(
+        "\nsteady-state: early p99 {early:.0}µs vs late p99 {late:.0}µs \
+         ({drift:.2}x drift, bound 10x)"
+    );
+
+    // The idle fleet is still *live*, not silently dropped: sampled
+    // connections must still answer a frame after all measurement.
+    let samples = [0, idle.len() / 2, idle.len() - 1];
+    for (i, &idx) in samples.iter().enumerate() {
+        probe_idle(&mut idle[idx], 1000 + i as u64);
+    }
+    println!("idle-fleet probe: {} sampled connections still answer", samples.len());
+
+    json_rows.push(
+        Json::obj(vec![
+            ("bench", Json::from("c10k_connections")),
+            ("round", Json::from("summary")),
+            ("connections", Json::from(total_conns)),
+            ("reactor_threads", Json::from(REACTOR_THREADS)),
+            ("conns_per_thread", Json::from(conns_per_thread)),
+            ("open_secs", Json::from(open_secs)),
+            ("p99_early_us", Json::from(early)),
+            ("p99_late_us", Json::from(late)),
+            ("p99_drift", Json::from(drift)),
+            ("scaled", Json::from(scaled)),
+        ])
+        .to_string(),
+    );
+    println!("\n{}", table.to_markdown());
+    std::fs::create_dir_all("results")?;
+    table.save("results/c10k_connections.csv")?;
+    std::fs::write("results/c10k_connections.jsonl", json_rows.join("\n") + "\n")?;
+    println!("-> results/c10k_connections.csv, results/c10k_connections.jsonl");
+
+    anyhow::ensure!(
+        drift <= 10.0,
+        "hot-path p99 drifted {drift:.2}x across rounds over the idle fleet"
+    );
+    if !scaled {
+        anyhow::ensure!(
+            total_conns >= IDLE_TARGET,
+            "held {total_conns} connections, target {IDLE_TARGET}"
+        );
+    }
+    drop(idle);
+    server.shutdown();
+    println!("c10k_connections OK");
+    Ok(())
+}

@@ -15,8 +15,8 @@
 //!         ▼                 ▼
 //!   NetPending ◄── reader thread ◄── responses/errors, any order
 //!
-//!             NetServer (server.rs), per connection:
-//!   reader ── lazy header parse ─► quota (quota.rs, token buckets)
+//!             NetServer (server/), shared policy pipeline:
+//!   frames ── lazy header parse ─► quota (quota.rs, token buckets)
 //!               (no dequantize)      │ over-budget → typed Quota frame
 //!                                    ▼
 //!                       cache (cache.rs, raw-payload-hash LRU)
@@ -26,8 +26,30 @@
 //!                       GaeService::try_submit_plane_set  (zero-copy:
 //!                         │ shed → typed Shed error frame  decode buffers
 //!                         ▼                                move, not copy)
-//!                       completer ─► writer ─► socket
+//!                       completion ─► response frame ─► socket
 //! ```
+//!
+//! ## Server modes
+//!
+//! The server runs the pipeline above under one of two socket-handling
+//! front-ends, selected by [`NetServerConfig::mode`] (`--server-mode`
+//! in `examples/serve_gae.rs`); both produce byte-identical response
+//! sets because the policy pipeline is literally shared code:
+//!
+//! - [`ServerMode::Threads`] — three blocking threads per connection
+//!   (reader / completer / writer). Per-connection isolation, works
+//!   everywhere, right shape for a handful of high-throughput peers
+//!   (trainer fleets) or closed-loop `shed_on_overload: false`
+//!   backpressure.
+//! - [`ServerMode::Reactor`] (Linux) — a few `epoll` event loops own
+//!   *all* sockets. Connection state lives in a fixed-capacity,
+//!   generation-tagged slab; the wire parse resumes across partial
+//!   reads ([`wire::FrameAssembler`]); completed responses coalesce
+//!   into vectored `writev` batches; slow consumers are shed on a
+//!   deadline (counted in `MetricsSnapshot::slow_closed`) instead of
+//!   pinning threads. This is the C10K shape for wide fleets of
+//!   mostly-idle actor connections — `benches/c10k_connections.rs`
+//!   holds ≥10k live connections on a handful of reactor threads.
 //!
 //! Layer boundaries:
 //!
@@ -54,7 +76,7 @@ pub mod wire;
 pub use cache::{CacheStats, CachedGae, ResponseCache};
 pub use client::{NetClient, NetClientConfig, NetError, NetGae, NetPending, WireStats};
 pub use quota::{QuotaConfig, TokenBuckets};
-pub use server::{NetServer, NetServerConfig};
+pub use server::{raise_fd_limit, NetServer, NetServerConfig, ServerMode};
 pub use wire::{
     EncodedRequest, ErrorFrame, ErrorKind, Fnv1a, Frame, LazyFrame, LazyRequest,
     MetricsRequestFrame, MetricsResponseFrame, PlaneCodec, RequestFrame,

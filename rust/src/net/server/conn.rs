@@ -1,0 +1,302 @@
+//! Per-connection state for the reactor: a resumable parse + write
+//! state machine, stored in a fixed-capacity generation-tagged slab.
+//!
+//! A reactor connection owns no threads. Its entire lifecycle is a
+//! struct in the slab: the [`FrameAssembler`](wire::FrameAssembler)
+//! resumes the wire parse across partial reads, the write backlog
+//! holds encoded reply frames until the socket accepts them (flushed
+//! as vectored `writev` batches), and a handful of flags drive the
+//! epoll interest set. The epoll `u64` user-data word carries a
+//! [`ConnToken`] — slab index in the low half, generation in the high
+//! half — so a completion that races a disconnect resolves to *nothing*
+//! rather than to whichever connection recycled the slot.
+
+use crate::net::server::sys;
+use crate::net::wire::FrameAssembler;
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Most frames folded into one `writev` call. Far below `IOV_MAX`
+/// (1024); past a few dozen iovecs the syscall is already amortized.
+const MAX_WRITEV_FRAMES: usize = 64;
+
+/// A slab slot address that can prove it is not stale: the generation
+/// is bumped every time the slot is vacated, so tokens minted for a
+/// previous occupant stop resolving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct ConnToken {
+    pub(crate) index: u32,
+    pub(crate) gen: u32,
+}
+
+impl ConnToken {
+    /// Pack into the epoll user-data word: generation high, index low.
+    pub(crate) fn pack(self) -> u64 {
+        (u64::from(self.gen) << 32) | u64::from(self.index)
+    }
+
+    pub(crate) fn unpack(data: u64) -> ConnToken {
+        ConnToken { index: data as u32, gen: (data >> 32) as u32 }
+    }
+}
+
+/// What a flush attempt left behind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum FlushStatus {
+    /// Backlog empty; nothing left to write.
+    Drained,
+    /// The socket stopped accepting bytes (`EWOULDBLOCK`); wait for
+    /// `EPOLLOUT`.
+    Blocked,
+}
+
+/// One reactor-mode connection: nonblocking stream plus the resume
+/// state a blocking thread would have kept on its stack.
+pub(crate) struct Conn {
+    pub(crate) stream: TcpStream,
+    /// Resumable wire parse across partial reads.
+    pub(crate) assembler: FrameAssembler,
+    /// Encoded reply frames not yet fully written. The head frame may
+    /// be partially sent ([`Conn::head_written`] bytes of it).
+    pub(crate) backlog: VecDeque<Vec<u8>>,
+    pub(crate) head_written: usize,
+    /// Admitted requests whose completions have not come back yet.
+    pub(crate) inflight: usize,
+    /// Read interest dropped (backlog or in-flight bound hit).
+    pub(crate) read_paused: bool,
+    /// Peer half-closed (EOF/RDHUP): stop reading, finish writing.
+    pub(crate) peer_eof: bool,
+    /// Tear down once the backlog drains (protocol error or shed).
+    pub(crate) closing: bool,
+    /// Since when the write backlog has been continuously full; the
+    /// slow-consumer shed fires when this outlives the deadline.
+    pub(crate) backlog_full_since: Option<Instant>,
+    /// Hard stop for the flush-then-close grace period of a shed
+    /// connection.
+    pub(crate) close_deadline: Option<Instant>,
+    /// Event mask currently registered with epoll, to skip no-op
+    /// `EPOLL_CTL_MOD` calls.
+    pub(crate) registered_events: u32,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            assembler: FrameAssembler::new(),
+            backlog: VecDeque::new(),
+            head_written: 0,
+            inflight: 0,
+            read_paused: false,
+            peer_eof: false,
+            closing: false,
+            backlog_full_since: None,
+            close_deadline: None,
+            registered_events: 0,
+        }
+    }
+
+    /// The epoll interest set this connection's state implies.
+    pub(crate) fn desired_events(&self) -> u32 {
+        // RDHUP is always on: a paused or draining connection must
+        // still notice its peer vanishing.
+        let mut ev = sys::EPOLLRDHUP;
+        if !self.read_paused && !self.peer_eof && !self.closing {
+            ev |= sys::EPOLLIN;
+        }
+        if !self.backlog.is_empty() {
+            ev |= sys::EPOLLOUT;
+        }
+        ev
+    }
+
+    /// Queue an encoded frame for writing.
+    pub(crate) fn push_frame(&mut self, frame: Vec<u8>) {
+        self.backlog.push_back(frame);
+    }
+
+    /// Write as much of the backlog as the socket will take, batching
+    /// up to [`MAX_WRITEV_FRAMES`] frames per `writev`.
+    pub(crate) fn flush(&mut self) -> io::Result<FlushStatus> {
+        while !self.backlog.is_empty() {
+            let written = {
+                let mut slices: Vec<IoSlice<'_>> =
+                    Vec::with_capacity(self.backlog.len().min(MAX_WRITEV_FRAMES));
+                slices.push(IoSlice::new(&self.backlog[0][self.head_written..]));
+                for frame in self.backlog.iter().skip(1).take(MAX_WRITEV_FRAMES - 1) {
+                    slices.push(IoSlice::new(frame));
+                }
+                match self.stream.write_vectored(&slices) {
+                    Ok(0) => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::WriteZero,
+                            "socket accepted zero bytes",
+                        ))
+                    }
+                    Ok(n) => n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        return Ok(FlushStatus::Blocked)
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            // Advance past whole frames the write covered; a partial
+            // tail stays as the new head offset.
+            let mut n = written;
+            while n > 0 {
+                let head_remaining = self.backlog[0].len() - self.head_written;
+                if n >= head_remaining {
+                    n -= head_remaining;
+                    self.backlog.pop_front();
+                    self.head_written = 0;
+                } else {
+                    self.head_written += n;
+                    n = 0;
+                }
+            }
+        }
+        Ok(FlushStatus::Drained)
+    }
+}
+
+/// Fixed-capacity connection storage with generation-tagged addressing.
+///
+/// Slots are reused LIFO off a free list; each reuse bumps the slot's
+/// generation, so a [`ConnToken`] minted for an earlier occupant fails
+/// the generation check in [`get_mut`](ConnSlab::get_mut) /
+/// [`remove`](ConnSlab::remove) instead of aliasing the new one. No
+/// per-connection allocation happens at accept beyond the `Conn`'s own
+/// buffers — the slot vector is sized once at startup.
+pub(crate) struct ConnSlab {
+    slots: Vec<Option<Conn>>,
+    gens: Vec<u32>,
+    free: Vec<usize>,
+}
+
+impl ConnSlab {
+    pub(crate) fn with_capacity(cap: usize) -> ConnSlab {
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, || None);
+        ConnSlab {
+            slots,
+            gens: vec![0; cap],
+            free: (0..cap).rev().collect(),
+        }
+    }
+
+    /// Number of live connections (test observability; the reactor
+    /// tracks fullness through failed inserts, not counts).
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Store a connection; `None` means the slab is full (the caller
+    /// drops the socket at the door).
+    pub(crate) fn insert(&mut self, conn: Conn) -> Option<ConnToken> {
+        let index = self.free.pop()?;
+        self.slots[index] = Some(conn);
+        Some(ConnToken { index: index as u32, gen: self.gens[index] })
+    }
+
+    /// Resolve a token to its connection; stale generations (and
+    /// vacated slots) resolve to `None`.
+    pub(crate) fn get_mut(&mut self, token: ConnToken) -> Option<&mut Conn> {
+        let index = token.index as usize;
+        if index >= self.slots.len() || self.gens[index] != token.gen {
+            return None;
+        }
+        self.slots[index].as_mut()
+    }
+
+    /// Vacate a slot, bumping its generation so outstanding tokens for
+    /// this occupant go stale.
+    pub(crate) fn remove(&mut self, token: ConnToken) -> Option<Conn> {
+        let index = token.index as usize;
+        if index >= self.slots.len() || self.gens[index] != token.gen {
+            return None;
+        }
+        let conn = self.slots[index].take()?;
+        self.gens[index] = self.gens[index].wrapping_add(1);
+        self.free.push(index);
+        Some(conn)
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn test_conn() -> Conn {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let _accepted = listener.accept().unwrap();
+        Conn::new(stream)
+    }
+
+    #[test]
+    fn token_pack_round_trips() {
+        let t = ConnToken { index: 12345, gen: 0xDEAD_BEEF };
+        assert_eq!(ConnToken::unpack(t.pack()), t);
+    }
+
+    #[test]
+    fn slab_reuses_slots_and_stales_old_tokens() {
+        let mut slab = ConnSlab::with_capacity(2);
+        let a = slab.insert(test_conn()).unwrap();
+        let b = slab.insert(test_conn()).unwrap();
+        assert_eq!(slab.len(), 2);
+        assert!(slab.insert(test_conn()).is_none(), "slab at capacity");
+
+        assert!(slab.remove(a).is_some());
+        assert_eq!(slab.len(), 1);
+        // The vacated slot is reused, but under a new generation…
+        let c = slab.insert(test_conn()).unwrap();
+        assert_eq!(c.index, a.index);
+        assert_ne!(c.gen, a.gen);
+        // …so the old token no longer resolves to anything.
+        assert!(slab.get_mut(a).is_none());
+        assert!(slab.remove(a).is_none());
+        assert!(slab.get_mut(c).is_some());
+        assert!(slab.get_mut(b).is_some());
+    }
+
+    #[test]
+    fn desired_events_follow_the_state_flags() {
+        let mut conn = test_conn();
+        assert_eq!(conn.desired_events(), sys::EPOLLRDHUP | sys::EPOLLIN);
+        conn.push_frame(vec![1, 2, 3]);
+        assert_eq!(
+            conn.desired_events(),
+            sys::EPOLLRDHUP | sys::EPOLLIN | sys::EPOLLOUT
+        );
+        conn.read_paused = true;
+        assert_eq!(conn.desired_events(), sys::EPOLLRDHUP | sys::EPOLLOUT);
+    }
+
+    #[test]
+    fn flush_drains_a_multi_frame_backlog() {
+        use std::io::Read;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        stream.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(stream);
+        conn.push_frame(vec![1; 10]);
+        conn.push_frame(vec![2; 20]);
+        conn.push_frame(vec![3; 30]);
+        assert_eq!(conn.flush().unwrap(), FlushStatus::Drained);
+        assert!(conn.backlog.is_empty());
+        let mut got = vec![0u8; 60];
+        peer.read_exact(&mut got).unwrap();
+        let mut want = vec![1u8; 10];
+        want.extend(vec![2u8; 20]);
+        want.extend(vec![3u8; 30]);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,536 @@
+//! The multi-tenant TCP front-end: decode frames, enforce quotas,
+//! consult the response cache, bridge onto the serving subsystem.
+//!
+//! Two deployment shapes share one request policy:
+//!
+//! - [`ServerMode::Threads`] (`threads.rs`) — three threads per
+//!   connection (reader / completer / writer) over blocking sockets.
+//!   Simple, per-connection isolated, fine up to a few thousand
+//!   connections.
+//! - [`ServerMode::Reactor`] (`reactor.rs`, Linux) — a few epoll event
+//!   loops drive *all* sockets: per-connection state machines resume
+//!   the lazy frame parser across partial reads
+//!   ([`wire::FrameAssembler`]), connection state lives in a
+//!   fixed-capacity generation-tagged slab (`conn.rs`) instead of
+//!   thread stacks, and completed responses coalesce into vectored
+//!   `writev` batches. This is the C10K shape: tens of thousands of
+//!   mostly-idle actor connections per shard on a handful of threads.
+//!
+//! Both modes produce byte-identical response sets for the same
+//! requests — the policy pipeline below is shared code
+//! ([`process_frame`] / [`complete_inflight`]), the modes differ only
+//! in how bytes move between sockets and that pipeline.
+//!
+//! ## Request lifecycle (both modes)
+//!
+//! Frames arrive through the **lazy decode** split
+//! ([`wire::decode_frame_lazy`]): the header parse alone admits or
+//! refuses the frame; f32 planes are only materialized for frames that
+//! pass both policy gates — quota refusals and cache hits never
+//! dequantize.
+//!
+//! 1. **Quota** — the tenant's token bucket ([`TokenBuckets`]) is
+//!    charged `T·B` elements (header geometry alone); refusal is a
+//!    typed `Quota` error frame and a `quota_shed` metrics tick. Quotas
+//!    are checked *before* the cache so a hot tenant cannot dodge its
+//!    budget by replaying cacheable payloads; the charge is refunded if
+//!    the frame is later refused (shed/malformed) with no work
+//!    performed.
+//! 2. **Cache** — the [`ResponseCache`], keyed per tenant
+//!    ([`cache::scoped_key`] folds the tenant id into the payload hash,
+//!    so a constructible FNV collision can only poison the colliding
+//!    tenant's own entries); a hit answers immediately with the
+//!    `cache_hit` response flag set, re-encoded under the requester's
+//!    reply codec.
+//! 3. **Admission** — the lazily-decoded planes move (zero-copy) into
+//!    [`GaeService::try_submit_plane_set`]; the admission controller's
+//!    `Overloaded` becomes a typed `Shed` error frame
+//!    ([`NetServerConfig::shed_on_overload`] `false` switches to the
+//!    backpressured [`GaeService::submit_plane_set`]).
+//!
+//! ## Backpressure semantics, per mode
+//!
+//! A client that submits without reading replies must stall *itself*,
+//! not the server:
+//!
+//! - **Threads**: the writer's bounded frame channel fills, then the
+//!   completer's, then the reader blocks — the stall is confined to
+//!   that connection's three threads.
+//! - **Reactor**: the per-connection write backlog
+//!   ([`NetServerConfig::write_backlog_frames`]) and in-flight cap play
+//!   the same roles; a connection that hits either bound has its read
+//!   interest dropped (it stops admitting) while every other connection
+//!   keeps flowing. A backlog that stays *full* past
+//!   [`NetServerConfig::slow_conn_deadline`] is a dead or malicious
+//!   consumer: the connection is shed with a typed `Shed` error frame,
+//!   deregistered, and counted in
+//!   [`MetricsSnapshot::slow_closed`](crate::service::MetricsSnapshot::slow_closed)
+//!   — the threaded mode's "non-reading client pins its writer thread
+//!   forever" hazard does not exist here.
+//! - `shed_on_overload: false` (closed-loop admission backpressure)
+//!   blocks inside the submit call. In threads mode that stalls one
+//!   connection; in reactor mode it stalls the whole event loop, so
+//!   closed-loop deployments should prefer `--server-mode threads`.
+//!
+//! When does each mode win? Threads: few long-lived high-throughput
+//! peers (trainer fleets), closed-loop backpressure, non-Linux hosts.
+//! Reactor: wide fan-in of mostly-idle tenants (the paper's
+//! actor-fleet shape), where 3 threads/conn would exhaust the host at
+//! a few thousand connections — `benches/c10k_connections.rs` holds
+//! ≥10k connections on ≤4 reactor threads.
+
+use crate::net::cache::{self, CachedGae, ResponseCache};
+use crate::net::quota::{QuotaConfig, TokenBuckets};
+use crate::net::wire::{self, ErrorKind, LazyFrame, LazyRequest, PlaneCodec};
+use crate::service::{GaeService, PlaneSet, PlanesPending, ServiceError};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[cfg(target_os = "linux")]
+pub(crate) mod conn;
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
+#[cfg(target_os = "linux")]
+pub(crate) mod sys;
+pub(crate) mod threads;
+
+/// How the front-end moves bytes between sockets and the shared
+/// request policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServerMode {
+    /// Three blocking threads per connection (reader/completer/writer).
+    Threads,
+    /// A few epoll event loops over all connections (Linux only).
+    Reactor,
+}
+
+impl std::str::FromStr for ServerMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<ServerMode> {
+        match s {
+            "threads" => Ok(ServerMode::Threads),
+            "reactor" => Ok(ServerMode::Reactor),
+            other => anyhow::bail!("unknown server mode {other:?} (threads|reactor)"),
+        }
+    }
+}
+
+/// Front-end deployment knobs.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Per-tenant token-bucket quota; `None` admits every tenant.
+    pub quota: Option<QuotaConfig>,
+    /// Response-cache capacity in entries; `0` disables the cache.
+    pub cache_entries: usize,
+    /// `true`: fail-fast admission — overload answers typed `Shed`
+    /// frames (open-loop / production). `false`: backpressure the
+    /// submitter instead (closed-loop; see the module docs for what
+    /// that means per mode).
+    pub shed_on_overload: bool,
+    /// Socket-handling shape; see [`ServerMode`].
+    pub mode: ServerMode,
+    /// Reactor mode: event-loop threads to shard connections across
+    /// (clamped to ≥ 1). Thread 0 also owns the accept path.
+    pub reactor_threads: usize,
+    /// Reactor mode: connection-slab capacity summed across reactor
+    /// threads; accepts beyond it are dropped at the door.
+    pub max_connections: usize,
+    /// Encoded response frames buffered per connection before its
+    /// producers stall (threads) or its read interest drops (reactor).
+    pub write_backlog_frames: usize,
+    /// Reactor mode: completion-pump threads that block on
+    /// [`PlanesPending::wait`] on the reactor's behalf.
+    pub completer_threads: usize,
+    /// Reactor mode: a connection whose write backlog stays full this
+    /// long is shed (typed `Shed` error frame, then close) and counted
+    /// in `MetricsSnapshot::slow_closed`.
+    pub slow_conn_deadline: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            quota: None,
+            cache_entries: 1024,
+            shed_on_overload: true,
+            mode: ServerMode::Threads,
+            reactor_threads: 2,
+            max_connections: 65_536,
+            write_backlog_frames: 256,
+            completer_threads: 4,
+            slow_conn_deadline: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Admitted-but-unanswered frames a connection may hold before it
+/// stops decoding (and therefore admitting) — the cap on computed
+/// responses piling up in server memory for a client that never reads
+/// its socket.
+pub(crate) const COMPLETER_BACKLOG_FRAMES: usize = 256;
+
+/// State both modes share: the service bridge and the policy engines.
+pub(crate) struct Shared {
+    pub(crate) service: Arc<GaeService>,
+    pub(crate) config: NetServerConfig,
+    pub(crate) quota: Option<TokenBuckets>,
+    pub(crate) cache: Option<ResponseCache>,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) frames_received: AtomicU64,
+}
+
+/// One admitted request travelling from the frame processor to whoever
+/// blocks on its completion (per-conn completer thread or reactor
+/// completion pump).
+pub(crate) struct InFlight {
+    pub(crate) seq: u64,
+    pub(crate) tenant: String,
+    pub(crate) t_len: usize,
+    pub(crate) batch: usize,
+    pub(crate) cache_key: Option<u64>,
+    /// The reply codec the client asked for (f32 unless it opted in).
+    pub(crate) resp: PlaneCodec,
+    /// Request-scoped trace id from the frame header (`0` = untraced),
+    /// echoed in the response so the client can close its span.
+    pub(crate) trace: u64,
+    pub(crate) pending: PlanesPending,
+}
+
+/// What one decoded frame asks of the connection — the whole
+/// mode-independent result of the policy pipeline.
+pub(crate) enum FrameOutcome {
+    /// Queue the frame for writing; keep reading.
+    Reply(Vec<u8>),
+    /// Queue the frame, then close: the stream offset can no longer be
+    /// trusted (framing error) or the peer broke protocol.
+    ReplyClose(Vec<u8>),
+    /// Admitted into the service; completion produces the reply.
+    Admitted(Box<InFlight>),
+}
+
+/// Run one received frame (the bytes after the length prefix) through
+/// the shared policy pipeline. Both server modes call exactly this, so
+/// their response bytes are identical by construction.
+pub(crate) fn process_frame(frame: &[u8], shared: &Shared) -> FrameOutcome {
+    match wire::decode_frame_lazy(frame) {
+        Ok(LazyFrame::Request(req)) => process_request(req, shared),
+        Ok(LazyFrame::MetricsRequest(m)) => {
+            // The metrics RPC is answered inline — a full snapshot is
+            // cheap (no plane work) and must not queue behind compute.
+            let snapshot = shared.service.metrics();
+            FrameOutcome::Reply(wire::encode_metrics_response(m.seq, &snapshot))
+        }
+        Ok(_) => {
+            // Only clients speak first; a response/error from one is a
+            // protocol violation worth closing over.
+            FrameOutcome::ReplyClose(wire::encode_error(
+                0,
+                ErrorKind::Malformed,
+                "unexpected frame type from client",
+            ))
+        }
+        Err(e) => {
+            // Connection-level: after a framing error the stream offset
+            // can no longer be trusted.
+            FrameOutcome::ReplyClose(wire::encode_error(
+                0,
+                ErrorKind::Malformed,
+                &e.to_string(),
+            ))
+        }
+    }
+}
+
+fn process_request(req: LazyRequest<'_>, shared: &Shared) -> FrameOutcome {
+    shared.frames_received.fetch_add(1, Ordering::Relaxed);
+    let (seq, t_len, batch) = (req.seq, req.t_len, req.batch);
+    let tenant = req.tenant;
+    let resp = req.resp;
+    // The client's trace id rode the frame header; from here every
+    // server-side event joins its timeline.
+    let trace = req.trace;
+    crate::obs::instant("server.decode", trace);
+    let _admit_span = crate::obs::span("server.admit", trace);
+
+    // 1. Quota: charge the tenant before any work happens on its behalf
+    //    — the cost needs only the header geometry, no plane decode.
+    let cost = req.elements() as f64;
+    if let Some(quota) = &shared.quota {
+        if !quota.try_acquire(tenant, cost) {
+            shared.service.metrics_handle().record_quota_shed();
+            shared.service.metrics_handle().record_tenant_quota_shed(tenant);
+            return FrameOutcome::Reply(wire::encode_error(
+                seq,
+                ErrorKind::Quota,
+                &format!(
+                    "tenant {tenant:?} over quota (frame costs {} elements)",
+                    cost as u64
+                ),
+            ));
+        }
+    }
+    // Give the charge back when the frame is refused downstream with no
+    // work performed — overload and quota must not double-penalize.
+    let refund_charge = || {
+        if let Some(quota) = &shared.quota {
+            quota.refund(tenant, cost);
+        }
+    };
+
+    // 2. Cache: identical quantized payloads from the *same tenant*
+    //    replay the stored result — the key folds the tenant id into
+    //    the raw-packed-bytes hash (computed only now; a quota refusal
+    //    above skipped even this pass), so a hit answers without ever
+    //    materializing the f32 planes and never crosses tenants.
+    let mut cache_key = None;
+    if let Some(cache) = &shared.cache {
+        let key = cache::scoped_key(tenant, req.payload_hash());
+        if let Some(hit) = cache.get(key) {
+            if hit.t_len == t_len && hit.batch == batch {
+                shared.service.metrics_handle().record_cache_hit();
+                shared
+                    .service
+                    .metrics_handle()
+                    .record_tenant_request(tenant, (t_len * batch) as u64);
+                return FrameOutcome::Reply(wire::encode_response(
+                    seq,
+                    hit.t_len,
+                    hit.batch,
+                    &hit.advantages,
+                    &hit.rewards_to_go,
+                    hit.hw_cycles,
+                    true,
+                    resp,
+                    trace,
+                ));
+            }
+            // 64-bit collision across geometries: treat as a miss.
+        }
+        shared.service.metrics_handle().record_cache_miss();
+        cache_key = Some(key);
+    }
+
+    // 3. Deferred decode + admission: only frames that compute pay the
+    //    dequantize; the planes then move (zero-copy) into the service.
+    let (rewards, values, done_mask) = req.decode_planes();
+    let planes = match PlaneSet::new(t_len, batch, rewards, values, done_mask) {
+        Ok(planes) => planes,
+        Err(e) => {
+            refund_charge();
+            return FrameOutcome::Reply(wire::encode_error(
+                seq,
+                ErrorKind::Malformed,
+                &e.to_string(),
+            ));
+        }
+    };
+    let submitted = if shared.config.shed_on_overload {
+        shared.service.try_submit_plane_set_traced(planes, trace)
+    } else {
+        shared.service.submit_plane_set_traced(planes, trace)
+    };
+    match submitted {
+        // Per-tenant accounting for computed requests happens at
+        // completion ("requests answered with a result"), not here.
+        Ok(pending) => {
+            crate::obs::instant("server.enqueue", trace);
+            FrameOutcome::Admitted(Box::new(InFlight {
+                seq,
+                tenant: tenant.to_string(),
+                t_len,
+                batch,
+                cache_key,
+                resp,
+                trace,
+                pending,
+            }))
+        }
+        Err(ServiceError::Overloaded { depth, limit }) => {
+            refund_charge();
+            shared.service.metrics_handle().record_tenant_shed(tenant);
+            FrameOutcome::Reply(wire::encode_error(
+                seq,
+                ErrorKind::Shed,
+                &format!("admission control shed the frame (depth {depth}/{limit})"),
+            ))
+        }
+        Err(ServiceError::ShuttingDown) => {
+            refund_charge();
+            FrameOutcome::Reply(wire::encode_error(
+                seq,
+                ErrorKind::Shutdown,
+                "service is shutting down",
+            ))
+        }
+        Err(e) => {
+            refund_charge();
+            FrameOutcome::Reply(wire::encode_error(seq, ErrorKind::Internal, &e.to_string()))
+        }
+    }
+}
+
+/// Block on one admitted request and build its reply frame: cache
+/// insert, per-tenant accounting, timed wire encode. Shared by the
+/// per-connection completer threads (threads mode) and the completion
+/// pumps (reactor mode).
+pub(crate) fn complete_inflight(inflight: InFlight, shared: &Shared) -> Vec<u8> {
+    match inflight.pending.wait() {
+        Ok(gae) => {
+            // Move the planes into one shared result; the cache (if
+            // any) and the response encode read the same buffers — no
+            // per-response plane copies. Insert happens *before* the
+            // response leaves, so a client that waits for its reply is
+            // guaranteed a hit on an identical resend.
+            let cached = Arc::new(CachedGae {
+                t_len: inflight.t_len,
+                batch: inflight.batch,
+                advantages: gae.advantages,
+                rewards_to_go: gae.rewards_to_go,
+                hw_cycles: gae.hw_cycles,
+            });
+            if let (Some(cache), Some(key)) = (&shared.cache, inflight.cache_key) {
+                cache.insert(key, Arc::clone(&cached));
+            }
+            shared.service.metrics_handle().record_tenant_request(
+                &inflight.tenant,
+                (inflight.t_len * inflight.batch) as u64,
+            );
+            // Time the wire encode — the one phase the worker cannot
+            // see (the frame is built after its reply was sent).
+            let encode_span = crate::obs::span("server.encode", inflight.trace);
+            let encode_start = std::time::Instant::now();
+            let frame = wire::encode_response(
+                inflight.seq,
+                cached.t_len,
+                cached.batch,
+                &cached.advantages,
+                &cached.rewards_to_go,
+                cached.hw_cycles,
+                false,
+                inflight.resp,
+                inflight.trace,
+            );
+            shared.service.metrics_handle().record_encode(encode_start.elapsed());
+            drop(encode_span);
+            frame
+        }
+        Err(ServiceError::ShuttingDown) => wire::encode_error(
+            inflight.seq,
+            ErrorKind::Shutdown,
+            "service shut down while the frame was in flight",
+        ),
+        Err(e) => wire::encode_error(inflight.seq, ErrorKind::Internal, &e.to_string()),
+    }
+}
+
+enum Front {
+    Threads(threads::ThreadFront),
+    #[cfg(target_os = "linux")]
+    Reactor(reactor::ReactorFront),
+}
+
+/// A running TCP front-end over one [`GaeService`]. Dropping it stops
+/// accepting, interrupts every connection, and joins all threads; the
+/// service itself is left running (it may have in-process clients too).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    front: Front,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections under `config.mode`.
+    pub fn start(
+        service: Arc<GaeService>,
+        addr: &str,
+        config: NetServerConfig,
+    ) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let quota = config.quota.map(TokenBuckets::new);
+        let cache =
+            (config.cache_entries > 0).then(|| ResponseCache::new(config.cache_entries));
+        let mode = config.mode;
+        let shared = Arc::new(Shared {
+            service,
+            config,
+            quota,
+            cache,
+            shutdown: AtomicBool::new(false),
+            frames_received: AtomicU64::new(0),
+        });
+        let front = match mode {
+            ServerMode::Threads => {
+                Front::Threads(threads::ThreadFront::start(listener, Arc::clone(&shared)))
+            }
+            ServerMode::Reactor => {
+                #[cfg(target_os = "linux")]
+                {
+                    Front::Reactor(reactor::ReactorFront::start(
+                        listener,
+                        Arc::clone(&shared),
+                    )?)
+                }
+                #[cfg(not(target_os = "linux"))]
+                {
+                    anyhow::bail!("server mode `reactor` requires Linux (epoll)");
+                }
+            }
+        };
+        Ok(NetServer { local_addr, shared, front })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Request frames decoded so far.
+    pub fn frames_received(&self) -> u64 {
+        self.shared.frames_received.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, interrupt every connection, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        match &mut self.front {
+            Front::Threads(t) => t.shutdown(),
+            #[cfg(target_os = "linux")]
+            Front::Reactor(r) => r.shutdown(),
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Best-effort raise of the process soft fd limit toward `want`
+/// (clamped to the hard limit). Returns the soft limit now in force.
+/// The c10k bench calls this before opening its connection fleet; on
+/// non-Linux hosts it reports `Unsupported` and the bench skips.
+pub fn raise_fd_limit(want: u64) -> std::io::Result<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        sys::raise_nofile(want)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = want;
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "fd-limit control is only wired up on Linux",
+        ))
+    }
+}

@@ -1,0 +1,684 @@
+//! The epoll reactor front-end: a few event-loop threads drive every
+//! socket; connections are slab entries, not thread stacks.
+//!
+//! ```text
+//!          accept (reactor 0)          round-robin
+//!  socket ───► epoll ───► ConnSlab ──────────────► peer inbox + eventfd
+//!                │
+//!                │ EPOLLIN: read → FrameAssembler → process_frame
+//!                │    Reply/ReplyClose ──► write backlog ──► writev
+//!                │    Admitted ──► pump thread (blocks on the service)
+//!                │                   │ complete_inflight
+//!                ◄── inbox + eventfd ┘  (frame routed by ConnToken;
+//!                                        stale generations drop it)
+//! ```
+//!
+//! Reactor threads never block on compute: admitted requests are handed
+//! to a small pool of *completion pumps* that block on
+//! [`PlanesPending::wait`](crate::service::PlanesPending) and post the
+//! encoded reply back through the owning reactor's inbox + wake
+//! eventfd. The reactor coalesces whatever completions arrived in one
+//! wake batch into the per-connection backlogs and flushes each touched
+//! connection once — a vectored `writev` of up to 64 frames.
+//!
+//! Flow control is per connection and never blocks the loop: a
+//! connection at its write-backlog or in-flight bound has its `EPOLLIN`
+//! interest dropped until it drains below half. A backlog that stays
+//! full past [`NetServerConfig::slow_conn_deadline`] is shed: unwritten
+//! whole frames are dropped (a partially-written head frame is kept so
+//! the byte stream stays framed), a typed `Shed` error frame is
+//! appended, the close is forced after one more deadline, and
+//! `MetricsSnapshot::slow_closed` ticks.
+
+use super::conn::{Conn, ConnSlab, ConnToken};
+use super::sys;
+use super::{
+    complete_inflight, process_frame, FrameOutcome, InFlight, NetServerConfig, Shared,
+    COMPLETER_BACKLOG_FRAMES,
+};
+use crate::net::wire::{self, ErrorKind};
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Epoll user-data word for the listening socket (reactor 0 only).
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// Epoll user-data word for a reactor's wake eventfd.
+const WAKE_TOKEN: u64 = u64::MAX - 1;
+
+/// Accepts drained per listener wakeup before yielding back to the
+/// event loop, so a connect storm cannot starve live connections.
+const MAX_ACCEPTS_PER_WAKE: usize = 1024;
+
+/// Cross-thread mailbox of one reactor: producers push under the lock,
+/// then signal the wake eventfd; the reactor drains fd-then-inbox (the
+/// reverse order of the producers, so no message can be missed).
+pub(crate) struct ReactorShared {
+    wake_fd: i32,
+    inbox: Mutex<Vec<ReactorMsg>>,
+}
+
+enum ReactorMsg {
+    /// An accepted socket routed to this reactor's slab.
+    NewConn(TcpStream),
+    /// A completed request's encoded reply frame, addressed by packed
+    /// [`ConnToken`] — stale generations mean the connection died while
+    /// the request computed, and the frame is simply dropped.
+    Complete { token: u64, frame: Vec<u8>, trace: u64 },
+}
+
+/// One admitted request travelling reactor → pump.
+struct PumpJob {
+    reactor: usize,
+    token: u64,
+    inflight: Box<InFlight>,
+}
+
+/// Everything a reactor thread owns besides the slab itself. Keeping
+/// the slab separate lets helpers hold `&mut Conn` (borrowed from the
+/// slab) and `&mut Ctx` at the same time.
+struct Ctx {
+    idx: usize,
+    epfd: i32,
+    shared: Arc<Shared>,
+    peers: Vec<Arc<ReactorShared>>,
+    next_peer: usize,
+    pump_txs: Vec<mpsc::Sender<PumpJob>>,
+    next_pump: usize,
+    /// Connections with an armed deadline (full backlog or forced
+    /// close) — the only ones the timer sweep must visit.
+    watch: Vec<ConnToken>,
+    scratch: Vec<u8>,
+}
+
+/// The running reactor front-end.
+pub(crate) struct ReactorFront {
+    reactors: Vec<Arc<ReactorShared>>,
+    threads: Vec<JoinHandle<()>>,
+    pumps: Vec<JoinHandle<()>>,
+}
+
+impl ReactorFront {
+    pub(crate) fn start(
+        listener: TcpListener,
+        shared: Arc<Shared>,
+    ) -> anyhow::Result<ReactorFront> {
+        let n_reactors = shared.config.reactor_threads.max(1);
+        let n_pumps = shared.config.completer_threads.max(1);
+        let slab_cap = shared.config.max_connections.div_ceil(n_reactors).max(1);
+
+        let mut reactors: Vec<Arc<ReactorShared>> = Vec::with_capacity(n_reactors);
+        let mut epfds: Vec<i32> = Vec::with_capacity(n_reactors);
+        let close_all = |epfds: &[i32], reactors: &[Arc<ReactorShared>]| {
+            for &fd in epfds {
+                sys::close_fd(fd);
+            }
+            for r in reactors {
+                sys::close_fd(r.wake_fd);
+            }
+        };
+        for _ in 0..n_reactors {
+            let epfd = match sys::epoll_create() {
+                Ok(fd) => fd,
+                Err(e) => {
+                    close_all(&epfds, &reactors);
+                    return Err(e.into());
+                }
+            };
+            epfds.push(epfd);
+            let setup = sys::eventfd_new().and_then(|wake| {
+                sys::epoll_add(epfd, wake, sys::EPOLLIN, WAKE_TOKEN)
+                    .map(|()| wake)
+                    .map_err(|e| {
+                        sys::close_fd(wake);
+                        e
+                    })
+            });
+            match setup {
+                Ok(wake) => reactors.push(Arc::new(ReactorShared {
+                    wake_fd: wake,
+                    inbox: Mutex::new(Vec::new()),
+                })),
+                Err(e) => {
+                    close_all(&epfds, &reactors);
+                    return Err(e.into());
+                }
+            }
+        }
+
+        let mut pump_txs: Vec<mpsc::Sender<PumpJob>> = Vec::with_capacity(n_pumps);
+        let mut pumps: Vec<JoinHandle<()>> = Vec::with_capacity(n_pumps);
+        for p in 0..n_pumps {
+            let (tx, rx) = mpsc::channel::<PumpJob>();
+            pump_txs.push(tx);
+            let pump_shared = Arc::clone(&shared);
+            let pump_reactors = reactors.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("gae-pump-{p}"))
+                .spawn(move || pump_loop(rx, pump_shared, pump_reactors));
+            match spawned {
+                Ok(handle) => pumps.push(handle),
+                Err(e) => {
+                    // Dropping `pump_txs` unblocks the pumps already
+                    // running; they exit on their own.
+                    close_all(&epfds, &reactors);
+                    return Err(e.into());
+                }
+            }
+        }
+
+        let mut threads: Vec<JoinHandle<()>> = Vec::with_capacity(n_reactors);
+        let mut listener_slot = Some(listener);
+        for idx in 0..n_reactors {
+            let lst = if idx == 0 { listener_slot.take() } else { None };
+            let ctx = Ctx {
+                idx,
+                epfd: epfds[idx],
+                shared: Arc::clone(&shared),
+                peers: reactors.clone(),
+                next_peer: 0,
+                pump_txs: pump_txs.clone(),
+                next_pump: idx, // stagger so reactors don't gang on pump 0
+                watch: Vec::new(),
+                scratch: vec![0u8; 64 * 1024],
+            };
+            let me = Arc::clone(&reactors[idx]);
+            let spawned = std::thread::Builder::new()
+                .name(format!("gae-reactor-{idx}"))
+                .spawn(move || reactor_loop(lst, me, ctx, slab_cap));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    // Reactors already running exit via the shutdown
+                    // flag the caller raises on error-drop; fds they
+                    // own close with them. Close only the unclaimed
+                    // epfds here.
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    for r in &reactors {
+                        sys::eventfd_signal(r.wake_fd);
+                    }
+                    for t in threads.drain(..) {
+                        let _ = t.join();
+                    }
+                    drop(pump_txs);
+                    for p in pumps.drain(..) {
+                        let _ = p.join();
+                    }
+                    for &fd in &epfds[idx..] {
+                        sys::close_fd(fd);
+                    }
+                    for r in &reactors {
+                        sys::close_fd(r.wake_fd);
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        drop(pump_txs); // reactor threads hold the only live senders now
+
+        Ok(ReactorFront { reactors, threads, pumps })
+    }
+
+    /// Idempotent teardown; the caller has already raised the shutdown
+    /// flag. Ordering matters: reactors join first (dropping the pump
+    /// senders), then pumps (which may still signal wake fds while
+    /// draining), and only then do the wake fds close — so no fd number
+    /// can be recycled while a thread might still write to it.
+    pub(crate) fn shutdown(&mut self) {
+        for r in &self.reactors {
+            sys::eventfd_signal(r.wake_fd);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        for p in self.pumps.drain(..) {
+            let _ = p.join();
+        }
+        for r in self.reactors.drain(..) {
+            sys::close_fd(r.wake_fd);
+        }
+    }
+}
+
+/// A completion pump: block on admitted requests so the reactors never
+/// have to, then route each reply frame home.
+fn pump_loop(
+    rx: mpsc::Receiver<PumpJob>,
+    shared: Arc<Shared>,
+    reactors: Vec<Arc<ReactorShared>>,
+) {
+    while let Ok(job) = rx.recv() {
+        let trace = job.inflight.trace;
+        let frame = complete_inflight(*job.inflight, &shared);
+        let home = &reactors[job.reactor];
+        home.inbox
+            .lock()
+            .unwrap()
+            .push(ReactorMsg::Complete { token: job.token, frame, trace });
+        sys::eventfd_signal(home.wake_fd);
+    }
+}
+
+fn reactor_loop(
+    listener: Option<TcpListener>,
+    me: Arc<ReactorShared>,
+    mut ctx: Ctx,
+    slab_cap: usize,
+) {
+    let mut slab = ConnSlab::with_capacity(slab_cap);
+    let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; 1024];
+    if let Some(l) = &listener {
+        let _ = sys::epoll_add(ctx.epfd, l.as_raw_fd(), sys::EPOLLIN, LISTENER_TOKEN);
+    }
+    loop {
+        if ctx.shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let timeout = wait_timeout_ms(&mut slab, &ctx);
+        let n = match sys::epoll_wait_events(ctx.epfd, &mut events, timeout) {
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if ctx.shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Connections that received completion frames this batch; they
+        // flush once, after the whole batch is backlogged (that is the
+        // writev coalescing).
+        let mut touched: Vec<ConnToken> = Vec::new();
+        for i in 0..n {
+            let bits = events[i].events;
+            let data = events[i].data;
+            match data {
+                LISTENER_TOKEN => {
+                    if let Some(l) = &listener {
+                        accept_ready(l, &mut slab, &mut ctx);
+                    }
+                }
+                WAKE_TOKEN => drain_inbox(&me, &mut slab, &mut ctx, &mut touched),
+                _ => handle_conn_event(ConnToken::unpack(data), bits, &mut slab, &mut ctx),
+            }
+        }
+        for token in touched {
+            touch_conn(token, &mut slab, &mut ctx);
+        }
+        sweep_deadlines(&mut slab, &mut ctx);
+    }
+    // Dropping the slab closes every connection; the epoll instance
+    // goes with it.
+    drop(slab);
+    sys::close_fd(ctx.epfd);
+}
+
+/// The epoll timeout implied by the earliest armed deadline; `-1`
+/// (block forever) when nothing is deadlined.
+fn wait_timeout_ms(slab: &mut ConnSlab, ctx: &Ctx) -> i32 {
+    if ctx.watch.is_empty() {
+        return -1;
+    }
+    let now = Instant::now();
+    let deadline_of = |conn: &Conn| -> Option<Instant> {
+        let full = conn
+            .backlog_full_since
+            .map(|s| s + ctx.shared.config.slow_conn_deadline);
+        match (full, conn.close_deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    };
+    let mut min_ms: Option<u64> = None;
+    for &token in &ctx.watch {
+        let Some(conn) = slab.get_mut(token) else { continue };
+        if let Some(d) = deadline_of(conn) {
+            let ms = d.saturating_duration_since(now).as_millis() as u64;
+            min_ms = Some(min_ms.map_or(ms, |m| m.min(ms)));
+        }
+    }
+    match min_ms {
+        // +1ms so the sweep runs at-or-after the deadline, not just
+        // before it.
+        Some(ms) => (ms + 1).min(60_000) as i32,
+        None => -1,
+    }
+}
+
+/// Drain the accept queue, dealing new sockets round-robin across all
+/// reactors (self included).
+fn accept_ready(listener: &TcpListener, slab: &mut ConnSlab, ctx: &mut Ctx) {
+    for _ in 0..MAX_ACCEPTS_PER_WAKE {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let target = ctx.next_peer % ctx.peers.len();
+                ctx.next_peer = ctx.next_peer.wrapping_add(1);
+                if target == ctx.idx {
+                    register_conn(stream, slab, ctx);
+                } else {
+                    let peer = &ctx.peers[target];
+                    peer.inbox.lock().unwrap().push(ReactorMsg::NewConn(stream));
+                    sys::eventfd_signal(peer.wake_fd);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            // Transient (ECONNABORTED, EMFILE, …): level-triggered
+            // epoll re-reports the listener if backlog remains.
+            Err(_) => return,
+        }
+    }
+}
+
+/// Adopt an accepted socket into this reactor's slab; a full slab
+/// drops it at the door (the fixed-capacity guarantee).
+fn register_conn(stream: TcpStream, slab: &mut ConnSlab, ctx: &mut Ctx) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Some(token) = slab.insert(Conn::new(stream)) else {
+        return;
+    };
+    let conn = slab.get_mut(token).unwrap();
+    let want = conn.desired_events();
+    let fd = conn.stream.as_raw_fd();
+    if sys::epoll_add(ctx.epfd, fd, want, token.pack()).is_ok() {
+        conn.registered_events = want;
+    } else {
+        slab.remove(token);
+    }
+}
+
+/// Drain the wake eventfd, then the inbox (producers do the reverse:
+/// push, then signal — so nothing is lost, at worst one spurious wake).
+fn drain_inbox(
+    me: &ReactorShared,
+    slab: &mut ConnSlab,
+    ctx: &mut Ctx,
+    touched: &mut Vec<ConnToken>,
+) {
+    sys::eventfd_drain(me.wake_fd);
+    let msgs: Vec<ReactorMsg> = std::mem::take(&mut *me.inbox.lock().unwrap());
+    for msg in msgs {
+        match msg {
+            ReactorMsg::NewConn(stream) => register_conn(stream, slab, ctx),
+            ReactorMsg::Complete { token, frame, trace } => {
+                let token = ConnToken::unpack(token);
+                // Stale generation: the connection died while its
+                // request computed. The frame has no home; drop it.
+                let Some(conn) = slab.get_mut(token) else { continue };
+                conn.inflight = conn.inflight.saturating_sub(1);
+                crate::obs::instant("server.reply", trace);
+                conn.push_frame(frame);
+                if !touched.contains(&token) {
+                    touched.push(token);
+                }
+            }
+        }
+    }
+}
+
+/// One epoll event for a live connection.
+fn handle_conn_event(token: ConnToken, bits: u32, slab: &mut ConnSlab, ctx: &mut Ctx) {
+    let alive = {
+        let Some(conn) = slab.get_mut(token) else { return };
+        if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+            false
+        } else {
+            let mut alive = true;
+            if bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 {
+                alive = read_some(token, conn, ctx);
+            }
+            if alive && !conn.backlog.is_empty() {
+                alive = conn.flush().is_ok();
+                if alive {
+                    refresh_flow(token, conn, &ctx.shared.config, &mut ctx.watch);
+                }
+            }
+            alive
+        }
+    };
+    if !alive {
+        close_conn(token, slab, ctx);
+        return;
+    }
+    finalize(token, slab, ctx);
+}
+
+/// Flush + finalize a connection that just received completion frames.
+fn touch_conn(token: ConnToken, slab: &mut ConnSlab, ctx: &mut Ctx) {
+    let alive = {
+        let Some(conn) = slab.get_mut(token) else { return };
+        match conn.flush() {
+            Ok(_) => {
+                refresh_flow(token, conn, &ctx.shared.config, &mut ctx.watch);
+                true
+            }
+            Err(_) => false,
+        }
+    };
+    if !alive {
+        close_conn(token, slab, ctx);
+        return;
+    }
+    finalize(token, slab, ctx);
+}
+
+/// Pull bytes until the socket runs dry (or flow control pauses the
+/// read side), resuming the frame parse across partial reads. `false`
+/// means the connection is dead.
+fn read_some(token: ConnToken, conn: &mut Conn, ctx: &mut Ctx) -> bool {
+    loop {
+        if conn.read_paused || conn.closing || conn.peer_eof {
+            return true;
+        }
+        let n = match conn.stream.read(&mut ctx.scratch) {
+            Ok(0) => {
+                conn.peer_eof = true;
+                return true;
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        };
+        conn.assembler.feed(&ctx.scratch[..n]);
+        drain_frames(token, conn, ctx);
+        if n < ctx.scratch.len() {
+            // Likely drained the socket; if not, level-triggered epoll
+            // re-reports it and the loop resumes with fresh budget.
+            return true;
+        }
+    }
+}
+
+/// Run every whole frame the assembler now holds through the shared
+/// policy pipeline.
+fn drain_frames(token: ConnToken, conn: &mut Conn, ctx: &mut Ctx) {
+    loop {
+        if conn.closing {
+            return;
+        }
+        let outcome = match conn.assembler.next_frame() {
+            Ok(Some(frame)) => process_frame(frame, &ctx.shared),
+            Ok(None) => return,
+            Err(_) => {
+                // Framing error (bad length prefix): the stream offset
+                // is untrusted. The threaded mode closes without a
+                // reply here; match it for byte-identity.
+                begin_close(conn, ctx);
+                return;
+            }
+        };
+        match outcome {
+            FrameOutcome::Reply(bytes) => conn.push_frame(bytes),
+            FrameOutcome::ReplyClose(bytes) => {
+                conn.push_frame(bytes);
+                begin_close(conn, ctx);
+            }
+            FrameOutcome::Admitted(inflight) => {
+                conn.inflight += 1;
+                let job = PumpJob { reactor: ctx.idx, token: token.pack(), inflight };
+                let lane = ctx.next_pump % ctx.pump_txs.len();
+                ctx.next_pump = ctx.next_pump.wrapping_add(1);
+                // Send only fails during teardown; the client then sees
+                // the connection close, same as a shutdown interrupt.
+                let _ = ctx.pump_txs[lane].send(job);
+            }
+        }
+        refresh_flow(token, conn, &ctx.shared.config, &mut ctx.watch);
+    }
+}
+
+/// Stop reading and tear the connection down once the backlog drains
+/// and in-flight replies land — with a hard deadline so a peer that
+/// never reads cannot pin the slot forever.
+fn begin_close(conn: &mut Conn, ctx: &Ctx) {
+    conn.closing = true;
+    if conn.close_deadline.is_none() {
+        conn.close_deadline = Some(Instant::now() + ctx.shared.config.slow_conn_deadline);
+    }
+}
+
+/// Re-derive flow-control state after the backlog or in-flight count
+/// moved: pause reads at the bounds, resume below half, arm the
+/// slow-consumer clock while the backlog sits full.
+fn refresh_flow(
+    token: ConnToken,
+    conn: &mut Conn,
+    config: &NetServerConfig,
+    watch: &mut Vec<ConnToken>,
+) {
+    let cap = config.write_backlog_frames.max(1);
+    if conn.backlog.len() >= cap {
+        if conn.backlog_full_since.is_none() {
+            conn.backlog_full_since = Some(Instant::now());
+            if !watch.contains(&token) {
+                watch.push(token);
+            }
+        }
+    } else {
+        conn.backlog_full_since = None;
+    }
+    if conn.backlog.len() >= cap || conn.inflight >= COMPLETER_BACKLOG_FRAMES {
+        conn.read_paused = true;
+    } else if conn.read_paused
+        && conn.backlog.len() <= cap / 2
+        && conn.inflight <= COMPLETER_BACKLOG_FRAMES / 2
+    {
+        conn.read_paused = false;
+    }
+}
+
+/// Close-or-rearm decision after any state change, plus the epoll
+/// interest resync.
+fn finalize(token: ConnToken, slab: &mut ConnSlab, ctx: &mut Ctx) {
+    let close = {
+        let Some(conn) = slab.get_mut(token) else { return };
+        let idle = conn.backlog.is_empty() && conn.inflight == 0;
+        let expired = conn
+            .close_deadline
+            .is_some_and(|d| d <= Instant::now());
+        if ((conn.closing || conn.peer_eof) && idle) || (conn.closing && expired) {
+            true
+        } else {
+            if conn.close_deadline.is_some() && !ctx.watch.contains(&token) {
+                ctx.watch.push(token);
+            }
+            sync_interest(conn, token, ctx.epfd);
+            false
+        }
+    };
+    if close {
+        close_conn(token, slab, ctx);
+    }
+}
+
+fn sync_interest(conn: &mut Conn, token: ConnToken, epfd: i32) {
+    let want = conn.desired_events();
+    if want != conn.registered_events
+        && sys::epoll_modify(epfd, conn.stream.as_raw_fd(), want, token.pack()).is_ok()
+    {
+        conn.registered_events = want;
+    }
+}
+
+fn close_conn(token: ConnToken, slab: &mut ConnSlab, ctx: &mut Ctx) {
+    if let Some(conn) = slab.remove(token) {
+        let _ = sys::epoll_del(ctx.epfd, conn.stream.as_raw_fd());
+        // Dropping `conn` closes the socket; the bumped slot generation
+        // makes any in-flight completion for it resolve to nothing.
+    }
+}
+
+/// Visit every deadlined connection: shed slow consumers whose backlog
+/// outlived the deadline, force-close shed/closing connections whose
+/// grace period expired, re-arm the rest.
+fn sweep_deadlines(slab: &mut ConnSlab, ctx: &mut Ctx) {
+    if ctx.watch.is_empty() {
+        return;
+    }
+    let now = Instant::now();
+    let tokens = std::mem::take(&mut ctx.watch);
+    for token in tokens {
+        enum Action {
+            Close,
+            Keep,
+            Drop,
+        }
+        let action = {
+            let Some(conn) = slab.get_mut(token) else { continue };
+            let full_past_deadline = conn.backlog_full_since.is_some_and(|since| {
+                now.duration_since(since) >= ctx.shared.config.slow_conn_deadline
+            });
+            if full_past_deadline && !conn.closing {
+                shed_slow_consumer(conn, ctx, now);
+            }
+            if conn.closing && conn.close_deadline.is_some_and(|d| d <= now) {
+                Action::Close
+            } else if conn.backlog_full_since.is_some() || conn.close_deadline.is_some() {
+                Action::Keep
+            } else {
+                Action::Drop
+            }
+        };
+        match action {
+            Action::Close => close_conn(token, slab, ctx),
+            Action::Keep => {
+                if !ctx.watch.contains(&token) {
+                    ctx.watch.push(token);
+                }
+                // May close immediately if the shed flush drained.
+                finalize(token, slab, ctx);
+            }
+            Action::Drop => {}
+        }
+    }
+}
+
+/// The slow-consumer shed: this peer has not accepted bytes for a full
+/// deadline while owing a full backlog. Keep the partially-written head
+/// frame (framing integrity), drop the rest, append a typed `Shed`
+/// error, and give the close one more deadline to flush.
+fn shed_slow_consumer(conn: &mut Conn, ctx: &Ctx, now: Instant) {
+    if conn.head_written > 0 {
+        conn.backlog.truncate(1);
+    } else {
+        conn.backlog.clear();
+    }
+    conn.push_frame(wire::encode_error(
+        0,
+        ErrorKind::Shed,
+        "write backlog full past deadline; shedding slow consumer",
+    ));
+    conn.closing = true;
+    conn.read_paused = true;
+    conn.backlog_full_since = None;
+    conn.close_deadline = Some(now + ctx.shared.config.slow_conn_deadline);
+    ctx.shared.service.metrics_handle().record_slow_closed();
+    // Best effort: if the socket buffer has room the error frame leaves
+    // now; otherwise EPOLLOUT (or the forced close) handles it.
+    let _ = conn.flush();
+}

@@ -1,0 +1,199 @@
+//! Minimal raw syscall surface for the reactor: `epoll`, `eventfd`,
+//! and the process fd limit.
+//!
+//! The crate vendors no libc binding (the offline dependency policy),
+//! so the half-dozen C ABI entry points the reactor needs are declared
+//! here directly. Everything else the reactor does rides std:
+//! nonblocking `TcpStream` reads, vectored writes via
+//! `Write::write_vectored` (one `writev` per call), and fd ownership
+//! via the stream's own `Drop`. Only the fds std has no type for —
+//! the epoll instance and the eventfd — are closed by hand.
+
+#![allow(clippy::upper_case_acronyms)]
+
+use std::io;
+use std::os::raw::{c_int, c_uint, c_void};
+
+pub(crate) const EPOLLIN: u32 = 0x001;
+pub(crate) const EPOLLOUT: u32 = 0x004;
+pub(crate) const EPOLLERR: u32 = 0x008;
+pub(crate) const EPOLLHUP: u32 = 0x010;
+/// Peer closed its write half — delivered even while `EPOLLIN` is off,
+/// so paused connections still notice disconnects promptly.
+pub(crate) const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+
+/// `O_CLOEXEC` — shared by `EPOLL_CLOEXEC` and `EFD_CLOEXEC`.
+const CLOEXEC: c_int = 0o2000000;
+/// `O_NONBLOCK` == `EFD_NONBLOCK`.
+const EFD_NONBLOCK: c_int = 0o4000;
+
+const RLIMIT_NOFILE: c_int = 7;
+
+/// `struct epoll_event`. The kernel ABI packs it on x86-64 (so the
+/// 12-byte layout matches 32-bit userspace); other architectures use
+/// natural alignment.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+pub(crate) struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout_ms: c_int,
+    ) -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn close(fd: c_int) -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+}
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// A new close-on-exec epoll instance.
+pub(crate) fn epoll_create() -> io::Result<i32> {
+    cvt(unsafe { epoll_create1(CLOEXEC) })
+}
+
+fn epoll_op(epfd: i32, op: c_int, fd: i32, events: u32, data: u64) -> io::Result<()> {
+    let mut ev = EpollEvent { events, data };
+    cvt(unsafe { epoll_ctl(epfd, op, fd, &mut ev) }).map(|_| ())
+}
+
+pub(crate) fn epoll_add(epfd: i32, fd: i32, events: u32, data: u64) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_ADD, fd, events, data)
+}
+
+pub(crate) fn epoll_modify(epfd: i32, fd: i32, events: u32, data: u64) -> io::Result<()> {
+    epoll_op(epfd, EPOLL_CTL_MOD, fd, events, data)
+}
+
+pub(crate) fn epoll_del(epfd: i32, fd: i32) -> io::Result<()> {
+    // A non-null event pointer keeps pre-2.6.9 kernel semantics happy;
+    // the contents are ignored for DEL.
+    epoll_op(epfd, EPOLL_CTL_DEL, fd, 0, 0)
+}
+
+/// Wait for events; `timeout_ms < 0` blocks indefinitely. `EINTR`
+/// surfaces as zero events, not an error — the loop's deadline sweep
+/// runs either way.
+pub(crate) fn epoll_wait_events(
+    epfd: i32,
+    events: &mut [EpollEvent],
+    timeout_ms: i32,
+) -> io::Result<usize> {
+    let n = unsafe {
+        epoll_wait(epfd, events.as_mut_ptr(), events.len() as c_int, timeout_ms)
+    };
+    if n < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+    Ok(n as usize)
+}
+
+/// A new nonblocking close-on-exec eventfd (counter semantics: writes
+/// add, a read drains the whole counter).
+pub(crate) fn eventfd_new() -> io::Result<i32> {
+    cvt(unsafe { eventfd(0, CLOEXEC | EFD_NONBLOCK) })
+}
+
+/// Wake the reactor owning `fd`. Best-effort: a full counter
+/// (`EAGAIN`) already guarantees a pending wakeup.
+pub(crate) fn eventfd_signal(fd: i32) {
+    let one: u64 = 1;
+    let _ = unsafe { write(fd, (&one as *const u64).cast::<c_void>(), 8) };
+}
+
+/// Drain the eventfd counter so the level-triggered `EPOLLIN` clears.
+pub(crate) fn eventfd_drain(fd: i32) {
+    let mut buf: u64 = 0;
+    let _ = unsafe { read(fd, (&mut buf as *mut u64).cast::<c_void>(), 8) };
+}
+
+/// Close a raw fd the reactor opened itself (epoll/eventfd).
+pub(crate) fn close_fd(fd: i32) {
+    let _ = unsafe { close(fd) };
+}
+
+/// `(soft, hard)` RLIMIT_NOFILE.
+pub(crate) fn nofile_limit() -> io::Result<(u64, u64)> {
+    let mut lim = RLimit { rlim_cur: 0, rlim_max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) })?;
+    Ok((lim.rlim_cur, lim.rlim_max))
+}
+
+/// Raise the soft fd limit toward `want`, clamped to the hard limit;
+/// returns the soft limit now in force (which may already exceed
+/// `want`, or fall short of it when the hard limit is lower).
+pub(crate) fn raise_nofile(want: u64) -> io::Result<u64> {
+    let (soft, hard) = nofile_limit()?;
+    if soft >= want {
+        return Ok(soft);
+    }
+    let target = want.min(hard);
+    let lim = RLimit { rlim_cur: target, rlim_max: hard };
+    cvt(unsafe { setrlimit(RLIMIT_NOFILE, &lim) })?;
+    Ok(target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoll_and_eventfd_round_trip() {
+        let ep = epoll_create().unwrap();
+        let ev = eventfd_new().unwrap();
+        epoll_add(ep, ev, EPOLLIN, 42).unwrap();
+        let mut events = [EpollEvent { events: 0, data: 0 }; 4];
+        // Nothing pending: a zero timeout returns no events.
+        assert_eq!(epoll_wait_events(ep, &mut events, 0).unwrap(), 0);
+        eventfd_signal(ev);
+        let n = epoll_wait_events(ep, &mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        let (got_events, got_data) = (events[0].events, events[0].data);
+        assert_ne!(got_events & EPOLLIN, 0);
+        assert_eq!(got_data, 42);
+        // Drained, the level-triggered readiness clears.
+        eventfd_drain(ev);
+        assert_eq!(epoll_wait_events(ep, &mut events, 0).unwrap(), 0);
+        epoll_del(ep, ev).unwrap();
+        close_fd(ev);
+        close_fd(ep);
+    }
+
+    #[test]
+    fn nofile_limit_is_sane() {
+        let (soft, hard) = nofile_limit().unwrap();
+        assert!(soft > 0 && hard >= soft);
+    }
+}

@@ -1,0 +1,204 @@
+//! The thread-per-connection front-end: three blocking threads per
+//! accepted socket.
+//!
+//! ```text
+//!  socket ──► reader ──────────────► completer ──► writer ──► socket
+//!             │  process_frame         │ wait each       │ frame bytes
+//!             │  Reply ────────────────────────────────────►
+//!             └──Admitted(InFlight)───►│ complete_inflight─►
+//! ```
+//!
+//! The reader never blocks on compute: it decodes, admits, and hands
+//! the [`InFlight`] to the completer, so a pipelined client's N
+//! in-flight frames overlap inside the service's worker pool exactly
+//! as N in-process clients would. Error frames (quota, shed,
+//! malformed) and cache hits leave from the reader directly; both
+//! paths merge in the writer thread, which owns the socket's write
+//! half. All policy lives in [`process_frame`] / [`complete_inflight`]
+//! (`mod.rs`), shared byte-for-byte with the reactor mode.
+
+use super::{complete_inflight, process_frame, FrameOutcome, InFlight, Shared};
+use crate::net::wire;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Threads-mode bookkeeping around the common [`Shared`] core.
+struct ThreadState {
+    shared: Arc<Shared>,
+    /// Clones of *live* accepted streams (keyed by connection id), for
+    /// interrupting blocked reads at shutdown; a connection removes its
+    /// own entry on exit so closed sockets don't pin fds forever.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+    next_conn_id: AtomicU64,
+}
+
+/// The running thread-per-connection front-end.
+pub(crate) struct ThreadFront {
+    state: Arc<ThreadState>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ThreadFront {
+    pub(crate) fn start(listener: TcpListener, shared: Arc<Shared>) -> ThreadFront {
+        let state = Arc::new(ThreadState {
+            shared,
+            conns: Mutex::new(HashMap::new()),
+            conn_threads: Mutex::new(Vec::new()),
+            next_conn_id: AtomicU64::new(0),
+        });
+        let accept_state = Arc::clone(&state);
+        let accept_thread =
+            std::thread::spawn(move || accept_loop(listener, accept_state));
+        ThreadFront { state, accept_thread: Some(accept_thread) }
+    }
+
+    /// Idempotent teardown: interrupt every connection, join all
+    /// threads. The caller has already raised the shutdown flag.
+    pub(crate) fn shutdown(&mut self) {
+        for (_, stream) in self.state.conns.lock().unwrap().drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        // Second pass: a connection accepted while the first drain ran
+        // registers its stream before its thread spawns, so with the
+        // accept loop joined this catches every straggler.
+        for (_, stream) in self.state.conns.lock().unwrap().drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let threads: Vec<JoinHandle<()>> =
+            self.state.conn_threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ThreadState>) {
+    while !state.shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Accepted sockets must be blocking regardless of what
+                // they inherit from the nonblocking listener.
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let conn_id = state.next_conn_id.fetch_add(1, Ordering::Relaxed);
+                if let Ok(clone) = stream.try_clone() {
+                    state.conns.lock().unwrap().insert(conn_id, clone);
+                }
+                let conn_state = Arc::clone(&state);
+                let handle = std::thread::spawn(move || {
+                    connection_loop(stream, conn_id, conn_state)
+                });
+                // Reap handles of connections that already finished so a
+                // long-lived server doesn't accumulate one per client.
+                let mut threads = state.conn_threads.lock().unwrap();
+                threads.retain(|t| !t.is_finished());
+                threads.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {
+                // Transient accept failures (ECONNABORTED, EMFILE, …)
+                // must not kill the accept path of a live server; back
+                // off briefly and keep listening.
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn connection_loop(stream: TcpStream, conn_id: u64, state: Arc<ThreadState>) {
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            state.conns.lock().unwrap().remove(&conn_id);
+            return;
+        }
+    };
+    let backlog = state.shared.config.write_backlog_frames.max(1);
+    let (out_tx, out_rx) = mpsc::sync_channel::<Vec<u8>>(backlog);
+    let (done_tx, done_rx) =
+        mpsc::sync_channel::<Box<InFlight>>(super::COMPLETER_BACKLOG_FRAMES);
+    let writer = std::thread::spawn(move || writer_loop(stream, out_rx));
+    let completer_shared = Arc::clone(&state.shared);
+    let completer_out = out_tx.clone();
+    let completer = std::thread::spawn(move || {
+        completer_loop(done_rx, completer_out, completer_shared)
+    });
+
+    read_loop(read_half, &state.shared, &done_tx, &out_tx);
+
+    // Closing both senders lets the completer drain in-flight work and
+    // the writer flush whatever the drain produced, then both exit.
+    drop(done_tx);
+    drop(out_tx);
+    let _ = completer.join();
+    let _ = writer.join();
+    // Deregister so the fd clone doesn't outlive the connection.
+    state.conns.lock().unwrap().remove(&conn_id);
+}
+
+fn read_loop(
+    stream: TcpStream,
+    shared: &Shared,
+    done_tx: &mpsc::SyncSender<Box<InFlight>>,
+    out_tx: &mpsc::SyncSender<Vec<u8>>,
+) {
+    let mut reader = std::io::BufReader::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(Some(frame)) => frame,
+            Ok(None) | Err(_) => return, // EOF or dead socket
+        };
+        match process_frame(&frame, shared) {
+            FrameOutcome::Reply(bytes) => {
+                let _ = out_tx.send(bytes);
+            }
+            FrameOutcome::ReplyClose(bytes) => {
+                let _ = out_tx.send(bytes);
+                return;
+            }
+            FrameOutcome::Admitted(inflight) => {
+                let _ = done_tx.send(inflight);
+            }
+        }
+    }
+}
+
+fn completer_loop(
+    done_rx: mpsc::Receiver<Box<InFlight>>,
+    out_tx: mpsc::SyncSender<Vec<u8>>,
+    shared: Arc<Shared>,
+) {
+    while let Ok(inflight) = done_rx.recv() {
+        let frame = complete_inflight(*inflight, &shared);
+        let _ = out_tx.send(frame);
+    }
+}
+
+fn writer_loop(stream: TcpStream, out_rx: mpsc::Receiver<Vec<u8>>) {
+    let mut writer = std::io::BufWriter::new(stream);
+    while let Ok(frame) = out_rx.recv() {
+        if writer.write_all(&frame).is_err() {
+            return;
+        }
+        // Drain whatever else is already queued before paying the flush.
+        while let Ok(next) = out_rx.try_recv() {
+            if writer.write_all(&next).is_err() {
+                return;
+            }
+        }
+        if writer.flush().is_err() {
+            return;
+        }
+    }
+}

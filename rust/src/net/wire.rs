@@ -126,8 +126,10 @@ use std::time::Duration;
 
 /// Frame magic: `"HGAE"`.
 pub const MAGIC: [u8; 4] = *b"HGAE";
-/// Current protocol version.
-pub const VERSION: u8 = 3;
+/// Current protocol version. v4 added `slow_closed` to the metrics RPC
+/// body — any layout change bumps this byte, even an appended field,
+/// because the decoder reads by offset, not by name.
+pub const VERSION: u8 = 4;
 /// Upper bound on a single frame (sanity guard against corrupt length
 /// prefixes allocating unbounded buffers).
 pub const MAX_FRAME_BYTES: usize = 256 << 20;
@@ -833,6 +835,7 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
     put_u64(&mut body, s.quota_shed);
     put_u64(&mut body, s.cache_hits);
     put_u64(&mut body, s.cache_misses);
+    put_u64(&mut body, s.slow_closed);
     put_u64(&mut body, s.routed_small);
     put_u64(&mut body, s.slab_tiles);
     put_u64(&mut body, s.packed_tiles);
@@ -888,6 +891,7 @@ fn decode_metrics_response_body(
     let quota_shed = r.u64()?;
     let cache_hits = r.u64()?;
     let cache_misses = r.u64()?;
+    let slow_closed = r.u64()?;
     let routed_small = r.u64()?;
     let slab_tiles = r.u64()?;
     let packed_tiles = r.u64()?;
@@ -933,6 +937,7 @@ fn decode_metrics_response_body(
             quota_shed,
             cache_hits,
             cache_misses,
+            slow_closed,
             routed_small,
             slab_tiles,
             packed_tiles,
@@ -1270,6 +1275,87 @@ pub fn read_frame(reader: &mut impl Read) -> std::io::Result<Option<Vec<u8>>> {
     let mut frame = vec![0u8; len];
     reader.read_exact(&mut frame)?;
     Ok(Some(frame))
+}
+
+/// Resumable frame assembly — the nonblocking reader's counterpart to
+/// [`read_frame`]. A blocking reader can sit in `read_exact` until a
+/// frame completes; a reactor cannot, so each connection owns one
+/// `FrameAssembler`, [`feed`](FrameAssembler::feed)s it whatever chunk
+/// the socket produced (down to a single byte), and drains completed
+/// frames with [`next_frame`](FrameAssembler::next_frame). Yielded
+/// frames are the bytes *after* the length prefix — exactly the
+/// [`decode_frame_lazy`] input — byte-identical to what `read_frame`
+/// would have returned for the same stream, regardless of how the
+/// stream was chunked.
+///
+/// The length prefix is validated against the same bounds as
+/// [`read_frame`] as soon as its 4 bytes are buffered, so a corrupt
+/// prefix is rejected before its declared payload is ever awaited (let
+/// alone allocated). After a [`WireDecodeError::BadLength`] the stream
+/// offset can no longer be trusted; the connection must close.
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already returned as frames; reclaimed on `feed`.
+    pos: usize,
+}
+
+impl FrameAssembler {
+    pub fn new() -> FrameAssembler {
+        FrameAssembler { buf: Vec::new(), pos: 0 }
+    }
+
+    /// Append one chunk of received bytes. Consumed bytes from earlier
+    /// frames are compacted away here, so the buffer holds at most one
+    /// partial frame plus whatever complete frames are not yet drained.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            if self.pos >= self.buf.len() {
+                self.buf.clear();
+            } else {
+                self.buf.copy_within(self.pos.., 0);
+                let rest = self.buf.len() - self.pos;
+                self.buf.truncate(rest);
+            }
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The next complete frame, if one is buffered. `Ok(None)` means
+    /// more bytes are needed (a partial prefix or partial body);
+    /// `Err(BadLength)` means the stream is unframed garbage.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, WireDecodeError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let p = self.pos;
+        let len =
+            u32::from_le_bytes([self.buf[p], self.buf[p + 1], self.buf[p + 2], self.buf[p + 3]])
+                as usize;
+        if len < HEADER_BYTES + CHECKSUM_BYTES || len > MAX_FRAME_BYTES {
+            return Err(WireDecodeError::BadLength(len));
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        self.pos = p + 4 + len;
+        Ok(Some(&self.buf[p + 4..p + 4 + len]))
+    }
+
+    /// Bytes buffered but not yet returned as frames (partial frame
+    /// and/or undrained complete frames).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// `true` when no partial frame is pending — the stream is at a
+    /// frame boundary, so an EOF here is clean (the `Ok(None)` shape of
+    /// [`read_frame`]) rather than a truncation.
+    pub fn at_boundary(&self) -> bool {
+        self.buffered() == 0
+    }
 }
 
 #[cfg(test)]
@@ -1877,5 +1963,81 @@ mod tests {
         bad.extend_from_slice(&[0u8; 16]);
         let mut cursor = &bad[..];
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    /// Drain every complete frame currently in the assembler.
+    fn drain(asm: &mut FrameAssembler) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(f) = asm.next_frame().unwrap() {
+            out.push(f.to_vec());
+        }
+        out
+    }
+
+    #[test]
+    fn assembler_matches_read_frame_on_one_byte_chunks() {
+        let mut g = Gen::new(19);
+        let (enc, ..) = encode(&mut g, CodecKind::Exp1Baseline, 8, 4, 3);
+        let err = encode_error(9, ErrorKind::Shed, "m");
+        let mreq = encode_metrics_request(3);
+        let mut stream = Vec::new();
+        for f in [&enc.bytes, &err, &mreq] {
+            stream.extend_from_slice(f);
+        }
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            asm.feed(&[b]);
+            got.extend(drain(&mut asm));
+        }
+        assert!(asm.at_boundary(), "stream ends on a frame boundary");
+        let mut cursor = &stream[..];
+        let mut want = Vec::new();
+        while let Some(f) = read_frame(&mut cursor).unwrap() {
+            want.push(f);
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn assembler_split_exactly_at_the_length_prefix_boundary() {
+        // Regression: a chunk ending after the 4 length-prefix bytes
+        // (zero body bytes buffered) must park as a partial frame — not
+        // yield an empty frame, not error — and complete on the next
+        // chunk.
+        let err = encode_error(1, ErrorKind::Quota, "boundary");
+        let mut asm = FrameAssembler::new();
+        asm.feed(&err[..4]);
+        assert!(asm.next_frame().unwrap().is_none());
+        assert!(!asm.at_boundary(), "a parked prefix is mid-frame, not clean EOF");
+        asm.feed(&err[4..]);
+        let got = drain(&mut asm);
+        assert_eq!(got, vec![err[4..].to_vec()]);
+        assert!(asm.at_boundary());
+
+        // The same split with a second frame's prefix riding the tail
+        // of the first frame's last chunk.
+        let second = encode_metrics_request(2);
+        let mut asm = FrameAssembler::new();
+        let mut chunk = err[..4].to_vec();
+        asm.feed(&chunk);
+        chunk.clear();
+        chunk.extend_from_slice(&err[4..]);
+        chunk.extend_from_slice(&second[..4]);
+        asm.feed(&chunk);
+        assert_eq!(drain(&mut asm), vec![err[4..].to_vec()]);
+        asm.feed(&second[4..]);
+        assert_eq!(drain(&mut asm), vec![second[4..].to_vec()]);
+    }
+
+    #[test]
+    fn assembler_refuses_an_insane_length_prefix_immediately() {
+        let mut asm = FrameAssembler::new();
+        asm.feed(&u32::MAX.to_le_bytes());
+        assert!(matches!(asm.next_frame(), Err(WireDecodeError::BadLength(_))));
+        // Too-small lengths are as unframed as too-large ones.
+        let mut asm = FrameAssembler::new();
+        asm.feed(&3u32.to_le_bytes());
+        assert!(matches!(asm.next_frame(), Err(WireDecodeError::BadLength(_))));
     }
 }

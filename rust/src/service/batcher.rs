@@ -50,8 +50,11 @@
 //!    recycled `seg_pool` trajectory buffers.
 //! 3. **Unpack** — [`unpack_lanes_into`] appends per-lane outputs onto
 //!    `outs`. The per-lane vectors are the *response payload* (they
-//!    leave with the reply), so they are the only allocations a warmed
-//!    worker still makes; every plane-sized buffer is scratch-resident.
+//!    leave with the reply), so no arena can hold them; instead they
+//!    are drawn from the size-classed recycling pool
+//!    ([`crate::service::vecpool`]) and given back by the plane seam
+//!    after its `[T, B]` scatter — so a warmed worker serving
+//!    plane-shaped traffic allocates nothing per group at all.
 //! 4. **Reset** — `flat`, `outs`, `segments`, `lens` are cleared (not
 //!    shrunk) and the next group reuses their capacity. After one
 //!    maximum-shape group, per-group heap traffic on the compute path
@@ -347,8 +350,10 @@ pub fn unpack_lanes(lens: &[usize], lanes: usize, out: &GaeOutput) -> Vec<GaeOut
 /// Scratch-path unpack: append per-lane outputs (trimmed to their true
 /// lengths, input order) onto `outs` from dense `[T, B]` advantage /
 /// rewards-to-go planes. The per-lane vectors are the response payload
-/// and leave with the reply — they are the only per-group allocations
-/// remaining on the warmed worker hot path.
+/// and leave with the reply, so they come from the size-classed
+/// recycling pool ([`crate::service::vecpool`]): warm classes serve
+/// them without touching the allocator, and the plane seam returns
+/// them after scattering.
 pub fn unpack_lanes_into(
     lens: &[usize],
     lanes: usize,
@@ -357,8 +362,8 @@ pub fn unpack_lanes_into(
     outs: &mut Vec<GaeOutput>,
 ) {
     for (i, &len) in lens.iter().enumerate() {
-        let mut advantages = Vec::with_capacity(len);
-        let mut rewards_to_go = Vec::with_capacity(len);
+        let mut advantages = crate::service::vecpool::take(len);
+        let mut rewards_to_go = crate::service::vecpool::take(len);
         for t in 0..len {
             advantages.push(adv[t * lanes + i]);
             rewards_to_go.push(rtg[t * lanes + i]);

@@ -115,6 +115,9 @@ pub struct ServiceMetrics {
     quota_shed: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    /// Connections the reactor front-end closed for being slow
+    /// consumers (write backlog full past the shed deadline).
+    slow_closed: AtomicU64,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     routed_small: AtomicU64,
     /// Tiles computed in place on a resident plane slab (zero gather).
@@ -150,6 +153,7 @@ impl ServiceMetrics {
             quota_shed: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            slow_closed: AtomicU64::new(0),
             routed_small: AtomicU64::new(0),
             slab_tiles: AtomicU64::new(0),
             packed_tiles: AtomicU64::new(0),
@@ -201,6 +205,12 @@ impl ServiceMetrics {
     /// The response cache was consulted and had no entry.
     pub(crate) fn record_cache_miss(&self) {
         self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The reactor front-end shed a connection whose write backlog
+    /// stayed full past the slow-consumer deadline.
+    pub(crate) fn record_slow_closed(&self) {
+        self.slow_closed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Size-threshold routing sent one coalesced group to the scalar loop.
@@ -302,6 +312,7 @@ impl ServiceMetrics {
             quota_shed: self.quota_shed.load(Ordering::Relaxed),
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            slow_closed: self.slow_closed.load(Ordering::Relaxed),
             routed_small: self.routed_small.load(Ordering::Relaxed),
             slab_tiles: self.slab_tiles.load(Ordering::Relaxed),
             packed_tiles: self.packed_tiles.load(Ordering::Relaxed),
@@ -389,6 +400,10 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     /// Cache lookups that missed (cache enabled, no entry).
     pub cache_misses: u64,
+    /// Connections the reactor front-end closed for being slow
+    /// consumers: write backlog full past the shed deadline, answered
+    /// with a typed `Shed` error frame and deregistered.
+    pub slow_closed: u64,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     pub routed_small: u64,
     /// Tiles computed in place on a resident plane slab (zero gather).
@@ -442,10 +457,11 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "net:      cache {} hit / {} miss | quota shed {} | routed-to-scalar {} (threshold {})",
+            "net:      cache {} hit / {} miss | quota shed {} | slow-closed {} | routed-to-scalar {} (threshold {})",
             self.cache_hits,
             self.cache_misses,
             self.quota_shed,
+            self.slow_closed,
             self.routed_small,
             self.scalar_route_max_elements
         )?;
@@ -506,6 +522,7 @@ mod tests {
         m.record_cache_hit();
         m.record_cache_miss();
         m.record_cache_miss();
+        m.record_slow_closed();
         m.record_routed_small();
         m.record_batch(32, Some(1000), Duration::from_micros(200));
         m.record_batch(16, None, Duration::from_micros(100));
@@ -521,6 +538,7 @@ mod tests {
         assert_eq!(s.quota_shed, 1);
         assert_eq!(s.cache_hits, 1);
         assert_eq!(s.cache_misses, 2);
+        assert_eq!(s.slow_closed, 1);
         assert_eq!(s.routed_small, 1);
         assert_eq!(s.slab_tiles, 2);
         assert_eq!(s.packed_tiles, 1);

@@ -74,6 +74,7 @@ pub mod plane;
 pub mod queue;
 pub mod request;
 pub mod server;
+pub mod vecpool;
 pub mod worker;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile, WorkerScratch};

@@ -474,6 +474,13 @@ impl PlanesPending {
                     hw_cycles = Some(hw_cycles.unwrap_or(0) + c);
                 }
             }
+            // The per-column vectors are dead after the scatter — this
+            // is the give-back half of the response-vector recycling
+            // loop (the worker's unpack holds the take half).
+            for out in resp.outputs {
+                crate::service::vecpool::give(out.advantages);
+                crate::service::vecpool::give(out.rewards_to_go);
+            }
         }
         Ok(PlaneGae { advantages, rewards_to_go, hw_cycles })
     }

@@ -1,0 +1,176 @@
+//! Size-classed recycling pool for per-lane response vectors — the last
+//! per-group allocation on the warmed worker compute path.
+//!
+//! Every other buffer in the group pipeline is arena-reused
+//! ([`WorkerScratch`](crate::service::batcher::WorkerScratch)), but the
+//! per-lane `advantages` / `rewards_to_go` vectors are the response
+//! payload: they *leave* the worker inside [`GaeOutput`]s, so a scratch
+//! arena cannot hold them. They come back, though — the plane seam
+//! ([`PlanesPending::wait`](crate::service::PlanesPending::wait))
+//! scatters each column's output into the `[T, B]` planes and then owns
+//! two dead vectors per column. This pool closes that loop:
+//!
+//! - workers [`take`] capacity-classed vectors instead of
+//!   `Vec::with_capacity` (a warmed class pops without touching the
+//!   allocator),
+//! - the plane seam [`give`]s the scattered-out vectors back.
+//!
+//! Classes are powers of two: `take(len)` draws from the class that
+//! guarantees capacity ≥ `len`, `give` files by the class its capacity
+//! still guarantees, so a recycled vector never reallocates when pushed
+//! to its stated length. Each class is bounded ([`MAX_PER_CLASS`]) and
+//! vectors above [`MAX_POOLED_CAPACITY`] are dropped, so traffic that
+//! never returns vectors (trajectory clients keep their responses) or
+//! one burst of giant lanes cannot pin unbounded memory — the pool
+//! degrades to plain allocation, never grows past its cap.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Largest pooled capacity: 2^24 f32s (64 MiB), the wire layer's
+/// [`MAX_PLANE_ELEMENTS`](crate::net::wire::MAX_PLANE_ELEMENTS) — no
+/// legitimate lane is longer.
+const MAX_POOLED_CAPACITY: usize = 1 << 24;
+/// Class count: capacities 2^0 ..= 2^24.
+const CLASSES: usize = 25;
+/// Vectors kept per class; beyond this a returned vector is dropped.
+/// 64 vectors × 2 planes covers a 32-lane group per class with no
+/// steady-state misses, while capping worst-case pool memory.
+const MAX_PER_CLASS: usize = 64;
+
+/// Pool hit/miss counters, for tests and capacity planning.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `take` calls served from a warmed class (no allocation).
+    pub hits: u64,
+    /// `take` calls that fell back to a fresh allocation.
+    pub misses: u64,
+    /// `give`n vectors dropped (class full or over the capacity cap).
+    pub dropped: u64,
+}
+
+struct VecPool {
+    classes: [Mutex<Vec<Vec<f32>>>; CLASSES],
+    hits: AtomicU64,
+    misses: AtomicU64,
+    dropped: AtomicU64,
+}
+
+static POOL: VecPool = VecPool {
+    classes: [const { Mutex::new(Vec::new()) }; CLASSES],
+    hits: AtomicU64::new(0),
+    misses: AtomicU64::new(0),
+    dropped: AtomicU64::new(0),
+};
+
+/// Smallest class whose capacity (2^class) is ≥ `len`.
+fn class_for_take(len: usize) -> Option<usize> {
+    if len > MAX_POOLED_CAPACITY {
+        return None;
+    }
+    Some(len.next_power_of_two().trailing_zeros() as usize)
+}
+
+/// Largest class whose capacity (2^class) the vector still guarantees.
+fn class_for_give(capacity: usize) -> Option<usize> {
+    if capacity == 0 {
+        return None;
+    }
+    let class = usize::BITS as usize - 1 - capacity.leading_zeros() as usize;
+    Some(class.min(CLASSES - 1))
+}
+
+/// An empty vector with capacity ≥ `len`, recycled when the class is
+/// warm. Lengths above the pooled cap fall through to a plain
+/// allocation.
+pub fn take(len: usize) -> Vec<f32> {
+    if let Some(class) = class_for_take(len) {
+        if let Some(mut v) = POOL.classes[class].lock().unwrap().pop() {
+            POOL.hits.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(v.capacity() >= len);
+            v.clear();
+            return v;
+        }
+    }
+    POOL.misses.fetch_add(1, Ordering::Relaxed);
+    Vec::with_capacity(len)
+}
+
+/// [`take`] resized to `len` zeros — for callers that scatter into the
+/// vector by index instead of pushing.
+pub fn take_zeroed(len: usize) -> Vec<f32> {
+    let mut v = take(len);
+    v.resize(len, 0.0);
+    v
+}
+
+/// Return a dead vector to its capacity class. Oversized and
+/// over-quota vectors are dropped — the pool is a bounded cache, not a
+/// leak.
+pub fn give(v: Vec<f32>) {
+    if let Some(class) = class_for_give(v.capacity()) {
+        if v.capacity() <= MAX_POOLED_CAPACITY {
+            let mut slot = POOL.classes[class].lock().unwrap();
+            if slot.len() < MAX_PER_CLASS {
+                slot.push(v);
+                return;
+            }
+        }
+    }
+    POOL.dropped.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Point-in-time counters (cumulative since process start).
+pub fn stats() -> PoolStats {
+    PoolStats {
+        hits: POOL.hits.load(Ordering::Relaxed),
+        misses: POOL.misses.load(Ordering::Relaxed),
+        dropped: POOL.dropped.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_capacity_always_covers_len() {
+        for len in [0, 1, 2, 3, 7, 8, 9, 100, 1000, 4097] {
+            let v = take(len);
+            assert!(v.capacity() >= len, "len {len} got cap {}", v.capacity());
+            assert!(v.is_empty());
+            give(v);
+        }
+    }
+
+    #[test]
+    fn recycled_vector_never_reallocates_at_its_class_length() {
+        // A vector given back with capacity C must serve take(len) for
+        // any len ≤ the class it was filed under.
+        let v = Vec::with_capacity(100); // filed under class 64
+        give(v);
+        let mut v = take(60); // class 64 → the 100-cap vector qualifies
+        let cap = v.capacity();
+        assert!(cap >= 60);
+        v.resize(60, 1.0);
+        assert_eq!(v.capacity(), cap, "resize within class must not reallocate");
+        give(v);
+    }
+
+    #[test]
+    fn zero_length_vectors_are_not_pooled() {
+        let before = stats();
+        give(Vec::new());
+        assert_eq!(stats().dropped, before.dropped + 1);
+    }
+
+    #[test]
+    fn take_zeroed_is_full_of_zeros() {
+        let mut warm = take(16);
+        warm.extend_from_slice(&[7.0; 16]);
+        give(warm);
+        let v = take_zeroed(16);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|&x| x == 0.0), "recycled contents must be cleared");
+    }
+}

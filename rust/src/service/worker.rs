@@ -37,7 +37,7 @@
 
 use crate::coordinator::gae_stage::{split_at_dones_with, GaeBackend};
 use crate::gae::batched::gae_batched_strided_into;
-use crate::gae::reference::gae_indexed;
+use crate::gae::reference::gae_indexed_into;
 use crate::gae::{GaeOutput, GaeParams};
 use crate::hwsim::GaeHwSim;
 use crate::service::batcher::{unpack_lanes_into, DynamicBatcher, WorkerScratch};
@@ -153,13 +153,23 @@ fn process_group(
 /// to the shared indexed kernel, so the bits match [`gae_trajectory`]
 /// (crate::gae::reference::gae_trajectory) on the gathered equivalent.
 fn gae_lane(params: &GaeParams, lane: &Lane) -> GaeOutput {
-    gae_indexed(
+    // Output vectors come from the recycling pool, like the batched
+    // path's unpack — the scalar route is the small-group fast path and
+    // must not reintroduce per-lane allocator traffic.
+    let mut out = GaeOutput {
+        advantages: crate::service::vecpool::take(lane.len()),
+        rewards_to_go: crate::service::vecpool::take(lane.len()),
+    };
+    gae_indexed_into(
         params,
         lane.len(),
         |t| lane.reward(t),
         |t| lane.value(t),
         |t| lane.done(t),
-    )
+        &mut out.advantages,
+        &mut out.rewards_to_go,
+    );
+    out
 }
 
 /// Pick the backend for one coalesced group: the configured one, unless
@@ -271,8 +281,8 @@ fn compute_lanes(
             let base = outs.len();
             for lane in lanes {
                 outs.push(GaeOutput {
-                    advantages: vec![0.0; lane.len()],
-                    rewards_to_go: vec![0.0; lane.len()],
+                    advantages: crate::service::vecpool::take_zeroed(lane.len()),
+                    rewards_to_go: crate::service::vecpool::take_zeroed(lane.len()),
                 });
             }
             for (&(lane_idx, start, len), seg_out) in

@@ -3,12 +3,17 @@
 //! f32 bit-identity against in-process submission, pipelined
 //! out-of-order completion, response-cache hits, per-tenant quota
 //! refusals, admission-control sheds, and malformed-frame handling.
+//!
+//! Every scenario runs under **both** server modes (`threads` and, on
+//! Linux, `reactor`): the `*_threads` / `*_reactor` test pairs call one
+//! shared body, so the two front-ends are pinned to byte-identical
+//! client-observable behavior by construction.
 
 use heppo::coordinator::GaeBackend;
 use heppo::gae::{GaeParams, Trajectory};
 use heppo::net::{
     ErrorKind, NetClient, NetClientConfig, NetError, NetServer, NetServerConfig,
-    PlaneCodec, QuotaConfig,
+    PlaneCodec, QuotaConfig, ServerMode,
 };
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
@@ -35,6 +40,10 @@ fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> Arc<Ga
     )
 }
 
+fn cfg(mode: ServerMode) -> NetServerConfig {
+    NetServerConfig { mode, ..NetServerConfig::default() }
+}
+
 fn planes(g: &mut Gen, t_len: usize, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
     let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
@@ -57,13 +66,34 @@ fn f32_client(addr: &str) -> NetClient {
     .unwrap()
 }
 
-#[test]
-fn f32_codec_is_bit_identical_to_in_process_submission() {
+/// Declare a `<name>_threads` / `<name>_reactor` test pair over one
+/// mode-parameterized body.
+macro_rules! both_modes {
+    ($name:ident, $body:ident) => {
+        mod $name {
+            use super::*;
+
+            #[test]
+            fn threads() {
+                $body(ServerMode::Threads);
+            }
+
+            #[cfg(target_os = "linux")]
+            #[test]
+            fn reactor() {
+                $body(ServerMode::Reactor);
+            }
+        }
+    };
+}
+
+both_modes!(f32_codec_is_bit_identical_to_in_process_submission, bit_identical_body);
+fn bit_identical_body(mode: ServerMode) {
     let svc = service(2, GaeBackend::Scalar, 128);
     let server = NetServer::start(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+        NetServerConfig { cache_entries: 0, ..cfg(mode) },
     )
     .unwrap();
     let client = f32_client(&server.local_addr().to_string());
@@ -95,12 +125,10 @@ fn f32_codec_is_bit_identical_to_in_process_submission() {
     server.shutdown();
 }
 
-#[test]
-fn pipelined_frames_complete_out_of_order_safely() {
+both_modes!(pipelined_frames_complete_out_of_order_safely, pipelined_body);
+fn pipelined_body(mode: ServerMode) {
     let svc = service(4, GaeBackend::Batched, 256);
-    let server =
-        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
-            .unwrap();
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg(mode)).unwrap();
     let client = f32_client(&server.local_addr().to_string());
 
     // Mixed sizes so completion order differs from submission order;
@@ -131,13 +159,13 @@ fn pipelined_frames_complete_out_of_order_safely() {
     server.shutdown();
 }
 
-#[test]
-fn identical_quantized_payloads_hit_the_response_cache() {
+both_modes!(identical_quantized_payloads_hit_the_response_cache, cache_hit_body);
+fn cache_hit_body(mode: ServerMode) {
     let svc = service(2, GaeBackend::Scalar, 128);
     let server = NetServer::start(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        NetServerConfig { cache_entries: 64, ..NetServerConfig::default() },
+        NetServerConfig { cache_entries: 64, ..cfg(mode) },
     )
     .unwrap();
     let client = NetClient::connect(
@@ -167,13 +195,13 @@ fn identical_quantized_payloads_hit_the_response_cache() {
     server.shutdown();
 }
 
-#[test]
-fn cache_is_keyed_per_tenant() {
+both_modes!(cache_is_keyed_per_tenant, tenant_cache_body);
+fn tenant_cache_body(mode: ServerMode) {
     let svc = service(2, GaeBackend::Scalar, 128);
     let server = NetServer::start(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        NetServerConfig { cache_entries: 64, ..NetServerConfig::default() },
+        NetServerConfig { cache_entries: 64, ..cfg(mode) },
     )
     .unwrap();
     let addr = server.local_addr().to_string();
@@ -218,13 +246,13 @@ fn cache_is_keyed_per_tenant() {
     server.shutdown();
 }
 
-#[test]
-fn quantized_replies_are_opt_in_lossy_and_cache_consistent() {
+both_modes!(quantized_replies_are_opt_in_lossy_and_cache_consistent, quantized_body);
+fn quantized_body(mode: ServerMode) {
     let svc = service(2, GaeBackend::Scalar, 128);
     let server = NetServer::start(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        NetServerConfig { cache_entries: 64, ..NetServerConfig::default() },
+        NetServerConfig { cache_entries: 64, ..cfg(mode) },
     )
     .unwrap();
     let client = NetClient::connect(
@@ -271,8 +299,8 @@ fn quantized_replies_are_opt_in_lossy_and_cache_consistent() {
     server.shutdown();
 }
 
-#[test]
-fn per_tenant_quotas_refuse_with_typed_error_frames() {
+both_modes!(per_tenant_quotas_refuse_with_typed_error_frames, quota_body);
+fn quota_body(mode: ServerMode) {
     let svc = service(2, GaeBackend::Scalar, 128);
     let (t_len, batch) = (16, 4); // 64 elements per frame
     let server = NetServer::start(
@@ -285,6 +313,7 @@ fn per_tenant_quotas_refuse_with_typed_error_frames() {
             }),
             cache_entries: 0,
             shed_on_overload: true,
+            ..cfg(mode)
         },
     )
     .unwrap();
@@ -320,15 +349,15 @@ fn per_tenant_quotas_refuse_with_typed_error_frames() {
     server.shutdown();
 }
 
-#[test]
-fn overload_sheds_with_typed_error_frames() {
+both_modes!(overload_sheds_with_typed_error_frames, overload_body);
+fn overload_body(mode: ServerMode) {
     // One worker pinned busy + a capacity-2 queue: an 8-column frame
     // cannot fully admit, so fail-fast admission must shed it.
     let svc = service(1, GaeBackend::Scalar, 2);
     let server = NetServer::start(
         Arc::clone(&svc),
         "127.0.0.1:0",
-        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+        NetServerConfig { cache_entries: 0, ..cfg(mode) },
     )
     .unwrap();
     let client = f32_client(&server.local_addr().to_string());
@@ -361,15 +390,13 @@ fn overload_sheds_with_typed_error_frames() {
     server.shutdown();
 }
 
-#[test]
-fn malformed_frames_get_a_typed_error_and_a_clean_close() {
+both_modes!(malformed_frames_get_a_typed_error_and_a_clean_close, malformed_body);
+fn malformed_body(mode: ServerMode) {
     use heppo::net::wire;
     use std::io::Write;
 
     let svc = service(1, GaeBackend::Scalar, 16);
-    let server =
-        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
-            .unwrap();
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg(mode)).unwrap();
     let mut raw = std::net::TcpStream::connect(server.local_addr()).unwrap();
 
     // A length-prefixed frame of garbage: structurally a frame, but the
@@ -393,12 +420,10 @@ fn malformed_frames_get_a_typed_error_and_a_clean_close() {
     server.shutdown();
 }
 
-#[test]
-fn disconnect_fails_pending_calls_instead_of_hanging() {
+both_modes!(disconnect_fails_pending_calls_instead_of_hanging, disconnect_body);
+fn disconnect_body(mode: ServerMode) {
     let svc = service(1, GaeBackend::Scalar, 16);
-    let server =
-        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", NetServerConfig::default())
-            .unwrap();
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg(mode)).unwrap();
     let client = f32_client(&server.local_addr().to_string());
     let mut g = Gen::new(13);
     let (r, v, d) = planes(&mut g, 8, 2);

@@ -1,0 +1,363 @@
+//! Reactor-mode integration: behaviors only the epoll front-end has.
+//!
+//! `net_loopback.rs` already pins every client-observable scenario to
+//! byte-identical behavior across both server modes. This file covers
+//! the reactor's own machinery over real sockets: the resumable parse
+//! under pathological write chunking (1-byte and random splits,
+//! interleaved across connections), the slow-consumer shed (typed
+//! `Shed` frame + `slow_closed` metric), the metrics RPC, trace-id
+//! propagation across the reactor's cross-thread completion hop, and
+//! idle-connection fan-in not starving active peers.
+
+#![cfg(target_os = "linux")]
+
+use heppo::coordinator::GaeBackend;
+use heppo::gae::GaeParams;
+use heppo::net::{
+    wire, ErrorKind, NetClient, NetClientConfig, NetServer, NetServerConfig, PlaneCodec,
+    ServerMode,
+};
+use heppo::quant::CodecKind;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::testing::Gen;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn service(workers: usize, queue_capacity: usize) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers,
+            backend: GaeBackend::Scalar,
+            queue_capacity,
+            batcher: BatcherConfig {
+                max_batch_lanes: 64,
+                tile_lanes: 16,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn reactor_cfg() -> NetServerConfig {
+    NetServerConfig { mode: ServerMode::Reactor, ..NetServerConfig::default() }
+}
+
+fn request_frame(g: &mut Gen, seq: u64, t_len: usize, batch: usize) -> Vec<u8> {
+    let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+    let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+    let done_mask: Vec<f32> = (0..t_len * batch)
+        .map(|_| if g.bool_p(0.05) { 1.0 } else { 0.0 })
+        .collect();
+    wire::encode_request(
+        seq,
+        "chunky",
+        PlaneCodec::F32,
+        PlaneCodec::F32,
+        0,
+        t_len,
+        batch,
+        &rewards,
+        &values,
+        &done_mask,
+    )
+    .unwrap()
+    .bytes
+}
+
+/// Read `count` response frames and key them by sequence number.
+fn read_responses(stream: &TcpStream, count: usize) -> HashMap<u64, Vec<u8>> {
+    let clone = stream.try_clone().unwrap();
+    clone.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = std::io::BufReader::new(clone);
+    let mut by_seq = HashMap::new();
+    for _ in 0..count {
+        let frame = wire::read_frame(&mut reader).unwrap().expect("response frame");
+        match wire::decode_frame(&frame).unwrap() {
+            wire::Frame::Response(resp) => {
+                assert!(by_seq.insert(resp.seq, frame).is_none(), "duplicate seq");
+            }
+            other => panic!("expected a response frame, got {other:?}"),
+        }
+    }
+    by_seq
+}
+
+/// The tentpole property over real sockets: the same frames delivered
+/// whole, as 1-byte trickles, as random splits, and as splits pinned to
+/// the length-prefix boundary — interleaved across connections — must
+/// produce byte-identical response sets.
+#[test]
+fn chunked_and_interleaved_writes_match_whole_frame_responses() {
+    let svc = service(2, 256);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..reactor_cfg() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    const FRAMES: usize = 6;
+
+    // One frame set per chunking style; the control connection sends
+    // each set whole, so styles with different payloads still compare
+    // against their own exact baseline.
+    let mut g = Gen::new(42);
+    let frame_sets: Vec<Vec<Vec<u8>>> = (0..3)
+        .map(|_| {
+            (1..=FRAMES as u64)
+                .map(|seq| {
+                    let (t_len, batch) = (g.usize_in(1, 50), g.usize_in(1, 4));
+                    request_frame(&mut g, seq, t_len, batch)
+                })
+                .collect()
+        })
+        .collect();
+
+    // Control: whole-frame writes of every set on dedicated conns.
+    let mut expected: Vec<HashMap<u64, Vec<u8>>> = Vec::new();
+    for set in &frame_sets {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for frame in set {
+            conn.write_all(frame).unwrap();
+        }
+        conn.flush().unwrap();
+        expected.push(read_responses(&conn, FRAMES));
+    }
+
+    // Chunked: style 0 = 1-byte trickle, style 1 = random splits,
+    // style 2 = splits pinned around the 4-byte length prefix (the
+    // prefix itself arrives in two pieces, the regression case).
+    let mut chunk_queues: Vec<std::collections::VecDeque<Vec<u8>>> = frame_sets
+        .iter()
+        .enumerate()
+        .map(|(style, set)| {
+            let mut chunks = std::collections::VecDeque::new();
+            for frame in set {
+                let mut rest: &[u8] = frame;
+                while !rest.is_empty() {
+                    let take = match style {
+                        0 => 1,
+                        1 => g.usize_in(1, rest.len().min(64)),
+                        _ => {
+                            // First two chunks split the prefix at byte
+                            // 2, then the body in large pieces.
+                            if rest.len() == frame.len() {
+                                2
+                            } else if rest.len() == frame.len() - 2 {
+                                3
+                            } else {
+                                rest.len().min(512)
+                            }
+                        }
+                    };
+                    chunks.push_back(rest[..take].to_vec());
+                    rest = &rest[take..];
+                }
+            }
+            chunks
+        })
+        .collect();
+    let conns: Vec<TcpStream> =
+        (0..3).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    // Interleave: one chunk per connection per round, so partial frames
+    // from different connections are in flight simultaneously.
+    loop {
+        let mut wrote = false;
+        for (i, queue) in chunk_queues.iter_mut().enumerate() {
+            if let Some(chunk) = queue.pop_front() {
+                (&conns[i]).write_all(&chunk).unwrap();
+                wrote = true;
+            }
+        }
+        if !wrote {
+            break;
+        }
+    }
+    for (i, conn) in conns.iter().enumerate() {
+        let got = read_responses(conn, FRAMES);
+        assert_eq!(
+            got, expected[i],
+            "chunking style {i} produced different response bytes"
+        );
+    }
+    assert_eq!(server.frames_received(), 2 * 3 * FRAMES as u64);
+    server.shutdown();
+}
+
+/// A client that pipelines big requests and never reads must be shed:
+/// the write backlog fills past the deadline, the server appends a
+/// typed `Shed` error frame (seq 0 — connection-level), counts it in
+/// `slow_closed`, and closes the socket.
+#[test]
+fn slow_consumer_is_shed_with_typed_error_and_metrics_tick() {
+    let svc = service(2, 256);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            cache_entries: 0,
+            write_backlog_frames: 2,
+            slow_conn_deadline: Duration::from_millis(800),
+            reactor_threads: 1,
+            completer_threads: 2,
+            ..reactor_cfg()
+        },
+    )
+    .unwrap();
+    let conn = TcpStream::connect(server.local_addr()).unwrap();
+    let mut write_half = conn.try_clone().unwrap();
+    write_half.set_write_timeout(Some(Duration::from_secs(30))).unwrap();
+    // ~260 KB per request / response: a handful of stuck responses
+    // overflow the kernel buffers, then the 2-frame backlog.
+    let writer = std::thread::spawn(move || {
+        let mut g = Gen::new(9);
+        for seq in 1..=16u64 {
+            let frame = request_frame(&mut g, seq, 8000, 4);
+            // EPIPE/timeout once the shed lands is the expected exit.
+            if write_half.write_all(&frame).is_err() {
+                break;
+            }
+        }
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while svc.metrics().slow_closed == 0 {
+        assert!(Instant::now() < deadline, "slow consumer was never shed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Drain what the server managed to send: whole response frames,
+    // then the shed notice, then EOF — the kept-partial-head rule means
+    // the stream stays framed all the way down.
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = std::io::BufReader::new(&conn);
+    let mut shed_frames = 0;
+    while let Ok(Some(frame)) = wire::read_frame(&mut reader) {
+        if let Ok(wire::Frame::Error(err)) = wire::decode_frame(&frame) {
+            assert_eq!(err.kind, ErrorKind::Shed, "unexpected error: {err:?}");
+            assert_eq!(err.seq, 0, "slow-consumer sheds are connection-level");
+            shed_frames += 1;
+        }
+    }
+    assert_eq!(shed_frames, 1, "exactly one shed notice expected");
+    assert_eq!(svc.metrics().slow_closed, 1);
+    writer.join().unwrap();
+    server.shutdown();
+}
+
+/// The metrics RPC answers inline from the reactor loop (it must not
+/// queue behind plane compute) and carries the new `slow_closed` field.
+#[test]
+fn metrics_rpc_over_reactor_reports_cache_and_shed_counters() {
+    let svc = service(2, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 64, ..reactor_cfg() },
+    )
+    .unwrap();
+    let client = NetClient::connect(
+        &server.local_addr().to_string(),
+        NetClientConfig::default(),
+    )
+    .unwrap();
+    let mut g = Gen::new(17);
+    let t_len = 12;
+    let rewards = g.vec_normal_f32(t_len, 0.0, 1.0);
+    let values = g.vec_normal_f32(t_len + 1, 0.0, 1.0);
+    let done = vec![0.0; t_len];
+    client.call_planes(t_len, 1, &rewards, &values, &done).unwrap();
+    let second = client.call_planes(t_len, 1, &rewards, &values, &done).unwrap();
+    assert!(second.cache_hit);
+
+    let snap = client.fetch_metrics().unwrap();
+    assert_eq!((snap.cache_hits, snap.cache_misses), (1, 1));
+    assert_eq!(snap.slow_closed, 0);
+    server.shutdown();
+}
+
+/// A traced request keeps one trace id across the whole reactor path:
+/// decode on the event loop, enqueue, and the completion hop back from
+/// the pump thread (`server.reply`).
+#[test]
+fn traced_request_spans_cross_the_reactor_completion_hop() {
+    let svc = service(1, 64);
+    let server =
+        NetServer::start(Arc::clone(&svc), "127.0.0.1:0", reactor_cfg()).unwrap();
+    let client = NetClient::connect(
+        &server.local_addr().to_string(),
+        NetClientConfig {
+            tenant: "traced".to_string(),
+            codec: CodecKind::Exp1Baseline,
+            bits: 8,
+            resp: PlaneCodec::F32,
+        },
+    )
+    .unwrap();
+
+    heppo::obs::take_events(); // discard unrelated earlier activity
+    heppo::obs::set_enabled(true);
+    let mut g = Gen::new(23);
+    let rewards = g.vec_normal_f32(16, 0.0, 1.0);
+    let values = g.vec_normal_f32(17, 0.0, 1.0);
+    let done = vec![0.0; 16];
+    client.call_planes(16, 1, &rewards, &values, &done).unwrap();
+    heppo::obs::set_enabled(false);
+
+    assert_eq!(client.wire_stats().traced_frames, 1);
+    let events = heppo::obs::take_events();
+    // Other tests may be tracing concurrently; it suffices that *some*
+    // trace id (ours is guaranteed complete, the call returned) walked
+    // the whole path decode → enqueue → reply → complete.
+    let full_chain = events
+        .iter()
+        .filter(|e| e.name == "server.decode" && e.trace != 0)
+        .any(|d| {
+            ["server.enqueue", "server.reply", "client.complete"]
+                .iter()
+                .all(|name| events.iter().any(|e| e.name == *name && e.trace == d.trace))
+        });
+    assert!(full_chain, "no trace id crossed the whole reactor path intact");
+    server.shutdown();
+}
+
+/// Hundreds of idle connections must cost the reactor nothing: an
+/// active client behind them still gets every answer.
+#[test]
+fn idle_connection_fanin_does_not_starve_active_clients() {
+    let svc = service(2, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { max_connections: 2048, ..reactor_cfg() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let idle: Vec<TcpStream> =
+        (0..300).map(|_| TcpStream::connect(addr).unwrap()).collect();
+
+    let client = NetClient::connect(
+        &addr.to_string(),
+        NetClientConfig { resp: PlaneCodec::F32, ..NetClientConfig::default() },
+    )
+    .unwrap();
+    let mut g = Gen::new(5);
+    for _ in 0..5 {
+        let t_len = g.usize_in(1, 32);
+        let rewards = g.vec_normal_f32(t_len * 2, 0.0, 1.0);
+        let values = g.vec_normal_f32((t_len + 1) * 2, 0.0, 1.0);
+        let done = vec![0.0; t_len * 2];
+        let out = client.call_planes(t_len, 2, &rewards, &values, &done).unwrap();
+        assert_eq!(out.advantages.len(), t_len * 2);
+    }
+    assert_eq!(server.frames_received(), 5);
+    drop(idle);
+    server.shutdown();
+}

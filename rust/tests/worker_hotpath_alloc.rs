@@ -13,6 +13,10 @@
 //! packed-tile path, and the scalar reference are bit-identical across
 //! random ragged and aligned groups (including column windows with
 //! `stride > width`).
+//!
+//! The vec-pool guard pins the response-vector recycling loop
+//! (`service::vecpool`): a warmed take→fill→give cycle must be
+//! allocation-free and served entirely from pool hits.
 
 use heppo::coordinator::GaeBackend;
 use heppo::gae::batched::{gae_batched, gae_batched_strided_into};
@@ -272,6 +276,44 @@ fn slab_packed_and_scalar_reference_are_bit_identical() {
             }
         }
     });
+}
+
+#[test]
+fn vecpool_steady_take_give_cycle_allocates_nothing() {
+    use heppo::service::vecpool;
+    // Class 1024 is not touched by the other tests in this binary (the
+    // service tests move ≤ 256-element lanes), so parallel test threads
+    // cannot drain our warmed class mid-measurement.
+    const LEN: usize = 1024;
+    // Warm-up: populates the class with enough vectors to cover the
+    // loop's peak of two outstanding, and grows the class's own storage.
+    for _ in 0..4 {
+        let a = vecpool::take(LEN);
+        let b = vecpool::take_zeroed(LEN);
+        vecpool::give(a);
+        vecpool::give(b);
+    }
+    let stats_before = vecpool::stats();
+    let before = thread_allocs();
+    for i in 0..64 {
+        let mut adv = vecpool::take(LEN);
+        adv.resize(LEN, i as f32);
+        let mut rtg = vecpool::take_zeroed(LEN);
+        rtg[0] = i as f32;
+        vecpool::give(adv);
+        vecpool::give(rtg);
+    }
+    assert_eq!(
+        thread_allocs() - before,
+        0,
+        "warmed take/fill/give cycle must be allocation-free"
+    );
+    let stats_after = vecpool::stats();
+    assert!(
+        stats_after.hits - stats_before.hits >= 128,
+        "all 128 takes must be pool hits, counted {}",
+        stats_after.hits - stats_before.hits
+    );
 }
 
 #[test]
