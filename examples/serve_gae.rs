@@ -27,8 +27,13 @@
 //! Chrome-trace/Perfetto JSON on exit (open in `chrome://tracing` or
 //! <https://ui.perfetto.dev>). In `--connect` modes,
 //! `--metrics-interval SECS` periodically fetches the remote shard's
-//! full [`MetricsSnapshot`](heppo::service::MetricsSnapshot) over the
-//! wire metrics RPC (the fleet view for a sharded fleet) and prints it.
+//! [`MetricsSnapshot`](heppo::service::MetricsSnapshot) over the wire
+//! metrics RPC and prints *interval deltas* plus the shard's 10s
+//! windowed quantiles and SLO verdict (the fleet view, with per-shard
+//! windows and SLO health, for a sharded fleet). A `--listen` server
+//! additionally answers plaintext `GET /metrics` (Prometheus text) and
+//! `GET /traces` (retained-exemplar Chrome-trace JSON) on the same
+//! port it serves frames on — `curl http://ADDR/metrics` just works.
 //!
 //! ```text
 //! cargo run --release --example serve_gae -- --workers 8 --open-loop
@@ -214,10 +219,12 @@ struct ConnectParams {
     metrics_interval: u64,
 }
 
-/// Spawn the periodic metrics reporter inside `scope` when enabled:
-/// every `interval` seconds (polled coarsely so shutdown is prompt) it
-/// calls `fetch` and prints the result until `stop` is set.
-fn spawn_metrics_ticker<'scope, 'env>(
+/// Spawn a periodic report printer inside `scope` when enabled: every
+/// `interval` seconds (polled coarsely so shutdown is prompt) it calls
+/// `fetch` and prints the result until `stop` is set. Used for the
+/// fabric's fleet view, whose Display already carries per-shard
+/// windowed rates and SLO verdicts.
+fn spawn_report_ticker<'scope, 'env>(
     scope: &'scope std::thread::Scope<'scope, 'env>,
     interval: u64,
     stop: &'scope AtomicBool,
@@ -241,6 +248,93 @@ fn spawn_metrics_ticker<'scope, 'env>(
             next = Instant::now() + interval;
         }
     });
+}
+
+/// Single-shard metrics ticker: fetches a full snapshot each interval
+/// but prints *interval deltas* (what happened since the last tick)
+/// plus the shard's own 10-second windowed quantiles and SLO verdict —
+/// a live view, instead of lifetime-cumulative counters that flatten
+/// out minutes into a run.
+fn spawn_metrics_ticker<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    interval: u64,
+    stop: &'scope AtomicBool,
+    fetch: impl Fn() -> anyhow::Result<heppo::service::MetricsSnapshot> + Send + 'scope,
+) {
+    if interval == 0 {
+        return;
+    }
+    let interval = Duration::from_secs(interval);
+    scope.spawn(move || {
+        let mut next = Instant::now() + interval;
+        let mut prev: Option<(Instant, heppo::service::MetricsSnapshot)> = None;
+        while !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(100));
+            if Instant::now() < next {
+                continue;
+            }
+            match fetch() {
+                Ok(snap) => {
+                    println!("\n[metrics RPC]\n{}", interval_report(prev.as_ref(), &snap));
+                    prev = Some((Instant::now(), snap));
+                }
+                Err(e) => eprintln!("[metrics RPC] fetch failed: {e}"),
+            }
+            next = Instant::now() + interval;
+        }
+    });
+}
+
+/// Render one metrics tick: counter deltas against the previous sample
+/// (rates over the real elapsed interval), then the current 10s window
+/// and SLO burn rates straight off the snapshot.
+fn interval_report(
+    prev: Option<&(Instant, heppo::service::MetricsSnapshot)>,
+    cur: &heppo::service::MetricsSnapshot,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    match prev {
+        Some((at, p)) => {
+            let dt = at.elapsed().as_secs_f64().max(1e-9);
+            let completed = cur.completed.saturating_sub(p.completed);
+            let elements = cur.elements.saturating_sub(p.elements);
+            let hits = cur.cache_hits.saturating_sub(p.cache_hits);
+            let shed = cur.shed.saturating_sub(p.shed);
+            let quota = cur.quota_shed.saturating_sub(p.quota_shed);
+            let _ = writeln!(
+                out,
+                "interval: {completed} completed ({:.1}/s), {} elem/s, \
+                 {hits} cache hits, {shed} shed, {quota} quota over {dt:.1}s",
+                completed as f64 / dt,
+                format_si(elements as f64 / dt),
+            );
+        }
+        None => {
+            let _ = writeln!(out, "interval: first sample (deltas start next tick)");
+        }
+    }
+    let w = cur.window(10);
+    let _ = writeln!(
+        out,
+        "window(10s): {:.1} rps, {} elem/s | total µs p50 {:.0} p95 {:.0} p99 {:.0} | {} errors, {} slow",
+        w.rate_rps,
+        format_si(w.elem_per_sec),
+        w.total_us.p50,
+        w.total_us.p95,
+        w.total_us.p99,
+        w.errors,
+        w.slow,
+    );
+    let _ = write!(
+        out,
+        "slo: {} (burn 1s {:.2} / 10s {:.2} / 60s {:.2})",
+        cur.slo.health.as_str(),
+        cur.slo.burn_1s,
+        cur.slo.burn_10s,
+        cur.slo.burn_60s,
+    );
+    out
 }
 
 fn connect_params(args: &Args) -> anyhow::Result<ConnectParams> {
@@ -372,9 +466,7 @@ fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
     let results: Vec<anyhow::Result<Outcomes>> = std::thread::scope(|s| {
         let pool = &pool;
         spawn_metrics_ticker(s, p.metrics_interval, &stop, move || {
-            pool.fetch_metrics()
-                .map(|m| m.to_string())
-                .map_err(|e| anyhow::anyhow!("{e}"))
+            pool.fetch_metrics().map_err(|e| anyhow::anyhow!("{e}"))
         });
         let joins: Vec<_> = (0..p.clients)
             .map(|c| {
@@ -479,8 +571,9 @@ fn run_connect_fabric(p: &ConnectParams, addrs: &[String]) -> anyhow::Result<()>
     let t0 = Instant::now();
     let results: Vec<anyhow::Result<Outcomes>> = std::thread::scope(|s| {
         let fabric_ref = &fabric;
-        spawn_metrics_ticker(s, p.metrics_interval, &stop, move || {
-            // fleet() pulls remote snapshots over the metrics RPC.
+        spawn_report_ticker(s, p.metrics_interval, &stop, move || {
+            // fleet() pulls remote snapshots over the metrics RPC; its
+            // Display carries per-shard windowed rates + SLO verdicts.
             Ok(fabric_ref.fleet().to_string())
         });
         let joins: Vec<_> = (0..p.clients)
@@ -603,10 +696,7 @@ fn run_connect_single(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
     std::thread::scope(|s| {
         let client = &client;
         spawn_metrics_ticker(s, p.metrics_interval, &stop, move || {
-            client
-                .fetch_metrics()
-                .map(|m| m.to_string())
-                .map_err(|e| anyhow::anyhow!("{e}"))
+            client.fetch_metrics().map_err(|e| anyhow::anyhow!("{e}"))
         });
         let r = (|| -> anyhow::Result<()> {
             for _ in 0..n_requests {

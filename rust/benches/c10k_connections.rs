@@ -65,6 +65,7 @@ fn service() -> Arc<GaeService> {
             sim_rows: 64,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            ..ServiceConfig::default()
         })
         .expect("service start"),
     )

@@ -92,6 +92,7 @@ fn shard_service(workers: usize, queue_capacity: usize) -> Arc<GaeService> {
             sim_rows: 16,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            ..ServiceConfig::default()
         })
         .expect("shard service"),
     )

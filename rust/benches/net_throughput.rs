@@ -92,6 +92,7 @@ fn service(workers: usize) -> Arc<GaeService> {
             sim_rows: 64,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            ..ServiceConfig::default()
         })
         .expect("service start"),
     )

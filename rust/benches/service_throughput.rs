@@ -61,6 +61,7 @@ fn run_config(
         sim_rows: 64,
         scalar_route_max_elements: 0,
         gae: GaeParams::default(),
+        ..ServiceConfig::default()
     })
     .expect("service start");
 

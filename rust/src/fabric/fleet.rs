@@ -12,6 +12,7 @@
 //! service column reading `None`, which the aggregation treats as
 //! "unknown", not zero.
 
+use crate::obs::slo::SloHealth;
 use crate::service::{MetricsSnapshot, TenantSnapshot};
 use std::collections::HashMap;
 use std::fmt;
@@ -35,6 +36,25 @@ pub struct ShardStatus {
     pub service: Option<MetricsSnapshot>,
 }
 
+impl ShardStatus {
+    /// The shard's SLO verdict as the fleet sees it: the snapshot's
+    /// multi-window burn-rate health, overridden to `Critical` while
+    /// the router has the shard marked unhealthy (a shard that cannot
+    /// take traffic is failing its objective by definition), and
+    /// degraded to `Warn` for a nominally-healthy remote shard that
+    /// did not answer the metrics RPC (its burn rates are unknowable,
+    /// which is not the same as fine).
+    pub fn slo_health(&self) -> SloHealth {
+        if !self.healthy {
+            return SloHealth::Critical;
+        }
+        match &self.service {
+            Some(m) => m.slo.health,
+            None => SloHealth::Warn,
+        }
+    }
+}
+
 /// Aggregated point-in-time view of a [`GaeFabric`](crate::fabric::GaeFabric).
 #[derive(Debug, Clone)]
 pub struct FleetSnapshot {
@@ -52,6 +72,10 @@ pub struct FleetSnapshot {
     /// Per-tenant breakdown merged across in-process shard snapshots,
     /// heaviest (by elements) first.
     pub tenants: Vec<TenantSnapshot>,
+    /// Worst per-shard SLO verdict across the fleet (an operator pages
+    /// on the worst shard, not the average one); `Ok` for an empty
+    /// fleet.
+    pub health: SloHealth,
 }
 
 impl FleetSnapshot {
@@ -73,6 +97,11 @@ impl FleetSnapshot {
                 .filter_map(|s| s.service.as_ref())
                 .flat_map(|m| m.tenants.iter()),
         );
+        let health = shards
+            .iter()
+            .map(|s| s.slo_health())
+            .max()
+            .unwrap_or(SloHealth::Ok);
         FleetSnapshot {
             shards,
             submitted,
@@ -81,6 +110,7 @@ impl FleetSnapshot {
             healthy_shards,
             elements,
             tenants,
+            health,
         }
     }
 }
@@ -116,9 +146,10 @@ impl fmt::Display for FleetSnapshot {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "fleet:    {} shards ({} healthy) | {} submitted, {} completed, {} failed over | {} elements (in-process)",
+            "fleet:    {} shards ({} healthy) | slo {} | {} submitted, {} completed, {} failed over | {} elements (in-process)",
             self.shards.len(),
             self.healthy_shards,
+            self.health.as_str(),
             self.submitted,
             self.completed,
             self.failed_over,
@@ -127,17 +158,25 @@ impl fmt::Display for FleetSnapshot {
         for s in &self.shards {
             writeln!(
                 f,
-                "  {:<12} {} | {} submitted / {} completed / {} failed over{}",
+                "  {:<12} {} slo:{} | {} submitted / {} completed / {} failed over{}",
                 s.label,
                 if s.healthy { "healthy" } else { "UNHEALTHY" },
+                s.slo_health().as_str(),
                 s.submitted,
                 s.completed,
                 s.failed_over,
                 match &s.service {
-                    Some(m) => format!(
-                        " | {} elem, queue {}, shed {}",
-                        m.elements, m.queue_depth, m.shed
-                    ),
+                    Some(m) => {
+                        let w = m.window(10);
+                        format!(
+                            " | {} elem, queue {}, shed {} | {:.1} rps / p99 {:.0}µs (10s)",
+                            m.elements,
+                            m.queue_depth,
+                            m.shed,
+                            w.rate_rps,
+                            w.total_us.p99,
+                        )
+                    }
                     None => " | remote".to_string(),
                 },
             )?;
@@ -227,5 +266,36 @@ mod tests {
         assert_eq!(fleet.healthy_shards, 0);
         assert!(fleet.tenants.is_empty());
         assert!(fleet.to_string().contains("UNHEALTHY"));
+        // An unhealthy shard is Critical regardless of its last snapshot.
+        assert_eq!(fleet.health, SloHealth::Critical);
+    }
+
+    #[test]
+    fn fleet_health_is_the_worst_shard_verdict() {
+        let ok = status("s0", 3, vec![]);
+        assert_eq!(ok.slo_health(), SloHealth::Ok);
+
+        // Healthy but silent remote: burn rates unknowable → Warn.
+        let silent = ShardStatus {
+            label: "remote-0".to_string(),
+            healthy: true,
+            submitted: 1,
+            completed: 1,
+            failed_over: 0,
+            service: None,
+        };
+        assert_eq!(silent.slo_health(), SloHealth::Warn);
+
+        let fleet = FleetSnapshot::aggregate(vec![ok.clone(), silent]);
+        assert_eq!(fleet.health, SloHealth::Warn, "worst shard wins");
+        assert!(fleet.to_string().contains("slo warn"), "{fleet}");
+
+        let empty = FleetSnapshot::aggregate(vec![]);
+        assert_eq!(empty.health, SloHealth::Ok);
+
+        let down = ShardStatus { healthy: false, ..ok.clone() };
+        let fleet = FleetSnapshot::aggregate(vec![ok, down]);
+        assert_eq!(fleet.health, SloHealth::Critical);
+        assert!(fleet.to_string().contains("slo:critical"), "{fleet}");
     }
 }

@@ -196,7 +196,8 @@ fn reader_loop(
                     route(&registry, err.seq, Err(remote));
                 }
             }
-            Ok(Frame::Request(_)) | Ok(Frame::MetricsRequest(_)) => {
+            Ok(Frame::Request(_)) | Ok(Frame::MetricsRequest(_))
+            | Ok(Frame::TraceRequest(_)) => {
                 fail_all(
                     &registry,
                     &metrics,
@@ -205,6 +206,9 @@ fn reader_loop(
                 );
                 return;
             }
+            // The pool never issues trace RPCs; an unsolicited reply is
+            // droppable, not fatal.
+            Ok(Frame::TraceResponse(_)) => {}
             Err(e) => {
                 fail_all(&registry, &metrics, &closed, NetError::Decode(e.to_string()));
                 return;

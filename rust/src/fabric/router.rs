@@ -581,7 +581,10 @@ impl GaeFabric {
     }
 
     /// Point-in-time fleet view: per-shard status plus aggregated
-    /// totals and the merged per-tenant breakdown.
+    /// totals and the merged per-tenant breakdown. Each shard carries
+    /// its windowed rates and SLO burn-rate verdict (unhealthy shards
+    /// read `Critical` regardless of their last snapshot), and the
+    /// snapshot's `health` is the worst verdict in the fleet.
     pub fn fleet(&self) -> FleetSnapshot {
         let shards: Vec<ShardStatus> = self
             .inner

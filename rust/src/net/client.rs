@@ -126,6 +126,8 @@ struct PendingSlot {
 type PendingMap = Arc<Mutex<HashMap<u64, PendingSlot>>>;
 type MetricsReply = Result<MetricsSnapshot, NetError>;
 type MetricsPendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<MetricsReply>>>>;
+type TraceReply = Result<Vec<wire::WireExemplar>, NetError>;
+type TracePendingMap = Arc<Mutex<HashMap<u64, mpsc::Sender<TraceReply>>>>;
 
 /// Round-trip accounting the reader thread updates as replies land.
 #[derive(Default)]
@@ -209,6 +211,8 @@ pub struct NetClient {
     /// In-flight metrics RPCs, a separate map so snapshot replies can
     /// never collide with a plane response slot.
     metrics_pending: MetricsPendingMap,
+    /// In-flight trace RPCs (tail-retained exemplar fetches), likewise.
+    traces_pending: TracePendingMap,
     rtt: Arc<RttStats>,
     reader: Option<JoinHandle<()>>,
     /// Set by the reader on exit; submits after that fail immediately
@@ -231,14 +235,23 @@ impl NetClient {
         let write_half = stream.try_clone()?;
         let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
         let metrics_pending: MetricsPendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let traces_pending: TracePendingMap = Arc::new(Mutex::new(HashMap::new()));
         let rtt = Arc::new(RttStats::default());
         let closed = Arc::new(AtomicBool::new(false));
         let reader_pending = Arc::clone(&pending);
         let reader_metrics = Arc::clone(&metrics_pending);
+        let reader_traces = Arc::clone(&traces_pending);
         let reader_rtt = Arc::clone(&rtt);
         let reader_closed = Arc::clone(&closed);
         let reader = std::thread::spawn(move || {
-            reader_loop(read_half, reader_pending, reader_metrics, reader_rtt, reader_closed)
+            reader_loop(
+                read_half,
+                reader_pending,
+                reader_metrics,
+                reader_traces,
+                reader_rtt,
+                reader_closed,
+            )
         });
         Ok(NetClient {
             config,
@@ -246,6 +259,7 @@ impl NetClient {
             stream,
             pending,
             metrics_pending,
+            traces_pending,
             rtt,
             reader: Some(reader),
             closed,
@@ -371,6 +385,33 @@ impl NetClient {
         rx.recv().map_err(|_| NetError::Disconnected)?
     }
 
+    /// Fetch the serving side's tail-retained trace exemplars over the
+    /// wire (newest first) — the trace RPC. Span names arrive as owned
+    /// strings ([`wire::WireSpanEvent`]).
+    pub fn fetch_traces(&self) -> Result<Vec<wire::WireExemplar>, NetError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(NetError::Disconnected);
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let bytes = wire::encode_trace_request(seq);
+        let (tx, rx) = mpsc::channel();
+        self.traces_pending.lock().unwrap().insert(seq, tx);
+        let write_result = {
+            let mut writer = self.writer.lock().unwrap();
+            writer.write_all(&bytes).and_then(|_| writer.flush())
+        };
+        if let Err(e) = write_result {
+            self.traces_pending.lock().unwrap().remove(&seq);
+            return Err(NetError::Io(e.to_string()));
+        }
+        self.wire_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        if self.closed.load(Ordering::SeqCst) {
+            self.traces_pending.lock().unwrap().remove(&seq);
+            return Err(NetError::Disconnected);
+        }
+        rx.recv().map_err(|_| NetError::Disconnected)?
+    }
+
     /// Transport accounting since connect.
     pub fn wire_stats(&self) -> WireStats {
         WireStats {
@@ -416,9 +457,14 @@ fn route(pending: &PendingMap, rtt: &RttStats, seq: u64, reply: Reply) {
     }
 }
 
-/// Fail every in-flight call (planes and metrics) with the same error
-/// and stop reading.
-fn broadcast(pending: &PendingMap, metrics: &MetricsPendingMap, error: NetError) {
+/// Fail every in-flight call (planes, metrics, traces) with the same
+/// error and stop reading.
+fn broadcast(
+    pending: &PendingMap,
+    metrics: &MetricsPendingMap,
+    traces: &TracePendingMap,
+    error: NetError,
+) {
     let slots: Vec<PendingSlot> =
         pending.lock().unwrap().drain().map(|(_, slot)| slot).collect();
     for slot in slots {
@@ -429,18 +475,24 @@ fn broadcast(pending: &PendingMap, metrics: &MetricsPendingMap, error: NetError)
     for tx in slots {
         let _ = tx.send(Err(error.clone()));
     }
+    let slots: Vec<mpsc::Sender<TraceReply>> =
+        traces.lock().unwrap().drain().map(|(_, tx)| tx).collect();
+    for tx in slots {
+        let _ = tx.send(Err(error.clone()));
+    }
 }
 
 fn reader_loop(
     stream: TcpStream,
     pending: PendingMap,
     metrics_pending: MetricsPendingMap,
+    traces_pending: TracePendingMap,
     rtt: Arc<RttStats>,
     closed: Arc<AtomicBool>,
 ) {
     let fail_all = |error: NetError| {
         closed.store(true, Ordering::SeqCst);
-        broadcast(&pending, &metrics_pending, error);
+        broadcast(&pending, &metrics_pending, &traces_pending, error);
     };
     let mut reader = std::io::BufReader::new(stream);
     loop {
@@ -458,6 +510,11 @@ fn reader_loop(
                     let _ = tx.send(Ok(m.snapshot));
                 }
             }
+            Ok(Frame::TraceResponse(t)) => {
+                if let Some(tx) = traces_pending.lock().unwrap().remove(&t.seq) {
+                    let _ = tx.send(Ok(t.exemplars));
+                }
+            }
             Ok(Frame::Error(err)) => {
                 let remote =
                     NetError::Remote { kind: err.kind, message: err.message };
@@ -467,14 +524,18 @@ fn reader_loop(
                     fail_all(remote);
                     return;
                 }
-                // A per-frame error may answer either kind of call.
+                // A per-frame error may answer any kind of call.
                 if let Some(tx) = metrics_pending.lock().unwrap().remove(&err.seq) {
+                    let _ = tx.send(Err(remote));
+                } else if let Some(tx) = traces_pending.lock().unwrap().remove(&err.seq)
+                {
                     let _ = tx.send(Err(remote));
                 } else {
                     route(&pending, &rtt, err.seq, Err(remote));
                 }
             }
-            Ok(Frame::Request(_)) | Ok(Frame::MetricsRequest(_)) => {
+            Ok(Frame::Request(_)) | Ok(Frame::MetricsRequest(_))
+            | Ok(Frame::TraceRequest(_)) => {
                 fail_all(NetError::Decode("server sent a request frame".to_string()));
                 return;
             }

@@ -63,9 +63,39 @@
 //!   stays the single compute path, so network and in-process clients
 //!   see bit-identical results (for the f32 codec) from the same pool.
 //!
+//! ## Observability
+//!
+//! The listen port doubles as the telemetry plane's front door, three
+//! ways:
+//!
+//! - **Plaintext exposition on the binary port.** Each front-end
+//!   sniffs a connection's first bytes; one that opens with `GET ` is
+//!   a scraper, not a frame peer, and gets a one-shot HTTP response:
+//!   `GET /metrics` renders the live
+//!   [`MetricsSnapshot`](crate::service::MetricsSnapshot) in the
+//!   Prometheus text format (lifetime counters, 1s/10s/60s windowed
+//!   rate + quantile rows, SLO burn-rate gauges, retained-trace
+//!   exemplars on the windowed p99 rows), and `GET /traces` exports
+//!   the tail-retained exemplar spans as Chrome-trace JSON. See the
+//!   [`server`] module docs for the sniff mechanics.
+//! - **Metrics RPC** (wire v5): [`wire::encode_metrics_response`]
+//!   carries the windowed views, SLO report, and exemplar metas in
+//!   binary form — [`NetClient::fetch_metrics`] and the fabric's
+//!   fleet view consume this, so `GaeFabric::fleet()` reports recent
+//!   per-shard rates, not just lifetime totals.
+//! - **Trace RPC** (frame types 6/7): [`NetClient::fetch_traces`]
+//!   pulls the retained exemplars *with their span events*
+//!   ([`wire::WireExemplar`]) off a remote shard for fleet-side
+//!   inspection or export.
+//!
+//! Request trace ids ride the frame header both ways (request and
+//! response), so one id stitches client-side and server-side spans
+//! into a single timeline; see [`crate::obs`] for the plane itself.
+//!
 //! Driven by `examples/serve_gae.rs` (`--listen` / `--connect`) and
 //! swept by `benches/net_throughput.rs`; the loopback integration test
-//! lives in `rust/tests/net_loopback.rs`.
+//! lives in `rust/tests/net_loopback.rs`, and the telemetry plane's
+//! end-to-end test in `rust/tests/telemetry_integration.rs`.
 
 pub mod cache;
 pub mod client;
@@ -80,5 +110,6 @@ pub use server::{raise_fd_limit, NetServer, NetServerConfig, ServerMode};
 pub use wire::{
     EncodedRequest, ErrorFrame, ErrorKind, Fnv1a, Frame, LazyFrame, LazyRequest,
     MetricsRequestFrame, MetricsResponseFrame, PlaneCodec, RequestFrame,
-    ResponseFrame, WireDecodeError,
+    ResponseFrame, TraceRequestFrame, TraceResponseFrame, WireDecodeError,
+    WireExemplar, WireSpanEvent,
 };

@@ -79,6 +79,11 @@ pub(crate) struct Conn {
     /// Event mask currently registered with epoll, to skip no-op
     /// `EPOLL_CTL_MOD` calls.
     pub(crate) registered_events: u32,
+    /// Protocol sniff verdict on the connection's first bytes:
+    /// `None` until enough bytes arrived to decide, then `Some(true)`
+    /// for a plaintext exposition scraper (`GET `), `Some(false)` for
+    /// a binary frame peer.
+    pub(crate) plaintext: Option<bool>,
 }
 
 impl Conn {
@@ -95,6 +100,7 @@ impl Conn {
             backlog_full_since: None,
             close_deadline: None,
             registered_events: 0,
+            plaintext: None,
         }
     }
 

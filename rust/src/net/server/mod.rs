@@ -78,6 +78,19 @@
 //! actor-fleet shape), where 3 threads/conn would exhaust the host at
 //! a few thousand connections — `benches/c10k_connections.rs` holds
 //! ≥10k connections on ≤4 reactor threads.
+//!
+//! ## Plaintext exposition on the binary port
+//!
+//! Both front-ends sniff each connection's *first bytes*
+//! ([`sniff_plaintext`]): a connection that opens with `GET ` is a
+//! plaintext scraper, not a frame peer (those four bytes read as a
+//! ~0.5 GiB length prefix, which the binary protocol rejects outright),
+//! and is answered with one HTTP/1.1 response ([`http_response`]:
+//! `/metrics` Prometheus text, `/traces` Chrome-trace JSON of the
+//! retained exemplars) and closed. One port per shard serves both the
+//! fleet's frame traffic and `curl`/Prometheus — no side listener, no
+//! extra threads, and the sniff happens once per connection before any
+//! frame parse, so established binary peers never pay for it.
 
 use crate::net::cache::{self, CachedGae, ResponseCache};
 use crate::net::quota::{QuotaConfig, TokenBuckets};
@@ -180,6 +193,9 @@ pub(crate) struct Shared {
     pub(crate) cache: Option<ResponseCache>,
     pub(crate) shutdown: AtomicBool,
     pub(crate) frames_received: AtomicU64,
+    /// `shard` label on the exposition page — the bound listen address,
+    /// which is the one name a scraper already knows this shard by.
+    pub(crate) label: String,
 }
 
 /// One admitted request travelling from the frame processor to whoever
@@ -211,6 +227,100 @@ pub(crate) enum FrameOutcome {
     Admitted(Box<InFlight>),
 }
 
+/// Longest plaintext request head (request line + headers) either
+/// front-end buffers before giving up on the connection. Generous for
+/// any real scraper; small enough that a garbage stream that happened
+/// to start with `GET ` cannot grow a buffer unboundedly.
+pub(crate) const MAX_HTTP_HEAD_BYTES: usize = 16 * 1024;
+
+/// Protocol sniff on a connection's first bytes: the binary protocol
+/// never begins with `GET ` (those four bytes as a little-endian length
+/// prefix are ~0.5 GiB, far past [`wire::MAX_FRAME_BYTES`]), so a
+/// plaintext scraper is recognizable before the frame parser
+/// misreads its request line as a length.
+///
+/// `Some(true)` = plaintext HTTP, `Some(false)` = binary frames,
+/// `None` = the bytes so far match a strict prefix of `GET ` — wait
+/// for more before deciding.
+pub(crate) fn sniff_plaintext(head: &[u8]) -> Option<bool> {
+    const PREFIX: &[u8] = b"GET ";
+    let n = head.len().min(PREFIX.len());
+    if head[..n] != PREFIX[..n] {
+        return Some(false);
+    }
+    if head.len() >= PREFIX.len() {
+        Some(true)
+    } else {
+        None
+    }
+}
+
+/// Whether a buffered request head contains the blank line that ends
+/// the HTTP header block.
+pub(crate) fn http_head_complete(head: &[u8]) -> bool {
+    head.windows(4).any(|w| w == b"\r\n\r\n")
+}
+
+/// Answer one plaintext request head with a full `HTTP/1.1` response
+/// (`Connection: close` — the exposition socket is scrape-and-go).
+///
+/// Routes:
+/// - `GET /metrics` — the Prometheus text exposition of a live
+///   [`MetricsSnapshot`](crate::service::MetricsSnapshot): lifetime
+///   counters, 1s/10s/60s windowed rate + quantile rows, SLO burn
+///   gauges, retained-trace exemplars on the windowed p99 rows.
+/// - `GET /traces` — the retained (tail-sampled) exemplar spans as one
+///   combined Chrome-trace JSON document, loadable in
+///   `chrome://tracing` / Perfetto as scraped.
+pub(crate) fn http_response(head: &[u8], shared: &Shared) -> Vec<u8> {
+    let line = head.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    let line = String::from_utf8_lossy(line);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let path = target.split('?').next().unwrap_or("");
+    if method != "GET" {
+        return http_bytes(405, "text/plain; charset=utf-8", "method not allowed\n");
+    }
+    match path {
+        "/metrics" => {
+            let snapshot = shared.service.metrics();
+            let body = crate::obs::telemetry::prometheus_text(&snapshot, &shared.label);
+            http_bytes(200, "text/plain; version=0.0.4; charset=utf-8", &body)
+        }
+        "/traces" => {
+            let events = shared.service.metrics_handle().exemplars().all_events();
+            let body = crate::obs::export::chrome_trace(&events).to_string();
+            http_bytes(200, "application/json; charset=utf-8", &body)
+        }
+        _ => http_bytes(
+            404,
+            "text/plain; charset=utf-8",
+            "not found (try /metrics or /traces)\n",
+        ),
+    }
+}
+
+fn http_bytes(status: u16, content_type: &str, body: &str) -> Vec<u8> {
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Bad Request",
+    };
+    let mut out = Vec::with_capacity(body.len() + 128);
+    out.extend_from_slice(
+        format!(
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
 /// Run one received frame (the bytes after the length prefix) through
 /// the shared policy pipeline. Both server modes call exactly this, so
 /// their response bytes are identical by construction.
@@ -222,6 +332,12 @@ pub(crate) fn process_frame(frame: &[u8], shared: &Shared) -> FrameOutcome {
             // cheap (no plane work) and must not queue behind compute.
             let snapshot = shared.service.metrics();
             FrameOutcome::Reply(wire::encode_metrics_response(m.seq, &snapshot))
+        }
+        Ok(LazyFrame::TraceRequest(t)) => {
+            // Likewise inline: the retained-exemplar store is small by
+            // construction (tail events only, bounded capacity).
+            let exemplars = shared.service.metrics_handle().exemplars().snapshot(usize::MAX);
+            FrameOutcome::Reply(wire::encode_trace_response(t.seq, &exemplars))
         }
         Ok(_) => {
             // Only clients speak first; a response/error from one is a
@@ -463,6 +579,7 @@ impl NetServer {
             cache,
             shutdown: AtomicBool::new(false),
             frames_received: AtomicU64::new(0),
+            label: local_addr.to_string(),
         });
         let front = match mode {
             ServerMode::Threads => {
@@ -513,6 +630,46 @@ impl NetServer {
 impl Drop for NetServer {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod proto_tests {
+    use super::*;
+
+    #[test]
+    fn sniff_distinguishes_http_from_frames() {
+        assert_eq!(sniff_plaintext(b""), None);
+        assert_eq!(sniff_plaintext(b"G"), None);
+        assert_eq!(sniff_plaintext(b"GET"), None);
+        assert_eq!(sniff_plaintext(b"GET "), Some(true));
+        assert_eq!(sniff_plaintext(b"GET /metrics HTTP/1.1\r\n"), Some(true));
+        // A binary frame's length prefix never collides with "GET ".
+        assert_eq!(sniff_plaintext(&[0x10, 0, 0, 0]), Some(false));
+        assert_eq!(sniff_plaintext(b"GEX "), Some(false));
+        assert_eq!(sniff_plaintext(b"PUT "), Some(false));
+        assert_eq!(sniff_plaintext(b"g"), Some(false));
+    }
+
+    #[test]
+    fn head_completion_needs_the_blank_line() {
+        assert!(!http_head_complete(b"GET /metrics HTTP/1.1\r\n"));
+        assert!(!http_head_complete(b"GET /metrics HTTP/1.1\r\nHost: x\r\n"));
+        assert!(http_head_complete(b"GET /metrics HTTP/1.1\r\n\r\n"));
+        assert!(http_head_complete(
+            b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"
+        ));
+    }
+
+    #[test]
+    fn http_bytes_shape_headers_and_body() {
+        let bytes = http_bytes(200, "text/plain", "hello\n");
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: text/plain\r\n"));
+        assert!(text.contains("Content-Length: 6\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\nhello\n"));
     }
 }
 

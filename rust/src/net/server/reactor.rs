@@ -495,8 +495,22 @@ fn read_some(token: ConnToken, conn: &mut Conn, ctx: &mut Ctx) -> bool {
 }
 
 /// Run every whole frame the assembler now holds through the shared
-/// policy pipeline.
+/// policy pipeline. The first bytes of a connection are sniffed once:
+/// a plaintext `GET ` diverts the connection to the exposition handler
+/// before the frame parser can misread the request line as a length
+/// prefix.
 fn drain_frames(token: ConnToken, conn: &mut Conn, ctx: &mut Ctx) {
+    if conn.plaintext.is_none() {
+        conn.plaintext = super::sniff_plaintext(conn.assembler.peek());
+    }
+    match conn.plaintext {
+        None => return, // fewer than 4 bytes buffered: undecidable yet
+        Some(true) => {
+            drain_plaintext(conn, ctx);
+            return;
+        }
+        Some(false) => {}
+    }
     loop {
         if conn.closing {
             return;
@@ -529,6 +543,37 @@ fn drain_frames(token: ConnToken, conn: &mut Conn, ctx: &mut Ctx) {
             }
         }
         refresh_flow(token, conn, &ctx.shared.config, &mut ctx.watch);
+    }
+}
+
+/// A plaintext scraper connection: the request head accumulates in the
+/// (never frame-parsed) assembler buffer; once the blank line lands,
+/// one HTTP response is queued and the connection closes after the
+/// flush. A head that outgrows the cap without terminating is garbage
+/// and is dropped without a reply.
+fn drain_plaintext(conn: &mut Conn, ctx: &Ctx) {
+    enum Step {
+        Wait,
+        Overflow,
+        Respond(Vec<u8>),
+    }
+    let step = {
+        let head = conn.assembler.peek();
+        if super::http_head_complete(head) {
+            Step::Respond(super::http_response(head, &ctx.shared))
+        } else if head.len() > super::MAX_HTTP_HEAD_BYTES {
+            Step::Overflow
+        } else {
+            Step::Wait
+        }
+    };
+    match step {
+        Step::Wait => {}
+        Step::Overflow => begin_close(conn, ctx),
+        Step::Respond(response) => {
+            conn.push_frame(response);
+            begin_close(conn, ctx);
+        }
     }
 }
 

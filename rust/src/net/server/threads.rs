@@ -20,7 +20,7 @@
 use super::{complete_inflight, process_frame, FrameOutcome, InFlight, Shared};
 use crate::net::wire;
 use std::collections::HashMap;
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -148,12 +148,24 @@ fn connection_loop(stream: TcpStream, conn_id: u64, state: Arc<ThreadState>) {
 }
 
 fn read_loop(
-    stream: TcpStream,
+    mut stream: TcpStream,
     shared: &Shared,
     done_tx: &mpsc::SyncSender<Box<InFlight>>,
     out_tx: &mpsc::SyncSender<Vec<u8>>,
 ) {
-    let mut reader = std::io::BufReader::new(stream);
+    // Protocol sniff on the connection's first four bytes: a plaintext
+    // `GET ` is an exposition scrape (answered and closed right here);
+    // anything else is the start of a binary frame, chained back in
+    // front of the stream so the frame parser sees every byte.
+    let mut first = [0u8; 4];
+    if stream.read_exact(&mut first).is_err() {
+        return;
+    }
+    if super::sniff_plaintext(&first) == Some(true) {
+        serve_plaintext(stream, &first, shared, out_tx);
+        return;
+    }
+    let mut reader = std::io::BufReader::new((&first[..]).chain(stream));
     loop {
         let frame = match wire::read_frame(&mut reader) {
             Ok(Some(frame)) => frame,
@@ -172,6 +184,32 @@ fn read_loop(
             }
         }
     }
+}
+
+/// Read the rest of a plaintext request head (the first bytes are
+/// already in hand) and answer it through the writer thread; returning
+/// tears the connection down, which is the `Connection: close`
+/// contract of the exposition endpoint.
+fn serve_plaintext(
+    mut stream: TcpStream,
+    first: &[u8],
+    shared: &Shared,
+    out_tx: &mpsc::SyncSender<Vec<u8>>,
+) {
+    let mut head = first.to_vec();
+    let mut buf = [0u8; 1024];
+    while !super::http_head_complete(&head) {
+        if head.len() > super::MAX_HTTP_HEAD_BYTES {
+            return; // non-terminating garbage: drop without a reply
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+    let _ = out_tx.send(super::http_response(&head, shared));
 }
 
 fn completer_loop(

@@ -12,8 +12,8 @@
 //! | offset | size | field |
 //! |-------:|-----:|-------|
 //! | 0      | 4    | magic `"HGAE"` |
-//! | 4      | 1    | version (currently `3`) |
-//! | 5      | 1    | frame type: 1=Request, 2=Response, 3=Error, 4=MetricsRequest, 5=MetricsResponse |
+//! | 4      | 1    | version (currently `5`) |
+//! | 5      | 1    | frame type: 1=Request, 2=Response, 3=Error, 4=MetricsRequest, 5=MetricsResponse, 6=TraceRequest, 7=TraceResponse |
 //! | 6      | N−10 | type-specific body (below) |
 //! | N−4    | 4    | checksum: folded FNV-1a over frame bytes `0..N−4` |
 //!
@@ -79,7 +79,20 @@
 //! via `to_bits`, a u32-counted per-tenant list). This is the fleet
 //! metrics RPC: the fabric polls it so remote shards contribute full
 //! snapshots — tenant breakdowns included — to the fleet view instead
-//! of router-side counters only.
+//! of router-side counters only. v5 extends the snapshot body with the
+//! telemetry plane: trace/exemplar counters, three windowed-view rows
+//! (span, counts, rates, quantiles), the SLO burn-rate report, and a
+//! u32-counted list of recent exemplar metas — so a fleet poll carries
+//! *recent* rates and health, not just lifetime aggregates.
+//!
+//! **TraceRequest body** (v5): `seq` u64 — fetch the shard's
+//! tail-retained exemplars; no payload. **TraceResponse body** (v5):
+//! `seq` u64, then a u32-counted exemplar list: each is its meta
+//! (trace u64, reason u8, total_us f64, when_sec u64) plus a
+//! u32-counted span-event list (kind u8, u8-length name, trace u64,
+//! ts_ns u64, tid u64). Span names arrive as owned strings
+//! ([`WireSpanEvent`]) — the process-local `&'static str` interning
+//! does not survive the hop.
 //!
 //! ## Version rules
 //!
@@ -93,7 +106,10 @@
 //! arm to the response body (v1 decoders rejected the new flag bit, so
 //! nothing mis-parses across the bump). Version 3 added the request
 //! header-flags byte with the optional trace id, the response trace
-//! echo (flag bit 3), and the metrics frame pair.
+//! echo (flag bit 3), and the metrics frame pair. Version 4 appended
+//! `slow_closed` to the metrics body. Version 5 appended the windowed
+//! telemetry section to the metrics body and added the trace frame
+//! pair.
 //!
 //! ## Accounting
 //!
@@ -117,19 +133,23 @@
 //! shape) is the lazy parse plus an immediate `decode_planes`, so both
 //! paths accept exactly the same frames by construction.
 
+use crate::obs::slo::{SloHealth, SloReport};
+use crate::obs::telemetry::{Exemplar, ExemplarMeta, RetainReason};
+use crate::obs::trace::EventKind;
 use crate::quant::block_std::BlockStats;
 use crate::quant::{CodecKind, UniformQuantizer};
-use crate::service::metrics::{LatencyQuantiles, MetricsSnapshot, TenantSnapshot};
+use crate::service::metrics::{LatencyQuantiles, MetricsSnapshot, TenantSnapshot, WindowView};
 use std::fmt;
 use std::io::Read;
 use std::time::Duration;
 
 /// Frame magic: `"HGAE"`.
 pub const MAGIC: [u8; 4] = *b"HGAE";
-/// Current protocol version. v4 added `slow_closed` to the metrics RPC
-/// body — any layout change bumps this byte, even an appended field,
-/// because the decoder reads by offset, not by name.
-pub const VERSION: u8 = 4;
+/// Current protocol version. v5 added the windowed/SLO/exemplar section
+/// to the metrics RPC body and the trace frame pair — any layout change
+/// bumps this byte, even an appended field, because the decoder reads
+/// by offset, not by name.
+pub const VERSION: u8 = 5;
 /// Upper bound on a single frame (sanity guard against corrupt length
 /// prefixes allocating unbounded buffers).
 pub const MAX_FRAME_BYTES: usize = 256 << 20;
@@ -144,6 +164,8 @@ const FRAME_TYPE_RESPONSE: u8 = 2;
 const FRAME_TYPE_ERROR: u8 = 3;
 const FRAME_TYPE_METRICS_REQUEST: u8 = 4;
 const FRAME_TYPE_METRICS_RESPONSE: u8 = 5;
+const FRAME_TYPE_TRACE_REQUEST: u8 = 6;
+const FRAME_TYPE_TRACE_RESPONSE: u8 = 7;
 
 /// Request header flag: a u64 trace id follows the flags byte.
 const REQ_FLAG_TRACE: u8 = 1;
@@ -152,6 +174,12 @@ const RESP_FLAG_TRACE: u8 = 8;
 /// Most tenants a MetricsResponse may carry (the recorder itself caps
 /// at 4096; this is the hostile-frame allocation guard).
 const MAX_WIRE_TENANTS: usize = 65_536;
+/// Most exemplars a TraceResponse (or metrics recent-exemplar list) may
+/// carry — the store caps far lower; hostile-frame allocation guard.
+const MAX_WIRE_EXEMPLARS: usize = 4096;
+/// Most span events one wire exemplar may carry (a trace ring holds
+/// 8192 per thread; hostile-frame allocation guard).
+const MAX_WIRE_TRACE_EVENTS: usize = 262_144;
 
 /// Fixed bytes before the body: magic + version + frame type.
 const HEADER_BYTES: usize = 6;
@@ -361,6 +389,40 @@ pub struct MetricsResponseFrame {
     pub snapshot: MetricsSnapshot,
 }
 
+/// A decoded trace query (fetch tail-retained exemplars; no payload
+/// beyond the sequence number).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRequestFrame {
+    pub seq: u64,
+}
+
+/// One span event off the wire. Identical to [`crate::obs::Event`]
+/// except the name is an owned string — the recording side's
+/// `&'static str` interning does not survive the network hop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireSpanEvent {
+    pub kind: EventKind,
+    pub name: String,
+    pub trace: u64,
+    pub ts_ns: u64,
+    pub tid: u64,
+}
+
+/// One tail-retained exemplar off the wire: meta plus span events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireExemplar {
+    pub meta: ExemplarMeta,
+    pub events: Vec<WireSpanEvent>,
+}
+
+/// A decoded trace reply: the remote shard's retained exemplars,
+/// newest first.
+#[derive(Debug, Clone)]
+pub struct TraceResponseFrame {
+    pub seq: u64,
+    pub exemplars: Vec<WireExemplar>,
+}
+
 /// A decoded error frame.
 #[derive(Debug, Clone)]
 pub struct ErrorFrame {
@@ -378,6 +440,8 @@ pub enum Frame {
     Error(ErrorFrame),
     MetricsRequest(MetricsRequestFrame),
     MetricsResponse(MetricsResponseFrame),
+    TraceRequest(TraceRequestFrame),
+    TraceResponse(TraceResponseFrame),
 }
 
 /// A request frame parsed to its **header only**: everything the
@@ -484,6 +548,8 @@ pub enum LazyFrame<'a> {
     Error(ErrorFrame),
     MetricsRequest(MetricsRequestFrame),
     MetricsResponse(MetricsResponseFrame),
+    TraceRequest(TraceRequestFrame),
+    TraceResponse(TraceResponseFrame),
 }
 
 /// An encoded request plus its transport accounting.
@@ -822,6 +888,24 @@ fn put_quantiles(out: &mut Vec<u8>, q: &LatencyQuantiles) {
     put_f64(out, q.p99);
 }
 
+fn put_window(out: &mut Vec<u8>, w: &WindowView) {
+    put_u64(out, w.span_secs);
+    put_u64(out, w.completed);
+    put_u64(out, w.elements);
+    put_u64(out, w.errors);
+    put_u64(out, w.slow);
+    put_f64(out, w.rate_rps);
+    put_f64(out, w.elem_per_sec);
+    put_quantiles(out, &w.total_us);
+}
+
+fn put_exemplar_meta(out: &mut Vec<u8>, m: &ExemplarMeta) {
+    put_u64(out, m.trace);
+    out.push(m.reason.code());
+    put_f64(out, m.total_us);
+    put_u64(out, m.when_sec);
+}
+
 /// Encode a [`MetricsSnapshot`] reply (the fleet metrics RPC's response
 /// half). Field order is the snapshot's declaration order; durations
 /// travel as u64 nanoseconds, f64s as `to_bits`.
@@ -853,6 +937,20 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
     put_quantiles(&mut body, &s.compute_us);
     put_quantiles(&mut body, &s.encode_us);
     put_quantiles(&mut body, &s.total_us);
+    put_u64(&mut body, s.trace_dropped_events);
+    put_u64(&mut body, s.exemplars_retained);
+    put_u64(&mut body, s.exemplars_evicted);
+    for w in &s.windows {
+        put_window(&mut body, w);
+    }
+    body.push(s.slo.health.code());
+    put_f64(&mut body, s.slo.burn_1s);
+    put_f64(&mut body, s.slo.burn_10s);
+    put_f64(&mut body, s.slo.burn_60s);
+    put_u32(&mut body, s.recent_exemplars.len().min(MAX_WIRE_EXEMPLARS) as u32);
+    for m in s.recent_exemplars.iter().take(MAX_WIRE_EXEMPLARS) {
+        put_exemplar_meta(&mut body, m);
+    }
     put_u32(&mut body, s.tenants.len().min(MAX_WIRE_TENANTS) as u32);
     for t in s.tenants.iter().take(MAX_WIRE_TENANTS) {
         let name = &t.tenant.as_bytes()[..t.tenant.len().min(255)];
@@ -872,6 +970,28 @@ fn take_f64(r: &mut Reader<'_>) -> Result<f64, WireDecodeError> {
 
 fn take_quantiles(r: &mut Reader<'_>) -> Result<LatencyQuantiles, WireDecodeError> {
     Ok(LatencyQuantiles { p50: take_f64(r)?, p95: take_f64(r)?, p99: take_f64(r)? })
+}
+
+fn take_window(r: &mut Reader<'_>) -> Result<WindowView, WireDecodeError> {
+    Ok(WindowView {
+        span_secs: r.u64()?,
+        completed: r.u64()?,
+        elements: r.u64()?,
+        errors: r.u64()?,
+        slow: r.u64()?,
+        rate_rps: take_f64(r)?,
+        elem_per_sec: take_f64(r)?,
+        total_us: take_quantiles(r)?,
+    })
+}
+
+fn take_exemplar_meta(r: &mut Reader<'_>) -> Result<ExemplarMeta, WireDecodeError> {
+    Ok(ExemplarMeta {
+        trace: r.u64()?,
+        reason: RetainReason::from_code(r.u8()?),
+        total_us: take_f64(r)?,
+        when_sec: r.u64()?,
+    })
 }
 
 fn decode_metrics_request_body(
@@ -909,6 +1029,24 @@ fn decode_metrics_response_body(
     let compute_us = take_quantiles(r)?;
     let encode_us = take_quantiles(r)?;
     let total_us = take_quantiles(r)?;
+    let trace_dropped_events = r.u64()?;
+    let exemplars_retained = r.u64()?;
+    let exemplars_evicted = r.u64()?;
+    let windows = [take_window(r)?, take_window(r)?, take_window(r)?];
+    let slo = SloReport {
+        health: SloHealth::from_code(r.u8()?),
+        burn_1s: take_f64(r)?,
+        burn_10s: take_f64(r)?,
+        burn_60s: take_f64(r)?,
+    };
+    let exemplar_count = r.u32()? as usize;
+    if exemplar_count > MAX_WIRE_EXEMPLARS {
+        return Err(WireDecodeError::Malformed("exemplar list exceeds cap"));
+    }
+    let mut recent_exemplars = Vec::with_capacity(exemplar_count);
+    for _ in 0..exemplar_count {
+        recent_exemplars.push(take_exemplar_meta(r)?);
+    }
     let tenant_count = r.u32()? as usize;
     if tenant_count > MAX_WIRE_TENANTS {
         return Err(WireDecodeError::Malformed("tenant list exceeds cap"));
@@ -955,9 +1093,103 @@ fn decode_metrics_response_body(
             compute_us,
             encode_us,
             total_us,
+            trace_dropped_events,
+            exemplars_retained,
+            exemplars_evicted,
+            windows,
+            slo,
+            recent_exemplars,
             tenants,
         },
     })
+}
+
+fn event_kind_code(kind: EventKind) -> u8 {
+    match kind {
+        EventKind::Begin => 0,
+        EventKind::End => 1,
+        EventKind::Instant => 2,
+    }
+}
+
+fn event_kind_from_code(code: u8) -> Result<EventKind, WireDecodeError> {
+    match code {
+        0 => Ok(EventKind::Begin),
+        1 => Ok(EventKind::End),
+        2 => Ok(EventKind::Instant),
+        _ => Err(WireDecodeError::Malformed("unknown span-event kind")),
+    }
+}
+
+/// Encode a trace poll (the tail-retained exemplar fetch's request half).
+pub fn encode_trace_request(seq: u64) -> Vec<u8> {
+    let mut body = Vec::with_capacity(8);
+    put_u64(&mut body, seq);
+    finish_frame(FRAME_TYPE_TRACE_REQUEST, &body)
+}
+
+/// Encode the retained exemplars of one shard (newest first, as
+/// [`ExemplarStore::snapshot`](crate::obs::telemetry::ExemplarStore::snapshot)
+/// yields them) into a TraceResponse frame.
+pub fn encode_trace_response(seq: u64, exemplars: &[Exemplar]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(64 + 64 * exemplars.len());
+    put_u64(&mut body, seq);
+    put_u32(&mut body, exemplars.len().min(MAX_WIRE_EXEMPLARS) as u32);
+    for ex in exemplars.iter().take(MAX_WIRE_EXEMPLARS) {
+        put_exemplar_meta(&mut body, &ex.meta);
+        put_u32(&mut body, ex.events.len().min(MAX_WIRE_TRACE_EVENTS) as u32);
+        for e in ex.events.iter().take(MAX_WIRE_TRACE_EVENTS) {
+            body.push(event_kind_code(e.kind));
+            let name = &e.name.as_bytes()[..e.name.len().min(255)];
+            body.push(name.len() as u8);
+            body.extend_from_slice(name);
+            put_u64(&mut body, e.trace);
+            put_u64(&mut body, e.ts_ns);
+            put_u64(&mut body, e.tid);
+        }
+    }
+    finish_frame(FRAME_TYPE_TRACE_RESPONSE, &body)
+}
+
+fn decode_trace_request_body(
+    r: &mut Reader<'_>,
+) -> Result<TraceRequestFrame, WireDecodeError> {
+    Ok(TraceRequestFrame { seq: r.u64()? })
+}
+
+fn decode_trace_response_body(
+    r: &mut Reader<'_>,
+) -> Result<TraceResponseFrame, WireDecodeError> {
+    let seq = r.u64()?;
+    let count = r.u32()? as usize;
+    if count > MAX_WIRE_EXEMPLARS {
+        return Err(WireDecodeError::Malformed("exemplar list exceeds cap"));
+    }
+    let mut exemplars = Vec::with_capacity(count);
+    for _ in 0..count {
+        let meta = take_exemplar_meta(r)?;
+        let event_count = r.u32()? as usize;
+        if event_count > MAX_WIRE_TRACE_EVENTS {
+            return Err(WireDecodeError::Malformed("span-event list exceeds cap"));
+        }
+        let mut events = Vec::with_capacity(event_count.min(8192));
+        for _ in 0..event_count {
+            let kind = event_kind_from_code(r.u8()?)?;
+            let name_len = r.u8()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .map_err(|_| WireDecodeError::Malformed("span name is not UTF-8"))?
+                .to_string();
+            events.push(WireSpanEvent {
+                kind,
+                name,
+                trace: r.u64()?,
+                ts_ns: r.u64()?,
+                tid: r.u64()?,
+            });
+        }
+        exemplars.push(WireExemplar { meta, events });
+    }
+    Ok(TraceResponseFrame { seq, exemplars })
 }
 
 // ---------------------------------------------------------------- decode
@@ -1228,6 +1460,10 @@ pub fn decode_frame_lazy(frame: &[u8]) -> Result<LazyFrame<'_>, WireDecodeError>
         FRAME_TYPE_METRICS_RESPONSE => {
             LazyFrame::MetricsResponse(decode_metrics_response_body(&mut r)?)
         }
+        FRAME_TYPE_TRACE_REQUEST => LazyFrame::TraceRequest(decode_trace_request_body(&mut r)?),
+        FRAME_TYPE_TRACE_RESPONSE => {
+            LazyFrame::TraceResponse(decode_trace_response_body(&mut r)?)
+        }
         t => return Err(WireDecodeError::BadFrameType(t)),
     };
     if r.pos != body_end {
@@ -1245,6 +1481,8 @@ pub fn decode_frame(frame: &[u8]) -> Result<Frame, WireDecodeError> {
         LazyFrame::Error(err) => Frame::Error(err),
         LazyFrame::MetricsRequest(m) => Frame::MetricsRequest(m),
         LazyFrame::MetricsResponse(m) => Frame::MetricsResponse(m),
+        LazyFrame::TraceRequest(t) => Frame::TraceRequest(t),
+        LazyFrame::TraceResponse(t) => Frame::TraceResponse(t),
     })
 }
 
@@ -1348,6 +1586,14 @@ impl FrameAssembler {
     /// and/or undrained complete frames).
     pub fn buffered(&self) -> usize {
         self.buf.len() - self.pos
+    }
+
+    /// The undrained bytes, without consuming them — the front-end's
+    /// protocol sniff inspects a connection's first bytes here to tell
+    /// a plaintext `GET ` apart from a binary frame before the length
+    /// prefix is (mis)interpreted.
+    pub fn peek(&self) -> &[u8] {
+        &self.buf[self.pos..]
     }
 
     /// `true` when no partial frame is pending — the stream is at a
@@ -1835,6 +2081,7 @@ mod tests {
             quota_shed: 2,
             cache_hits: 3,
             cache_misses: 4,
+            slow_closed: 21,
             routed_small: 5,
             slab_tiles: 6,
             packed_tiles: 7,
@@ -1852,6 +2099,53 @@ mod tests {
             compute_us: q(30.0),
             encode_us: q(40.0),
             total_us: q(50.0),
+            trace_dropped_events: 17,
+            exemplars_retained: 4,
+            exemplars_evicted: 1,
+            windows: [
+                WindowView {
+                    span_secs: 1,
+                    completed: 40,
+                    elements: 640,
+                    errors: 2,
+                    slow: 1,
+                    rate_rps: 40.0,
+                    elem_per_sec: 640.0,
+                    total_us: q(60.0),
+                },
+                WindowView {
+                    span_secs: 10,
+                    completed: 300,
+                    elements: 4800,
+                    errors: 5,
+                    slow: 3,
+                    rate_rps: 30.0,
+                    elem_per_sec: 480.0,
+                    total_us: q(70.0),
+                },
+                WindowView {
+                    span_secs: 60,
+                    completed: 900,
+                    elements: 14_400,
+                    errors: 9,
+                    slow: 7,
+                    rate_rps: 15.0,
+                    elem_per_sec: 240.0,
+                    total_us: q(80.0),
+                },
+            ],
+            slo: SloReport {
+                health: SloHealth::Warn,
+                burn_1s: 2.5,
+                burn_10s: 1.25,
+                burn_60s: 0.5,
+            },
+            recent_exemplars: vec![ExemplarMeta {
+                trace: 0xABCD,
+                reason: RetainReason::Slow,
+                total_us: 123_456.0,
+                when_sec: 9,
+            }],
             tenants: vec![
                 TenantSnapshot {
                     tenant: "heavy".into(),
@@ -1888,8 +2182,72 @@ mod tests {
         assert_eq!(s.batch_us, snapshot.batch_us);
         assert_eq!(s.encode_us, snapshot.encode_us);
         assert_eq!(s.total_us, snapshot.total_us);
+        assert_eq!(s.slow_closed, 21);
+        assert_eq!(s.trace_dropped_events, 17);
+        assert_eq!(s.exemplars_retained, 4);
+        assert_eq!(s.exemplars_evicted, 1);
+        assert_eq!(s.windows, snapshot.windows);
+        assert_eq!(s.slo, snapshot.slo);
+        assert_eq!(s.recent_exemplars, snapshot.recent_exemplars);
         assert_eq!(s.tenants, snapshot.tenants);
         // Truncation dies cleanly, like every other frame type.
+        assert!(decode_frame(&bytes[4..bytes.len() - 9]).is_err());
+    }
+
+    #[test]
+    fn trace_rpc_frames_round_trip() {
+        let bytes = encode_trace_request(41);
+        match decode_frame(&bytes[4..]).unwrap() {
+            Frame::TraceRequest(t) => assert_eq!(t.seq, 41),
+            other => panic!("expected trace request, got {other:?}"),
+        }
+        let ev = |kind, name, ts_ns| crate::obs::trace::Event {
+            kind,
+            name,
+            trace: 0xFEED,
+            ts_ns,
+            tid: 3,
+        };
+        let exemplars = vec![
+            Exemplar {
+                meta: ExemplarMeta {
+                    trace: 0xFEED,
+                    reason: RetainReason::Slow,
+                    total_us: 250_000.0,
+                    when_sec: 12,
+                },
+                events: vec![
+                    ev(EventKind::Begin, "server.decode", 100),
+                    ev(EventKind::End, "server.decode", 900),
+                    ev(EventKind::Instant, "service.enqueue", 950),
+                ],
+            },
+            Exemplar {
+                meta: ExemplarMeta {
+                    trace: 0xBEEF,
+                    reason: RetainReason::Shed,
+                    total_us: 5.0,
+                    when_sec: 13,
+                },
+                events: Vec::new(),
+            },
+        ];
+        let bytes = encode_trace_response(42, &exemplars);
+        let got = match decode_frame(&bytes[4..]).unwrap() {
+            Frame::TraceResponse(t) => t,
+            other => panic!("expected trace response, got {other:?}"),
+        };
+        assert_eq!(got.seq, 42);
+        assert_eq!(got.exemplars.len(), 2);
+        assert_eq!(got.exemplars[0].meta, exemplars[0].meta);
+        assert_eq!(got.exemplars[1].meta, exemplars[1].meta);
+        assert_eq!(got.exemplars[0].events.len(), 3);
+        let e = &got.exemplars[0].events[1];
+        assert_eq!(e.kind, EventKind::End);
+        assert_eq!(e.name, "server.decode");
+        assert_eq!((e.trace, e.ts_ns, e.tid), (0xFEED, 900, 3));
+        assert!(got.exemplars[1].events.is_empty());
+        // Truncation dies cleanly.
         assert!(decode_frame(&bytes[4..bytes.len() - 9]).is_err());
     }
 

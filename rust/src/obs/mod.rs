@@ -34,11 +34,53 @@
 //! Exporters ([`export`]) emit Chrome-trace/Perfetto JSON (open in
 //! `chrome://tracing` or <https://ui.perfetto.dev>) and line-delimited
 //! JSON for ad-hoc grepping; both tag events with their trace id.
+//!
+//! # Observability: the live telemetry plane
+//!
+//! Spans and lifetime histograms answer "what happened since start";
+//! the telemetry plane answers "what is happening *now*" and keeps the
+//! evidence for the requests that went wrong:
+//!
+//! - **Windowed vs lifetime metrics.** Every
+//!   [`MetricsSnapshot`](crate::service::metrics::MetricsSnapshot)
+//!   carries, alongside its lifetime counters/quantiles, three
+//!   `windows` rows (last 1s/10s/60s: request rate, element rate,
+//!   error/slow counts, and p50/p95/p99 of the total phase) backed by
+//!   per-second histogram rings ([`crate::stats::windowed`]). Rotation
+//!   rides the recording path — no ticker thread, zero steady-state
+//!   allocation (`benches/telemetry_overhead.rs` enforces it), and
+//!   idle seconds age out by stamp so a quiet shard reports empty
+//!   windows, not a frozen p99.
+//! - **Exposition endpoint.** Both net-server front-ends sniff plain
+//!   `GET` requests on the binary listen socket: `GET /metrics` returns
+//!   the [`telemetry::prometheus_text`] rendering of the live snapshot
+//!   and `GET /traces` returns the retained exemplars as one
+//!   Chrome-trace JSON document. The same windowed rows also ride the
+//!   wire metrics RPC (protocol v5), so `GaeFabric::fleet()` reports
+//!   recent rates per shard.
+//! - **Tail-sampling policy.** The always-on rings stay the recording
+//!   substrate; at request completion the service promotes a span tree
+//!   into the bounded [`telemetry::ExemplarStore`] only when the
+//!   request was slow (above an adaptive threshold: the 10s-window p99
+//!   plus a small margin, falling back to the SLO latency objective
+//!   until the window has enough samples), errored, shed, or failed
+//!   over. Retained ids are attached to the windowed p99 exposition
+//!   rows as exemplars and queryable over the wire trace RPC.
+//! - **SLO configuration.** [`slo::SloConfig`] (a
+//!   [`ServiceConfig`](crate::service::ServiceConfig) field) sets the
+//!   latency objective/target and availability target; the snapshot
+//!   evaluates them per window into multi-window burn rates and an
+//!   `Ok/Warn/Critical` [`slo::SloHealth`], surfaced per shard in
+//!   `FleetSnapshot` and the exposition.
 
 pub mod export;
+pub mod slo;
+pub mod telemetry;
 pub mod trace;
 
+pub use slo::{SloConfig, SloHealth, SloReport};
+pub use telemetry::{prometheus_text, ExemplarMeta, ExemplarStore, RetainReason};
 pub use trace::{
     enabled, instant, mint_trace_id, set_enabled, span, span_begin, span_end,
-    take_events, Event, EventKind, Span,
+    take_events, trace_events, Event, EventKind, Span,
 };

@@ -1,0 +1,217 @@
+//! SLO objectives and multi-window burn-rate health.
+//!
+//! An SLO here is two objectives over the serving stack's request
+//! stream: a **latency** objective (at least `latency_target` of
+//! completions finish under `latency_objective_us`) and an
+//! **availability** objective (at least `availability_target` of
+//! requests are not shed, quota-refused, or errored). Each is scored
+//! per window as a *burn rate*: the fraction of the error budget
+//! (`1 - target`) consumed, normalized so `burn = 1.0` means "exactly
+//! on budget" and `burn = 14.4` means "burning two weeks of monthly
+//! budget per day" — the classic fast-burn alert threshold.
+//!
+//! Health combines burn rates across the 1s/10s/60s windows the
+//! metrics plane keeps (see [`crate::stats::windowed`]): `Critical`
+//! requires the fast *pair* of windows to agree (a one-second blip
+//! alone cannot page), `Warn` fires on a sustained slow burn, and an
+//! idle window burns nothing — a freshly restarted shard reports `Ok`
+//! rather than inheriting its predecessor's bad minute.
+
+use std::fmt;
+
+/// Serving objectives evaluated by the telemetry plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// Completions slower than this are "bad" for the latency SLO.
+    pub latency_objective_us: f64,
+    /// Fraction of completions that must meet the latency objective.
+    pub latency_target: f64,
+    /// Fraction of requests that must not be shed/refused/errored.
+    pub availability_target: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> SloConfig {
+        SloConfig {
+            latency_objective_us: 50_000.0,
+            latency_target: 0.99,
+            availability_target: 0.999,
+        }
+    }
+}
+
+/// Per-shard health state derived from burn rates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloHealth {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl Default for SloHealth {
+    fn default() -> SloHealth {
+        SloHealth::Ok
+    }
+}
+
+impl SloHealth {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloHealth::Ok => "ok",
+            SloHealth::Warn => "warn",
+            SloHealth::Critical => "critical",
+        }
+    }
+
+    /// Stable numeric code (wire + exposition gauge value).
+    pub fn code(self) -> u8 {
+        match self {
+            SloHealth::Ok => 0,
+            SloHealth::Warn => 1,
+            SloHealth::Critical => 2,
+        }
+    }
+
+    /// Inverse of [`SloHealth::code`]; unknown codes clamp to
+    /// `Critical` (an undecodable health is not good news).
+    pub fn from_code(code: u8) -> SloHealth {
+        match code {
+            0 => SloHealth::Ok,
+            1 => SloHealth::Warn,
+            _ => SloHealth::Critical,
+        }
+    }
+}
+
+impl fmt::Display for SloHealth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Request counts for one evaluation window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WindowCounts {
+    /// Requests that completed (fast or slow).
+    pub completed: u64,
+    /// Requests shed, quota-refused, or errored.
+    pub errors: u64,
+    /// Completions that exceeded the latency objective.
+    pub slow: u64,
+}
+
+/// Burn rates per window plus the combined health verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SloReport {
+    pub health: SloHealth,
+    pub burn_1s: f64,
+    pub burn_10s: f64,
+    pub burn_60s: f64,
+}
+
+/// Burn rate at which the fast window pair escalates to `Critical`.
+pub const FAST_BURN: f64 = 14.4;
+/// Burn rate at which the sustained (60s) window raises `Warn`.
+pub const SLOW_BURN: f64 = 6.0;
+
+/// Burn rate of one window: worst of the latency and availability
+/// objectives, `0.0` when the window saw no traffic.
+pub fn burn_rate(cfg: &SloConfig, w: &WindowCounts) -> f64 {
+    let total = w.completed + w.errors;
+    if total == 0 {
+        return 0.0;
+    }
+    let latency_budget = (1.0 - cfg.latency_target).max(1e-9);
+    let availability_budget = (1.0 - cfg.availability_target).max(1e-9);
+    let slow_frac = w.slow as f64 / total as f64;
+    let error_frac = w.errors as f64 / total as f64;
+    (slow_frac / latency_budget).max(error_frac / availability_budget)
+}
+
+/// Evaluate the three standard windows into a combined report.
+///
+/// `Critical` needs both fast windows over [`FAST_BURN`] (the 10s
+/// window confirms the 1s spike is not a single-request artifact);
+/// `Warn` is either the fast burn seen only in one window or a
+/// sustained 60s burn over [`SLOW_BURN`].
+pub fn evaluate(cfg: &SloConfig, w1: &WindowCounts, w10: &WindowCounts, w60: &WindowCounts) -> SloReport {
+    let burn_1s = burn_rate(cfg, w1);
+    let burn_10s = burn_rate(cfg, w10);
+    let burn_60s = burn_rate(cfg, w60);
+    let health = if burn_1s >= FAST_BURN && burn_10s >= FAST_BURN {
+        SloHealth::Critical
+    } else if burn_1s >= FAST_BURN || burn_10s >= FAST_BURN || burn_60s >= SLOW_BURN {
+        SloHealth::Warn
+    } else {
+        SloHealth::Ok
+    };
+    SloReport { health, burn_1s, burn_10s, burn_60s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_windows_are_ok_with_zero_burn() {
+        let cfg = SloConfig::default();
+        let idle = WindowCounts::default();
+        let r = evaluate(&cfg, &idle, &idle, &idle);
+        assert_eq!(r.health, SloHealth::Ok);
+        assert_eq!((r.burn_1s, r.burn_10s, r.burn_60s), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn total_failure_in_fast_windows_is_critical() {
+        let cfg = SloConfig::default();
+        let bad = WindowCounts { completed: 5, errors: 5, slow: 0 };
+        let r = evaluate(&cfg, &bad, &bad, &WindowCounts::default());
+        // Half the requests failing burns the 0.1% availability budget
+        // at 500x — far past the fast-burn bar in both windows.
+        assert!(r.burn_1s > FAST_BURN && r.burn_10s > FAST_BURN, "{r:?}");
+        assert_eq!(r.health, SloHealth::Critical);
+    }
+
+    #[test]
+    fn one_second_blip_alone_is_warn_not_critical() {
+        let cfg = SloConfig::default();
+        let blip = WindowCounts { completed: 1, errors: 1, slow: 0 };
+        let calm = WindowCounts { completed: 10_000, errors: 0, slow: 0 };
+        let r = evaluate(&cfg, &blip, &calm, &calm);
+        assert_eq!(r.health, SloHealth::Warn, "{r:?}");
+    }
+
+    #[test]
+    fn sustained_slow_requests_warn_via_the_60s_window() {
+        let cfg = SloConfig::default();
+        let calm = WindowCounts { completed: 100, errors: 0, slow: 0 };
+        let sustained = WindowCounts { completed: 100, errors: 0, slow: 8 };
+        // 8% slow against a 1% latency budget = burn 8.0 >= SLOW_BURN.
+        let r = evaluate(&cfg, &calm, &calm, &sustained);
+        assert!(r.burn_60s >= SLOW_BURN, "{r:?}");
+        assert_eq!(r.health, SloHealth::Warn);
+    }
+
+    #[test]
+    fn burn_rate_takes_the_worse_objective() {
+        let cfg = SloConfig {
+            latency_objective_us: 1_000.0,
+            latency_target: 0.9,
+            availability_target: 0.99,
+        };
+        // 20% slow / 10% budget = 2.0; 1% errors / 1% budget = 1.0.
+        let w = WindowCounts { completed: 99, errors: 1, slow: 20 };
+        let b = burn_rate(&cfg, &w);
+        assert!((b - 2.0).abs() < 0.02, "{b}");
+    }
+
+    #[test]
+    fn health_codes_round_trip_and_unknown_is_critical() {
+        for h in [SloHealth::Ok, SloHealth::Warn, SloHealth::Critical] {
+            assert_eq!(SloHealth::from_code(h.code()), h);
+        }
+        assert_eq!(SloHealth::from_code(7), SloHealth::Critical);
+        assert_eq!(SloHealth::default(), SloHealth::Ok);
+        assert_eq!(format!("{}", SloHealth::Warn), "warn");
+    }
+}

@@ -1,0 +1,399 @@
+//! Live-telemetry plumbing: tail-based trace retention and the
+//! Prometheus-text exposition.
+//!
+//! **Tail-based retention.** The per-thread trace rings
+//! ([`crate::obs::trace`]) are always-on circular buffers: cheap, but a
+//! ring only holds the last ~8k events, so by the time someone asks
+//! "why was that request slow" the evidence is usually overwritten.
+//! The [`ExemplarStore`] flips the sampling decision to *request
+//! completion*, when the outcome is known: a request that finished slow
+//! (above the metrics plane's adaptive window-p99 threshold), errored,
+//! was shed, or failed over gets its span tree copied out of the rings
+//! (non-destructively, via [`trace::trace_events`]) into a bounded
+//! retained set — exactly the traces that explain a bad window, and
+//! nothing else. Healthy traffic costs one threshold compare.
+//!
+//! **Exposition.** [`prometheus_text`] renders a [`MetricsSnapshot`]
+//! in the Prometheus text format: lifetime counters, windowed
+//! rate/quantile rows per 1s/10s/60s window, SLO burn-rate gauges, and
+//! retained trace ids attached to the windowed p99 rows as
+//! OpenMetrics-style exemplars (`# {trace_id="0x…"} latency`), using
+//! the same `0x`-hex id format as the Chrome-trace exporter so an id
+//! scraped from the endpoint greps straight into the exported trace.
+
+use crate::obs::trace::{self, Event};
+use crate::service::metrics::MetricsSnapshot;
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Retained exemplars kept per service (oldest evicted past this).
+pub const DEFAULT_EXEMPLAR_CAPACITY: usize = 32;
+
+/// Why a request's trace was promoted into the retained set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetainReason {
+    /// Completed above the adaptive window-p99 latency threshold.
+    Slow,
+    /// Failed with a request/protocol error.
+    Error,
+    /// Refused by admission control or a tenant quota.
+    Shed,
+    /// Completed only after a fabric failover retry.
+    FailedOver,
+}
+
+impl RetainReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RetainReason::Slow => "slow",
+            RetainReason::Error => "error",
+            RetainReason::Shed => "shed",
+            RetainReason::FailedOver => "failed_over",
+        }
+    }
+
+    /// Stable numeric code for the wire.
+    pub fn code(self) -> u8 {
+        match self {
+            RetainReason::Slow => 0,
+            RetainReason::Error => 1,
+            RetainReason::Shed => 2,
+            RetainReason::FailedOver => 3,
+        }
+    }
+
+    /// Inverse of [`RetainReason::code`]; unknown codes decode as
+    /// `Error` (the conservative reading of an unrecognized reason).
+    pub fn from_code(code: u8) -> RetainReason {
+        match code {
+            0 => RetainReason::Slow,
+            2 => RetainReason::Shed,
+            3 => RetainReason::FailedOver,
+            _ => RetainReason::Error,
+        }
+    }
+}
+
+/// The wire/exposition-portable half of a retained exemplar (the event
+/// payload stays process-local; only ids and outcomes travel).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExemplarMeta {
+    /// Request trace id (nonzero — untraced requests are never retained).
+    pub trace: u64,
+    pub reason: RetainReason,
+    /// End-to-end latency of the retained request, microseconds.
+    pub total_us: f64,
+    /// Seconds since service start when the request was retained.
+    pub when_sec: u64,
+}
+
+/// One retained request: its meta plus the span tree captured from the
+/// trace rings at promotion time.
+#[derive(Debug, Clone)]
+pub struct Exemplar {
+    pub meta: ExemplarMeta,
+    pub events: Vec<Event>,
+}
+
+/// Bounded store of retained exemplars, newest kept.
+///
+/// Promotion is rare by construction (tail events only), so the store
+/// tolerates a mutex and per-promotion allocation; the *decision* not
+/// to promote — the hot-path case — costs the caller one compare.
+pub struct ExemplarStore {
+    cap: usize,
+    inner: Mutex<VecDeque<Exemplar>>,
+    retained: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl ExemplarStore {
+    pub fn new(cap: usize) -> ExemplarStore {
+        ExemplarStore {
+            cap: cap.max(1),
+            inner: Mutex::new(VecDeque::new()),
+            retained: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    /// Promote one request: snapshot its events out of the trace rings
+    /// (empty while tracing is disabled — the meta is still retained)
+    /// and evict the oldest exemplar past capacity.
+    pub fn retain(&self, meta: ExemplarMeta) {
+        let events = trace::trace_events(meta.trace);
+        let mut q = self.inner.lock().unwrap();
+        q.push_back(Exemplar { meta, events });
+        self.retained.fetch_add(1, Ordering::Relaxed);
+        while q.len() > self.cap {
+            q.pop_front();
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// `(retained, evicted)` lifetime totals.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.retained.load(Ordering::Relaxed), self.evicted.load(Ordering::Relaxed))
+    }
+
+    /// Clones of up to `limit` retained exemplars (meta + events),
+    /// newest first — the trace RPC's response body.
+    pub fn snapshot(&self, limit: usize) -> Vec<Exemplar> {
+        let q = self.inner.lock().unwrap();
+        q.iter().rev().take(limit).cloned().collect()
+    }
+
+    /// Up to `limit` most recent exemplar metas, newest first.
+    pub fn metas(&self, limit: usize) -> Vec<ExemplarMeta> {
+        let q = self.inner.lock().unwrap();
+        q.iter().rev().take(limit).map(|e| e.meta).collect()
+    }
+
+    /// Every retained event across all exemplars, time-sorted — the
+    /// input to one combined Chrome-trace export.
+    pub fn all_events(&self) -> Vec<Event> {
+        let q = self.inner.lock().unwrap();
+        let mut out: Vec<Event> = q.iter().flat_map(|e| e.events.iter().copied()).collect();
+        out.sort_by_key(|e| e.ts_ns);
+        out
+    }
+
+    /// Events of one retained trace, if present.
+    pub fn events_for(&self, trace: u64) -> Option<Vec<Event>> {
+        let q = self.inner.lock().unwrap();
+        q.iter().rev().find(|e| e.meta.trace == trace).map(|e| e.events.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Trace ids rendered for humans/exposition: `0x`-prefixed zero-padded
+/// hex, identical to the Chrome-trace exporter's `args.trace` so ids
+/// grep across both.
+pub fn trace_hex(trace: u64) -> String {
+    format!("{trace:#018x}")
+}
+
+fn label_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render a [`MetricsSnapshot`] in the Prometheus text exposition
+/// format, labeled with `shard`. Lifetime counters use `_total` names;
+/// windowed rows carry a `window` label (`1s`/`10s`/`60s`); the
+/// windowed p99 rows attach the most recent retained exemplar's trace
+/// id in the OpenMetrics exemplar syntax.
+pub fn prometheus_text(snap: &MetricsSnapshot, shard: &str) -> String {
+    let shard = label_escape(shard);
+    let mut out = String::with_capacity(4096);
+    let _ = writeln!(out, "# TYPE heppo_uptime_seconds gauge");
+    let _ = writeln!(
+        out,
+        "heppo_uptime_seconds{{shard=\"{shard}\"}} {:.3}",
+        snap.uptime.as_secs_f64()
+    );
+    for (name, v) in [
+        ("heppo_requests_submitted_total", snap.submitted),
+        ("heppo_requests_completed_total", snap.completed),
+        ("heppo_requests_shed_total", snap.shed),
+        ("heppo_requests_quota_shed_total", snap.quota_shed),
+        ("heppo_cache_hits_total", snap.cache_hits),
+        ("heppo_cache_misses_total", snap.cache_misses),
+        ("heppo_slow_conns_closed_total", snap.slow_closed),
+        ("heppo_elements_total", snap.elements),
+        ("heppo_batches_total", snap.batches),
+        ("heppo_trace_dropped_events_total", snap.trace_dropped_events),
+        ("heppo_exemplars_retained_total", snap.exemplars_retained),
+        ("heppo_exemplars_evicted_total", snap.exemplars_evicted),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name}{{shard=\"{shard}\"}} {v}");
+    }
+    let _ = writeln!(out, "# TYPE heppo_queue_depth gauge");
+    let _ = writeln!(out, "heppo_queue_depth{{shard=\"{shard}\"}} {}", snap.queue_depth);
+    let _ = writeln!(
+        out,
+        "heppo_queue_depth{{shard=\"{shard}\",kind=\"peak\"}} {}",
+        snap.peak_queue_depth
+    );
+
+    // Lifetime per-phase quantiles.
+    let _ = writeln!(out, "# TYPE heppo_latency_us gauge");
+    for (phase, q) in [
+        ("queue", &snap.queue_us),
+        ("batch", &snap.batch_us),
+        ("compute", &snap.compute_us),
+        ("encode", &snap.encode_us),
+        ("total", &snap.total_us),
+    ] {
+        for (quantile, v) in [("0.5", q.p50), ("0.95", q.p95), ("0.99", q.p99)] {
+            let _ = writeln!(
+                out,
+                "heppo_latency_us{{shard=\"{shard}\",phase=\"{phase}\",quantile=\"{quantile}\"}} {v:.1}"
+            );
+        }
+    }
+
+    // Windowed rows: recent rates + quantiles, exemplar on the p99s.
+    let exemplar = snap.recent_exemplars.first();
+    let _ = writeln!(out, "# TYPE heppo_window_rate_rps gauge");
+    let _ = writeln!(out, "# TYPE heppo_window_latency_us gauge");
+    for w in &snap.windows {
+        let win = format!("{}s", w.span_secs);
+        let _ = writeln!(
+            out,
+            "heppo_window_rate_rps{{shard=\"{shard}\",window=\"{win}\"}} {:.3}",
+            w.rate_rps
+        );
+        let _ = writeln!(
+            out,
+            "heppo_window_elem_per_sec{{shard=\"{shard}\",window=\"{win}\"}} {:.1}",
+            w.elem_per_sec
+        );
+        for (name, v) in [
+            ("heppo_window_completed", w.completed),
+            ("heppo_window_errors", w.errors),
+            ("heppo_window_slow", w.slow),
+        ] {
+            let _ = writeln!(out, "{name}{{shard=\"{shard}\",window=\"{win}\"}} {v}");
+        }
+        for (quantile, v) in
+            [("0.5", w.total_us.p50), ("0.95", w.total_us.p95), ("0.99", w.total_us.p99)]
+        {
+            let _ = write!(
+                out,
+                "heppo_window_latency_us{{shard=\"{shard}\",window=\"{win}\",quantile=\"{quantile}\"}} {v:.1}"
+            );
+            if quantile == "0.99" {
+                if let Some(m) = exemplar {
+                    let _ = write!(
+                        out,
+                        " # {{trace_id=\"{}\",reason=\"{}\"}} {:.1}",
+                        trace_hex(m.trace),
+                        m.reason.as_str(),
+                        m.total_us
+                    );
+                }
+            }
+            out.push('\n');
+        }
+    }
+
+    // SLO burn rates and the combined health gauge.
+    let _ = writeln!(out, "# TYPE heppo_slo_burn_rate gauge");
+    for (win, burn) in [
+        ("1s", snap.slo.burn_1s),
+        ("10s", snap.slo.burn_10s),
+        ("60s", snap.slo.burn_60s),
+    ] {
+        let _ = writeln!(
+            out,
+            "heppo_slo_burn_rate{{shard=\"{shard}\",window=\"{win}\"}} {burn:.3}"
+        );
+    }
+    let _ = writeln!(out, "# TYPE heppo_slo_health gauge");
+    let _ = writeln!(
+        out,
+        "heppo_slo_health{{shard=\"{shard}\",state=\"{}\"}} {}",
+        snap.slo.health.as_str(),
+        snap.slo.health.code()
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(trace: u64, reason: RetainReason) -> ExemplarMeta {
+        ExemplarMeta { trace, reason, total_us: 1234.5, when_sec: 7 }
+    }
+
+    // Tracing stays disabled in these tests (event capture is covered
+    // by the telemetry integration test in its own process), so store
+    // mechanics don't race the trace module's ring-draining tests.
+
+    #[test]
+    fn store_bounds_retention_and_counts_evictions() {
+        let store = ExemplarStore::new(4);
+        for i in 1..=10u64 {
+            store.retain(meta(i, RetainReason::Slow));
+        }
+        assert_eq!(store.len(), 4);
+        assert_eq!(store.counts(), (10, 6));
+        let metas = store.metas(8);
+        assert_eq!(metas.len(), 4);
+        // Newest first; the oldest six were evicted.
+        assert_eq!(metas[0].trace, 10);
+        assert_eq!(metas[3].trace, 7);
+        assert!(store.events_for(10).is_some());
+        assert!(store.events_for(1).is_none(), "evicted exemplars are gone");
+    }
+
+    #[test]
+    fn reason_codes_round_trip() {
+        for r in [
+            RetainReason::Slow,
+            RetainReason::Error,
+            RetainReason::Shed,
+            RetainReason::FailedOver,
+        ] {
+            assert_eq!(RetainReason::from_code(r.code()), r);
+        }
+        assert_eq!(RetainReason::from_code(99), RetainReason::Error);
+    }
+
+    #[test]
+    fn trace_hex_matches_chrome_export_format() {
+        assert_eq!(trace_hex(0xDEAD_BEEF_0000_0001), "0xdeadbeef00000001");
+        assert_eq!(trace_hex(1), "0x0000000000000001");
+    }
+
+    #[test]
+    fn prometheus_text_renders_windows_slo_and_exemplars() {
+        use crate::service::metrics::{ServiceMetrics, SnapshotInputs};
+        use crate::service::request::RequestTiming;
+        use std::time::Duration;
+        let m = ServiceMetrics::new();
+        m.record_submitted();
+        let slow = Duration::from_millis(200);
+        let t = RequestTiming {
+            queue: Duration::from_micros(10),
+            batch: Duration::ZERO,
+            compute: slow,
+            group_compute: slow,
+            encode: Duration::ZERO,
+            total: slow,
+        };
+        // A traced, objective-busting completion: retained as an exemplar.
+        m.record_completion(64, &t, 0xABCD_EF01_2345_6789);
+        let snap = m.snapshot(SnapshotInputs::default());
+        let text = prometheus_text(&snap, "shard-0");
+        for needle in [
+            "heppo_requests_completed_total{shard=\"shard-0\"} 1",
+            "heppo_window_rate_rps{shard=\"shard-0\",window=\"1s\"}",
+            "heppo_window_latency_us{shard=\"shard-0\",window=\"10s\",quantile=\"0.99\"}",
+            "heppo_slo_burn_rate{shard=\"shard-0\",window=\"60s\"}",
+            "heppo_slo_health{shard=\"shard-0\"",
+            "heppo_exemplars_retained_total{shard=\"shard-0\"} 1",
+            "trace_id=\"0xabcdef0123456789\"",
+            "reason=\"slow\"",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let escaped = label_escape("a\"b\\c");
+        assert_eq!(escaped, "a\\\"b\\\\c");
+    }
+}

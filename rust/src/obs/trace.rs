@@ -217,6 +217,22 @@ pub fn take_events() -> Vec<Event> {
     out
 }
 
+/// Collect every retained event carrying `trace`, time-sorted, without
+/// draining any ring — the tail-sampling promotion path ([`crate::obs`]
+/// exemplar store) snapshots one request's span tree while the rings
+/// keep recording. Costs one scan of every ring, so callers should
+/// reserve it for rare events (slow/errored requests), not the hot path.
+pub fn trace_events(trace: u64) -> Vec<Event> {
+    let recorders: Vec<Arc<ThreadRecorder>> = REGISTRY.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for rec in recorders {
+        let ring = rec.ring.lock().unwrap();
+        out.extend(ring.events.iter().filter(|e| e.trace == trace).copied());
+    }
+    out.sort_by_key(|e| e.ts_ns);
+    out
+}
+
 /// Total events overwritten (ring full) since the process started.
 pub fn dropped_events() -> u64 {
     REGISTRY
@@ -269,6 +285,29 @@ mod tests {
         assert_eq!(mine[2].kind, EventKind::End);
         assert!(mine[0].ts_ns <= mine[1].ts_ns && mine[1].ts_ns <= mine[2].ts_ns);
         assert_eq!(mine[0].name, "t.work");
+    }
+
+    #[test]
+    fn trace_events_scans_without_draining() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_enabled(true);
+        let _ = take_events();
+        let mine = mint_trace_id();
+        let other = mint_trace_id();
+        span_begin("t.scan", mine);
+        instant("t.noise", other);
+        span_end("t.scan", mine);
+        set_enabled(false);
+        let scanned = trace_events(mine);
+        assert_eq!(scanned.len(), 2, "{scanned:?}");
+        assert!(scanned.iter().all(|e| e.trace == mine));
+        assert!(scanned[0].ts_ns <= scanned[1].ts_ns);
+        // Non-destructive: a later drain still sees all three events.
+        let drained: Vec<Event> = take_events()
+            .into_iter()
+            .filter(|e| e.trace == mine || e.trace == other)
+            .collect();
+        assert_eq!(drained.len(), 3, "scan must not drain the rings");
     }
 
     #[test]

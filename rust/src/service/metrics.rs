@@ -9,9 +9,24 @@
 //!
 //! Everything is shared-state-cheap: counters are atomics; the
 //! per-phase histograms sit behind one short-critical-section mutex.
+//!
+//! Alongside the lifetime view, the recorder keeps *windowed* state —
+//! per-second rings of the total-phase histogram and rate counters
+//! ([`crate::stats::windowed`]) — so a snapshot reports the last
+//! 1s/10s/60s rates, tail quantiles, and SLO burn-rate health next to
+//! the since-start numbers. Window rotation rides the recording path
+//! (no ticker thread) and reuses preallocated buckets, preserving the
+//! hot path's zero-steady-state-allocation guarantee. Completions that
+//! land above an adaptive window-p99 threshold are promoted into a
+//! bounded [`ExemplarStore`] with their span trees (tail-based trace
+//! retention; see [`crate::obs::telemetry`]).
 
+use crate::obs::slo::{self, SloConfig, SloReport, WindowCounts};
+use crate::obs::telemetry::{
+    ExemplarMeta, ExemplarStore, RetainReason, DEFAULT_EXEMPLAR_CAPACITY,
+};
 use crate::service::request::RequestTiming;
-use crate::stats::Histogram;
+use crate::stats::{Histogram, WindowedCounter, WindowedHistogram};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -72,6 +87,19 @@ impl TenantMap {
 const LOG_US_HI: f64 = 8.0;
 const LOG_US_BINS: usize = 800;
 
+/// Seconds of per-second window buckets the rings retain — comfortably
+/// covers the longest (60s) snapshot view.
+const WINDOW_RING_SECS: usize = 64;
+
+/// Margin (log10 domain, ~+20% in µs) added to the 10s-window p99 to
+/// form the tail-retention threshold, so requests *at* the p99 are not
+/// all promoted — only the ones meaningfully past it.
+const RETAIN_MARGIN_LOG: f64 = 0.08;
+
+/// Below this many samples in the 10s window the adaptive threshold is
+/// meaningless; fall back to the SLO latency objective.
+const MIN_THRESHOLD_SAMPLES: u64 = 32;
+
 fn log_us(d: Duration) -> f64 {
     (1.0 + d.as_secs_f64() * 1e6).log10()
 }
@@ -86,6 +114,27 @@ struct PhaseHists {
     compute_us: Histogram,
     encode_us: Histogram,
     total_us: Histogram,
+    /// Per-second ring of the total phase — the windowed-quantile source.
+    win_total: WindowedHistogram,
+    win_completed: WindowedCounter,
+    win_elements: WindowedCounter,
+    /// Shed + quota-shed events, for windowed availability burn.
+    win_errors: WindowedCounter,
+    /// Completions above the SLO latency objective.
+    win_slow: WindowedCounter,
+    /// Preallocated scratch for the per-second threshold recompute —
+    /// keeps the recording path allocation-free.
+    scratch: Histogram,
+    /// Tail-retention threshold, log10(1+µs) domain.
+    retain_threshold_log: f64,
+    /// Second the threshold was last recomputed for (`u64::MAX` =
+    /// never, so the first record computes it).
+    retain_stamp: u64,
+    /// Whether the current threshold came from the window p99 (true)
+    /// or the objective fallback (false). While on the fallback, the
+    /// recompute also fires as soon as the window has enough samples —
+    /// not just at the next second boundary.
+    threshold_adaptive: bool,
 }
 
 impl PhaseHists {
@@ -96,6 +145,15 @@ impl PhaseHists {
             compute_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
             encode_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
             total_us: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
+            win_total: WindowedHistogram::new(0.0, LOG_US_HI, LOG_US_BINS, WINDOW_RING_SECS),
+            win_completed: WindowedCounter::new(WINDOW_RING_SECS),
+            win_elements: WindowedCounter::new(WINDOW_RING_SECS),
+            win_errors: WindowedCounter::new(WINDOW_RING_SECS),
+            win_slow: WindowedCounter::new(WINDOW_RING_SECS),
+            scratch: Histogram::new(0.0, LOG_US_HI, LOG_US_BINS),
+            retain_threshold_log: f64::INFINITY,
+            retain_stamp: u64::MAX,
+            threshold_adaptive: false,
         }
     }
 }
@@ -131,6 +189,13 @@ pub struct ServiceMetrics {
     /// network front-end and the fabric router attribute their
     /// submissions; anonymous in-process clients are not broken down).
     tenants: Mutex<TenantMap>,
+    /// Serving objectives the snapshot evaluates into burn-rate health.
+    slo: SloConfig,
+    /// The SLO latency objective in the log10(1+µs) domain, precomputed
+    /// so the completion path compares without a `log10` call.
+    slow_log: f64,
+    /// Tail-retained exemplars (slow/errored/shed request traces).
+    exemplars: ExemplarStore,
 }
 
 impl Default for ServiceMetrics {
@@ -141,6 +206,11 @@ impl Default for ServiceMetrics {
 
 impl ServiceMetrics {
     pub fn new() -> Self {
+        Self::with_slo(SloConfig::default())
+    }
+
+    /// A recorder evaluating the given objectives.
+    pub fn with_slo(slo: SloConfig) -> Self {
         ServiceMetrics {
             started_at: Instant::now(),
             submitted: AtomicU64::new(0),
@@ -160,7 +230,27 @@ impl ServiceMetrics {
             gathered_bytes: AtomicU64::new(0),
             hists: Mutex::new(PhaseHists::new()),
             tenants: Mutex::new(TenantMap::default()),
+            slo,
+            slow_log: (1.0 + slo.latency_objective_us.max(0.0)).log10(),
+            exemplars: ExemplarStore::new(DEFAULT_EXEMPLAR_CAPACITY),
         }
+    }
+
+    /// The objectives this recorder evaluates.
+    pub fn slo_config(&self) -> SloConfig {
+        self.slo
+    }
+
+    /// The tail-retained exemplar store (exposition + trace RPC read
+    /// from here).
+    pub fn exemplars(&self) -> &ExemplarStore {
+        &self.exemplars
+    }
+
+    /// Seconds since the recorder started — the absolute-second clock
+    /// every windowed ring is stamped with.
+    fn now_sec(&self) -> u64 {
+        self.started_at.elapsed().as_secs()
     }
 
     /// One tenant-attributed request was answered with a result
@@ -187,14 +277,20 @@ impl ServiceMetrics {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Admission control rejected the request.
+    /// Admission control rejected the request. Sheds are availability
+    /// "bad events", so they also land in the windowed error ring the
+    /// SLO burn rates read.
     pub(crate) fn record_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+        let now_sec = self.now_sec();
+        self.hists.lock().unwrap().win_errors.add(now_sec, 1);
     }
 
     /// The network front-end refused a frame on its tenant's quota.
     pub(crate) fn record_quota_shed(&self) {
         self.quota_shed.fetch_add(1, Ordering::Relaxed);
+        let now_sec = self.now_sec();
+        self.hists.lock().unwrap().win_errors.add(now_sec, 1);
     }
 
     /// The network front-end answered a frame from the response cache.
@@ -252,13 +348,75 @@ impl ServiceMetrics {
     /// [`ServiceMetrics::record_batch`], not here; the encode phase per
     /// wire frame in [`ServiceMetrics::record_encode`], since the worker
     /// has already sent the timing by the time a frame is built.
-    pub(crate) fn record_completion(&self, elements: usize, timing: &RequestTiming) {
+    ///
+    /// Besides the lifetime histograms, the completion lands in the
+    /// per-second windowed rings, and — when `trace` is nonzero and the
+    /// total sits above the adaptive tail threshold (the 10s-window p99
+    /// plus [`RETAIN_MARGIN_LOG`], or the SLO latency objective while
+    /// the window is thin) — the request's span tree is promoted into
+    /// the exemplar store. Everything on the common path reuses
+    /// preallocated buckets: no allocation unless a promotion fires —
+    /// `benches/telemetry_overhead.rs` holds this path to zero
+    /// steady-state allocations (which is why this recorder hook is
+    /// `pub`: the worker is its real caller).
+    pub fn record_completion(&self, elements: usize, timing: &RequestTiming, trace: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(elements as u64, Ordering::Relaxed);
-        let mut h = self.hists.lock().unwrap();
-        h.queue_us.push(log_us(timing.queue));
-        h.batch_us.push(log_us(timing.batch));
-        h.total_us.push(log_us(timing.total));
+        let now_sec = self.now_sec();
+        let log_total = log_us(timing.total);
+        let retain = {
+            let mut h = self.hists.lock().unwrap();
+            h.queue_us.push(log_us(timing.queue));
+            h.batch_us.push(log_us(timing.batch));
+            h.total_us.push(log_total);
+            h.win_total.record(now_sec, log_total);
+            h.win_completed.add(now_sec, 1);
+            h.win_elements.add(now_sec, elements as u64);
+            if log_total > self.slow_log {
+                h.win_slow.add(now_sec, 1);
+            }
+            let recompute = h.retain_stamp != now_sec
+                || (!h.threshold_adaptive
+                    && h.win_completed.sum(now_sec, 10) >= MIN_THRESHOLD_SAMPLES);
+            if recompute {
+                h.retain_stamp = now_sec;
+                let inner = &mut *h;
+                inner.win_total.merged_into(now_sec, 10, &mut inner.scratch);
+                if inner.scratch.count() < MIN_THRESHOLD_SAMPLES {
+                    inner.retain_threshold_log = self.slow_log;
+                    inner.threshold_adaptive = false;
+                } else {
+                    inner.retain_threshold_log =
+                        inner.scratch.quantile(0.99) + RETAIN_MARGIN_LOG;
+                    inner.threshold_adaptive = true;
+                }
+            }
+            trace != 0 && log_total > h.retain_threshold_log
+        };
+        if retain {
+            self.exemplars.retain(ExemplarMeta {
+                trace,
+                reason: RetainReason::Slow,
+                total_us: timing.total.as_secs_f64() * 1e6,
+                when_sec: now_sec,
+            });
+        }
+    }
+
+    /// Promote a request's trace for a non-latency reason (errored,
+    /// shed, failed over) — called by the front-ends, which know the
+    /// outcome and the trace id. Untraced requests have no span tree to
+    /// keep and are skipped.
+    pub(crate) fn retain_exemplar(&self, trace: u64, reason: RetainReason, total: Duration) {
+        if trace == 0 {
+            return;
+        }
+        self.exemplars.retain(ExemplarMeta {
+            trace,
+            reason,
+            total_us: total.as_secs_f64() * 1e6,
+            when_sec: self.now_sec(),
+        });
     }
 
     /// The network front-end encoded one response frame in `encode` —
@@ -303,8 +461,45 @@ impl ServiceMetrics {
         let h = self.hists.lock().unwrap();
         let batches = self.batches.load(Ordering::Relaxed);
         let elements = self.elements.load(Ordering::Relaxed);
+        // Windowed views: merge the per-second rings over the three
+        // standard spans (snapshotting is cold, so allocating the
+        // merged histograms here is fine).
+        let now_sec = uptime.as_secs();
+        let windows = [1u64, 10, 60].map(|span| {
+            let merged = h.win_total.merged(now_sec, span);
+            let completed = h.win_completed.sum(now_sec, span);
+            let win_elements = h.win_elements.sum(now_sec, span);
+            WindowView {
+                span_secs: span,
+                completed,
+                elements: win_elements,
+                errors: h.win_errors.sum(now_sec, span),
+                slow: h.win_slow.sum(now_sec, span),
+                rate_rps: completed as f64 / span as f64,
+                elem_per_sec: win_elements as f64 / span as f64,
+                total_us: LatencyQuantiles::of(&merged),
+            }
+        });
+        let counts = |w: &WindowView| WindowCounts {
+            completed: w.completed,
+            errors: w.errors,
+            slow: w.slow,
+        };
+        let slo = slo::evaluate(
+            &self.slo,
+            &counts(&windows[0]),
+            &counts(&windows[1]),
+            &counts(&windows[2]),
+        );
+        let (exemplars_retained, exemplars_evicted) = self.exemplars.counts();
         MetricsSnapshot {
             tenants,
+            trace_dropped_events: crate::obs::trace::dropped_events(),
+            exemplars_retained,
+            exemplars_evicted,
+            windows,
+            slo,
+            recent_exemplars: self.exemplars.metas(8),
             uptime,
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -385,6 +580,31 @@ impl LatencyQuantiles {
     }
 }
 
+/// One windowed view of the request stream: the last `span_secs`
+/// seconds' rates and total-phase quantiles, merged out of the
+/// per-second rings at snapshot time. An idle window reports zeros —
+/// stale buckets age out by stamp, so a quiet service never shows a
+/// frozen p99 from its last burst.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowView {
+    /// Window length in seconds (1, 10, or 60).
+    pub span_secs: u64,
+    /// Requests completed inside the window.
+    pub completed: u64,
+    /// GAE elements those completions carried.
+    pub elements: u64,
+    /// Shed + quota-shed events inside the window.
+    pub errors: u64,
+    /// Completions above the SLO latency objective.
+    pub slow: u64,
+    /// `completed / span_secs`.
+    pub rate_rps: f64,
+    /// `elements / span_secs`.
+    pub elem_per_sec: f64,
+    /// Total-phase quantiles over the window.
+    pub total_us: LatencyQuantiles,
+}
+
 /// A frozen view of [`ServiceMetrics`].
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
@@ -433,10 +653,35 @@ pub struct MetricsSnapshot {
     /// submissions move their responses and record nothing here).
     pub encode_us: LatencyQuantiles,
     pub total_us: LatencyQuantiles,
+    /// Trace-ring events overwritten before being drained (process
+    /// total) — nonzero means span trees are being silently lost.
+    pub trace_dropped_events: u64,
+    /// Exemplars promoted into the tail-retained store since start.
+    pub exemplars_retained: u64,
+    /// Exemplars evicted from the bounded store since start.
+    pub exemplars_evicted: u64,
+    /// Windowed views of the last 1, 10, and 60 seconds, in that order.
+    pub windows: [WindowView; 3],
+    /// Multi-window SLO burn rates and the combined health verdict.
+    pub slo: SloReport,
+    /// Up to 8 most recent retained exemplars, newest first (ids only;
+    /// full span trees stay in the store / trace RPC).
+    pub recent_exemplars: Vec<ExemplarMeta>,
     /// Per-tenant breakdown, heaviest (by elements) first. Covers
     /// tenant-attributed traffic only (network front-end, fabric);
     /// bounded at 4096 tenants with LRU eviction like the quota map.
     pub tenants: Vec<TenantSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// The windowed view covering `span_secs` (1, 10, or 60); other
+    /// spans fall back to the 1s view.
+    pub fn window(&self, span_secs: u64) -> &WindowView {
+        self.windows
+            .iter()
+            .find(|w| w.span_secs == span_secs)
+            .unwrap_or(&self.windows[0])
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -487,6 +732,33 @@ impl std::fmt::Display for MetricsSnapshot {
             self.compute_us.p50,
             self.encode_us.p50
         )?;
+        for w in &self.windows {
+            writeln!(
+                f,
+                "last {:>3}s: {:.1} req/s, {} elem/s | p50 {:.0}  p95 {:.0}  p99 {:.0} µs | {} errors, {} slow",
+                w.span_secs,
+                w.rate_rps,
+                crate::bench::format_si(w.elem_per_sec),
+                w.total_us.p50,
+                w.total_us.p95,
+                w.total_us.p99,
+                w.errors,
+                w.slow
+            )?;
+        }
+        writeln!(
+            f,
+            "slo:      {} (burn 1s {:.1} / 10s {:.1} / 60s {:.1})",
+            self.slo.health, self.slo.burn_1s, self.slo.burn_10s, self.slo.burn_60s
+        )?;
+        writeln!(
+            f,
+            "trace:    {} ring-dropped events | exemplars {} retained / {} evicted ({} recent)",
+            self.trace_dropped_events,
+            self.exemplars_retained,
+            self.exemplars_evicted,
+            self.recent_exemplars.len()
+        )?;
         write!(
             f,
             "work:     {} elements in {:.2}s = {} elem/s sustained",
@@ -527,7 +799,7 @@ mod tests {
         m.record_batch(32, Some(1000), Duration::from_micros(200));
         m.record_batch(16, None, Duration::from_micros(100));
         m.record_tiles(2, 1, 4096);
-        m.record_completion(4096, &timing(50, 200));
+        m.record_completion(4096, &timing(50, 200), 0);
         let s = m.snapshot(SnapshotInputs {
             queue_depth: 3,
             peak_queue_depth: 7,
@@ -620,7 +892,7 @@ mod tests {
             encode: Duration::ZERO,
             total: Duration::from_micros(400),
         };
-        m.record_completion(1, &t);
+        m.record_completion(1, &t, 0);
         m.record_encode(Duration::from_micros(70));
         let s = m.snapshot(SnapshotInputs::default());
         assert!((250.0..400.0).contains(&s.batch_us.p50), "batch p50 = {}", s.batch_us.p50);
@@ -634,10 +906,10 @@ mod tests {
         let m = ServiceMetrics::new();
         // 100 requests at 100µs, 900 at 1000µs total: p50 ~1000.
         for _ in 0..100 {
-            m.record_completion(1, &timing(100, 0));
+            m.record_completion(1, &timing(100, 0), 0);
         }
         for _ in 0..900 {
-            m.record_completion(1, &timing(1000, 0));
+            m.record_completion(1, &timing(1000, 0), 0);
         }
         let s = m.snapshot(SnapshotInputs::default());
         let p50 = s.queue_us.p50;
@@ -655,7 +927,7 @@ mod tests {
         let m = ServiceMetrics::new();
         m.record_batch(10, None, Duration::from_micros(5000));
         for _ in 0..10 {
-            m.record_completion(8, &timing(10, 500));
+            m.record_completion(8, &timing(10, 500), 0);
         }
         let s = m.snapshot(SnapshotInputs::default());
         let p50 = s.compute_us.p50;
@@ -670,14 +942,111 @@ mod tests {
     fn display_mentions_the_headline_numbers() {
         let m = ServiceMetrics::new();
         m.record_submitted();
-        m.record_completion(10, &timing(5, 10));
+        m.record_completion(10, &timing(5, 10), 0);
         let text = m
             .snapshot(SnapshotInputs { peak_queue_depth: 1, ..Default::default() })
             .to_string();
-        for needle in
-            ["p50", "p95", "p99", "shed", "elem/s", "cache", "quota", "slab"]
-        {
+        for needle in [
+            "p50", "p95", "p99", "shed", "elem/s", "cache", "quota", "slab",
+            "last   1s", "slo:", "exemplars",
+        ] {
             assert!(text.contains(needle), "missing {needle}: {text}");
         }
+    }
+
+    #[test]
+    fn windowed_views_report_recent_load_alongside_lifetime() {
+        let m = ServiceMetrics::new();
+        for _ in 0..40 {
+            m.record_completion(16, &timing(500, 0), 0);
+        }
+        let s = m.snapshot(SnapshotInputs::default());
+        // The burst just happened, so every window sees all of it…
+        let w1 = s.window(1);
+        assert_eq!(w1.span_secs, 1);
+        assert_eq!(w1.completed, 40);
+        assert_eq!(w1.elements, 640);
+        assert!(w1.rate_rps >= 40.0, "{}", w1.rate_rps);
+        assert_eq!(s.window(10).completed, 40);
+        assert_eq!(s.window(60).completed, 40);
+        // …with windowed quantiles near the recorded 500µs totals.
+        assert!((400.0..700.0).contains(&w1.total_us.p50), "{}", w1.total_us.p50);
+        // Lifetime and window agree while everything is recent.
+        assert_eq!(s.completed, 40);
+        assert_eq!(w1.errors, 0);
+        assert_eq!(w1.slow, 0);
+    }
+
+    #[test]
+    fn slow_traced_completion_is_retained_as_exemplar() {
+        let m = ServiceMetrics::new();
+        // Above the 50ms default objective while the 10s window is thin
+        // → promoted; same latency untraced → no span tree to keep.
+        m.record_completion(8, &timing(200_000, 0), 0xFEED);
+        m.record_completion(8, &timing(200_000, 0), 0);
+        // A fast traced completion stays unretained.
+        m.record_completion(8, &timing(100, 0), 0xBEEF);
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.exemplars_retained, 1, "{:?}", s.recent_exemplars);
+        assert_eq!(s.exemplars_evicted, 0);
+        assert_eq!(s.recent_exemplars.len(), 1);
+        assert_eq!(s.recent_exemplars[0].trace, 0xFEED);
+        assert_eq!(s.recent_exemplars[0].reason, RetainReason::Slow);
+        assert!(s.recent_exemplars[0].total_us > 100_000.0);
+        // The slow completions also count against the latency SLO.
+        assert_eq!(s.window(1).slow, 2);
+    }
+
+    #[test]
+    fn shed_heavy_windows_flip_slo_health_to_critical() {
+        let m = ServiceMetrics::new();
+        let idle = m.snapshot(SnapshotInputs::default());
+        assert_eq!(idle.slo.health, crate::obs::SloHealth::Ok);
+        assert_eq!(idle.slo.burn_1s, 0.0);
+        // Half the traffic shed burns the availability budget at ~500x
+        // in both fast windows.
+        for _ in 0..10 {
+            m.record_completion(1, &timing(100, 0), 0);
+            m.record_shed();
+        }
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.window(1).errors, 10);
+        assert!(s.slo.burn_1s > slo::FAST_BURN, "{:?}", s.slo);
+        assert!(s.slo.burn_10s > slo::FAST_BURN, "{:?}", s.slo);
+        assert_eq!(s.slo.health, crate::obs::SloHealth::Critical);
+    }
+
+    #[test]
+    fn retain_exemplar_records_front_end_outcomes() {
+        let m = ServiceMetrics::new();
+        m.retain_exemplar(0, RetainReason::Shed, Duration::ZERO); // untraced: dropped
+        m.retain_exemplar(0xC0FFEE, RetainReason::Shed, Duration::from_millis(3));
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.exemplars_retained, 1);
+        assert_eq!(s.recent_exemplars[0].reason, RetainReason::Shed);
+        assert_eq!(s.recent_exemplars[0].trace, 0xC0FFEE);
+    }
+
+    #[test]
+    fn adaptive_threshold_tracks_the_window_p99() {
+        let m = ServiceMetrics::new();
+        // Fill the 10s window with enough fast samples to arm the
+        // adaptive threshold (p99 ≈ 500µs, threshold ≈ +20%).
+        for _ in 0..200 {
+            m.record_completion(1, &timing(500, 0), 0);
+        }
+        {
+            let h = m.hists.lock().unwrap();
+            assert!(
+                h.retain_threshold_log.is_finite(),
+                "threshold must be armed after {MIN_THRESHOLD_SAMPLES}+ samples"
+            );
+        }
+        // 5ms is ~10x the window p99: well past threshold → retained,
+        // even though it is far below the 50ms SLO objective.
+        m.record_completion(1, &timing(5_000, 0), 0xAB);
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.exemplars_retained, 1, "{:?}", s.recent_exemplars);
+        assert_eq!(s.recent_exemplars[0].trace, 0xAB);
     }
 }

@@ -80,6 +80,7 @@ pub mod worker;
 pub use batcher::{BatcherConfig, DynamicBatcher, PaddedTile, WorkerScratch};
 pub use metrics::{
     LatencyQuantiles, MetricsSnapshot, ServiceMetrics, SnapshotInputs, TenantSnapshot,
+    WindowView,
 };
 pub use plane::{slab_of, Lane, PlaneSet, Slab};
 pub use queue::{BoundedQueue, PushError};

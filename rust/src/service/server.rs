@@ -4,6 +4,7 @@
 use crate::coordinator::gae_stage::GaeBackend;
 use crate::gae::{GaeParams, Trajectory};
 use crate::hwsim::{GaeHwSim, SimConfig};
+use crate::obs::slo::SloConfig;
 use crate::service::batcher::{BatcherConfig, DynamicBatcher};
 use crate::service::metrics::{MetricsSnapshot, ServiceMetrics, SnapshotInputs};
 use crate::service::plane::{Lane, PlaneSet};
@@ -36,6 +37,9 @@ pub struct ServiceConfig {
     pub scalar_route_max_elements: usize,
     /// GAE hyper-parameters applied to every request.
     pub gae: GaeParams,
+    /// Serving objectives the telemetry plane scores each window
+    /// against (latency objective + availability target).
+    pub slo: SloConfig,
 }
 
 impl Default for ServiceConfig {
@@ -48,6 +52,7 @@ impl Default for ServiceConfig {
             sim_rows: 64,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            slo: SloConfig::default(),
         }
     }
 }
@@ -82,7 +87,7 @@ impl GaeService {
             );
         }
         let queue = Arc::new(BoundedQueue::new(config.queue_capacity));
-        let metrics = Arc::new(ServiceMetrics::new());
+        let metrics = Arc::new(ServiceMetrics::with_slo(config.slo));
         let pool = ThreadPool::new(config.workers);
         for index in 0..config.workers {
             let ctx = WorkerContext {

@@ -134,7 +134,7 @@ fn process_group(
             encode: std::time::Duration::ZERO,
             total: item.enqueued_at.elapsed(),
         };
-        ctx.metrics.record_completion(elements, &timing);
+        ctx.metrics.record_completion(elements, &timing, item.trace);
         // The client may have dropped its handle; a failed send is fine.
         let _ = item.tx.send(GaeResponse {
             id: item.id,

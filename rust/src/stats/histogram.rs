@@ -86,6 +86,37 @@ impl Histogram {
         self.hi
     }
 
+    /// Clear all counts in place, keeping the bin storage — the
+    /// windowed-metrics ring reuses one allocation per window forever.
+    pub fn reset(&mut self) {
+        for b in &mut self.bins {
+            *b = 0;
+        }
+        self.underflow = 0;
+        self.overflow = 0;
+        self.count = 0;
+    }
+
+    /// Fold another histogram's counts into this one. Panics unless the
+    /// two share an identical `[lo, hi)` range and bin count — merging
+    /// is bin-wise addition, which is only meaningful over the same
+    /// partition. This is what makes fixed-bin histograms *mergeable*:
+    /// per-second windows sum into a multi-second view, and per-shard
+    /// windows sum into a fleet view, with quantiles of the merge equal
+    /// to quantiles of the union of samples (up to bin resolution).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            self.lo == other.lo && self.hi == other.hi && self.bins.len() == other.bins.len(),
+            "histogram merge requires identical ranges and bin counts"
+        );
+        for (a, b) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+    }
+
     /// Fraction of mass outside `[lo, hi)` — the quantizer clipping rate.
     pub fn clipped_fraction(&self) -> f64 {
         if self.count == 0 {
@@ -200,6 +231,46 @@ mod tests {
         }
         assert_eq!(all_over.quantile(0.5), 10.0);
         assert_eq!(all_over.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    fn merge_matches_union_of_samples_and_reset_clears() {
+        let mut a = Histogram::new(0.0, 100.0, 100);
+        let mut b = Histogram::new(0.0, 100.0, 100);
+        let mut union = Histogram::new(0.0, 100.0, 100);
+        for i in 0..50 {
+            let x = i as f64 + 0.5;
+            a.push(x);
+            union.push(x);
+        }
+        for i in 50..100 {
+            let x = i as f64 + 0.5;
+            b.push(x);
+            union.push(x);
+        }
+        a.push(-1.0);
+        union.push(-1.0);
+        b.push(1e9);
+        union.push(1e9);
+        a.merge(&b);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.bins(), union.bins());
+        assert_eq!((a.underflow, a.overflow), (union.underflow, union.overflow));
+        for q in [0.25, 0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), union.quantile(q), "q={q}");
+        }
+        a.reset();
+        assert_eq!(a.count(), 0);
+        assert!(a.bins().iter().all(|&c| c == 0));
+        assert_eq!(a.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical ranges")]
+    fn merge_rejects_mismatched_ranges() {
+        let mut a = Histogram::new(0.0, 1.0, 10);
+        let b = Histogram::new(0.0, 2.0, 10);
+        a.merge(&b);
     }
 
     #[test]

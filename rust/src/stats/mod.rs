@@ -5,15 +5,21 @@
 //!   Welford's algorithm, the arithmetic core of *dynamic standardization*.
 //! - [`rolling`] — fixed-window rolling average (Fig. 10 plots a rolling
 //!   average over 1000 readings).
-//! - [`histogram`] — fixed-bin histograms (Fig. 2 value distributions).
+//! - [`histogram`] — fixed-bin histograms (Fig. 2 value distributions),
+//!   mergeable bin-wise for windowed and cross-shard views.
 //! - [`summary`] — batch summary statistics (mean/std/min/max/percentiles).
+//! - [`windowed`] — rings of per-second histogram/counter buckets: the
+//!   live-telemetry substrate behind `MetricsSnapshot`'s `last_1s/10s/60s`
+//!   views (rotation on the recording path, zero steady-state allocation).
 
 pub mod histogram;
 pub mod rolling;
 pub mod summary;
 pub mod welford;
+pub mod windowed;
 
 pub use histogram::Histogram;
 pub use rolling::RollingMean;
 pub use summary::Summary;
 pub use welford::Welford;
+pub use windowed::{WindowedCounter, WindowedHistogram};

@@ -1,0 +1,254 @@
+//! Windowed metrics substrate: fixed rings of per-second buckets.
+//!
+//! The serving stack's lifetime histograms answer "how has this process
+//! done since start" — useless for spotting a p99 regression mid-run,
+//! because an hour of healthy traffic dilutes a bad minute below the
+//! noise floor. The windowed substrate keeps a fixed ring of per-second
+//! buckets ([`Histogram`]s or plain counters) and answers "how did the
+//! last 1/10/60 seconds look" instead.
+//!
+//! Two properties drive the design:
+//!
+//! - **Rotation rides the recording path.** Each bucket is stamped with
+//!   the absolute second it holds data for; a record into a second the
+//!   slot does not yet represent resets the slot first. No ticker
+//!   thread, no timer wheel — an idle service does zero work, and a
+//!   busy one pays one stamp compare per record plus one O(bins) reset
+//!   per histogram per second.
+//! - **Zero allocation after warm-up.** Every bucket's storage is
+//!   allocated once at construction; rotation resets counts in place
+//!   and views merge into caller-provided scratch
+//!   ([`WindowedHistogram::merged_into`]). The telemetry-overhead bench
+//!   holds the recording path to 0 steady-state allocations.
+//!
+//! Stale buckets age out *by stamp*, not by rotation: a view over the
+//! last N seconds only admits buckets whose stamp falls inside the
+//! span, so a service idle for a minute reports empty windows rather
+//! than a frozen p99 from its last burst. Because the ring maps second
+//! `s` to slot `s % len`, a stamp can never alias a prior lap — slot
+//! reuse re-stamps.
+
+use crate::stats::Histogram;
+
+/// Stamp meaning "this slot has never held data".
+const EMPTY: u64 = u64::MAX;
+
+/// A ring of per-second [`Histogram`] buckets over a shared range.
+#[derive(Debug, Clone)]
+pub struct WindowedHistogram {
+    /// Slot `i` holds the data of every second `s` with `s % len == i`
+    /// — but only the most recent such second (the stamp says which).
+    stamps: Vec<u64>,
+    hists: Vec<Histogram>,
+}
+
+impl WindowedHistogram {
+    /// `ring_secs` is the longest lookback the ring can answer; views
+    /// over longer spans silently see at most `ring_secs` seconds.
+    pub fn new(lo: f64, hi: f64, n_bins: usize, ring_secs: usize) -> WindowedHistogram {
+        assert!(ring_secs > 0, "ring must hold at least one second");
+        WindowedHistogram {
+            stamps: vec![EMPTY; ring_secs],
+            hists: (0..ring_secs).map(|_| Histogram::new(lo, hi, n_bins)).collect(),
+        }
+    }
+
+    /// Seconds of lookback the ring covers.
+    pub fn ring_secs(&self) -> usize {
+        self.stamps.len()
+    }
+
+    /// Record `value` into the bucket for absolute second `now_sec`
+    /// (whatever monotonic second counter the caller keeps). Rotation
+    /// happens here: a stale slot is reset and re-stamped in place.
+    #[inline]
+    pub fn record(&mut self, now_sec: u64, value: f64) {
+        let i = (now_sec % self.stamps.len() as u64) as usize;
+        if self.stamps[i] != now_sec {
+            self.hists[i].reset();
+            self.stamps[i] = now_sec;
+        }
+        self.hists[i].push(value);
+    }
+
+    /// Merge the buckets of the last `span_secs` seconds (the current
+    /// partial second included) into `out`, which is reset first. `out`
+    /// must share the ring's range/bins; scratch-reuse keeps the
+    /// periodic threshold recompute allocation-free.
+    pub fn merged_into(&self, now_sec: u64, span_secs: u64, out: &mut Histogram) {
+        out.reset();
+        let span = span_secs.min(self.stamps.len() as u64).max(1);
+        let first = now_sec.saturating_sub(span - 1);
+        for sec in first..=now_sec {
+            let i = (sec % self.stamps.len() as u64) as usize;
+            if self.stamps[i] == sec {
+                out.merge(&self.hists[i]);
+            }
+        }
+    }
+
+    /// Allocating convenience for snapshot paths: the merged view of
+    /// the last `span_secs` seconds as a fresh [`Histogram`].
+    pub fn merged(&self, now_sec: u64, span_secs: u64) -> Histogram {
+        let mut out = self.hists[0].clone();
+        self.merged_into(now_sec, span_secs, &mut out);
+        out
+    }
+
+    /// Samples recorded in the last `span_secs` seconds.
+    pub fn count(&self, now_sec: u64, span_secs: u64) -> u64 {
+        let span = span_secs.min(self.stamps.len() as u64).max(1);
+        let first = now_sec.saturating_sub(span - 1);
+        (first..=now_sec)
+            .filter_map(|sec| {
+                let i = (sec % self.stamps.len() as u64) as usize;
+                (self.stamps[i] == sec).then(|| self.hists[i].count())
+            })
+            .sum()
+    }
+}
+
+/// A ring of per-second `u64` counters — the counting counterpart of
+/// [`WindowedHistogram`], for rates and SLO good/bad event counts.
+#[derive(Debug, Clone)]
+pub struct WindowedCounter {
+    stamps: Vec<u64>,
+    counts: Vec<u64>,
+}
+
+impl WindowedCounter {
+    pub fn new(ring_secs: usize) -> WindowedCounter {
+        assert!(ring_secs > 0, "ring must hold at least one second");
+        WindowedCounter { stamps: vec![EMPTY; ring_secs], counts: vec![0; ring_secs] }
+    }
+
+    /// Add `n` to the bucket for absolute second `now_sec`.
+    #[inline]
+    pub fn add(&mut self, now_sec: u64, n: u64) {
+        let i = (now_sec % self.stamps.len() as u64) as usize;
+        if self.stamps[i] != now_sec {
+            self.counts[i] = 0;
+            self.stamps[i] = now_sec;
+        }
+        self.counts[i] += n;
+    }
+
+    /// Sum over the last `span_secs` seconds (current second included).
+    pub fn sum(&self, now_sec: u64, span_secs: u64) -> u64 {
+        let span = span_secs.min(self.stamps.len() as u64).max(1);
+        let first = now_sec.saturating_sub(span - 1);
+        (first..=now_sec)
+            .filter_map(|sec| {
+                let i = (sec % self.stamps.len() as u64) as usize;
+                (self.stamps[i] == sec).then_some(self.counts[i])
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotation_at_second_boundaries_keeps_buckets_separate() {
+        let mut w = WindowedHistogram::new(0.0, 100.0, 100, 8);
+        w.record(5, 10.0);
+        w.record(5, 10.0);
+        w.record(6, 90.0);
+        // The 1s view at sec 6 sees only sec 6's samples…
+        assert_eq!(w.count(6, 1), 1);
+        let h = w.merged(6, 1);
+        assert!((89.0..91.5).contains(&h.quantile(0.5)), "{}", h.quantile(0.5));
+        // …and the 2s view merges both seconds.
+        assert_eq!(w.count(6, 2), 3);
+        // Recording again into sec 5 lands in the *same* bucket (no
+        // reset at a boundary already stamped).
+        w.record(5, 10.0);
+        assert_eq!(w.count(6, 2), 4);
+    }
+
+    #[test]
+    fn merged_window_quantiles_agree_with_single_histogram() {
+        // Two "shards" record disjoint sample streams across 3 seconds;
+        // the union of their merged windows must match one histogram
+        // that saw every sample — the mergeability contract the fleet
+        // view relies on.
+        let mut shard_a = WindowedHistogram::new(0.0, 1000.0, 200, 16);
+        let mut shard_b = WindowedHistogram::new(0.0, 1000.0, 200, 16);
+        let mut reference = Histogram::new(0.0, 1000.0, 200);
+        for sec in 10..13u64 {
+            for i in 0..100 {
+                let xa = (i as f64) + (sec as f64);
+                let xb = 500.0 + (i as f64) * 2.0 + (sec as f64);
+                shard_a.record(sec, xa);
+                shard_b.record(sec, xb);
+                reference.push(xa);
+                reference.push(xb);
+            }
+        }
+        let mut fleet = shard_a.merged(12, 3);
+        fleet.merge(&shard_b.merged(12, 3));
+        assert_eq!(fleet.count(), reference.count());
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            assert_eq!(fleet.quantile(q), reference.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn stale_windows_age_out_after_idle_gaps() {
+        let mut w = WindowedHistogram::new(0.0, 100.0, 10, 8);
+        for _ in 0..50 {
+            w.record(3, 42.0);
+        }
+        assert!(w.count(3, 1) == 50);
+        // A long idle gap: the view at a much later second must be
+        // empty (no frozen p99 from the old burst)…
+        assert_eq!(w.count(120, 8), 0);
+        assert_eq!(w.merged(120, 8).quantile(0.99), 0.0);
+        // …including the aliasing case where the later second maps to
+        // the *same slot* as the stale burst (3 % 8 == 83 % 8).
+        assert_eq!(w.count(83, 1), 0);
+        w.record(83, 7.0);
+        assert_eq!(w.count(83, 1), 1, "slot reuse must reset the stale bucket");
+        let h = w.merged(83, 1);
+        assert!(h.quantile(0.99) < 12.0, "stale samples leaked: {}", h.quantile(0.99));
+    }
+
+    #[test]
+    fn merged_into_reuses_scratch_without_leaking_prior_state() {
+        let mut w = WindowedHistogram::new(0.0, 10.0, 10, 4);
+        w.record(0, 1.0);
+        let mut scratch = Histogram::new(0.0, 10.0, 10);
+        scratch.push(9.0);
+        w.merged_into(0, 1, &mut scratch);
+        assert_eq!(scratch.count(), 1);
+        assert!(scratch.quantile(0.99) < 2.5, "{}", scratch.quantile(0.99));
+    }
+
+    #[test]
+    fn counter_sums_span_and_ages_out() {
+        let mut c = WindowedCounter::new(8);
+        c.add(10, 5);
+        c.add(11, 7);
+        c.add(12, 1);
+        assert_eq!(c.sum(12, 1), 1);
+        assert_eq!(c.sum(12, 3), 13);
+        assert_eq!(c.sum(12, 100), 13, "span clamps to the ring");
+        // Idle gap: everything ages out by stamp.
+        assert_eq!(c.sum(1000, 8), 0);
+        // Slot aliasing after a full lap resets, not accumulates.
+        c.add(18, 2); // 18 % 8 == 10 % 8
+        assert_eq!(c.sum(18, 1), 2);
+    }
+
+    #[test]
+    fn span_longer_than_ring_is_clamped() {
+        let mut w = WindowedHistogram::new(0.0, 10.0, 10, 4);
+        for sec in 0..10u64 {
+            w.record(sec, 5.0);
+        }
+        // Only the last 4 seconds survive in a 4-slot ring.
+        assert_eq!(w.count(9, 60), 4);
+    }
+}

@@ -34,6 +34,7 @@ fn scalar_service(workers: usize) -> Arc<GaeService> {
             sim_rows: 16,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            ..ServiceConfig::default()
         })
         .unwrap(),
     )

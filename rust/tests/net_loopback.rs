@@ -35,6 +35,7 @@ fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> Arc<Ga
             sim_rows: 16,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            ..ServiceConfig::default()
         })
         .unwrap(),
     )

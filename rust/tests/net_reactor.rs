@@ -40,6 +40,7 @@ fn service(workers: usize, queue_capacity: usize) -> Arc<GaeService> {
             sim_rows: 16,
             scalar_route_max_elements: 0,
             gae: GaeParams::default(),
+            ..ServiceConfig::default()
         })
         .unwrap(),
     )

@@ -45,6 +45,7 @@ fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> Arc<Ga
             sim_rows: 16,
             scalar_route_max_elements: 0,
             gae: Default::default(),
+            ..ServiceConfig::default()
         })
         .unwrap(),
     )

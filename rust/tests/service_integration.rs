@@ -31,6 +31,7 @@ fn service(workers: usize, backend: GaeBackend, queue_capacity: usize) -> GaeSer
         sim_rows: 16,
         scalar_route_max_elements: 0,
         gae: GaeParams::default(),
+        ..ServiceConfig::default()
     })
     .unwrap()
 }
@@ -198,6 +199,7 @@ fn admission_control_sheds_when_the_queue_is_at_its_limit() {
         sim_rows: 16,
         scalar_route_max_elements: 0,
         gae: GaeParams::default(),
+        ..ServiceConfig::default()
     })
     .unwrap();
     let mut g = Gen::new(5);

@@ -1,0 +1,439 @@
+//! Telemetry-plane integration: the live observability surface over
+//! real sockets and a real fabric.
+//!
+//! Three acceptance scenarios:
+//!
+//! - **Windowed tail vs lifetime** — loopback load against a
+//!   reactor-mode server, scraping the plaintext exposition endpoint
+//!   on the *binary* port twice: after a slow burst the 1s-window p99
+//!   reflects it immediately while the lifetime p99, diluted by the
+//!   fast phase, lags far below.
+//! - **Tail-based retention** — the burst's traced slow requests are
+//!   promoted into the exemplar store server-side; their trace ids
+//!   appear both as OpenMetrics exemplars on the windowed p99 rows
+//!   and in the `GET /traces` Chrome-trace export, in the same hex
+//!   form, with no client-side cooperation beyond sending a trace id.
+//! - **Fleet SLO health** — forcing a shard failure (an overload that
+//!   sheds live requests) flips the fleet's burn-rate health to
+//!   `Critical` within one window; recovery traffic dilutes the burn
+//!   back under budget and the fleet returns to `Ok`.
+//!
+//! Latency here is made deterministic, not sampled: the batcher
+//! lingers `max_wait` only when a drain finds company, so a burst
+//! pipelined behind a large head request always forms a group and
+//! always pays the linger, while sequential singles never do.
+
+#![cfg(target_os = "linux")]
+
+use heppo::coordinator::GaeBackend;
+use heppo::fabric::{FabricConfig, GaeFabric, ShardBackend};
+use heppo::gae::GaeParams;
+use heppo::net::{wire, NetServer, NetServerConfig, PlaneCodec, ServerMode};
+use heppo::obs::telemetry::trace_hex;
+use heppo::obs::SloHealth;
+use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
+use heppo::testing::Gen;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A service whose only latency knob is the batcher linger: solo
+/// requests flush immediately (fast), grouped requests wait the full
+/// `max_wait` (deterministically slow).
+fn linger_service(max_wait: Duration) -> Arc<GaeService> {
+    Arc::new(
+        GaeService::start(ServiceConfig {
+            workers: 1,
+            backend: GaeBackend::Scalar,
+            queue_capacity: 256,
+            batcher: BatcherConfig { max_batch_lanes: 64, tile_lanes: 16, max_wait },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+            ..ServiceConfig::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn request_frame(
+    g: &mut Gen,
+    seq: u64,
+    trace: u64,
+    t_len: usize,
+    batch: usize,
+) -> Vec<u8> {
+    let rewards = g.vec_normal_f32(t_len * batch, 0.0, 1.0);
+    let values = g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0);
+    let done_mask: Vec<f32> = (0..t_len * batch)
+        .map(|_| if g.bool_p(0.05) { 1.0 } else { 0.0 })
+        .collect();
+    wire::encode_request(
+        seq,
+        "telemetry",
+        PlaneCodec::F32,
+        PlaneCodec::F32,
+        trace,
+        t_len,
+        batch,
+        &rewards,
+        &values,
+        &done_mask,
+    )
+    .unwrap()
+    .bytes
+}
+
+/// One-shot plaintext scrape over the binary port: `(status_line,
+/// body)`. The server answers and closes, so read-to-EOF terminates.
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: heppo\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("response has a blank line");
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, body.to_string())
+}
+
+/// Value of the first sample whose name matches and whose label set
+/// contains every `labels` fragment. Exemplar suffixes (` # {...}`)
+/// are stripped before the value parse.
+fn metric_value(body: &str, name: &str, labels: &[&str]) -> f64 {
+    for line in body.lines() {
+        if !line.starts_with(name) || !line[name.len()..].starts_with('{') {
+            continue;
+        }
+        if !labels.iter().all(|l| line.contains(l)) {
+            continue;
+        }
+        let sample = line.split(" # ").next().unwrap();
+        let value = sample.rsplit(' ').next().unwrap();
+        return value.parse().unwrap_or_else(|_| panic!("unparsable sample: {line}"));
+    }
+    panic!("no sample {name}{labels:?} in exposition page:\n{body}");
+}
+
+/// The tentpole scenario: real loopback load, two scrapes of the
+/// exposition endpoint on the binary port, windowed-vs-lifetime p99
+/// divergence after a slow burst, and trace retention visible in both
+/// the exposition exemplars and the Chrome-trace export.
+#[test]
+fn exposition_reports_windowed_tail_and_retains_slow_traces() {
+    heppo::obs::set_enabled(true);
+    let svc = linger_service(Duration::from_millis(150));
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            mode: ServerMode::Reactor,
+            cache_entries: 0,
+            ..NetServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(stream);
+    let mut g = Gen::new(7);
+
+    // Phase A: sequential singles — each flushes solo, no linger, so
+    // they are as fast as the stack can answer. Enough of them that
+    // the later slow burst (even retried) stays under 1% of lifetime.
+    const FAST: u64 = 1_500;
+    for seq in 1..=FAST {
+        writer.write_all(&request_frame(&mut g, seq, 0, 8, 1)).unwrap();
+        let frame = wire::read_frame(&mut reader).unwrap().expect("response");
+        match wire::decode_frame(&frame).unwrap() {
+            wire::Frame::Response(r) => assert_eq!(r.seq, seq),
+            other => panic!("expected response, got {other:?}"),
+        }
+    }
+
+    // Scrape #1: all-fast traffic — lifetime and windowed agree.
+    let (status, page1) = http_get(addr, "/metrics");
+    assert!(status.contains("200"), "scrape #1 status: {status}");
+    assert!(page1.contains(&format!("shard=\"{addr}\"")), "shard label is the bound address");
+    assert!(metric_value(&page1, "heppo_requests_completed_total", &[]) >= FAST as f64);
+    let life_p99_fast = metric_value(
+        &page1,
+        "heppo_latency_us",
+        &["phase=\"total\"", "quantile=\"0.99\""],
+    );
+    assert!(
+        life_p99_fast < 40_000.0,
+        "sequential singles should be far under the linger: p99 {life_p99_fast}µs"
+    );
+    assert_eq!(metric_value(&page1, "heppo_slo_health", &[]), 0.0, "healthy so far");
+
+    // Phase B: the slow burst. A large untraced head request occupies
+    // the single worker; three small traced requests pipelined behind
+    // it in the same write land in the queue together, form a group,
+    // and linger the full 150ms — deterministically slow, and far over
+    // the retention threshold the fast phase trained. The burst is
+    // aligned to the server's metrics second (via the uptime gauge) so
+    // burst and scrape share one 1s window; a boundary race retries.
+    let traces = [0x51d0_0001u64, 0x51d0_0002, 0x51d0_0003];
+    let mut page2 = String::new();
+    for attempt in 0..3 {
+        let (_, probe) = http_get(addr, "/metrics");
+        let up = metric_value(&probe, "heppo_uptime_seconds", &[]);
+        let frac = up - up.floor();
+        if frac > 0.25 {
+            std::thread::sleep(Duration::from_secs_f64(1.02 - frac));
+        }
+        let base = 100_000 + attempt as u64 * 10;
+        let mut burst = request_frame(&mut g, base, 0, 20_000, 4);
+        for (i, trace) in traces.iter().enumerate() {
+            burst.extend(request_frame(&mut g, base + 1 + i as u64, *trace, 8, 1));
+        }
+        writer.write_all(&burst).unwrap();
+        for _ in 0..4 {
+            let frame = wire::read_frame(&mut reader).unwrap().expect("burst response");
+            assert!(matches!(
+                wire::decode_frame(&frame).unwrap(),
+                wire::Frame::Response(_)
+            ));
+        }
+        let (_, page) = http_get(addr, "/metrics");
+        if metric_value(&page, "heppo_window_completed", &["window=\"1s\""]) >= 3.0 {
+            page2 = page;
+            break;
+        }
+    }
+    assert!(!page2.is_empty(), "burst never landed inside one exposition second");
+
+    // Scrape #2: the 1s window is dominated by the burst, so its p99
+    // carries the linger; the lifetime p99 is still diluted by 1500
+    // fast singles and lags far behind.
+    let win_p99 = metric_value(
+        &page2,
+        "heppo_window_latency_us",
+        &["window=\"1s\"", "quantile=\"0.99\""],
+    );
+    let life_p99 = metric_value(
+        &page2,
+        "heppo_latency_us",
+        &["phase=\"total\"", "quantile=\"0.99\""],
+    );
+    assert!(
+        win_p99 >= 80_000.0,
+        "1s-window p99 must reflect the 150ms linger, got {win_p99}µs"
+    );
+    assert!(
+        life_p99 < 40_000.0,
+        "lifetime p99 must still be diluted by the fast phase, got {life_p99}µs"
+    );
+    assert!(
+        win_p99 > 2.0 * life_p99,
+        "windowed p99 ({win_p99}µs) should dwarf lifetime p99 ({life_p99}µs)"
+    );
+
+    // Retention: the slow traced requests were promoted server-side;
+    // their ids ride the windowed p99 rows as OpenMetrics exemplars…
+    assert!(metric_value(&page2, "heppo_exemplars_retained_total", &[]) >= 1.0);
+    let exemplar_hexes: Vec<String> = traces.iter().map(|t| trace_hex(*t)).collect();
+    let on_page: Vec<&String> = exemplar_hexes
+        .iter()
+        .filter(|h| page2.contains(&format!("trace_id=\"{h}\"")))
+        .collect();
+    assert!(
+        !on_page.is_empty(),
+        "no burst trace id exposed as an exemplar:\n{page2}"
+    );
+
+    // …and the same hex ids stitch into the Chrome-trace export.
+    let (status, chrome) = http_get(addr, "/traces");
+    assert!(status.contains("200"), "traces status: {status}");
+    assert!(chrome.contains("traceEvents"));
+    for hex in &on_page {
+        assert!(
+            chrome.contains(hex.as_str()),
+            "exemplar {hex} missing from the Chrome-trace export"
+        );
+    }
+
+    // Keep the scraped pages as CI artifacts: a loaded exposition page
+    // (windowed rows + exemplars) and the retained Chrome trace.
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/exposition_sample.txt", &page2).unwrap();
+    std::fs::write("results/trace_retained.json", &chrome).unwrap();
+
+    server.shutdown();
+    svc.begin_shutdown();
+}
+
+/// Both front-ends answer plaintext on the binary port: the threads
+/// mode serves the same pages, wrong paths 404, wrong methods 405, and
+/// the binary protocol keeps working beside the scrapes.
+#[test]
+fn threads_mode_serves_the_same_exposition_beside_binary_frames() {
+    let svc = linger_service(Duration::from_micros(100));
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig {
+            mode: ServerMode::Threads,
+            cache_entries: 0,
+            ..NetServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // Binary request on one connection…
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(stream);
+    let mut g = Gen::new(11);
+    writer.write_all(&request_frame(&mut g, 1, 0, 16, 2)).unwrap();
+    let frame = wire::read_frame(&mut reader).unwrap().expect("response");
+    assert!(matches!(wire::decode_frame(&frame).unwrap(), wire::Frame::Response(_)));
+
+    // …and scrapes on others, against the same port.
+    let (status, body) = http_get(addr, "/metrics");
+    assert!(status.contains("200"), "{status}");
+    assert!(body.contains(&format!("shard=\"{addr}\"")));
+    assert!(metric_value(&body, "heppo_requests_completed_total", &[]) >= 1.0);
+    let (status, body) = http_get(addr, "/traces");
+    assert!(status.contains("200"), "{status}");
+    assert!(body.contains("traceEvents"));
+    let (status, _) = http_get(addr, "/nope");
+    assert!(status.contains("404"), "{status}");
+
+    // Only `GET ` sniffs as plaintext; other methods would parse as a
+    // (hopeless) binary frame, so the 405 arm is covered by the proto
+    // unit tests rather than over a socket.
+
+    // The binary connection survived the scrapes.
+    writer.write_all(&request_frame(&mut g, 2, 0, 16, 2)).unwrap();
+    let frame = wire::read_frame(&mut reader).unwrap().expect("response");
+    assert!(matches!(wire::decode_frame(&frame).unwrap(), wire::Frame::Response(_)));
+
+    server.shutdown();
+    svc.begin_shutdown();
+}
+
+/// Forced shard failure → fleet `Critical` within one window → diluted
+/// recovery → `Ok`. The failure is a real overload: a single-worker
+/// shard with a 2-deep queue sheds live submissions, which burns the
+/// 99.9% availability budget orders of magnitude past the fast-burn
+/// bar in both fast windows.
+#[test]
+fn fleet_slo_health_flips_critical_on_forced_failure_then_recovers() {
+    let svc = Arc::new(
+        GaeService::start(ServiceConfig {
+            workers: 1,
+            backend: GaeBackend::Scalar,
+            queue_capacity: 2,
+            batcher: BatcherConfig {
+                max_batch_lanes: 4,
+                tile_lanes: 4,
+                max_wait: Duration::from_micros(100),
+            },
+            sim_rows: 16,
+            scalar_route_max_elements: 0,
+            gae: GaeParams::default(),
+            ..ServiceConfig::default()
+        })
+        .unwrap(),
+    );
+    let fabric = GaeFabric::new(
+        vec![("solo".to_string(), ShardBackend::in_process(Arc::clone(&svc)))],
+        FabricConfig { cooldown: Duration::from_millis(50), max_attempts: 2 },
+    )
+    .unwrap();
+    let mut g = Gen::new(23);
+    let mut key = 0u64;
+
+    fn planes(g: &mut Gen, t_len: usize, batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            g.vec_normal_f32(t_len * batch, 0.0, 1.0),
+            g.vec_normal_f32((t_len + 1) * batch, 0.0, 1.0),
+            vec![0.0f32; t_len * batch],
+        )
+    }
+
+    // Warm-up traffic on a healthy shard: Ok.
+    for _ in 0..20 {
+        key += 1;
+        let (rewards, values, done_mask) = planes(&mut g, 8, 1);
+        fabric.call("slo", key, 8, 1, rewards, values, done_mask).unwrap();
+    }
+    assert_eq!(fabric.fleet().health, SloHealth::Ok, "{}", fabric.fleet());
+
+    // Force the failure: ten large requests submitted back-to-back.
+    // The first occupies the only worker for milliseconds, two fit the
+    // queue, and the rest shed instantly — live requests failing, not
+    // injected counters. Shed-vs-completed in the 1s and 10s windows
+    // then burns the availability budget at ~100x, and the fleet goes
+    // Critical. (A second boundary can split the burst off the
+    // snapshot's current window; the outer loop re-forces it.)
+    let mut went_critical = false;
+    for _ in 0..3 {
+        // Payloads generated up front so the submit loop itself is
+        // microseconds — far inside the first request's compute time.
+        let t_len = 30_000;
+        let payloads: Vec<_> = (0..10).map(|_| planes(&mut g, t_len, 2)).collect();
+        let mut pending = Vec::new();
+        for (rewards, values, done_mask) in payloads {
+            key += 1;
+            // Shed submissions fail here or on wait; both are the point.
+            if let Ok(p) = fabric.submit("slo", key, t_len, 2, rewards, values, done_mask)
+            {
+                pending.push(p);
+            }
+        }
+        let fleet = fabric.fleet();
+        if fleet.health == SloHealth::Critical {
+            went_critical = true;
+        }
+        assert!(
+            fleet.to_string().contains("slo"),
+            "fleet display carries the verdict: {fleet}"
+        );
+        for p in pending {
+            let _ = p.wait();
+        }
+        if went_critical {
+            break;
+        }
+    }
+    assert!(went_critical, "overload never flipped the fleet Critical");
+
+    // Recovery: the shard is fine — only its recent window is burned.
+    // Healthy traffic dilutes shed-vs-total in every window below the
+    // burn bars (the 1s window clears by itself), and the fleet walks
+    // back to Ok without any restart.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let recovered = loop {
+        for _ in 0..500 {
+            key += 1;
+            let (rewards, values, done_mask) = planes(&mut g, 4, 1);
+            let _ = fabric.call("slo", key, 4, 1, rewards, values, done_mask);
+        }
+        let fleet = fabric.fleet();
+        if fleet.health == SloHealth::Ok {
+            break true;
+        }
+        if Instant::now() > deadline {
+            eprintln!("still {} at deadline:\n{fleet}", fleet.health);
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    };
+    assert!(recovered, "fleet never recovered to Ok");
+    svc.begin_shutdown();
+}
