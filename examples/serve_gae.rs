@@ -22,6 +22,14 @@
 //!   through [`heppo::fabric::GaeFabric`]: rendezvous-routed requests,
 //!   automatic failover, and a fleet-view report.
 //!
+//! Untrusted-tenant hardening (`--auth-key HEX`, both sides): a
+//! `--listen` server given a key requires every request frame to carry
+//! the tenant's HMAC-SHA256 token and closes connections after
+//! `--auth-strikes N` (default 3) failed frames; a `--connect` client
+//! given the same key derives its tenant's token
+//! ([`heppo::net::AuthKey::token_for`]) and signs every frame. See the
+//! trust-boundary section in [`heppo::net`].
+//!
 //! Observability flags (any mode): `--trace-out PATH` enables the
 //! request-scoped span recorder ([`heppo::obs`]) and writes a
 //! Chrome-trace/Perfetto JSON on exit (open in `chrome://tracing` or
@@ -57,7 +65,7 @@ use heppo::fabric::{
     ClientPool, FabricConfig, GaeFabric, PoolConfig, ShardBackend,
 };
 use heppo::gae::{GaeParams, Trajectory};
-use heppo::net::{ErrorKind, PlaneCodec, QuotaConfig, ServerMode};
+use heppo::net::{AuthKey, AuthToken, ErrorKind, PlaneCodec, QuotaConfig, ServerMode};
 use heppo::net::{NetClient, NetClientConfig, NetServer, NetServerConfig};
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
@@ -127,7 +135,14 @@ fn run_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
     let config = service_config(args)?;
     let quota_rate = args.get_or("quota-elem-per-s", 0.0f64);
     let mode: ServerMode = args.str_or("server-mode", "threads").parse()?;
+    let auth_key = args
+        .opt("auth-key")
+        .map(AuthKey::from_hex)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--auth-key: {e}"))?;
     let net_config = NetServerConfig {
+        auth_key,
+        auth_strike_limit: args.get_or("auth-strikes", 3u32),
         quota: (quota_rate > 0.0).then(|| {
             // Default burst comes from QuotaConfig::per_sec (one second
             // of elements); --quota-burst overrides it.
@@ -171,6 +186,12 @@ fn run_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
         },
         if net_config.shed_on_overload { "shedding on overload" } else { "backpressured" },
     );
+    if net_config.auth_key.is_some() {
+        println!(
+            "auth: HMAC tenant tokens required ({} strikes close a connection)",
+            net_config.auth_strike_limit
+        );
+    }
     if config.scalar_route_max_elements > 0 {
         println!(
             "routing: groups <= {} elements run the scalar loop",
@@ -217,6 +238,9 @@ struct ConnectParams {
     /// Seconds between periodic remote-metrics dumps over the wire
     /// metrics RPC (`0` = off).
     metrics_interval: u64,
+    /// Tenant token derived from `--auth-key` (`None` = unsigned
+    /// frames, the pre-auth wire behavior).
+    auth: Option<AuthToken>,
 }
 
 /// Spawn a periodic report printer inside `scope` when enabled: every
@@ -342,19 +366,30 @@ fn connect_params(args: &Args) -> anyhow::Result<ConnectParams> {
         .ok_or_else(|| anyhow::anyhow!("unknown codec (use exp1..exp5/baseline/heppo)"))?;
     let resp_kind = CodecKind::parse(&args.str_or("resp-codec", "exp1"))
         .ok_or_else(|| anyhow::anyhow!("unknown resp codec (use exp1..exp5)"))?;
+    let tenant = args.str_or("tenant", "default");
+    // The load generator plays the operator: it holds the deployment
+    // key and mints its own tenant token. A real tenant would be handed
+    // the token out of band and never see the key.
+    let auth = args
+        .opt("auth-key")
+        .map(AuthKey::from_hex)
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--auth-key: {e}"))?
+        .map(|key| key.token_for(&tenant));
     Ok(ConnectParams {
         n_requests: args.get_or("requests", 500usize),
         inflight: args.get_or("inflight", 8usize).max(1),
         t_len: args.get_or("timesteps", 128usize).max(1),
         batch: args.get_or("trajectories", 16usize).max(1),
         seed: args.get_or("seed", 9u64),
-        tenant: args.str_or("tenant", "default"),
+        tenant,
         codec,
         bits: args.get_or("bits", 8u8),
         resp: PlaneCodec { kind: resp_kind, bits: args.get_or("resp-bits", 8u8) },
         clients: args.get_or("clients", 1usize).max(1),
         pool_sockets: args.get_or("pool-sockets", 2usize).max(1),
         metrics_interval: args.get_or("metrics-interval", 0u64),
+        auth,
     })
 }
 
@@ -453,6 +488,7 @@ fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
             sockets: p.pool_sockets,
             codec: PlaneCodec { kind: p.codec, bits: p.bits },
             resp: p.resp,
+            auth: p.auth,
         },
     )?;
     println!(
@@ -555,6 +591,7 @@ fn run_connect_fabric(p: &ConnectParams, addrs: &[String]) -> anyhow::Result<()>
         sockets: p.pool_sockets,
         codec: PlaneCodec { kind: p.codec, bits: p.bits },
         resp: p.resp,
+        auth: p.auth,
     };
     let mut shards = Vec::with_capacity(addrs.len());
     for (i, addr) in addrs.iter().enumerate() {
@@ -648,6 +685,7 @@ fn run_connect_single(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
         codec: p.codec,
         bits: p.bits,
         resp: p.resp,
+        auth: p.auth,
     };
     let client = NetClient::connect(addr, client_config)?;
     println!(

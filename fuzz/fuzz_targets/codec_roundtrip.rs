@@ -1,0 +1,10 @@
+//! libFuzzer wrapper: the input is a decision tape picking codec,
+//! geometry, auth tag, and plane data for an encode→decode roundtrip.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    heppo::net::fuzzing::run_codec_roundtrip(data);
+});

@@ -1,0 +1,11 @@
+//! libFuzzer wrapper: the input is an I/O schedule driving the frame
+//! assembler through arbitrary read chunking and (on Linux) the
+//! reactor's writev state machine through torn writes.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    heppo::net::fuzzing::run_conn_state(data);
+});

@@ -1,0 +1,11 @@
+//! libFuzzer wrapper: the input is a wire frame (bytes after the
+//! length prefix). All invariants live in the harness itself so this
+//! file stays a thin shim shared with the offline smoke campaign.
+
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    heppo::net::fuzzing::run_frame_decode(data);
+});

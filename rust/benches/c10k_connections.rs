@@ -81,6 +81,7 @@ fn hot_round(addr: &str, seed: u64, requests: usize) -> Vec<f64> {
             codec: CodecKind::Exp5DynamicBlock,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .expect("hot client connect");

@@ -410,7 +410,7 @@ fn main() -> anyhow::Result<()> {
         let addr = server.local_addr().to_string();
         let pool = ClientPool::connect(
             &addr,
-            PoolConfig { sockets, codec: PlaneCodec::Q8, resp: PlaneCodec::F32 },
+            PoolConfig { sockets, codec: PlaneCodec::Q8, resp: PlaneCodec::F32, auth: None },
         )?;
         let clients = 8;
         let t0 = Instant::now();

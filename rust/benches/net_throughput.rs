@@ -107,6 +107,7 @@ fn run_net(addr: &str, codec: CodecKind, depth: usize, w: &Workload) -> RunResul
             codec,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .expect("connect");
@@ -184,6 +185,7 @@ fn check_f32_bit_identity(addr: &str, svc: &GaeService, w: &Workload) {
             codec: CodecKind::Exp1Baseline,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .expect("connect");

@@ -129,6 +129,7 @@ pub fn merge_tenants<'a>(
                 m.elements += t.elements;
                 m.shed += t.shed;
                 m.quota_shed += t.quota_shed;
+                m.auth_rejected += t.auth_rejected;
             }
             None => {
                 merged.insert(t.tenant.clone(), t.clone());
@@ -202,7 +203,14 @@ mod tests {
     use super::*;
 
     fn tenant(name: &str, requests: u64, elements: u64) -> TenantSnapshot {
-        TenantSnapshot { tenant: name.to_string(), requests, elements, shed: 0, quota_shed: 0 }
+        TenantSnapshot {
+            tenant: name.to_string(),
+            requests,
+            elements,
+            shed: 0,
+            quota_shed: 0,
+            auth_rejected: 0,
+        }
     }
 
     fn status(label: &str, completed: u64, tenants: Vec<TenantSnapshot>) -> ShardStatus {

@@ -31,6 +31,7 @@
 //! per remote shard; `serve_gae --connect --clients M --pool-sockets S`
 //! drives M closed-loop submitters over S sockets.
 
+use crate::net::auth::AuthToken;
 use crate::net::client::{NetError, NetGae, WireStats};
 use crate::net::wire::{self, Frame, PlaneCodec};
 use crate::service::metrics::MetricsSnapshot;
@@ -76,12 +77,22 @@ pub struct PoolConfig {
     pub codec: PlaneCodec,
     /// Reply-plane transport codec ([`PlaneCodec::F32`] = bit-exact).
     pub resp: PlaneCodec,
+    /// Tenant token carried in every request frame's header when set.
+    /// The pool signs for one tenant identity — the token is
+    /// HMAC(deployment key, tenant id), so it only verifies for the
+    /// tenant string the submitters actually send.
+    pub auth: Option<AuthToken>,
 }
 
 impl Default for PoolConfig {
     /// Two sockets, the paper's 8-bit request transport, exact replies.
     fn default() -> Self {
-        PoolConfig { sockets: 2, codec: PlaneCodec::Q8, resp: PlaneCodec::F32 }
+        PoolConfig {
+            sockets: 2,
+            codec: PlaneCodec::Q8,
+            resp: PlaneCodec::F32,
+            auth: None,
+        }
     }
 }
 
@@ -506,12 +517,13 @@ impl PoolClient {
         let _submit_span = crate::obs::span("client.submit", trace);
         let slot = self.next_frame.fetch_add(1, Ordering::Relaxed) as u32;
         let seq = seq_for(self.id, slot);
-        let encoded = wire::encode_request(
+        let encoded = wire::encode_request_signed(
             seq,
             &self.tenant,
             self.shared.config.codec,
             self.shared.config.resp,
             trace,
+            self.shared.config.auth.as_ref().map(|t| t.as_bytes()),
             t_len,
             batch,
             rewards,
@@ -596,7 +608,21 @@ impl PoolPending {
 
     /// Block until the endpoint answers this frame (out-of-order safe).
     pub fn wait(self) -> Result<NetGae, NetError> {
-        match self.rx.recv() {
+        Self::reply_to_gae(self.rx.recv().map_err(|_| NetError::Disconnected))
+    }
+
+    /// Like [`wait`](PoolPending::wait), but give up after `deadline`
+    /// with [`NetError::Timeout`]. The frame stays in flight; a reply
+    /// landing after the handle is dropped is discarded by the reader.
+    pub fn wait_timeout(self, deadline: Duration) -> Result<NetGae, NetError> {
+        Self::reply_to_gae(self.rx.recv_timeout(deadline).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => NetError::Timeout,
+            mpsc::RecvTimeoutError::Disconnected => NetError::Disconnected,
+        }))
+    }
+
+    fn reply_to_gae(reply: Result<Reply, NetError>) -> Result<NetGae, NetError> {
+        match reply {
             Ok(Ok(resp)) => Ok(NetGae {
                 advantages: resp.advantages,
                 rewards_to_go: resp.rewards_to_go,
@@ -605,7 +631,7 @@ impl PoolPending {
                 quantized: resp.quantized,
             }),
             Ok(Err(e)) => Err(e),
-            Err(_) => Err(NetError::Disconnected),
+            Err(e) => Err(e),
         }
     }
 }

@@ -55,11 +55,23 @@ pub struct FabricConfig {
     /// Submit attempts per request across the whole fleet before
     /// [`FabricError::Exhausted`]; `0` = twice the shard count.
     pub max_attempts: usize,
+    /// Per-attempt deadline for remote shards: a shard that holds a
+    /// request longer than this is treated exactly like a dropped
+    /// connection — marked unhealthy and failed over — rather than
+    /// stalling the caller behind one wedged peer. `None` (the default)
+    /// waits indefinitely, preserving the pre-deadline behavior.
+    /// In-process shards are not subject to the deadline: their worker
+    /// pool cannot silently lose a request the way a network peer can.
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for FabricConfig {
     fn default() -> Self {
-        FabricConfig { cooldown: Duration::from_millis(500), max_attempts: 0 }
+        FabricConfig {
+            cooldown: Duration::from_millis(500),
+            max_attempts: 0,
+            request_timeout: None,
+        }
     }
 }
 
@@ -689,28 +701,46 @@ impl FabricPending {
                     }
                     Err(e) => Outcome::Fatal(e.to_string()),
                 },
-                Attempt::Remote(pending) => match pending.wait() {
-                    Ok(gae) => Outcome::Done {
-                        advantages: gae.advantages,
-                        rewards_to_go: gae.rewards_to_go,
-                        hw_cycles: gae.hw_cycles,
-                        cache_hit: gae.cache_hit,
-                    },
-                    Err(e) => match &e {
-                        // Request-level refusals follow the request.
-                        NetError::InvalidRequest(_) => Outcome::Fatal(e.to_string()),
-                        NetError::Remote { kind, .. } => match kind {
-                            crate::net::ErrorKind::Quota
-                            | crate::net::ErrorKind::Malformed => {
+                Attempt::Remote(pending) => {
+                    let waited = match inner.config.request_timeout {
+                        Some(deadline) => pending.wait_timeout(deadline),
+                        None => pending.wait(),
+                    };
+                    match waited {
+                        Ok(gae) => Outcome::Done {
+                            advantages: gae.advantages,
+                            rewards_to_go: gae.rewards_to_go,
+                            hw_cycles: gae.hw_cycles,
+                            cache_hit: gae.cache_hit,
+                        },
+                        Err(e) => match &e {
+                            // Request-level refusals follow the request.
+                            NetError::InvalidRequest(_) => {
                                 Outcome::Fatal(e.to_string())
                             }
-                            // Shed/shutdown/internal: shard-local.
+                            NetError::Remote { kind, .. } => match kind {
+                                // An auth refusal is a deployment-wide
+                                // misconfiguration (wrong or missing
+                                // token): every shard shares the key, so
+                                // retrying elsewhere only spends this
+                                // connection's strike budget on the
+                                // whole fleet.
+                                crate::net::ErrorKind::Quota
+                                | crate::net::ErrorKind::Malformed
+                                | crate::net::ErrorKind::Auth => {
+                                    Outcome::Fatal(e.to_string())
+                                }
+                                // Shed/shutdown/internal: shard-local.
+                                _ => Outcome::Retry(e.to_string()),
+                            },
+                            // Dead socket, undecodable frame, or an
+                            // elapsed deadline ([`NetError::Timeout`]):
+                            // shard-local — the request fails over as if
+                            // the connection had dropped.
                             _ => Outcome::Retry(e.to_string()),
                         },
-                        // Dead socket, undecodable frame: shard-local.
-                        _ => Outcome::Retry(e.to_string()),
-                    },
-                },
+                    }
+                }
             };
             match outcome {
                 Outcome::Done { advantages, rewards_to_go, hw_cycles, cache_hit } => {

@@ -1,0 +1,460 @@
+//! Tenant authentication for the wire protocol: HMAC-SHA256 tenant
+//! tokens, keyed per deployment.
+//!
+//! Tenant ids on the wire were self-declared through PR-8, which made
+//! every per-tenant mechanism — quota buckets, cache scoping, the
+//! metrics breakdown — advisory: any client could claim any tenant.
+//! This module supplies the minimum credential that closes that hole
+//! without touching the hashed payload section (so response-cache keys
+//! are unchanged):
+//!
+//! - The deployment operator holds an [`AuthKey`] (arbitrary-length
+//!   secret, hex on the CLI).
+//! - Each tenant is issued an [`AuthToken`] = `HMAC-SHA256(key,
+//!   tenant_id)` — [`AuthKey::token_for`]. Tenants never see the key,
+//!   so a tenant cannot mint tokens for other tenants.
+//! - The client sends the token in the request frame header (the
+//!   `REQ_FLAG_AUTH` section, outside the payload hash, exactly like
+//!   the PR-6 trace id); the server recomputes the MAC and compares in
+//!   constant time ([`AuthKey::verify`]) before quota, cache, and
+//!   admission run.
+//!
+//! What this does and does not give you: a peer cannot *spoof* a
+//! tenant id it was never issued a token for, which makes quotas and
+//! cache scoping enforceable. It does **not** hide the token from a
+//! network observer — replaying a captured token under the same tenant
+//! id works by design (the token authenticates the *tenant*, not the
+//! frame). Confidentiality and replay resistance belong to the
+//! transport-encryption layer, whose seam is the [`TransportSeal`]
+//! trait below; until a real seal is plugged in, deploy inside a
+//! trusted network or over an external TLS terminator.
+//!
+//! The primitives (SHA-256, HMAC) are implemented here in-tree: the
+//! offline crate set has no registry access, so the digest substrate is
+//! vendored like every other substrate, pinned to the FIPS 180-4 /
+//! RFC 4231 test vectors in the tests below.
+
+/// SHA-256 round constants (FIPS 180-4 §4.2.2).
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1,
+    0x923f82a4, 0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+    0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786,
+    0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147,
+    0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+    0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+    0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a,
+    0x5b9cca4f, 0x682e6ff3, 0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+    0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// SHA-256 initial hash state (FIPS 180-4 §5.3.3).
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+    0x1f83d9ab, 0x5be0cd19,
+];
+
+/// Streaming SHA-256 (FIPS 180-4). Messages up to 2^64 - 1 bits.
+pub struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+impl Default for Sha256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha256 {
+    pub fn new() -> Sha256 {
+        Sha256 { state: H0, buf: [0u8; 64], buf_len: 0, total_len: 0 }
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let need = 64 - self.buf_len;
+            let take = need.min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                compress(&mut self.state, &block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            compress(&mut self.state, &block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.total_len.wrapping_mul(8);
+        // Padding: 0x80, zeros to 56 mod 64, then the bit length.
+        self.update(&[0x80]);
+        self.total_len = self.total_len.wrapping_sub(1); // padding is not message
+        while self.buf_len != 56 {
+            let before = self.buf_len;
+            self.update(&[0x00]);
+            self.total_len = self.total_len.wrapping_sub(1);
+            debug_assert_ne!(before, self.buf_len, "padding must advance");
+        }
+        let mut block = self.buf;
+        block[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        compress(&mut self.state, &block);
+        let mut out = [0u8; 32];
+        for (i, word) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
+/// One SHA-256 compression round over a 64-byte block.
+fn compress(state: &mut [u32; 8], block: &[u8; 64]) {
+    let mut w = [0u32; 64];
+    for (i, chunk) in block.chunks_exact(4).enumerate() {
+        w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[i - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = *state;
+    for i in 0..64 {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = h
+            .wrapping_add(s1)
+            .wrapping_add(ch)
+            .wrapping_add(K[i])
+            .wrapping_add(w[i]);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        h = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    state[0] = state[0].wrapping_add(a);
+    state[1] = state[1].wrapping_add(b);
+    state[2] = state[2].wrapping_add(c);
+    state[3] = state[3].wrapping_add(d);
+    state[4] = state[4].wrapping_add(e);
+    state[5] = state[5].wrapping_add(f);
+    state[6] = state[6].wrapping_add(g);
+    state[7] = state[7].wrapping_add(h);
+}
+
+/// One-shot SHA-256.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// HMAC-SHA256 (RFC 2104 / RFC 4231) over `msg` with an
+/// arbitrary-length `key`.
+pub fn hmac_sha256(key: &[u8], msg: &[u8]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0u8; 64];
+    let mut opad = [0u8; 64];
+    for i in 0..64 {
+        ipad[i] = k[i] ^ 0x36;
+        opad[i] = k[i] ^ 0x5c;
+    }
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    inner.update(msg);
+    let inner_digest = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&inner_digest);
+    outer.finalize()
+}
+
+/// Compare two 32-byte MACs without an early exit, so the comparison's
+/// timing does not leak how many leading bytes matched. Best-effort
+/// constant time: the accumulator fold has no data-dependent branch.
+pub fn ct_eq_32(a: &[u8; 32], b: &[u8; 32]) -> bool {
+    let mut acc = 0u8;
+    for i in 0..32 {
+        acc |= a[i] ^ b[i];
+    }
+    acc == 0
+}
+
+/// Parse an even-length hex string into bytes (the CLI key format).
+fn parse_hex(s: &str) -> Result<Vec<u8>, String> {
+    if s.is_empty() || s.len() % 2 != 0 {
+        return Err(format!("hex string must be non-empty and even-length, got {} chars", s.len()));
+    }
+    let nib = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("invalid hex character {:?}", c as char)),
+        }
+    };
+    s.as_bytes()
+        .chunks_exact(2)
+        .map(|p| Ok(nib(p[0])? << 4 | nib(p[1])?))
+        .collect()
+}
+
+/// The per-deployment signing secret. Only the serving side (and the
+/// operator minting tenant tokens) holds it; clients carry the derived
+/// [`AuthToken`] instead.
+#[derive(Clone, PartialEq, Eq)]
+pub struct AuthKey {
+    key: Vec<u8>,
+}
+
+impl AuthKey {
+    /// Wrap raw key bytes. Empty keys are refused — an empty HMAC key
+    /// is a misconfiguration, not a security level.
+    pub fn new(key: Vec<u8>) -> Result<AuthKey, String> {
+        if key.is_empty() {
+            return Err("auth key must not be empty".to_string());
+        }
+        Ok(AuthKey { key })
+    }
+
+    /// Parse the CLI form: an even-length hex string (`--auth-key`).
+    pub fn from_hex(s: &str) -> Result<AuthKey, String> {
+        AuthKey::new(parse_hex(s)?)
+    }
+
+    /// Mint the token this deployment issues to `tenant`:
+    /// `HMAC-SHA256(key, tenant_id_bytes)`.
+    pub fn token_for(&self, tenant: &str) -> AuthToken {
+        AuthToken(hmac_sha256(&self.key, tenant.as_bytes()))
+    }
+
+    /// Does `tag` authenticate `tenant` under this key? Constant-time
+    /// comparison against the recomputed MAC.
+    pub fn verify(&self, tenant: &str, tag: &[u8; 32]) -> bool {
+        ct_eq_32(&self.token_for(tenant).0, tag)
+    }
+}
+
+impl std::fmt::Debug for AuthKey {
+    /// Redacted: the secret must never reach logs or panic messages.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AuthKey([redacted; {} bytes])", self.key.len())
+    }
+}
+
+/// The credential a tenant presents: the 32-byte MAC of its tenant id
+/// under the deployment key, carried in the request frame header.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct AuthToken(pub [u8; 32]);
+
+impl AuthToken {
+    pub fn from_hex(s: &str) -> Result<AuthToken, String> {
+        let bytes = parse_hex(s)?;
+        if bytes.len() != 32 {
+            return Err(format!("auth token must be 32 bytes (64 hex chars), got {}", bytes.len()));
+        }
+        let mut tag = [0u8; 32];
+        tag.copy_from_slice(&bytes);
+        Ok(AuthToken(tag))
+    }
+
+    pub fn as_bytes(&self) -> &[u8; 32] {
+        &self.0
+    }
+}
+
+impl std::fmt::Debug for AuthToken {
+    /// Redacted: a token is a bearer credential.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("AuthToken([redacted])")
+    }
+}
+
+/// The transport-encryption seam, left pluggable on purpose.
+///
+/// Tenant tokens authenticate *who* is talking; they do not hide the
+/// bytes. A future TLS (or Noise-style) layer slots in here: a seal
+/// transforms each fully-encoded frame (length prefix included) on its
+/// way to the socket, and inverts the transform on receipt, so neither
+/// front-end's framing logic changes. The identity [`PlaintextSeal`]
+/// is the only in-tree implementation — the offline crate set has no
+/// TLS stack — and deployments needing confidentiality today should
+/// terminate TLS in front of the listener. Keeping the trait object
+/// seam (rather than a config enum) means an out-of-tree seal can be
+/// plugged without another wire version bump: sealed bytes are opaque
+/// to the frame layer by construction.
+pub trait TransportSeal: Send + Sync {
+    /// Human-readable name for logs and the trust-boundary docs.
+    fn name(&self) -> &'static str;
+    /// Transform outbound wire bytes in place.
+    fn seal(&self, frame: &mut Vec<u8>);
+    /// Invert [`TransportSeal::seal`] on inbound wire bytes in place;
+    /// `false` means the bytes fail authentication/decryption and the
+    /// connection must close.
+    fn open(&self, frame: &mut Vec<u8>) -> bool;
+}
+
+/// The identity seal: bytes pass through untouched (today's behavior).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PlaintextSeal;
+
+impl TransportSeal for PlaintextSeal {
+    fn name(&self) -> &'static str {
+        "plaintext"
+    }
+
+    fn seal(&self, _frame: &mut Vec<u8>) {}
+
+    fn open(&self, _frame: &mut Vec<u8>) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn sha256_matches_fips_vectors() {
+        assert_eq!(
+            hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(&sha256(
+                b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"
+            )),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // One million 'a's: the multi-block streaming path.
+        let mut h = Sha256::new();
+        for _ in 0..10_000 {
+            h.update(&[b'a'; 100]);
+        }
+        assert_eq!(
+            hex(&h.finalize()),
+            "cdc76e5c9914fb9281a1c7e284d73e67f1809a48a497200e046d39ccc7112cd0"
+        );
+    }
+
+    #[test]
+    fn sha256_is_chunking_invariant() {
+        let data: Vec<u8> = (0..997u32).map(|i| (i * 31 % 251) as u8).collect();
+        let whole = sha256(&data);
+        for chunk in [1usize, 3, 63, 64, 65, 200] {
+            let mut h = Sha256::new();
+            for piece in data.chunks(chunk) {
+                h.update(piece);
+            }
+            assert_eq!(h.finalize(), whole, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn hmac_matches_rfc4231_vectors() {
+        // RFC 4231 test case 1.
+        assert_eq!(
+            hex(&hmac_sha256(&[0x0b; 20], b"Hi There")),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+        // Test case 2: a key shorter than the block size.
+        assert_eq!(
+            hex(&hmac_sha256(b"Jefe", b"what do ya want for nothing?")),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // Test case 6: a key longer than the block size (hashed first).
+        assert_eq!(
+            hex(&hmac_sha256(
+                &[0xaa; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            )),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn tokens_verify_and_do_not_transfer_across_tenants() {
+        let key = AuthKey::from_hex("00112233445566778899aabbccddeeff").unwrap();
+        let tok_a = key.token_for("tenant-a");
+        assert!(key.verify("tenant-a", tok_a.as_bytes()));
+        // The same token under another tenant id must fail: tokens are
+        // bound to the identity they were minted for.
+        assert!(!key.verify("tenant-b", tok_a.as_bytes()));
+        // A different deployment key mints disjoint tokens.
+        let other = AuthKey::from_hex("ff00ff00ff00ff00ff00ff00ff00ff00").unwrap();
+        assert!(!other.verify("tenant-a", tok_a.as_bytes()));
+        // Any single-bit tamper invalidates.
+        let mut tampered = *tok_a.as_bytes();
+        tampered[17] ^= 0x01;
+        assert!(!key.verify("tenant-a", &tampered));
+    }
+
+    #[test]
+    fn hex_parsing_round_trips_and_rejects_garbage() {
+        let key = AuthKey::from_hex("deadBEEF").unwrap();
+        assert_eq!(key.key, vec![0xde, 0xad, 0xbe, 0xef]);
+        assert!(AuthKey::from_hex("").is_err(), "empty key refused");
+        assert!(AuthKey::from_hex("abc").is_err(), "odd length refused");
+        assert!(AuthKey::from_hex("zz").is_err(), "non-hex refused");
+        let tok = AuthToken::from_hex(&"ab".repeat(32)).unwrap();
+        assert_eq!(tok.as_bytes(), &[0xab; 32]);
+        assert!(AuthToken::from_hex("abcd").is_err(), "tokens are exactly 32 bytes");
+    }
+
+    #[test]
+    fn debug_formats_redact_secrets() {
+        let key = AuthKey::from_hex("deadbeef").unwrap();
+        assert!(!format!("{key:?}").contains("dead"));
+        let tok = key.token_for("t");
+        assert_eq!(format!("{tok:?}"), "AuthToken([redacted])");
+    }
+
+    #[test]
+    fn plaintext_seal_is_identity() {
+        let seal = PlaintextSeal;
+        let mut frame = vec![1u8, 2, 3];
+        seal.seal(&mut frame);
+        assert_eq!(frame, vec![1, 2, 3]);
+        assert!(seal.open(&mut frame));
+        assert_eq!(frame, vec![1, 2, 3]);
+        assert_eq!(seal.name(), "plaintext");
+    }
+}

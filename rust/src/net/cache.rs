@@ -13,8 +13,12 @@
 //! bounds the blast radius of that construction to the attacker's own
 //! entries — a tenant can at worst poison results replayed to itself
 //! (which it could do anyway by submitting wrong data), never another
-//! tenant's. The remaining step for untrusted deployments is
-//! authenticating the tenant id itself (see ROADMAP: TLS/auth).
+//! tenant's. For untrusted deployments the tenant id itself is
+//! authenticated before the cache is ever probed: when the server
+//! holds an [`AuthKey`](crate::net::auth::AuthKey), a frame whose
+//! HMAC tenant token fails verification is rejected upstream of this
+//! module (see the trust-boundary section in [`crate::net`]), so cache
+//! scoping rests on a *verified* identity, not a self-declared one.
 //!
 //! Eviction is lazy LRU: every touch appends a `(key, tick)` pair to an
 //! order queue; eviction pops from the front, skipping pairs whose tick

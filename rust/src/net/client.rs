@@ -14,6 +14,7 @@
 //! against what the f32 escape hatch would have moved — the measured
 //! `reduction_vs_f32` the `net_throughput` bench reports.
 
+use crate::net::auth::AuthToken;
 use crate::net::wire::{self, ErrorKind, Frame, PlaneCodec};
 use crate::quant::CodecKind;
 use crate::service::metrics::MetricsSnapshot;
@@ -23,7 +24,7 @@ use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Client-side identity and payload encoding.
 #[derive(Debug, Clone)]
@@ -39,6 +40,12 @@ pub struct NetClientConfig {
     /// [`PlaneCodec::F32`]: bit-exact responses. A quantized pair asks
     /// the server for the symmetric bandwidth lever (lossy replies).
     pub resp: PlaneCodec,
+    /// Tenant token signed by the deployment key
+    /// ([`AuthKey::token_for`](crate::net::auth::AuthKey::token_for)),
+    /// carried in every request-frame header when set. Required when
+    /// the server holds an auth key; ignored (skipped entirely, saving
+    /// the 32 header bytes) against a trusting server.
+    pub auth: Option<AuthToken>,
 }
 
 impl Default for NetClientConfig {
@@ -50,6 +57,7 @@ impl Default for NetClientConfig {
             codec: CodecKind::Exp5DynamicBlock,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         }
     }
 }
@@ -84,6 +92,12 @@ pub enum NetError {
     Io(String),
     /// The connection closed with the call still in flight.
     Disconnected,
+    /// The caller's deadline ([`NetPending::wait_timeout`]) elapsed
+    /// with the call still in flight. The connection stays open and
+    /// the server may still be working the frame — a later reply is
+    /// dropped on the floor — so failover layers treat this like a
+    /// dead connection, not like a typed refusal.
+    Timeout,
 }
 
 impl NetError {
@@ -106,6 +120,7 @@ impl std::fmt::Display for NetError {
             NetError::Decode(e) => write!(f, "undecodable server frame: {e}"),
             NetError::Io(e) => write!(f, "socket error: {e}"),
             NetError::Disconnected => f.write_str("connection closed mid-flight"),
+            NetError::Timeout => f.write_str("request deadline elapsed mid-flight"),
         }
     }
 }
@@ -151,7 +166,21 @@ impl NetPending {
 
     /// Block until the server answers this frame (out-of-order safe).
     pub fn wait(self) -> Result<NetGae, NetError> {
-        match self.rx.recv() {
+        Self::reply_to_gae(self.rx.recv().map_err(|_| NetError::Disconnected))
+    }
+
+    /// Like [`wait`](NetPending::wait), but give up after `deadline`
+    /// with [`NetError::Timeout`]. The frame stays in flight on the
+    /// wire — abandoning the handle just drops any later reply.
+    pub fn wait_timeout(self, deadline: Duration) -> Result<NetGae, NetError> {
+        Self::reply_to_gae(self.rx.recv_timeout(deadline).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => NetError::Timeout,
+            mpsc::RecvTimeoutError::Disconnected => NetError::Disconnected,
+        }))
+    }
+
+    fn reply_to_gae(reply: Result<Reply, NetError>) -> Result<NetGae, NetError> {
+        match reply {
             Ok(Ok(resp)) => Ok(NetGae {
                 advantages: resp.advantages,
                 rewards_to_go: resp.rewards_to_go,
@@ -160,7 +189,7 @@ impl NetPending {
                 quantized: resp.quantized,
             }),
             Ok(Err(e)) => Err(e),
-            Err(_) => Err(NetError::Disconnected),
+            Err(e) => Err(e),
         }
     }
 }
@@ -296,12 +325,13 @@ impl NetClient {
             0
         };
         let _submit_span = crate::obs::span("client.submit", trace);
-        let encoded = wire::encode_request(
+        let encoded = wire::encode_request_signed(
             seq,
             &self.config.tenant,
             PlaneCodec { kind: self.config.codec, bits: self.config.bits },
             self.config.resp,
             trace,
+            self.config.auth.as_ref().map(|t| t.as_bytes()),
             t_len,
             batch,
             rewards,

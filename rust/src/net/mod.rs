@@ -16,9 +16,13 @@
 //!   NetPending ◄── reader thread ◄── responses/errors, any order
 //!
 //!             NetServer (server/), shared policy pipeline:
-//!   frames ── lazy header parse ─► quota (quota.rs, token buckets)
-//!               (no dequantize)      │ over-budget → typed Quota frame
+//!   frames ── lazy header parse ─► auth (auth.rs, HMAC tenant token)
+//!               (no dequantize)      │ bad tag → typed Auth frame,
+//!                                    │ strike-limited per connection
 //!                                    ▼
+//!                       quota (quota.rs, token buckets)
+//!                         │ over-budget → typed Quota frame
+//!                         ▼
 //!                       cache (cache.rs, raw-payload-hash LRU)
 //!                         │ hit → response frame, cache_hit flag
 //!                         ▼
@@ -92,17 +96,62 @@
 //! response), so one id stitches client-side and server-side spans
 //! into a single timeline; see [`crate::obs`] for the plane itself.
 //!
+//! ## Trust boundary & hardening
+//!
+//! The listen socket is the trust boundary: everything behind it
+//! (quota, cache, admission, workers) assumes the tenant id on a frame
+//! is real. Two mechanisms defend that assumption:
+//!
+//! - **Tenant authentication** ([`auth`]). A deployment that sets
+//!   [`NetServerConfig::auth_key`] requires every request frame to
+//!   carry `HMAC-SHA256(key, tenant_id)` in its header
+//!   ([`wire::AUTH_TAG_LEN`] bytes behind the `REQ_FLAG_AUTH` header
+//!   flag — *outside* the hashed payload, so cache keys are unchanged
+//!   and signed traffic hits the same cache entries as unsigned).
+//!   Verification runs **before** quota, cache, and admission in the
+//!   shared pipeline, so both server modes inherit it and an unsigned
+//!   or tampered frame cannot charge a tenant's budget, probe the
+//!   cache, or occupy a worker. Failures earn a typed
+//!   [`ErrorKind::Auth`] error frame and count a per-connection strike;
+//!   at [`NetServerConfig::auth_strike_limit`] the connection is
+//!   closed (`MetricsSnapshot::auth_conns_closed`). Rejects are
+//!   deliberately excluded from the windowed SLO error rings —
+//!   unauthenticated traffic must not burn the availability budget —
+//!   but surface as `MetricsSnapshot::auth_rejected`, attributed to
+//!   the *claimed* tenant. Tenants hold derived tokens
+//!   ([`AuthKey::token_for`]), never the deployment key; a captured
+//!   token only ever authenticates its own tenant id.
+//!   The metrics/trace RPCs and the plaintext `GET /metrics` scrape
+//!   remain unauthenticated by design: they are read-only,
+//!   advisory-plane surfaces for operators, not tenant identities.
+//! - **A deterministic fuzzing battery** ([`fuzzing`]). Seeded,
+//!   reproducible harnesses drive the frame decoder, the quantized
+//!   codec roundtrip, and the connection state machine (partial reads,
+//!   torn vectored writes) with adversarial bytes; `tests/fuzz_smoke.rs`
+//!   runs a bounded campaign in CI and `fuzz/` wraps the same harnesses
+//!   for open-ended libFuzzer campaigns. Every crash found becomes a
+//!   named regression frame in `tests/net_loopback.rs`.
+//!
+//! What this does **not** provide: transport confidentiality or replay
+//! protection. The [`TransportSeal`] trait is the seam where a TLS-like
+//! layer plugs in ([`PlaintextSeal`] is the identity implementation);
+//! until a deployment supplies one, tokens cross the wire in clear and
+//! belong on trusted networks.
+//!
 //! Driven by `examples/serve_gae.rs` (`--listen` / `--connect`) and
 //! swept by `benches/net_throughput.rs`; the loopback integration test
 //! lives in `rust/tests/net_loopback.rs`, and the telemetry plane's
 //! end-to-end test in `rust/tests/telemetry_integration.rs`.
 
+pub mod auth;
 pub mod cache;
 pub mod client;
+pub mod fuzzing;
 pub mod quota;
 pub mod server;
 pub mod wire;
 
+pub use auth::{AuthKey, AuthToken, PlaintextSeal, TransportSeal};
 pub use cache::{CacheStats, CachedGae, ResponseCache};
 pub use client::{NetClient, NetClientConfig, NetError, NetGae, NetPending, WireStats};
 pub use quota::{QuotaConfig, TokenBuckets};

@@ -41,9 +41,11 @@ struct Bucket {
 }
 
 /// Most tenants tracked at once. Tenant ids arrive on the wire
-/// (client-chosen), so the map must not grow without bound on a
-/// long-lived server; past the cap the longest-untouched bucket is
-/// evicted. An evicted tenant that returns starts with a full burst —
+/// (client-chosen — though with [`NetServerConfig::auth_key`]
+/// (crate::net::server::NetServerConfig::auth_key) set, only ids whose
+/// HMAC token verifies ever reach this map), so the map must not grow
+/// without bound on a long-lived server; past the cap the
+/// longest-untouched bucket is evicted. An evicted tenant that returns starts with a full burst —
 /// a bounded, documented softening of the quota, not a correctness
 /// hole, since the cap only bites with thousands of *distinct* live
 /// tenants.

@@ -84,6 +84,10 @@ pub(crate) struct Conn {
     /// for a plaintext exposition scraper (`GET `), `Some(false)` for
     /// a binary frame peer.
     pub(crate) plaintext: Option<bool>,
+    /// Request frames this connection has had rejected by tenant
+    /// authentication; at `NetServerConfig::auth_strike_limit` the
+    /// connection is closed.
+    pub(crate) auth_strikes: u32,
 }
 
 impl Conn {
@@ -101,6 +105,7 @@ impl Conn {
             close_deadline: None,
             registered_events: 0,
             plaintext: None,
+            auth_strikes: 0,
         }
     }
 
@@ -126,46 +131,74 @@ impl Conn {
     /// Write as much of the backlog as the socket will take, batching
     /// up to [`MAX_WRITEV_FRAMES`] frames per `writev`.
     pub(crate) fn flush(&mut self) -> io::Result<FlushStatus> {
-        while !self.backlog.is_empty() {
-            let written = {
-                let mut slices: Vec<IoSlice<'_>> =
-                    Vec::with_capacity(self.backlog.len().min(MAX_WRITEV_FRAMES));
-                slices.push(IoSlice::new(&self.backlog[0][self.head_written..]));
-                for frame in self.backlog.iter().skip(1).take(MAX_WRITEV_FRAMES - 1) {
-                    slices.push(IoSlice::new(frame));
+        flush_backlog(&mut self.backlog, &mut self.head_written, &mut self.stream)
+    }
+}
+
+/// The slice of the socket API the flush path needs: [`TcpStream`] in
+/// production, a deterministic fault-injection writer in the fuzz
+/// battery ([`crate::net::fuzzing`]), which tears vectored writes at
+/// seed-chosen byte boundaries to drive the partial-write resume
+/// logic below through every offset.
+pub(crate) trait VectoredWrite {
+    fn write_slices(&mut self, slices: &[IoSlice<'_>]) -> io::Result<usize>;
+}
+
+impl VectoredWrite for TcpStream {
+    fn write_slices(&mut self, slices: &[IoSlice<'_>]) -> io::Result<usize> {
+        self.write_vectored(slices)
+    }
+}
+
+/// The writev state machine behind [`Conn::flush`], as a free function
+/// over [`VectoredWrite`] so the fuzz battery can drive it with torn
+/// writes and no socket. Invariant on return (any variant):
+/// `head_written` is a valid offset into the head frame (or 0 when the
+/// backlog is empty), and no byte is ever written twice or skipped.
+pub(crate) fn flush_backlog<W: VectoredWrite>(
+    backlog: &mut VecDeque<Vec<u8>>,
+    head_written: &mut usize,
+    writer: &mut W,
+) -> io::Result<FlushStatus> {
+    while !backlog.is_empty() {
+        let written = {
+            let mut slices: Vec<IoSlice<'_>> =
+                Vec::with_capacity(backlog.len().min(MAX_WRITEV_FRAMES));
+            slices.push(IoSlice::new(&backlog[0][*head_written..]));
+            for frame in backlog.iter().skip(1).take(MAX_WRITEV_FRAMES - 1) {
+                slices.push(IoSlice::new(frame));
+            }
+            match writer.write_slices(&slices) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
                 }
-                match self.stream.write_vectored(&slices) {
-                    Ok(0) => {
-                        return Err(io::Error::new(
-                            io::ErrorKind::WriteZero,
-                            "socket accepted zero bytes",
-                        ))
-                    }
-                    Ok(n) => n,
-                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                        return Ok(FlushStatus::Blocked)
-                    }
-                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                    Err(e) => return Err(e),
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    return Ok(FlushStatus::Blocked)
                 }
-            };
-            // Advance past whole frames the write covered; a partial
-            // tail stays as the new head offset.
-            let mut n = written;
-            while n > 0 {
-                let head_remaining = self.backlog[0].len() - self.head_written;
-                if n >= head_remaining {
-                    n -= head_remaining;
-                    self.backlog.pop_front();
-                    self.head_written = 0;
-                } else {
-                    self.head_written += n;
-                    n = 0;
-                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        };
+        // Advance past whole frames the write covered; a partial
+        // tail stays as the new head offset.
+        let mut n = written;
+        while n > 0 {
+            let head_remaining = backlog[0].len() - *head_written;
+            if n >= head_remaining {
+                n -= head_remaining;
+                backlog.pop_front();
+                *head_written = 0;
+            } else {
+                *head_written += n;
+                n = 0;
             }
         }
-        Ok(FlushStatus::Drained)
     }
+    Ok(FlushStatus::Drained)
 }
 
 /// Fixed-capacity connection storage with generation-tagged addressing.

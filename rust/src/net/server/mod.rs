@@ -29,6 +29,15 @@
 //! pass both policy gates — quota refusals and cache hits never
 //! dequantize.
 //!
+//! 0. **Auth** — when the deployment holds an
+//!    [`AuthKey`](crate::net::auth::AuthKey)
+//!    ([`NetServerConfig::auth_key`]), the request header's HMAC tag
+//!    must verify against the claimed tenant id before that id buys
+//!    anything — quota charge, cache lookup, admission all trust the
+//!    name. Failure is a typed `Auth` error frame and a strike; a
+//!    connection that accumulates [`NetServerConfig::auth_strike_limit`]
+//!    strikes is closed (see the trust-boundary section in
+//!    [`crate::net`]).
 //! 1. **Quota** — the tenant's token bucket ([`TokenBuckets`]) is
 //!    charged `T·B` elements (header geometry alone); refusal is a
 //!    typed `Quota` error frame and a `quota_shed` metrics tick. Quotas
@@ -92,6 +101,7 @@
 //! extra threads, and the sniff happens once per connection before any
 //! frame parse, so established binary peers never pay for it.
 
+use crate::net::auth::AuthKey;
 use crate::net::cache::{self, CachedGae, ResponseCache};
 use crate::net::quota::{QuotaConfig, TokenBuckets};
 use crate::net::wire::{self, ErrorKind, LazyFrame, LazyRequest, PlaneCodec};
@@ -161,6 +171,19 @@ pub struct NetServerConfig {
     /// long is shed (typed `Shed` error frame, then close) and counted
     /// in `MetricsSnapshot::slow_closed`.
     pub slow_conn_deadline: Duration,
+    /// Per-deployment HMAC key: when set, request frames must carry a
+    /// valid tenant token (HMAC-SHA256 of the tenant id under this
+    /// key) in the header or be refused with a typed `Auth` error
+    /// frame before quota/cache/admission. `None` (the default) admits
+    /// self-declared tenant ids — trusted-network mode, today's
+    /// behavior.
+    pub auth_key: Option<AuthKey>,
+    /// Auth failures tolerated per connection before it is closed
+    /// (counted in `MetricsSnapshot::auth_conns_closed`). The limit
+    /// keeps one abusive peer from grinding the HMAC path forever
+    /// while still letting a fleet with one stale token see a few
+    /// typed errors before losing its connection.
+    pub auth_strike_limit: u32,
 }
 
 impl Default for NetServerConfig {
@@ -175,6 +198,8 @@ impl Default for NetServerConfig {
             write_backlog_frames: 256,
             completer_threads: 4,
             slow_conn_deadline: Duration::from_secs(2),
+            auth_key: None,
+            auth_strike_limit: 3,
         }
     }
 }
@@ -223,6 +248,12 @@ pub(crate) enum FrameOutcome {
     /// Queue the frame, then close: the stream offset can no longer be
     /// trusted (framing error) or the peer broke protocol.
     ReplyClose(Vec<u8>),
+    /// Queue the frame and count an auth strike against the
+    /// connection: the frame itself was well-formed (the stream offset
+    /// is fine) but its tenant token failed verification. The
+    /// front-end closes the connection once its strikes reach
+    /// [`NetServerConfig::auth_strike_limit`].
+    Reject(Vec<u8>),
     /// Admitted into the service; completion produces the reply.
     Admitted(Box<InFlight>),
 }
@@ -370,6 +401,29 @@ fn process_request(req: LazyRequest<'_>, shared: &Shared) -> FrameOutcome {
     let trace = req.trace;
     crate::obs::instant("server.decode", trace);
     let _admit_span = crate::obs::span("server.admit", trace);
+
+    // 0. Auth: when the deployment holds a key, the claimed tenant id
+    //    buys nothing until its HMAC tag verifies — an unsigned or
+    //    tampered frame must not charge quota, probe the cache, or
+    //    reach admission. The comparison is constant-time and the
+    //    reject deliberately skips the windowed SLO error rings
+    //    (unauthenticated traffic must not burn the availability
+    //    budget); the lifetime counter and the per-tenant attribution
+    //    of the *claimed* name keep the abuse visible.
+    if let Some(key) = &shared.config.auth_key {
+        let verified = match &req.auth_tag {
+            Some(tag) => key.verify(tenant, tag),
+            None => false,
+        };
+        if !verified {
+            shared.service.metrics_handle().record_auth_rejected(tenant);
+            return FrameOutcome::Reject(wire::encode_error(
+                seq,
+                ErrorKind::Auth,
+                &format!("tenant {tenant:?} failed authentication"),
+            ));
+        }
+    }
 
     // 1. Quota: charge the tenant before any work happens on its behalf
     //    — the cost needs only the header geometry, no plane decode.

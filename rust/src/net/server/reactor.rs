@@ -532,6 +532,17 @@ fn drain_frames(token: ConnToken, conn: &mut Conn, ctx: &mut Ctx) {
                 conn.push_frame(bytes);
                 begin_close(conn, ctx);
             }
+            FrameOutcome::Reject(bytes) => {
+                // Typed `Auth` error out, strike counted; at the limit
+                // the connection drains its backlog (the client sees
+                // every error frame it earned) and closes.
+                conn.push_frame(bytes);
+                conn.auth_strikes += 1;
+                if conn.auth_strikes >= ctx.shared.config.auth_strike_limit.max(1) {
+                    ctx.shared.service.metrics_handle().record_auth_conn_closed();
+                    begin_close(conn, ctx);
+                }
+            }
             FrameOutcome::Admitted(inflight) => {
                 conn.inflight += 1;
                 let job = PumpJob { reactor: ctx.idx, token: token.pack(), inflight };

@@ -166,6 +166,7 @@ fn read_loop(
         return;
     }
     let mut reader = std::io::BufReader::new((&first[..]).chain(stream));
+    let mut auth_strikes: u32 = 0;
     loop {
         let frame = match wire::read_frame(&mut reader) {
             Ok(Some(frame)) => frame,
@@ -178,6 +179,17 @@ fn read_loop(
             FrameOutcome::ReplyClose(bytes) => {
                 let _ = out_tx.send(bytes);
                 return;
+            }
+            FrameOutcome::Reject(bytes) => {
+                // Each auth failure still gets its typed error frame;
+                // the strike limit bounds how long one connection can
+                // grind the HMAC path.
+                let _ = out_tx.send(bytes);
+                auth_strikes += 1;
+                if auth_strikes >= shared.config.auth_strike_limit.max(1) {
+                    shared.service.metrics_handle().record_auth_conn_closed();
+                    return;
+                }
             }
             FrameOutcome::Admitted(inflight) => {
                 let _ = done_tx.send(inflight);

@@ -25,8 +25,9 @@
 //! | tenant | u8 length + UTF-8 bytes (≤ 255) |
 //! | resp codec | u8, the codec the *response* planes should travel in (v2) |
 //! | resp bits  | u8 response quantizer width (ignored for f32 codecs) |
-//! | header flags | u8 (v3; bit 0 = trace id present, others must be 0) |
+//! | header flags | u8 (v3; bit 0 = trace id present, bit 1 = auth tag present (v6), others must be 0) |
 //! | trace id | u64, only when header-flag bit 0 is set |
+//! | auth tag | 32 bytes, only when header-flag bit 1 is set: the tenant's HMAC-SHA256 token ([`crate::net::auth`]) |
 //! | — payload section (hashed for the response cache) — | |
 //! | codec | u8, the Table III experiment index (1..=5) |
 //! | bits  | u8 quantizer width (ignored for f32 codecs) |
@@ -35,11 +36,15 @@
 //! | values plane | `[(T+1)·B]` elements, encoded per codec |
 //! | done bitset | ⌈T·B/8⌉ bytes, LSB-first (bit j = element j) |
 //!
-//! The response-codec pair, header flags, and trace id sit in the
-//! *header* section, outside the hashed payload: the cached result is
-//! stored as f32 planes either way, so two clients asking for the same
-//! computation under different reply codecs — or under different trace
-//! ids — share one cache entry and each gets its own encoding. The
+//! The response-codec pair, header flags, trace id, and auth tag sit in
+//! the *header* section, outside the hashed payload: the cached result
+//! is stored as f32 planes either way, so two clients asking for the
+//! same computation under different reply codecs — different trace ids,
+//! or with/without an auth tag — share one cache entry and each gets
+//! its own encoding. The auth tag is the tenant's HMAC-SHA256 token
+//! (minted per deployment key, see [`crate::net::auth`]); the server
+//! verifies it before quota, cache, and admission when
+//! `NetServerConfig::auth_key` is set, and ignores it otherwise. The
 //! trace id is the request-scoped correlation key of [`crate::obs`]:
 //! every span the request produces, on whichever thread or shard,
 //! carries it, so one causal timeline survives the network hop and
@@ -71,7 +76,8 @@
 //! back to f32, which carries NaN/Inf exactly).
 //!
 //! **Error body**: `seq` u64, code u8 ([`ErrorKind`]: 1=Quota, 2=Shed,
-//! 3=Malformed, 4=Shutdown, 5=Internal), u32 message length + UTF-8.
+//! 3=Malformed, 4=Shutdown, 5=Internal, 6=Auth), u32 message length +
+//! UTF-8.
 //!
 //! **MetricsRequest body** (v3): `seq` u64 — a telemetry poll; no
 //! payload. **MetricsResponse body** (v3): `seq` u64 followed by a
@@ -109,7 +115,9 @@
 //! echo (flag bit 3), and the metrics frame pair. Version 4 appended
 //! `slow_closed` to the metrics body. Version 5 appended the windowed
 //! telemetry section to the metrics body and added the trace frame
-//! pair.
+//! pair. Version 6 added the request-header auth tag (flag bit 1), the
+//! `Auth` error code, the `auth_rejected`/`auth_conns_closed` counters
+//! to the metrics body, and a per-tenant `auth_rejected` column.
 //!
 //! ## Accounting
 //!
@@ -145,11 +153,11 @@ use std::time::Duration;
 
 /// Frame magic: `"HGAE"`.
 pub const MAGIC: [u8; 4] = *b"HGAE";
-/// Current protocol version. v5 added the windowed/SLO/exemplar section
-/// to the metrics RPC body and the trace frame pair — any layout change
-/// bumps this byte, even an appended field, because the decoder reads
-/// by offset, not by name.
-pub const VERSION: u8 = 5;
+/// Current protocol version. v6 added the request-header auth tag
+/// (tenant HMAC token), the `Auth` error code, and the auth counters in
+/// the metrics RPC body — any layout change bumps this byte, even an
+/// appended field, because the decoder reads by offset, not by name.
+pub const VERSION: u8 = 6;
 /// Upper bound on a single frame (sanity guard against corrupt length
 /// prefixes allocating unbounded buffers).
 pub const MAX_FRAME_BYTES: usize = 256 << 20;
@@ -169,6 +177,12 @@ const FRAME_TYPE_TRACE_RESPONSE: u8 = 7;
 
 /// Request header flag: a u64 trace id follows the flags byte.
 const REQ_FLAG_TRACE: u8 = 1;
+/// Request header flag (v6): a 32-byte tenant auth tag follows the
+/// optional trace id — still header section, outside the hashed
+/// payload, so authenticating traffic never splits a cache entry.
+const REQ_FLAG_AUTH: u8 = 2;
+/// Size of the request-header auth tag: one HMAC-SHA256 output.
+pub const AUTH_TAG_LEN: usize = 32;
 /// Response flag: a u64 trace id is echoed after `hw_cycles`.
 const RESP_FLAG_TRACE: u8 = 8;
 /// Most tenants a MetricsResponse may carry (the recorder itself caps
@@ -294,6 +308,10 @@ pub enum ErrorKind {
     Shutdown,
     /// Anything else.
     Internal,
+    /// The frame's tenant failed authentication (missing or invalid
+    /// auth tag against the deployment key). Retrying with the same
+    /// credentials can never succeed.
+    Auth,
 }
 
 impl ErrorKind {
@@ -304,6 +322,7 @@ impl ErrorKind {
             ErrorKind::Malformed => 3,
             ErrorKind::Shutdown => 4,
             ErrorKind::Internal => 5,
+            ErrorKind::Auth => 6,
         }
     }
 
@@ -314,6 +333,7 @@ impl ErrorKind {
             3 => Some(ErrorKind::Malformed),
             4 => Some(ErrorKind::Shutdown),
             5 => Some(ErrorKind::Internal),
+            6 => Some(ErrorKind::Auth),
             _ => None,
         }
     }
@@ -325,6 +345,7 @@ impl ErrorKind {
             ErrorKind::Malformed => "malformed",
             ErrorKind::Shutdown => "shutdown",
             ErrorKind::Internal => "internal",
+            ErrorKind::Auth => "auth",
         }
     }
 }
@@ -347,6 +368,8 @@ pub struct RequestFrame {
     pub resp: PlaneCodec,
     /// Request-scoped trace id ([`crate::obs`]); `0` = untraced.
     pub trace: u64,
+    /// Tenant auth tag from the header (v6); `None` = unsigned frame.
+    pub auth_tag: Option<[u8; AUTH_TAG_LEN]>,
     pub t_len: usize,
     pub batch: usize,
     pub rewards: Vec<f32>,
@@ -469,6 +492,9 @@ pub struct LazyRequest<'a> {
     /// Request-scoped trace id ([`crate::obs`]); `0` = untraced. Header
     /// section, so tracing a request does not split its cache entry.
     pub trace: u64,
+    /// Tenant auth tag (v6); `None` = unsigned frame. Header section,
+    /// like the trace id, so signing does not split a cache entry.
+    pub auth_tag: Option<[u8; AUTH_TAG_LEN]>,
     pub t_len: usize,
     pub batch: usize,
     /// Payload-section size on the wire.
@@ -527,6 +553,7 @@ impl LazyRequest<'_> {
             bits: self.bits,
             resp: self.resp,
             trace: self.trace,
+            auth_tag: self.auth_tag,
             t_len: self.t_len,
             batch: self.batch,
             rewards,
@@ -697,6 +724,8 @@ fn encode_done_bitset(out: &mut Vec<u8>, done_mask: &[f32]) {
 /// plane convention) — the bitset transport is otherwise lossy.
 /// `trace` is the request-scoped trace id (`0` = untraced; it rides the
 /// header section behind a flag bit, outside the hashed payload).
+/// Unsigned form of [`encode_request_signed`] — for servers without
+/// tenant auth enabled.
 #[allow(clippy::too_many_arguments)]
 pub fn encode_request(
     seq: u64,
@@ -704,6 +733,30 @@ pub fn encode_request(
     codec: PlaneCodec,
     resp: PlaneCodec,
     trace: u64,
+    t_len: usize,
+    batch: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+) -> anyhow::Result<EncodedRequest> {
+    encode_request_signed(
+        seq, tenant, codec, resp, trace, None, t_len, batch, rewards, values, done_mask,
+    )
+}
+
+/// [`encode_request`] plus an optional tenant auth tag (v6): the
+/// 32-byte HMAC token ([`crate::net::auth::AuthToken`]) rides the
+/// header section behind `REQ_FLAG_AUTH`, after the optional trace id
+/// and before the hashed payload — so a signed frame's cache key is
+/// identical to its unsigned twin's.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_request_signed(
+    seq: u64,
+    tenant: &str,
+    codec: PlaneCodec,
+    resp: PlaneCodec,
+    trace: u64,
+    auth_tag: Option<&[u8; AUTH_TAG_LEN]>,
     t_len: usize,
     batch: usize,
     rewards: &[f32],
@@ -754,15 +807,24 @@ pub fn encode_request(
     put_u64(&mut body, seq);
     body.push(tenant.len() as u8);
     body.extend_from_slice(tenant.as_bytes());
-    // Response-codec pair, header flags, and trace id: header section,
-    // deliberately outside the hashed payload (see the module docs).
+    // Response-codec pair, header flags, trace id, and auth tag: header
+    // section, deliberately outside the hashed payload (see the module
+    // docs).
     body.push(resp.kind.index() as u8);
     body.push(resp.bits);
+    let mut flags = 0u8;
     if trace != 0 {
-        body.push(REQ_FLAG_TRACE);
+        flags |= REQ_FLAG_TRACE;
+    }
+    if auth_tag.is_some() {
+        flags |= REQ_FLAG_AUTH;
+    }
+    body.push(flags);
+    if trace != 0 {
         put_u64(&mut body, trace);
-    } else {
-        body.push(0);
+    }
+    if let Some(tag) = auth_tag {
+        body.extend_from_slice(tag);
     }
     let payload_start = body.len();
     body.push(codec.index() as u8);
@@ -920,6 +982,8 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
     put_u64(&mut body, s.cache_hits);
     put_u64(&mut body, s.cache_misses);
     put_u64(&mut body, s.slow_closed);
+    put_u64(&mut body, s.auth_rejected);
+    put_u64(&mut body, s.auth_conns_closed);
     put_u64(&mut body, s.routed_small);
     put_u64(&mut body, s.slab_tiles);
     put_u64(&mut body, s.packed_tiles);
@@ -960,6 +1024,7 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
         put_u64(&mut body, t.elements);
         put_u64(&mut body, t.shed);
         put_u64(&mut body, t.quota_shed);
+        put_u64(&mut body, t.auth_rejected);
     }
     finish_frame(FRAME_TYPE_METRICS_RESPONSE, &body)
 }
@@ -1012,6 +1077,8 @@ fn decode_metrics_response_body(
     let cache_hits = r.u64()?;
     let cache_misses = r.u64()?;
     let slow_closed = r.u64()?;
+    let auth_rejected = r.u64()?;
+    let auth_conns_closed = r.u64()?;
     let routed_small = r.u64()?;
     let slab_tiles = r.u64()?;
     let packed_tiles = r.u64()?;
@@ -1063,6 +1130,7 @@ fn decode_metrics_response_body(
             elements: r.u64()?,
             shed: r.u64()?,
             quota_shed: r.u64()?,
+            auth_rejected: r.u64()?,
         });
     }
     Ok(MetricsResponseFrame {
@@ -1076,6 +1144,8 @@ fn decode_metrics_response_body(
             cache_hits,
             cache_misses,
             slow_closed,
+            auth_rejected,
+            auth_conns_closed,
             routed_small,
             slab_tiles,
             packed_tiles,
@@ -1297,10 +1367,18 @@ fn decode_request_body_lazy<'a>(
     }
     let resp = PlaneCodec { kind: resp_kind, bits: resp_bits };
     let header_flags = r.u8()?;
-    if header_flags & !REQ_FLAG_TRACE != 0 {
+    if header_flags & !(REQ_FLAG_TRACE | REQ_FLAG_AUTH) != 0 {
         return Err(WireDecodeError::Malformed("unknown request header flags"));
     }
     let trace = if header_flags & REQ_FLAG_TRACE != 0 { r.u64()? } else { 0 };
+    let auth_tag = if header_flags & REQ_FLAG_AUTH != 0 {
+        let raw = r.take(AUTH_TAG_LEN)?;
+        let mut tag = [0u8; AUTH_TAG_LEN];
+        tag.copy_from_slice(raw);
+        Some(tag)
+    } else {
+        None
+    };
     let payload_start = r.pos;
     let codec_index = r.u8()?;
     let codec = codec_from_index(codec_index).ok_or(WireDecodeError::BadCodec(codec_index))?;
@@ -1339,6 +1417,7 @@ fn decode_request_body_lazy<'a>(
         bits,
         resp,
         trace,
+        auth_tag,
         t_len,
         batch,
         payload_bytes,
@@ -2082,6 +2161,8 @@ mod tests {
             cache_hits: 3,
             cache_misses: 4,
             slow_closed: 21,
+            auth_rejected: 22,
+            auth_conns_closed: 2,
             routed_small: 5,
             slab_tiles: 6,
             packed_tiles: 7,
@@ -2153,6 +2234,7 @@ mod tests {
                     elements: 6000,
                     shed: 1,
                     quota_shed: 0,
+                    auth_rejected: 4,
                 },
                 TenantSnapshot {
                     tenant: "light".into(),
@@ -2160,6 +2242,7 @@ mod tests {
                     elements: 30,
                     shed: 0,
                     quota_shed: 2,
+                    auth_rejected: 0,
                 },
             ],
         };
@@ -2183,6 +2266,8 @@ mod tests {
         assert_eq!(s.encode_us, snapshot.encode_us);
         assert_eq!(s.total_us, snapshot.total_us);
         assert_eq!(s.slow_closed, 21);
+        assert_eq!(s.auth_rejected, 22);
+        assert_eq!(s.auth_conns_closed, 2);
         assert_eq!(s.trace_dropped_events, 17);
         assert_eq!(s.exemplars_retained, 4);
         assert_eq!(s.exemplars_evicted, 1);

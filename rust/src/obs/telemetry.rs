@@ -208,6 +208,8 @@ pub fn prometheus_text(snap: &MetricsSnapshot, shard: &str) -> String {
         ("heppo_cache_hits_total", snap.cache_hits),
         ("heppo_cache_misses_total", snap.cache_misses),
         ("heppo_slow_conns_closed_total", snap.slow_closed),
+        ("heppo_auth_rejected_total", snap.auth_rejected),
+        ("heppo_auth_conns_closed_total", snap.auth_conns_closed),
         ("heppo_elements_total", snap.elements),
         ("heppo_batches_total", snap.batches),
         ("heppo_trace_dropped_events_total", snap.trace_dropped_events),

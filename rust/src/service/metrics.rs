@@ -50,6 +50,10 @@ struct TenantCounters {
     shed: u64,
     /// Frames refused by the tenant's quota bucket.
     quota_shed: u64,
+    /// Frames claiming this tenant that failed authentication. The
+    /// claimant may be an impostor — the row attributes the *claimed*
+    /// identity, which is what an operator investigating abuse wants.
+    auth_rejected: u64,
     /// Last-touch tick, for LRU eviction at the cap.
     last_touch: u64,
 }
@@ -176,6 +180,10 @@ pub struct ServiceMetrics {
     /// Connections the reactor front-end closed for being slow
     /// consumers (write backlog full past the shed deadline).
     slow_closed: AtomicU64,
+    /// Frames rejected by tenant authentication (missing/invalid tag).
+    auth_rejected: AtomicU64,
+    /// Connections closed after hitting the auth strike limit.
+    auth_conns_closed: AtomicU64,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     routed_small: AtomicU64,
     /// Tiles computed in place on a resident plane slab (zero gather).
@@ -224,6 +232,8 @@ impl ServiceMetrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             slow_closed: AtomicU64::new(0),
+            auth_rejected: AtomicU64::new(0),
+            auth_conns_closed: AtomicU64::new(0),
             routed_small: AtomicU64::new(0),
             slab_tiles: AtomicU64::new(0),
             packed_tiles: AtomicU64::new(0),
@@ -307,6 +317,22 @@ impl ServiceMetrics {
     /// stayed full past the slow-consumer deadline.
     pub(crate) fn record_slow_closed(&self) {
         self.slow_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tenant authentication rejected a frame. Deliberately **not**
+    /// ticked into the windowed error ring: auth rejects are hostile or
+    /// misconfigured traffic, and an unauthenticated attacker must not
+    /// be able to burn the deployment's SLO availability budget by
+    /// spraying unsigned frames. The lifetime counter and per-tenant
+    /// attribution still make the abuse visible.
+    pub(crate) fn record_auth_rejected(&self, claimed_tenant: &str) {
+        self.auth_rejected.fetch_add(1, Ordering::Relaxed);
+        self.tenants.lock().unwrap().entry(claimed_tenant).auth_rejected += 1;
+    }
+
+    /// A front-end closed a connection that hit the auth strike limit.
+    pub(crate) fn record_auth_conn_closed(&self) {
+        self.auth_conns_closed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Size-threshold routing sent one coalesced group to the scalar loop.
@@ -451,6 +477,7 @@ impl ServiceMetrics {
                     elements: c.elements,
                     shed: c.shed,
                     quota_shed: c.quota_shed,
+                    auth_rejected: c.auth_rejected,
                 })
                 .collect()
         };
@@ -508,6 +535,8 @@ impl ServiceMetrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             slow_closed: self.slow_closed.load(Ordering::Relaxed),
+            auth_rejected: self.auth_rejected.load(Ordering::Relaxed),
+            auth_conns_closed: self.auth_conns_closed.load(Ordering::Relaxed),
             routed_small: self.routed_small.load(Ordering::Relaxed),
             slab_tiles: self.slab_tiles.load(Ordering::Relaxed),
             packed_tiles: self.packed_tiles.load(Ordering::Relaxed),
@@ -560,6 +589,10 @@ pub struct TenantSnapshot {
     pub shed: u64,
     /// Frames refused by the tenant's quota bucket.
     pub quota_shed: u64,
+    /// Frames rejected by tenant authentication. Attributes the
+    /// *claimed* identity — an attacker spoofing tenant `a` shows up
+    /// under `a`, which is exactly where an operator looks first.
+    pub auth_rejected: u64,
 }
 
 /// p50/p95/p99 of one latency phase, in microseconds.
@@ -624,6 +657,15 @@ pub struct MetricsSnapshot {
     /// consumers: write backlog full past the shed deadline, answered
     /// with a typed `Shed` error frame and deregistered.
     pub slow_closed: u64,
+    /// Request frames rejected by tenant authentication: missing,
+    /// malformed, or mismatched HMAC tag while the server holds an
+    /// auth key. Deliberately excluded from the windowed SLO error
+    /// rings so unauthenticated traffic cannot burn the availability
+    /// budget.
+    pub auth_rejected: u64,
+    /// Connections closed for exceeding the per-connection auth
+    /// strike limit.
+    pub auth_conns_closed: u64,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     pub routed_small: u64,
     /// Tiles computed in place on a resident plane slab (zero gather).
@@ -702,11 +744,13 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "net:      cache {} hit / {} miss | quota shed {} | slow-closed {} | routed-to-scalar {} (threshold {})",
+            "net:      cache {} hit / {} miss | quota shed {} | slow-closed {} | auth-rejected {} / {} conns closed | routed-to-scalar {} (threshold {})",
             self.cache_hits,
             self.cache_misses,
             self.quota_shed,
             self.slow_closed,
+            self.auth_rejected,
+            self.auth_conns_closed,
             self.routed_small,
             self.scalar_route_max_elements
         )?;
@@ -715,8 +759,8 @@ impl std::fmt::Display for MetricsSnapshot {
             for t in self.tenants.iter().take(4) {
                 write!(
                     f,
-                    " {}: {} req / {} elem ({} shed, {} quota)",
-                    t.tenant, t.requests, t.elements, t.shed, t.quota_shed
+                    " {}: {} req / {} elem ({} shed, {} quota, {} auth)",
+                    t.tenant, t.requests, t.elements, t.shed, t.quota_shed, t.auth_rejected
                 )?;
             }
             writeln!(f)?;

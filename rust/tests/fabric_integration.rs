@@ -200,6 +200,7 @@ fn pool_submitters_share_sockets_without_crossing_seq_spaces() {
             sockets: 2,
             codec: PlaneCodec::F32,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .unwrap();
@@ -302,13 +303,18 @@ fn mixed_fleet_survives_a_remote_endpoint_death_with_frames_in_flight() {
                         sockets: 1,
                         codec: PlaneCodec::F32,
                         resp: PlaneCodec::F32,
+                        auth: None,
                     },
                 )
                 .unwrap(),
             ),
             ("local-0".to_string(), ShardBackend::in_process(Arc::clone(&local_svc))),
         ],
-        FabricConfig { cooldown: Duration::from_millis(50), max_attempts: 8 },
+        FabricConfig {
+            cooldown: Duration::from_millis(50),
+            max_attempts: 8,
+            request_timeout: None,
+        },
     )
     .unwrap();
     let (t_len, batch) = (16, 3);
@@ -452,12 +458,13 @@ fn quantized_replies_roundtrip_through_pool_with_bounded_error() {
             sockets: 1,
             codec: PlaneCodec::F32,
             resp: PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 8 },
+            auth: None,
         },
     )
     .unwrap();
     let f_pool = ClientPool::connect(
         &addr,
-        PoolConfig { sockets: 1, codec: PlaneCodec::F32, resp: PlaneCodec::F32 },
+        PoolConfig { sockets: 1, codec: PlaneCodec::F32, resp: PlaneCodec::F32, auth: None },
     )
     .unwrap();
 

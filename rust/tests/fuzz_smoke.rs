@@ -1,0 +1,65 @@
+//! Bounded, deterministic fuzz campaign over the wire surface — the
+//! offline CI face of the fuzzing battery (`heppo::net::fuzzing`).
+//!
+//! Each test drives one harness through `campaign()`: seeded inputs
+//! mixing raw garbage with seed-corpus mutants, every run reproducible
+//! from its printed seed. `HEPPO_FUZZ_ITERS` scales the per-harness
+//! budget (default 500; CI pins an explicit value); any panic is a
+//! genuine finding — minimize it, name it, and append it to
+//! `seed_corpus()` so it replays forever.
+//!
+//! The campaign also writes its corpus to `results/fuzz_corpus/` so CI
+//! can upload it as an artifact and a registry-connected machine can
+//! seed `cargo fuzz` with exactly what the smoke run covered.
+
+use heppo::net::fuzzing::{
+    campaign, run_codec_roundtrip, run_conn_state, run_frame_decode, seed_corpus,
+};
+
+/// Per-harness iteration budget: `HEPPO_FUZZ_ITERS` or 500.
+fn iters() -> u64 {
+    std::env::var("HEPPO_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500)
+}
+
+/// Distinct, stable seeds per harness so one harness's coverage does
+/// not shadow another's; printed so a failure is replayable verbatim.
+fn run(name: &str, harness: fn(&[u8]), seed: u64) {
+    let iters = iters();
+    println!("fuzz campaign {name:?}: seed {seed:#x}, {iters} iters");
+    campaign(harness, seed, iters);
+}
+
+#[test]
+fn frame_decode_survives_campaign() {
+    run("frame_decode", run_frame_decode, 0xF0A1_0001);
+}
+
+#[test]
+fn codec_roundtrip_survives_campaign() {
+    run("codec_roundtrip", run_codec_roundtrip, 0xF0A1_0002);
+}
+
+#[test]
+fn conn_state_survives_campaign() {
+    run("conn_state", run_conn_state, 0xF0A1_0003);
+}
+
+#[test]
+fn corpus_is_exported_for_artifact_upload() {
+    let dir = std::path::Path::new("results").join("fuzz_corpus");
+    std::fs::create_dir_all(&dir).expect("create results/fuzz_corpus");
+    let corpus = seed_corpus();
+    for (i, entry) in corpus.iter().enumerate() {
+        std::fs::write(dir.join(format!("seed-{i:03}.bin")), entry)
+            .expect("write corpus entry");
+    }
+    println!("wrote {} corpus entries to {}", corpus.len(), dir.display());
+    // Every exported entry must clear the decode harness — the corpus
+    // is the regression suite, so a panicking entry is a red build.
+    for entry in &corpus {
+        run_frame_decode(entry);
+    }
+}

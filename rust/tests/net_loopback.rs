@@ -2,7 +2,9 @@
 //! between [`NetClient`] and [`NetServer`] over a live `GaeService` —
 //! f32 bit-identity against in-process submission, pipelined
 //! out-of-order completion, response-cache hits, per-tenant quota
-//! refusals, admission-control sheds, and malformed-frame handling.
+//! refusals, admission-control sheds, malformed-frame handling, HMAC
+//! tenant authentication (accept / typed reject / strike-limit close),
+//! fuzz seed-corpus replay, and the client-side request deadline.
 //!
 //! Every scenario runs under **both** server modes (`threads` and, on
 //! Linux, `reactor`): the `*_threads` / `*_reactor` test pairs call one
@@ -12,8 +14,8 @@
 use heppo::coordinator::GaeBackend;
 use heppo::gae::{GaeParams, Trajectory};
 use heppo::net::{
-    ErrorKind, NetClient, NetClientConfig, NetError, NetServer, NetServerConfig,
-    PlaneCodec, QuotaConfig, ServerMode,
+    AuthKey, AuthToken, ErrorKind, NetClient, NetClientConfig, NetError, NetServer,
+    NetServerConfig, PlaneCodec, QuotaConfig, ServerMode,
 };
 use heppo::quant::CodecKind;
 use heppo::service::{BatcherConfig, GaeService, ServiceConfig};
@@ -62,6 +64,7 @@ fn f32_client(addr: &str) -> NetClient {
             codec: CodecKind::Exp1Baseline,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .unwrap()
@@ -263,6 +266,7 @@ fn quantized_body(mode: ServerMode) {
             codec: CodecKind::Exp1Baseline, // exact requests
             bits: 8,
             resp: PlaneCodec { kind: CodecKind::Exp5DynamicBlock, bits: 8 },
+            auth: None,
         },
     )
     .unwrap();
@@ -441,4 +445,191 @@ fn disconnect_body(mode: ServerMode) {
             assert!(matches!(e, NetError::Io(_) | NetError::Disconnected), "{e}");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Untrusted-tenant hardening: HMAC tenant tokens, fuzz-corpus replay,
+// and the client-side request deadline.
+// ---------------------------------------------------------------------------
+
+/// The deployment signing key shared by every auth scenario; tenants
+/// carry only the derived [`AuthKey::token_for`] token, never the key.
+fn deployment_key() -> AuthKey {
+    AuthKey::new(b"loopback-deployment-key".to_vec()).unwrap()
+}
+
+/// An f32 client for tenant `"test"` presenting `auth` (or nothing).
+fn signed_client(addr: &str, auth: Option<AuthToken>) -> NetClient {
+    NetClient::connect(
+        addr,
+        NetClientConfig {
+            tenant: "test".to_string(),
+            codec: CodecKind::Exp1Baseline,
+            bits: 8,
+            resp: PlaneCodec::F32,
+            auth,
+        },
+    )
+    .unwrap()
+}
+
+both_modes!(signed_traffic_is_accepted_and_unchanged_by_auth, auth_accept_body);
+fn auth_accept_body(mode: ServerMode) {
+    let key = deployment_key();
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { auth_key: Some(key.clone()), cache_entries: 64, ..cfg(mode) },
+    )
+    .unwrap();
+    let client = signed_client(&server.local_addr().to_string(), Some(key.token_for("test")));
+
+    // Correctly signed traffic behaves exactly like the no-auth path:
+    // f32 results stay bit-identical to in-process submission, and a
+    // replayed payload still hits the response cache (the tag rides
+    // outside the hashed payload, so cache keys are unchanged).
+    let mut g = Gen::new(41);
+    let (t_len, batch) = (18, 3);
+    let (r, v, d) = planes(&mut g, t_len, batch);
+    let local = svc.submit_planes(t_len, batch, &r, &v, &d).unwrap().wait().unwrap();
+    let first = client.call_planes(t_len, batch, &r, &v, &d).unwrap();
+    assert!(!first.cache_hit);
+    for (i, (a, b)) in first.advantages.iter().zip(&local.advantages).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "adv {i}");
+    }
+    assert!(client.call_planes(t_len, batch, &r, &v, &d).unwrap().cache_hit);
+
+    let snap = svc.metrics();
+    assert_eq!(snap.auth_rejected, 0);
+    assert_eq!(snap.auth_conns_closed, 0);
+    server.shutdown();
+}
+
+both_modes!(unsigned_and_tampered_frames_get_typed_auth_errors, auth_reject_body);
+fn auth_reject_body(mode: ServerMode) {
+    let key = deployment_key();
+    let svc = service(2, GaeBackend::Scalar, 128);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { auth_key: Some(key.clone()), auth_strike_limit: 16, ..cfg(mode) },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut g = Gen::new(43);
+    let (r, v, d) = planes(&mut g, 8, 2);
+
+    // Unsigned, signed under the wrong key, and signed for a different
+    // tenant id: each must be refused with a typed `Auth` error before
+    // quota, cache, or admission ever see the frame.
+    let wrong_key = AuthKey::new(b"not-the-deployment-key".to_vec()).unwrap();
+    let bad_tokens = [
+        None,
+        Some(wrong_key.token_for("test")),
+        Some(key.token_for("somebody-else")),
+    ];
+    for auth in bad_tokens {
+        let client = signed_client(&addr, auth);
+        let err = client.call_planes(8, 2, &r, &v, &d).unwrap_err();
+        assert_eq!(err.remote_kind(), Some(ErrorKind::Auth), "{err}");
+    }
+
+    // The same server keeps serving correctly signed traffic.
+    let good = signed_client(&addr, Some(key.token_for("test")));
+    good.call_planes(8, 2, &r, &v, &d).unwrap();
+
+    let snap = svc.metrics();
+    assert_eq!(snap.auth_rejected, 3);
+    assert_eq!(snap.auth_conns_closed, 0, "one strike each must not close");
+    let t = snap.tenants.iter().find(|t| t.tenant == "test").unwrap();
+    assert_eq!(t.auth_rejected, 3, "rejects attribute the *claimed* tenant id");
+    server.shutdown();
+}
+
+both_modes!(auth_strikes_close_the_connection_at_the_limit, auth_strike_body);
+fn auth_strike_body(mode: ServerMode) {
+    let key = deployment_key();
+    let svc = service(1, GaeBackend::Scalar, 16);
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { auth_key: Some(key), auth_strike_limit: 2, ..cfg(mode) },
+    )
+    .unwrap();
+    let client = signed_client(&server.local_addr().to_string(), None);
+    let mut g = Gen::new(47);
+    let (r, v, d) = planes(&mut g, 8, 2);
+
+    // Strikes one and two each still earn their typed error frame...
+    for strike in 0..2 {
+        let err = client.call_planes(8, 2, &r, &v, &d).unwrap_err();
+        assert_eq!(err.remote_kind(), Some(ErrorKind::Auth), "strike {strike}: {err}");
+    }
+    // ...and the second closes the connection: the next submit must
+    // fail promptly (at write time or as a dead pending), never hang.
+    match client.submit_planes(8, 2, &r, &v, &d) {
+        Ok(pending) => assert!(pending.wait().is_err()),
+        Err(e) => assert!(matches!(e, NetError::Io(_) | NetError::Disconnected), "{e}"),
+    }
+    let snap = svc.metrics();
+    assert_eq!(snap.auth_rejected, 2);
+    assert_eq!(snap.auth_conns_closed, 1);
+    server.shutdown();
+}
+
+both_modes!(fuzz_corpus_replays_cleanly_against_a_live_server, corpus_replay_body);
+fn corpus_replay_body(mode: ServerMode) {
+    use std::io::{Read, Write};
+
+    let svc = service(1, GaeBackend::Scalar, 16);
+    let server = NetServer::start(Arc::clone(&svc), "127.0.0.1:0", cfg(mode)).unwrap();
+    let addr = server.local_addr();
+
+    // Every seed-corpus entry — valid exemplars, named regression
+    // mutants, truncations — goes over a real socket on its own
+    // connection. The server may answer, refuse, or close; what it
+    // must never do is wedge or crash either front-end.
+    for entry in heppo::net::fuzzing::seed_corpus() {
+        let mut raw = std::net::TcpStream::connect(addr).unwrap();
+        raw.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        let mut msg = (entry.len() as u32).to_le_bytes().to_vec();
+        msg.extend_from_slice(&entry);
+        // A write error just means the server already refused and
+        // closed — an acceptable outcome for a hostile frame.
+        let _ = raw.write_all(&msg).and_then(|_| raw.flush());
+        // Drain whatever the server says until it closes or goes
+        // quiet; reply *content* is pinned elsewhere — only liveness
+        // matters here.
+        let mut scratch = [0u8; 4096];
+        loop {
+            match raw.read(&mut scratch) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+
+    // The server survived the whole corpus: a well-formed request on a
+    // fresh connection still computes correctly.
+    let client = f32_client(&addr.to_string());
+    let mut g = Gen::new(53);
+    let (r, v, d) = planes(&mut g, 8, 2);
+    client.call_planes(8, 2, &r, &v, &d).unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn client_deadline_times_out_against_a_stalled_server() {
+    // A listener that accepts and then never reads: the request sits
+    // in kernel buffers while the client's per-call deadline runs down.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let client = f32_client(&listener.local_addr().unwrap().to_string());
+    let mut g = Gen::new(59);
+    let (r, v, d) = planes(&mut g, 8, 2);
+    let pending = client.submit_planes(8, 2, &r, &v, &d).unwrap();
+    let held = listener.accept().unwrap();
+    let err = pending.wait_timeout(Duration::from_millis(100)).unwrap_err();
+    assert!(matches!(err, NetError::Timeout), "{err}");
+    drop(held);
 }

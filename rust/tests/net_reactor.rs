@@ -299,6 +299,7 @@ fn traced_request_spans_cross_the_reactor_completion_hop() {
             codec: CodecKind::Exp1Baseline,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .unwrap();

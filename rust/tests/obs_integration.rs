@@ -59,6 +59,7 @@ fn f32_client(addr: &str) -> NetClient {
             codec: CodecKind::Exp1Baseline,
             bits: 8,
             resp: PlaneCodec::F32,
+            auth: None,
         },
     )
     .unwrap()
@@ -243,6 +244,7 @@ fn fleet_view_pulls_remote_snapshots_over_the_metrics_rpc() {
                         sockets: 1,
                         codec: PlaneCodec::F32,
                         resp: PlaneCodec::F32,
+                        auth: None,
                     },
                 )
                 .unwrap(),
@@ -288,7 +290,7 @@ fn fleet_view_pulls_remote_snapshots_over_the_metrics_rpc() {
     // The RPC also answers outside the fabric, straight off a pool.
     let pool = ClientPool::connect(
         &server.local_addr().to_string(),
-        PoolConfig { sockets: 1, codec: PlaneCodec::F32, resp: PlaneCodec::F32 },
+        PoolConfig { sockets: 1, codec: PlaneCodec::F32, resp: PlaneCodec::F32, auth: None },
     )
     .unwrap();
     let direct = pool.fetch_metrics().unwrap();

@@ -352,7 +352,11 @@ fn fleet_slo_health_flips_critical_on_forced_failure_then_recovers() {
     );
     let fabric = GaeFabric::new(
         vec![("solo".to_string(), ShardBackend::in_process(Arc::clone(&svc)))],
-        FabricConfig { cooldown: Duration::from_millis(50), max_attempts: 2 },
+        FabricConfig {
+            cooldown: Duration::from_millis(50),
+            max_attempts: 2,
+            request_timeout: None,
+        },
     )
     .unwrap();
     let mut g = Gen::new(23);
