@@ -37,8 +37,12 @@
 //! `--metrics-interval SECS` periodically fetches the remote shard's
 //! [`MetricsSnapshot`](heppo::service::MetricsSnapshot) over the wire
 //! metrics RPC and prints *interval deltas* plus the shard's 10s
-//! windowed quantiles and SLO verdict (the fleet view, with per-shard
-//! windows and SLO health, for a sharded fleet). A `--listen` server
+//! windowed quantiles, its numerics verdict (windowed saturation rate,
+//! code utilization, σ-drift), and SLO verdict (the fleet view, with
+//! per-shard windows and SLO health, for a sharded fleet); single and
+//! pooled connect runs always end with a quant-efficacy rollup — the
+//! server-measured reconstruction error, saturation, code occupancy,
+//! and the tenant's own numerics row. A `--listen` server
 //! additionally answers plaintext `GET /metrics` (Prometheus text) and
 //! `GET /traces` (retained-exemplar Chrome-trace JSON) on the same
 //! port it serves frames on — `curl http://ADDR/metrics` just works.
@@ -350,6 +354,16 @@ fn interval_report(
         w.errors,
         w.slow,
     );
+    let nw = cur.numerics.window(10);
+    let _ = writeln!(
+        out,
+        "numerics: {} | window(10s) saturation {:.4}, codes {}/256 ({:.0}% util), σ-drift {:.2}",
+        cur.numerics.health.as_str(),
+        nw.saturation_rate,
+        nw.codes_used,
+        nw.code_utilization * 100.0,
+        nw.sigma_drift,
+    );
     let _ = write!(
         out,
         "slo: {} (burn 1s {:.2} / 10s {:.2} / 60s {:.2})",
@@ -358,6 +372,55 @@ fn interval_report(
         cur.slo.burn_10s,
         cur.slo.burn_60s,
     );
+    out
+}
+
+/// Final quantization-efficacy rollup for a connect run: what the
+/// transport quantizer did to this run's planes, read back from the
+/// server's own numerics accumulators over the metrics RPC — lifetime
+/// reconstruction error, windowed code occupancy and σ-drift, the
+/// health verdict, and the tenant's own row.
+fn quant_rollup(snap: &heppo::service::MetricsSnapshot, tenant: &str) -> String {
+    use std::fmt::Write as _;
+    let n = &snap.numerics;
+    let mut out = String::new();
+    let _ = writeln!(out, "quant efficacy (server-measured):");
+    let _ = writeln!(
+        out,
+        "  {} planes / {} elements, saturation {:.4}%, mse {:.3e}, max abs err {:.3e}",
+        n.planes,
+        n.elements,
+        n.saturation_rate() * 100.0,
+        n.mse(),
+        n.max_abs_err,
+    );
+    let w = n.window(60);
+    let _ = writeln!(
+        out,
+        "  window(60s): codes {}/256 ({:.0}% util), σ-drift {:.2}, σ mean {:.3}",
+        w.codes_used,
+        w.code_utilization * 100.0,
+        w.sigma_drift,
+        w.sigma_mean,
+    );
+    let _ = write!(
+        out,
+        "  health {} ({} saturation exemplars retained), lifetime wire reduction {:.2}x",
+        n.health.as_str(),
+        n.saturated_exemplars,
+        snap.wire_reduction_vs_f32(),
+    );
+    if let Some(t) = snap.tenants.iter().find(|t| t.tenant == tenant) {
+        let _ = write!(
+            out,
+            "\n  tenant {:?}: {} quant planes, saturation(1s) {:.4}, health {}, reduction {:.2}x",
+            t.tenant,
+            t.quant_planes,
+            t.quant_saturation_1s,
+            t.numerics_health.as_str(),
+            t.wire_reduction_vs_f32(),
+        );
+    }
     out
 }
 
@@ -564,11 +627,14 @@ fn run_connect_pool(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
         total.absorb(r?);
     }
     total.print(wall);
-    if p.metrics_interval > 0 {
-        match pool.fetch_metrics() {
-            Ok(m) => println!("\nfinal remote service metrics (via RPC):\n{m}"),
-            Err(e) => eprintln!("final metrics RPC failed: {e}"),
+    match pool.fetch_metrics() {
+        Ok(m) => {
+            if p.metrics_interval > 0 {
+                println!("\nfinal remote service metrics (via RPC):\n{m}");
+            }
+            println!("\n{}", quant_rollup(&m, &p.tenant));
         }
+        Err(e) => eprintln!("final metrics RPC failed: {e}"),
     }
     let stats = pool.wire_stats();
     println!(
@@ -793,6 +859,10 @@ fn run_connect_single(p: &ConnectParams, addr: &str) -> anyhow::Result<()> {
         stats.wire_bytes,
         stats.reduction_vs_f32()
     );
+    match client.fetch_metrics() {
+        Ok(m) => println!("\n{}", quant_rollup(&m, &client.config().tenant)),
+        Err(e) => eprintln!("quant rollup metrics RPC failed: {e}"),
+    }
     println!("serve_gae OK");
     Ok(())
 }

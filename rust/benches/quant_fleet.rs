@@ -1,0 +1,528 @@
+//! Quant-fleet trajectory: the fig7–9 standardization ablation run
+//! end-to-end through the *serving* path, across the whole env suite.
+//!
+//! For each of the six bundled environments, random-policy rollouts
+//! (real env dynamics, synthetic critic) are driven through a live
+//! `NetServer` under each Table-III codec configuration:
+//!
+//! | exp  | wire precision | dynamic std | block std |
+//! |------|----------------|-------------|-----------|
+//! | exp1 | f32            | off         | off       |
+//! | exp2 | f32            | on          | off       |
+//! | exp3 | q8             | off         | on (destd)|
+//! | exp4 | q8             | off         | on (keep) |
+//! | exp5 | q8             | on          | on        |
+//!
+//! Quantized rows carry 8-bit planes in *both* directions (request and
+//! response), so the numerics observability plane sees the full lossy
+//! path. The bench closes the loop the observability plane exists for:
+//!
+//! - **f32 rows are bit-exact**: every response is checked bit-identical
+//!   against `gae::reference` on the same planes.
+//! - **q8 rows are error-accounted**: the client recomputes the server's
+//!   exact GAE inputs by round-tripping its own request frame through
+//!   the wire codec, derives the true f32 outputs via `gae::reference`,
+//!   measures the response reconstruction error itself, and asserts the
+//!   client-side MSE / max-abs-err match the live `MetricsSnapshot`
+//!   numerics counters fetched over the metrics RPC.
+//! - **The bandwidth lever is measured**, client side (`WireStats`) and
+//!   server side (per-tenant `wire_payload_bytes` / `wire_f32_bytes`).
+//!
+//! Emits a markdown table, `results/quant_fleet.{csv,jsonl}`, and the
+//! repo-root `BENCH_quant_fleet.json` trajectory entry (ROADMAP item
+//! 4a).
+//!
+//! `HEPPO_BENCH_FAST=1` shrinks the sweep; `HEPPO_BENCH_ITERS=N` caps
+//! requests per row for CI smoke runs.
+
+use heppo::coordinator::GaeBackend;
+use heppo::envs::{make_env, Action, ActionSpace, Env, ALL_ENVS};
+use heppo::gae::{reference, GaeParams};
+use heppo::net::{
+    wire, NetClient, NetClientConfig, NetServer, NetServerConfig, PlaneCodec,
+};
+use heppo::quant::CodecKind;
+use heppo::service::{GaeService, ServiceConfig};
+use heppo::util::csv::CsvTable;
+use heppo::util::json::Json;
+use heppo::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One ablation arm: a Table-III codec and its axis decomposition.
+#[derive(Clone, Copy)]
+struct Arm {
+    kind: CodecKind,
+    label: &'static str,
+    quantized: bool,
+    dynamic_std: bool,
+    block_std: bool,
+}
+
+const ARMS: &[Arm] = &[
+    Arm {
+        kind: CodecKind::Exp1Baseline,
+        label: "exp1",
+        quantized: false,
+        dynamic_std: false,
+        block_std: false,
+    },
+    Arm {
+        kind: CodecKind::Exp2DynamicStd,
+        label: "exp2",
+        quantized: false,
+        dynamic_std: true,
+        block_std: false,
+    },
+    Arm {
+        kind: CodecKind::Exp3BlockDestd,
+        label: "exp3",
+        quantized: true,
+        dynamic_std: false,
+        block_std: true,
+    },
+    Arm {
+        kind: CodecKind::Exp4BlockKeepStd,
+        label: "exp4",
+        quantized: true,
+        dynamic_std: false,
+        block_std: true,
+    },
+    Arm {
+        kind: CodecKind::Exp5DynamicBlock,
+        label: "exp5",
+        quantized: true,
+        dynamic_std: true,
+        block_std: true,
+    },
+];
+
+/// Plane sets for `n_requests` rollout segments of one env under a
+/// random policy: real reward streams (terminal bonuses, shaping, all
+/// of it), values from a noisy discounted-return critic stand-in.
+struct Workload {
+    t_len: usize,
+    batch: usize,
+    rewards: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+    done_masks: Vec<Vec<f32>>,
+}
+
+impl Workload {
+    fn generate(
+        env_name: &str,
+        n_requests: usize,
+        t_len: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Workload {
+        let mut rng = Rng::new(seed);
+        let mut envs: Vec<Box<dyn Env>> =
+            (0..batch).map(|_| make_env(env_name).expect("make_env")).collect();
+        let space = envs[0].action_space();
+        for env in envs.iter_mut() {
+            env.reset(&mut rng);
+        }
+        let mut rewards = Vec::with_capacity(n_requests);
+        let mut values = Vec::with_capacity(n_requests);
+        let mut done_masks = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let mut r = vec![0.0f32; t_len * batch];
+            let mut d = vec![0.0f32; t_len * batch];
+            for t in 0..t_len {
+                for (b, env) in envs.iter_mut().enumerate() {
+                    let action = match &space {
+                        ActionSpace::Discrete(n) => {
+                            Action::Discrete(rng.below(*n as u64) as usize)
+                        }
+                        ActionSpace::Continuous { dim, low, high } => {
+                            Action::Continuous(
+                                (0..*dim)
+                                    .map(|_| rng.uniform_f32(*low, *high))
+                                    .collect(),
+                            )
+                        }
+                    };
+                    let step = env.step(&action, &mut rng);
+                    r[t * batch + b] = step.reward;
+                    if step.done {
+                        d[t * batch + b] = 1.0;
+                        env.reset(&mut rng);
+                    }
+                }
+            }
+            // Synthetic critic: noisy within-segment discounted returns,
+            // in the env's own reward units (the distribution shape is
+            // what the quantizer sees — that's the point).
+            let mut v = vec![0.0f32; (t_len + 1) * batch];
+            let gamma = 0.99f32;
+            for b in 0..batch {
+                let mut ret = 0.0f32;
+                v[t_len * batch + b] = 0.1 * rng.normal() as f32;
+                for t in (0..t_len).rev() {
+                    let i = t * batch + b;
+                    ret = r[i] + gamma * ret * (1.0 - d[i]);
+                    v[i] = ret + 0.1 * rng.normal() as f32;
+                }
+            }
+            rewards.push(r);
+            values.push(v);
+            done_masks.push(d);
+        }
+        Workload { t_len, batch, rewards, values, done_masks }
+    }
+}
+
+/// The true f32 GAE outputs for one request's planes — per batch column
+/// through `gae::reference`, which is bit-identical to the serving
+/// side's scalar backend.
+fn reference_gae(
+    params: &GaeParams,
+    t_len: usize,
+    batch: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut adv = vec![0.0f32; t_len * batch];
+    let mut rtg = vec![0.0f32; t_len * batch];
+    for b in 0..batch {
+        let out = reference::gae_indexed(
+            params,
+            t_len,
+            |t| rewards[t * batch + b],
+            |t| values[t * batch + b],
+            |t| done_mask[t * batch + b] > 0.5,
+        );
+        for t in 0..t_len {
+            adv[t * batch + b] = out.advantages[t];
+            rtg[t * batch + b] = out.rewards_to_go[t];
+        }
+    }
+    (adv, rtg)
+}
+
+/// Re-derive the exact planes the server decodes from this client's
+/// request frame: encode locally with the same codec, then round-trip
+/// through the wire decoder. Bit-identical to what the server computes
+/// GAE on (the encode path is deterministic in the planes alone).
+fn server_view_planes(
+    tenant: &str,
+    codec: PlaneCodec,
+    resp: PlaneCodec,
+    t_len: usize,
+    batch: usize,
+    rewards: &[f32],
+    values: &[f32],
+    done_mask: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let enc = wire::encode_request_signed(
+        0, tenant, codec, resp, 0, None, t_len, batch, rewards, values, done_mask,
+    )
+    .expect("local encode");
+    match wire::decode_frame_lazy(&enc.bytes[4..]).expect("local decode") {
+        wire::LazyFrame::Request(req) => req.decode_planes(),
+        _ => unreachable!("own request frame decodes as a request"),
+    }
+}
+
+struct RowResult {
+    requests: usize,
+    err_elements: u64,
+    client_mse: f64,
+    client_max_abs_err: f64,
+    server_mse: f64,
+    server_max_abs_err: f64,
+    reduction_vs_f32: f64,
+    server_reduction: f64,
+    saturation_rate: f64,
+    code_utilization: f64,
+    health: &'static str,
+    req_per_sec: f64,
+    mean_rtt_us: f64,
+}
+
+fn run_row(env_name: &str, arm: Arm, w: &Workload, gae_params: &GaeParams) -> RowResult {
+    // Fresh service + server per row: the MetricsSnapshot counters are
+    // then exactly this row's traffic, nothing else's.
+    let svc = Arc::new(
+        GaeService::start(ServiceConfig {
+            workers: 2,
+            backend: GaeBackend::Scalar,
+            queue_capacity: 1024,
+            gae: *gae_params,
+            ..ServiceConfig::default()
+        })
+        .expect("service start"),
+    );
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .expect("server start");
+    let addr = server.local_addr().to_string();
+    let tenant = format!("{env_name}/{}", arm.label);
+
+    let req_codec = PlaneCodec { kind: arm.kind, bits: 8 };
+    let resp_codec = if arm.quantized {
+        PlaneCodec { kind: arm.kind, bits: 8 }
+    } else {
+        PlaneCodec::F32
+    };
+    let client = NetClient::connect(
+        &addr,
+        NetClientConfig {
+            tenant: tenant.clone(),
+            codec: arm.kind,
+            bits: 8,
+            resp: resp_codec,
+            auth: None,
+        },
+    )
+    .expect("connect");
+
+    let mut client_sum_sq = 0.0f64;
+    let mut client_max = 0.0f64;
+    let mut err_elements = 0u64;
+    let t0 = Instant::now();
+    for i in 0..w.rewards.len() {
+        // What will the server compute on? For f32 transport, the planes
+        // themselves; for q8 transport, their wire round-trip image.
+        let (deq_r, deq_v, deq_d) = if arm.quantized {
+            server_view_planes(
+                &tenant,
+                req_codec,
+                resp_codec,
+                w.t_len,
+                w.batch,
+                &w.rewards[i],
+                &w.values[i],
+                &w.done_masks[i],
+            )
+        } else {
+            (w.rewards[i].clone(), w.values[i].clone(), w.done_masks[i].clone())
+        };
+        let (truth_adv, truth_rtg) =
+            reference_gae(gae_params, w.t_len, w.batch, &deq_r, &deq_v, &deq_d);
+
+        let gae = client
+            .call_planes(
+                w.t_len,
+                w.batch,
+                &w.rewards[i],
+                &w.values[i],
+                &w.done_masks[i],
+            )
+            .expect("serving-path call");
+        assert_eq!(gae.quantized, arm.quantized, "response codec mismatch");
+
+        if arm.quantized {
+            // Client-side reconstruction error of the lossy response,
+            // against the independently recomputed truth. Same plane
+            // order as the server's encode-side accounting.
+            for (plane, truth) in
+                [(&gae.advantages, &truth_adv), (&gae.rewards_to_go, &truth_rtg)]
+            {
+                for (&got, &want) in plane.iter().zip(truth.iter()) {
+                    let err = (got as f64 - want as f64).abs();
+                    client_sum_sq += err * err;
+                    client_max = client_max.max(err);
+                    err_elements += 1;
+                }
+            }
+        } else {
+            // The f32 escape hatch is exact, bit for bit.
+            for (&got, &want) in gae.advantages.iter().zip(truth_adv.iter()) {
+                assert_eq!(got.to_bits(), want.to_bits(), "f32 adv must be exact");
+            }
+            for (&got, &want) in gae.rewards_to_go.iter().zip(truth_rtg.iter()) {
+                assert_eq!(got.to_bits(), want.to_bits(), "f32 rtg must be exact");
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let wire_stats = client.wire_stats();
+    let snapshot = client.fetch_metrics().expect("metrics RPC");
+    server.shutdown();
+
+    let n = snapshot.numerics.clone();
+    let client_mse = if err_elements == 0 {
+        0.0
+    } else {
+        client_sum_sq / err_elements as f64
+    };
+    if arm.quantized {
+        // The acceptance gate: client-side error accounting must match
+        // the live server counters. Both sides measured the same floats
+        // (the tolerance covers f32 evaluation-order differences between
+        // the encode loop's standardized-space error and the client's
+        // plane-space subtraction).
+        assert_eq!(
+            n.err_elements, err_elements,
+            "{tenant}: server counted different error-measured elements"
+        );
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+        assert!(
+            rel(client_mse, n.mse()) < 1e-3,
+            "{tenant}: client MSE {client_mse:.3e} vs server {:.3e}",
+            n.mse()
+        );
+        assert!(
+            rel(client_max, n.max_abs_err) < 1e-3,
+            "{tenant}: client max err {client_max:.3e} vs server {:.3e}",
+            n.max_abs_err
+        );
+    } else {
+        assert_eq!(n.planes, 0, "{tenant}: f32 rows must observe no quantized planes");
+        assert_eq!(n.max_abs_err, 0.0, "{tenant}: f32 rows carry no error");
+    }
+    let tenant_row = snapshot
+        .tenants
+        .iter()
+        .find(|t| t.tenant == tenant)
+        .expect("tenant row in snapshot");
+    if arm.quantized {
+        assert!(
+            wire_stats.reduction_vs_f32() >= 3.5,
+            "{tenant}: request reduction {:.2}x below 3.5x",
+            wire_stats.reduction_vs_f32()
+        );
+        assert!(
+            tenant_row.wire_reduction_vs_f32() >= 3.5,
+            "{tenant}: server-side reduction {:.2}x below 3.5x",
+            tenant_row.wire_reduction_vs_f32()
+        );
+    }
+
+    // Code utilization over the widest window (the row just ran, so the
+    // 60s window covers all of it).
+    let win = snapshot.numerics.window(60);
+    RowResult {
+        requests: w.rewards.len(),
+        err_elements,
+        client_mse,
+        client_max_abs_err: client_max,
+        server_mse: n.mse(),
+        server_max_abs_err: n.max_abs_err,
+        reduction_vs_f32: wire_stats.reduction_vs_f32(),
+        server_reduction: tenant_row.wire_reduction_vs_f32(),
+        saturation_rate: n.saturation_rate(),
+        code_utilization: win.code_utilization,
+        health: match n.health {
+            heppo::obs::numerics::NumericsHealth::Ok => "ok",
+            heppo::obs::numerics::NumericsHealth::Warn => "warn",
+            heppo::obs::numerics::NumericsHealth::Critical => "critical",
+        },
+        req_per_sec: w.rewards.len() as f64 / wall,
+        mean_rtt_us: wire_stats.mean_rtt_us(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("HEPPO_BENCH_FAST").as_deref() == Ok("1");
+    let (mut n_requests, t_len, batch) = if fast { (6, 32, 2) } else { (24, 96, 4) };
+    if let Ok(n) = std::env::var("HEPPO_BENCH_ITERS") {
+        if let Ok(n) = n.parse::<usize>() {
+            n_requests = n.max(1);
+        }
+    }
+    let gae_params = GaeParams::default();
+
+    println!(
+        "quant-fleet ablation: {} envs x {} codec arms, {n_requests} frames of \
+         [{t_len} x {batch}] planes each, through the live serving path\n",
+        ALL_ENVS.len(),
+        ARMS.len(),
+    );
+
+    let mut table = CsvTable::new(&[
+        "env", "exp", "precision", "dynamic_std", "block_std", "requests",
+        "mse", "max_abs_err", "saturation_rate", "code_utilization",
+        "reduction_vs_f32", "health", "req_per_sec",
+    ]);
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut bench_rows: Vec<Json> = Vec::new();
+
+    for (e, &env_name) in ALL_ENVS.iter().enumerate() {
+        let w = Workload::generate(env_name, n_requests, t_len, batch, 0xF1EE7 + e as u64);
+        for &arm in ARMS {
+            let r = run_row(env_name, arm, &w, &gae_params);
+            println!(
+                "{env_name:<14} {:<5} {}  sat {:.3}% util {:.0}% err(max) {:.2e} \
+                 mse {:.2e} red {:.2}x [{}] {:.0} req/s",
+                arm.label,
+                if arm.quantized { "q8 " } else { "f32" },
+                r.saturation_rate * 100.0,
+                r.code_utilization * 100.0,
+                r.server_max_abs_err,
+                r.server_mse,
+                r.reduction_vs_f32,
+                r.health,
+                r.req_per_sec,
+            );
+            let precision = if arm.quantized { "q8" } else { "f32" };
+            table.row(&[
+                env_name.to_string(),
+                arm.label.to_string(),
+                precision.to_string(),
+                arm.dynamic_std.to_string(),
+                arm.block_std.to_string(),
+                r.requests.to_string(),
+                format!("{:.6e}", r.server_mse),
+                format!("{:.6e}", r.server_max_abs_err),
+                format!("{:.6}", r.saturation_rate),
+                format!("{:.4}", r.code_utilization),
+                format!("{:.3}", r.reduction_vs_f32),
+                r.health.to_string(),
+                format!("{:.1}", r.req_per_sec),
+            ]);
+            let row = Json::obj(vec![
+                ("env", Json::from(env_name)),
+                ("exp", Json::from(arm.label)),
+                ("precision", Json::from(precision)),
+                ("dynamic_std", Json::from(arm.dynamic_std)),
+                ("block_std", Json::from(arm.block_std)),
+                ("requests", Json::from(r.requests)),
+                ("timesteps", Json::from(t_len)),
+                ("batch", Json::from(batch)),
+                ("err_elements", Json::from(r.err_elements as usize)),
+                ("client_mse", Json::from(r.client_mse)),
+                ("client_max_abs_err", Json::from(r.client_max_abs_err)),
+                ("server_mse", Json::from(r.server_mse)),
+                ("server_max_abs_err", Json::from(r.server_max_abs_err)),
+                ("saturation_rate", Json::from(r.saturation_rate)),
+                ("code_utilization", Json::from(r.code_utilization)),
+                ("reduction_vs_f32", Json::from(r.reduction_vs_f32)),
+                ("server_reduction_vs_f32", Json::from(r.server_reduction)),
+                ("health", Json::from(r.health)),
+                ("req_per_sec", Json::from(r.req_per_sec)),
+                ("mean_rtt_us", Json::from(r.mean_rtt_us)),
+            ]);
+            json_rows.push(row.to_string());
+            bench_rows.push(row);
+        }
+    }
+
+    println!("\n{}", table.to_markdown());
+    std::fs::create_dir_all("results")?;
+    table.save("results/quant_fleet.csv")?;
+    std::fs::write("results/quant_fleet.jsonl", json_rows.join("\n") + "\n")?;
+
+    // The repo-root trajectory entry (ROADMAP item 4a): one self-described
+    // document per run; the trajectory is this file's history.
+    let doc = Json::obj(vec![
+        ("bench", Json::from("quant_fleet")),
+        ("schema", Json::from(1usize)),
+        ("requests_per_row", Json::from(n_requests)),
+        ("timesteps", Json::from(t_len)),
+        ("batch", Json::from(batch)),
+        ("envs", Json::Arr(ALL_ENVS.iter().map(|&e| Json::from(e)).collect())),
+        ("rows", Json::Arr(bench_rows)),
+    ]);
+    let root_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_quant_fleet.json");
+    std::fs::write(root_path, doc.to_string() + "\n")?;
+    println!("-> results/quant_fleet.csv, results/quant_fleet.jsonl, BENCH_quant_fleet.json");
+    println!("quant_fleet OK");
+    Ok(())
+}

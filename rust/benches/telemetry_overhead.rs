@@ -10,6 +10,10 @@
 //! - **record_rotation** — the same call, but measured in the first
 //!   records *after a real second boundary*, so the window-slot reset
 //!   and threshold recompute fire inside the measured section.
+//! - **record_numerics** — `record_plane_numerics` for clean quantized
+//!   planes: the per-plane quantization-health accounting (shard +
+//!   tenant accumulators, windowed rings, Welford drift) every
+//!   quantized frame pays on encode/decode.
 //! - **record_traced_slow** — traced completions far above the
 //!   latency objective: each may promote its span tree into the
 //!   bounded exemplar store (the one legal allocation on this path).
@@ -18,9 +22,12 @@
 //!   path).
 //!
 //! The acceptance bars (enforced — the bench exits nonzero on
-//! failure): `record` and `record_rotation` perform **0 steady-state
-//! allocations** and gather **0 bytes** (everything lands in
-//! preallocated buckets in place); the traced-slow mode keeps the
+//! failure): `record`, `record_rotation`, and `record_numerics`
+//! perform **0 steady-state allocations** and gather **0 bytes**
+//! (everything lands in preallocated buckets in place — the one legal
+//! numerics allocation is the per-tenant accumulator box on a
+//! tenant's *first* plane, paid outside the measured section here);
+//! the traced-slow mode keeps the
 //! exemplar store **bounded** at its capacity while still retaining
 //! something. Emits the standard CSV and JSONL rows under `results/`.
 //!
@@ -191,7 +198,38 @@ fn main() -> anyhow::Result<()> {
     }
     row(&mut table, &mut json_rows, "record_rotation", n_rot, &r);
 
-    // 3. Traced tail traffic: promotions may allocate (span snapshot
+    // 3. The numerics record path: one pre-accumulated clean plane,
+    //    recorded repeatedly. The first record for a tenant boxes its
+    //    accumulator — warmed here — after which shard + tenant rings,
+    //    code-utilization bitmap, and Welford drift all update in
+    //    place. Zero allocations, same bar as the completion path.
+    let plane = {
+        use heppo::obs::numerics::PlaneNumerics;
+        let q = heppo::quant::UniformQuantizer::new(8);
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(0.1, 1.0);
+        for i in 0..2048u64 {
+            let z = ((i as f32) * 0.37).sin() * 3.0;
+            let code = q.quantize(z);
+            pn.note_code(code, 8);
+            pn.note_err((q.dequantize(code) - z).abs());
+        }
+        pn
+    };
+    for _ in 0..1_000.min(iters) {
+        m.record_plane_numerics("bench", &plane, 0);
+    }
+    let r = measure(iters, |_| m.record_plane_numerics("bench", &plane, 0));
+    if r.allocs_per_record != 0.0 {
+        println!(
+            "  FAIL: the numerics record path must not allocate in steady state, got {}",
+            r.allocs_per_record
+        );
+        ok = false;
+    }
+    row(&mut table, &mut json_rows, "record_numerics", iters, &r);
+
+    // 4. Traced tail traffic: promotions may allocate (span snapshot
     //    into the bounded store) — report the cost, and hold the store
     //    to its bound. As the window p99 adapts upward toward the slow
     //    cohort, promotions taper off: that is the design working.
@@ -214,7 +252,7 @@ fn main() -> anyhow::Result<()> {
     }
     row(&mut table, &mut json_rows, "record_traced_slow", n_slow, &r);
 
-    // 4. The scrape path, for scale: full snapshot + Prometheus render.
+    // 5. The scrape path, for scale: full snapshot + Prometheus render.
     //    Allocates freely — it runs per scrape, not per request.
     let n_render = 200.min(iters).max(1);
     let mut last_len = 0usize;
@@ -234,8 +272,8 @@ fn main() -> anyhow::Result<()> {
 
     anyhow::ensure!(ok, "telemetry_overhead bars failed (see FAIL lines above)");
     println!(
-        "telemetry_overhead OK: record path = 0 B gathered / 0 allocs (rotation included); \
-         exemplar store bounded at {DEFAULT_EXEMPLAR_CAPACITY}"
+        "telemetry_overhead OK: record + numerics paths = 0 B gathered / 0 allocs \
+         (rotation included); exemplar store bounded at {DEFAULT_EXEMPLAR_CAPACITY}"
     );
     Ok(())
 }

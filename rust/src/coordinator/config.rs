@@ -46,6 +46,11 @@ pub struct TrainerConfig {
     /// Diagnostics only (Fig. 2/7 data) — doubles rollout memory, so off
     /// by default.
     pub keep_raw_planes: bool,
+    /// JSONL learning-curve path (`--timeseries`): when set, the
+    /// trainer appends one
+    /// [`LearningHealthRecord`](crate::obs::timeseries::LearningHealthRecord)
+    /// per iteration. `None` = no time series written.
+    pub timeseries_path: Option<String>,
 }
 
 impl Default for TrainerConfig {
@@ -67,6 +72,7 @@ impl Default for TrainerConfig {
             pipeline: PipelineMode::Sequential,
             service_workers: 4,
             keep_raw_planes: false,
+            timeseries_path: None,
         }
     }
 }
@@ -112,6 +118,10 @@ impl TrainerConfig {
             pipeline,
             service_workers: args.get_or("service-workers", d.service_workers),
             keep_raw_planes: args.flag("keep-raw") || d.keep_raw_planes,
+            timeseries_path: args
+                .opt("timeseries")
+                .map(|s| s.to_string())
+                .or(d.timeseries_path),
         })
     }
 
@@ -171,6 +181,9 @@ impl TrainerConfig {
         }
         if let Some(v) = j.get("keep_raw_planes").and_then(Json::as_bool) {
             c.keep_raw_planes = v;
+        }
+        if let Some(v) = j.get("timeseries_path").and_then(Json::as_str) {
+            c.timeseries_path = Some(v.to_string());
         }
         Ok(c)
     }
@@ -247,6 +260,17 @@ mod tests {
         assert_eq!(c.backend, GaeBackend::HwSim);
         assert_eq!(c.quant_bits, 6);
         assert!(!c.standardize_advantages);
+    }
+
+    #[test]
+    fn timeseries_overlay() {
+        assert_eq!(TrainerConfig::default().timeseries_path, None);
+        let args = parse(&["train", "--timeseries", "results/curve.jsonl"]);
+        let c = TrainerConfig::from_args(&args).unwrap();
+        assert_eq!(c.timeseries_path.as_deref(), Some("results/curve.jsonl"));
+        let c =
+            TrainerConfig::from_json(r#"{"timeseries_path": "out.jsonl"}"#).unwrap();
+        assert_eq!(c.timeseries_path.as_deref(), Some("out.jsonl"));
     }
 
     #[test]

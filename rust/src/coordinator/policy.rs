@@ -67,6 +67,37 @@ pub fn sample(space: &ActionSpace, dist_row: &[f32], rng: &mut Rng) -> Sampled {
     }
 }
 
+/// log π(a|s) of an already-encoded action under a (possibly updated)
+/// distribution row — the post-update re-evaluation behind the
+/// approx-KL and clip-fraction learning-health scalars. Consumes no
+/// RNG, so emitting the diagnostics never perturbs a run's sampled
+/// trajectory. For continuous heads `encoded` is the raw pre-clip
+/// sample, exactly what [`sample`] scored, so
+/// `logp_of(space, same_row, &s.encoded) == s.logp` up to fp noise.
+pub fn logp_of(space: &ActionSpace, dist_row: &[f32], encoded: &[f32]) -> f32 {
+    match space {
+        ActionSpace::Discrete(n) => {
+            assert_eq!(dist_row.len(), *n, "logit width");
+            let a = encoded[0] as usize;
+            log_softmax(dist_row)[a]
+        }
+        ActionSpace::Continuous { dim, .. } => {
+            assert_eq!(dist_row.len(), 2 * dim, "mean/log_std width");
+            assert_eq!(encoded.len(), *dim, "encoded action width");
+            let (mean, log_std) = dist_row.split_at(*dim);
+            let mut logp = 0.0f64;
+            for k in 0..*dim {
+                let std = (log_std[k] as f64).exp();
+                let z = (encoded[k] as f64 - mean[k] as f64) / std;
+                logp += -0.5 * z * z
+                    - log_std[k] as f64
+                    - 0.5 * (2.0 * std::f64::consts::PI).ln();
+            }
+            logp as f32
+        }
+    }
+}
+
 /// Greedy (mode) action — used by evaluation rollouts.
 pub fn greedy(space: &ActionSpace, dist_row: &[f32]) -> Action {
     match space {
@@ -160,6 +191,34 @@ mod tests {
             _ => unreachable!(),
         }
         assert!(s.encoded[0] > 1.0, "raw sample must stay unclipped");
+    }
+
+    #[test]
+    fn logp_of_agrees_with_sample() {
+        check("logp_of matches sample", 30, |g| {
+            // Discrete head.
+            let n = g.usize_in(2, 6);
+            let logits = g.vec_normal_f32(n, 0.0, 2.0);
+            let space = ActionSpace::Discrete(n);
+            let s = sample(&space, &logits, g.rng());
+            assert!((logp_of(&space, &logits, &s.encoded) - s.logp).abs() < 1e-6);
+
+            // Continuous head (same row → identical; shifted row → lower
+            // logp for the same action, i.e. the KL numerator moves).
+            let dim = g.usize_in(1, 3);
+            let mut dist = g.vec_normal_f32(2 * dim, 0.0, 1.0);
+            for v in dist[dim..].iter_mut() {
+                *v = v.clamp(-1.0, 0.5);
+            }
+            let space = ActionSpace::Continuous { dim, low: -50.0, high: 50.0 };
+            let s = sample(&space, &dist, g.rng());
+            assert!((logp_of(&space, &dist, &s.encoded) - s.logp).abs() < 1e-4);
+            let mut shifted = dist.clone();
+            for v in shifted[..dim].iter_mut() {
+                *v += 10.0;
+            }
+            assert!(logp_of(&space, &shifted, &s.encoded) < s.logp);
+        });
     }
 
     #[test]

@@ -33,11 +33,15 @@ use super::config::TrainerConfig;
 use super::gae_stage::{codec_stage, run_gae_stage, GaeBackend, GaeResult};
 use super::phases::{PipelineLanes, SocPhase};
 use super::pipeline::PipelineMode;
-use super::ppo::{execute_update, prepare_update, update, Losses, NetState, UpdateParams};
+use super::ppo::{
+    execute_update, prepare_update, standardize_advantages, update, Losses, NetState,
+    UpdateParams,
+};
 use super::profiler::{Phase, PhaseProfiler};
 use super::rollout::{collect_into, CollectBuffers, Rollout};
 use crate::envs::vec_env::VecEnv;
 use crate::gae::GaeParams;
+use crate::obs::timeseries::{explained_variance, JsonlWriter, LearningHealthRecord};
 use crate::quant::RewardValueCodec;
 use crate::runtime::{Runtime, Tensor};
 use crate::service::{GaeService, ServiceConfig};
@@ -86,6 +90,8 @@ pub struct Trainer {
     collect_bufs: CollectBuffers,
     /// In-process GAE service (`Overlapped` mode only).
     service: Option<GaeService>,
+    /// Learning-curve JSONL sink (`--timeseries` only).
+    timeseries: Option<JsonlWriter>,
 }
 
 impl Trainer {
@@ -121,6 +127,10 @@ impl Trainer {
                 })?)
             }
         };
+        let timeseries = match &config.timeseries_path {
+            Some(path) => Some(JsonlWriter::create(path)?),
+            None => None,
+        };
         Ok(Trainer {
             policy_artifact: format!("{}_policy_fwd", config.env),
             train_artifact: format!("{}_train_step", config.env),
@@ -137,6 +147,7 @@ impl Trainer {
             scratch: Rollout::empty(),
             collect_bufs: CollectBuffers::new(geo.num_envs, geo.rollout_t),
             service,
+            timeseries,
             envs,
             runtime,
             config,
@@ -305,14 +316,113 @@ impl Trainer {
             }
         };
         self.profiler.add_iteration_wall(wall_start.elapsed());
-        Ok(IterStats {
+        let stats = IterStats {
             iter,
             steps: self.steps,
             mean_return: self.rolling_return.mean(),
             episodes: self.episodes,
             losses,
             hw_cycles: gae.hw_cycles,
+        };
+        if self.timeseries.is_some() {
+            let record = self.learning_health(&stats, &gae)?;
+            if let Some(w) = self.timeseries.as_mut() {
+                w.write(&record.to_json())?;
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Build the per-iteration learning-health row from the rollout just
+    /// stored in `scratch` and its GAE result. The approx-KL and
+    /// clip-fraction scalars re-evaluate the *updated* policy over the
+    /// rollout observations ([`super::policy::logp_of`] consumes no
+    /// RNG), so emitting the time series never perturbs the run's
+    /// sampled trajectory — sequential/overlapped bit-equivalence
+    /// holds with diagnostics on or off.
+    fn learning_health(
+        &mut self,
+        stats: &IterStats,
+        gae: &GaeResult,
+    ) -> anyhow::Result<LearningHealthRecord> {
+        fn moments(xs: &[f32]) -> (f32, f32) {
+            if xs.is_empty() {
+                return (0.0, 0.0);
+            }
+            let n = xs.len() as f64;
+            let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+            let var =
+                xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+            (mean as f32, var.sqrt() as f32)
+        }
+        let rollout = &self.scratch;
+        let n = rollout.transitions();
+        let (adv_mean_pre, adv_std_pre) = moments(&gae.advantages);
+        let (adv_mean_post, adv_std_post) = if self.config.standardize_advantages {
+            let mut post = gae.advantages.clone();
+            standardize_advantages(&mut post);
+            moments(&post)
+        } else {
+            (adv_mean_pre, adv_std_pre)
+        };
+        // The critic's per-transition predictions are the first T rows of
+        // the value plane (row T+1 only bootstraps), post-codec — exactly
+        // what the update consumed.
+        let value_explained_variance =
+            explained_variance(&gae.rewards_to_go, &rollout.values[..n]);
+
+        // Post-update policy over the same observations, one forward per
+        // timestep (the artifact's batch dimension is the env count).
+        let exe = self.runtime.load(&self.policy_artifact)?;
+        let space = self.envs.action_space().clone();
+        let num_envs = rollout.batch;
+        let obs_dim = rollout.obs_dim;
+        let aw = rollout.act_width;
+        let params_lit = Tensor::vec1(self.state.params.clone()).to_literal()?;
+        let mut kl_sum = 0.0f64;
+        let mut clipped = 0usize;
+        for t in 0..rollout.t_len {
+            let obs = &rollout.obs[t * num_envs * obs_dim..(t + 1) * num_envs * obs_dim];
+            let obs_lit = Tensor::new(obs.to_vec(), vec![num_envs, obs_dim]).to_literal()?;
+            let out = exe.call_literals(&[&params_lit, &obs_lit])?;
+            let width = out[0].data.len() / num_envs;
+            for b in 0..num_envs {
+                let row = t * num_envs + b;
+                let dist = &out[0].data[b * width..(b + 1) * width];
+                let new_lp = super::policy::logp_of(
+                    &space,
+                    dist,
+                    &rollout.actions[row * aw..(row + 1) * aw],
+                );
+                let old_lp = rollout.logp[row];
+                kl_sum += (old_lp - new_lp) as f64;
+                let ratio = ((new_lp - old_lp) as f64).exp();
+                if (ratio - 1.0).abs() > self.config.clip_eps as f64 {
+                    clipped += 1;
+                }
+            }
+        }
+        Ok(LearningHealthRecord {
+            iter: stats.iter,
+            env_steps: stats.steps as u64,
+            episodes: stats.episodes as u64,
+            mean_return: stats.mean_return as f32,
+            pi_loss: stats.losses.pi_loss,
+            v_loss: stats.losses.v_loss,
+            entropy: stats.losses.entropy,
+            adv_mean_pre,
+            adv_std_pre,
+            adv_mean_post,
+            adv_std_post,
+            value_explained_variance,
+            approx_kl: (kl_sum / n.max(1) as f64) as f32,
+            clip_fraction: clipped as f32 / n.max(1) as f32,
         })
+    }
+
+    /// Learning-health rows written so far (`--timeseries` only).
+    pub fn timeseries_records(&self) -> u64 {
+        self.timeseries.as_ref().map(|w| w.records_written()).unwrap_or(0)
     }
 
     /// Run `iters` iterations, returning per-iteration stats.

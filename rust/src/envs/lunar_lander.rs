@@ -1,0 +1,266 @@
+//! LunarLander-v2 (simplified, no Box2D): soft-land a thrust-vectoring
+//! module on a pad at the origin.
+//!
+//! A rigid-body point-mass port of Gymnasium's LunarLander: same
+//! Discrete(4) action set {noop, left engine, main engine, right
+//! engine}, same 8-dim observation (position, velocity, attitude,
+//! angular rate, leg contacts) and the same potential-based shaping
+//! reward with fuel costs and ±100 terminal bonus — but the contact
+//! dynamics are analytic (flat terrain at `y = 0`) instead of a physics
+//! engine, which keeps the env dependency-free and deterministic.
+
+use super::{Action, ActionSpace, Env, Step};
+use crate::util::Rng;
+
+const DT: f32 = 0.05;
+/// Gravitational acceleration (scaled units, like Gym's viewport scale).
+const GRAVITY: f32 = 1.2;
+/// Main-engine acceleration along the body's up vector.
+const MAIN_THRUST: f32 = 2.4;
+/// Side-engine lateral acceleration.
+const SIDE_THRUST: f32 = 0.6;
+/// Side-engine angular acceleration.
+const SIDE_TORQUE: f32 = 3.0;
+/// Passive attitude damping (the simplified stand-in for Box2D's
+/// angular friction — without it the lander spins up unboundedly).
+const ANGULAR_DAMPING: f32 = 0.4;
+const MAX_STEPS: usize = 400;
+/// Half-width of the landing pad.
+const PAD_HALF_WIDTH: f32 = 0.3;
+
+/// Simplified lunar lander state.
+#[derive(Debug, Clone)]
+pub struct LunarLander {
+    x: f32,
+    y: f32,
+    vx: f32,
+    vy: f32,
+    th: f32,
+    dth: f32,
+    steps: usize,
+    prev_shaping: Option<f32>,
+}
+
+impl LunarLander {
+    pub fn new() -> Self {
+        LunarLander {
+            x: 0.0,
+            y: 1.3,
+            vx: 0.0,
+            vy: 0.0,
+            th: 0.0,
+            dth: 0.0,
+            steps: 0,
+            prev_shaping: None,
+        }
+    }
+
+    fn legs_down(&self) -> bool {
+        self.y <= 0.02
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let contact = if self.legs_down() { 1.0 } else { 0.0 };
+        vec![self.x, self.y, self.vx, self.vy, self.th, self.dth, contact, contact]
+    }
+
+    /// Gym's potential: closer / slower / more upright is better, with a
+    /// bonus per leg on the ground.
+    fn shaping(&self) -> f32 {
+        let contact = if self.legs_down() { 1.0 } else { 0.0 };
+        -100.0 * (self.x * self.x + self.y * self.y).sqrt()
+            - 100.0 * (self.vx * self.vx + self.vy * self.vy).sqrt()
+            - 100.0 * self.th.abs()
+            + 10.0 * contact
+            + 10.0 * contact
+    }
+}
+
+impl Default for LunarLander {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Env for LunarLander {
+    fn name(&self) -> &'static str {
+        "lunar_lander"
+    }
+
+    fn obs_dim(&self) -> usize {
+        8
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        ActionSpace::Discrete(4)
+    }
+
+    fn reset(&mut self, rng: &mut Rng) -> Vec<f32> {
+        self.x = rng.uniform_f32(-0.2, 0.2);
+        self.y = 1.3;
+        self.vx = rng.uniform_f32(-0.3, 0.3);
+        self.vy = rng.uniform_f32(-0.4, 0.0);
+        self.th = rng.uniform_f32(-0.1, 0.1);
+        self.dth = rng.uniform_f32(-0.1, 0.1);
+        self.steps = 0;
+        self.prev_shaping = None;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action, _rng: &mut Rng) -> Step {
+        let a = match action {
+            Action::Discrete(a) => *a,
+            Action::Continuous(_) => panic!("lunar_lander takes discrete actions"),
+        };
+        let mut fuel = 0.0f32;
+        let mut ax = 0.0f32;
+        let mut ay = -GRAVITY;
+        let mut ath = -ANGULAR_DAMPING * self.dth;
+        match a {
+            1 => {
+                // Left engine: pushes the lander rightward, torques CCW.
+                ax += SIDE_THRUST * self.th.cos();
+                ay += SIDE_THRUST * self.th.sin();
+                ath += SIDE_TORQUE;
+                fuel = 0.03;
+            }
+            2 => {
+                // Main engine: thrust along the body's up vector.
+                ax += -MAIN_THRUST * self.th.sin();
+                ay += MAIN_THRUST * self.th.cos();
+                fuel = 0.30;
+            }
+            3 => {
+                // Right engine: mirror of the left.
+                ax -= SIDE_THRUST * self.th.cos();
+                ay -= SIDE_THRUST * self.th.sin();
+                ath -= SIDE_TORQUE;
+                fuel = 0.03;
+            }
+            _ => {}
+        }
+        self.vx = (self.vx + DT * ax).clamp(-5.0, 5.0);
+        self.vy = (self.vy + DT * ay).clamp(-5.0, 5.0);
+        self.dth = (self.dth + DT * ath).clamp(-5.0, 5.0);
+        self.x += DT * self.vx;
+        self.y += DT * self.vy;
+        self.th += DT * self.dth;
+        self.steps += 1;
+
+        let shaping = self.shaping();
+        let mut reward =
+            self.prev_shaping.map(|p| shaping - p).unwrap_or(0.0) - fuel;
+        self.prev_shaping = Some(shaping);
+
+        let mut done = false;
+        if self.y <= 0.0 {
+            // Touchdown: gentle, upright, and on the pad is a landing;
+            // anything else is a crash.
+            done = true;
+            let gentle = self.vy.abs() < 1.0
+                && self.vx.abs() < 0.6
+                && self.th.abs() < 0.4
+                && self.x.abs() < PAD_HALF_WIDTH;
+            reward += if gentle { 100.0 } else { -100.0 };
+        } else if self.x.abs() > 1.5 || self.y > 2.5 {
+            // Flew off the viewport.
+            done = true;
+            reward += -100.0;
+        } else if self.steps >= MAX_STEPS {
+            done = true;
+        }
+        Step { obs: self.obs(), reward, done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::conformance::check_env;
+
+    #[test]
+    fn conformance() {
+        check_env(Box::new(LunarLander::new()), MAX_STEPS);
+    }
+
+    #[test]
+    fn free_fall_reaches_the_ground() {
+        let mut env = LunarLander::new();
+        let mut rng = Rng::new(1);
+        env.reset(&mut rng);
+        let mut last = None;
+        for _ in 0..MAX_STEPS {
+            let s = env.step(&Action::Discrete(0), &mut rng);
+            let done = s.done;
+            last = Some(s);
+            if done {
+                break;
+            }
+        }
+        let last = last.unwrap();
+        assert!(last.done, "gravity must end the episode");
+        assert!(env.y <= 0.0, "must have hit the ground, y={}", env.y);
+        assert!(env.vy < 0.0, "still descending at touchdown");
+    }
+
+    #[test]
+    fn main_engine_counteracts_gravity() {
+        let mut env = LunarLander::new();
+        let mut rng = Rng::new(2);
+        env.reset(&mut rng);
+        env.th = 0.0;
+        env.dth = 0.0;
+        env.vy = 0.0;
+        for _ in 0..20 {
+            env.step(&Action::Discrete(2), &mut rng);
+        }
+        // MAIN_THRUST > GRAVITY, so sustained burn gains upward speed.
+        assert!(env.vy > 0.0, "burn must arrest the descent, vy={}", env.vy);
+    }
+
+    #[test]
+    fn side_engines_torque_in_opposite_directions() {
+        let mut rng = Rng::new(3);
+        let mut left = LunarLander::new();
+        left.reset(&mut rng);
+        left.th = 0.0;
+        left.dth = 0.0;
+        let mut right = left.clone();
+        left.step(&Action::Discrete(1), &mut rng);
+        right.step(&Action::Discrete(3), &mut rng);
+        assert!(left.dth > 0.0, "left engine torques CCW, dth={}", left.dth);
+        assert!(right.dth < 0.0, "right engine torques CW, dth={}", right.dth);
+    }
+
+    #[test]
+    fn gentle_pad_touchdown_scores_the_landing_bonus() {
+        let mut env = LunarLander::new();
+        let mut rng = Rng::new(4);
+        env.reset(&mut rng);
+        // Hand-place a perfect final approach.
+        env.x = 0.0;
+        env.y = 0.01;
+        env.vx = 0.0;
+        env.vy = -0.3;
+        env.th = 0.0;
+        env.dth = 0.0;
+        env.prev_shaping = Some(env.shaping());
+        let s = env.step(&Action::Discrete(0), &mut rng);
+        assert!(s.done);
+        assert!(s.reward > 50.0, "landing bonus missing, reward={}", s.reward);
+    }
+
+    #[test]
+    fn hard_crash_scores_the_penalty() {
+        let mut env = LunarLander::new();
+        let mut rng = Rng::new(5);
+        env.reset(&mut rng);
+        env.x = 1.0; // far off the pad
+        env.y = 0.01;
+        env.vy = -4.0;
+        env.prev_shaping = Some(env.shaping());
+        let s = env.step(&Action::Discrete(0), &mut rng);
+        assert!(s.done);
+        assert!(s.reward < -50.0, "crash penalty missing, reward={}", s.reward);
+    }
+}

@@ -15,6 +15,7 @@
 pub mod acrobot;
 pub mod cartpole;
 pub mod humanoid_lite;
+pub mod lunar_lander;
 pub mod mountain_car;
 pub mod pendulum;
 pub mod vec_env;
@@ -80,14 +81,21 @@ pub fn make_env(name: &str) -> anyhow::Result<Box<dyn Env>> {
         "pendulum" => Box::new(pendulum::Pendulum::new()),
         "acrobot" => Box::new(acrobot::Acrobot::new()),
         "mountain_car" => Box::new(mountain_car::MountainCarContinuous::new()),
+        "lunar_lander" => Box::new(lunar_lander::LunarLander::new()),
         "humanoid_lite" => Box::new(humanoid_lite::HumanoidLite::new()),
         other => anyhow::bail!("unknown env {other:?}"),
     })
 }
 
 /// Names of all bundled environments.
-pub const ALL_ENVS: &[&str] =
-    &["cartpole", "pendulum", "acrobot", "mountain_car", "humanoid_lite"];
+pub const ALL_ENVS: &[&str] = &[
+    "cartpole",
+    "pendulum",
+    "acrobot",
+    "mountain_car",
+    "lunar_lander",
+    "humanoid_lite",
+];
 
 #[cfg(test)]
 pub(crate) mod conformance {

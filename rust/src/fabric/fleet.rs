@@ -49,7 +49,11 @@ impl ShardStatus {
             return SloHealth::Critical;
         }
         match &self.service {
-            Some(m) => m.slo.health,
+            // A saturating quantizer is an objective violation the
+            // latency burn rates cannot see — the numerics verdict
+            // folds into the same chain, worst wins, so one tenant's
+            // clipping planes page fleet-wide within a window.
+            Some(m) => m.slo.health.max(m.numerics.health.to_slo()),
             None => SloHealth::Warn,
         }
     }
@@ -130,6 +134,15 @@ pub fn merge_tenants<'a>(
                 m.shed += t.shed;
                 m.quota_shed += t.quota_shed;
                 m.auth_rejected += t.auth_rejected;
+                m.quant_planes += t.quant_planes;
+                m.quant_elements += t.quant_elements;
+                m.quant_clipped += t.quant_clipped;
+                // Rates and verdicts don't sum: an operator pages on
+                // the tenant's worst shard.
+                m.quant_saturation_1s = m.quant_saturation_1s.max(t.quant_saturation_1s);
+                m.numerics_health = m.numerics_health.max(t.numerics_health);
+                m.wire_payload_bytes += t.wire_payload_bytes;
+                m.wire_f32_bytes += t.wire_f32_bytes;
             }
             None => {
                 merged.insert(t.tenant.clone(), t.clone());
@@ -169,13 +182,23 @@ impl fmt::Display for FleetSnapshot {
                 match &s.service {
                     Some(m) => {
                         let w = m.window(10);
+                        let numerics = if m.numerics.planes > 0 {
+                            format!(
+                                " | num:{} sat(1s) {:.2}%",
+                                m.numerics.health.as_str(),
+                                m.numerics.window(1).saturation_rate * 100.0,
+                            )
+                        } else {
+                            String::new()
+                        };
                         format!(
-                            " | {} elem, queue {}, shed {} | {:.1} rps / p99 {:.0}µs (10s)",
+                            " | {} elem, queue {}, shed {} | {:.1} rps / p99 {:.0}µs (10s){}",
                             m.elements,
                             m.queue_depth,
                             m.shed,
                             w.rate_rps,
                             w.total_us.p99,
+                            numerics,
                         )
                     }
                     None => " | remote".to_string(),
@@ -210,6 +233,13 @@ mod tests {
             shed: 0,
             quota_shed: 0,
             auth_rejected: 0,
+            quant_planes: 0,
+            quant_elements: 0,
+            quant_clipped: 0,
+            quant_saturation_1s: 0.0,
+            numerics_health: crate::obs::numerics::NumericsHealth::Ok,
+            wire_payload_bytes: 0,
+            wire_f32_bytes: 0,
         }
     }
 
@@ -305,5 +335,42 @@ mod tests {
         let fleet = FleetSnapshot::aggregate(vec![ok, down]);
         assert_eq!(fleet.health, SloHealth::Critical);
         assert!(fleet.to_string().contains("slo:critical"), "{fleet}");
+    }
+
+    #[test]
+    fn numerics_verdict_folds_into_fleet_health() {
+        use crate::obs::numerics::{NumericsHealth, PlaneNumerics};
+        // One shard whose quantizer is saturating: its SLO burn rates
+        // are clean, but the numerics verdict must page the fleet.
+        let m = crate::service::ServiceMetrics::new();
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(0.0, 1.0);
+        for i in 0..512u16 {
+            // Every 8th element on an end code → 12.5% saturation.
+            pn.note_code(if i % 8 == 0 { 255 } else { 100 + i % 16 }, 8);
+        }
+        m.record_plane_numerics("hot", &pn, 0);
+        let snap = m.snapshot(crate::service::SnapshotInputs::default());
+        assert_eq!(snap.numerics.health, NumericsHealth::Critical);
+
+        let saturating = ShardStatus {
+            label: "s-sat".to_string(),
+            healthy: true,
+            submitted: 1,
+            completed: 1,
+            failed_over: 0,
+            service: Some(snap),
+        };
+        assert_eq!(saturating.slo_health(), SloHealth::Critical);
+        let fleet = FleetSnapshot::aggregate(vec![status("s-ok", 2, vec![]), saturating]);
+        assert_eq!(fleet.health, SloHealth::Critical);
+        assert!(fleet.to_string().contains("num:critical"), "{fleet}");
+
+        // The saturating tenant's row survives the fleet merge with its
+        // verdict and counters intact.
+        let t = fleet.tenants.iter().find(|t| t.tenant == "hot").unwrap();
+        assert_eq!(t.quant_planes, 1);
+        assert_eq!(t.quant_elements, 512);
+        assert_eq!(t.numerics_health, NumericsHealth::Critical);
     }
 }

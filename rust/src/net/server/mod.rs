@@ -450,6 +450,17 @@ fn process_request(req: LazyRequest<'_>, shared: &Shared) -> FrameOutcome {
         }
     };
 
+    // Past auth and quota the payload is this deployment's to serve:
+    // account its wire size against the f32 equivalent so the memory
+    // reduction the codec buys is a lifetime aggregate, not just a
+    // per-frame number (cache hits included — their bytes crossed the
+    // wire all the same).
+    shared.service.metrics_handle().record_wire_frame(
+        tenant,
+        req.payload_bytes as u64,
+        wire::f32_payload_bytes(t_len, batch) as u64,
+    );
+
     // 2. Cache: identical quantized payloads from the *same tenant*
     //    replay the stored result — the key folds the tenant id into
     //    the raw-packed-bytes hash (computed only now; a quota refusal
@@ -484,8 +495,13 @@ fn process_request(req: LazyRequest<'_>, shared: &Shared) -> FrameOutcome {
     }
 
     // 3. Deferred decode + admission: only frames that compute pay the
-    //    dequantize; the planes then move (zero-copy) into the service.
-    let (rewards, values, done_mask) = req.decode_planes();
+    //    dequantize; the decode loop doubles as the quantization-health
+    //    measurement point (codes, saturation, wire (μ,σ)), and the
+    //    planes then move (zero-copy) into the service.
+    let (rewards, values, done_mask, rewards_pn, values_pn) = req.decode_planes_observed();
+    for pn in [&rewards_pn, &values_pn].into_iter().flatten() {
+        shared.service.metrics_handle().record_plane_numerics(tenant, pn, trace);
+    }
     let planes = match PlaneSet::new(t_len, batch, rewards, values, done_mask) {
         Ok(planes) => planes,
         Err(e) => {
@@ -572,7 +588,7 @@ pub(crate) fn complete_inflight(inflight: InFlight, shared: &Shared) -> Vec<u8> 
             // see (the frame is built after its reply was sent).
             let encode_span = crate::obs::span("server.encode", inflight.trace);
             let encode_start = std::time::Instant::now();
-            let frame = wire::encode_response(
+            let encoded = wire::encode_response_observed(
                 inflight.seq,
                 cached.t_len,
                 cached.batch,
@@ -585,7 +601,18 @@ pub(crate) fn complete_inflight(inflight: InFlight, shared: &Shared) -> Vec<u8> 
             );
             shared.service.metrics_handle().record_encode(encode_start.elapsed());
             drop(encode_span);
-            frame
+            // Response-side quantization health: the encode loop above
+            // saw both the f32 planes and their codes, so its error
+            // measurements land in the same per-tenant accumulators as
+            // the request side's.
+            let metrics = shared.service.metrics_handle();
+            for pn in [&encoded.advantages_numerics, &encoded.rewards_to_go_numerics]
+                .into_iter()
+                .flatten()
+            {
+                metrics.record_plane_numerics(&inflight.tenant, pn, inflight.trace);
+            }
+            encoded.bytes
         }
         Err(ServiceError::ShuttingDown) => wire::encode_error(
             inflight.seq,

@@ -118,6 +118,13 @@
 //! pair. Version 6 added the request-header auth tag (flag bit 1), the
 //! `Auth` error code, the `auth_rejected`/`auth_conns_closed` counters
 //! to the metrics body, and a per-tenant `auth_rejected` column.
+//! Version 7 appended the numerics-observability section to the
+//! metrics body: lifetime wire payload/f32 byte counters, the
+//! quantization-health block (lifetime error/saturation counters, the
+//! per-plane-σ Welford moments, three windowed numerics views, the
+//! `NumericsHealth` verdict and saturated-exemplar count), and the
+//! per-tenant wire-byte + quantization-health columns; it also added
+//! the `Saturated` exemplar retain reason (code 4).
 //!
 //! ## Accounting
 //!
@@ -141,6 +148,7 @@
 //! shape) is the lazy parse plus an immediate `decode_planes`, so both
 //! paths accept exactly the same frames by construction.
 
+use crate::obs::numerics::{NumericsHealth, NumericsSnapshot, NumericsWindow, PlaneNumerics};
 use crate::obs::slo::{SloHealth, SloReport};
 use crate::obs::telemetry::{Exemplar, ExemplarMeta, RetainReason};
 use crate::obs::trace::EventKind;
@@ -153,11 +161,12 @@ use std::time::Duration;
 
 /// Frame magic: `"HGAE"`.
 pub const MAGIC: [u8; 4] = *b"HGAE";
-/// Current protocol version. v6 added the request-header auth tag
-/// (tenant HMAC token), the `Auth` error code, and the auth counters in
-/// the metrics RPC body — any layout change bumps this byte, even an
-/// appended field, because the decoder reads by offset, not by name.
-pub const VERSION: u8 = 6;
+/// Current protocol version. v7 appended the numerics-observability
+/// section (wire byte counters, the quantization-health block, and the
+/// per-tenant numerics columns) to the metrics RPC body — any layout
+/// change bumps this byte, even an appended field, because the decoder
+/// reads by offset, not by name.
+pub const VERSION: u8 = 7;
 /// Upper bound on a single frame (sanity guard against corrupt length
 /// prefixes allocating unbounded buffers).
 pub const MAX_FRAME_BYTES: usize = 256 << 20;
@@ -525,12 +534,29 @@ impl LazyRequest<'_> {
     /// bit-exact for the f32 escape hatch — exactly as [`decode_frame`]
     /// would have produced).
     pub fn decode_planes(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (rewards, values, done_mask, _, _) = self.decode_planes_observed();
+        (rewards, values, done_mask)
+    }
+
+    /// [`Self::decode_planes`] plus the decode-side [`PlaneNumerics`]
+    /// for the rewards and values planes (`None` each when the request
+    /// traveled as f32) — the server front-ends' shape, feeding the live
+    /// quantization-health accumulators.
+    #[allow(clippy::type_complexity)]
+    pub fn decode_planes_observed(
+        &self,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Option<PlaneNumerics>, Option<PlaneNumerics>) {
         let quantized = codec_is_quantized(self.codec);
         let q = UniformQuantizer::new(if quantized { self.bits } else { 8 });
         let n = self.t_len * self.batch;
-        let rewards = dequantize_plane(self.rewards_raw, n, quantized, &q);
-        let values =
-            dequantize_plane(self.values_raw, (self.t_len + 1) * self.batch, quantized, &q);
+        let (rewards, rewards_pn) =
+            dequantize_plane_observed(self.rewards_raw, n, quantized, &q);
+        let (values, values_pn) = dequantize_plane_observed(
+            self.values_raw,
+            (self.t_len + 1) * self.batch,
+            quantized,
+            &q,
+        );
         let done_mask = (0..n)
             .map(|j| {
                 if (self.done_raw[j / 8] >> (j % 8)) & 1 == 1 {
@@ -540,7 +566,7 @@ impl LazyRequest<'_> {
                 }
             })
             .collect();
-        (rewards, values, done_mask)
+        (rewards, values, done_mask, rewards_pn, values_pn)
     }
 
     /// Full materialization into the eager [`RequestFrame`] shape.
@@ -589,6 +615,15 @@ pub struct EncodedRequest {
     /// Payload-section bytes the f32 escape hatch would use for the same
     /// geometry.
     pub f32_payload_bytes: usize,
+    /// Quantization-health measurements of the rewards plane, taken in
+    /// the encode loop where the f32 and coded representations coexist
+    /// (`None` under the f32 escape hatch). Reconstruction error is in
+    /// plane units — exactly what the decoder will reconstruct, so a
+    /// client can compare its own numbers against the server's live
+    /// counters.
+    pub rewards_numerics: Option<PlaneNumerics>,
+    /// Same for the values plane.
+    pub values_numerics: Option<PlaneNumerics>,
 }
 
 impl EncodedRequest {
@@ -686,20 +721,44 @@ fn finish_frame(frame_type: u8, body: &[u8]) -> Vec<u8> {
 }
 
 fn encode_plane(out: &mut Vec<u8>, data: &[f32], quantized: bool, q: &UniformQuantizer) {
+    encode_plane_observed(out, data, quantized, q);
+}
+
+/// [`encode_plane`] plus inline numerics: the encode loop is the one
+/// place the original f32 plane and its codes coexist, so saturation,
+/// code usage, and reconstruction error (in plane units — the code is
+/// dequantized through the same `(μ, σ)` the decoder will use) are
+/// measured here for free and returned for the caller to record
+/// ([`crate::obs::numerics`]). `None` under the f32 escape hatch.
+fn encode_plane_observed(
+    out: &mut Vec<u8>,
+    data: &[f32],
+    quantized: bool,
+    q: &UniformQuantizer,
+) -> Option<PlaneNumerics> {
     if !quantized {
         for &x in data {
             put_f32(out, x);
         }
-        return;
+        return None;
     }
     let stats = BlockStats::of(data);
     put_f32(out, stats.mean);
     put_f32(out, stats.std);
+    let mut pn = PlaneNumerics::default();
+    pn.set_block(stats.mean, stats.std);
     let codes: Vec<u16> = data
         .iter()
-        .map(|&x| q.quantize((x - stats.mean) / stats.std))
+        .map(|&x| {
+            let z = (x - stats.mean) / stats.std;
+            let code = q.quantize(z);
+            pn.note_code(code, q.bits);
+            pn.note_err((q.dequantize(code) - z).abs() * stats.std);
+            code
+        })
         .collect();
     out.extend_from_slice(&q.pack(&codes));
+    Some(pn)
 }
 
 fn encode_done_bitset(out: &mut Vec<u8>, done_mask: &[f32]) {
@@ -831,8 +890,8 @@ pub fn encode_request_signed(
     body.push(bits);
     put_u32(&mut body, t_len as u32);
     put_u32(&mut body, batch as u32);
-    encode_plane(&mut body, rewards, quantized, &q);
-    encode_plane(&mut body, values, quantized, &q);
+    let rewards_numerics = encode_plane_observed(&mut body, rewards, quantized, &q);
+    let values_numerics = encode_plane_observed(&mut body, values, quantized, &q);
     encode_done_bitset(&mut body, done_mask);
     let payload_bytes = body.len() - payload_start;
 
@@ -844,6 +903,8 @@ pub fn encode_request_signed(
         bytes: finish_frame(FRAME_TYPE_REQUEST, &body),
         payload_bytes,
         f32_payload_bytes: f32_payload_bytes(t_len, batch),
+        rewards_numerics,
+        values_numerics,
     })
 }
 
@@ -866,6 +927,49 @@ pub fn encode_response(
     resp: PlaneCodec,
     trace: u64,
 ) -> Vec<u8> {
+    encode_response_observed(
+        seq,
+        t_len,
+        batch,
+        advantages,
+        rewards_to_go,
+        hw_cycles,
+        cache_hit,
+        resp,
+        trace,
+    )
+    .bytes
+}
+
+/// An encoded response plus the per-plane numerics its encode loop
+/// measured (`None` planes under the f32 escape hatch or the non-finite
+/// fallback).
+#[derive(Debug, Clone)]
+pub struct EncodedResponse {
+    /// Length-prefixed wire bytes, ready to write.
+    pub bytes: Vec<u8>,
+    /// Quantization-health of the advantages plane, if it traveled
+    /// quantized.
+    pub advantages_numerics: Option<PlaneNumerics>,
+    /// Same for the rewards-to-go plane.
+    pub rewards_to_go_numerics: Option<PlaneNumerics>,
+}
+
+/// [`encode_response`] plus inline numerics — the server front-ends'
+/// shape, so the response-side quantization error lands in the live
+/// accumulators the same way the request side's does.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_response_observed(
+    seq: u64,
+    t_len: usize,
+    batch: usize,
+    advantages: &[f32],
+    rewards_to_go: &[f32],
+    hw_cycles: Option<u64>,
+    cache_hit: bool,
+    resp: PlaneCodec,
+    trace: u64,
+) -> EncodedResponse {
     debug_assert_eq!(advantages.len(), t_len * batch);
     debug_assert_eq!(rewards_to_go.len(), t_len * batch);
     let finite = |d: &[f32]| d.iter().all(|x| x.is_finite());
@@ -897,12 +1001,14 @@ pub fn encode_response(
     if trace != 0 {
         put_u64(&mut body, trace);
     }
+    let mut advantages_numerics = None;
+    let mut rewards_to_go_numerics = None;
     if quantized {
         body.push(resp.kind.index() as u8);
         body.push(resp.bits);
         let q = UniformQuantizer::new(resp.bits);
-        encode_plane(&mut body, advantages, true, &q);
-        encode_plane(&mut body, rewards_to_go, true, &q);
+        advantages_numerics = encode_plane_observed(&mut body, advantages, true, &q);
+        rewards_to_go_numerics = encode_plane_observed(&mut body, rewards_to_go, true, &q);
     } else {
         for &x in advantages {
             put_f32(&mut body, x);
@@ -911,7 +1017,11 @@ pub fn encode_response(
             put_f32(&mut body, x);
         }
     }
-    finish_frame(FRAME_TYPE_RESPONSE, &body)
+    EncodedResponse {
+        bytes: finish_frame(FRAME_TYPE_RESPONSE, &body),
+        advantages_numerics,
+        rewards_to_go_numerics,
+    }
 }
 
 /// Encode a typed error frame (message truncated at 1 KiB).
@@ -968,6 +1078,39 @@ fn put_exemplar_meta(out: &mut Vec<u8>, m: &ExemplarMeta) {
     put_u64(out, m.when_sec);
 }
 
+fn put_numerics_window(out: &mut Vec<u8>, w: &NumericsWindow) {
+    put_u64(out, w.span_secs);
+    put_u64(out, w.planes);
+    put_u64(out, w.elements);
+    put_u64(out, w.clipped);
+    put_u64(out, w.err_elements);
+    put_f64(out, w.mse);
+    put_f64(out, w.max_abs_err);
+    put_u32(out, w.codes_used);
+    put_f64(out, w.code_utilization);
+    put_f64(out, w.sigma_mean);
+    put_f64(out, w.mu_mean);
+    put_f64(out, w.sigma_drift);
+    put_f64(out, w.saturation_rate);
+}
+
+fn put_numerics(out: &mut Vec<u8>, n: &NumericsSnapshot) {
+    put_u64(out, n.planes);
+    put_u64(out, n.elements);
+    put_u64(out, n.clipped);
+    put_u64(out, n.err_elements);
+    put_f64(out, n.sum_sq_err);
+    put_f64(out, n.max_abs_err);
+    put_f64(out, n.sigma_mean);
+    put_f64(out, n.sigma_std);
+    put_f64(out, n.mu_mean);
+    for w in &n.windows {
+        put_numerics_window(out, w);
+    }
+    out.push(n.health.code());
+    put_u64(out, n.saturated_exemplars);
+}
+
 /// Encode a [`MetricsSnapshot`] reply (the fleet metrics RPC's response
 /// half). Field order is the snapshot's declaration order; durations
 /// travel as u64 nanoseconds, f64s as `to_bits`.
@@ -984,6 +1127,8 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
     put_u64(&mut body, s.slow_closed);
     put_u64(&mut body, s.auth_rejected);
     put_u64(&mut body, s.auth_conns_closed);
+    put_u64(&mut body, s.wire_payload_bytes);
+    put_u64(&mut body, s.wire_f32_bytes);
     put_u64(&mut body, s.routed_small);
     put_u64(&mut body, s.slab_tiles);
     put_u64(&mut body, s.packed_tiles);
@@ -1011,6 +1156,7 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
     put_f64(&mut body, s.slo.burn_1s);
     put_f64(&mut body, s.slo.burn_10s);
     put_f64(&mut body, s.slo.burn_60s);
+    put_numerics(&mut body, &s.numerics);
     put_u32(&mut body, s.recent_exemplars.len().min(MAX_WIRE_EXEMPLARS) as u32);
     for m in s.recent_exemplars.iter().take(MAX_WIRE_EXEMPLARS) {
         put_exemplar_meta(&mut body, m);
@@ -1025,6 +1171,13 @@ pub fn encode_metrics_response(seq: u64, s: &MetricsSnapshot) -> Vec<u8> {
         put_u64(&mut body, t.shed);
         put_u64(&mut body, t.quota_shed);
         put_u64(&mut body, t.auth_rejected);
+        put_u64(&mut body, t.quant_planes);
+        put_u64(&mut body, t.quant_elements);
+        put_u64(&mut body, t.quant_clipped);
+        put_f64(&mut body, t.quant_saturation_1s);
+        body.push(t.numerics_health.code());
+        put_u64(&mut body, t.wire_payload_bytes);
+        put_u64(&mut body, t.wire_f32_bytes);
     }
     finish_frame(FRAME_TYPE_METRICS_RESPONSE, &body)
 }
@@ -1059,6 +1212,41 @@ fn take_exemplar_meta(r: &mut Reader<'_>) -> Result<ExemplarMeta, WireDecodeErro
     })
 }
 
+fn take_numerics_window(r: &mut Reader<'_>) -> Result<NumericsWindow, WireDecodeError> {
+    Ok(NumericsWindow {
+        span_secs: r.u64()?,
+        planes: r.u64()?,
+        elements: r.u64()?,
+        clipped: r.u64()?,
+        err_elements: r.u64()?,
+        mse: take_f64(r)?,
+        max_abs_err: take_f64(r)?,
+        codes_used: r.u32()?,
+        code_utilization: take_f64(r)?,
+        sigma_mean: take_f64(r)?,
+        mu_mean: take_f64(r)?,
+        sigma_drift: take_f64(r)?,
+        saturation_rate: take_f64(r)?,
+    })
+}
+
+fn take_numerics(r: &mut Reader<'_>) -> Result<NumericsSnapshot, WireDecodeError> {
+    Ok(NumericsSnapshot {
+        planes: r.u64()?,
+        elements: r.u64()?,
+        clipped: r.u64()?,
+        err_elements: r.u64()?,
+        sum_sq_err: take_f64(r)?,
+        max_abs_err: take_f64(r)?,
+        sigma_mean: take_f64(r)?,
+        sigma_std: take_f64(r)?,
+        mu_mean: take_f64(r)?,
+        windows: [take_numerics_window(r)?, take_numerics_window(r)?, take_numerics_window(r)?],
+        health: NumericsHealth::from_code(r.u8()?),
+        saturated_exemplars: r.u64()?,
+    })
+}
+
 fn decode_metrics_request_body(
     r: &mut Reader<'_>,
 ) -> Result<MetricsRequestFrame, WireDecodeError> {
@@ -1079,6 +1267,8 @@ fn decode_metrics_response_body(
     let slow_closed = r.u64()?;
     let auth_rejected = r.u64()?;
     let auth_conns_closed = r.u64()?;
+    let wire_payload_bytes = r.u64()?;
+    let wire_f32_bytes = r.u64()?;
     let routed_small = r.u64()?;
     let slab_tiles = r.u64()?;
     let packed_tiles = r.u64()?;
@@ -1106,6 +1296,7 @@ fn decode_metrics_response_body(
         burn_10s: take_f64(r)?,
         burn_60s: take_f64(r)?,
     };
+    let numerics = take_numerics(r)?;
     let exemplar_count = r.u32()? as usize;
     if exemplar_count > MAX_WIRE_EXEMPLARS {
         return Err(WireDecodeError::Malformed("exemplar list exceeds cap"));
@@ -1131,6 +1322,13 @@ fn decode_metrics_response_body(
             shed: r.u64()?,
             quota_shed: r.u64()?,
             auth_rejected: r.u64()?,
+            quant_planes: r.u64()?,
+            quant_elements: r.u64()?,
+            quant_clipped: r.u64()?,
+            quant_saturation_1s: take_f64(r)?,
+            numerics_health: NumericsHealth::from_code(r.u8()?),
+            wire_payload_bytes: r.u64()?,
+            wire_f32_bytes: r.u64()?,
         });
     }
     Ok(MetricsResponseFrame {
@@ -1146,6 +1344,8 @@ fn decode_metrics_response_body(
             slow_closed,
             auth_rejected,
             auth_conns_closed,
+            wire_payload_bytes,
+            wire_f32_bytes,
             routed_small,
             slab_tiles,
             packed_tiles,
@@ -1168,6 +1368,7 @@ fn decode_metrics_response_body(
             exemplars_evicted,
             windows,
             slo,
+            numerics,
             recent_exemplars,
             tenants,
         },
@@ -1333,17 +1534,41 @@ fn take_plane_raw<'a>(
 /// Materialize one plane from its raw section (validated by
 /// [`take_plane_raw`], so this cannot fail).
 fn dequantize_plane(raw: &[u8], n: usize, quantized: bool, q: &UniformQuantizer) -> Vec<f32> {
+    dequantize_plane_observed(raw, n, quantized, q).0
+}
+
+/// [`dequantize_plane`] plus the decode-side numerics: code
+/// saturation, utilization, and the wire (μ, σ), filled per code as the
+/// plane materializes. No reconstruction error is recorded — the
+/// original f32 plane never existed at the decoder — so the windowed
+/// MSE/max-err stay driven by encode-side measurements alone.
+fn dequantize_plane_observed(
+    raw: &[u8],
+    n: usize,
+    quantized: bool,
+    q: &UniformQuantizer,
+) -> (Vec<f32>, Option<PlaneNumerics>) {
     if !quantized {
         debug_assert_eq!(raw.len(), n * 4);
-        return raw
+        let plane = raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
+        return (plane, None);
     }
     let mean = f32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
     let std = f32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
+    let mut pn = PlaneNumerics::default();
+    pn.set_block(mean, std);
     let codes = q.unpack(&raw[8..], n);
-    codes.into_iter().map(|c| q.dequantize(c) * std + mean).collect()
+    let plane = codes
+        .into_iter()
+        .map(|c| {
+            pn.note_code(c, q.bits);
+            q.dequantize(c) * std + mean
+        })
+        .collect();
+    (plane, Some(pn))
 }
 
 fn decode_request_body_lazy<'a>(
@@ -2163,6 +2388,8 @@ mod tests {
             slow_closed: 21,
             auth_rejected: 22,
             auth_conns_closed: 2,
+            wire_payload_bytes: 2_500,
+            wire_f32_bytes: 10_000,
             routed_small: 5,
             slab_tiles: 6,
             packed_tiles: 7,
@@ -2221,9 +2448,47 @@ mod tests {
                 burn_10s: 1.25,
                 burn_60s: 0.5,
             },
+            numerics: crate::obs::numerics::NumericsSnapshot {
+                planes: 40,
+                elements: 5120,
+                clipped: 64,
+                err_elements: 2560,
+                sum_sq_err: 1.5,
+                max_abs_err: 0.25,
+                sigma_mean: 1.7,
+                sigma_std: 0.3,
+                mu_mean: 0.01,
+                windows: [
+                    crate::obs::numerics::NumericsWindow {
+                        span_secs: 1,
+                        planes: 4,
+                        elements: 512,
+                        clipped: 8,
+                        err_elements: 256,
+                        mse: 0.0006,
+                        max_abs_err: 0.2,
+                        codes_used: 200,
+                        code_utilization: 200.0 / 256.0,
+                        sigma_mean: 1.8,
+                        mu_mean: 0.02,
+                        sigma_drift: 0.06,
+                        saturation_rate: 8.0 / 512.0,
+                    },
+                    crate::obs::numerics::NumericsWindow {
+                        span_secs: 10,
+                        ..Default::default()
+                    },
+                    crate::obs::numerics::NumericsWindow {
+                        span_secs: 60,
+                        ..Default::default()
+                    },
+                ],
+                health: crate::obs::numerics::NumericsHealth::Warn,
+                saturated_exemplars: 3,
+            },
             recent_exemplars: vec![ExemplarMeta {
                 trace: 0xABCD,
-                reason: RetainReason::Slow,
+                reason: RetainReason::Saturated,
                 total_us: 123_456.0,
                 when_sec: 9,
             }],
@@ -2235,6 +2500,13 @@ mod tests {
                     shed: 1,
                     quota_shed: 0,
                     auth_rejected: 4,
+                    quant_planes: 12,
+                    quant_elements: 1536,
+                    quant_clipped: 40,
+                    quant_saturation_1s: 0.026,
+                    numerics_health: crate::obs::numerics::NumericsHealth::Critical,
+                    wire_payload_bytes: 1_600,
+                    wire_f32_bytes: 6_400,
                 },
                 TenantSnapshot {
                     tenant: "light".into(),
@@ -2243,6 +2515,13 @@ mod tests {
                     shed: 0,
                     quota_shed: 2,
                     auth_rejected: 0,
+                    quant_planes: 0,
+                    quant_elements: 0,
+                    quant_clipped: 0,
+                    quant_saturation_1s: 0.0,
+                    numerics_health: crate::obs::numerics::NumericsHealth::Ok,
+                    wire_payload_bytes: 0,
+                    wire_f32_bytes: 0,
                 },
             ],
         };
@@ -2273,6 +2552,9 @@ mod tests {
         assert_eq!(s.exemplars_evicted, 1);
         assert_eq!(s.windows, snapshot.windows);
         assert_eq!(s.slo, snapshot.slo);
+        assert_eq!(s.wire_payload_bytes, 2_500);
+        assert_eq!(s.wire_f32_bytes, 10_000);
+        assert_eq!(s.numerics, snapshot.numerics);
         assert_eq!(s.recent_exemplars, snapshot.recent_exemplars);
         assert_eq!(s.tenants, snapshot.tenants);
         // Truncation dies cleanly, like every other frame type.

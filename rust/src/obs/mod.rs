@@ -72,14 +72,43 @@
 //!   evaluates them per window into multi-window burn rates and an
 //!   `Ok/Warn/Critical` [`slo::SloHealth`], surfaced per shard in
 //!   `FleetSnapshot` and the exposition.
+//!
+//! # Numerics observability
+//!
+//! The system plane above tells you the service is fast and available;
+//! the *numerics* plane ([`numerics`]) tells you the quantization is
+//! still telling the truth. On every path where an f32 plane and its
+//! 8-bit image coexist (wire plane encode/decode, the codec round
+//! trip), the stack measures reconstruction error (max-abs + MSE),
+//! end-code saturation rate, 256-code utilization, and Welford-tracked
+//! (μ,σ) drift of the per-plane block stats — per shard and per
+//! tenant, on the same per-second ring machinery and the same
+//! zero-alloc record-path bar as the windowed metrics
+//! (`benches/telemetry_overhead.rs` enforces it). A
+//! [`numerics::NumericsHealth`] verdict from the 1s window (saturation
+//! ≥ 0.5%/2%, upward σ-drift ≥ 0.5/2.0 → Warn/Critical) folds into the
+//! SLO → `FleetSnapshot.health` chain, and a critically-saturated
+//! plane is retained as a trace exemplar
+//! ([`RetainReason::Saturated`]) grep-able in `GET /metrics` and
+//! `GET /traces`. On the training side, [`timeseries`] writes a
+//! per-iteration learning-health JSONL record (mean return, advantage
+//! moments pre/post standardization, value explained-variance,
+//! approx-KL, clip fraction), so learning curves are grep-able files
+//! rather than final numbers.
 
 pub mod export;
+pub mod numerics;
 pub mod slo;
 pub mod telemetry;
+pub mod timeseries;
 pub mod trace;
 
+pub use numerics::{
+    NumericsAccum, NumericsHealth, NumericsSnapshot, NumericsWindow, PlaneNumerics,
+};
 pub use slo::{SloConfig, SloHealth, SloReport};
 pub use telemetry::{prometheus_text, ExemplarMeta, ExemplarStore, RetainReason};
+pub use timeseries::{JsonlWriter, LearningHealthRecord};
 pub use trace::{
     enabled, instant, mint_trace_id, set_enabled, span, span_begin, span_end,
     take_events, trace_events, Event, EventKind, Span,

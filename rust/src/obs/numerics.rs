@@ -1,0 +1,737 @@
+//! Numerics observability: live quantization-health accumulators.
+//!
+//! The paper's claim chain — standardize, quantize at 8 bits, keep
+//! learning — holds only while the planes actually look like the
+//! calibrated distribution. This module measures that continuously, on
+//! the paths where the f32 and quantized representations are *both
+//! already in hand* (wire plane encode/decode, the codec round trip),
+//! so observation costs no extra pass:
+//!
+//! - **Reconstruction error** — max-abs and MSE between the original
+//!   plane and its quantize→dequantize image, in plane units.
+//! - **Clip/saturation rate** — fraction of elements landing on the
+//!   quantizer's end codes. With per-plane block standardization the
+//!   ±5σ range clips ≤ 1/25 = 4% of *any* distribution (Chebyshev), and
+//!   < 0.0001% of a Gaussian — so a rate past
+//!   [`SATURATION_WARN`]/[`SATURATION_CRITICAL`] means the plane has
+//!   outliers the codec is destroying.
+//! - **Code utilization** — how much of the 256-code space the plane
+//!   actually occupies (a plane using 4 codes is over-ranged: its
+//!   effective resolution collapsed).
+//! - **(μ,σ) drift** — Welford streams over the per-plane block stats
+//!   ([`crate::stats::Welford`]), lifetime vs windowed; the windowed σ
+//!   running *ahead* of the lifetime baseline is the early sign of the
+//!   saturation failure mode.
+//!
+//! Accumulators are windowed on the [`crate::stats::windowed`] ring
+//! machinery (per-second buckets, stamp-rotated on the record path) and
+//! held to the telemetry plane's bar: the steady-state record path
+//! allocates nothing and gathers nothing — `benches/telemetry_overhead`
+//! enforces it.
+//!
+//! [`NumericsHealth`] folds the windowed verdict into the SLO health
+//! chain (`obs/slo.rs` → `FleetSnapshot.health`), so a tenant whose
+//! planes start saturating pages fleet-wide within one window.
+
+use crate::obs::slo::SloHealth;
+use crate::quant::UniformQuantizer;
+use crate::stats::windowed::{RingSlot, WindowedSlots};
+use crate::stats::Welford;
+
+/// Words in the 256-bit used-code set (8-bit operating point; wider
+/// codes fold down, narrower ones use a prefix).
+pub const CODE_SET_WORDS: usize = 4;
+
+/// Windowed saturation rate that degrades the verdict to `Warn`. A
+/// block-standardized Gaussian plane clips ~1e-6 of its mass at ±5σ;
+/// half a percent is already three orders of magnitude off nominal.
+pub const SATURATION_WARN: f64 = 0.005;
+
+/// Windowed saturation rate that degrades the verdict to `Critical`.
+/// Chebyshev bounds *any* standardized distribution at 4% past ±5σ; a
+/// plane clipping 2% is approaching the worst case any input could
+/// produce — its tail is being flattened wholesale.
+pub const SATURATION_CRITICAL: f64 = 0.02;
+
+/// Upward windowed-σ drift (relative to the lifetime baseline) that
+/// degrades to `Warn`: the window's planes are half again wider than
+/// history.
+pub const SIGMA_DRIFT_WARN: f64 = 0.5;
+
+/// Upward windowed-σ drift that degrades to `Critical` (3× the
+/// calibrated width).
+pub const SIGMA_DRIFT_CRITICAL: f64 = 2.0;
+
+/// Minimum elements in a window (or plane) before a verdict is drawn —
+/// a four-element plane with one clipped value is noise, not a page.
+pub const MIN_HEALTH_ELEMENTS: u64 = 64;
+
+/// Lifetime planes required before σ-drift is trusted (the baseline
+/// must exist before deviation from it means anything).
+pub const MIN_BASELINE_PLANES: u64 = 8;
+
+/// Floor for the drift denominator.
+const SIGMA_FLOOR: f64 = 1e-6;
+
+/// Default ring depth, matching the service metrics plane.
+pub const NUMERICS_RING_SECS: usize = 64;
+
+/// Measurements for one quantized plane, taken where the f32 and coded
+/// representations coexist. Plain data: filling one is a few ALU ops
+/// per element on the encode/decode loops, and recording one into an
+/// accumulator is O(1).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PlaneNumerics {
+    /// Elements observed.
+    pub elements: u64,
+    /// Elements on the quantizer's end codes (saturated).
+    pub clipped: u64,
+    /// Whether reconstruction error was measurable on this path (encode
+    /// sides see both planes; a decoder alone sees only codes).
+    pub err_measured: bool,
+    /// Max |original − reconstructed|, in plane units.
+    pub max_abs_err: f32,
+    /// Σ (original − reconstructed)², in plane units².
+    pub sum_sq_err: f64,
+    /// 256-bit set of codes used (codes wider than 8 bits fold down).
+    pub code_set: [u64; CODE_SET_WORDS],
+    /// Block mean the plane was standardized with.
+    pub mean: f32,
+    /// Block σ the plane was standardized with.
+    pub std: f32,
+}
+
+impl PlaneNumerics {
+    /// Note one codeword: element count, end-code saturation, and the
+    /// used-code set.
+    #[inline]
+    pub fn note_code(&mut self, code: u16, bits: u8) {
+        self.elements += 1;
+        let max_code = ((1u32 << bits) - 1) as u16;
+        self.clipped += (code == 0 || code == max_code) as u64;
+        let folded = if bits > 8 { code >> (bits - 8) } else { code } as usize;
+        self.code_set[(folded >> 6) & (CODE_SET_WORDS - 1)] |= 1u64 << (folded & 63);
+    }
+
+    /// Note one element's reconstruction error (plane units).
+    #[inline]
+    pub fn note_err(&mut self, abs_err: f32) {
+        self.err_measured = true;
+        self.max_abs_err = self.max_abs_err.max(abs_err);
+        self.sum_sq_err += (abs_err as f64) * (abs_err as f64);
+    }
+
+    /// Record the block stats the plane was standardized with.
+    #[inline]
+    pub fn set_block(&mut self, mean: f32, std: f32) {
+        self.mean = mean;
+        self.std = std;
+    }
+
+    /// Fraction of elements on the end codes.
+    pub fn saturation_rate(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.elements as f64
+        }
+    }
+
+    /// Distinct codes used (after folding to 8 bits).
+    pub fn codes_used(&self) -> u32 {
+        self.code_set.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Whether this single plane saturates past the `Critical` bar —
+    /// the per-record trigger for exemplar retention.
+    pub fn is_critically_saturated(&self) -> bool {
+        self.elements >= MIN_HEALTH_ELEMENTS
+            && self.saturation_rate() >= SATURATION_CRITICAL
+    }
+
+    /// Measure a plane post-hoc from its original and round-tripped
+    /// copies plus the standardization stats that sat between them
+    /// (the codec path: planes were transformed in place, so the codes
+    /// are re-derived here). Errors land in `reconstructed`'s units.
+    pub fn measure(
+        original: &[f32],
+        reconstructed: &[f32],
+        q: &UniformQuantizer,
+        mean: f32,
+        std: f32,
+        destandardized: bool,
+    ) -> PlaneNumerics {
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(mean, std);
+        let err_scale = if destandardized { std } else { 1.0 };
+        for (&x, &r) in original.iter().zip(reconstructed) {
+            let z = (x - mean) / std;
+            let code = q.quantize(z);
+            pn.note_code(code, q.bits);
+            let recon_z = q.dequantize(code);
+            // `r` is the plane the trainer reads back; measuring against
+            // the re-derived code keeps this exact even when the caller
+            // destandardized in place.
+            debug_assert!(
+                !destandardized || (recon_z * std + mean - r).abs() <= 1e-3 * std.abs().max(1.0),
+                "re-derived code disagrees with the stored plane"
+            );
+            let _ = r;
+            pn.note_err((recon_z - z).abs() * err_scale);
+        }
+        pn
+    }
+}
+
+/// One per-second ring bucket: plane measurements folded together.
+#[derive(Debug, Clone, Default)]
+pub struct NumericsBucket {
+    pub planes: u64,
+    pub elements: u64,
+    pub clipped: u64,
+    /// Elements whose reconstruction error was measured.
+    pub err_elements: u64,
+    pub sum_sq_err: f64,
+    pub max_abs_err: f64,
+    pub code_set: [u64; CODE_SET_WORDS],
+    /// Welford stream over per-plane block σ (one sample per plane).
+    pub sigma: Welford,
+    /// Welford stream over per-plane block μ.
+    pub mu: Welford,
+}
+
+impl NumericsBucket {
+    #[inline]
+    fn record(&mut self, pn: &PlaneNumerics) {
+        self.planes += 1;
+        self.elements += pn.elements;
+        self.clipped += pn.clipped;
+        if pn.err_measured {
+            self.err_elements += pn.elements;
+            self.sum_sq_err += pn.sum_sq_err;
+            self.max_abs_err = self.max_abs_err.max(pn.max_abs_err as f64);
+        }
+        for (s, p) in self.code_set.iter_mut().zip(&pn.code_set) {
+            *s |= p;
+        }
+        self.sigma.push(pn.std as f64);
+        self.mu.push(pn.mean as f64);
+    }
+}
+
+impl RingSlot for NumericsBucket {
+    fn reset(&mut self) {
+        *self = NumericsBucket::default();
+    }
+
+    fn merge_into(&self, out: &mut Self) {
+        out.planes += self.planes;
+        out.elements += self.elements;
+        out.clipped += self.clipped;
+        out.err_elements += self.err_elements;
+        out.sum_sq_err += self.sum_sq_err;
+        out.max_abs_err = out.max_abs_err.max(self.max_abs_err);
+        for (o, s) in out.code_set.iter_mut().zip(&self.code_set) {
+            *o |= s;
+        }
+        out.sigma.merge(&self.sigma);
+        out.mu.merge(&self.mu);
+    }
+}
+
+/// A merged view over the last `span_secs` seconds — the row the
+/// snapshot, Prometheus page, and wire metrics RPC all carry.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NumericsWindow {
+    pub span_secs: u64,
+    pub planes: u64,
+    pub elements: u64,
+    pub clipped: u64,
+    pub err_elements: u64,
+    /// Mean squared reconstruction error over error-measured elements.
+    pub mse: f64,
+    pub max_abs_err: f64,
+    pub codes_used: u32,
+    /// `codes_used` over the (≤256-entry) code space.
+    pub code_utilization: f64,
+    /// Mean per-plane block σ in the window.
+    pub sigma_mean: f64,
+    /// Mean per-plane block μ in the window.
+    pub mu_mean: f64,
+    /// Upward drift of the windowed σ vs the lifetime baseline:
+    /// `max(0, windowed/lifetime − 1)`. Only widening counts — a
+    /// narrower plane wastes codes but saturates nothing.
+    pub sigma_drift: f64,
+    pub saturation_rate: f64,
+}
+
+/// Health verdict for the numerics plane. Ordered so `max` picks the
+/// worst across tenants and shards, mirroring [`SloHealth`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum NumericsHealth {
+    #[default]
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl NumericsHealth {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NumericsHealth::Ok => "ok",
+            NumericsHealth::Warn => "warn",
+            NumericsHealth::Critical => "critical",
+        }
+    }
+
+    /// Wire code.
+    pub fn code(&self) -> u8 {
+        match self {
+            NumericsHealth::Ok => 0,
+            NumericsHealth::Warn => 1,
+            NumericsHealth::Critical => 2,
+        }
+    }
+
+    /// Wire decode; unknown codes read as `Critical` (same fail-loud
+    /// posture as [`SloHealth`]).
+    pub fn from_code(code: u8) -> NumericsHealth {
+        match code {
+            0 => NumericsHealth::Ok,
+            1 => NumericsHealth::Warn,
+            _ => NumericsHealth::Critical,
+        }
+    }
+
+    /// Fold into the SLO chain: a numerics page is an SLO page.
+    pub fn to_slo(self) -> SloHealth {
+        match self {
+            NumericsHealth::Ok => SloHealth::Ok,
+            NumericsHealth::Warn => SloHealth::Warn,
+            NumericsHealth::Critical => SloHealth::Critical,
+        }
+    }
+
+    /// Verdict for one windowed view: saturation and σ-drift each have
+    /// Warn/Critical bars; the worst wins. Windows below
+    /// [`MIN_HEALTH_ELEMENTS`] abstain (`Ok`).
+    pub fn evaluate(win: &NumericsWindow) -> NumericsHealth {
+        if win.elements < MIN_HEALTH_ELEMENTS {
+            return NumericsHealth::Ok;
+        }
+        if win.saturation_rate >= SATURATION_CRITICAL
+            || win.sigma_drift >= SIGMA_DRIFT_CRITICAL
+        {
+            NumericsHealth::Critical
+        } else if win.saturation_rate >= SATURATION_WARN
+            || win.sigma_drift >= SIGMA_DRIFT_WARN
+        {
+            NumericsHealth::Warn
+        } else {
+            NumericsHealth::Ok
+        }
+    }
+}
+
+/// Lifetime + windowed quantization-health accumulator (one per shard,
+/// plus one per tenant). The record path is a handful of adds and one
+/// stamp compare; storage is allocated at construction.
+#[derive(Debug, Clone)]
+pub struct NumericsAccum {
+    pub planes: u64,
+    pub elements: u64,
+    pub clipped: u64,
+    pub err_elements: u64,
+    pub sum_sq_err: f64,
+    pub max_abs_err: f64,
+    /// Lifetime Welford streams over per-plane block stats — the drift
+    /// baseline the windowed σ is compared against.
+    pub sigma: Welford,
+    pub mu: Welford,
+    ring: WindowedSlots<NumericsBucket>,
+}
+
+impl Default for NumericsAccum {
+    fn default() -> Self {
+        NumericsAccum::new(NUMERICS_RING_SECS)
+    }
+}
+
+impl NumericsAccum {
+    pub fn new(ring_secs: usize) -> NumericsAccum {
+        NumericsAccum {
+            planes: 0,
+            elements: 0,
+            clipped: 0,
+            err_elements: 0,
+            sum_sq_err: 0.0,
+            max_abs_err: 0.0,
+            sigma: Welford::new(),
+            mu: Welford::new(),
+            ring: WindowedSlots::new(ring_secs),
+        }
+    }
+
+    /// Fold one plane's measurements in — the steady-state record path
+    /// (0 allocations: the bucket rotates by in-place reset).
+    #[inline]
+    pub fn record(&mut self, now_sec: u64, pn: &PlaneNumerics) {
+        self.planes += 1;
+        self.elements += pn.elements;
+        self.clipped += pn.clipped;
+        if pn.err_measured {
+            self.err_elements += pn.elements;
+            self.sum_sq_err += pn.sum_sq_err;
+            self.max_abs_err = self.max_abs_err.max(pn.max_abs_err as f64);
+        }
+        self.sigma.push(pn.std as f64);
+        self.mu.push(pn.mean as f64);
+        self.ring.slot_mut(now_sec).record(pn);
+    }
+
+    /// The merged view of the last `span_secs` seconds, with σ-drift
+    /// computed against the lifetime baseline.
+    pub fn window(&self, now_sec: u64, span_secs: u64) -> NumericsWindow {
+        let b = self.ring.merged(now_sec, span_secs);
+        let life_sigma = self.sigma.mean();
+        let win_sigma = b.sigma.mean();
+        let sigma_drift = if self.sigma.count() < MIN_BASELINE_PLANES || b.planes == 0 {
+            0.0
+        } else {
+            (win_sigma / life_sigma.max(SIGMA_FLOOR) - 1.0).max(0.0)
+        };
+        NumericsWindow {
+            span_secs,
+            planes: b.planes,
+            elements: b.elements,
+            clipped: b.clipped,
+            err_elements: b.err_elements,
+            mse: if b.err_elements == 0 { 0.0 } else { b.sum_sq_err / b.err_elements as f64 },
+            max_abs_err: b.max_abs_err,
+            codes_used: b.code_set.iter().map(|w| w.count_ones()).sum(),
+            code_utilization: b.code_set.iter().map(|w| w.count_ones()).sum::<u32>() as f64
+                / 256.0,
+            sigma_mean: win_sigma,
+            mu_mean: b.mu.mean(),
+            sigma_drift,
+            saturation_rate: if b.elements == 0 {
+                0.0
+            } else {
+                b.clipped as f64 / b.elements as f64
+            },
+        }
+    }
+
+    /// The fast verdict: the 1s window, so Critical lands — and clears
+    /// — within one window of the traffic that caused it.
+    pub fn health(&self, now_sec: u64) -> NumericsHealth {
+        NumericsHealth::evaluate(&self.window(now_sec, 1))
+    }
+}
+
+/// Point-in-time numerics rows carried by
+/// [`MetricsSnapshot`](crate::service::MetricsSnapshot): lifetime
+/// aggregates plus the standard 1/10/60s windows and the 1s-window
+/// verdict.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NumericsSnapshot {
+    pub planes: u64,
+    pub elements: u64,
+    pub clipped: u64,
+    pub err_elements: u64,
+    pub sum_sq_err: f64,
+    pub max_abs_err: f64,
+    /// Lifetime mean/σ of the per-plane block σ stream.
+    pub sigma_mean: f64,
+    pub sigma_std: f64,
+    pub mu_mean: f64,
+    pub windows: [NumericsWindow; 3],
+    /// Worst of the shard-wide and per-tenant 1s verdicts.
+    pub health: NumericsHealth,
+    /// Saturation exemplars retained since start.
+    pub saturated_exemplars: u64,
+}
+
+impl NumericsSnapshot {
+    /// Lifetime mean squared reconstruction error.
+    pub fn mse(&self) -> f64 {
+        if self.err_elements == 0 {
+            0.0
+        } else {
+            self.sum_sq_err / self.err_elements as f64
+        }
+    }
+
+    /// The view for a span (1, 10 or 60 seconds).
+    pub fn window(&self, span_secs: u64) -> &NumericsWindow {
+        self.windows
+            .iter()
+            .find(|w| w.span_secs == span_secs)
+            .unwrap_or(&self.windows[0])
+    }
+
+    /// Lifetime saturation rate.
+    pub fn saturation_rate(&self) -> f64 {
+        if self.elements == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.elements as f64
+        }
+    }
+}
+
+impl NumericsAccum {
+    /// Build the snapshot rows (snapshot path — allocation is fine
+    /// here; the record path above is the one held to zero).
+    pub fn snapshot(&self, now_sec: u64, saturated_exemplars: u64) -> NumericsSnapshot {
+        let windows = [1u64, 10, 60].map(|s| self.window(now_sec, s));
+        NumericsSnapshot {
+            planes: self.planes,
+            elements: self.elements,
+            clipped: self.clipped,
+            err_elements: self.err_elements,
+            sum_sq_err: self.sum_sq_err,
+            max_abs_err: self.max_abs_err,
+            sigma_mean: self.sigma.mean(),
+            sigma_std: self.sigma.std_population(),
+            mu_mean: self.mu.mean(),
+            health: NumericsHealth::evaluate(&windows[0]),
+            windows,
+            saturated_exemplars,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quantized_plane(data: &[f32], q: &UniformQuantizer) -> PlaneNumerics {
+        let stats = crate::quant::BlockStats::of(data);
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(stats.mean, stats.std);
+        for &x in data {
+            let z = (x - stats.mean) / stats.std;
+            let code = q.quantize(z);
+            pn.note_code(code, q.bits);
+            pn.note_err((q.dequantize(code) - z).abs() * stats.std);
+        }
+        pn
+    }
+
+    #[test]
+    fn constant_plane_sigma_zero_is_finite_and_healthy() {
+        // σ=0 planes standardize through the STD_FLOOR; every element
+        // maps to the σ-floored z=0 code, nothing clips, one code used.
+        let q = UniformQuantizer::new(8);
+        let pn = quantized_plane(&[4.2f32; 256], &q);
+        assert_eq!(pn.elements, 256);
+        assert_eq!(pn.clipped, 0, "constant plane must not saturate");
+        assert_eq!(pn.codes_used(), 1);
+        assert!(pn.max_abs_err.is_finite() && pn.sum_sq_err.is_finite());
+        let mut acc = NumericsAccum::new(8);
+        acc.record(1, &pn);
+        let w = acc.window(1, 1);
+        assert_eq!(w.saturation_rate, 0.0);
+        assert!(w.sigma_mean.abs() < 1e-3);
+        assert_eq!(NumericsHealth::evaluate(&w), NumericsHealth::Ok);
+    }
+
+    #[test]
+    fn all_clipped_plane_reports_saturation_one() {
+        // A two-sided spike train standardizes to z = ±1/… far past the
+        // ±5σ range? No — build it directly: alternate huge outliers so
+        // every element lands on an end code.
+        let q = UniformQuantizer::new(8);
+        let mut pn = PlaneNumerics::default();
+        for i in 0..128u32 {
+            let z = if i % 2 == 0 { 50.0 } else { -50.0 };
+            let code = q.quantize(z);
+            pn.note_code(code, q.bits);
+            pn.note_err((q.dequantize(code) - z).abs());
+        }
+        assert_eq!(pn.saturation_rate(), 1.0);
+        assert_eq!(pn.codes_used(), 2, "only the two end codes");
+        assert!(pn.is_critically_saturated());
+        let mut acc = NumericsAccum::new(8);
+        acc.record(0, &pn);
+        let w = acc.window(0, 1);
+        assert_eq!(w.saturation_rate, 1.0);
+        assert_eq!(NumericsHealth::evaluate(&w), NumericsHealth::Critical);
+    }
+
+    #[test]
+    fn empty_windows_age_out_by_stamp() {
+        let q = UniformQuantizer::new(8);
+        let mut acc = NumericsAccum::new(8);
+        let data: Vec<f32> = (0..256).map(|i| (i as f32 * 0.37).sin()).collect();
+        acc.record(5, &quantized_plane(&data, &q));
+        assert_eq!(acc.window(5, 1).elements, 256);
+        // Much later, the window is empty — no frozen saturation rate —
+        // and the verdict abstains; lifetime rows persist.
+        let w = acc.window(500, 10);
+        assert_eq!(w.elements, 0);
+        assert_eq!(w.planes, 0);
+        assert_eq!(w.saturation_rate, 0.0);
+        assert_eq!(w.codes_used, 0);
+        assert_eq!(NumericsHealth::evaluate(&w), NumericsHealth::Ok);
+        assert_eq!(acc.elements, 256, "lifetime aggregate survives aging");
+        // The aliasing second (5 % 8 == 13 % 8) resets in place.
+        assert_eq!(acc.window(13, 1).elements, 0);
+    }
+
+    #[test]
+    fn welford_merge_across_window_rotation_matches_sequential() {
+        // Planes recorded across two different seconds merge their
+        // bucket Welford streams; the merged (μ,σ)-of-σ must equal one
+        // stream that saw every plane in order.
+        let q = UniformQuantizer::new(8);
+        let mut acc = NumericsAccum::new(8);
+        let mut reference = Welford::new();
+        for sec in [7u64, 8] {
+            for k in 0..5 {
+                let scale = 1.0 + 0.3 * (sec as f32 - 7.0) + 0.1 * k as f32;
+                let data: Vec<f32> =
+                    (0..128).map(|i| (i as f32 * 0.71).sin() * scale).collect();
+                let pn = quantized_plane(&data, &q);
+                reference.push(pn.std as f64);
+                acc.record(sec, &pn);
+            }
+        }
+        let w = acc.window(8, 2);
+        assert_eq!(w.planes, 10);
+        assert!((w.sigma_mean - reference.mean()).abs() < 1e-12);
+        // And the lifetime stream agrees (same samples, same math).
+        assert!((acc.sigma.mean() - reference.mean()).abs() < 1e-12);
+        assert!(
+            (acc.sigma.std_population() - reference.std_population()).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn health_walks_ok_warn_critical_and_recovers() {
+        let q = UniformQuantizer::new(8);
+        let mut acc = NumericsAccum::new(64);
+
+        // Plane generator with a controllable outlier fraction: spikes
+        // at 100× the base scale blow past ±5σ of the block σ.
+        let plane = |outliers_per_256: usize, seed: f32| -> PlaneNumerics {
+            let data: Vec<f32> = (0..256)
+                .map(|i| {
+                    if i < outliers_per_256 {
+                        if i % 2 == 0 { 100.0 } else { -100.0 }
+                    } else {
+                        ((i as f32 + seed) * 0.37).sin()
+                    }
+                })
+                .collect();
+            quantized_plane(&data, &q)
+        };
+
+        // Baseline: clean planes → Ok.
+        for k in 0..10 {
+            acc.record(10, &plane(0, k as f32));
+        }
+        assert_eq!(acc.health(10), NumericsHealth::Ok);
+
+        // Mild outliers in the next second: saturation past 0.5% → Warn.
+        for k in 0..4 {
+            acc.record(11, &plane(2, k as f32));
+        }
+        let w = acc.window(11, 1);
+        assert!(w.saturation_rate >= SATURATION_WARN, "{}", w.saturation_rate);
+        assert!(w.saturation_rate < SATURATION_CRITICAL);
+        assert_eq!(acc.health(11), NumericsHealth::Warn);
+
+        // Heavy outliers: past 2% → Critical, with σ-drift climbing too.
+        for k in 0..4 {
+            acc.record(12, &plane(16, k as f32));
+        }
+        let w = acc.window(12, 1);
+        assert!(w.saturation_rate >= SATURATION_CRITICAL, "{}", w.saturation_rate);
+        assert!(w.sigma_drift > 0.0, "spiky planes must widen σ: {}", w.sigma_drift);
+        assert_eq!(acc.health(12), NumericsHealth::Critical);
+
+        // Recovery: clean traffic one window later → Ok, even though
+        // the lifetime baseline now carries the spiky planes (drift
+        // only counts widening, so the narrower recovery σ is clean).
+        for k in 0..10 {
+            acc.record(13, &plane(0, k as f32));
+        }
+        assert_eq!(acc.health(13), NumericsHealth::Ok);
+    }
+
+    #[test]
+    fn sigma_drift_alone_can_page() {
+        let q = UniformQuantizer::new(8);
+        let mut acc = NumericsAccum::new(64);
+        let plane = |scale: f32, seed: f32| -> PlaneNumerics {
+            let data: Vec<f32> =
+                (0..256).map(|i| ((i as f32 + seed) * 0.37).sin() * scale).collect();
+            quantized_plane(&data, &q)
+        };
+        for k in 0..10 {
+            acc.record(20, &plane(1.0, k as f32));
+        }
+        assert_eq!(acc.health(20), NumericsHealth::Ok);
+        // Planes 10× wider: nothing need clip (block std renormalizes),
+        // but the σ stream has left its baseline far behind.
+        for k in 0..4 {
+            acc.record(21, &plane(10.0, k as f32));
+        }
+        let w = acc.window(21, 1);
+        assert!(w.sigma_drift >= SIGMA_DRIFT_CRITICAL, "{}", w.sigma_drift);
+        assert_eq!(acc.health(21), NumericsHealth::Critical);
+    }
+
+    #[test]
+    fn health_codes_roundtrip_and_order() {
+        for h in [NumericsHealth::Ok, NumericsHealth::Warn, NumericsHealth::Critical] {
+            assert_eq!(NumericsHealth::from_code(h.code()), h);
+        }
+        assert_eq!(NumericsHealth::from_code(250), NumericsHealth::Critical);
+        assert!(NumericsHealth::Critical > NumericsHealth::Warn);
+        assert!(NumericsHealth::Warn > NumericsHealth::Ok);
+        assert_eq!(NumericsHealth::Critical.to_slo(), SloHealth::Critical);
+        assert_eq!(NumericsHealth::Ok.to_slo(), SloHealth::Ok);
+    }
+
+    #[test]
+    fn measure_matches_inline_accounting() {
+        // The codec path's post-hoc `measure` must agree with the
+        // encode loop's inline accounting.
+        let q = UniformQuantizer::new(8);
+        let data: Vec<f32> = (0..512).map(|i| (i as f32 * 0.13).sin() * 3.0).collect();
+        let inline = quantized_plane(&data, &q);
+        let stats = crate::quant::BlockStats::of(&data);
+        let mut recon = data.clone();
+        for x in recon.iter_mut() {
+            *x = q.roundtrip((*x - stats.mean) / stats.std) * stats.std + stats.mean;
+        }
+        let measured =
+            PlaneNumerics::measure(&data, &recon, &q, stats.mean, stats.std, true);
+        assert_eq!(measured.elements, inline.elements);
+        assert_eq!(measured.clipped, inline.clipped);
+        assert_eq!(measured.code_set, inline.code_set);
+        assert!((measured.max_abs_err - inline.max_abs_err).abs() < 1e-6);
+        assert!((measured.sum_sq_err - inline.sum_sq_err).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snapshot_rows_cover_windows_and_lifetime() {
+        let q = UniformQuantizer::new(8);
+        let mut acc = NumericsAccum::new(64);
+        let data: Vec<f32> = (0..256).map(|i| (i as f32 * 0.29).sin()).collect();
+        for sec in 0..3u64 {
+            acc.record(sec, &quantized_plane(&data, &q));
+        }
+        let snap = acc.snapshot(2, 1);
+        assert_eq!(snap.planes, 3);
+        assert_eq!(snap.window(1).planes, 1);
+        assert_eq!(snap.window(10).planes, 3);
+        assert_eq!(snap.saturated_exemplars, 1);
+        assert_eq!(snap.health, NumericsHealth::Ok);
+        assert!(snap.mse() >= 0.0);
+        assert!(snap.window(1).code_utilization > 0.1, "healthy plane uses many codes");
+    }
+}

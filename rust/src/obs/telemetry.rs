@@ -42,6 +42,9 @@ pub enum RetainReason {
     Shed,
     /// Completed only after a fabric failover retry.
     FailedOver,
+    /// Carried a quantized plane saturating past the numerics-plane
+    /// Critical threshold ([`crate::obs::numerics`]).
+    Saturated,
 }
 
 impl RetainReason {
@@ -51,6 +54,7 @@ impl RetainReason {
             RetainReason::Error => "error",
             RetainReason::Shed => "shed",
             RetainReason::FailedOver => "failed_over",
+            RetainReason::Saturated => "saturated",
         }
     }
 
@@ -61,6 +65,7 @@ impl RetainReason {
             RetainReason::Error => 1,
             RetainReason::Shed => 2,
             RetainReason::FailedOver => 3,
+            RetainReason::Saturated => 4,
         }
     }
 
@@ -71,6 +76,7 @@ impl RetainReason {
             0 => RetainReason::Slow,
             2 => RetainReason::Shed,
             3 => RetainReason::FailedOver,
+            4 => RetainReason::Saturated,
             _ => RetainReason::Error,
         }
     }
@@ -308,6 +314,105 @@ pub fn prometheus_text(snap: &MetricsSnapshot, shard: &str) -> String {
         snap.slo.health.as_str(),
         snap.slo.health.code()
     );
+
+    // Numerics plane: lifetime quantization-health counters, windowed
+    // saturation/utilization/drift gauges, the 1s verdict, and the
+    // lifetime wire-transport reduction (the paper's 4x claim as a
+    // scrapeable gauge). The saturation exemplar (newest retained
+    // `Saturated` trace) is attached to the window saturation rows so
+    // an offending plane greps from the exposition into `GET /traces`.
+    let n = &snap.numerics;
+    for (name, v) in [
+        ("heppo_quant_planes_total", n.planes),
+        ("heppo_quant_elements_total", n.elements),
+        ("heppo_quant_clipped_total", n.clipped),
+        ("heppo_quant_saturated_exemplars_total", n.saturated_exemplars),
+        ("heppo_wire_payload_bytes_total", snap.wire_payload_bytes),
+        ("heppo_wire_f32_bytes_total", snap.wire_f32_bytes),
+    ] {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name}{{shard=\"{shard}\"}} {v}");
+    }
+    let _ = writeln!(out, "# TYPE heppo_wire_reduction_vs_f32 gauge");
+    let _ = writeln!(
+        out,
+        "heppo_wire_reduction_vs_f32{{shard=\"{shard}\"}} {:.4}",
+        snap.wire_reduction_vs_f32()
+    );
+    let _ = writeln!(out, "# TYPE heppo_quant_mse gauge");
+    let _ = writeln!(out, "heppo_quant_mse{{shard=\"{shard}\"}} {:.6e}", n.mse());
+    let _ = writeln!(out, "# TYPE heppo_quant_max_abs_err gauge");
+    let _ =
+        writeln!(out, "heppo_quant_max_abs_err{{shard=\"{shard}\"}} {:.6e}", n.max_abs_err);
+    let saturated_exemplar = snap
+        .recent_exemplars
+        .iter()
+        .find(|m| m.reason == RetainReason::Saturated);
+    let _ = writeln!(out, "# TYPE heppo_quant_window_saturation_rate gauge");
+    let _ = writeln!(out, "# TYPE heppo_quant_window_code_utilization gauge");
+    let _ = writeln!(out, "# TYPE heppo_quant_window_sigma_drift gauge");
+    for w in &n.windows {
+        let win = format!("{}s", w.span_secs);
+        let _ = write!(
+            out,
+            "heppo_quant_window_saturation_rate{{shard=\"{shard}\",window=\"{win}\"}} {:.6}",
+            w.saturation_rate
+        );
+        if let Some(m) = saturated_exemplar {
+            let _ = write!(
+                out,
+                " # {{trace_id=\"{}\",reason=\"{}\"}} {:.1}",
+                trace_hex(m.trace),
+                m.reason.as_str(),
+                m.total_us
+            );
+        }
+        out.push('\n');
+        let _ = writeln!(
+            out,
+            "heppo_quant_window_code_utilization{{shard=\"{shard}\",window=\"{win}\"}} {:.4}",
+            w.code_utilization
+        );
+        let _ = writeln!(
+            out,
+            "heppo_quant_window_sigma_drift{{shard=\"{shard}\",window=\"{win}\"}} {:.4}",
+            w.sigma_drift
+        );
+    }
+    let _ = writeln!(out, "# TYPE heppo_numerics_health gauge");
+    let _ = writeln!(
+        out,
+        "heppo_numerics_health{{shard=\"{shard}\",state=\"{}\"}} {}",
+        n.health.as_str(),
+        n.health.code()
+    );
+    // Per-tenant numerics: saturation + verdict for tenants that sent
+    // quantized planes (bounded by the tenant-map cap upstream).
+    let _ = writeln!(out, "# TYPE heppo_tenant_quant_saturation_1s gauge");
+    let _ = writeln!(out, "# TYPE heppo_tenant_numerics_health gauge");
+    let _ = writeln!(out, "# TYPE heppo_tenant_wire_reduction_vs_f32 gauge");
+    for t in &snap.tenants {
+        if t.quant_planes == 0 && t.wire_payload_bytes == 0 {
+            continue;
+        }
+        let tenant = label_escape(&t.tenant);
+        let _ = writeln!(
+            out,
+            "heppo_tenant_quant_saturation_1s{{shard=\"{shard}\",tenant=\"{tenant}\"}} {:.6}",
+            t.quant_saturation_1s
+        );
+        let _ = writeln!(
+            out,
+            "heppo_tenant_numerics_health{{shard=\"{shard}\",tenant=\"{tenant}\",state=\"{}\"}} {}",
+            t.numerics_health.as_str(),
+            t.numerics_health.code()
+        );
+        let _ = writeln!(
+            out,
+            "heppo_tenant_wire_reduction_vs_f32{{shard=\"{shard}\",tenant=\"{tenant}\"}} {:.4}",
+            t.wire_reduction_vs_f32()
+        );
+    }
     out
 }
 
@@ -347,6 +452,7 @@ mod tests {
             RetainReason::Error,
             RetainReason::Shed,
             RetainReason::FailedOver,
+            RetainReason::Saturated,
         ] {
             assert_eq!(RetainReason::from_code(r.code()), r);
         }
@@ -397,5 +503,41 @@ mod tests {
     fn label_values_are_escaped() {
         let escaped = label_escape("a\"b\\c");
         assert_eq!(escaped, "a\\\"b\\\\c");
+    }
+
+    #[test]
+    fn prometheus_text_renders_numerics_rows_with_saturation_exemplar() {
+        use crate::obs::numerics::PlaneNumerics;
+        use crate::quant::UniformQuantizer;
+        use crate::service::metrics::{ServiceMetrics, SnapshotInputs};
+        let m = ServiceMetrics::new();
+        let q = UniformQuantizer::new(8);
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(0.0, 17.0);
+        for i in 0..256u32 {
+            let z = if i % 8 == 0 { 50.0 } else { (i as f32 * 0.37).sin() };
+            let code = q.quantize(z);
+            pn.note_code(code, 8);
+            pn.note_err((q.dequantize(code) - z).abs() * 17.0);
+        }
+        m.record_wire_frame("spiky", 1000, 4000);
+        m.record_plane_numerics("spiky", &pn, 0x0BAD_5A70_0000_0001);
+        let snap = m.snapshot(SnapshotInputs::default());
+        let text = prometheus_text(&snap, "s0");
+        for needle in [
+            "heppo_quant_planes_total{shard=\"s0\"} 1",
+            "heppo_quant_clipped_total{shard=\"s0\"} 32",
+            "heppo_quant_window_saturation_rate{shard=\"s0\",window=\"1s\"}",
+            "heppo_quant_window_code_utilization{shard=\"s0\"",
+            "heppo_quant_window_sigma_drift{shard=\"s0\"",
+            "heppo_numerics_health{shard=\"s0\",state=\"critical\"} 2",
+            "heppo_wire_reduction_vs_f32{shard=\"s0\"} 4.0000",
+            "heppo_tenant_quant_saturation_1s{shard=\"s0\",tenant=\"spiky\"}",
+            "heppo_tenant_numerics_health{shard=\"s0\",tenant=\"spiky\",state=\"critical\"}",
+            "trace_id=\"0x0bad5a7000000001\"",
+            "reason=\"saturated\"",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 }

@@ -1,0 +1,257 @@
+//! Learning-curve time series: per-iteration JSONL records.
+//!
+//! The paper's 1.5×-cumulative-reward claim is a *curve*, not a final
+//! number — comparing standardization configurations requires the whole
+//! trajectory. [`JsonlWriter`] appends one JSON object per line to a
+//! file (the format every plotting/grep toolchain already reads), and
+//! [`LearningHealthRecord`] is the record the trainer emits each
+//! iteration: return statistics plus the PPO-health scalars
+//! (advantage moments pre/post standardization, value
+//! explained-variance, approx-KL, clip fraction) that explain *why* a
+//! curve went flat.
+//!
+//! The writer lives on the trainer's iteration boundary — file I/O per
+//! *iteration*, not per step — so it carries no zero-alloc obligation;
+//! it flushes per record so a killed run keeps every completed line.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Append-only JSONL sink: one [`Json`] document per line.
+#[derive(Debug)]
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+    path: String,
+    records: u64,
+}
+
+impl JsonlWriter {
+    /// Create (truncating) a JSONL file; parent directories are created.
+    pub fn create(path: &str) -> anyhow::Result<JsonlWriter> {
+        if let Some(dir) = Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let f = File::create(path)?;
+        Ok(JsonlWriter { out: BufWriter::new(f), path: path.to_string(), records: 0 })
+    }
+
+    /// Open for appending (resumed runs extend their curve).
+    pub fn append(path: &str) -> anyhow::Result<JsonlWriter> {
+        if let Some(dir) = Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlWriter { out: BufWriter::new(f), path: path.to_string(), records: 0 })
+    }
+
+    /// Write one record and flush it to disk.
+    pub fn write(&mut self, record: &Json) -> anyhow::Result<()> {
+        writeln!(self.out, "{record}")?;
+        self.out.flush()?;
+        self.records += 1;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    pub fn records_written(&self) -> u64 {
+        self.records
+    }
+}
+
+/// One per-iteration learning-health row. All advantage statistics are
+/// computed over the full rollout batch; `adv_*_post` reflect exactly
+/// what the PPO update consumed (identical to `adv_*_pre` when
+/// standardization is off).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LearningHealthRecord {
+    pub iter: usize,
+    pub env_steps: u64,
+    pub episodes: u64,
+    /// Rolling mean episodic return (raw reward units).
+    pub mean_return: f32,
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub adv_mean_pre: f32,
+    pub adv_std_pre: f32,
+    pub adv_mean_post: f32,
+    pub adv_std_post: f32,
+    /// 1 − Var(returns-to-go − values) / Var(returns-to-go): how much
+    /// of the return variance the critic explains (1 = perfect, ≤ 0 =
+    /// worse than predicting the mean).
+    pub value_explained_variance: f32,
+    /// Mean(logp_old − logp_new) over the rollout after the update — a
+    /// first-order KL(old‖new) estimate.
+    pub approx_kl: f32,
+    /// Fraction of transitions whose post-update ratio left the
+    /// `1 ± clip_eps` trust region.
+    pub clip_fraction: f32,
+}
+
+impl LearningHealthRecord {
+    /// Render as the JSONL row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iter", Json::from(self.iter)),
+            ("env_steps", Json::Num(self.env_steps as f64)),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("mean_return", Json::Num(self.mean_return as f64)),
+            ("pi_loss", Json::Num(self.pi_loss as f64)),
+            ("v_loss", Json::Num(self.v_loss as f64)),
+            ("entropy", Json::Num(self.entropy as f64)),
+            ("adv_mean_pre", Json::Num(self.adv_mean_pre as f64)),
+            ("adv_std_pre", Json::Num(self.adv_std_pre as f64)),
+            ("adv_mean_post", Json::Num(self.adv_mean_post as f64)),
+            ("adv_std_post", Json::Num(self.adv_std_post as f64)),
+            (
+                "value_explained_variance",
+                Json::Num(self.value_explained_variance as f64),
+            ),
+            ("approx_kl", Json::Num(self.approx_kl as f64)),
+            ("clip_fraction", Json::Num(self.clip_fraction as f64)),
+        ])
+    }
+
+    /// Parse one JSONL row back (the bench/plot side).
+    pub fn from_json(j: &Json) -> anyhow::Result<LearningHealthRecord> {
+        let f = |key: &str| -> anyhow::Result<f32> {
+            Ok(j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{key} is not a number"))?
+                as f32)
+        };
+        Ok(LearningHealthRecord {
+            iter: j.req("iter")?.as_usize().unwrap_or(0),
+            env_steps: f("env_steps")? as u64,
+            episodes: f("episodes")? as u64,
+            mean_return: f("mean_return")?,
+            pi_loss: f("pi_loss")?,
+            v_loss: f("v_loss")?,
+            entropy: f("entropy")?,
+            adv_mean_pre: f("adv_mean_pre")?,
+            adv_std_pre: f("adv_std_pre")?,
+            adv_mean_post: f("adv_mean_post")?,
+            adv_std_post: f("adv_std_post")?,
+            value_explained_variance: f("value_explained_variance")?,
+            approx_kl: f("approx_kl")?,
+            clip_fraction: f("clip_fraction")?,
+        })
+    }
+}
+
+/// Helper: explained variance 1 − Var(target − pred)/Var(target),
+/// clamped to a floor of −1 so a catastrophically wrong critic reads
+/// as −1, not −∞. Returns 0 when the target is (near-)constant.
+pub fn explained_variance(targets: &[f32], preds: &[f32]) -> f32 {
+    debug_assert_eq!(targets.len(), preds.len());
+    if targets.is_empty() {
+        return 0.0;
+    }
+    let n = targets.len() as f64;
+    let t_mean = targets.iter().map(|&t| t as f64).sum::<f64>() / n;
+    let t_var =
+        targets.iter().map(|&t| (t as f64 - t_mean).powi(2)).sum::<f64>() / n;
+    if t_var < 1e-12 {
+        return 0.0;
+    }
+    let r_mean = targets
+        .iter()
+        .zip(preds)
+        .map(|(&t, &p)| t as f64 - p as f64)
+        .sum::<f64>()
+        / n;
+    let r_var = targets
+        .iter()
+        .zip(preds)
+        .map(|(&t, &p)| (t as f64 - p as f64 - r_mean).powi(2))
+        .sum::<f64>()
+        / n;
+    ((1.0 - r_var / t_var) as f32).max(-1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    #[test]
+    fn jsonl_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("heppo_timeseries_test");
+        let path = dir.join("curve.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let mut w = JsonlWriter::create(&path).unwrap();
+        for i in 0..3 {
+            let rec = LearningHealthRecord {
+                iter: i,
+                env_steps: (i as u64 + 1) * 512,
+                episodes: i as u64,
+                mean_return: 10.0 * i as f32,
+                pi_loss: -0.01,
+                v_loss: 0.5,
+                entropy: 1.1,
+                adv_mean_pre: 0.2,
+                adv_std_pre: 1.7,
+                adv_mean_post: 0.0,
+                adv_std_post: 1.0,
+                value_explained_variance: 0.8,
+                approx_kl: 0.015,
+                clip_fraction: 0.12,
+            };
+            w.write(&rec.to_json()).unwrap();
+        }
+        assert_eq!(w.records_written(), 3);
+        drop(w);
+
+        let f = std::fs::File::open(&path).unwrap();
+        let lines: Vec<String> =
+            std::io::BufReader::new(f).lines().map(|l| l.unwrap()).collect();
+        assert_eq!(lines.len(), 3);
+        let rec = LearningHealthRecord::from_json(&Json::parse(&lines[2]).unwrap())
+            .unwrap();
+        assert_eq!(rec.iter, 2);
+        assert_eq!(rec.env_steps, 1536);
+        assert!((rec.mean_return - 20.0).abs() < 1e-6);
+        assert!((rec.adv_std_post - 1.0).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_extends_existing_curve() {
+        let dir = std::env::temp_dir().join("heppo_timeseries_append");
+        let path = dir.join("curve.jsonl").to_str().unwrap().to_string();
+        let mut w = JsonlWriter::create(&path).unwrap();
+        w.write(&Json::obj(vec![("iter", Json::from(0usize))])).unwrap();
+        drop(w);
+        let mut w = JsonlWriter::append(&path).unwrap();
+        w.write(&Json::obj(vec![("iter", Json::from(1usize))])).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explained_variance_behaves() {
+        let t = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((explained_variance(&t, &t) - 1.0).abs() < 1e-6);
+        // Predicting the mean explains nothing.
+        let mean = [2.5f32; 4];
+        assert!(explained_variance(&t, &mean).abs() < 1e-6);
+        // Catastrophic critic clamps at −1.
+        let bad = [100.0f32, -100.0, 100.0, -100.0];
+        assert_eq!(explained_variance(&t, &bad), -1.0);
+        // Constant target → 0 by convention.
+        assert_eq!(explained_variance(&[5.0f32; 4], &t), 0.0);
+        assert_eq!(explained_variance(&[], &[]), 0.0);
+    }
+}

@@ -15,9 +15,10 @@
 //! standardization for rewards + block quantization for values — is best
 //! and is what the HEPPO-GAE hardware implements.
 
-use super::block_std::block_standardize;
+use super::block_std::{block_standardize, BlockStats};
 use super::dynamic_std::DynamicStandardizer;
 use super::uniform::UniformQuantizer;
+use crate::obs::numerics::PlaneNumerics;
 
 /// Which Table III experiment configuration to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -178,6 +179,55 @@ impl RewardValueCodec {
             }
         }
     }
+
+    /// [`Self::transform`] plus post-hoc quantization-health
+    /// measurement: the originals are copied before the in-place round
+    /// trip, then each quantized plane's codes are re-derived against
+    /// the standardization stats that sat between the representations
+    /// and folded into a [`PlaneNumerics`]. Unquantized planes (Exp 1
+    /// and 2, which store f32) measure as `None`.
+    ///
+    /// Reconstruction error lands in the units the trainer reads back:
+    /// de-standardized planes (values everywhere, Exp 3 rewards) scale
+    /// the per-element error by the block σ; planes kept in
+    /// standardized form (Exp 4/5 rewards) report it unscaled.
+    pub fn transform_observed(
+        &mut self,
+        rewards: &mut [f32],
+        values: &mut [f32],
+    ) -> (CodecReport, Option<PlaneNumerics>, Option<PlaneNumerics>) {
+        match self.kind {
+            CodecKind::Exp1Baseline | CodecKind::Exp2DynamicStd => {
+                (self.transform(rewards, values), None, None)
+            }
+            CodecKind::Exp3BlockDestd
+            | CodecKind::Exp4BlockKeepStd
+            | CodecKind::Exp5DynamicBlock => {
+                let q = UniformQuantizer::new(self.bits);
+                let r0 = rewards.to_vec();
+                let v0 = values.to_vec();
+                let report = self.transform(rewards, values);
+                let (r_mean, r_std, r_destd) = match self.kind {
+                    CodecKind::Exp3BlockDestd => {
+                        let s = BlockStats::of(&r0);
+                        (s.mean, s.std, true)
+                    }
+                    CodecKind::Exp4BlockKeepStd => {
+                        let s = BlockStats::of(&r0);
+                        (s.mean, s.std, false)
+                    }
+                    // Dynamic standardization absorbed the block before
+                    // standardizing it, so the post-transform running
+                    // stats are exactly what the plane was divided by.
+                    _ => (self.dynamic.mean() as f32, self.dynamic.std() as f32, false),
+                };
+                let r_pn = PlaneNumerics::measure(&r0, rewards, &q, r_mean, r_std, r_destd);
+                let vs = BlockStats::of(&v0);
+                let v_pn = PlaneNumerics::measure(&v0, values, &q, vs.mean, vs.std, true);
+                (report, Some(r_pn), Some(v_pn))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +339,55 @@ mod tests {
         }
         for w in errs.windows(2) {
             assert!(w[1] < w[0], "error must shrink with more bits: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn transform_observed_measures_quantized_planes() {
+        let mut g = Gen::new(7);
+        let r0 = g.vec_normal_f32(4096, 0.0, 2.0);
+        let v0 = g.vec_normal_f32(4096, 5.0, 3.0);
+
+        // Unquantized kinds measure nothing but transform identically.
+        let mut plain = RewardValueCodec::paper(CodecKind::Exp2DynamicStd);
+        let mut observed = RewardValueCodec::paper(CodecKind::Exp2DynamicStd);
+        let (mut r_a, mut v_a) = (r0.clone(), v0.clone());
+        let (mut r_b, mut v_b) = (r0.clone(), v0.clone());
+        let rep_a = plain.transform(&mut r_a, &mut v_a);
+        let (rep_b, r_pn, v_pn) = observed.transform_observed(&mut r_b, &mut v_b);
+        assert_eq!(rep_a, rep_b);
+        assert_eq!(r_a, r_b);
+        assert!(r_pn.is_none() && v_pn.is_none());
+
+        // Quantized kinds: identical planes out, sane measurements.
+        for kind in [
+            CodecKind::Exp3BlockDestd,
+            CodecKind::Exp4BlockKeepStd,
+            CodecKind::Exp5DynamicBlock,
+        ] {
+            let mut plain = RewardValueCodec::paper(kind);
+            let mut observed = RewardValueCodec::paper(kind);
+            let (mut r_a, mut v_a) = (r0.clone(), v0.clone());
+            let (mut r_b, mut v_b) = (r0.clone(), v0.clone());
+            plain.transform(&mut r_a, &mut v_a);
+            let (_, r_pn, v_pn) = observed.transform_observed(&mut r_b, &mut v_b);
+            assert_eq!(r_a, r_b, "{kind:?} rewards must match plain transform");
+            assert_eq!(v_a, v_b, "{kind:?} values must match plain transform");
+            let (r_pn, v_pn) = (r_pn.unwrap(), v_pn.unwrap());
+            assert_eq!(r_pn.elements, 4096);
+            assert_eq!(v_pn.elements, 4096);
+            assert!(r_pn.err_measured && v_pn.err_measured);
+            // Gaussian data inside ±5σ: low saturation, real error.
+            assert!(r_pn.saturation_rate() < 0.01, "{kind:?}");
+            assert!(v_pn.sum_sq_err > 0.0 && v_pn.max_abs_err > 0.0);
+            assert!(v_pn.codes_used() > 64, "{kind:?} should use many codes");
+            // Value error is in de-standardized units — bounded by
+            // step/2 · σ_block for every in-range element.
+            if v_pn.clipped == 0 {
+                let tol =
+                    UniformQuantizer::new(8).max_in_range_error() * v_pn.std.abs() + 1e-4;
+                assert!(v_pn.max_abs_err <= tol, "{} vs {tol}", v_pn.max_abs_err);
+            }
         }
     }
 

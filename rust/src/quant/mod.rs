@@ -15,6 +15,20 @@
 //! - [`codec`] — the five end-to-end configurations of Table III
 //!   (Experiments 1–5) behind one trait, so the trainer and the Fig. 10
 //!   bench can swap them freely.
+//!
+//! # Numerics observability
+//!
+//! Quantization here is *observed*, not assumed: wherever an f32 plane
+//! and its coded image are both in hand — the wire plane encoder and
+//! decoder, and [`RewardValueCodec::transform_observed`] — the stack
+//! fills a [`crate::obs::numerics::PlaneNumerics`] (reconstruction
+//! error, end-code saturation, code utilization, and the block (μ,σ)
+//! that sat between the representations) and feeds it to the windowed
+//! accumulators in [`crate::obs::numerics`]. Saturation past the
+//! Chebyshev-derived thresholds or upward σ-drift pages through the
+//! fleet health chain; the per-tenant/per-window rows ride
+//! `GET /metrics` and the wire metrics RPC. See the module docs on
+//! [`crate::obs`] for the full plane.
 
 pub mod block_std;
 pub mod codec;

@@ -21,6 +21,7 @@
 //! bounded [`ExemplarStore`] with their span trees (tail-based trace
 //! retention; see [`crate::obs::telemetry`]).
 
+use crate::obs::numerics::{NumericsAccum, NumericsHealth, NumericsSnapshot, PlaneNumerics};
 use crate::obs::slo::{self, SloConfig, SloReport, WindowCounts};
 use crate::obs::telemetry::{
     ExemplarMeta, ExemplarStore, RetainReason, DEFAULT_EXEMPLAR_CAPACITY,
@@ -40,7 +41,7 @@ use std::time::{Duration, Instant};
 const MAX_TENANT_STATS: usize = 4096;
 
 /// One tenant's accumulated counters.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 struct TenantCounters {
     /// Frames/requests answered with a result (computed or cache).
     requests: u64,
@@ -54,6 +55,15 @@ struct TenantCounters {
     /// claimant may be an impostor — the row attributes the *claimed*
     /// identity, which is what an operator investigating abuse wants.
     auth_rejected: u64,
+    /// Request payload-section bytes this tenant put on the wire.
+    wire_payload_bytes: u64,
+    /// What the f32 escape hatch would have used for the same frames —
+    /// the lifetime `reduction_vs_f32` numerator.
+    wire_f32_bytes: u64,
+    /// Quantization-health accumulator, boxed lazily on the tenant's
+    /// first quantized plane (the ring preallocates then; the
+    /// steady-state record path stays allocation-free).
+    numerics: Option<Box<NumericsAccum>>,
     /// Last-touch tick, for LRU eviction at the cap.
     last_touch: u64,
 }
@@ -71,17 +81,23 @@ impl TenantMap {
     fn entry(&mut self, tenant: &str) -> &mut TenantCounters {
         self.tick += 1;
         let tick = self.tick;
-        if !self.map.contains_key(tenant) && self.map.len() >= MAX_TENANT_STATS {
-            if let Some(stalest) = self
-                .map
-                .iter()
-                .min_by_key(|(_, c)| c.last_touch)
-                .map(|(k, _)| k.clone())
-            {
-                self.map.remove(&stalest);
+        if !self.map.contains_key(tenant) {
+            if self.map.len() >= MAX_TENANT_STATS {
+                if let Some(stalest) = self
+                    .map
+                    .iter()
+                    .min_by_key(|(_, c)| c.last_touch)
+                    .map(|(k, _)| k.clone())
+                {
+                    self.map.remove(&stalest);
+                }
             }
+            // The only allocating arm: a tenant's first touch. Known
+            // tenants take the `get_mut` path below, keeping the
+            // steady-state record paths allocation-free.
+            self.map.insert(tenant.to_string(), TenantCounters::default());
         }
-        let c = self.map.entry(tenant.to_string()).or_default();
+        let c = self.map.get_mut(tenant).unwrap();
         c.last_touch = tick;
         c
     }
@@ -204,6 +220,15 @@ pub struct ServiceMetrics {
     slow_log: f64,
     /// Tail-retained exemplars (slow/errored/shed request traces).
     exemplars: ExemplarStore,
+    /// Shard-wide quantization-health accumulator (per-tenant ones live
+    /// inside [`TenantCounters`]).
+    numerics: Mutex<NumericsAccum>,
+    /// Request payload-section bytes received on the wire.
+    wire_payload_bytes: AtomicU64,
+    /// f32-escape-hatch bytes the same frames would have used.
+    wire_f32_bytes: AtomicU64,
+    /// Exemplars retained for plane saturation since start.
+    saturated_exemplars: AtomicU64,
 }
 
 impl Default for ServiceMetrics {
@@ -243,6 +268,10 @@ impl ServiceMetrics {
             slo,
             slow_log: (1.0 + slo.latency_objective_us.max(0.0)).log10(),
             exemplars: ExemplarStore::new(DEFAULT_EXEMPLAR_CAPACITY),
+            numerics: Mutex::new(NumericsAccum::new(WINDOW_RING_SECS)),
+            wire_payload_bytes: AtomicU64::new(0),
+            wire_f32_bytes: AtomicU64::new(0),
+            saturated_exemplars: AtomicU64::new(0),
         }
     }
 
@@ -280,6 +309,57 @@ impl ServiceMetrics {
     /// The tenant's quota bucket refused a frame.
     pub(crate) fn record_tenant_quota_shed(&self, tenant: &str) {
         self.tenants.lock().unwrap().entry(tenant).quota_shed += 1;
+    }
+
+    /// One quantized plane's measurements, taken where the f32 and
+    /// coded representations coexisted (wire encode/decode). Lands in
+    /// the shard-wide and per-tenant windowed accumulators; steady
+    /// state this is counter folds only — the tenant's accumulator is
+    /// boxed once on its first quantized plane, and
+    /// `benches/telemetry_overhead.rs` holds the path to zero
+    /// allocations thereafter (which is why the hook is `pub`: the
+    /// bench drives it directly).
+    ///
+    /// A plane saturating past the Critical bar is the one allocation
+    /// exception, mirroring slow-tail retention: the plane's metadata
+    /// is stamped onto the request's span tree (an instant event) and
+    /// the trace is promoted into the exemplar store under
+    /// [`RetainReason::Saturated`].
+    pub fn record_plane_numerics(&self, tenant: &str, pn: &PlaneNumerics, trace: u64) {
+        let now_sec = self.now_sec();
+        self.numerics.lock().unwrap().record(now_sec, pn);
+        {
+            let mut t = self.tenants.lock().unwrap();
+            let c = t.entry(tenant);
+            c.numerics
+                .get_or_insert_with(|| Box::new(NumericsAccum::new(WINDOW_RING_SECS)))
+                .record(now_sec, pn);
+        }
+        if pn.is_critically_saturated() && trace != 0 {
+            // The instant event must land in the rings *before* the
+            // store snapshots them, or the exemplar body arrives empty.
+            crate::obs::trace::instant("numerics.saturated", trace);
+            self.saturated_exemplars.fetch_add(1, Ordering::Relaxed);
+            self.exemplars.retain(ExemplarMeta {
+                trace,
+                reason: RetainReason::Saturated,
+                total_us: 0.0,
+                when_sec: now_sec,
+            });
+        }
+    }
+
+    /// One request frame's transport accounting: payload-section bytes
+    /// actually received vs what the f32 escape hatch would have used
+    /// for the same geometry — the lifetime `reduction_vs_f32`
+    /// aggregate, per shard and per tenant.
+    pub(crate) fn record_wire_frame(&self, tenant: &str, payload_bytes: u64, f32_bytes: u64) {
+        self.wire_payload_bytes.fetch_add(payload_bytes, Ordering::Relaxed);
+        self.wire_f32_bytes.fetch_add(f32_bytes, Ordering::Relaxed);
+        let mut t = self.tenants.lock().unwrap();
+        let c = t.entry(tenant);
+        c.wire_payload_bytes += payload_bytes;
+        c.wire_f32_bytes += f32_bytes;
     }
 
     /// An admission attempt (admitted *or* shed).
@@ -467,17 +547,41 @@ impl ServiceMetrics {
         let SnapshotInputs { queue_depth, peak_queue_depth, scalar_route_max_elements } =
             inputs;
         let uptime = self.started_at.elapsed();
+        let now_sec = uptime.as_secs();
+        let mut worst_tenant_health = NumericsHealth::Ok;
         let mut tenants: Vec<TenantSnapshot> = {
             let t = self.tenants.lock().unwrap();
             t.map
                 .iter()
-                .map(|(tenant, c)| TenantSnapshot {
-                    tenant: tenant.clone(),
-                    requests: c.requests,
-                    elements: c.elements,
-                    shed: c.shed,
-                    quota_shed: c.quota_shed,
-                    auth_rejected: c.auth_rejected,
+                .map(|(tenant, c)| {
+                    let (quant_planes, quant_elements, quant_clipped) = c
+                        .numerics
+                        .as_ref()
+                        .map(|n| (n.planes, n.elements, n.clipped))
+                        .unwrap_or((0, 0, 0));
+                    let (quant_saturation_1s, numerics_health) = c
+                        .numerics
+                        .as_ref()
+                        .map(|n| {
+                            (n.window(now_sec, 1).saturation_rate, n.health(now_sec))
+                        })
+                        .unwrap_or((0.0, NumericsHealth::Ok));
+                    worst_tenant_health = worst_tenant_health.max(numerics_health);
+                    TenantSnapshot {
+                        tenant: tenant.clone(),
+                        requests: c.requests,
+                        elements: c.elements,
+                        shed: c.shed,
+                        quota_shed: c.quota_shed,
+                        auth_rejected: c.auth_rejected,
+                        wire_payload_bytes: c.wire_payload_bytes,
+                        wire_f32_bytes: c.wire_f32_bytes,
+                        quant_planes,
+                        quant_elements,
+                        quant_clipped,
+                        quant_saturation_1s,
+                        numerics_health,
+                    }
                 })
                 .collect()
         };
@@ -485,13 +589,22 @@ impl ServiceMetrics {
         tenants.sort_by(|a, b| {
             b.elements.cmp(&a.elements).then_with(|| a.tenant.cmp(&b.tenant))
         });
+        let numerics = {
+            let n = self.numerics.lock().unwrap();
+            let mut snap = n
+                .snapshot(now_sec, self.saturated_exemplars.load(Ordering::Relaxed));
+            // The shard verdict is the worst of the shard-wide window
+            // and every tenant's — one saturating tenant pages even
+            // when the blended shard-wide rate stays under threshold.
+            snap.health = snap.health.max(worst_tenant_health);
+            snap
+        };
         let h = self.hists.lock().unwrap();
         let batches = self.batches.load(Ordering::Relaxed);
         let elements = self.elements.load(Ordering::Relaxed);
         // Windowed views: merge the per-second rings over the three
         // standard spans (snapshotting is cold, so allocating the
         // merged histograms here is fine).
-        let now_sec = uptime.as_secs();
         let windows = [1u64, 10, 60].map(|span| {
             let merged = h.win_total.merged(now_sec, span);
             let completed = h.win_completed.sum(now_sec, span);
@@ -537,6 +650,9 @@ impl ServiceMetrics {
             slow_closed: self.slow_closed.load(Ordering::Relaxed),
             auth_rejected: self.auth_rejected.load(Ordering::Relaxed),
             auth_conns_closed: self.auth_conns_closed.load(Ordering::Relaxed),
+            wire_payload_bytes: self.wire_payload_bytes.load(Ordering::Relaxed),
+            wire_f32_bytes: self.wire_f32_bytes.load(Ordering::Relaxed),
+            numerics,
             routed_small: self.routed_small.load(Ordering::Relaxed),
             slab_tiles: self.slab_tiles.load(Ordering::Relaxed),
             packed_tiles: self.packed_tiles.load(Ordering::Relaxed),
@@ -578,7 +694,7 @@ pub struct SnapshotInputs {
 
 /// One tenant's slice of a [`MetricsSnapshot`] — the substrate the
 /// fabric's fleet view aggregates across shards.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TenantSnapshot {
     pub tenant: String,
     /// Requests answered with a result (computed or cache).
@@ -593,6 +709,33 @@ pub struct TenantSnapshot {
     /// *claimed* identity — an attacker spoofing tenant `a` shows up
     /// under `a`, which is exactly where an operator looks first.
     pub auth_rejected: u64,
+    /// Request payload-section bytes this tenant put on the wire.
+    pub wire_payload_bytes: u64,
+    /// f32-escape-hatch bytes the same frames would have used (the
+    /// lifetime per-tenant `reduction_vs_f32` numerator).
+    pub wire_f32_bytes: u64,
+    /// Quantized planes observed for this tenant.
+    pub quant_planes: u64,
+    /// Elements those planes carried.
+    pub quant_elements: u64,
+    /// Elements on the quantizer's end codes (lifetime).
+    pub quant_clipped: u64,
+    /// Saturation rate over the tenant's last-1s window.
+    pub quant_saturation_1s: f64,
+    /// The tenant's 1s-window numerics verdict.
+    pub numerics_health: NumericsHealth,
+}
+
+impl TenantSnapshot {
+    /// Lifetime wire-transport reduction vs f32 for this tenant's
+    /// request frames (1.0 when nothing was recorded).
+    pub fn wire_reduction_vs_f32(&self) -> f64 {
+        if self.wire_payload_bytes == 0 {
+            1.0
+        } else {
+            self.wire_f32_bytes as f64 / self.wire_payload_bytes as f64
+        }
+    }
 }
 
 /// p50/p95/p99 of one latency phase, in microseconds.
@@ -666,6 +809,17 @@ pub struct MetricsSnapshot {
     /// Connections closed for exceeding the per-connection auth
     /// strike limit.
     pub auth_conns_closed: u64,
+    /// Request payload-section bytes received on the wire (lifetime).
+    pub wire_payload_bytes: u64,
+    /// f32-escape-hatch bytes the same frames would have used — the
+    /// lifetime aggregate behind
+    /// [`MetricsSnapshot::wire_reduction_vs_f32`], making the paper's
+    /// 4×-memory claim observable per deployment, not just per frame.
+    pub wire_f32_bytes: u64,
+    /// Quantization-health rows: lifetime reconstruction error and
+    /// saturation, the 1/10/60s windowed views, and the 1s verdict
+    /// (worst of shard-wide and per-tenant).
+    pub numerics: NumericsSnapshot,
     /// Coalesced groups sent to the scalar loop by size-threshold routing.
     pub routed_small: u64,
     /// Tiles computed in place on a resident plane slab (zero gather).
@@ -724,6 +878,16 @@ impl MetricsSnapshot {
             .find(|w| w.span_secs == span_secs)
             .unwrap_or(&self.windows[0])
     }
+
+    /// Lifetime wire-transport reduction vs f32 across every request
+    /// frame received (1.0 when nothing was recorded).
+    pub fn wire_reduction_vs_f32(&self) -> f64 {
+        if self.wire_payload_bytes == 0 {
+            1.0
+        } else {
+            self.wire_f32_bytes as f64 / self.wire_payload_bytes as f64
+        }
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -754,6 +918,15 @@ impl std::fmt::Display for MetricsSnapshot {
             self.routed_small,
             self.scalar_route_max_elements
         )?;
+        if self.wire_f32_bytes > 0 {
+            writeln!(
+                f,
+                "wire:     {} payload B vs {} f32 B = {:.2}x lifetime reduction",
+                self.wire_payload_bytes,
+                self.wire_f32_bytes,
+                self.wire_reduction_vs_f32()
+            )?;
+        }
         if !self.tenants.is_empty() {
             write!(f, "tenants:  {} tracked |", self.tenants.len())?;
             for t in self.tenants.iter().take(4) {
@@ -762,6 +935,16 @@ impl std::fmt::Display for MetricsSnapshot {
                     " {}: {} req / {} elem ({} shed, {} quota, {} auth)",
                     t.tenant, t.requests, t.elements, t.shed, t.quota_shed, t.auth_rejected
                 )?;
+                if t.quant_planes > 0 {
+                    write!(
+                        f,
+                        " [quant {} planes, sat(1s) {:.2}%, {:.2}x wire, {}]",
+                        t.quant_planes,
+                        t.quant_saturation_1s * 100.0,
+                        t.wire_reduction_vs_f32(),
+                        t.numerics_health.as_str()
+                    )?;
+                }
             }
             writeln!(f)?;
         }
@@ -795,6 +978,22 @@ impl std::fmt::Display for MetricsSnapshot {
             "slo:      {} (burn 1s {:.1} / 10s {:.1} / 60s {:.1})",
             self.slo.health, self.slo.burn_1s, self.slo.burn_10s, self.slo.burn_60s
         )?;
+        if self.numerics.planes > 0 {
+            let w1 = self.numerics.window(1);
+            writeln!(
+                f,
+                "numerics: {} | {} planes, sat {:.3}%, mse {:.3e}, max-err {:.3e} | 1s: sat {:.3}%, codes {}/256, σ-drift {:.2} | {} saturated exemplars",
+                self.numerics.health.as_str(),
+                self.numerics.planes,
+                self.numerics.saturation_rate() * 100.0,
+                self.numerics.mse(),
+                self.numerics.max_abs_err,
+                w1.saturation_rate * 100.0,
+                w1.codes_used,
+                w1.sigma_drift,
+                self.numerics.saturated_exemplars
+            )?;
+        }
         writeln!(
             f,
             "trace:    {} ring-dropped events | exemplars {} retained / {} evicted ({} recent)",
@@ -1092,5 +1291,98 @@ mod tests {
         let s = m.snapshot(SnapshotInputs::default());
         assert_eq!(s.exemplars_retained, 1, "{:?}", s.recent_exemplars);
         assert_eq!(s.recent_exemplars[0].trace, 0xAB);
+    }
+
+    fn clean_plane(elements: u64) -> PlaneNumerics {
+        let q = crate::quant::UniformQuantizer::new(8);
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(0.1, 1.0);
+        for i in 0..elements {
+            let z = ((i as f32) * 0.37).sin() * 3.0;
+            let code = q.quantize(z);
+            pn.note_code(code, 8);
+            pn.note_err((q.dequantize(code) - z).abs());
+        }
+        pn
+    }
+
+    fn saturated_plane(elements: u64) -> PlaneNumerics {
+        let q = crate::quant::UniformQuantizer::new(8);
+        let mut pn = PlaneNumerics::default();
+        pn.set_block(0.0, 17.0);
+        for i in 0..elements {
+            let z = if i % 8 == 0 { 50.0 } else { ((i as f32) * 0.37).sin() };
+            let code = q.quantize(z);
+            pn.note_code(code, 8);
+            pn.note_err((q.dequantize(code) - z).abs());
+        }
+        pn
+    }
+
+    #[test]
+    fn plane_numerics_land_in_shard_and_tenant_rows() {
+        let m = ServiceMetrics::new();
+        m.record_plane_numerics("alpha", &clean_plane(256), 0);
+        m.record_plane_numerics("alpha", &clean_plane(256), 0);
+        m.record_plane_numerics("beta", &clean_plane(256), 0);
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.numerics.planes, 3);
+        assert_eq!(s.numerics.elements, 768);
+        assert_eq!(s.numerics.health, NumericsHealth::Ok);
+        assert!(s.numerics.window(1).code_utilization > 0.0);
+        let alpha = s.tenants.iter().find(|t| t.tenant == "alpha").unwrap();
+        assert_eq!(alpha.quant_planes, 2);
+        assert_eq!(alpha.quant_elements, 512);
+        assert_eq!(alpha.numerics_health, NumericsHealth::Ok);
+        let text = s.to_string();
+        assert!(text.contains("numerics:"), "{text}");
+    }
+
+    #[test]
+    fn one_saturating_tenant_pages_the_shard_verdict() {
+        let m = ServiceMetrics::new();
+        // Plenty of clean traffic from a big tenant…
+        for _ in 0..20 {
+            m.record_plane_numerics("clean", &clean_plane(4096), 0);
+        }
+        // …and one tenant whose planes saturate hard. The *blend* may
+        // stay under threshold, but the tenant's own verdict must not.
+        m.record_plane_numerics("spiky", &saturated_plane(256), 0);
+        let s = m.snapshot(SnapshotInputs::default());
+        let spiky = s.tenants.iter().find(|t| t.tenant == "spiky").unwrap();
+        assert_eq!(spiky.numerics_health, NumericsHealth::Critical);
+        assert!(spiky.quant_saturation_1s >= 0.02, "{}", spiky.quant_saturation_1s);
+        assert_eq!(s.numerics.health, NumericsHealth::Critical);
+    }
+
+    #[test]
+    fn saturated_traced_plane_is_retained_as_exemplar() {
+        let m = ServiceMetrics::new();
+        m.record_plane_numerics("t", &saturated_plane(256), 0xDEAD);
+        // Untraced saturation records the numerics but keeps no exemplar.
+        m.record_plane_numerics("t", &saturated_plane(256), 0);
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.exemplars_retained, 1);
+        assert_eq!(s.recent_exemplars[0].reason, RetainReason::Saturated);
+        assert_eq!(s.recent_exemplars[0].trace, 0xDEAD);
+        assert_eq!(s.numerics.saturated_exemplars, 1);
+    }
+
+    #[test]
+    fn wire_frame_bytes_aggregate_into_lifetime_reduction() {
+        let m = ServiceMetrics::new();
+        // Two quantized frames at ~4x reduction, per tenant and shard.
+        m.record_wire_frame("q", 1000, 4000);
+        m.record_wire_frame("q", 1000, 4000);
+        // One f32 frame from another tenant (reduction 1.0).
+        m.record_wire_frame("raw", 4000, 4000);
+        let s = m.snapshot(SnapshotInputs::default());
+        assert_eq!(s.wire_payload_bytes, 6000);
+        assert_eq!(s.wire_f32_bytes, 12000);
+        assert!((s.wire_reduction_vs_f32() - 2.0).abs() < 1e-12);
+        let q = s.tenants.iter().find(|t| t.tenant == "q").unwrap();
+        assert!((q.wire_reduction_vs_f32() - 4.0).abs() < 1e-12);
+        let text = s.to_string();
+        assert!(text.contains("lifetime reduction"), "{text}");
     }
 }

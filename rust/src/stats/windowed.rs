@@ -146,6 +146,71 @@ impl WindowedCounter {
     }
 }
 
+/// A bucket type that can live in a [`WindowedSlots`] ring: resettable
+/// in place (rotation) and mergeable into scratch (views). Both
+/// operations must be allocation-free for warmed buckets — that is the
+/// whole point of the ring.
+pub trait RingSlot {
+    /// Return the slot to its empty state without releasing storage.
+    fn reset(&mut self);
+    /// Fold this slot's contents into `out`.
+    fn merge_into(&self, out: &mut Self);
+}
+
+/// A ring of per-second buckets of any [`RingSlot`] type — the generic
+/// form of [`WindowedHistogram`] / [`WindowedCounter`], for composite
+/// buckets (e.g. the numerics plane's per-second accumulators) that
+/// would otherwise need a fistful of parallel rings and pay one stamp
+/// compare each.
+#[derive(Debug, Clone)]
+pub struct WindowedSlots<S> {
+    stamps: Vec<u64>,
+    slots: Vec<S>,
+}
+
+impl<S: RingSlot + Default> WindowedSlots<S> {
+    pub fn new(ring_secs: usize) -> WindowedSlots<S> {
+        assert!(ring_secs > 0, "ring must hold at least one second");
+        WindowedSlots {
+            stamps: vec![EMPTY; ring_secs],
+            slots: (0..ring_secs).map(|_| S::default()).collect(),
+        }
+    }
+
+    /// The bucket for absolute second `now_sec`, rotated in place if the
+    /// slot still holds a stale second.
+    #[inline]
+    pub fn slot_mut(&mut self, now_sec: u64) -> &mut S {
+        let i = (now_sec % self.stamps.len() as u64) as usize;
+        if self.stamps[i] != now_sec {
+            self.slots[i].reset();
+            self.stamps[i] = now_sec;
+        }
+        &mut self.slots[i]
+    }
+
+    /// Merge the buckets of the last `span_secs` seconds (current
+    /// partial second included) into `out`, which is reset first.
+    pub fn merged_into(&self, now_sec: u64, span_secs: u64, out: &mut S) {
+        out.reset();
+        let span = span_secs.min(self.stamps.len() as u64).max(1);
+        let first = now_sec.saturating_sub(span - 1);
+        for sec in first..=now_sec {
+            let i = (sec % self.stamps.len() as u64) as usize;
+            if self.stamps[i] == sec {
+                self.slots[i].merge_into(out);
+            }
+        }
+    }
+
+    /// Allocating convenience: the merged view as a fresh bucket.
+    pub fn merged(&self, now_sec: u64, span_secs: u64) -> S {
+        let mut out = S::default();
+        self.merged_into(now_sec, span_secs, &mut out);
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +305,39 @@ mod tests {
         // Slot aliasing after a full lap resets, not accumulates.
         c.add(18, 2); // 18 % 8 == 10 % 8
         assert_eq!(c.sum(18, 1), 2);
+    }
+
+    #[test]
+    fn generic_slots_rotate_and_age_like_the_counter_ring() {
+        #[derive(Debug, Default, Clone)]
+        struct SumMax {
+            sum: u64,
+            max: u64,
+        }
+        impl RingSlot for SumMax {
+            fn reset(&mut self) {
+                self.sum = 0;
+                self.max = 0;
+            }
+            fn merge_into(&self, out: &mut Self) {
+                out.sum += self.sum;
+                out.max = out.max.max(self.max);
+            }
+        }
+        let mut w: WindowedSlots<SumMax> = WindowedSlots::new(8);
+        let s = w.slot_mut(10);
+        s.sum += 5;
+        s.max = s.max.max(5);
+        let s = w.slot_mut(11);
+        s.sum += 7;
+        s.max = s.max.max(7);
+        let v = w.merged(11, 2);
+        assert_eq!(v.sum, 12);
+        assert_eq!(v.max, 7);
+        assert_eq!(w.merged(11, 1).sum, 7);
+        // Idle gap ages out by stamp; slot aliasing resets in place.
+        assert_eq!(w.merged(1000, 8).sum, 0);
+        assert_eq!(w.slot_mut(18).sum, 0, "18 % 8 aliases 10 % 8: must reset");
     }
 
     #[test]

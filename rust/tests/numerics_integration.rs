@@ -1,0 +1,290 @@
+//! Numerics-plane integration: forced quantizer saturation over real
+//! sockets, under both server front-ends.
+//!
+//! The acceptance scenario (per mode):
+//!
+//! - **Baseline** — clean quantized traffic trains the lifetime (μ,σ)
+//!   baseline; the shard's `NumericsHealth` verdict is `Ok`.
+//! - **Forced saturation** — traced requests whose planes hide rare
+//!   ±100 spikes among unit-scale noise: the per-plane block σ (~17)
+//!   leaves the spikes at z ≈ ±5.7, past the quantizer's ±5σ range, so
+//!   ~3% of elements land on end codes. That breaches
+//!   [`SATURATION_CRITICAL`] and the verdict flips `Critical` within
+//!   one 1s window, visible on the exposition page — with the
+//!   offending trace id attached to the windowed saturation rows as an
+//!   OpenMetrics exemplar (`reason="saturated"`) that greps straight
+//!   into the `GET /traces` Chrome-trace export.
+//! - **Recovery** — clean traffic one window later walks the verdict
+//!   back to `Ok` without a restart; lifetime clip counters persist.
+//!
+//! [`SATURATION_CRITICAL`]: heppo::obs::numerics::SATURATION_CRITICAL
+
+#![cfg(target_os = "linux")]
+
+use heppo::coordinator::GaeBackend;
+use heppo::net::{wire, NetServer, NetServerConfig, PlaneCodec, ServerMode};
+use heppo::obs::numerics::SATURATION_CRITICAL;
+use heppo::obs::telemetry::trace_hex;
+use heppo::service::{GaeService, ServiceConfig};
+use heppo::testing::Gen;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TENANT: &str = "numerics";
+const T_LEN: usize = 64;
+const BATCH: usize = 2;
+
+/// One-shot plaintext scrape over the binary port: `(status_line,
+/// body)`. The server answers and closes, so read-to-EOF terminates.
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: heppo\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("response has a blank line");
+    let status = head.lines().next().unwrap_or("").to_string();
+    (status, body.to_string())
+}
+
+/// Value of the first sample whose name matches and whose label set
+/// contains every `labels` fragment. Exemplar suffixes (` # {...}`)
+/// are stripped before the value parse.
+fn metric_value(body: &str, name: &str, labels: &[&str]) -> f64 {
+    for line in body.lines() {
+        if !line.starts_with(name) || !line[name.len()..].starts_with('{') {
+            continue;
+        }
+        if !labels.iter().all(|l| line.contains(l)) {
+            continue;
+        }
+        let sample = line.split(" # ").next().unwrap();
+        let value = sample.rsplit(' ').next().unwrap();
+        return value.parse().unwrap_or_else(|_| panic!("unparsable sample: {line}"));
+    }
+    panic!("no sample {name}{labels:?} in exposition page:\n{body}");
+}
+
+/// A well-behaved quantized request: ≈N(0,1) planes standardize to
+/// z well inside ±5σ — nothing clips.
+fn clean_frame(g: &mut Gen, seq: u64) -> Vec<u8> {
+    let rewards = g.vec_normal_f32(T_LEN * BATCH, 0.0, 1.0);
+    let values = g.vec_normal_f32((T_LEN + 1) * BATCH, 0.0, 1.0);
+    let done_mask = vec![0.0f32; T_LEN * BATCH];
+    wire::encode_request(
+        seq,
+        TENANT,
+        PlaneCodec::Q8,
+        PlaneCodec::Q8,
+        0,
+        T_LEN,
+        BATCH,
+        &rewards,
+        &values,
+        &done_mask,
+    )
+    .unwrap()
+    .bytes
+}
+
+/// The poison pill: every 36th element is a ±100 spike amid unit-scale
+/// noise. The plane's own block σ ≈ 17, so the spikes standardize to
+/// z ≈ ±5.7 — clipped — at a ~3% rate, past the 2% Critical bar, while
+/// the noise elements quantize normally.
+fn saturated_frame(seq: u64, trace: u64, seed: u64) -> Vec<u8> {
+    let plane = |n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                if i % 36 == 0 {
+                    if (i / 36) % 2 == 0 { 100.0 } else { -100.0 }
+                } else {
+                    (((i as u64 + seed) as f32) * 0.37).sin()
+                }
+            })
+            .collect()
+    };
+    let rewards = plane(T_LEN * BATCH);
+    let values = plane((T_LEN + 1) * BATCH);
+    let done_mask = vec![0.0f32; T_LEN * BATCH];
+    wire::encode_request(
+        seq,
+        TENANT,
+        PlaneCodec::Q8,
+        PlaneCodec::Q8,
+        trace,
+        T_LEN,
+        BATCH,
+        &rewards,
+        &values,
+        &done_mask,
+    )
+    .unwrap()
+    .bytes
+}
+
+fn forced_saturation_pages_then_recovers(mode: ServerMode) {
+    heppo::obs::set_enabled(true);
+    let svc = Arc::new(
+        GaeService::start(ServiceConfig {
+            backend: GaeBackend::Scalar,
+            ..ServiceConfig::default()
+        })
+        .unwrap(),
+    );
+    let server = NetServer::start(
+        Arc::clone(&svc),
+        "127.0.0.1:0",
+        NetServerConfig { mode, cache_entries: 0, ..NetServerConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(stream);
+    let mut g = Gen::new(41);
+    let mut seq = 0u64;
+    let send_and_wait = |writer: &mut TcpStream,
+                             reader: &mut std::io::BufReader<TcpStream>,
+                             frame: Vec<u8>,
+                             want_seq: u64| {
+        writer.write_all(&frame).unwrap();
+        let frame = wire::read_frame(reader).unwrap().expect("response frame");
+        match wire::decode_frame(&frame).unwrap() {
+            wire::Frame::Response(r) => assert_eq!(r.seq, want_seq),
+            other => panic!("expected response, got {other:?}"),
+        }
+    };
+
+    // Baseline: clean quantized traffic trains the lifetime σ stream
+    // (past MIN_BASELINE_PLANES) and the verdict holds Ok.
+    for _ in 0..10 {
+        seq += 1;
+        let f = clean_frame(&mut g, seq);
+        send_and_wait(&mut writer, &mut reader, f, seq);
+    }
+    let (status, page0) = http_get(addr, "/metrics");
+    assert!(status.contains("200"), "baseline scrape status: {status}");
+    // 10 requests x 2 request planes, plus quantized response planes.
+    assert!(metric_value(&page0, "heppo_quant_planes_total", &[]) >= 20.0);
+    assert_eq!(
+        metric_value(&page0, "heppo_numerics_health", &[]),
+        0.0,
+        "clean quantized traffic must verdict Ok:\n{page0}"
+    );
+
+    // Forced saturation: a burst of traced poison requests, aligned to
+    // the server's metrics second (via the uptime gauge) so burst and
+    // scrape share one 1s window; a boundary race retries.
+    let mut traces: Vec<u64> = Vec::new();
+    let mut paged = String::new();
+    for attempt in 0..4u64 {
+        let (_, probe) = http_get(addr, "/metrics");
+        let up = metric_value(&probe, "heppo_uptime_seconds", &[]);
+        let frac = up - up.floor();
+        if frac > 0.4 {
+            std::thread::sleep(Duration::from_secs_f64(1.02 - frac));
+        }
+        for k in 0..4u64 {
+            seq += 1;
+            let trace = 0x5a70_0000_0000_0010 + attempt * 16 + k;
+            traces.push(trace);
+            let f = saturated_frame(seq, trace, attempt * 1000 + k);
+            send_and_wait(&mut writer, &mut reader, f, seq);
+        }
+        let (_, page) = http_get(addr, "/metrics");
+        if metric_value(&page, "heppo_numerics_health", &[]) >= 2.0 {
+            paged = page;
+            break;
+        }
+    }
+    assert!(!paged.is_empty(), "saturated burst never flipped the verdict Critical");
+
+    // The Critical verdict is on the page, shard-wide and for the
+    // offending tenant, with the 1s-window saturation past the bar.
+    assert!(
+        paged.contains("state=\"critical\"} 2"),
+        "no critical numerics row:\n{paged}"
+    );
+    assert!(
+        paged.contains(&format!(
+            "heppo_tenant_numerics_health{{shard=\"{addr}\",tenant=\"{TENANT}\",state=\"critical\"}} 2"
+        )),
+        "tenant verdict missing:\n{paged}"
+    );
+    let win_sat =
+        metric_value(&paged, "heppo_quant_window_saturation_rate", &["window=\"1s\""]);
+    assert!(
+        win_sat >= SATURATION_CRITICAL,
+        "1s saturation rate {win_sat} under the Critical bar"
+    );
+
+    // Exemplar retention: a poison trace id rides the windowed
+    // saturation rows as an OpenMetrics exemplar…
+    assert!(paged.contains("reason=\"saturated\""), "no saturation exemplar:\n{paged}");
+    assert!(metric_value(&paged, "heppo_quant_saturated_exemplars_total", &[]) >= 1.0);
+    let on_page: Vec<String> = traces
+        .iter()
+        .map(|t| trace_hex(*t))
+        .filter(|h| paged.contains(&format!("trace_id=\"{h}\"")))
+        .collect();
+    assert!(!on_page.is_empty(), "no poison trace id exposed as exemplar:\n{paged}");
+
+    // …and the same hex ids stitch into the Chrome-trace export.
+    let (status, chrome) = http_get(addr, "/traces");
+    assert!(status.contains("200"), "traces status: {status}");
+    assert!(chrome.contains("traceEvents"));
+    for hex in &on_page {
+        assert!(
+            chrome.contains(hex.as_str()),
+            "saturation exemplar {hex} missing from the Chrome-trace export"
+        );
+    }
+
+    // Recovery: clean traffic one window later walks the verdict back
+    // to Ok — no restart, and the lifetime clip counters persist.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let final_page = loop {
+        for _ in 0..8 {
+            seq += 1;
+            let f = clean_frame(&mut g, seq);
+            send_and_wait(&mut writer, &mut reader, f, seq);
+        }
+        let (_, page) = http_get(addr, "/metrics");
+        if metric_value(&page, "heppo_numerics_health", &[]) == 0.0 {
+            break page;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "verdict never recovered to Ok:\n{page}"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    };
+    assert!(
+        metric_value(&final_page, "heppo_quant_clipped_total", &[]) > 0.0,
+        "lifetime clip counter must survive recovery"
+    );
+
+    server.shutdown();
+    svc.begin_shutdown();
+}
+
+#[test]
+fn threads_mode_saturation_pages_then_recovers() {
+    forced_saturation_pages_then_recovers(ServerMode::Threads);
+}
+
+#[test]
+fn reactor_mode_saturation_pages_then_recovers() {
+    forced_saturation_pages_then_recovers(ServerMode::Reactor);
+}

@@ -128,6 +128,46 @@ fn hwsim_backend_reports_paper_scale_cycles() {
 }
 
 #[test]
+fn timeseries_emits_learning_health_per_iteration() {
+    if !artifacts_available() {
+        return;
+    }
+    let path = std::env::temp_dir()
+        .join(format!("heppo_e2e_timeseries_{}.jsonl", std::process::id()));
+    let mut cfg = base_config();
+    cfg.iters = 3;
+    cfg.timeseries_path = Some(path.to_str().unwrap().to_string());
+    let mut t = Trainer::new(cfg).unwrap();
+    t.run().unwrap();
+    assert_eq!(t.timeseries_records(), 3);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let rows: Vec<heppo::obs::timeseries::LearningHealthRecord> = text
+        .lines()
+        .map(|l| {
+            let j = heppo::util::json::Json::parse(l).unwrap();
+            heppo::obs::timeseries::LearningHealthRecord::from_json(&j).unwrap()
+        })
+        .collect();
+    assert_eq!(rows.len(), 3);
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(r.iter, i);
+        assert!(r.env_steps > 0);
+        // Standardization is on by default: post moments are ~N(0,1).
+        assert!(r.adv_mean_post.abs() < 1e-3, "adv_mean_post {}", r.adv_mean_post);
+        assert!((r.adv_std_post - 1.0).abs() < 1e-3, "adv_std_post {}", r.adv_std_post);
+        assert!(r.adv_std_pre > 0.0);
+        // A single PPO update stays near the old policy: the KL estimate
+        // must be finite and small, and the clip fraction a sane rate.
+        assert!(r.approx_kl.is_finite());
+        assert!(r.approx_kl.abs() < 1.0, "approx_kl {}", r.approx_kl);
+        assert!((0.0..=1.0).contains(&r.clip_fraction));
+        assert!(r.value_explained_variance.is_finite());
+        assert!(r.value_explained_variance >= -1.0);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
 fn codec_variants_all_train() {
     if !artifacts_available() {
         return;
